@@ -1,0 +1,93 @@
+//! CIM macro microscope: run one convolution layer through the bit-exact
+//! digital twin, comparing quantized vs ideal outputs and showing the
+//! cycle accounting — a didactic tour of Figs. 1–3 and Eq. 7.
+//!
+//! ```bash
+//! cargo run --release --example cim_inspect
+//! cargo run --release --example cim_inspect -- --channels 56 --filters 8 --s-adc 8
+//! ```
+
+use cim_adapt::cim::{CimMacro, WeightCell};
+use cim_adapt::config::MacroSpec;
+use cim_adapt::quant::psum::segment_inputs;
+use cim_adapt::util::cli::Args;
+use cim_adapt::util::prng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let c_in = args.usize_or("channels", 56);
+    let n_out = args.usize_or("filters", 6);
+    let s_adc = args.f64_or("s-adc", 16.0) as f32;
+    let spec = MacroSpec::default();
+    let cpb = spec.channels_per_bl(3);
+    let k2 = 9;
+
+    println!("CIM macro: {}×{} cells, {}b weights, {}b DAC, {}b ADC ×{}",
+        spec.wordlines, spec.bitlines, spec.weight_bits, spec.dac_bits,
+        spec.adc_bits, spec.num_adcs);
+    println!("layer: {c_in} input channels × 3×3 → {n_out} filters");
+
+    // Segment the layer like Fig. 9.
+    let segs = segment_inputs(c_in, 3, cpb);
+    println!("wordline segments: {} ({} channels/bitline max)", segs.len(), cpb);
+    for (i, (lo, hi)) in segs.iter().enumerate() {
+        println!("  segment {i}: rows [{lo}, {hi}) = {} channels", (hi - lo) / k2);
+    }
+
+    // Random 4-bit weights + codes.
+    let mut rng = Pcg::new(args.u64_or("seed", 1));
+    let mut mac = CimMacro::new(spec, 1.0, s_adc);
+    let total_rows = c_in * k2;
+    let weights: Vec<Vec<i32>> = (0..n_out)
+        .map(|_| (0..total_rows).map(|_| rng.gen_range(15) as i32 - 7).collect())
+        .collect();
+    for (si, (lo, hi)) in segs.iter().enumerate() {
+        let cols: Vec<Vec<WeightCell>> = weights
+            .iter()
+            .map(|w| w[*lo..*hi].iter().map(|&v| WeightCell::saturating(v, 4)).collect())
+            .collect();
+        mac.load_columns(si * n_out, &cols);
+    }
+    println!("\nloaded {} bitline columns ({} cells occupied, {:.1}% of macro)",
+        segs.len() * n_out,
+        mac.array.occupied_cells(),
+        mac.array.occupied_cells() as f64 / spec.cells() as f64 * 100.0);
+
+    // One input patch.
+    let codes: Vec<i32> = (0..total_rows).map(|_| rng.gen_range(16) as i32).collect();
+    let seg_codes: Vec<Vec<i32>> = segs.iter().map(|(lo, hi)| codes[*lo..*hi].to_vec()).collect();
+
+    let quantized = mac.segmented_matvec(&seg_codes, n_out, 1.0, false);
+    let ideal = mac.ideal_matvec(&seg_codes, n_out, 1.0);
+    println!("\n{:>8} {:>12} {:>12} {:>10}", "filter", "ideal", "quantized", "error");
+    for f in 0..n_out {
+        println!(
+            "{f:>8} {:>12.1} {:>12.1} {:>9.1}%",
+            ideal[f],
+            quantized[f],
+            if ideal[f].abs() > 1e-9 {
+                (quantized[f] - ideal[f]).abs() / ideal[f].abs() * 100.0
+            } else {
+                0.0
+            }
+        );
+    }
+
+    let st = mac.stats;
+    println!("\nhardware counters:");
+    println!("  weight loads      {} ({} cycles)", st.reloads, st.load_cycles);
+    println!("  compute cycles    {}", st.compute_cycles);
+    println!("  ADC conversions   {}", st.conversions);
+    println!(
+        "  per output: {} segments × (1 evaluate + {} ADC rounds)",
+        segs.len(),
+        n_out.div_ceil(spec.num_adcs)
+    );
+    println!("\npower-of-two scaling: S_W·S_ADC snapped to shift — rerun with pow2:");
+    let q_pow2 = mac.segmented_matvec(&seg_codes, n_out, 0.013, true);
+    let q_exact = mac.segmented_matvec(&seg_codes, n_out, 0.013, false);
+    for f in 0..n_out.min(3) {
+        println!("  filter {f}: exact-scale {:.4} vs pow2-shift {:.4}", q_exact[f], q_pow2[f]);
+    }
+    Ok(())
+}

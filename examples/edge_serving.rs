@@ -1,0 +1,126 @@
+//! Edge serving: batched inference through the full L3 coordinator.
+//!
+//! Drives the adapted model with a Poisson open-loop workload, reporting
+//! throughput, latency percentiles, batch formation and the CIM device
+//! model (macro reloads + compute cycles) — the end-to-end deployment
+//! story of the paper's system.
+//!
+//! ```bash
+//! cargo run --release --example edge_serving -- --requests 512 --rate 800
+//! ```
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use cim_adapt::config::{MacroSpec, ServeConfig};
+use cim_adapt::coordinator::server::{Backend, EdgeServer};
+use cim_adapt::data::{SynthCifar, NUM_CLASSES};
+use cim_adapt::runtime::ModelRuntime;
+use cim_adapt::util::cli::Args;
+use cim_adapt::util::commas;
+use cim_adapt::util::prng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    cim_adapt::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.usize_or("requests", 512);
+    let rate = args.f64_or("rate", 800.0); // requests/second offered
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("vgg9_edge_meta.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    let probe = ModelRuntime::load(&artifacts, "vgg9_edge")?;
+    let arch = probe.meta.arch.clone();
+    drop(probe);
+
+    let cfg = ServeConfig {
+        max_batch: args.usize_or("batch", 8),
+        batch_timeout_us: args.u64_or("timeout-us", 2000),
+        workers: args.usize_or("workers", 2),
+        queue_depth: 512,
+        num_macros: args.usize_or("macros", 4),
+        clock_mhz: 200.0,
+    };
+    println!(
+        "serving vgg9_edge: batch≤{}, {} workers, {} physical macros",
+        cfg.max_batch, cfg.workers, cfg.num_macros
+    );
+    let handle = EdgeServer::start(
+        &cfg,
+        Backend::Pjrt {
+            artifact_dir: artifacts.clone(),
+            model: "vgg9_edge".into(),
+        },
+        &arch,
+        &MacroSpec::default(),
+    );
+    println!(
+        "plan: {} logical macros / {} physical → {} reloads per inference pass",
+        handle.plan.logical_macros, handle.plan.physical_macros, handle.plan.reloads_per_inference
+    );
+
+    // Open-loop Poisson arrivals; a collector thread awaits responses.
+    let mut rng = Pcg::new(42);
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    let t0 = Instant::now();
+    let mut submitted = 0usize;
+    let mut rejected = 0usize;
+    std::thread::scope(|s| {
+        for k in 0..n {
+            let cls = k % NUM_CLASSES;
+            let img = SynthCifar::sample(cls, 11_000 + k as u64);
+            match handle.submit(img.data) {
+                Ok(t) => {
+                    submitted += 1;
+                    let done_tx = done_tx.clone();
+                    s.spawn(move || {
+                        let r = t.wait();
+                        let _ = done_tx.send(r.map(|resp| (cls, resp)));
+                    });
+                }
+                Err(_) => rejected += 1,
+            }
+            let gap = rng.exponential(rate);
+            std::thread::sleep(Duration::from_secs_f64(gap));
+        }
+        drop(done_tx);
+        let mut correct = 0usize;
+        let mut device_cycles_per_req = Vec::new();
+        for msg in done_rx.iter() {
+            if let Ok((cls, resp)) = msg {
+                if resp.class == cls {
+                    correct += 1;
+                }
+                device_cycles_per_req.push(resp.device_cycles);
+            }
+        }
+        let elapsed = t0.elapsed();
+        let m = handle.shutdown();
+        println!("\n── workload ──────────────────────────────");
+        println!("offered rate      {rate:.0} rps (Poisson)");
+        println!("submitted         {submitted} ({rejected} rejected by backpressure)");
+        println!("completed         {} in {:.2}s", m.completed, elapsed.as_secs_f64());
+        println!("throughput        {:.0} rps", m.completed as f64 / elapsed.as_secs_f64());
+        println!("accuracy          {:.1}%", correct as f64 / m.completed.max(1) as f64 * 100.0);
+        println!("\n── serving ───────────────────────────────");
+        println!("batches           {} (mean size {:.2})", m.batches, m.mean_batch);
+        println!(
+            "latency           p50 {}µs  p95 {}µs  p99 {}µs  max {}µs",
+            m.latency.p50_us, m.latency.p95_us, m.latency.p99_us, m.latency.max_us
+        );
+        println!("\n── CIM device model (200 MHz) ─────────────");
+        println!("compute+reload    {} cycles total", commas(m.device_cycles));
+        println!("weight reloads    {}", m.weight_reloads);
+        println!(
+            "device time       {:.2} ms ({:.1} µs/request)",
+            m.device_cycles as f64 / 200e6 * 1e3,
+            m.device_cycles as f64 / 200.0 / m.completed.max(1) as f64
+        );
+        if let Some(&c) = device_cycles_per_req.first() {
+            println!("cycles/request    {} (steady state)", commas(c));
+        }
+    });
+    Ok(())
+}

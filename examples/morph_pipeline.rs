@@ -1,0 +1,79 @@
+//! Morphing pipeline walkthrough: Stage 1 on all three models across the
+//! paper's four bitline budgets, printing the Tables III–V cost columns
+//! and the macro-usage trajectory round by round.
+//!
+//! ```bash
+//! cargo run --release --example morph_pipeline
+//! cargo run --release --example morph_pipeline -- --model resnet18 --sparsity 0.5
+//! ```
+
+use cim_adapt::arch::by_name;
+use cim_adapt::config::{MacroSpec, MorphConfig};
+use cim_adapt::latency::model_cost;
+use cim_adapt::morph::flow::morph_flow_synthetic;
+use cim_adapt::util::cli::Args;
+use cim_adapt::util::{commas, pct_delta};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let spec = MacroSpec::default();
+    let sparsity = args.f64_or("sparsity", 0.4);
+    let seed = args.u64_or("seed", 11);
+    let models: Vec<&str> = match args.get("model") {
+        Some(m) => vec![m],
+        None => vec!["vgg9", "vgg16", "resnet18"],
+    };
+
+    for model in models {
+        let arch = by_name(model)?;
+        let base = model_cost(&arch, &spec);
+        println!("\n================= {model} =================");
+        println!(
+            "baseline: {:.3}M params | {} BLs | load {} | compute {} cycles | psum {}",
+            base.params as f64 / 1e6,
+            commas(base.bls as u64),
+            commas(base.load_weight_latency as u64),
+            commas(base.computing_latency as u64),
+            commas(base.psum_storage as u64),
+        );
+        for target in [8192usize, 4096, 1024, 512] {
+            let cfg = MorphConfig {
+                target_bl: target,
+                ..MorphConfig::default()
+            };
+            let out = morph_flow_synthetic(&arch, &spec, &cfg, sparsity, seed);
+            println!("\n-- budget {target} BLs --");
+            for r in &out.rounds {
+                println!(
+                    "   round {}: prune → {:.3}M, expand ×{:.3} → {} BLs",
+                    r.round + 1,
+                    r.pruned_params as f64 / 1e6,
+                    r.expansion_ratio,
+                    commas(r.expanded_bls as u64)
+                );
+            }
+            let c = &out.cost;
+            println!(
+                "   final: {:.3}M ({}) | BLs {} ({}) | MACs {} ({}) | usage {:.2}%",
+                c.params as f64 / 1e6,
+                pct_delta(c.params as f64, base.params as f64),
+                commas(c.bls as u64),
+                pct_delta(c.bls as f64, base.bls as f64),
+                commas(c.macs as u64),
+                pct_delta(c.macs as f64, base.macs as f64),
+                out.macro_usage * 100.0
+            );
+            println!(
+                "   latency: load {} ({}) | compute {} ({}) | psum {} ({})",
+                commas(c.load_weight_latency as u64),
+                pct_delta(c.load_weight_latency as f64, base.load_weight_latency as f64),
+                commas(c.computing_latency as u64),
+                pct_delta(c.computing_latency as f64, base.computing_latency as f64),
+                commas(c.psum_storage as u64),
+                pct_delta(c.psum_storage as f64, base.psum_storage as f64),
+            );
+        }
+    }
+    println!("\n(accuracy columns come from the reduced-scale QAT runs: `python -m compile.train --exp table3`)");
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Quickstart: load the AOT-compiled adapted model and classify images.
+//!
+//! ```bash
+//! make artifacts          # once: trains + exports the adapted model
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This is the minimal end-to-end path: python trained and adapted the
+//! model offline (Stage 1 morphing + Stage 2 ADC-aware QAT), `aot.py`
+//! lowered it to HLO text, and here Rust loads the artifact into a PJRT
+//! CPU client and runs inference — no python at runtime.
+
+use std::path::Path;
+
+use cim_adapt::data::{SynthCifar, NUM_CLASSES};
+use cim_adapt::runtime::ModelRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("vgg9_edge_meta.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // 1. Load the artifact: parse HLO text, compile on the PJRT client.
+    let rt = ModelRuntime::load(&artifacts, "vgg9_edge")?;
+    println!("platform: {}", rt.platform());
+    println!(
+        "model: {} conv layers, {:.3}M params (morphed to {} bitlines)",
+        rt.meta.arch.layers.len(),
+        rt.meta.arch.params() as f64 / 1e6,
+        cim_adapt::latency::model_cost(&rt.meta.arch, &cim_adapt::config::MacroSpec::default()).bls,
+    );
+    println!(
+        "recorded accuracies: morphed {:.1}% → P1 {:.1}% → P2 {:.1}%",
+        rt.meta.results.get("morphed_acc").as_f64().unwrap_or(0.0) * 100.0,
+        rt.meta.results.get("p1_acc").as_f64().unwrap_or(0.0) * 100.0,
+        rt.meta.results.get("p2_acc").as_f64().unwrap_or(0.0) * 100.0,
+    );
+
+    // 2. Classify a handful of fresh SynthCIFAR images.
+    let mut correct = 0;
+    let n = 30;
+    for k in 0..n {
+        let cls = k % NUM_CLASSES;
+        let img = SynthCifar::sample(cls, 9000 + k as u64);
+        let pred = rt.classify("b1", &img.data)?[0];
+        if pred == cls {
+            correct += 1;
+        }
+        if k < 10 {
+            println!("  image class {cls} → predicted {pred} {}", if pred == cls { "✓" } else { "✗" });
+        }
+    }
+    println!("accuracy on {n} fresh samples: {:.1}%", correct as f64 / n as f64 * 100.0);
+    Ok(())
+}

@@ -1,0 +1,201 @@
+"""AOT export: lower the adapted model to HLO text for the rust runtime.
+
+This is the compile-path boundary of the three-layer architecture: python
+trains/adapts the model (Layers 1-2), this module lowers the quantized
+inference graph ONCE, and the rust coordinator (Layer 3) loads and serves
+the artifact with no python on the request path.
+
+Interchange is **HLO text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (what
+the published ``xla`` crate binds) rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Outputs (under artifacts/):
+    <name>_b<B>.hlo.txt         p2-semantics inference graph, batch B
+    <name>_pallas_b1.hlo.txt    same numerics, conv via the Pallas kernel
+    <name>_meta.json            arch JSON + ADC steps + accuracies
+    parity_vectors.json         integer test vectors for the rust CIM twin
+    MANIFEST.json               index of everything above
+
+Usage: python -m compile.aot [--preset quick|full] [--out-dir DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import archs, data
+from .kernels.cim_matmul import cim_conv_nchw, cim_matmul
+from .kernels.ref import cim_matmul_ref, lsq_quantize_ref
+from .layers import fold_bn, lsq_weight_codes
+from .model import calibrate_adc_steps, forward
+from .train import pipeline
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked weight tensors must survive the
+    # text round-trip (the default elides them as `constant({...})`).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_inference(params, state, arch, adc_steps, batch: int, *, pallas=False):
+    """Lower the p2-mode inference graph with weights baked as constants."""
+
+    def infer(x):
+        if not pallas:
+            logits, _, _ = forward(
+                params, state, x, arch, mode="p2", train=False, adc_steps=adc_steps
+            )
+            return (logits,)
+        # Pallas path: identical arithmetic, conv through the L1 kernel.
+        logits = _pallas_forward(params, state, x, arch, adc_steps)
+        return (logits,)
+
+    spec = jax.ShapeDtypeStruct((batch, 3, data.IMAGE_DIM, data.IMAGE_DIM), jnp.float32)
+    return to_hlo_text(jax.jit(infer).lower(spec))
+
+
+def _pallas_forward(params, state, x, arch, adc_steps):
+    """Inference forward where every conv runs through the Pallas CIM
+    kernel (im2col + segmented quantized matmul). Mirrors model.forward's
+    p2 branch; kept separate so the training path stays lean."""
+    from .layers import act_quant
+    from .model import _avgpool_to, _match_channels, _maxpool2
+
+    outputs = []
+    for i, (l, p, st) in enumerate(zip(arch.layers, params["layers"], state["layers"])):
+        inp = x if l.input_from is None else outputs[l.input_from]
+        in_hw = inp.shape[-1]
+        w_f, bias = fold_bn(p["w"], p["gamma"], p["beta"], st["mean"], st["var"])
+        s_w, s_act, s_adc = p["s_w"], p["s_act"], adc_steps[i]
+        x_codes = inp / s_act
+        w_codes = lsq_weight_codes(w_f, s_w, 4)
+        out_codes = cim_conv_nchw(
+            x_codes, w_codes, channels_per_bl=28, s_adc=float(s_adc), adc_bits=5
+        )
+        y = out_codes * (s_w * s_adc * s_act) + bias[None, :, None, None]
+        if l.residual_from is not None:
+            r = outputs[l.residual_from]
+            r = _avgpool_to(r, y.shape[-1])
+            y = y + _match_channels(r, y.shape[1])
+        y = jax.nn.relu(y)
+        y = act_quant(y, p["s_act"], 4)
+        if l.out_hw < in_hw:
+            y = _maxpool2(y)
+        outputs.append(y)
+    feat = jnp.mean(outputs[-1], axis=(2, 3))
+    return feat @ params["head"]["w"] + params["head"]["b"]
+
+
+def emit_parity_vectors(path: pathlib.Path, seed: int = 7) -> None:
+    """Integer test vectors binding the three implementations together:
+    the jnp oracle produces them; pytest checks the Pallas kernel against
+    them; the rust integration test (`integration_runtime.rs`) checks
+    `cim::macro_sim` against them."""
+    rng = np.random.default_rng(seed)
+    cases = []
+    for (m, k, n, seg, s_adc) in [
+        (4, 27, 3, 252, 4.0),     # stem-like: single ragged segment
+        (2, 252, 8, 252, 16.0),   # exactly one full segment
+        (3, 504, 5, 252, 16.0),   # two segments (Fig. 9's example shape)
+        (2, 600, 6, 252, 32.0),   # ragged tail segment
+        (1, 1000, 4, 252, 8.0),   # four segments
+    ]:
+        x = rng.integers(0, 16, (m, k)).astype(np.float32)
+        w = rng.integers(-7, 8, (k, n)).astype(np.float32)
+        out = cim_matmul_ref(
+            jnp.asarray(x), jnp.asarray(w), seg=seg, s_adc=s_adc, adc_bits=5
+        )
+        cases.append(
+            {
+                "m": m, "k": k, "n": n, "seg": seg, "s_adc": s_adc, "adc_bits": 5,
+                "x_codes": x.astype(int).flatten().tolist(),
+                "w_codes": w.astype(int).flatten().tolist(),
+                "out_codes": np.asarray(out).astype(int).flatten().tolist(),
+            }
+        )
+    # LSQ vectors too.
+    w = (rng.normal(0, 0.2, 64)).astype(np.float32)
+    q, wq = lsq_quantize_ref(jnp.asarray(w), 0.05, 4)
+    lsq_case = {
+        "step": 0.05, "bits": 4,
+        "w": w.tolist(),
+        "q": np.asarray(q).astype(int).tolist(),
+    }
+    path.write_text(json.dumps({"cim_matmul": cases, "lsq": lsq_case}, indent=1))
+
+
+def build(preset: str, out_dir: pathlib.Path) -> None:
+    out_dir.mkdir(exist_ok=True)
+    t0 = time.time()
+    if preset == "quick":
+        cfg = dict(
+            width=0.125, target_bl=256, seed_epochs=3, shrink_epochs=2,
+            finetune_epochs=3, p1_epochs=2, p2_epochs=2, n_train=640, n_test=320,
+        )
+    else:
+        cfg = dict(
+            width=0.25, target_bl=1024, seed_epochs=10, shrink_epochs=6,
+            finetune_epochs=10, p1_epochs=5, p2_epochs=5, n_train=4000, n_test=1000,
+        )
+    name = "vgg9_edge"
+    res, params, state, arch, adc_steps = pipeline("vgg9", log_every=2, **cfg)
+    print(f"pipeline done in {time.time() - t0:.0f}s: p2_acc={res['p2_acc']:.3f}")
+
+    manifest = {"preset": preset, "models": {}}
+    files = {}
+    for b in (1, 8):
+        hlo = export_inference(params, state, arch, adc_steps, batch=b)
+        f = out_dir / f"{name}_b{b}.hlo.txt"
+        f.write_text(hlo)
+        files[f"b{b}"] = f.name
+        print(f"wrote {f} ({len(hlo) / 1e6:.1f} MB)")
+    hlo = export_inference(params, state, arch, adc_steps, batch=1, pallas=True)
+    f = out_dir / f"{name}_pallas_b1.hlo.txt"
+    f.write_text(hlo)
+    files["pallas_b1"] = f.name
+    print(f"wrote {f} ({len(hlo) / 1e6:.1f} MB)")
+
+    meta = {
+        "name": name,
+        "arch": json.loads(arch.to_json()),
+        "adc_steps": [float(s) for s in adc_steps],
+        "results": {k: v for k, v in res.items() if k != "arch_json"},
+        "input_shape": [3, data.IMAGE_DIM, data.IMAGE_DIM],
+        "num_classes": arch.num_classes,
+        "files": files,
+    }
+    (out_dir / f"{name}_meta.json").write_text(json.dumps(meta, indent=2))
+    emit_parity_vectors(out_dir / "parity_vectors.json")
+    manifest["models"][name] = f"{name}_meta.json"
+    manifest["parity_vectors"] = "parity_vectors.json"
+    manifest["built_unix"] = int(time.time())
+    (out_dir / "MANIFEST.json").write_text(json.dumps(manifest, indent=2))
+    print(f"artifacts complete in {time.time() - t0:.0f}s -> {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="quick", choices=["quick", "full"])
+    ap.add_argument("--out-dir", default=str(ARTIFACTS))
+    args = ap.parse_args()
+    build(args.preset, pathlib.Path(args.out_dir))
+
+
+if __name__ == "__main__":
+    main()

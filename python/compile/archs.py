@@ -1,0 +1,184 @@
+"""Python mirror of ``rust/src/arch/models.rs``.
+
+The same three CIFAR-10 configurations solved from the paper's baseline
+rows, with a ``width`` multiplier for the reduced-scale accuracy
+experiments (DESIGN.md §5). ``to_json`` emits the exact schema
+``ModelArch::from_json`` parses, so morphed architectures round-trip
+between the JAX trainer and the rust coordinator.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass
+class ConvSpec:
+    name: str
+    kind: str  # stem | standard | shortcut
+    c_in: int
+    c_out: int
+    kernel: int
+    out_hw: int
+    input_from: int | None
+    # residual source layer index (add after this conv's BN+quant), or None
+    residual_from: int | None = None
+
+
+@dataclass
+class Arch:
+    name: str
+    layers: list[ConvSpec] = field(default_factory=list)
+    num_classes: int = 10
+    tied_output_groups: list[list[int]] = field(default_factory=list)
+
+    def params(self) -> int:
+        return sum(l.kernel * l.kernel * l.c_in * l.c_out for l in self.layers)
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "name": self.name,
+                "num_classes": self.num_classes,
+                "layers": [
+                    {
+                        "name": l.name,
+                        "kind": l.kind,
+                        "c_in": l.c_in,
+                        "c_out": l.c_out,
+                        "kernel": l.kernel,
+                        "out_hw": l.out_hw,
+                        "input_from": l.input_from,
+                    }
+                    for l in self.layers
+                ],
+                "tied_output_groups": self.tied_output_groups,
+            },
+            indent=2,
+        )
+
+    def rechain(self) -> None:
+        for i, l in enumerate(self.layers):
+            l.c_in = 3 if l.input_from is None else self.layers[l.input_from].c_out
+
+    def apply_out_channels(self, new_out: list[int]) -> None:
+        assert len(new_out) == len(self.layers)
+        for l, c in zip(self.layers, new_out):
+            l.c_out = max(1, int(c))
+        for group in self.tied_output_groups:
+            c = self.layers[group[0]].c_out
+            for i in group:
+                self.layers[i].c_out = c
+        self.rechain()
+
+    def scaled(self, ratio: float) -> "Arch":
+        a = _clone(self)
+        a.apply_out_channels(
+            [max(1, round(l.c_out * ratio)) for l in self.layers]
+        )
+        return a
+
+
+def _clone(a: Arch) -> Arch:
+    return Arch(
+        name=a.name,
+        layers=[ConvSpec(**vars(l)) for l in a.layers],
+        num_classes=a.num_classes,
+        tied_output_groups=[list(g) for g in a.tied_output_groups],
+    )
+
+
+def _chain(name: str, spec: list[tuple[int, int]]) -> Arch:
+    layers = []
+    for i, (c_out, out_hw) in enumerate(spec):
+        layers.append(
+            ConvSpec(
+                name=f"conv{i + 1}",
+                kind="stem" if i == 0 else "standard",
+                c_in=3 if i == 0 else spec[i - 1][0],
+                c_out=c_out,
+                kernel=3,
+                out_hw=out_hw,
+                input_from=None if i == 0 else i - 1,
+            )
+        )
+    return Arch(name=name, layers=layers)
+
+
+def vgg9(width: float = 1.0) -> Arch:
+    a = _chain(
+        "vgg9",
+        [(64, 32), (128, 16), (256, 8), (256, 8), (512, 4), (512, 4), (512, 2), (512, 2)],
+    )
+    return a if width == 1.0 else a.scaled(width)
+
+
+def vgg16(width: float = 1.0) -> Arch:
+    a = _chain(
+        "vgg16",
+        [
+            (64, 32), (64, 32),
+            (128, 16), (128, 16),
+            (256, 8), (256, 8), (256, 8),
+            (512, 4), (512, 4), (512, 4),
+            (512, 2), (512, 2), (512, 2),
+        ],
+    )
+    return a if width == 1.0 else a.scaled(width)
+
+
+def resnet18(width: float = 1.0) -> Arch:
+    layers = [ConvSpec("conv1", "stem", 3, 64, 3, 32, None)]
+    tied: list[list[int]] = []
+    stages = [(64, 16), (128, 8), (256, 4), (512, 2)]
+    prev = 0
+    idx = 1
+    for s, (c, hw) in enumerate(stages):
+        group = [0] if s == 0 else []
+        for b in range(2):
+            c_in_first = layers[prev].c_out
+            layers.append(
+                ConvSpec(f"conv{s + 2}_{b + 1}a", "standard", c_in_first, c, 3, hw, prev)
+            )
+            first = idx
+            idx += 1
+            layers.append(
+                ConvSpec(
+                    f"conv{s + 2}_{b + 1}b",
+                    "standard",
+                    c,
+                    c,
+                    3,
+                    hw,
+                    first,
+                    residual_from=prev,
+                )
+            )
+            group.append(idx)
+            prev = idx
+            idx += 1
+        tied.append(group)
+    a = Arch(name="resnet18", layers=layers, tied_output_groups=tied)
+    return a if width == 1.0 else a.scaled(width)
+
+
+BUILDERS = {"vgg9": vgg9, "vgg16": vgg16, "resnet18": resnet18}
+
+
+def by_name(name: str, width: float = 1.0) -> Arch:
+    return BUILDERS[name](width)
+
+
+def channels_per_bl(kernel: int, wordlines: int = 256) -> int:
+    return wordlines // (kernel * kernel)
+
+
+def cost_bls(a: Arch, wordlines: int = 256) -> int:
+    """Mirror of the rust cost model's BLs column (for cross-checks)."""
+    total = 0
+    for l in a.layers:
+        cpb = channels_per_bl(l.kernel, wordlines)
+        total += math.ceil(l.c_in / cpb) * l.c_out
+    return total

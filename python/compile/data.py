@@ -1,0 +1,122 @@
+"""SynthCIFAR -- deterministic synthetic 10-class image distribution.
+
+Bit-identical twin of ``rust/src/data/synth.rs`` (see the parity pins in
+``python/tests/test_data.py`` and ``data::synth::tests::parity_pins`` on
+the rust side). Used as the CIFAR-10 substitute for every accuracy
+experiment (DESIGN.md §5): class structure is learnable, so pruning and
+quantization accuracy *deltas* remain meaningful offline.
+
+Sample ``(class c, index i)`` is generated closed-form (no sequential RNG):
+
+    tex(y,x) = 0.5 + 0.25*sin(fx*x + fy*y + phase)
+    pixel    = clip(tex + color_bias[c][ch] + 0.08*eta, 0, 1)
+
+with ``eta`` in [-1,1) from a SplitMix64 hash of (i, c, y, x, ch).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMAGE_DIM = 32
+NUM_CLASSES = 10
+CHANNELS = 3
+NOISE_AMP = np.float32(0.08)
+
+# Matches rust CLASS_COLOR.
+CLASS_COLOR = np.array(
+    [
+        [0.15, -0.05, -0.10],
+        [-0.10, 0.15, -0.05],
+        [-0.05, -0.10, 0.15],
+        [0.12, 0.12, -0.12],
+        [-0.12, 0.12, 0.12],
+        [0.12, -0.12, 0.12],
+        [0.18, 0.00, 0.00],
+        [0.00, 0.18, 0.00],
+        [0.00, 0.00, 0.18],
+        [-0.15, -0.15, -0.15],
+    ],
+    dtype=np.float32,
+)
+
+_U64 = np.uint64
+
+
+def _splitmix64(z: np.ndarray) -> np.ndarray:
+    """Vectorised SplitMix64 finalizer over uint64 (wrapping arithmetic)."""
+    with np.errstate(over="ignore"):
+        z = (z + _U64(0x9E3779B97F4A7C15)).astype(_U64)
+        z = ((z ^ (z >> _U64(30))) * _U64(0xBF58476D1CE4E5B9)).astype(_U64)
+        z = ((z ^ (z >> _U64(27))) * _U64(0x94D049BB133111EB)).astype(_U64)
+        return (z ^ (z >> _U64(31))).astype(_U64)
+
+
+def _eta(i: int, c: int, y: np.ndarray, x: np.ndarray, ch: np.ndarray) -> np.ndarray:
+    """Hash noise in [-1, 1), matching rust `eta` exactly."""
+    with np.errstate(over="ignore"):
+        key = (
+            _U64(i) * _U64(1_000_003)
+            + _U64(c) * _U64(10_007)
+            + y.astype(_U64) * _U64(1_009)
+            + x.astype(_U64) * _U64(101)
+            + ch.astype(_U64)
+        ).astype(_U64)
+    h = _splitmix64(key)
+    top24 = (h >> _U64(40)).astype(np.float32)
+    return top24 * np.float32(1.0 / (1 << 24)) * np.float32(2.0) - np.float32(1.0)
+
+
+def sample(class_id: int, index: int, hard: bool = False) -> np.ndarray:
+    """One CHW float32 image in [0,1] for (class, index).
+
+    ``hard=True`` is the difficulty-calibrated variant used by the
+    accuracy experiments (DESIGN.md §5): class gratings are close in
+    frequency, the color bias shrinks 4x and the noise floor rises to
+    0.30, so capacity and quantization actually cost accuracy -- the
+    regime the paper's Tables I/III-V study. The default (easy) variant
+    is the serving-path twin pinned against rust.
+    """
+    assert 0 <= class_id < NUM_CLASSES
+    c = np.float32(class_id)
+    if hard:
+        fx = np.float32(0.20) + np.float32(0.035) * c
+        fy = np.float32(0.30) + np.float32(0.025) * np.float32((class_id * 7) % NUM_CLASSES)
+    else:
+        fx = np.float32(0.20) + np.float32(0.15) * c
+        fy = np.float32(0.30) + np.float32(0.10) * np.float32((class_id * 7) % NUM_CLASSES)
+    phase = np.float32(0.70) * np.float32(index % 64)
+
+    ch, y, x = np.meshgrid(
+        np.arange(CHANNELS), np.arange(IMAGE_DIM), np.arange(IMAGE_DIM), indexing="ij"
+    )
+    # f32 grating, term by term as in rust: fx*x + fy*y + phase.
+    arg = (
+        fx * x.astype(np.float32) + fy * y.astype(np.float32) + phase
+    ).astype(np.float32)
+    tex = np.float32(0.5) + np.float32(0.25) * np.sin(arg).astype(np.float32)
+    bias_scale = np.float32(0.25) if hard else np.float32(1.0)
+    bias = CLASS_COLOR[class_id][:, None, None] * bias_scale
+    amp = np.float32(0.30) if hard else NOISE_AMP
+    noise = amp * _eta(index, class_id, y, x, ch)
+    img = np.clip(tex + bias + noise, 0.0, 1.0).astype(np.float32)
+    return img
+
+
+def batch(start_index: int, n: int, hard: bool = False) -> tuple[np.ndarray, np.ndarray]:
+    """A batch cycling classes (k-th sample has class k % 10), NCHW."""
+    imgs = np.zeros((n, CHANNELS, IMAGE_DIM, IMAGE_DIM), dtype=np.float32)
+    labels = np.zeros((n,), dtype=np.int32)
+    for k in range(n):
+        idx = start_index + k
+        cls = idx % NUM_CLASSES
+        imgs[k] = sample(cls, idx // NUM_CLASSES, hard=hard)
+        labels[k] = cls
+    return imgs, labels
+
+
+def dataset(n_train: int, n_test: int, hard: bool = False) -> dict:
+    """Deterministic train/test split (disjoint index ranges)."""
+    xtr, ytr = batch(0, n_train, hard=hard)
+    xte, yte = batch(n_train, n_test, hard=hard)
+    return {"x_train": xtr, "y_train": ytr, "x_test": xte, "y_test": yte}

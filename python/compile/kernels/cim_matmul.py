@@ -1,0 +1,141 @@
+"""Layer-1 Pallas kernel: the CIM macro's segmented quantized matmul.
+
+This is the compute hot-spot of the paper's system: an im2col'd
+convolution executed the way the macro executes it (Fig. 9) -- the
+reduction dimension is split into wordline segments of
+``channels_per_bl * k^2`` rows, each segment's partial sum is quantized by
+the 5-bit ADC (Eq. 7 inner), and quantized codes are accumulated across
+segments.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): on a real TPU each
+grid step is one "macro pass" -- the segment's weight tile
+(252 x N <= ~63 KiB at int8) plus an activation tile live in VMEM, and the
+segment dot-product maps onto one MXU matmul instead of the macro's
+one-ADC-conversion-per-MAC analog step. BlockSpec expresses the HBM->VMEM
+schedule that the wordline segmentation expresses on the macro. We run
+``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls); numerics
+are what we validate, structure is what we optimize.
+
+The kernel operates on *codes*: float32 tensors holding exact small
+integers (|values| < 2^24, so f32 arithmetic is exact). Scaling back to
+real units (* S_W * S_ADC * S_act) is the caller's job, mirroring the
+macro's adder-tree + single output multiplier (Fig. 2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import round_half_away
+
+# Default wordline segment for 3x3 kernels on the 256-WL macro: 28 ch * 9.
+DEFAULT_SEG = 252
+
+
+def _kernel(x_ref, w_ref, o_ref, *, s_adc: float, q_max: int):
+    """One grid step = one macro pass over a wordline segment."""
+    seg_i = pl.program_id(0)
+
+    @pl.when(seg_i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # The segment dot-product (the macro's analog accumulate, MXU-shaped).
+    psum = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    # The ADC: scale by the step, round half away from zero, clip.
+    code = jnp.clip(round_half_away(psum / s_adc), -q_max, q_max)
+    # Adder tree: accumulate quantized codes across segments.
+    o_ref[...] += code
+
+
+@functools.partial(jax.jit, static_argnames=("seg", "s_adc", "adc_bits", "interpret"))
+def cim_matmul(
+    x_codes,
+    w_codes,
+    *,
+    seg: int = DEFAULT_SEG,
+    s_adc: float = 1.0,
+    adc_bits: int = 5,
+    interpret: bool = True,
+):
+    """Segmented CIM matmul with per-segment ADC quantization.
+
+    x_codes: [M, K] float32 integer activation codes (DAC outputs)
+    w_codes: [K, N] float32 integer weight codes (4-bit cell contents)
+    seg:     wordline segment size in rows (= channels_per_bl * k^2)
+
+    Returns [M, N] float32 integer code accumulation:
+        sum_s clip(round((x[:, s] @ w[s, :]) / s_adc), -Q, Q)
+
+    K is zero-padded to a multiple of ``seg``; zero rows contribute zero to
+    the padded segment's partial sum, exactly like the unused wordlines of
+    a ragged final segment on the macro.
+    """
+    m, k = x_codes.shape
+    k2, n = w_codes.shape
+    assert k == k2, f"inner dims disagree: {k} vs {k2}"
+    assert seg >= 1
+    q_max = 2 ** (adc_bits - 1) - 1
+
+    num_segs = max(1, -(-k // seg))
+    k_pad = num_segs * seg
+    if k_pad != k:
+        x_codes = jnp.pad(x_codes, ((0, 0), (0, k_pad - k)))
+        w_codes = jnp.pad(w_codes, ((0, 0), (0, 0))[:1] + ((0, k_pad - k), (0, 0))[1:])
+        w_codes = jnp.pad(w_codes, ((0, k_pad - k2), (0, 0)))[:k_pad]
+
+    grid = (num_segs,)
+    return pl.pallas_call(
+        functools.partial(_kernel, s_adc=s_adc, q_max=q_max),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, seg), lambda s: (0, s)),
+            pl.BlockSpec((seg, n), lambda s: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda s: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x_codes, w_codes)
+
+
+def cim_conv_nchw(
+    x_codes,
+    w_codes,
+    *,
+    channels_per_bl: int = 28,
+    s_adc: float = 1.0,
+    adc_bits: int = 5,
+    interpret: bool = True,
+):
+    """Convolution through the CIM kernel: im2col + segmented matmul.
+
+    x_codes: [B, Cin, H, W] integer activation codes, SAME padding, stride 1
+    w_codes: [Cout, Cin, k, k] integer weight codes
+
+    The im2col unrolling is ordered channel-major (whole channels stay
+    contiguous) so a segment boundary never splits a channel -- matching
+    how the mapper packs whole channels into a bitline column (Fig. 3).
+    """
+    b, cin, h, w = x_codes.shape
+    cout, cin2, kh, kw = w_codes.shape
+    assert cin == cin2 and kh == kw
+    pad = kh // 2
+    # [B, Cin*k*k, H*W] patches, channel-major.
+    xp = jnp.pad(x_codes, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(xp[:, :, dy : dy + h, dx : dx + w])
+    # [k*k, B, Cin, H, W] -> [B, Cin, k*k, H*W]: channel-major rows.
+    patches = jnp.stack(cols, axis=2).reshape(b, cin * kh * kw, h * w)
+    xm = patches.transpose(0, 2, 1).reshape(b * h * w, cin * kh * kw)
+    wm = w_codes.reshape(cout, cin * kh * kw).T  # [Cin*k*k, Cout]
+    seg = channels_per_bl * kh * kw
+    out = cim_matmul(
+        xm, wm, seg=seg, s_adc=s_adc, adc_bits=adc_bits, interpret=interpret
+    )
+    return out.reshape(b, h * w, cout).transpose(0, 2, 1).reshape(b, cout, h, w)

@@ -1,0 +1,53 @@
+"""Layer-1 Pallas kernel: LSQ fake-quantization (Eq. 6 forward).
+
+Element-wise ``round(clip(w/s, -Q, Q)) * s`` as a tiled Pallas kernel.
+The training path uses the jnp implementation in ``layers.py`` (it needs
+custom VJPs); this kernel is the build-time/export counterpart, validated
+against ``ref.lsq_quantize_ref`` and used by the AOT inference graph.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import round_half_away
+
+
+def _kernel(w_ref, s_ref, o_ref, *, q_max: int):
+    s = s_ref[0]
+    v = jnp.clip(w_ref[...] / s, -q_max, q_max)
+    o_ref[...] = round_half_away(v) * s
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def lsq_fakequant(w, step, *, bits: int = 4, block: int = 4096, interpret: bool = True):
+    """Fake-quantize a flat or shaped tensor with step ``step`` (scalar).
+
+    Tiled over flattened length; the tail block is zero-padded (quantizing
+    zeros yields zeros, so padding is harmless).
+    """
+    q_max = 2 ** (bits - 1) - 1
+    shape = w.shape
+    flat = w.reshape(-1)
+    n = flat.shape[0]
+    nblocks = max(1, -(-n // block))
+    padded = nblocks * block
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    step_arr = jnp.asarray(step, dtype=jnp.float32).reshape(1)
+    out = pl.pallas_call(
+        functools.partial(_kernel, q_max=q_max),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
+        interpret=interpret,
+    )(flat, step_arr)
+    return out[:n].reshape(shape)

@@ -1,0 +1,71 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the executable spec of the paper's arithmetic (Eqs. 6-8):
+every kernel in this package must match its oracle bit-for-bit on integer
+inputs (pytest + hypothesis sweep in ``python/tests/test_kernel.py``),
+and the rust digital twin (`cim::macro_sim`) matches the same numbers via
+the parity vectors emitted by ``aot.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def round_half_away(x):
+    """Round half away from zero (the silicon's rounding; differs from
+    jnp.round's bankers rounding on exact halves)."""
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def lsq_quantize_ref(w, step, bits: int):
+    """Eq. 6 weight quantization: codes and dequantized values.
+
+    Returns (q, wq) with q = round(clip(w/step, -Q, Q)), wq = q*step.
+    """
+    q_max = 2 ** (bits - 1) - 1
+    v = jnp.clip(w / step, -q_max, q_max)
+    q = round_half_away(v)
+    return q, q * step
+
+
+def act_quantize_ref(x, step, bits: int):
+    """Unsigned activation (DAC) quantization: [0, 2^bits - 1]."""
+    q_max = 2**bits - 1
+    q = jnp.clip(round_half_away(x / step), 0, q_max)
+    return q, q * step
+
+
+def psum_quantize_ref(acc, s_adc, bits: int):
+    """Eq. 7 inner ADC conversion: round(clip(acc/s_adc, -Q, Q))."""
+    q_max = 2 ** (bits - 1) - 1
+    return jnp.clip(round_half_away(acc / s_adc), -q_max, q_max)
+
+
+def cim_matmul_ref(x_codes, w_codes, *, seg: int, s_adc: float, adc_bits: int):
+    """Segmented CIM matmul with per-segment ADC quantization (Fig. 9).
+
+    x_codes: [M, K] integer activation codes (float dtype, integer values)
+    w_codes: [K, N] integer weight codes
+    seg:     rows per wordline segment (channels_per_bl * k*k = 252)
+
+    Returns the integer-domain accumulated output [M, N]:
+        sum_s  psum_quantize(x[:, s] @ w[s, :])
+    Caller applies the final scale S_W * S_ADC (* S_act).
+    """
+    m, k = x_codes.shape
+    k2, n = w_codes.shape
+    assert k == k2, f"inner dims disagree: {k} vs {k2}"
+    out = jnp.zeros((m, n), dtype=jnp.float32)
+    for lo in range(0, k, seg):
+        hi = min(lo + seg, k)
+        psum = x_codes[:, lo:hi].astype(jnp.float32) @ w_codes[lo:hi, :].astype(
+            jnp.float32
+        )
+        out = out + psum_quantize_ref(psum, s_adc, adc_bits)
+    return out
+
+
+def cim_matmul_ideal(x_codes, w_codes):
+    """No-ADC reference (infinite precision partial sums)."""
+    return x_codes.astype(jnp.float32) @ w_codes.astype(jnp.float32)

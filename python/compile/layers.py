@@ -1,0 +1,201 @@
+"""Layer-2 quantization-aware building blocks (Eqs. 6-8, Figs. 7-11).
+
+All fake-quantizers use ``jax.custom_vjp`` to implement the paper's
+backward rules (Figs. 8/11): gradients skip scaling and rounding (STE),
+weight gradients vanish outside the clip range, and the LSQ step-size
+gradient follows Esser et al. 2019.
+
+Tensors flowing between layers are ordinary floats; quantization points
+insert the integer grid exactly where the macro has one (DAC in, 4-bit
+cells, 5-bit ADC on every wordline-segment partial sum).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import round_half_away
+
+# ---------------------------------------------------------------------------
+# LSQ weight fake-quant (Eq. 6) with learned step
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def lsq_weight(w, step, bits: int = 4):
+    """Fake-quantize weights: round(clip(w/s, -Q, Q)) * s."""
+    q_max = 2 ** (bits - 1) - 1
+    v = jnp.clip(w / step, -q_max, q_max)
+    return round_half_away(v) * step
+
+
+def _lsq_fwd(w, step, bits):
+    return lsq_weight(w, step, bits), (w, step)
+
+
+def _lsq_bwd(bits, res, g):
+    w, step = res
+    q_max = 2 ** (bits - 1) - 1
+    v = w / step
+    inside = (v > -q_max) & (v < q_max)
+    # STE for w; LSQ rule for the step, with the 1/sqrt(N*Q) normalizer.
+    d_w = jnp.where(inside, g, 0.0)
+    d_s_elem = jnp.where(
+        v <= -q_max,
+        -float(q_max),
+        jnp.where(v >= q_max, float(q_max), round_half_away(v) - v),
+    )
+    norm = 1.0 / jnp.sqrt(jnp.asarray(w.size, jnp.float32) * q_max)
+    d_step = jnp.sum(g * d_s_elem) * norm
+    return d_w, d_step
+
+
+lsq_weight.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+def lsq_weight_codes(w, step, bits: int = 4):
+    """Integer codes Qw of Eq. 8 (no gradient path; export/serving use)."""
+    q_max = 2 ** (bits - 1) - 1
+    return round_half_away(jnp.clip(w / step, -q_max, q_max))
+
+
+def lsq_init_step(w, bits: int = 4):
+    """LSQ-recommended init: 2*mean|w| / sqrt(Q)."""
+    q_max = 2 ** (bits - 1) - 1
+    return 2.0 * jnp.mean(jnp.abs(w)) / jnp.sqrt(float(q_max))
+
+
+# ---------------------------------------------------------------------------
+# Activation (DAC) fake-quant: unsigned, post-ReLU
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def act_quant(x, step, bits: int = 4):
+    """Unsigned fake-quant to the DAC grid: clip(round(x/s), 0, 2^b-1)*s."""
+    q_max = 2**bits - 1
+    q = jnp.clip(round_half_away(x / step), 0, q_max)
+    return q * step
+
+
+def _act_fwd(x, step, bits):
+    return act_quant(x, step, bits), (x, step)
+
+
+def _act_bwd(bits, res, g):
+    x, step = res
+    q_max = 2**bits - 1
+    v = x / step
+    inside = (v > 0) & (v < q_max)
+    d_x = jnp.where(inside, g, 0.0)
+    d_s_elem = jnp.where(
+        v <= 0, 0.0, jnp.where(v >= q_max, float(q_max), round_half_away(v) - v)
+    )
+    norm = 1.0 / jnp.sqrt(jnp.asarray(x.size, jnp.float32) * q_max)
+    d_step = jnp.sum(g * d_s_elem) * norm
+    return d_x, d_step
+
+
+act_quant.defvjp(_act_fwd, _act_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Partial-sum (ADC) fake-quant (Eq. 7) -- straight-through
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def psum_quant(acc, s_adc, bits: int = 5):
+    """ADC fake-quant of an integer-domain partial sum (stays in codes):
+    clip(round(acc/s_adc), -Q, Q). Backward: pure STE / s_adc chain skipped
+    (Fig. 11: gradients skip all scaling and rounding)."""
+    q_max = 2 ** (bits - 1) - 1
+    return jnp.clip(round_half_away(acc / s_adc), -q_max, q_max)
+
+
+def _psum_fwd(acc, s_adc, bits):
+    return psum_quant(acc, s_adc, bits), (acc, s_adc)
+
+
+def _psum_bwd(bits, res, g):
+    acc, s_adc = res
+    q_max = 2 ** (bits - 1) - 1
+    v = acc / s_adc
+    inside = (v > -q_max) & (v < q_max)
+    # Fig. 11: skip the 1/s_adc scaling in the backward pass (gradients
+    # "do not experience sudden scaling"), zero outside the clip range.
+    return jnp.where(inside, g, 0.0), jnp.zeros_like(s_adc)
+
+
+psum_quant.defvjp(_psum_fwd, _psum_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Convolutions
+# ---------------------------------------------------------------------------
+
+
+def conv_nchw(x, w, stride: int = 1):
+    """Plain SAME conv, NCHW/OIHW."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def segmented_conv(x_codes, w_codes, *, channels_per_bl: int = 28, s_adc=16.0,
+                   adc_bits: int = 5, stride: int = 1):
+    """Fig. 9/10 segmented convolution in the integer-code domain.
+
+    Splits input channels into wordline segments (28 for 3x3), convolves
+    each group, ADC-quantizes each group's partial sum, and accumulates
+    the quantized codes. Differentiable via the psum_quant STE.
+
+    Returns integer codes; caller scales by S_W * S_ADC * S_act.
+    """
+    cin = x_codes.shape[1]
+    out = None
+    for lo in range(0, cin, channels_per_bl):
+        hi = min(lo + channels_per_bl, cin)
+        psum = conv_nchw(x_codes[:, lo:hi], w_codes[:, lo:hi], stride)
+        code = psum_quant(psum, s_adc, adc_bits)
+        out = code if out is None else out + code
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Batch norm (training-time) and folding
+# ---------------------------------------------------------------------------
+
+
+def batchnorm_apply(x, gamma, beta, mean, var, eps=1e-5):
+    """Per-channel BN, NCHW."""
+    inv = jax.lax.rsqrt(var + eps)
+    return (x - mean[None, :, None, None]) * (gamma * inv)[None, :, None, None] + beta[
+        None, :, None, None
+    ]
+
+
+def batch_stats(x):
+    """Batch mean/var over (N, H, W) per channel."""
+    mean = jnp.mean(x, axis=(0, 2, 3))
+    var = jnp.var(x, axis=(0, 2, 3))
+    return mean, var
+
+
+def fold_bn(w, gamma, beta, mean, var, eps=1e-5):
+    """Fold BN into conv weights (Fig. 7 preprocessing).
+
+    w: [Cout, Cin, k, k]. Returns (w_folded, bias).
+    """
+    inv = 1.0 / jnp.sqrt(var + eps)
+    scale = gamma * inv
+    w_f = w * scale[:, None, None, None]
+    bias = beta - gamma * mean * inv
+    return w_f, bias

@@ -1,0 +1,283 @@
+"""Layer-2 model zoo: VGG9 / VGG16 / ResNet18 with CIM-aware quantization.
+
+A model is a pure function over an explicit parameter pytree (no
+framework). The same architecture runs in four modes, matching the
+paper's pipeline stages:
+
+* ``seed``   -- float weights + BN, 4-bit activations (the paper's seed
+               model has quantized activations from the start);
+* ``shrink`` -- same forward as seed; the sparsifying loss (Eq. 1+2) is
+               added by ``morph.py``;
+* ``p1``     -- Phase-1 QAT (Fig. 7): BN folded into conv weights, 4-bit
+               LSQ weight fake-quant with learned step S_W;
+* ``p2``     -- Phase-2 QAT (Fig. 10): p1 + wordline-segmented convolution
+               with 5-bit ADC partial-sum quantization (S_W frozen).
+
+The p2 graph *is* the macro's arithmetic: integer activation codes times
+integer weight codes, per-segment ADC quantization, adder tree, one
+output scaling -- which is why the AOT export of this mode is what the
+rust runtime serves.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import archs
+from .layers import (
+    act_quant,
+    batch_stats,
+    batchnorm_apply,
+    conv_nchw,
+    fold_bn,
+    lsq_init_step,
+    lsq_weight,
+    lsq_weight_codes,
+    psum_quant,
+    segmented_conv,
+)
+
+MODES = ("seed", "shrink", "p1", "p2")
+
+
+# ---------------------------------------------------------------------------
+# Initialisation
+# ---------------------------------------------------------------------------
+
+
+def init_params(arch: archs.Arch, key) -> tuple[dict, dict]:
+    """He-init params + BN running-stat state for an architecture."""
+    params: dict = {"layers": [], "head": {}}
+    state: dict = {"layers": []}
+    keys = jax.random.split(key, len(arch.layers) + 1)
+    for l, k in zip(arch.layers, keys[:-1]):
+        fan_in = l.c_in * l.kernel * l.kernel
+        w = jax.random.normal(k, (l.c_out, l.c_in, l.kernel, l.kernel)) * jnp.sqrt(
+            2.0 / fan_in
+        )
+        params["layers"].append(
+            {
+                "w": w.astype(jnp.float32),
+                "gamma": jnp.ones((l.c_out,), jnp.float32),
+                "beta": jnp.zeros((l.c_out,), jnp.float32),
+                "s_w": jnp.asarray(lsq_init_step(w), jnp.float32),
+                "s_act": jnp.asarray(0.1, jnp.float32),
+            }
+        )
+        state["layers"].append(
+            {
+                "mean": jnp.zeros((l.c_out,), jnp.float32),
+                "var": jnp.ones((l.c_out,), jnp.float32),
+            }
+        )
+    c_last = arch.layers[-1].c_out
+    params["head"] = {
+        "w": jax.random.normal(keys[-1], (c_last, arch.num_classes))
+        * jnp.sqrt(1.0 / c_last),
+        "b": jnp.zeros((arch.num_classes,), jnp.float32),
+    }
+    return params, state
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def _avgpool_to(x, hw: int):
+    """Average-pool NCHW tensor down to hw x hw (factor pooling)."""
+    cur = x.shape[-1]
+    if cur == hw:
+        return x
+    f = cur // hw
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 1, f, f), (1, 1, f, f), "VALID"
+    ) / float(f * f)
+
+
+def _match_channels(r, c_out: int):
+    """ResNet option-A shortcut: zero-pad or truncate channels."""
+    c_r = r.shape[1]
+    if c_r == c_out:
+        return r
+    if c_r < c_out:
+        return jnp.pad(r, ((0, 0), (0, c_out - c_r), (0, 0), (0, 0)))
+    return r[:, :c_out]
+
+
+def forward(
+    params: dict,
+    state: dict,
+    x,
+    arch: archs.Arch,
+    *,
+    mode: str = "seed",
+    train: bool = False,
+    adc_steps=None,
+    adc_bits: int = 5,
+    channels_per_bl: int = 28,
+    momentum: float = 0.9,
+):
+    """Run the model. Returns (logits, new_state, aux).
+
+    ``adc_steps``: per-layer S_ADC scalars (required for mode='p2').
+    ``aux['acts']``: per-layer post-activation tensors (morph needs them).
+    """
+    assert mode in MODES
+    new_state = {"layers": []}
+    outputs: list = []  # post-activation (post-quant) output of each layer
+    aux: dict = {"psum_sat": []}
+
+    for i, (l, p, st) in enumerate(zip(arch.layers, params["layers"], state["layers"])):
+        inp = x if l.input_from is None else outputs[l.input_from]
+        in_hw = inp.shape[-1]
+
+        if mode in ("seed", "shrink"):
+            y = conv_nchw(inp, p["w"])
+            if train:
+                mean, var = batch_stats(y)
+                new_state["layers"].append(
+                    {
+                        "mean": momentum * st["mean"] + (1 - momentum) * mean,
+                        "var": momentum * st["var"] + (1 - momentum) * var,
+                    }
+                )
+            else:
+                mean, var = st["mean"], st["var"]
+                new_state["layers"].append(st)
+            y = batchnorm_apply(y, p["gamma"], p["beta"], mean, var)
+        else:
+            # Phase-1/2: BN folded into conv weights (running stats).
+            w_f, bias = fold_bn(p["w"], p["gamma"], p["beta"], st["mean"], st["var"])
+            new_state["layers"].append(st)
+            if mode == "p1":
+                w_q = lsq_weight(w_f, p["s_w"], 4)
+                y = conv_nchw(inp, w_q) + bias[None, :, None, None]
+            else:  # p2: segmented conv in the integer-code domain
+                s_w = jax.lax.stop_gradient(p["s_w"])
+                s_act = jax.lax.stop_gradient(p["s_act"])
+                s_adc = adc_steps[i]
+                x_codes = inp / s_act  # inp is act-quantized -> exact codes
+                w_codes = lsq_weight(w_f, s_w, 4) / s_w
+                out_codes = segmented_conv(
+                    x_codes,
+                    w_codes,
+                    channels_per_bl=channels_per_bl,
+                    s_adc=s_adc,
+                    adc_bits=adc_bits,
+                )
+                y = out_codes * (s_w * s_adc * s_act) + bias[None, :, None, None]
+
+        # Residual add (ResNet): pre-activation sum with option-A shortcut.
+        if l.residual_from is not None:
+            r = outputs[l.residual_from]
+            r = _avgpool_to(r, y.shape[-1])
+            y = y + _match_channels(r, y.shape[1])
+
+        y = jax.nn.relu(y)
+        y = act_quant(y, p["s_act"], 4)
+        if l.out_hw < in_hw:
+            y = _maxpool2(y)
+        outputs.append(y)
+
+    feat = jnp.mean(outputs[-1], axis=(2, 3))  # global average pool
+    logits = feat @ params["head"]["w"] + params["head"]["b"]
+    aux["acts"] = outputs
+    return logits, new_state, aux
+
+
+# ---------------------------------------------------------------------------
+# ADC step calibration
+# ---------------------------------------------------------------------------
+
+
+def calibrate_adc_steps(
+    params, state, x, arch, *, channels_per_bl: int = 28, adc_bits: int = 5,
+    pctl: float = 99.7, pow2: bool = True,
+):
+    """Choose per-layer S_ADC so the given percentile of integer partial
+    sums lands at the ADC clip point (the MAC-statistics approach of the
+    ENOB literature the paper builds on [4]).
+
+    Runs the p1 forward to observe each layer's code-domain partial sums.
+    """
+    q_max = 2 ** (adc_bits - 1) - 1
+    steps = []
+    # Collect inputs to every layer by running p1 forward once.
+    _, _, aux = forward(params, state, x, arch, mode="p1", train=False)
+    outputs = aux["acts"]
+    for i, (l, p, st) in enumerate(zip(arch.layers, params["layers"], state["layers"])):
+        inp = x if l.input_from is None else outputs[l.input_from]
+        w_f, _ = fold_bn(p["w"], p["gamma"], p["beta"], st["mean"], st["var"])
+        x_codes = inp / p["s_act"]
+        w_codes = lsq_weight_codes(w_f, p["s_w"], 4)
+        # Largest |partial sum| over segments at the chosen percentile.
+        worst = 0.0
+        cin = x_codes.shape[1]
+        for lo in range(0, cin, channels_per_bl):
+            hi = min(lo + channels_per_bl, cin)
+            psum = conv_nchw(x_codes[:, lo:hi], w_codes[:, lo:hi])
+            worst = max(worst, float(jnp.percentile(jnp.abs(psum), pctl)))
+        s = max(worst / q_max, 1.0)
+        if pow2:
+            s = float(2.0 ** round(jnp.log2(jnp.asarray(s))))
+        steps.append(jnp.asarray(s, jnp.float32))
+    return steps
+
+
+# ---------------------------------------------------------------------------
+# Loss / metrics
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+
+
+_EVAL_CACHE: dict = {}
+
+
+def evaluate(params, state, xs, ys, arch, *, mode="seed", batch=64, adc_steps=None):
+    """Batched test accuracy. The jitted eval closure is cached per
+    (architecture identity, mode) -- morphed architectures each get their
+    own compiled graph."""
+    key = (id(arch), mode)
+    if key not in _EVAL_CACHE:
+
+        def _eval(params, state, x, y, adc_steps):
+            logits, _, _ = forward(
+                params, state, x, arch, mode=mode, train=False, adc_steps=adc_steps
+            )
+            return accuracy(logits, y)
+
+        _EVAL_CACHE[key] = jax.jit(_eval)
+    fn = _EVAL_CACHE[key]
+    n = xs.shape[0]
+    correct = 0.0
+    for lo in range(0, n, batch):
+        xb = jnp.asarray(xs[lo : lo + batch])
+        yb = jnp.asarray(ys[lo : lo + batch])
+        if xb.shape[0] != batch and lo > 0:
+            # Ragged tail: avoid a recompile, run uncached.
+            logits, _, _ = forward(
+                params, state, xb, arch, mode=mode, train=False, adc_steps=adc_steps
+            )
+            acc = accuracy(logits, yb)
+        else:
+            acc = fn(params, state, xb, yb, adc_steps)
+        correct += float(acc) * xb.shape[0]
+    return correct / n

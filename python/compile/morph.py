@@ -1,0 +1,184 @@
+"""Stage-1 CIM-Aware Morphing -- the JAX (training) half (§II-C, Fig. 5).
+
+Shrinking: train with ``loss = CE + lambda * F(theta)`` (Eq. 1) where F is
+the MorphNet parameter regulariser of Eq. 2 driving BN gammas toward zero,
+then prune filters with |gamma| below a threshold.
+
+Expanding: the one-dimensional exhaustive ratio search of Eqs. 4-5
+(mirrors ``rust/src/morph/expand.rs``; the rust implementation is the
+production one -- this twin keeps the python pipeline self-contained and
+is cross-checked against rust in the test suite).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import archs
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2 regulariser
+# ---------------------------------------------------------------------------
+
+
+def morphnet_penalty(params, arch: archs.Arch, threshold: float = 1e-2):
+    """Sum of Eq. 2 over layers, differentiable in the gammas.
+
+    F(L) = x*y*(A_L * sum|gamma_L| + B_L * sum|gamma_{L-1}|), with the live
+    counts A_L (input) / B_L (output) treated as constants per step.
+    """
+    total = 0.0
+    for i, (l, p) in enumerate(zip(arch.layers, params["layers"])):
+        g_out = p["gamma"]
+        sum_out = jnp.sum(jnp.abs(g_out))
+        b_l = jax.lax.stop_gradient(
+            jnp.sum((jnp.abs(g_out) >= threshold).astype(jnp.float32))
+        )
+        if l.input_from is None:
+            a_l = float(l.c_in)
+            sum_in = 0.0
+        else:
+            g_in = params["layers"][l.input_from]["gamma"]
+            a_l = jax.lax.stop_gradient(
+                jnp.sum((jnp.abs(g_in) >= threshold).astype(jnp.float32))
+            )
+            sum_in = jnp.sum(jnp.abs(g_in))
+        total = total + (l.kernel * l.kernel) * (a_l * sum_out + b_l * sum_in)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Shrink: prune by gamma
+# ---------------------------------------------------------------------------
+
+
+def prune_by_gamma(arch: archs.Arch, params, threshold: float = 1e-2):
+    """Prune filters with |gamma| < threshold; returns (new_arch, keep_idx).
+
+    ``keep_idx[i]`` are the surviving filter indices of layer i -- used to
+    slice the trained weights into the pruned model. Tied residual groups
+    keep the union count (max) and use the first member's top-k indices.
+    """
+    kept_counts = []
+    for p in params["layers"]:
+        g = jnp.abs(p["gamma"])
+        kept_counts.append(max(1, int(jnp.sum(g >= threshold))))
+    for group in arch.tied_output_groups:
+        m = max(kept_counts[i] for i in group)
+        for i in group:
+            kept_counts[i] = m
+    keep_idx = []
+    for p, k in zip(params["layers"], kept_counts):
+        g = jnp.abs(p["gamma"])
+        idx = jnp.argsort(-g)[:k]  # top-k by importance
+        keep_idx.append(jnp.sort(idx))
+    new_arch = _clone_with_channels(arch, kept_counts)
+    return new_arch, keep_idx
+
+
+def _clone_with_channels(arch: archs.Arch, counts: list[int]) -> archs.Arch:
+    a = archs._clone(arch)
+    a.apply_out_channels(counts)
+    return a
+
+
+def slice_params(params, state, arch_old: archs.Arch, arch_new: archs.Arch, keep_idx):
+    """Carry trained weights into the pruned architecture by slicing both
+    output filters (keep_idx of this layer) and input channels (keep_idx
+    of the producing layer)."""
+    new_params = {"layers": [], "head": {}}
+    new_state = {"layers": []}
+    for i, (l, p, st) in enumerate(zip(arch_old.layers, params["layers"], state["layers"])):
+        ko = keep_idx[i]
+        w = p["w"][ko]
+        if l.input_from is not None:
+            ki = keep_idx[l.input_from]
+            w = w[:, ki]
+        new_params["layers"].append(
+            {
+                "w": w,
+                "gamma": p["gamma"][ko],
+                "beta": p["beta"][ko],
+                "s_w": p["s_w"],
+                "s_act": p["s_act"],
+            }
+        )
+        new_state["layers"].append({"mean": st["mean"][ko], "var": st["var"][ko]})
+    k_last = keep_idx[-1]
+    new_params["head"] = {
+        "w": params["head"]["w"][k_last],
+        "b": params["head"]["b"],
+    }
+    return new_params, new_state
+
+
+# ---------------------------------------------------------------------------
+# Expand: Eq. 4-5 exhaustive ratio search
+# ---------------------------------------------------------------------------
+
+
+def search_expansion_ratio(
+    pruned: archs.Arch, target_bl: int, *, wordlines: int = 256, step: float = 0.001
+) -> float:
+    """Largest single ratio R with BLs(R-scaled arch) <= target_bl."""
+
+    def fits(r: float) -> bool:
+        return archs.cost_bls(pruned.scaled(r), wordlines) <= target_bl
+
+    if fits(1.0):
+        r = 1.0
+        while fits(r + step) and r < 1024.0:
+            r += step
+        return r
+    r = 1.0
+    while r > step:
+        r -= step
+        if fits(r):
+            return r
+    return step
+
+
+def expand_params(params, state, arch_small: archs.Arch, arch_big: archs.Arch, key):
+    """Grow parameters from the pruned model to the expanded architecture:
+    surviving filters keep their weights, new filters get He init (the
+    paper fine-tunes after expansion, so init detail washes out)."""
+    new_params = {"layers": [], "head": {}}
+    new_state = {"layers": []}
+    keys = jax.random.split(key, len(arch_big.layers) + 1)
+    for i, (ls, lb, p, st, k) in enumerate(
+        zip(arch_small.layers, arch_big.layers, params["layers"], state["layers"], keys[:-1])
+    ):
+        co_s, co_b = ls.c_out, lb.c_out
+        ci_s, ci_b = ls.c_in, lb.c_in
+        fan_in = ci_b * lb.kernel * lb.kernel
+        w = jax.random.normal(k, (co_b, ci_b, lb.kernel, lb.kernel)) * jnp.sqrt(
+            2.0 / fan_in
+        )
+        w = w.at[: min(co_s, co_b), : min(ci_s, ci_b)].set(
+            p["w"][: min(co_s, co_b), : min(ci_s, ci_b)]
+        )
+        gamma = jnp.ones((co_b,), jnp.float32).at[:co_s].set(p["gamma"][: min(co_s, co_b)])
+        beta = jnp.zeros((co_b,), jnp.float32).at[:co_s].set(p["beta"][: min(co_s, co_b)])
+        new_params["layers"].append(
+            {"w": w, "gamma": gamma, "beta": beta, "s_w": p["s_w"], "s_act": p["s_act"]}
+        )
+        new_state["layers"].append(
+            {
+                "mean": jnp.zeros((co_b,), jnp.float32).at[:co_s].set(st["mean"][: min(co_s, co_b)]),
+                "var": jnp.ones((co_b,), jnp.float32).at[:co_s].set(st["var"][: min(co_s, co_b)]),
+            }
+        )
+    c_last_b = arch_big.layers[-1].c_out
+    c_last_s = arch_small.layers[-1].c_out
+    head_w = jax.random.normal(keys[-1], (c_last_b, arch_big.num_classes)) * jnp.sqrt(
+        1.0 / c_last_b
+    )
+    head_w = head_w.at[: min(c_last_s, c_last_b)].set(
+        params["head"]["w"][: min(c_last_s, c_last_b)]
+    )
+    new_params["head"] = {"w": head_w, "b": params["head"]["b"]}
+    return new_params, new_state

@@ -1,0 +1,38 @@
+"""Hand-rolled Adam (the environment ships no optax).
+
+Operates on arbitrary pytrees via ``jax.tree_util``. Matches the paper's
+optimizer choice ("ADAM optimizer for all trainings", §III-A).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.asarray(0, jnp.int32)}
+
+
+def adam_update(params, grads, opt_state, lr, *, b1=0.9, b2=0.999, eps=1e-8,
+                weight_decay=0.0):
+    """One Adam step; returns (new_params, new_opt_state)."""
+    t = opt_state["t"] + 1
+    m = jax.tree_util.tree_map(
+        lambda m_, g: b1 * m_ + (1 - b1) * g, opt_state["m"], grads
+    )
+    v = jax.tree_util.tree_map(
+        lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt_state["v"], grads
+    )
+    mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+
+    def step(p, m_, v_):
+        upd = (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps)
+        if weight_decay:
+            upd = upd + weight_decay * p
+        return p - lr * upd
+
+    new_params = jax.tree_util.tree_map(step, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}

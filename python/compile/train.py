@@ -1,0 +1,311 @@
+"""Training loops for every pipeline stage (§III-A), CPU-scaled.
+
+The paper's schedules (2000-epoch seeds, 100-300 epoch QAT phases on
+CIFAR-10/GPU) are infeasible offline on CPU; the loops below run the same
+*stages* with the same *loss structure* on SynthCIFAR at reduced width and
+epoch counts (DESIGN.md §5). Every driver records its settings next to
+its results so EXPERIMENTS.md can state the substitution precisely.
+
+CLI:
+    python -m compile.train --exp smoke            # quick sanity run
+    python -m compile.train --exp pipeline         # full 2-stage pipeline
+    python -m compile.train --exp table1           # compression-limit sweep
+    python -m compile.train --exp table3 --model vgg9
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import archs, data, morph
+from .model import (
+    MODES,
+    accuracy,
+    calibrate_adc_steps,
+    cross_entropy,
+    evaluate,
+    forward,
+    init_params,
+)
+from .optim import adam_init, adam_update
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+# ---------------------------------------------------------------------------
+# Generic epoch runner
+# ---------------------------------------------------------------------------
+
+
+def make_step(arch, *, mode: str, lr: float, lam: float = 0.0, adc_steps=None,
+              train_mask=None):
+    """Build a jitted (params, state, opt, x, y) -> ... training step.
+
+    ``train_mask(path)``: pytree-leaf filter; leaves where it returns False
+    get zero gradient (used to freeze S_W in phase-2 etc. -- the model also
+    stop-gradients internally, this is belt and braces).
+    """
+
+    def loss_fn(params, state, x, y):
+        logits, new_state, _ = forward(
+            params, state, x, arch, mode=mode, train=True, adc_steps=adc_steps
+        )
+        loss = cross_entropy(logits, y)
+        if lam > 0.0:
+            loss = loss + lam * morph.morphnet_penalty(params, arch)
+        return loss, (new_state, logits)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, state, opt, x, y):
+        (loss, (new_state, logits)), grads = grad_fn(params, state, x, y)
+        if train_mask is not None:
+            grads = _mask_grads(grads, train_mask)
+        params, opt = adam_update(params, grads, opt, lr)
+        # Keep steps strictly positive after updates.
+        for p in params["layers"]:
+            p["s_w"] = jnp.maximum(p["s_w"], 1e-6)
+            p["s_act"] = jnp.maximum(p["s_act"], 1e-6)
+        return params, new_state, opt, loss, accuracy(logits, y)
+
+    return jax.jit(step)
+
+
+def _mask_grads(grads, mask_fn):
+    out = {"layers": [], "head": grads["head"]}
+    for li, p in enumerate(grads["layers"]):
+        out["layers"].append(
+            {k: (v if mask_fn(f"layers/{li}/{k}") else jnp.zeros_like(v)) for k, v in p.items()}
+        )
+    return out
+
+
+def run_epochs(params, state, arch, ds, *, mode, lr, epochs, batch=64, lam=0.0,
+               adc_steps=None, train_mask=None, log_every=1, tag=""):
+    """Epoch loop over the train split; returns trained (params, state)."""
+    step = make_step(arch, mode=mode, lr=lr, lam=lam, adc_steps=adc_steps,
+                     train_mask=train_mask)
+    opt = adam_init(params)
+    n = ds["x_train"].shape[0]
+    steps_per_epoch = n // batch
+    for ep in range(epochs):
+        ep_loss = ep_acc = 0.0
+        for s in range(steps_per_epoch):
+            lo = s * batch
+            xb = jnp.asarray(ds["x_train"][lo : lo + batch])
+            yb = jnp.asarray(ds["y_train"][lo : lo + batch])
+            params, state, opt, loss, acc = step(params, state, opt, xb, yb)
+            ep_loss += float(loss)
+            ep_acc += float(acc)
+        if log_every and (ep % log_every == 0 or ep == epochs - 1):
+            print(
+                f"[{tag}{mode}] epoch {ep + 1}/{epochs} "
+                f"loss {ep_loss / steps_per_epoch:.4f} "
+                f"train-acc {ep_acc / steps_per_epoch:.3f}",
+                flush=True,
+            )
+    return params, state
+
+
+# ---------------------------------------------------------------------------
+# The full two-stage pipeline
+# ---------------------------------------------------------------------------
+
+
+def pipeline(
+    model_name: str,
+    *,
+    width: float = 0.25,
+    target_bl: int = 1024,
+    seed_epochs: int = 6,
+    shrink_epochs: int = 4,
+    finetune_epochs: int = 6,
+    p1_epochs: int = 3,
+    p2_epochs: int = 3,
+    lam: float = 5e-8,
+    n_train: int = 2000,
+    n_test: int = 500,
+    rounds: int = 1,
+    rng_seed: int = 0,
+    log_every: int = 1,
+    hard: bool = False,
+):
+    """Seed -> (shrink -> expand -> finetune) x rounds -> P1 -> P2.
+
+    Returns a result dict with accuracies at every stage plus the morphed
+    architecture JSON (consumed by the rust coordinator and aot.py).
+    """
+    t0 = time.time()
+    ds = data.dataset(n_train, n_test, hard=hard)
+    key = jax.random.PRNGKey(rng_seed)
+    arch = archs.by_name(model_name, width)
+    params, state = init_params(arch, key)
+    results = {"model": model_name, "width": width, "target_bl": target_bl}
+
+    # --- Seed model (float weights, 4-bit activations) ---
+    params, state = run_epochs(
+        params, state, arch, ds, mode="seed", lr=1e-2, epochs=seed_epochs,
+        log_every=log_every, tag=f"{model_name} ",
+    )
+    results["baseline_acc"] = evaluate(params, state, ds["x_test"], ds["y_test"], arch)
+    results["baseline_bls"] = archs.cost_bls(arch)
+    results["baseline_params"] = arch.params()
+
+    # --- Stage 1: morph rounds ---
+    for r in range(rounds):
+        params, state = run_epochs(
+            params, state, arch, ds, mode="shrink", lr=5e-3, epochs=shrink_epochs,
+            lam=lam, log_every=log_every, tag=f"{model_name} r{r} ",
+        )
+        pruned_arch, keep_idx = morph.prune_by_gamma(arch, params)
+        params, state = morph.slice_params(params, state, arch, pruned_arch, keep_idx)
+        ratio = morph.search_expansion_ratio(pruned_arch, target_bl)
+        big_arch = pruned_arch.scaled(ratio)
+        key, sub = jax.random.split(key)
+        params, state = morph.expand_params(params, state, pruned_arch, big_arch, sub)
+        arch = big_arch
+        params, state = run_epochs(
+            params, state, arch, ds, mode="seed", lr=1e-2, epochs=finetune_epochs,
+            log_every=log_every, tag=f"{model_name} r{r} ft ",
+        )
+    results["morphed_acc"] = evaluate(params, state, ds["x_test"], ds["y_test"], arch)
+    results["morphed_bls"] = archs.cost_bls(arch)
+    results["morphed_params"] = arch.params()
+    results["arch_json"] = json.loads(arch.to_json())
+
+    # --- Stage 2 Phase 1: weight quantization (S_W learned) ---
+    params, state = run_epochs(
+        params, state, arch, ds, mode="p1", lr=1e-3, epochs=p1_epochs,
+        log_every=log_every, tag=f"{model_name} ",
+    )
+    results["p1_acc"] = evaluate(params, state, ds["x_test"], ds["y_test"], arch, mode="p1")
+
+    # --- Stage 2 Phase 2: partial-sum quantization (S_W frozen) ---
+    adc_steps = calibrate_adc_steps(
+        params, state, jnp.asarray(ds["x_train"][:64]), arch
+    )
+    mask = lambda path: not (path.endswith("s_w") or path.endswith("s_act"))
+    params, state = run_epochs(
+        params, state, arch, ds, mode="p2", lr=1e-3, epochs=p2_epochs,
+        adc_steps=adc_steps, train_mask=mask, log_every=log_every,
+        tag=f"{model_name} ",
+    )
+    results["p2_acc"] = evaluate(
+        params, state, ds["x_test"], ds["y_test"], arch, mode="p2", adc_steps=adc_steps
+    )
+    results["adc_steps"] = [float(s) for s in adc_steps]
+    results["wall_seconds"] = round(time.time() - t0, 1)
+    return results, params, state, arch, adc_steps
+
+
+# ---------------------------------------------------------------------------
+# Experiment drivers
+# ---------------------------------------------------------------------------
+
+
+def exp_smoke():
+    """Tiny end-to-end sanity run (~1 min)."""
+    res, *_ = pipeline(
+        "vgg9", width=0.125, target_bl=256, seed_epochs=2, shrink_epochs=2,
+        finetune_epochs=2, p1_epochs=1, p2_epochs=1, n_train=600, n_test=200,
+    )
+    print(json.dumps({k: v for k, v in res.items() if k != "arch_json"}, indent=2))
+    return res
+
+
+def exp_pipeline(model="vgg9", width=0.25, target_bl=1024):
+    res, params, state, arch, adc_steps = pipeline(
+        model, width=width, target_bl=target_bl,
+        seed_epochs=8, shrink_epochs=5, finetune_epochs=8, p1_epochs=4, p2_epochs=4,
+        n_train=4000, n_test=1000,
+    )
+    out = ARTIFACTS / f"{model}_pipeline_results.json"
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(json.dumps(res, indent=2))
+    print(f"wrote {out}")
+    return res
+
+
+def exp_table1(model="vgg9"):
+    """Table I analogue: prune-ratio sweep, expand to common budget,
+    fine-tune, report accuracy (reduced scale)."""
+    rows = []
+    for lam_scale in [0.2, 1.0, 3.0, 8.0, 20.0]:
+        res, *_ = pipeline(
+            model, width=0.125, target_bl=64,
+            seed_epochs=6, shrink_epochs=4, finetune_epochs=6,
+            p1_epochs=0, p2_epochs=0, lam=5e-8 * lam_scale,
+            n_train=2000, n_test=500, hard=True,
+        )
+        rows.append(
+            {
+                "lambda": 5e-8 * lam_scale,
+                "pruned_params": res["morphed_params"],
+                "morphed_acc": res["morphed_acc"],
+            }
+        )
+        print(rows[-1])
+    out = ARTIFACTS / f"{model}_table1_accuracy.json"
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(json.dumps(rows, indent=2))
+    print(f"wrote {out}")
+    return rows
+
+
+def exp_table3(model="vgg9"):
+    """Tables III-V accuracy columns at reduced scale: one pipeline per
+    bitline budget (budgets scaled by width^2 to keep pressure equal)."""
+    width = 0.125
+    rows = []
+    for bl in [128, 64, 16, 8]:  # = paper {8192,4096,1024,512} x width^2
+        res, *_ = pipeline(
+            model, width=width, target_bl=bl,
+            seed_epochs=6, shrink_epochs=4, finetune_epochs=6,
+            p1_epochs=3, p2_epochs=3, n_train=2000, n_test=500, hard=True,
+        )
+        rows.append(
+            {
+                "target_bl": bl,
+                "paper_equiv_bl": bl * 64,
+                "morphed_acc": res["morphed_acc"],
+                "p1_acc": res["p1_acc"],
+                "p2_acc": res["p2_acc"],
+                "baseline_acc": res["baseline_acc"],
+            }
+        )
+        print(rows[-1])
+    out = ARTIFACTS / f"{model}_table_accuracy.json"
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(json.dumps(rows, indent=2))
+    print(f"wrote {out}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", default="smoke",
+                    choices=["smoke", "pipeline", "table1", "table3"])
+    ap.add_argument("--model", default="vgg9")
+    ap.add_argument("--width", type=float, default=0.25)
+    ap.add_argument("--target-bl", type=int, default=1024)
+    args = ap.parse_args()
+    if args.exp == "smoke":
+        exp_smoke()
+    elif args.exp == "pipeline":
+        exp_pipeline(args.model, args.width, args.target_bl)
+    elif args.exp == "table1":
+        exp_table1(args.model)
+    elif args.exp == "table3":
+        exp_table3(args.model)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""SynthCIFAR tests, including the rust parity pins."""
+
+import numpy as np
+import pytest
+
+from compile import data
+
+
+def test_shapes_and_range():
+    img = data.sample(3, 11)
+    assert img.shape == (3, 32, 32)
+    assert img.dtype == np.float32
+    assert img.min() >= 0.0 and img.max() <= 1.0
+
+
+def test_deterministic():
+    a = data.sample(5, 99)
+    b = data.sample(5, 99)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_distinct_across_index_and_class():
+    a = data.sample(1, 0)
+    b = data.sample(1, 1)
+    c = data.sample(2, 0)
+    assert not np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_rust_parity_pins():
+    """Must match ``data::synth::tests::parity_pins`` on the rust side.
+
+    If either implementation changes, both tests break together.
+    """
+    img = data.sample(0, 0)
+    assert abs(img[0, 0, 0] - 0.7113297) < 2e-6
+    assert abs(img[1, 7, 19] - 0.35891524) < 2e-6
+    assert abs(img[2, 31, 31] - 0.5198377) < 2e-6
+
+
+def test_batch_cycles_classes():
+    xs, ys = data.batch(0, 23)
+    assert xs.shape == (23, 3, 32, 32)
+    assert list(ys) == [k % 10 for k in range(23)]
+
+
+def test_classes_linearly_separable_enough():
+    """A trivial nearest-centroid classifier must beat chance by a wide
+    margin -- otherwise no accuracy experiment is meaningful."""
+    xs, ys = data.batch(0, 300)
+    xt, yt = data.batch(10_000, 100)
+    feats = xs.reshape(len(xs), -1)
+    centroids = np.stack([feats[ys == c].mean(axis=0) for c in range(10)])
+    ft = xt.reshape(len(xt), -1)
+    pred = np.argmin(
+        ((ft[:, None, :] - centroids[None]) ** 2).sum(-1), axis=1
+    )
+    acc = (pred == yt).mean()
+    assert acc > 0.5, f"nearest-centroid acc {acc}"
+
+
+def test_dataset_split_disjoint():
+    ds = data.dataset(100, 50)
+    assert ds["x_train"].shape[0] == 100
+    assert ds["x_test"].shape[0] == 50
+    # Index ranges are disjoint, so no image appears in both splits.
+    tr = {a.tobytes() for a in ds["x_train"]}
+    te = {a.tobytes() for a in ds["x_test"]}
+    assert not (tr & te)

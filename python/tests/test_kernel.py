@@ -1,0 +1,171 @@
+"""Layer-1 kernel correctness: Pallas vs the pure-jnp oracle.
+
+The hypothesis sweep is the core correctness signal for the CIM matmul:
+random shapes, segment sizes, ADC steps and code ranges, asserting
+bit-exact agreement (all values are small integers held in f32, so
+equality is exact, not allclose-approximate).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.cim_matmul import cim_conv_nchw, cim_matmul
+from compile.kernels.lsq import lsq_fakequant
+from compile.kernels.ref import (
+    act_quantize_ref,
+    cim_matmul_ideal,
+    cim_matmul_ref,
+    lsq_quantize_ref,
+    psum_quantize_ref,
+    round_half_away,
+)
+
+
+# ---------------------------------------------------------------------------
+# Oracle self-checks
+# ---------------------------------------------------------------------------
+
+
+def test_round_half_away_from_zero():
+    x = jnp.array([0.5, -0.5, 1.5, -1.5, 2.4, -2.4, 0.0])
+    np.testing.assert_array_equal(
+        np.asarray(round_half_away(x)), [1, -1, 2, -2, 2, -2, 0]
+    )
+
+
+def test_lsq_ref_matches_eq6():
+    q, wq = lsq_quantize_ref(jnp.array([0.37, -5.0, 5.0]), 0.1, 4)
+    np.testing.assert_array_equal(np.asarray(q), [4, -7, 7])
+    np.testing.assert_allclose(np.asarray(wq), [0.4, -0.7, 0.7], rtol=1e-6)
+
+
+def test_act_ref_unsigned_range():
+    q, _ = act_quantize_ref(jnp.array([-1.0, 0.0, 0.51, 100.0]), 0.5, 4)
+    np.testing.assert_array_equal(np.asarray(q), [0, 0, 1, 15])
+
+
+def test_psum_ref_clips_to_5bit():
+    out = psum_quantize_ref(jnp.array([1000.0, -1000.0, 4.0]), 8.0, 5)
+    np.testing.assert_array_equal(np.asarray(out), [15, -15, 1])
+
+
+def test_single_segment_equals_quantized_ideal():
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, 16, (4, 100)).astype(np.float32)
+    w = rng.integers(-7, 8, (100, 6)).astype(np.float32)
+    got = cim_matmul_ref(jnp.asarray(x), jnp.asarray(w), seg=252, s_adc=16.0, adc_bits=5)
+    ideal = cim_matmul_ideal(jnp.asarray(x), jnp.asarray(w))
+    expect = psum_quantize_ref(ideal, 16.0, 5)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs oracle — hypothesis sweep
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 16),
+    n=st.integers(1, 24),
+    k=st.integers(1, 700),
+    seg=st.sampled_from([9, 63, 126, 252]),
+    s_adc=st.sampled_from([1.0, 4.0, 16.0, 64.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cim_matmul_matches_ref(m, n, k, seg, s_adc, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 16, (m, k)).astype(np.float32)
+    w = rng.integers(-7, 8, (k, n)).astype(np.float32)
+    got = cim_matmul(jnp.asarray(x), jnp.asarray(w), seg=seg, s_adc=s_adc, adc_bits=5)
+    want = cim_matmul_ref(jnp.asarray(x), jnp.asarray(w), seg=seg, s_adc=s_adc, adc_bits=5)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bits=st.sampled_from([3, 5, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cim_matmul_other_adc_precisions(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 16, (3, 300)).astype(np.float32)
+    w = rng.integers(-7, 8, (300, 7)).astype(np.float32)
+    got = cim_matmul(jnp.asarray(x), jnp.asarray(w), seg=252, s_adc=8.0, adc_bits=bits)
+    want = cim_matmul_ref(jnp.asarray(x), jnp.asarray(w), seg=252, s_adc=8.0, adc_bits=bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_cim_matmul_saturation_extremes():
+    # All-max codes saturate every segment at +15.
+    x = jnp.full((2, 504), 15.0)
+    w = jnp.full((504, 3), 7.0)
+    out = cim_matmul(x, w, seg=252, s_adc=1.0, adc_bits=5)
+    np.testing.assert_array_equal(np.asarray(out), np.full((2, 3), 30.0))  # 2 segs x 15
+
+
+def test_cim_matmul_zero_inputs():
+    x = jnp.zeros((3, 500))
+    w = jnp.zeros((500, 4))
+    out = cim_matmul(x, w, seg=252, s_adc=16.0)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((3, 4)))
+
+
+# ---------------------------------------------------------------------------
+# Conv wrapper vs direct conv oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    cin=st.sampled_from([3, 16, 28, 29, 56, 60]),
+    cout=st.integers(1, 8),
+    hw=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cim_conv_matches_segmented_lax_conv(cin, cout, hw, seed):
+    """The im2col+pallas path must equal per-segment lax convolution with
+    the same ADC quantization (the training-path implementation)."""
+    import jax
+    from compile.layers import conv_nchw
+
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 16, (2, cin, hw, hw)).astype(np.float32)
+    w = rng.integers(-7, 8, (cout, cin, 3, 3)).astype(np.float32)
+    got = cim_conv_nchw(
+        jnp.asarray(x), jnp.asarray(w), channels_per_bl=28, s_adc=16.0, adc_bits=5
+    )
+    want = jnp.zeros((2, cout, hw, hw))
+    for lo in range(0, cin, 28):
+        hi = min(lo + 28, cin)
+        psum = conv_nchw(jnp.asarray(x[:, lo:hi]), jnp.asarray(w[:, lo:hi]))
+        want = want + psum_quantize_ref(psum, 16.0, 5)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# LSQ pallas kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 10_000),
+    step=st.sampled_from([0.01, 0.05, 0.3, 1.0]),
+    bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lsq_fakequant_matches_ref(n, step, bits, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.3, n).astype(np.float32)
+    got = lsq_fakequant(jnp.asarray(w), step, bits=bits)
+    _, want = lsq_quantize_ref(jnp.asarray(w), step, bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1e-7)
+
+
+def test_lsq_fakequant_preserves_shape():
+    w = jnp.ones((3, 5, 7))
+    out = lsq_fakequant(w, 0.5)
+    assert out.shape == (3, 5, 7)

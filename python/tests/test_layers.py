@@ -1,0 +1,174 @@
+"""Quantization layer tests: forward semantics + the STE backward rules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.layers import (
+    act_quant,
+    batchnorm_apply,
+    batch_stats,
+    conv_nchw,
+    fold_bn,
+    lsq_init_step,
+    lsq_weight,
+    lsq_weight_codes,
+    psum_quant,
+    segmented_conv,
+)
+from compile.kernels.ref import psum_quantize_ref
+
+
+# ---------------------------------------------------------------------------
+# LSQ weight quantizer
+# ---------------------------------------------------------------------------
+
+
+def test_lsq_weight_forward_grid():
+    w = jnp.array([0.37, -0.37, 10.0, -10.0])
+    out = lsq_weight(w, jnp.asarray(0.1), 4)
+    np.testing.assert_allclose(np.asarray(out), [0.4, -0.4, 0.7, -0.7], rtol=1e-6)
+
+
+def test_lsq_weight_ste_gradient():
+    # d/dw passes through inside the clip range, zero outside.
+    g = jax.grad(lambda w: jnp.sum(lsq_weight(w, jnp.asarray(0.1), 4)))(
+        jnp.array([0.3, 10.0, -10.0])
+    )
+    np.testing.assert_allclose(np.asarray(g), [1.0, 0.0, 0.0])
+
+
+def test_lsq_step_gradient_signs():
+    # At the positive rail the step gradient is +Q (scaled); inside it is
+    # round(v)-v, which can be either sign but is bounded by 0.5.
+    def loss(s):
+        return jnp.sum(lsq_weight(jnp.array([10.0]), s, 4))
+
+    g_rail = jax.grad(loss)(jnp.asarray(0.1))
+    assert g_rail > 0  # +Q * normalizer
+
+    def loss_in(s):
+        return jnp.sum(lsq_weight(jnp.array([0.33]), s, 4))
+
+    g_in = jax.grad(loss_in)(jnp.asarray(0.1))
+    assert abs(float(g_in)) <= 0.5 / np.sqrt(1 * 7) + 1e-6
+
+
+def test_lsq_codes_integer_range():
+    w = jnp.linspace(-2, 2, 101)
+    q = lsq_weight_codes(w, jnp.asarray(0.1), 4)
+    assert float(jnp.max(jnp.abs(q))) <= 7
+    assert np.allclose(np.asarray(q), np.round(np.asarray(q)))
+
+
+def test_lsq_init_step_positive_and_scaled():
+    w = jnp.array([0.1, -0.2, 0.3])
+    s = lsq_init_step(w, 4)
+    assert float(s) > 0
+    s2 = lsq_init_step(w * 10, 4)
+    np.testing.assert_allclose(float(s2), float(s) * 10, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Activation quantizer
+# ---------------------------------------------------------------------------
+
+
+def test_act_quant_unsigned_grid():
+    x = jnp.array([-1.0, 0.26, 7.49, 100.0])
+    out = act_quant(x, jnp.asarray(0.5), 4)
+    np.testing.assert_allclose(np.asarray(out), [0.0, 0.5, 7.5, 7.5], rtol=1e-6)
+
+
+def test_act_quant_gradient_inside_only():
+    g = jax.grad(lambda x: jnp.sum(act_quant(x, jnp.asarray(0.5), 4)))(
+        jnp.array([-1.0, 1.0, 100.0])
+    )
+    np.testing.assert_allclose(np.asarray(g), [0.0, 1.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# Partial-sum quantizer
+# ---------------------------------------------------------------------------
+
+
+def test_psum_quant_matches_ref():
+    acc = jnp.array([-1000.0, -16.0, -4.0, 0.0, 4.0, 16.0, 1000.0])
+    out = psum_quant(acc, jnp.asarray(8.0), 5)
+    want = psum_quantize_ref(acc, 8.0, 5)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_psum_quant_ste_skips_scaling():
+    # Fig. 11: the backward pass must NOT apply the 1/s_adc factor.
+    g = jax.grad(lambda a: jnp.sum(psum_quant(a, jnp.asarray(8.0), 5)))(
+        jnp.array([4.0, 4.0])
+    )
+    np.testing.assert_allclose(np.asarray(g), [1.0, 1.0])
+    # Outside the clip range: zero.
+    g2 = jax.grad(lambda a: jnp.sum(psum_quant(a, jnp.asarray(1.0), 5)))(
+        jnp.array([100.0])
+    )
+    np.testing.assert_allclose(np.asarray(g2), [0.0])
+
+
+# ---------------------------------------------------------------------------
+# Segmented conv (Fig. 9/10 semantics)
+# ---------------------------------------------------------------------------
+
+
+def test_segmented_conv_splits_at_28():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(0, 16, (1, 56, 6, 6)).astype(np.float32))
+    w = jnp.asarray(rng.integers(-7, 8, (4, 56, 3, 3)).astype(np.float32))
+    got = segmented_conv(x, w, channels_per_bl=28, s_adc=16.0)
+    a = psum_quantize_ref(conv_nchw(x[:, :28], w[:, :28]), 16.0, 5)
+    b = psum_quantize_ref(conv_nchw(x[:, 28:], w[:, 28:]), 16.0, 5)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(a + b))
+
+
+def test_segmented_conv_single_group_is_one_adc_pass():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.integers(0, 16, (1, 16, 4, 4)).astype(np.float32))
+    w = jnp.asarray(rng.integers(-7, 8, (2, 16, 3, 3)).astype(np.float32))
+    got = segmented_conv(x, w, channels_per_bl=28, s_adc=4.0)
+    want = psum_quantize_ref(conv_nchw(x, w), 4.0, 5)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_segmented_conv_is_differentiable():
+    x = jnp.ones((1, 30, 4, 4))
+    w = jnp.full((2, 30, 3, 3), 0.1)
+    g = jax.grad(
+        lambda w_: jnp.sum(segmented_conv(x, w_, channels_per_bl=28, s_adc=100.0))
+    )(w)
+    assert g.shape == w.shape
+    assert bool(jnp.any(g != 0))
+
+
+# ---------------------------------------------------------------------------
+# BN folding
+# ---------------------------------------------------------------------------
+
+
+def test_fold_bn_equals_bn_after_conv():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(0, 1, (2, 3, 8, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.2, (4, 3, 3, 3)).astype(np.float32))
+    gamma = jnp.asarray(rng.uniform(0.5, 1.5, 4).astype(np.float32))
+    beta = jnp.asarray(rng.normal(0, 0.1, 4).astype(np.float32))
+    mean = jnp.asarray(rng.normal(0, 0.5, 4).astype(np.float32))
+    var = jnp.asarray(rng.uniform(0.5, 2.0, 4).astype(np.float32))
+    y_bn = batchnorm_apply(conv_nchw(x, w), gamma, beta, mean, var)
+    w_f, bias = fold_bn(w, gamma, beta, mean, var)
+    y_fold = conv_nchw(x, w_f) + bias[None, :, None, None]
+    np.testing.assert_allclose(np.asarray(y_bn), np.asarray(y_fold), atol=1e-4)
+
+
+def test_batch_stats_shapes():
+    x = jnp.ones((2, 5, 4, 4))
+    m, v = batch_stats(x)
+    assert m.shape == (5,) and v.shape == (5,)
+    np.testing.assert_allclose(np.asarray(m), np.ones(5))
+    np.testing.assert_allclose(np.asarray(v), np.zeros(5), atol=1e-7)

@@ -1,0 +1,129 @@
+"""Model zoo tests: shapes, modes, calibration, arch mirroring."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import archs, data
+from compile.model import (
+    accuracy,
+    calibrate_adc_steps,
+    cross_entropy,
+    evaluate,
+    forward,
+    init_params,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_vgg9():
+    arch = archs.vgg9(width=0.125)
+    params, state = init_params(arch, jax.random.PRNGKey(0))
+    return arch, params, state
+
+
+@pytest.fixture(scope="module")
+def batch():
+    xs, ys = data.batch(0, 8)
+    return jnp.asarray(xs), jnp.asarray(ys)
+
+
+def test_arch_mirrors_rust_counts():
+    # Full-scale params must match the rust arch module (and the paper).
+    assert archs.vgg9().params() == 9_217_728
+    assert archs.vgg16().params() == 14_710_464
+    assert archs.resnet18().params() == 10_987_200
+    assert archs.cost_bls(archs.vgg9()) == 38_592
+    assert archs.cost_bls(archs.vgg16()) == 61_440
+    assert archs.cost_bls(archs.resnet18()) == 46_400
+
+
+def test_forward_shapes_all_modes(tiny_vgg9, batch):
+    arch, params, state = tiny_vgg9
+    x, _ = batch
+    for mode in ("seed", "shrink", "p1"):
+        logits, new_state, aux = forward(params, state, x, arch, mode=mode, train=False)
+        assert logits.shape == (8, 10)
+        assert len(aux["acts"]) == len(arch.layers)
+    adc = [jnp.asarray(16.0)] * len(arch.layers)
+    logits, _, _ = forward(params, state, x, arch, mode="p2", adc_steps=adc)
+    assert logits.shape == (8, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_forward_resnet_residuals(batch):
+    arch = archs.resnet18(width=0.125)
+    params, state = init_params(arch, jax.random.PRNGKey(1))
+    x, _ = batch
+    logits, _, _ = forward(params, state, x, arch, mode="seed", train=False)
+    assert logits.shape == (8, 10)
+    # residual_from recorded on second conv of each block
+    res_layers = [l for l in arch.layers if l.residual_from is not None]
+    assert len(res_layers) == 8
+
+
+def test_train_mode_updates_bn_state(tiny_vgg9, batch):
+    arch, params, state = tiny_vgg9
+    x, _ = batch
+    _, new_state, _ = forward(params, state, x, arch, mode="seed", train=True)
+    changed = any(
+        not np.allclose(np.asarray(a["mean"]), np.asarray(b["mean"]))
+        for a, b in zip(state["layers"], new_state["layers"])
+    )
+    assert changed, "running means should move in train mode"
+
+
+def test_eval_mode_keeps_state(tiny_vgg9, batch):
+    arch, params, state = tiny_vgg9
+    x, _ = batch
+    _, new_state, _ = forward(params, state, x, arch, mode="seed", train=False)
+    for a, b in zip(state["layers"], new_state["layers"]):
+        np.testing.assert_array_equal(np.asarray(a["mean"]), np.asarray(b["mean"]))
+
+
+def test_calibrate_adc_steps_positive_pow2(tiny_vgg9, batch):
+    arch, params, state = tiny_vgg9
+    x, _ = batch
+    steps = calibrate_adc_steps(params, state, x, arch)
+    assert len(steps) == len(arch.layers)
+    for s in steps:
+        v = float(s)
+        assert v >= 1.0
+        assert abs(np.log2(v) - round(np.log2(v))) < 1e-6, "pow2 calibration"
+
+
+def test_p2_deterministic(tiny_vgg9, batch):
+    arch, params, state = tiny_vgg9
+    x, _ = batch
+    adc = [jnp.asarray(16.0)] * len(arch.layers)
+    a, _, _ = forward(params, state, x, arch, mode="p2", adc_steps=adc)
+    b, _, _ = forward(params, state, x, arch, mode="p2", adc_steps=adc)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_loss_and_accuracy_helpers():
+    logits = jnp.asarray([[10.0, 0.0], [0.0, 10.0], [10.0, 0.0]])
+    labels = jnp.asarray([0, 1, 1])
+    assert float(accuracy(logits, labels)) == pytest.approx(2 / 3)
+    assert float(cross_entropy(logits, labels)) > 0
+
+
+def test_evaluate_batched(tiny_vgg9):
+    arch, params, state = tiny_vgg9
+    xs, ys = data.batch(0, 20)
+    acc = evaluate(params, state, xs, ys, arch, batch=8)
+    assert 0.0 <= acc <= 1.0
+
+
+def test_scaled_arch_json_loads_in_expected_schema():
+    import json
+
+    a = archs.vgg9(width=0.25)
+    j = json.loads(a.to_json())
+    assert j["name"] == "vgg9"
+    assert len(j["layers"]) == 8
+    assert j["layers"][0]["c_in"] == 3
+    # chaining holds
+    for i, l in enumerate(j["layers"][1:], start=1):
+        assert l["c_in"] == j["layers"][i - 1]["c_out"]

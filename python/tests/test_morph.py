@@ -1,0 +1,113 @@
+"""Stage-1 morphing tests (python half) + cross-checks against the rust
+expansion search semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import archs, morph
+from compile.model import forward, init_params
+
+
+@pytest.fixture(scope="module")
+def trained_like():
+    arch = archs.vgg9(width=0.25)
+    params, state = init_params(arch, jax.random.PRNGKey(2))
+    # Zero out some gammas to simulate shrink training.
+    for i, p in enumerate(params["layers"]):
+        g = np.asarray(p["gamma"]).copy()
+        g[: len(g) // 2] = 1e-6 if i >= 4 else g[: len(g) // 2]
+        p["gamma"] = jnp.asarray(g)
+    return arch, params, state
+
+
+def test_penalty_differentiable_and_monotone(trained_like):
+    arch, params, state = trained_like
+    f = lambda p: morph.morphnet_penalty(p, arch)
+    val = f(params)
+    assert float(val) > 0
+    grads = jax.grad(lambda p: f(p))(params)
+    # Gradient flows into gammas.
+    gnorm = sum(float(jnp.sum(jnp.abs(g["gamma"]))) for g in grads["layers"])
+    assert gnorm > 0
+
+
+def test_prune_slices_and_keeps_consistency(trained_like):
+    arch, params, state = trained_like
+    new_arch, keep_idx = morph.prune_by_gamma(arch, params, 1e-2)
+    assert all(
+        new_arch.layers[i].c_out == len(keep_idx[i]) for i in range(len(arch.layers))
+    )
+    # Deep layers (i >= 4) had half gammas dead.
+    for i in range(4, 8):
+        assert new_arch.layers[i].c_out == arch.layers[i].c_out // 2
+    p2, s2 = morph.slice_params(params, state, arch, new_arch, keep_idx)
+    # Forward still runs on the pruned model.
+    x = jnp.zeros((2, 3, 32, 32))
+    logits, _, _ = forward(p2, s2, x, new_arch, mode="seed", train=False)
+    assert logits.shape == (2, 10)
+
+
+def test_sliced_params_preserve_function_of_kept_filters(trained_like):
+    """Pruning filters whose gamma ~ 0 must (nearly) preserve the logits:
+    dead-gamma channels contribute ~nothing through BN."""
+    arch, params, state = trained_like
+    # Make dead gammas *exactly* zero for exact preservation.
+    for p in params["layers"]:
+        g = np.asarray(p["gamma"]).copy()
+        g[np.abs(g) < 1e-2] = 0.0
+        p["gamma"] = jnp.asarray(g)
+    # Also zero beta on dead channels (BN bias would otherwise leak).
+    for p in params["layers"]:
+        g = np.asarray(p["gamma"])
+        b = np.asarray(p["beta"]).copy()
+        b[g == 0.0] = 0.0
+        p["beta"] = jnp.asarray(b)
+    new_arch, keep_idx = morph.prune_by_gamma(arch, params, 1e-2)
+    p2, s2 = morph.slice_params(params, state, arch, new_arch, keep_idx)
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (2, 3, 32, 32)), jnp.float32)
+    full, _, _ = forward(params, state, x, arch, mode="seed", train=False)
+    pruned, _, _ = forward(p2, s2, x, new_arch, mode="seed", train=False)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(pruned), atol=1e-3)
+
+
+def test_expansion_search_matches_rust_semantics():
+    # Mirrors rust: largest R with BLs(scaled) <= target; next step over.
+    pruned = archs.vgg9().scaled(0.25)
+    for target in [1024, 4096, 8192]:
+        r = morph.search_expansion_ratio(pruned, target)
+        assert archs.cost_bls(pruned.scaled(r)) <= target
+        assert archs.cost_bls(pruned.scaled(r + 0.001)) > target
+
+
+def test_expand_params_embeds_old_weights():
+    arch_s = archs.vgg9(width=0.125)
+    params, state = init_params(arch_s, jax.random.PRNGKey(3))
+    arch_b = arch_s.scaled(2.0)
+    p2, s2 = morph.expand_params(params, state, arch_s, arch_b, jax.random.PRNGKey(4))
+    for ls, lb, ps, pb in zip(
+        arch_s.layers, arch_b.layers, params["layers"], p2["layers"]
+    ):
+        co, ci = ls.c_out, ls.c_in
+        np.testing.assert_array_equal(
+            np.asarray(pb["w"][:co, :ci]), np.asarray(ps["w"][:co, :ci])
+        )
+    x = jnp.zeros((1, 3, 32, 32))
+    logits, _, _ = forward(p2, s2, x, arch_b, mode="seed", train=False)
+    assert logits.shape == (1, 10)
+
+
+def test_resnet_prune_keeps_tied_groups():
+    arch = archs.resnet18(width=0.25)
+    params, _ = init_params(arch, jax.random.PRNGKey(5))
+    # Kill most gammas in one member of a tied group.
+    gi = arch.tied_output_groups[1][0]
+    g = np.asarray(params["layers"][gi]["gamma"]).copy()
+    g[:-2] = 0.0
+    params["layers"][gi]["gamma"] = jnp.asarray(g)
+    new_arch, _ = morph.prune_by_gamma(arch, params, 1e-2)
+    for group in new_arch.tied_output_groups:
+        c = new_arch.layers[group[0]].c_out
+        for i in group:
+            assert new_arch.layers[i].c_out == c

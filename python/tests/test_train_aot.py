@@ -1,0 +1,107 @@
+"""Training-step and AOT-export smoke tests (kept small; the full
+pipeline is exercised by `make artifacts` and the rust integration
+tests)."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import archs, data
+from compile.aot import emit_parity_vectors, export_inference, to_hlo_text
+from compile.model import calibrate_adc_steps, forward, init_params
+from compile.optim import adam_init, adam_update
+from compile.train import make_step, run_epochs
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    arch = archs.vgg9(width=0.125)
+    params, state = init_params(arch, jax.random.PRNGKey(0))
+    return arch, params, state
+
+
+def test_adam_reduces_quadratic():
+    params = {"x": jnp.asarray(5.0)}
+    opt = adam_init(params)
+    for _ in range(200):
+        g = {"x": 2 * params["x"]}
+        params, opt = adam_update(params, g, opt, lr=0.1)
+    assert abs(float(params["x"])) < 0.2
+
+
+def test_one_training_step_reduces_loss(tiny):
+    arch, params, state = tiny
+    xs, ys = data.batch(0, 32)
+    x, y = jnp.asarray(xs), jnp.asarray(ys)
+    step = make_step(arch, mode="seed", lr=1e-2)
+    opt = adam_init(params)
+    losses = []
+    p, s = params, state
+    for _ in range(8):
+        p, s, opt, loss, _ = step(p, s, opt, x, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], f"loss did not fall: {losses}"
+
+
+def test_train_mask_freezes_steps(tiny):
+    arch, params, state = tiny
+    xs, ys = data.batch(0, 16)
+    x, y = jnp.asarray(xs), jnp.asarray(ys)
+    adc = [jnp.asarray(16.0)] * len(arch.layers)
+    mask = lambda path: not (path.endswith("s_w") or path.endswith("s_act"))
+    step = make_step(arch, mode="p2", lr=1e-2, adc_steps=adc, train_mask=mask)
+    opt = adam_init(params)
+    p, s, opt, _, _ = step(params, state, opt, x, y)
+    for before, after in zip(params["layers"], p["layers"]):
+        np.testing.assert_array_equal(np.asarray(before["s_w"]), np.asarray(after["s_w"]))
+        np.testing.assert_array_equal(
+            np.asarray(before["s_act"]), np.asarray(after["s_act"])
+        )
+
+
+def test_run_epochs_smoke(tiny):
+    arch, params, state = tiny
+    ds = data.dataset(64, 32)
+    p, s = run_epochs(
+        params, state, arch, ds, mode="seed", lr=1e-2, epochs=1, batch=32, log_every=0
+    )
+    assert len(p["layers"]) == len(arch.layers)
+
+
+def test_export_inference_hlo_text(tiny):
+    arch, params, state = tiny
+    xs, _ = data.batch(0, 8)
+    adc = calibrate_adc_steps(params, state, jnp.asarray(xs), arch)
+    hlo = export_inference(params, state, arch, adc, batch=1)
+    assert hlo.startswith("HloModule")
+    assert "f32[1,3,32,32]" in hlo
+    assert "f32[1,10]" in hlo
+    # Weight constants must not be elided.
+    assert "constant({...})" not in hlo
+
+
+def test_to_hlo_text_simple_fn():
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)
+    )
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+
+
+def test_parity_vectors_schema(tmp_path):
+    out = tmp_path / "pv.json"
+    emit_parity_vectors(out)
+    j = json.loads(out.read_text())
+    assert len(j["cim_matmul"]) == 5
+    for case in j["cim_matmul"]:
+        assert len(case["x_codes"]) == case["m"] * case["k"]
+        assert len(case["w_codes"]) == case["k"] * case["n"]
+        assert len(case["out_codes"]) == case["m"] * case["n"]
+        # codes within hardware ranges
+        assert all(0 <= v <= 15 for v in case["x_codes"])
+        assert all(-7 <= v <= 7 for v in case["w_codes"])
+    assert len(j["lsq"]["w"]) == len(j["lsq"]["q"])

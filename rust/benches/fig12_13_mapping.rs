@@ -1,0 +1,34 @@
+//! Bench: regenerate Figs. 12–13 (macro occupancy maps for VGG9 morphed
+//! to 512 / 1024 bitlines) and time the packer + renderer.
+
+use cim_adapt::arch::vgg9;
+use cim_adapt::config::MacroSpec;
+use cim_adapt::mapping::{pack_model, OccupancyGrid};
+use cim_adapt::report::fig12_13;
+use cim_adapt::util::bench::{black_box, Runner};
+
+fn main() {
+    let mut r = Runner::new("fig12_13_mapping");
+    let out_dir = std::path::PathBuf::from("artifacts/figures");
+    for bl in [512usize, 1024] {
+        let f = fig12_13(bl, Some(&out_dir)).expect("figure");
+        r.table(&format!("{}", f.rendered));
+        if let Some(p) = &f.ppm_path {
+            r.table(&format!("(wrote {})", p.display()));
+        }
+    }
+
+    let spec = MacroSpec::default();
+    let full = vgg9();
+    r.bench("pack_model(vgg9 full, 151 macros)", || {
+        black_box(pack_model(&full, &spec));
+    });
+    let map = pack_model(&vgg9().scaled(0.2), &spec);
+    r.bench("occupancy_grids(vgg9×0.2)", || {
+        black_box(OccupancyGrid::from_mapping(&map));
+    });
+    r.bench("fig12 end-to-end (morph+pack+render)", || {
+        black_box(fig12_13(512, None).unwrap());
+    });
+    r.finish();
+}

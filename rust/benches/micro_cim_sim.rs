@@ -1,0 +1,71 @@
+//! Microbench: the bit-exact CIM digital twin's hot paths — bitline MAC,
+//! full macro passes, segmented matvec — the L3 per-request inner loops.
+
+use cim_adapt::cim::{Adc, CimMacro, WeightCell};
+use cim_adapt::config::MacroSpec;
+use cim_adapt::util::bench::{black_box, Runner};
+use cim_adapt::util::prng::Pcg;
+
+fn main() {
+    let mut r = Runner::new("micro_cim_sim");
+    let spec = MacroSpec::default();
+    let mut rng = Pcg::new(7);
+
+    // A fully-loaded 256×256 macro.
+    let mut mac = CimMacro::new(spec, 1.0, 16.0);
+    let cols: Vec<Vec<WeightCell>> = (0..256)
+        .map(|_| {
+            (0..252)
+                .map(|_| WeightCell::saturating(rng.gen_range(15) as i32 - 7, 4))
+                .collect()
+        })
+        .collect();
+    mac.load_columns(0, &cols);
+    let codes: Vec<i32> = (0..252).map(|_| rng.gen_range(16) as i32).collect();
+
+    r.bench("bitline_mac (252 rows)", || {
+        black_box(mac.array.bitline_mac(0, &codes));
+    });
+    r.bench_throughput("macro pass (256 BL, 4 ADC rounds)", "conversions", || {
+        black_box(mac.pass(&codes, 0, 256));
+        256
+    });
+
+    // Segmented matvec: a 512-channel layer's worth (19 segments × 64).
+    let mut big = CimMacro::new(MacroSpec { bitlines: 19 * 64, ..spec }, 1.0, 16.0);
+    for s in 0..19usize {
+        let cols: Vec<Vec<WeightCell>> = (0..64)
+            .map(|_| {
+                (0..252)
+                    .map(|_| WeightCell::saturating(rng.gen_range(15) as i32 - 7, 4))
+                    .collect()
+            })
+            .collect();
+        big.load_columns(s * 64, &cols);
+    }
+    let seg_codes: Vec<Vec<i32>> = (0..19)
+        .map(|_| (0..252).map(|_| rng.gen_range(16) as i32).collect())
+        .collect();
+    r.bench_throughput("segmented_matvec (19 segs × 64 out)", "outputs", || {
+        black_box(big.segmented_matvec(&seg_codes, 64, 0.01, false));
+        64
+    });
+
+    // ADC conversion alone.
+    let adc = Adc::new(5, 16.0);
+    let analogs: Vec<i64> = (0..4096).map(|_| rng.gen_range(2000) as i64 - 1000).collect();
+    r.bench_throughput("adc convert", "conversions", || {
+        let mut acc = 0i64;
+        for &a in &analogs {
+            acc += adc.convert(a) as i64;
+        }
+        black_box(acc);
+        analogs.len() as u64
+    });
+
+    // Weight load.
+    r.bench("load_columns (256 cols × 252 rows)", || {
+        mac.load_columns(0, &cols);
+    });
+    r.finish();
+}

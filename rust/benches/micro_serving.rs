@@ -1,0 +1,98 @@
+//! Microbench: coordinator overhead — queue + batcher + metrics without
+//! model execution cost (Sim backend), then the PJRT path when artifacts
+//! exist. L3 must not be the bottleneck (DESIGN.md §7).
+
+use std::path::Path;
+
+use cim_adapt::arch::vgg9;
+use cim_adapt::config::{MacroSpec, ServeConfig};
+use cim_adapt::coordinator::server::{Backend, EdgeServer};
+use cim_adapt::data::SynthCifar;
+use cim_adapt::util::bench::{black_box, Runner};
+
+fn main() {
+    let mut r = Runner::new("micro_serving");
+    let arch = vgg9().scaled(0.125);
+    let spec = MacroSpec::default();
+
+    // Coordinator-only round trip (Sim backend, no XLA).
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        batch_timeout_us: 200,
+        queue_depth: 4096,
+        ..ServeConfig::default()
+    };
+    let h = EdgeServer::start(&cfg, Backend::Sim { num_classes: 10 }, &arch, &spec);
+    let img = SynthCifar::sample(0, 0);
+    r.bench("submit+wait roundtrip (Sim backend)", || {
+        let t = h.submit(img.data.clone()).unwrap();
+        black_box(t.wait().unwrap());
+    });
+    r.bench_throughput("pipelined 64-deep (Sim backend)", "req", || {
+        let tickets: Vec<_> = (0..64)
+            .map(|_| h.submit(img.data.clone()).unwrap())
+            .collect();
+        for t in tickets {
+            black_box(t.wait().unwrap());
+        }
+        64
+    });
+    h.shutdown();
+
+    // PJRT path (skipped when artifacts are absent).
+    let artifacts = Path::new("artifacts");
+    if artifacts.join("vgg9_edge_meta.json").exists() {
+        let probe = cim_adapt::runtime::ModelRuntime::load(artifacts, "vgg9_edge").unwrap();
+        let served_arch = probe.meta.arch.clone();
+
+        // Raw runtime latency (no coordinator).
+        r.bench("PJRT infer b1 (raw runtime)", || {
+            black_box(probe.infer("b1", &img.data).unwrap());
+        });
+        let mut batch8 = Vec::new();
+        for _ in 0..8 {
+            batch8.extend_from_slice(&img.data);
+        }
+        if probe.variants().contains(&"b8") {
+            r.bench_throughput("PJRT infer b8 (raw runtime)", "img", || {
+                black_box(probe.infer("b8", &batch8).unwrap());
+                8
+            });
+        }
+        drop(probe);
+
+        let h = EdgeServer::start(
+            &ServeConfig {
+                workers: 1,
+                max_batch: 8,
+                batch_timeout_us: 500,
+                queue_depth: 4096,
+                ..ServeConfig::default()
+            },
+            Backend::Pjrt {
+                artifact_dir: artifacts.to_path_buf(),
+                model: "vgg9_edge".into(),
+            },
+            &served_arch,
+            &spec,
+        );
+        r.bench_throughput("pipelined 32-deep (PJRT backend)", "req", || {
+            let tickets: Vec<_> = (0..32)
+                .map(|_| h.submit(img.data.clone()).unwrap())
+                .collect();
+            for t in tickets {
+                black_box(t.wait().unwrap());
+            }
+            32
+        });
+        let snap = h.shutdown();
+        r.table(&format!(
+            "coordinator stats: mean batch {:.2}, p95 {} µs",
+            snap.mean_batch, snap.latency.p95_us
+        ));
+    } else {
+        r.table("(PJRT section skipped: run `make artifacts` first)");
+    }
+    r.finish();
+}

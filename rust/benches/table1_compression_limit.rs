@@ -1,0 +1,32 @@
+//! Bench: regenerate Table I (model compression limit) and time the
+//! shrink→expand machinery that produces it.
+
+use cim_adapt::arch::vgg9;
+use cim_adapt::config::MacroSpec;
+use cim_adapt::morph::{expand_to_budget, prune_by_gamma, synthetic_gammas};
+use cim_adapt::report::table1;
+use cim_adapt::util::bench::{black_box, Runner};
+
+fn main() {
+    let mut r = Runner::new("table1_compression_limit");
+
+    // The table itself (the paper artifact).
+    let t = table1(std::path::Path::new("artifacts"));
+    r.table(&format!("{}", t.rendered));
+
+    // Microbench the pieces behind each row.
+    let spec = MacroSpec::default();
+    let seed = vgg9();
+    let gammas = synthetic_gammas(&seed, 0.5, 3);
+    r.bench("prune_by_gamma(vgg9)", || {
+        black_box(prune_by_gamma(&seed, &gammas, 1e-2));
+    });
+    let pruned = prune_by_gamma(&seed, &gammas, 1e-2).arch;
+    r.bench("expansion_search(vgg9 → 19k BLs, step 1e-3)", || {
+        black_box(expand_to_budget(&pruned, &spec, 19_000, 0.001));
+    });
+    r.bench("table1 end-to-end (10 rows)", || {
+        black_box(table1(std::path::Path::new("artifacts")));
+    });
+    r.finish();
+}

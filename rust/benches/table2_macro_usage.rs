@@ -1,0 +1,14 @@
+//! Bench: regenerate Table II (λ grid → macro usage extremes).
+
+use cim_adapt::report::table2;
+use cim_adapt::util::bench::{black_box, Runner};
+
+fn main() {
+    let mut r = Runner::new("table2_macro_usage");
+    let t = table2(std::path::Path::new("artifacts"));
+    r.table(&format!("{}", t.rendered));
+    r.bench("table2 grid (2 λ × 4 seeds)", || {
+        black_box(table2(std::path::Path::new("artifacts")));
+    });
+    r.finish();
+}

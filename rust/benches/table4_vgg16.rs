@@ -1,0 +1,26 @@
+//! Bench: regenerate Table IV (comprehensive results for vgg16) — cost
+//! columns full-scale/exact, plus timing of the morph flow behind it.
+
+use cim_adapt::arch::by_name;
+use cim_adapt::config::{MacroSpec, MorphConfig};
+use cim_adapt::latency::model_cost;
+use cim_adapt::morph::flow::morph_flow_synthetic;
+use cim_adapt::report::table3_4_5;
+use cim_adapt::util::bench::{black_box, Runner};
+
+fn main() {
+    let mut r = Runner::new("table4_vgg16");
+    let t = table3_4_5("vgg16", std::path::Path::new("artifacts"));
+    r.table(&format!("{}", t.rendered));
+
+    let spec = MacroSpec::default();
+    let arch = by_name("vgg16").unwrap();
+    r.bench("cost_model(vgg16 full-scale)", || {
+        black_box(model_cost(&arch, &spec));
+    });
+    let cfg = MorphConfig { target_bl: 4096, ..MorphConfig::default() };
+    r.bench("morph_flow(vgg16 → 4096 BLs, 3 rounds)", || {
+        black_box(morph_flow_synthetic(&arch, &spec, &cfg, 0.4, 11));
+    });
+    r.finish();
+}

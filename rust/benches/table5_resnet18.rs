@@ -1,0 +1,26 @@
+//! Bench: regenerate Table V (comprehensive results for resnet18) — cost
+//! columns full-scale/exact, plus timing of the morph flow behind it.
+
+use cim_adapt::arch::by_name;
+use cim_adapt::config::{MacroSpec, MorphConfig};
+use cim_adapt::latency::model_cost;
+use cim_adapt::morph::flow::morph_flow_synthetic;
+use cim_adapt::report::table3_4_5;
+use cim_adapt::util::bench::{black_box, Runner};
+
+fn main() {
+    let mut r = Runner::new("table5_resnet18");
+    let t = table3_4_5("resnet18", std::path::Path::new("artifacts"));
+    r.table(&format!("{}", t.rendered));
+
+    let spec = MacroSpec::default();
+    let arch = by_name("resnet18").unwrap();
+    r.bench("cost_model(resnet18 full-scale)", || {
+        black_box(model_cost(&arch, &spec));
+    });
+    let cfg = MorphConfig { target_bl: 4096, ..MorphConfig::default() };
+    r.bench("morph_flow(resnet18 → 4096 BLs, 3 rounds)", || {
+        black_box(morph_flow_synthetic(&arch, &spec, &cfg, 0.4, 11));
+    });
+    r.finish();
+}

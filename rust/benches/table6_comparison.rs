@@ -1,0 +1,23 @@
+//! Bench: regenerate Table VI (comparison with E-UPQ and XPert) and the
+//! wordline-parallelism speedup computation behind the headline claims.
+
+use cim_adapt::baselines::{eupq::eupq_latency_multiplier, xpert::xpert_latency_multiplier};
+use cim_adapt::report::table6;
+use cim_adapt::util::bench::{black_box, Runner};
+
+fn main() {
+    let mut r = Runner::new("table6_comparison");
+    let t = table6(std::path::Path::new("artifacts"));
+    r.table(&format!("{}", t.rendered));
+
+    // The conversion-work multipliers behind the "64× / 16×" claims.
+    r.table(&format!(
+        "full 252-row segment: E-UPQ needs ×{} passes, XPert ×{} (ours: 1)",
+        eupq_latency_multiplier(252, 4),
+        xpert_latency_multiplier(252)
+    ));
+    r.bench("table6 end-to-end (3 morph flows)", || {
+        black_box(table6(std::path::Path::new("artifacts")));
+    });
+    r.finish();
+}

@@ -1,0 +1,146 @@
+//! A single convolution layer descriptor.
+
+use crate::util::json::Json;
+
+/// What kind of conv layer this is (affects morphing: `Stem` layers keep
+/// 3 input channels; `Shortcut` layers are 1×1 projections — unused by the
+/// paper's 17-conv ResNet18 but supported by the mapper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Stem,
+    Standard,
+    Shortcut,
+}
+
+impl LayerKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LayerKind::Stem => "stem",
+            LayerKind::Standard => "standard",
+            LayerKind::Shortcut => "shortcut",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LayerKind> {
+        match s {
+            "stem" => Some(LayerKind::Stem),
+            "standard" => Some(LayerKind::Standard),
+            "shortcut" => Some(LayerKind::Shortcut),
+            _ => None,
+        }
+    }
+}
+
+/// One convolution layer as the CIM tooling sees it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvLayer {
+    /// Human label, e.g. `"conv3_1"`.
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input channels (derived; kept in sync by `ModelArch::rechain_inputs`).
+    pub c_in: usize,
+    /// Output channels (= number of filters = BN γ count).
+    pub c_out: usize,
+    /// Square kernel size (3 for every paper layer).
+    pub kernel: usize,
+    /// Output spatial side length (CIFAR-10: 32 → ... → 2).
+    pub out_hw: usize,
+    /// Index of the producing layer in `ModelArch::layers` (None = image).
+    pub input_from: Option<usize>,
+}
+
+impl ConvLayer {
+    /// Parameter count k²·Cin·Cout (biases are folded into BN).
+    pub fn params(&self) -> usize {
+        self.kernel * self.kernel * self.c_in * self.c_out
+    }
+
+    /// Output pixels per image.
+    pub fn out_px(&self) -> usize {
+        self.out_hw * self.out_hw
+    }
+
+    /// Rows one filter column occupies in the macro (= Cin·k²).
+    pub fn rows(&self) -> usize {
+        self.c_in * self.kernel * self.kernel
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("name", self.name.as_str())
+            .with("kind", self.kind.as_str())
+            .with("c_in", self.c_in)
+            .with("c_out", self.c_out)
+            .with("kernel", self.kernel)
+            .with("out_hw", self.out_hw)
+            .with(
+                "input_from",
+                match self.input_from {
+                    Some(i) => Json::from(i),
+                    None => Json::Null,
+                },
+            )
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ConvLayer> {
+        let get = |k: &str| {
+            j.get(k)
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("layer field '{k}' missing or invalid"))
+        };
+        Ok(ConvLayer {
+            name: j
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("layer name missing"))?
+                .to_string(),
+            kind: LayerKind::parse(j.get("kind").as_str().unwrap_or("standard"))
+                .ok_or_else(|| anyhow::anyhow!("bad layer kind"))?,
+            c_in: get("c_in")?,
+            c_out: get("c_out")?,
+            kernel: get("kernel")?,
+            out_hw: get("out_hw")?,
+            input_from: j.get("input_from").as_usize(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer() -> ConvLayer {
+        ConvLayer {
+            name: "conv1".into(),
+            kind: LayerKind::Stem,
+            c_in: 3,
+            c_out: 64,
+            kernel: 3,
+            out_hw: 32,
+            input_from: None,
+        }
+    }
+
+    #[test]
+    fn derived_counts() {
+        let l = layer();
+        assert_eq!(l.params(), 1728);
+        assert_eq!(l.out_px(), 1024);
+        assert_eq!(l.rows(), 27);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let l = layer();
+        let back = ConvLayer::from_json(&l.to_json()).unwrap();
+        assert_eq!(back, l);
+    }
+
+    #[test]
+    fn kind_parse() {
+        for k in [LayerKind::Stem, LayerKind::Standard, LayerKind::Shortcut] {
+            assert_eq!(LayerKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(LayerKind::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,270 @@
+//! Model architecture descriptors.
+//!
+//! A [`ModelArch`] is the minimal structural description the CIM tooling
+//! needs: the ordered list of convolution layers (channel counts, kernel
+//! size, output spatial resolution) plus bookkeeping for morphing (which
+//! layers share channel counts through residual connections).
+//!
+//! The concrete VGG9 / VGG16 / ResNet18 CIFAR-10 configurations in
+//! [`models`] were solved from the paper's baseline rows of Tables III–V —
+//! every derived quantity (params, BLs, MACs, latencies, partial-sum
+//! storage) reproduces the published numbers exactly; see
+//! `latency::tests` and `rust/tests/paper_tables.rs`.
+
+pub mod layer;
+pub mod models;
+
+pub use layer::{ConvLayer, LayerKind};
+pub use models::{resnet18, vgg16, vgg9, by_name, MODEL_NAMES};
+
+use crate::util::json::Json;
+
+/// A full model: ordered conv layers + classifier metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelArch {
+    pub name: String,
+    pub layers: Vec<ConvLayer>,
+    /// Number of classes of the classifier head (not CIM-accelerated).
+    pub num_classes: usize,
+    /// Groups of layer indices whose **output** channel counts must stay
+    /// equal when morphing (residual-sum constraints in ResNet). Each group
+    /// is scaled together during shrink/expand.
+    pub tied_output_groups: Vec<Vec<usize>>,
+}
+
+impl ModelArch {
+    /// Total conv parameter count: Σ k²·Cin·Cout.
+    pub fn params(&self) -> usize {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    /// Parameter count in "paper millions" (3 decimal places).
+    pub fn params_m(&self) -> f64 {
+        (self.params() as f64 / 1e6 * 1000.0).round() / 1000.0
+    }
+
+    /// Rescale every conv channel count by `ratio` (rounded), preserving
+    /// the input-channel chaining and tied groups. The first layer keeps
+    /// its 3 input channels.
+    pub fn scaled(&self, ratio: f64) -> ModelArch {
+        assert!(ratio > 0.0);
+        let mut out = self.clone();
+        // New output channels per layer.
+        let mut new_out: Vec<usize> = self
+            .layers
+            .iter()
+            .map(|l| ((l.c_out as f64 * ratio).round() as usize).max(1))
+            .collect();
+        // Tied groups take the count of their first member to stay consistent.
+        for group in &self.tied_output_groups {
+            if let Some(&first) = group.first() {
+                let c = new_out[first];
+                for &i in group {
+                    new_out[i] = c;
+                }
+            }
+        }
+        out.apply_out_channels(&new_out);
+        out
+    }
+
+    /// Replace output channel counts wholesale and re-chain input channels.
+    pub fn apply_out_channels(&mut self, new_out: &[usize]) {
+        assert_eq!(new_out.len(), self.layers.len());
+        for (l, &c) in self.layers.iter_mut().zip(new_out) {
+            assert!(c >= 1, "layer pruned to zero channels");
+            l.c_out = c;
+        }
+        self.rechain_inputs();
+    }
+
+    /// Recompute every layer's `c_in` from its producer(s).
+    ///
+    /// `input_of[i]` was fixed at construction: index of the layer whose
+    /// output feeds layer `i` (or `None` for the image input).
+    pub fn rechain_inputs(&mut self) {
+        let feeds: Vec<Option<usize>> = self.layers.iter().map(|l| l.input_from).collect();
+        for i in 0..self.layers.len() {
+            self.layers[i].c_in = match feeds[i] {
+                None => 3,
+                Some(j) => self.layers[j].c_out,
+            };
+        }
+    }
+
+    /// Sanity-check structural invariants (chained channels, tied groups).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.c_in == 0 || l.c_out == 0 {
+                anyhow::bail!("layer {i} has zero channels");
+            }
+            match l.input_from {
+                None => {
+                    if l.c_in != 3 {
+                        anyhow::bail!("input layer {i} must have c_in=3, has {}", l.c_in);
+                    }
+                }
+                Some(j) => {
+                    if j >= i {
+                        anyhow::bail!("layer {i} consumes from non-earlier layer {j}");
+                    }
+                    if self.layers[j].c_out != l.c_in {
+                        anyhow::bail!(
+                            "layer {i} c_in={} != producer {j} c_out={}",
+                            l.c_in,
+                            self.layers[j].c_out
+                        );
+                    }
+                }
+            }
+        }
+        for g in &self.tied_output_groups {
+            if let Some(&first) = g.first() {
+                let c = self.layers[first].c_out;
+                for &i in g {
+                    if self.layers[i].c_out != c {
+                        anyhow::bail!("tied group {g:?} has unequal output channels");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize for artifacts metadata / python interchange.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("name", self.name.as_str())
+            .with("num_classes", self.num_classes)
+            .with(
+                "layers",
+                Json::Arr(self.layers.iter().map(|l| l.to_json()).collect()),
+            )
+            .with(
+                "tied_output_groups",
+                Json::Arr(
+                    self.tied_output_groups
+                        .iter()
+                        .map(|g| Json::from(g.clone()))
+                        .collect(),
+                ),
+            )
+    }
+
+    /// Parse back from [`ModelArch::to_json`] output.
+    pub fn from_json(j: &Json) -> anyhow::Result<ModelArch> {
+        let name = j
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("missing name"))?
+            .to_string();
+        let num_classes = j
+            .get("num_classes")
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("missing num_classes"))?;
+        let layers = j
+            .get("layers")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("missing layers"))?
+            .iter()
+            .map(ConvLayer::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let tied = j
+            .get("tied_output_groups")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|g| {
+                g.as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|x| x.as_usize())
+                    .collect()
+            })
+            .collect();
+        let arch = ModelArch {
+            name,
+            layers,
+            num_classes,
+            tied_output_groups: tied,
+        };
+        arch.validate()?;
+        Ok(arch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg9_structure() {
+        let m = vgg9();
+        m.validate().unwrap();
+        assert_eq!(m.layers.len(), 8);
+        assert_eq!(m.params(), 9_217_728); // 9.218M in the paper
+    }
+
+    #[test]
+    fn vgg16_structure() {
+        let m = vgg16();
+        m.validate().unwrap();
+        assert_eq!(m.layers.len(), 13);
+        assert_eq!(m.params(), 14_710_464); // 14.710M
+    }
+
+    #[test]
+    fn resnet18_structure() {
+        let m = resnet18();
+        m.validate().unwrap();
+        assert_eq!(m.layers.len(), 17); // paper: "17 convolutional layers"
+        assert_eq!(m.params(), 10_987_200); // 10.987M
+    }
+
+    #[test]
+    fn scaled_keeps_chaining() {
+        for name in MODEL_NAMES {
+            let m = by_name(name).unwrap();
+            for ratio in [0.25, 0.5, 1.5] {
+                let s = m.scaled(ratio);
+                s.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_half_halves_params_approx() {
+        let m = vgg9();
+        let s = m.scaled(0.5);
+        let r = s.params() as f64 / m.params() as f64;
+        assert!((r - 0.25).abs() < 0.02, "params scale ~quadratically, r={r}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for name in MODEL_NAMES {
+            let m = by_name(name).unwrap();
+            let j = m.to_json();
+            let back = ModelArch::from_json(&j).unwrap();
+            assert_eq!(back, m);
+        }
+    }
+
+    #[test]
+    fn resnet_tied_groups_hold_after_scaling() {
+        let m = resnet18().scaled(0.37);
+        for g in &m.tied_output_groups {
+            let c = m.layers[g[0]].c_out;
+            for &i in g {
+                assert_eq!(m.layers[i].c_out, c);
+            }
+        }
+    }
+
+    #[test]
+    fn validate_catches_broken_chain() {
+        let mut m = vgg9();
+        m.layers[3].c_in += 1;
+        assert!(m.validate().is_err());
+    }
+}

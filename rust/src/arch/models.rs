@@ -1,0 +1,196 @@
+//! Concrete CIFAR-10 model configurations.
+//!
+//! These channel/spatial layouts were **solved from the paper's baseline
+//! rows**: they are the unique standard-family configurations whose
+//! parameter counts, bitline counts, MAC counts, latencies and partial-sum
+//! storage all reproduce Tables III–V exactly (see DESIGN.md §2).
+//!
+//! * VGG9:   (64,128,256,256,512,512,512,512), pools after L1,L2,L4,L6,L8
+//! * VGG16:  standard 13-conv VGG-16, pools after L2,L4,L7,L10,L13
+//! * ResNet18: conv1 @32², stages (64×4)@16², (128×4)@8², (256×4)@4²,
+//!   (512×4)@2², identity shortcuts (17 convs total).
+
+use super::{ConvLayer, LayerKind, ModelArch};
+
+/// Names accepted by [`by_name`].
+pub const MODEL_NAMES: &[&str] = &["vgg9", "vgg16", "resnet18"];
+
+fn conv(
+    name: &str,
+    kind: LayerKind,
+    c_in: usize,
+    c_out: usize,
+    out_hw: usize,
+    input_from: Option<usize>,
+) -> ConvLayer {
+    ConvLayer {
+        name: name.to_string(),
+        kind,
+        c_in,
+        c_out,
+        kernel: 3,
+        out_hw,
+        input_from,
+    }
+}
+
+/// Build a plain feed-forward (VGG-style) chain from (c_out, out_hw) pairs.
+fn chain(name: &str, spec: &[(usize, usize)]) -> ModelArch {
+    let mut layers = Vec::with_capacity(spec.len());
+    for (i, &(c_out, out_hw)) in spec.iter().enumerate() {
+        let (kind, c_in, from) = if i == 0 {
+            (LayerKind::Stem, 3, None)
+        } else {
+            (LayerKind::Standard, spec[i - 1].0, Some(i - 1))
+        };
+        layers.push(conv(&format!("conv{}", i + 1), kind, c_in, c_out, out_hw, from));
+    }
+    ModelArch {
+        name: name.to_string(),
+        layers,
+        num_classes: 10,
+        tied_output_groups: Vec::new(),
+    }
+}
+
+/// VGG9 for CIFAR-10 — 8 convs + 1 FC (paper Table III baseline: 9.218M
+/// params, 38 592 BLs, 724 992 MACs, latency 38 656 / 14 696, psum 163 840).
+pub fn vgg9() -> ModelArch {
+    chain(
+        "vgg9",
+        &[
+            (64, 32),
+            (128, 16),
+            (256, 8),
+            (256, 8),
+            (512, 4),
+            (512, 4),
+            (512, 2),
+            (512, 2),
+        ],
+    )
+}
+
+/// VGG16 for CIFAR-10 — 13 convs + 1 FC (paper Table IV baseline: 14.710M
+/// params, 61 440 BLs, 1 443 840 MACs, latency 61 440 / 31 300, psum 196 608).
+pub fn vgg16() -> ModelArch {
+    chain(
+        "vgg16",
+        &[
+            (64, 32),
+            (64, 32),
+            (128, 16),
+            (128, 16),
+            (256, 8),
+            (256, 8),
+            (256, 8),
+            (512, 4),
+            (512, 4),
+            (512, 4),
+            (512, 2),
+            (512, 2),
+            (512, 2),
+        ],
+    )
+}
+
+/// ResNet18 for CIFAR-10 — 17 convs + 1 FC with identity shortcuts (paper
+/// Table V baseline: 10.987M params, 46 400 BLs, 690 176 MACs, latency
+/// 46 592 / 16 860, psum 65 536).
+///
+/// Residual sums constrain all block outputs inside one stage (and the
+/// stage's input) to share a channel count — recorded in
+/// `tied_output_groups` so morphing scales them together.
+pub fn resnet18() -> ModelArch {
+    let mut layers = Vec::with_capacity(17);
+    layers.push(conv("conv1", LayerKind::Stem, 3, 64, 32, None));
+    let stages: &[(usize, usize)] = &[(64, 16), (128, 8), (256, 4), (512, 2)];
+    let mut prev = 0usize; // index of the layer feeding the next conv
+    let mut idx = 1usize;
+    let mut tied: Vec<Vec<usize>> = Vec::new();
+    for (s, &(c, hw)) in stages.iter().enumerate() {
+        // Layers whose outputs are summed together in this stage:
+        // conv1 (stage 0 only) + the 2nd conv of every block.
+        let mut group: Vec<usize> = if s == 0 { vec![0] } else { vec![] };
+        for b in 0..2 {
+            let c_in_first = layers[prev].c_out;
+            layers.push(conv(
+                &format!("conv{}_{}a", s + 2, b + 1),
+                LayerKind::Standard,
+                c_in_first,
+                c,
+                hw,
+                Some(prev),
+            ));
+            let first = idx;
+            idx += 1;
+            layers.push(conv(
+                &format!("conv{}_{}b", s + 2, b + 1),
+                LayerKind::Standard,
+                c,
+                c,
+                hw,
+                Some(first),
+            ));
+            group.push(idx);
+            prev = idx;
+            idx += 1;
+        }
+        // In stage s>0 the residual add of block 1 mixes the *downsampled*
+        // previous-stage output with this stage's channels. The paper's
+        // 17-conv model uses identity shortcuts (zero-padded), so only the
+        // in-stage outputs are hard-tied.
+        tied.push(group);
+    }
+    ModelArch {
+        name: "resnet18".to_string(),
+        layers,
+        num_classes: 10,
+        tied_output_groups: tied,
+    }
+}
+
+/// Look up a builder by canonical name.
+pub fn by_name(name: &str) -> anyhow::Result<ModelArch> {
+    match name {
+        "vgg9" => Ok(vgg9()),
+        "vgg16" => Ok(vgg16()),
+        "resnet18" => Ok(resnet18()),
+        other => anyhow::bail!("unknown model '{other}' (expected one of {MODEL_NAMES:?})"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_covers_all() {
+        for n in MODEL_NAMES {
+            assert!(by_name(n).is_ok());
+        }
+        assert!(by_name("alexnet").is_err());
+    }
+
+    #[test]
+    fn resnet18_has_17_convs_and_4_tied_groups() {
+        let m = resnet18();
+        assert_eq!(m.layers.len(), 17);
+        assert_eq!(m.tied_output_groups.len(), 4);
+        // Stage 0 ties conv1 + two block outputs = 3 layers at 64 channels.
+        assert_eq!(m.tied_output_groups[0].len(), 3);
+        for &i in &m.tied_output_groups[0] {
+            assert_eq!(m.layers[i].c_out, 64);
+        }
+    }
+
+    #[test]
+    fn vgg_spatial_maps() {
+        let v9 = vgg9();
+        let hw: Vec<usize> = v9.layers.iter().map(|l| l.out_hw).collect();
+        assert_eq!(hw, vec![32, 16, 8, 8, 4, 4, 2, 2]);
+        let v16 = vgg16();
+        let hw: Vec<usize> = v16.layers.iter().map(|l| l.out_hw).collect();
+        assert_eq!(hw, vec![32, 32, 16, 16, 8, 8, 8, 4, 4, 4, 2, 2, 2]);
+    }
+}

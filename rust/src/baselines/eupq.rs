@@ -1,0 +1,81 @@
+//! E-UPQ operating point (Chang, Chou, Chuang, Wu — JETCAS 2023).
+//!
+//! Energy-aware unified pruning-quantization: mixed weight precision
+//! (8/4/2/1/0 b, averaging ≈1 b after heavy pruning), 1-bit cells, a
+//! 16×16 operation unit (16 wordlines active), no post-pruning channel
+//! adjustment, no ADC-aware training. Table VI reports two rows.
+
+use super::ComparisonPoint;
+
+/// The published E-UPQ rows: `model` ∈ {"resnet18", "resnet20"}.
+pub fn eupq_point(model: &str) -> ComparisonPoint {
+    match model {
+        "resnet18" => ComparisonPoint {
+            method: "E-UPQ".to_string(),
+            model: "ResNet18".to_string(),
+            dataset: "CIFAR-100".to_string(),
+            baseline_acc: 74.4,
+            compressed_acc: 73.2,
+            bits: (1.0, 8.0, 4.0),
+            memory_cell_bits: 1,
+            compression_pct: -87.50,
+            macro_usage: Some(0.125),
+            activated_wordlines: 16,
+            pruning: true,
+            adjustable_after_pruning: false,
+            adc_aware_training: false,
+        },
+        "resnet20" => ComparisonPoint {
+            method: "E-UPQ".to_string(),
+            model: "ResNet20".to_string(),
+            dataset: "CIFAR-10".to_string(),
+            baseline_acc: 91.3,
+            compressed_acc: 90.5,
+            bits: (1.1, 8.0, 4.0),
+            memory_cell_bits: 1,
+            compression_pct: -86.30,
+            macro_usage: Some(0.137),
+            activated_wordlines: 16,
+            pruning: true,
+            adjustable_after_pruning: false,
+            adc_aware_training: false,
+        },
+        other => panic!("E-UPQ has no published row for '{other}'"),
+    }
+}
+
+/// Computing-latency multiplier of E-UPQ's operation-unit discipline on
+/// our macro: with only 16 of 256 wordlines active per pass, a segment
+/// that we evaluate in one pass costs `ceil(rows/16)` passes; 1-bit cells
+/// additionally need `weight_bits` column-planes per logical weight.
+pub fn eupq_latency_multiplier(rows_per_pass: usize, weight_bits: u32) -> f64 {
+    let passes = (rows_per_pass as f64 / 16.0).ceil();
+    passes * weight_bits as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn published_rows() {
+        let a = eupq_point("resnet18");
+        assert_eq!(a.compressed_acc, 73.2);
+        assert_eq!(a.macro_usage, Some(0.125));
+        let b = eupq_point("resnet20");
+        assert_eq!(b.compression_pct, -86.30);
+    }
+
+    #[test]
+    #[should_panic(expected = "no published row")]
+    fn unknown_model_panics() {
+        eupq_point("vgg9");
+    }
+
+    #[test]
+    fn latency_multiplier_vs_full_parallel() {
+        // A full 252-row 4-bit segment: E-UPQ needs 16 passes × 4 planes
+        // = 64 — the paper's "64× speedup" claim seen from the other side.
+        assert_eq!(eupq_latency_multiplier(252, 4), 64.0);
+    }
+}

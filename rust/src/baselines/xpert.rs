@@ -1,0 +1,53 @@
+//! XPert operating point (Moitra, Bhattacharjee, Kim, Panda — DAC 2023).
+//!
+//! Peripheral-circuit/architecture co-search on crossbars: 8-bit weights
+//! on 1-bit cells, mixed activation (≈4.0 b) and ADC (≈5.4 b) precision,
+//! 64 wordlines activated, no pruning (compression comes from the
+//! searched architecture), no ADC-aware training.
+
+use super::ComparisonPoint;
+
+/// The published XPert row (VGG16 / CIFAR-10).
+pub fn xpert_point() -> ComparisonPoint {
+    ComparisonPoint {
+        method: "XPert".to_string(),
+        model: "VGG16".to_string(),
+        dataset: "CIFAR-10".to_string(),
+        baseline_acc: 94.0,
+        compressed_acc: 92.46,
+        bits: (8.0, 4.0, 5.4),
+        memory_cell_bits: 1,
+        compression_pct: -68.41,
+        macro_usage: None, // not reported
+        activated_wordlines: 64,
+        pruning: false,
+        adjustable_after_pruning: false,
+        adc_aware_training: false,
+    }
+}
+
+/// XPert's latency multiplier on our macro: 64 of 256 wordlines per pass
+/// and 8-bit weights on 1-bit cells (8 column-planes).
+pub fn xpert_latency_multiplier(rows_per_pass: usize) -> f64 {
+    let passes = (rows_per_pass as f64 / 64.0).ceil();
+    passes * 8.0 / 2.0 // 8 planes, but 2-bit/cycle input DACs in XPert ≈ /2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn published_row() {
+        let x = xpert_point();
+        assert_eq!(x.activated_wordlines, 64);
+        assert_eq!(x.compression_pct, -68.41);
+        assert!(!x.pruning && !x.adc_aware_training);
+        assert!(x.macro_usage.is_none());
+    }
+
+    #[test]
+    fn wordline_ratio_vs_ours_is_4x() {
+        assert_eq!(256 / xpert_point().activated_wordlines, 4);
+    }
+}

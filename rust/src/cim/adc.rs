@@ -1,0 +1,115 @@
+//! Analog-to-digital converter model: 5-bit signed conversion of a
+//! bitline's analog partial sum with learned step `S_ADC` (Eq. 7):
+//!
+//! ```text
+//! psum_q = round(clip(analog / S_ADC, -Q_N_ADC, Q_P_ADC))
+//! ```
+//!
+//! The macro has 64 physical ADCs muxed over 256 bitlines (4 BL/ADC,
+//! Fig. 1/2), so digitizing `n` bitlines takes `ceil(n / 64)` conversion
+//! rounds — the term the computing-latency model charges per macro pass.
+
+/// One ADC (all 64 share bits + step in the paper's design).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Adc {
+    pub bits: u32,
+    pub s_adc: f32,
+}
+
+impl Adc {
+    pub fn new(bits: u32, s_adc: f32) -> Adc {
+        assert!(bits >= 2 && bits <= 16, "adc bits out of range");
+        assert!(s_adc > 0.0 && s_adc.is_finite(), "adc step must be positive");
+        Adc { bits, s_adc }
+    }
+
+    /// Signed clip bound `2^(bits-1) - 1` (15 for 5 bits).
+    #[inline]
+    pub fn qmax(&self) -> i32 {
+        (1i32 << (self.bits - 1)) - 1
+    }
+
+    /// Convert an integer-domain analog sum to a quantized code.
+    ///
+    /// Rounding is round-half-away-from-zero, matching `jnp.round`'s
+    /// behaviour on the half-integers that actually occur for our
+    /// integer/step combinations, and matching the Pallas kernel.
+    #[inline]
+    pub fn convert(&self, analog: i64) -> i32 {
+        let scaled = analog as f64 / self.s_adc as f64;
+        let q = scaled.abs().floor() + if scaled.abs().fract() >= 0.5 { 1.0 } else { 0.0 };
+        let q = (q * scaled.signum()) as i32;
+        q.clamp(-self.qmax(), self.qmax())
+    }
+
+    /// Reconstruct the analog value a code represents.
+    #[inline]
+    pub fn dequantize(&self, code: i32) -> f32 {
+        code as f32 * self.s_adc
+    }
+
+    /// Conversion rounds for `n` bitlines with `num_adcs` converters.
+    pub fn rounds(n: usize, num_adcs: usize) -> usize {
+        n.div_ceil(num_adcs.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clips_to_5bit_range() {
+        let adc = Adc::new(5, 1.0);
+        assert_eq!(adc.qmax(), 15);
+        assert_eq!(adc.convert(100), 15);
+        assert_eq!(adc.convert(-100), -15);
+        assert_eq!(adc.convert(7), 7);
+    }
+
+    #[test]
+    fn step_scales_input() {
+        let adc = Adc::new(5, 8.0);
+        assert_eq!(adc.convert(16), 2);
+        assert_eq!(adc.convert(-16), -2);
+        assert_eq!(adc.convert(3), 0); // 0.375 rounds to 0
+        assert_eq!(adc.convert(4), 1); // 0.5 rounds away from zero
+        assert_eq!(adc.convert(-4), -1);
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        let adc = Adc::new(5, 4.0);
+        for analog in -60..=60 {
+            let q = adc.convert(analog);
+            let back = adc.dequantize(q);
+            assert!(
+                (back - analog as f32).abs() <= 2.0 + 1e-5,
+                "analog={analog} q={q}"
+            );
+        }
+    }
+
+    #[test]
+    fn saturation_beyond_range() {
+        let adc = Adc::new(5, 1.0);
+        // |analog| > 15·s saturates: the error grows — the effect Phase-2
+        // training teaches the model to avoid.
+        assert_eq!(adc.convert(40), 15);
+        assert!((adc.dequantize(15) - 40.0).abs() > 20.0);
+    }
+
+    #[test]
+    fn rounds_formula() {
+        assert_eq!(Adc::rounds(64, 64), 1);
+        assert_eq!(Adc::rounds(65, 64), 2);
+        assert_eq!(Adc::rounds(256, 64), 4);
+        assert_eq!(Adc::rounds(0, 64), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "adc step")]
+    fn bad_step_rejected() {
+        Adc::new(5, -1.0);
+    }
+}

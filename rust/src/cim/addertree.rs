@@ -1,0 +1,92 @@
+//! The digital back-end of Fig. 2: per-ADC output muxes feed an adder
+//! tree that accumulates quantized partial sums across segments, then a
+//! single multiplier applies the combined scaling factor `S_W · S_ADC`
+//! (optionally approximated by a power of two → pure shift).
+
+use crate::quant::pow2::nearest_pow2;
+
+/// Adder tree + output scaling.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdderTree {
+    /// Combined scale `S_W · S_ADC` applied once at the output.
+    pub scale: f32,
+    /// If set, `scale` is replaced by the nearest power of two and applied
+    /// as a shift (the paper's "simple digital shift operation").
+    pub pow2: bool,
+}
+
+impl AdderTree {
+    pub fn new(s_w: f32, s_adc: f32, pow2: bool) -> AdderTree {
+        assert!(s_w > 0.0 && s_adc > 0.0);
+        AdderTree {
+            scale: s_w * s_adc,
+            pow2,
+        }
+    }
+
+    /// Effective scale after optional power-of-two approximation.
+    pub fn effective_scale(&self) -> f32 {
+        if self.pow2 {
+            nearest_pow2(self.scale)
+        } else {
+            self.scale
+        }
+    }
+
+    /// Accumulate quantized partial-sum codes (one per segment) and scale.
+    #[inline]
+    pub fn accumulate(&self, codes: &[i32]) -> f32 {
+        let sum: i64 = codes.iter().map(|&c| c as i64).sum();
+        sum as f32 * self.effective_scale()
+    }
+
+    /// Tree-reduction depth for `n` inputs (pipeline stages in silicon).
+    pub fn depth(n: usize) -> u32 {
+        if n <= 1 {
+            0
+        } else {
+            (usize::BITS - (n - 1).leading_zeros()) as u32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_and_scale() {
+        let t = AdderTree::new(0.5, 2.0, false);
+        assert_eq!(t.accumulate(&[1, 2, 3]), 6.0);
+        assert_eq!(t.accumulate(&[]), 0.0);
+        assert_eq!(t.accumulate(&[-5, 5]), 0.0);
+    }
+
+    #[test]
+    fn pow2_mode_snaps_scale() {
+        let t = AdderTree::new(0.9, 1.0, true);
+        assert_eq!(t.effective_scale(), 1.0);
+        let t = AdderTree::new(0.3, 1.0, true);
+        assert_eq!(t.effective_scale(), 0.25);
+    }
+
+    #[test]
+    fn pow2_error_within_sqrt2_factor() {
+        for s in [0.01f32, 0.07, 0.3, 0.9, 3.7, 100.0] {
+            let t = AdderTree::new(s, 1.0, true);
+            let ratio = t.effective_scale() / s;
+            assert!(
+                ratio >= 1.0 / 1.5 && ratio <= 1.5,
+                "s={s} ratio={ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn tree_depth() {
+        assert_eq!(AdderTree::depth(1), 0);
+        assert_eq!(AdderTree::depth(2), 1);
+        assert_eq!(AdderTree::depth(64), 6); // the macro's 64-input tree
+        assert_eq!(AdderTree::depth(65), 7);
+    }
+}

@@ -1,0 +1,185 @@
+//! The weight array: `wordlines × bitlines` cells with wordline-parallel
+//! integer MAC per bitline.
+//!
+//! Weights are stored column-major (a bitline column is the contiguous
+//! unit the mapper fills, Fig. 3). `bitline_mac` computes the analog
+//! accumulation of one column for a full set of wordline drive codes —
+//! the quantity a single ADC conversion digitizes.
+
+use super::cell::WeightCell;
+
+/// The macro's cell array.
+#[derive(Debug, Clone)]
+pub struct CimArray {
+    pub wordlines: usize,
+    pub bitlines: usize,
+    /// Column-major cells: `cells[bl * wordlines + wl]`.
+    cells: Vec<WeightCell>,
+    /// Rows actually occupied per column (for occupancy stats).
+    used_rows: Vec<u16>,
+}
+
+impl CimArray {
+    pub fn new(wordlines: usize, bitlines: usize) -> CimArray {
+        assert!(wordlines > 0 && bitlines > 0);
+        CimArray {
+            wordlines,
+            bitlines,
+            cells: vec![WeightCell::default(); wordlines * bitlines],
+            used_rows: vec![0; bitlines],
+        }
+    }
+
+    /// Clear all cells (weight reload boundary).
+    pub fn clear(&mut self) {
+        self.cells.fill(WeightCell::default());
+        self.used_rows.fill(0);
+    }
+
+    /// Write one bitline column starting at row 0. `weights.len()` must fit.
+    pub fn load_column(&mut self, bl: usize, weights: &[WeightCell]) {
+        assert!(bl < self.bitlines, "bitline {bl} out of range");
+        assert!(
+            weights.len() <= self.wordlines,
+            "column of {} rows exceeds {} wordlines",
+            weights.len(),
+            self.wordlines
+        );
+        let base = bl * self.wordlines;
+        self.cells[base..base + weights.len()].copy_from_slice(weights);
+        for c in &mut self.cells[base + weights.len()..base + self.wordlines] {
+            *c = WeightCell::default();
+        }
+        self.used_rows[bl] = weights.len() as u16;
+    }
+
+    #[inline]
+    pub fn cell(&self, wl: usize, bl: usize) -> WeightCell {
+        self.cells[bl * self.wordlines + wl]
+    }
+
+    pub fn used_rows(&self, bl: usize) -> usize {
+        self.used_rows[bl] as usize
+    }
+
+    /// Total occupied cells (for utilization metrics).
+    pub fn occupied_cells(&self) -> usize {
+        self.used_rows.iter().map(|&r| r as usize).sum()
+    }
+
+    /// Integer MAC of one bitline column against wordline drive codes.
+    ///
+    /// `codes.len()` may be shorter than `wordlines`; missing rows drive 0
+    /// (those wordlines are not activated). This is the hot inner loop of
+    /// the digital twin — kept free of bounds checks via iterators.
+    #[inline]
+    pub fn bitline_mac(&self, bl: usize, codes: &[i32]) -> i64 {
+        debug_assert!(bl < self.bitlines);
+        debug_assert!(codes.len() <= self.wordlines);
+        let base = bl * self.wordlines;
+        let col = &self.cells[base..base + codes.len()];
+        // i32 accumulation is exact (|w|·code ≤ 7·15 = 105 per row,
+        // ≤ 26 880 over 256 rows) and lets LLVM vectorize; the i64 widen
+        // happens once at the end. ~2.8× faster than i64-per-element
+        // (EXPERIMENTS.md §Perf).
+        // Four independent accumulator lanes break the dependency chain
+        // and give LLVM a clean reduction to vectorize.
+        let mut lanes = [0i32; 4];
+        let chunks = col.chunks_exact(4);
+        let code_chunks = codes.chunks_exact(4);
+        let rem_c = chunks.remainder();
+        let rem_x = code_chunks.remainder();
+        for (cc, xc) in chunks.zip(code_chunks) {
+            lanes[0] += (cc[0].w as i32) * xc[0];
+            lanes[1] += (cc[1].w as i32) * xc[1];
+            lanes[2] += (cc[2].w as i32) * xc[2];
+            lanes[3] += (cc[3].w as i32) * xc[3];
+        }
+        let mut acc = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        for (c, &x) in rem_c.iter().zip(rem_x) {
+            acc += (c.w as i32) * x;
+        }
+        acc as i64
+    }
+
+    /// MAC over a contiguous span of bitlines (one layer's active columns).
+    pub fn mac_span(&self, bl_start: usize, bl_count: usize, codes: &[i32]) -> Vec<i64> {
+        (bl_start..bl_start + bl_count)
+            .map(|bl| self.bitline_mac(bl, codes))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cells(ws: &[i32]) -> Vec<WeightCell> {
+        ws.iter().map(|&w| WeightCell::new(w, 4)).collect()
+    }
+
+    #[test]
+    fn load_and_mac() {
+        let mut a = CimArray::new(8, 4);
+        a.load_column(0, &cells(&[1, -2, 3]));
+        // codes beyond the column length drive zero weight cells anyway.
+        let v = a.bitline_mac(0, &[10, 10, 10]);
+        assert_eq!(v, 10 - 20 + 30);
+    }
+
+    #[test]
+    fn unloaded_columns_produce_zero() {
+        let a = CimArray::new(8, 4);
+        assert_eq!(a.bitline_mac(2, &[15; 8]), 0);
+    }
+
+    #[test]
+    fn reload_overwrites_stale_rows() {
+        let mut a = CimArray::new(4, 1);
+        a.load_column(0, &cells(&[7, 7, 7, 7]));
+        a.load_column(0, &cells(&[1]));
+        // Old rows must be cleared, not linger.
+        assert_eq!(a.bitline_mac(0, &[1, 1, 1, 1]), 1);
+        assert_eq!(a.used_rows(0), 1);
+    }
+
+    #[test]
+    fn occupancy_counts() {
+        let mut a = CimArray::new(16, 3);
+        a.load_column(0, &cells(&[1; 10].map(|x| x as i32)));
+        a.load_column(2, &cells(&[-1, -1]));
+        assert_eq!(a.occupied_cells(), 12);
+        a.clear();
+        assert_eq!(a.occupied_cells(), 0);
+    }
+
+    #[test]
+    fn mac_span_matches_individual() {
+        let mut a = CimArray::new(8, 4);
+        for bl in 0..4 {
+            let col: Vec<i32> = (0..8).map(|i| ((i + bl) % 7) as i32 - 3).collect();
+            a.load_column(bl, &cells(&col));
+        }
+        let codes: Vec<i32> = (0..8).map(|i| i % 16).collect();
+        let span = a.mac_span(0, 4, &codes);
+        for bl in 0..4 {
+            assert_eq!(span[bl], a.bitline_mac(bl, &codes));
+        }
+    }
+
+    #[test]
+    fn worst_case_no_overflow() {
+        // 256 wordlines × |w|=7 × code 15 = 26880 — far inside i64.
+        let mut a = CimArray::new(256, 1);
+        a.load_column(0, &cells(&[-7; 256].map(|x| x as i32)));
+        let v = a.bitline_mac(0, &[15; 256]);
+        assert_eq!(v, -7 * 15 * 256);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn oversize_column_panics() {
+        let mut a = CimArray::new(4, 1);
+        a.load_column(0, &cells(&[1, 1, 1, 1, 1]));
+    }
+}

@@ -1,0 +1,95 @@
+//! Weight cells and the positive/negative bitline (PBL/NBL) encoding.
+//!
+//! Each logical weight is a 4-bit signed integer in `[-7, 7]` (the LSQ
+//! clip range `±(2^(n-1)-1)`, Eq. 6). The macro stores magnitudes on a
+//! positive and a negative bitline (Fig. 1: "PBL and NBL"); the analog
+//! front-end senses the difference. In the digital twin we keep the signed
+//! value and model PBL/NBL as the non-negative decomposition
+//! `w = pos - neg`, which the mapper uses for occupancy accounting.
+
+/// One signed multibit weight cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct WeightCell {
+    /// Signed quantized weight, `|w| <= 2^(bits-1)-1`.
+    pub w: i8,
+}
+
+impl WeightCell {
+    /// Construct, checking the representable range for `bits`.
+    pub fn new(w: i32, bits: u32) -> WeightCell {
+        let q = (1i32 << (bits - 1)) - 1;
+        assert!(
+            (-q..=q).contains(&w),
+            "weight {w} outside {bits}-bit range ±{q}"
+        );
+        WeightCell { w: w as i8 }
+    }
+
+    /// Clamp-and-construct (used when loading trained weights whose step
+    /// size guarantees range but float noise may exceed it by 1 ULP).
+    pub fn saturating(w: i32, bits: u32) -> WeightCell {
+        let q = (1i32 << (bits - 1)) - 1;
+        WeightCell {
+            w: w.clamp(-q, q) as i8,
+        }
+    }
+
+    /// PBL/NBL decomposition: (positive charge, negative charge).
+    #[inline]
+    pub fn pbl_nbl(&self) -> (u8, u8) {
+        if self.w >= 0 {
+            (self.w as u8, 0)
+        } else {
+            (0, (-(self.w as i16)) as u8)
+        }
+    }
+
+    /// Multiply by a DAC code (the in-cell analog multiplication).
+    #[inline]
+    pub fn mac(&self, code: i32) -> i32 {
+        self.w as i32 * code
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_checked() {
+        assert_eq!(WeightCell::new(7, 4).w, 7);
+        assert_eq!(WeightCell::new(-7, 4).w, -7);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside 4-bit range")]
+    fn out_of_range_panics() {
+        WeightCell::new(8, 4);
+    }
+
+    #[test]
+    fn saturating_clamps() {
+        assert_eq!(WeightCell::saturating(100, 4).w, 7);
+        assert_eq!(WeightCell::saturating(-100, 4).w, -7);
+    }
+
+    #[test]
+    fn pbl_nbl_decomposition() {
+        assert_eq!(WeightCell::new(5, 4).pbl_nbl(), (5, 0));
+        assert_eq!(WeightCell::new(-3, 4).pbl_nbl(), (0, 3));
+        assert_eq!(WeightCell::new(0, 4).pbl_nbl(), (0, 0));
+        // w = pbl - nbl always.
+        for w in -7..=7 {
+            let c = WeightCell::new(w, 4);
+            let (p, n) = c.pbl_nbl();
+            assert_eq!(p as i32 - n as i32, w);
+        }
+    }
+
+    #[test]
+    fn mac_is_integer_product() {
+        let c = WeightCell::new(-6, 4);
+        assert_eq!(c.mac(15), -90);
+        assert_eq!(c.mac(0), 0);
+    }
+}

@@ -1,0 +1,87 @@
+//! Digital-to-analog converter model: activation → wordline drive code.
+//!
+//! The paper feeds **4-bit parallel inputs** through the DAC (one
+//! conversion per MAC instead of bit-serial, §II-A), so the "analog"
+//! wordline drive is fully described by the unsigned activation code
+//! `0..=2^bits-1`. Activations are quantized with a step size `s_act`
+//! (learned during seed-model training; fixed thereafter).
+
+/// DAC with an activation quantization step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Dac {
+    pub bits: u32,
+    pub s_act: f32,
+}
+
+impl Dac {
+    pub fn new(bits: u32, s_act: f32) -> Dac {
+        assert!(bits >= 1 && bits <= 16, "dac bits out of range");
+        assert!(s_act > 0.0, "activation step must be positive");
+        Dac { bits, s_act }
+    }
+
+    /// Max code (15 for 4 bits).
+    #[inline]
+    pub fn max_code(&self) -> i32 {
+        (1i32 << self.bits) - 1
+    }
+
+    /// Quantize a (post-ReLU, non-negative) activation to a DAC code.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> i32 {
+        let q = (x / self.s_act).round() as i32;
+        q.clamp(0, self.max_code())
+    }
+
+    /// Reconstruct the activation value a code represents.
+    #[inline]
+    pub fn dequantize(&self, code: i32) -> f32 {
+        code as f32 * self.s_act
+    }
+
+    /// Quantize a whole activation vector.
+    pub fn quantize_vec(&self, xs: &[f32]) -> Vec<i32> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_clamped_to_range() {
+        let d = Dac::new(4, 0.5);
+        assert_eq!(d.quantize(-1.0), 0);
+        assert_eq!(d.quantize(0.0), 0);
+        assert_eq!(d.quantize(0.24), 0);
+        assert_eq!(d.quantize(0.26), 1);
+        assert_eq!(d.quantize(100.0), 15);
+        assert_eq!(d.max_code(), 15);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let d = Dac::new(4, 0.3);
+        for i in 0..=45 {
+            let x = i as f32 * 0.1;
+            let code = d.quantize(x);
+            let back = d.dequantize(code);
+            if x <= d.dequantize(d.max_code()) {
+                assert!((back - x).abs() <= 0.15 + 1e-6, "x={x} back={back}");
+            }
+        }
+    }
+
+    #[test]
+    fn vector_quantization() {
+        let d = Dac::new(4, 1.0);
+        assert_eq!(d.quantize_vec(&[0.0, 1.4, 1.6, 20.0]), vec![0, 1, 2, 15]);
+    }
+
+    #[test]
+    #[should_panic(expected = "activation step")]
+    fn zero_step_rejected() {
+        Dac::new(4, 0.0);
+    }
+}

@@ -1,0 +1,223 @@
+//! The assembled CIM macro: array + DAC + rotating ADCs + adder tree,
+//! with cycle-accurate accounting that matches the analytic cost model
+//! (`latency::cost`) by construction.
+//!
+//! A **pass** activates up to `wordlines` rows with one vector of DAC
+//! codes and digitizes a span of bitlines: 1 evaluate cycle + `ceil(n/64)`
+//! ADC rounds. A segmented convolution output is the adder-tree
+//! accumulation of per-segment quantized codes, scaled by `S_W·S_ADC` —
+//! exactly Eq. 7 of the paper.
+
+use super::adc::Adc;
+use super::addertree::AdderTree;
+use super::array::CimArray;
+use super::cell::WeightCell;
+use super::dac::Dac;
+use crate::config::MacroSpec;
+
+/// Running hardware counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MacroStats {
+    /// Total cycles spent computing (evaluate + ADC rounds).
+    pub compute_cycles: u64,
+    /// Total cycles spent (re)loading weights.
+    pub load_cycles: u64,
+    /// Individual ADC conversions performed (the paper's "MACs").
+    pub conversions: u64,
+    /// Number of weight reload events.
+    pub reloads: u64,
+}
+
+/// Result of digitizing one span of bitlines.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PassResult {
+    /// Quantized 5-bit codes, one per bitline in the span.
+    pub codes: Vec<i32>,
+    /// Cycles this pass consumed.
+    pub cycles: u64,
+}
+
+/// One physical macro instance.
+#[derive(Debug, Clone)]
+pub struct CimMacro {
+    pub spec: MacroSpec,
+    pub array: CimArray,
+    pub dac: Dac,
+    pub adc: Adc,
+    pub stats: MacroStats,
+}
+
+impl CimMacro {
+    pub fn new(spec: MacroSpec, s_act: f32, s_adc: f32) -> CimMacro {
+        CimMacro {
+            spec,
+            array: CimArray::new(spec.wordlines, spec.bitlines),
+            dac: Dac::new(spec.dac_bits, s_act),
+            adc: Adc::new(spec.adc_bits, s_adc),
+            stats: MacroStats::default(),
+        }
+    }
+
+    /// Load a set of bitline columns starting at `bl_start`, charging the
+    /// full-macro reload cost (the paper: "a CIM macro would require 256
+    /// cycles for this process" — one row broadcast per cycle).
+    pub fn load_columns(&mut self, bl_start: usize, columns: &[Vec<WeightCell>]) {
+        assert!(
+            bl_start + columns.len() <= self.spec.bitlines,
+            "columns overflow macro ({} + {} > {})",
+            bl_start,
+            columns.len(),
+            self.spec.bitlines
+        );
+        for (i, col) in columns.iter().enumerate() {
+            self.array.load_column(bl_start + i, col);
+        }
+        self.stats.load_cycles += self.spec.load_cycles_per_macro as u64;
+        self.stats.reloads += 1;
+    }
+
+    /// One macro pass: drive `codes` on the wordlines, digitize
+    /// `bl_count` bitlines starting at `bl_start`.
+    pub fn pass(&mut self, codes: &[i32], bl_start: usize, bl_count: usize) -> PassResult {
+        assert!(
+            codes.len() <= self.spec.wordlines,
+            "{} codes exceed {} wordlines",
+            codes.len(),
+            self.spec.wordlines
+        );
+        debug_assert!(codes
+            .iter()
+            .all(|&c| c >= 0 && c <= self.dac.max_code()));
+        let analogs = self.array.mac_span(bl_start, bl_count, codes);
+        let out: Vec<i32> = analogs.iter().map(|&a| self.adc.convert(a)).collect();
+        let rounds = Adc::rounds(bl_count, self.spec.num_adcs) as u64;
+        let cycles = 1 + rounds; // evaluate + conversion rounds
+        self.stats.compute_cycles += cycles;
+        self.stats.conversions += bl_count as u64;
+        PassResult { codes: out, cycles }
+    }
+
+    /// Full segmented dot product (Eq. 7 forward path): the weights for
+    /// `n_out` filters are laid out as `segments` groups of `n_out`
+    /// columns (segment-major, matching `mapping::packer`), activations
+    /// come pre-quantized per segment. Returns the scaled float outputs.
+    pub fn segmented_matvec(
+        &mut self,
+        seg_codes: &[Vec<i32>],
+        n_out: usize,
+        s_w: f32,
+        pow2: bool,
+    ) -> Vec<f32> {
+        let tree = AdderTree::new(s_w, self.adc.s_adc, pow2);
+        let mut acc = vec![0i64; n_out];
+        for (seg, codes) in seg_codes.iter().enumerate() {
+            let r = self.pass(codes, seg * n_out, n_out);
+            for (a, &c) in acc.iter_mut().zip(&r.codes) {
+                *a += c as i64;
+            }
+        }
+        // One pass through the adder tree per output (already accumulated
+        // in integer domain); apply the combined scale.
+        acc.iter()
+            .map(|&a| a as f32 * tree.effective_scale())
+            .collect()
+    }
+
+    /// Ideal (no ADC quantization) reference for error measurements.
+    pub fn ideal_matvec(&self, seg_codes: &[Vec<i32>], n_out: usize, s_w: f32) -> Vec<f32> {
+        let mut acc = vec![0i64; n_out];
+        for (seg, codes) in seg_codes.iter().enumerate() {
+            for (j, a) in acc.iter_mut().enumerate() {
+                *a += self.array.bitline_mac(seg * n_out + j, codes);
+            }
+        }
+        acc.iter().map(|&a| a as f32 * s_w).collect()
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = MacroStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> MacroSpec {
+        MacroSpec::default()
+    }
+
+    fn cells(ws: &[i32]) -> Vec<WeightCell> {
+        ws.iter().map(|&w| WeightCell::saturating(w, 4)).collect()
+    }
+
+    #[test]
+    fn pass_counts_cycles_like_cost_model() {
+        let mut m = CimMacro::new(spec(), 1.0, 1.0);
+        m.load_columns(0, &vec![cells(&[1; 9]); 128]);
+        let r = m.pass(&[1; 9], 0, 128);
+        // 128 bitlines / 64 ADCs = 2 rounds + 1 evaluate = 3 cycles.
+        assert_eq!(r.cycles, 3);
+        assert_eq!(m.stats.conversions, 128);
+    }
+
+    #[test]
+    fn conversion_is_quantized_and_clipped() {
+        let mut m = CimMacro::new(spec(), 1.0, 4.0);
+        m.load_columns(0, &[cells(&[7, 7, 7, 7])]);
+        // analog = 4·7·15 = 420; /4 = 105 → clipped to 15.
+        let r = m.pass(&[15, 15, 15, 15], 0, 1);
+        assert_eq!(r.codes, vec![15]);
+    }
+
+    #[test]
+    fn segmented_matvec_accumulates_segments() {
+        let mut m = CimMacro::new(spec(), 1.0, 1.0);
+        // 2 segments × 3 outputs; segment s, output j has weight (s+1).
+        for seg in 0..2usize {
+            let cols: Vec<Vec<WeightCell>> =
+                (0..3).map(|_| cells(&[seg as i32 + 1])).collect();
+            m.load_columns(seg * 3, &cols);
+        }
+        let out = m.segmented_matvec(&[vec![2], vec![3]], 3, 0.5, false);
+        // seg0: 1·2=2 → code 2; seg1: 2·3=6 → code 6; sum 8 × 0.5 = 4.
+        assert_eq!(out, vec![4.0; 3]);
+    }
+
+    #[test]
+    fn ideal_vs_quantized_diverge_beyond_adc_range() {
+        let mut m = CimMacro::new(spec(), 1.0, 1.0);
+        m.load_columns(0, &[cells(&[7; 28])]);
+        let codes = vec![15; 28]; // analog 2940 >> qmax 15
+        let q = m.segmented_matvec(&[codes.clone()], 1, 1.0, false);
+        let ideal = m.ideal_matvec(&[codes], 1, 1.0);
+        assert_eq!(q[0], 15.0); // saturated
+        assert_eq!(ideal[0], 2940.0);
+    }
+
+    #[test]
+    fn reload_accounting() {
+        let mut m = CimMacro::new(spec(), 1.0, 1.0);
+        m.load_columns(0, &[cells(&[1])]);
+        m.load_columns(0, &[cells(&[2])]);
+        assert_eq!(m.stats.reloads, 2);
+        assert_eq!(m.stats.load_cycles, 512);
+    }
+
+    #[test]
+    fn matches_eq7_formula_small_case() {
+        // Hand-computed Eq. 7: Qw·Input = 3·2 + (-2)·5 = -4, S_ADC=2 →
+        // round(-2) = -2 → ·S_W·S_ADC = -2·0.1·2 = -0.4.
+        let mut m = CimMacro::new(spec(), 1.0, 2.0);
+        m.load_columns(0, &[cells(&[3, -2])]);
+        let out = m.segmented_matvec(&[vec![2, 5]], 1, 0.1, false);
+        assert!((out[0] - (-0.4)).abs() < 1e-6, "out={}", out[0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow macro")]
+    fn too_many_columns_rejected() {
+        let mut m = CimMacro::new(spec(), 1.0, 1.0);
+        m.load_columns(200, &vec![cells(&[1]); 100]);
+    }
+}

@@ -1,0 +1,35 @@
+//! Bit-exact digital twin of the paper's multibit CIM macro (Figs. 1–2).
+//!
+//! The physical macro performs analog multiply-accumulate: a 4-bit DAC
+//! drives each activated wordline, 4-bit weight cells multiply onto
+//! bitlines, and 64 rotating 5-bit ADCs digitize per-bitline partial sums,
+//! which an adder tree accumulates and scales by `S_W·S_ADC`.
+//!
+//! This module reproduces that pipeline **in the integer domain**: every
+//! quantization, clip and rounding the silicon performs is applied in the
+//! same order, so training-time simulation (the Pallas kernel, Layer 1)
+//! and serving-time execution (this module, Layer 3) agree bit-for-bit —
+//! verified by the `parity` integration test against vectors emitted by
+//! `python/compile/aot.py`.
+//!
+//! Submodules follow the block diagram:
+//! * [`dac`] — activation quantization to DAC codes,
+//! * [`cell`] — 4-bit signed weight cells on PBL/NBL column pairs,
+//! * [`array`] — wordline-parallel integer MAC per bitline,
+//! * [`adc`] — 5-bit signed conversion with step `S_ADC`,
+//! * [`addertree`] — Fig. 2 digital accumulation + final scaling,
+//! * [`macro_sim`] — the assembled macro with cycle accounting.
+
+pub mod adc;
+pub mod addertree;
+pub mod array;
+pub mod cell;
+pub mod dac;
+pub mod macro_sim;
+
+pub use adc::Adc;
+pub use addertree::AdderTree;
+pub use array::CimArray;
+pub use cell::WeightCell;
+pub use dac::Dac;
+pub use macro_sim::{CimMacro, MacroStats, PassResult};

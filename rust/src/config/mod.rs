@@ -1,0 +1,367 @@
+//! Typed configuration for the whole stack, loadable from JSON files and
+//! overridable from the CLI.
+//!
+//! The hierarchy mirrors the deployment: a [`MacroSpec`] describes the CIM
+//! hardware (Fig. 1), [`MorphConfig`] drives Stage 1, [`QuantConfig`]
+//! drives Stage 2, and [`ServeConfig`] parameterizes the L3 coordinator.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Physical description of one CIM macro (paper Fig. 1: 256×256 array,
+/// 4-bit cells, 4-bit DAC input, 64 rotating 5-bit ADCs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MacroSpec {
+    /// Concurrently activatable wordlines (array rows).
+    pub wordlines: usize,
+    /// Bitlines per macro (array columns).
+    pub bitlines: usize,
+    /// Bits stored per weight cell.
+    pub weight_bits: u32,
+    /// DAC (activation input) precision in bits.
+    pub dac_bits: u32,
+    /// ADC (partial-sum output) precision in bits.
+    pub adc_bits: u32,
+    /// Number of physical ADCs (bitlines/adcs are muxed, Fig. 2).
+    pub num_adcs: usize,
+    /// Cycles to load one full macro of weights (1 row/cycle).
+    pub load_cycles_per_macro: usize,
+}
+
+impl Default for MacroSpec {
+    fn default() -> Self {
+        MacroSpec {
+            wordlines: 256,
+            bitlines: 256,
+            weight_bits: 4,
+            dac_bits: 4,
+            adc_bits: 5,
+            num_adcs: 64,
+            load_cycles_per_macro: 256,
+        }
+    }
+}
+
+impl MacroSpec {
+    /// Max input channels one bitline column accommodates for a k×k kernel
+    /// (paper Eq. 5): `floor(wordlines / k²)`; 28 for 3×3 at 256 WL.
+    pub fn channels_per_bl(&self, kernel: usize) -> usize {
+        self.wordlines / (kernel * kernel)
+    }
+
+    /// Signed weight range for the cell precision: `±(2^(n-1)-1)`.
+    pub fn weight_qrange(&self) -> (i32, i32) {
+        let q = (1i32 << (self.weight_bits - 1)) - 1;
+        (-q, q)
+    }
+
+    /// Signed ADC clipping range `±(2^(n-1)-1)` (paper Eq. 7).
+    pub fn adc_qrange(&self) -> (i32, i32) {
+        let q = (1i32 << (self.adc_bits - 1)) - 1;
+        (-q, q)
+    }
+
+    /// Unsigned activation range for the DAC precision: `[0, 2^n - 1]`.
+    pub fn dac_range(&self) -> (i32, i32) {
+        (0, (1i32 << self.dac_bits) - 1)
+    }
+
+    /// Total weight cells in one macro.
+    pub fn cells(&self) -> usize {
+        self.wordlines * self.bitlines
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("wordlines", self.wordlines)
+            .with("bitlines", self.bitlines)
+            .with("weight_bits", self.weight_bits as usize)
+            .with("dac_bits", self.dac_bits as usize)
+            .with("adc_bits", self.adc_bits as usize)
+            .with("num_adcs", self.num_adcs)
+            .with("load_cycles_per_macro", self.load_cycles_per_macro)
+    }
+
+    pub fn from_json(j: &Json) -> MacroSpec {
+        let d = MacroSpec::default();
+        MacroSpec {
+            wordlines: j.get("wordlines").as_usize().unwrap_or(d.wordlines),
+            bitlines: j.get("bitlines").as_usize().unwrap_or(d.bitlines),
+            weight_bits: j
+                .get("weight_bits")
+                .as_usize()
+                .map(|v| v as u32)
+                .unwrap_or(d.weight_bits),
+            dac_bits: j
+                .get("dac_bits")
+                .as_usize()
+                .map(|v| v as u32)
+                .unwrap_or(d.dac_bits),
+            adc_bits: j
+                .get("adc_bits")
+                .as_usize()
+                .map(|v| v as u32)
+                .unwrap_or(d.adc_bits),
+            num_adcs: j.get("num_adcs").as_usize().unwrap_or(d.num_adcs),
+            load_cycles_per_macro: j
+                .get("load_cycles_per_macro")
+                .as_usize()
+                .unwrap_or(d.load_cycles_per_macro),
+        }
+    }
+}
+
+/// Stage-1 (CIM-aware morphing) parameters (§II-C, §III-A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MorphConfig {
+    /// Target bitline budget (`target_bl` in Eq. 4).
+    pub target_bl: usize,
+    /// Regularization weight λ of Eq. 1 (paper sweeps 3e-8..5e-8).
+    pub lambda: f64,
+    /// BN-γ magnitude below which a filter is pruned.
+    pub gamma_threshold: f64,
+    /// Morphing rounds (paper: converges in ~3).
+    pub rounds: usize,
+    /// Expansion-ratio search step (paper: 0.001).
+    pub ratio_step: f64,
+}
+
+impl Default for MorphConfig {
+    fn default() -> Self {
+        MorphConfig {
+            target_bl: 4096,
+            lambda: 5e-8,
+            gamma_threshold: 1e-2,
+            rounds: 3,
+            ratio_step: 0.001,
+        }
+    }
+}
+
+impl MorphConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("target_bl", self.target_bl)
+            .with("lambda", self.lambda)
+            .with("gamma_threshold", self.gamma_threshold)
+            .with("rounds", self.rounds)
+            .with("ratio_step", self.ratio_step)
+    }
+
+    pub fn from_json(j: &Json) -> MorphConfig {
+        let d = MorphConfig::default();
+        MorphConfig {
+            target_bl: j.get("target_bl").as_usize().unwrap_or(d.target_bl),
+            lambda: j.get("lambda").as_f64().unwrap_or(d.lambda),
+            gamma_threshold: j
+                .get("gamma_threshold")
+                .as_f64()
+                .unwrap_or(d.gamma_threshold),
+            rounds: j.get("rounds").as_usize().unwrap_or(d.rounds),
+            ratio_step: j.get("ratio_step").as_f64().unwrap_or(d.ratio_step),
+        }
+    }
+}
+
+/// Stage-2 (ADC-aware learned scaling) parameters (§II-D).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantConfig {
+    /// Approximate `S_W·S_ADC` by the nearest power of two (digital shift).
+    pub pow2_scale: bool,
+    /// Phase-1 epochs / lr (weight quantization).
+    pub p1_epochs: usize,
+    pub p1_lr: f64,
+    /// Phase-2 epochs / lr (partial-sum quantization; S_W frozen).
+    pub p2_epochs: usize,
+    pub p2_lr: f64,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig {
+            pow2_scale: false,
+            p1_epochs: 100,
+            p1_lr: 1e-3,
+            p2_epochs: 300,
+            p2_lr: 1e-2,
+        }
+    }
+}
+
+impl QuantConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("pow2_scale", self.pow2_scale)
+            .with("p1_epochs", self.p1_epochs)
+            .with("p1_lr", self.p1_lr)
+            .with("p2_epochs", self.p2_epochs)
+            .with("p2_lr", self.p2_lr)
+    }
+
+    pub fn from_json(j: &Json) -> QuantConfig {
+        let d = QuantConfig::default();
+        QuantConfig {
+            pow2_scale: j.get("pow2_scale").as_bool().unwrap_or(d.pow2_scale),
+            p1_epochs: j.get("p1_epochs").as_usize().unwrap_or(d.p1_epochs),
+            p1_lr: j.get("p1_lr").as_f64().unwrap_or(d.p1_lr),
+            p2_epochs: j.get("p2_epochs").as_usize().unwrap_or(d.p2_epochs),
+            p2_lr: j.get("p2_lr").as_f64().unwrap_or(d.p2_lr),
+        }
+    }
+}
+
+/// L3 serving runtime parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Max batch the coordinator forms before dispatch.
+    pub max_batch: usize,
+    /// Batch formation timeout (µs): dispatch a partial batch after this.
+    pub batch_timeout_us: u64,
+    /// Worker threads executing compiled models.
+    pub workers: usize,
+    /// Bounded queue depth; beyond this, requests are rejected (backpressure).
+    pub queue_depth: usize,
+    /// Number of physical macros available to the scheduler.
+    pub num_macros: usize,
+    /// Clock frequency used to convert cycle counts to wall time (MHz).
+    pub clock_mhz: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 8,
+            batch_timeout_us: 2000,
+            workers: 2,
+            queue_depth: 256,
+            num_macros: 16,
+            clock_mhz: 200.0,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("max_batch", self.max_batch)
+            .with("batch_timeout_us", self.batch_timeout_us)
+            .with("workers", self.workers)
+            .with("queue_depth", self.queue_depth)
+            .with("num_macros", self.num_macros)
+            .with("clock_mhz", self.clock_mhz)
+    }
+
+    pub fn from_json(j: &Json) -> ServeConfig {
+        let d = ServeConfig::default();
+        ServeConfig {
+            max_batch: j.get("max_batch").as_usize().unwrap_or(d.max_batch),
+            batch_timeout_us: j
+                .get("batch_timeout_us")
+                .as_usize()
+                .map(|v| v as u64)
+                .unwrap_or(d.batch_timeout_us),
+            workers: j.get("workers").as_usize().unwrap_or(d.workers),
+            queue_depth: j.get("queue_depth").as_usize().unwrap_or(d.queue_depth),
+            num_macros: j.get("num_macros").as_usize().unwrap_or(d.num_macros),
+            clock_mhz: j.get("clock_mhz").as_f64().unwrap_or(d.clock_mhz),
+        }
+    }
+}
+
+/// Top-level config bundle.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub macro_spec: MacroSpec,
+    pub morph: MorphConfig,
+    pub quant: QuantConfig,
+    pub serve: ServeConfig,
+}
+
+impl Config {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("macro", self.macro_spec.to_json())
+            .with("morph", self.morph.to_json())
+            .with("quant", self.quant.to_json())
+            .with("serve", self.serve.to_json())
+    }
+
+    pub fn from_json(j: &Json) -> Config {
+        Config {
+            macro_spec: MacroSpec::from_json(j.get("macro")),
+            morph: MorphConfig::from_json(j.get("morph")),
+            quant: QuantConfig::from_json(j.get("quant")),
+            serve: ServeConfig::from_json(j.get("serve")),
+        }
+    }
+
+    /// Load from a JSON file; missing fields fall back to defaults.
+    pub fn load(path: &Path) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading config {path:?}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+        Ok(Config::from_json(&j))
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_macro_matches_paper() {
+        let m = MacroSpec::default();
+        assert_eq!(m.wordlines, 256);
+        assert_eq!(m.bitlines, 256);
+        assert_eq!(m.channels_per_bl(3), 28); // paper: "up to 28 input channels"
+        assert_eq!(m.weight_qrange(), (-7, 7));
+        assert_eq!(m.adc_qrange(), (-15, 15));
+        assert_eq!(m.dac_range(), (0, 15));
+        assert_eq!(m.cells(), 65536);
+    }
+
+    #[test]
+    fn json_roundtrip_full() {
+        let c = Config::default();
+        let j = c.to_json();
+        let back = Config::from_json(&j);
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = Json::parse(r#"{"macro": {"wordlines": 128}, "morph": {"target_bl": 512}}"#)
+            .unwrap();
+        let c = Config::from_json(&j);
+        assert_eq!(c.macro_spec.wordlines, 128);
+        assert_eq!(c.macro_spec.bitlines, 256); // default
+        assert_eq!(c.morph.target_bl, 512);
+        assert_eq!(c.quant, QuantConfig::default());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("cim_adapt_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        let mut c = Config::default();
+        c.serve.max_batch = 32;
+        c.save(&path).unwrap();
+        let back = Config::load(&path).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn channels_per_bl_other_kernels() {
+        let m = MacroSpec::default();
+        assert_eq!(m.channels_per_bl(1), 256);
+        assert_eq!(m.channels_per_bl(5), 10);
+        assert_eq!(m.channels_per_bl(7), 5);
+    }
+}

@@ -1,0 +1,122 @@
+//! Batch formation: collect requests up to `max_batch`, or dispatch a
+//! partial batch after `batch_timeout` — the standard dynamic-batching
+//! policy of serving systems, here sized against the macro's throughput.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::request::InferRequest;
+
+/// Batch-formation policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub timeout: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, timeout_us: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_batch: max_batch.max(1),
+            timeout: Duration::from_micros(timeout_us),
+        }
+    }
+}
+
+/// Pulls requests from a channel and forms batches.
+pub struct Batcher {
+    rx: mpsc::Receiver<InferRequest>,
+    policy: BatchPolicy,
+}
+
+impl Batcher {
+    pub fn new(rx: mpsc::Receiver<InferRequest>, policy: BatchPolicy) -> Batcher {
+        Batcher { rx, policy }
+    }
+
+    /// Block for the next batch. Returns `None` when the channel is closed
+    /// and drained (server shutdown).
+    pub fn next_batch(&self) -> Option<Vec<InferRequest>> {
+        // Block for the first request.
+        let first = self.rx.recv().ok()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.policy.timeout;
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn req(id: u64) -> InferRequest {
+        let (tx, _rx) = mpsc::channel();
+        InferRequest {
+            id,
+            image: vec![0.0; 4],
+            enqueued: Instant::now(),
+            respond: tx,
+        }
+    }
+
+    #[test]
+    fn fills_to_max_batch() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(req(i)).unwrap();
+        }
+        let b = Batcher::new(rx, BatchPolicy::new(4, 10_000));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].id, 0);
+        let batch2 = b.next_batch().unwrap();
+        assert_eq!(batch2.len(), 4);
+        assert_eq!(batch2[0].id, 4);
+    }
+
+    #[test]
+    fn partial_batch_on_timeout() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(1)).unwrap();
+        tx.send(req(2)).unwrap();
+        let b = Batcher::new(rx, BatchPolicy::new(8, 5_000));
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn none_when_closed() {
+        let (tx, rx) = mpsc::channel::<InferRequest>();
+        drop(tx);
+        let b = Batcher::new(rx, BatchPolicy::new(4, 1000));
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn late_arrivals_join_until_deadline() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(1)).unwrap();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(2));
+            let _ = tx.send(req(2));
+        });
+        let b = Batcher::new(rx, BatchPolicy::new(8, 50_000));
+        let batch = b.next_batch().unwrap();
+        handle.join().unwrap();
+        assert_eq!(batch.len(), 2, "late arrival should join the batch");
+    }
+}

@@ -1,0 +1,183 @@
+//! Serving metrics: counters + latency distribution.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Latency statistics over recorded samples (µs).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl LatencyStats {
+    fn from_samples(mut xs: Vec<u64>) -> LatencyStats {
+        if xs.is_empty() {
+            return LatencyStats::default();
+        }
+        xs.sort_unstable();
+        let n = xs.len();
+        let pick = |q: f64| xs[((n as f64 * q) as usize).min(n - 1)];
+        LatencyStats {
+            count: n,
+            mean_us: xs.iter().sum::<u64>() as f64 / n as f64,
+            p50_us: pick(0.50),
+            p95_us: pick(0.95),
+            p99_us: pick(0.99),
+            max_us: *xs.last().unwrap(),
+        }
+    }
+}
+
+/// Point-in-time view of the server's counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub device_cycles: u64,
+    pub weight_reloads: u64,
+    pub latency: LatencyStats,
+    pub throughput_rps: f64,
+    pub elapsed_s: f64,
+}
+
+struct Inner {
+    submitted: u64,
+    completed: u64,
+    rejected: u64,
+    batches: u64,
+    batch_total: u64,
+    device_cycles: u64,
+    weight_reloads: u64,
+    latencies_us: Vec<u64>,
+    started: Instant,
+}
+
+/// Thread-safe metrics collector shared across workers.
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            inner: Mutex::new(Inner {
+                submitted: 0,
+                completed: 0,
+                rejected: 0,
+                batches: 0,
+                batch_total: 0,
+                device_cycles: 0,
+                weight_reloads: 0,
+                latencies_us: Vec::with_capacity(4096),
+                started: Instant::now(),
+            }),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn on_submit(&self) {
+        self.inner.lock().unwrap().submitted += 1;
+    }
+
+    pub fn on_reject(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn on_batch(&self, batch_size: usize, device_cycles: u64, reloads: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_total += batch_size as u64;
+        g.device_cycles += device_cycles;
+        g.weight_reloads += reloads;
+    }
+
+    pub fn on_complete(&self, latency_us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.completed += 1;
+        // Cap memory: keep the most recent 100k samples.
+        if g.latencies_us.len() >= 100_000 {
+            g.latencies_us.remove(0);
+        }
+        g.latencies_us.push(latency_us);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let elapsed = g.started.elapsed().as_secs_f64();
+        MetricsSnapshot {
+            submitted: g.submitted,
+            completed: g.completed,
+            rejected: g.rejected,
+            batches: g.batches,
+            mean_batch: if g.batches > 0 {
+                g.batch_total as f64 / g.batches as f64
+            } else {
+                0.0
+            },
+            device_cycles: g.device_cycles,
+            weight_reloads: g.weight_reloads,
+            latency: LatencyStats::from_samples(g.latencies_us.clone()),
+            throughput_rps: if elapsed > 0.0 {
+                g.completed as f64 / elapsed
+            } else {
+                0.0
+            },
+            elapsed_s: elapsed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.on_submit();
+        }
+        m.on_reject();
+        m.on_batch(4, 1000, 2);
+        m.on_batch(8, 2000, 0);
+        for i in 0..12u64 {
+            m.on_complete(100 + i);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 10);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.mean_batch, 6.0);
+        assert_eq!(s.device_cycles, 3000);
+        assert_eq!(s.weight_reloads, 2);
+        assert_eq!(s.latency.count, 12);
+        assert!(s.latency.p50_us >= 100);
+        assert!(s.latency.max_us == 111);
+    }
+
+    #[test]
+    fn empty_latency_stats() {
+        let s = LatencyStats::from_samples(vec![]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99_us, 0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let s = LatencyStats::from_samples((0..1000).collect());
+        assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us && s.p99_us <= s.max_us);
+    }
+}

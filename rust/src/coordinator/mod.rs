@@ -1,0 +1,30 @@
+//! Layer-3 edge-serving coordinator.
+//!
+//! The deployment story the paper's title promises: the adapted model,
+//! AOT-compiled to a PJRT executable, served on an edge device whose
+//! accelerator is the CIM macro array. Rust owns the whole request path:
+//!
+//! ```text
+//! submit → bounded queue → batcher (size/timeout policy) → worker pool
+//!        → PJRT execute (the XLA-compiled quantized model)
+//!        → macro scheduler (cycle-accurate CIM cost: reloads + passes)
+//!        → response + metrics
+//! ```
+//!
+//! Two execution backends share the scheduler:
+//! * [`server::EdgeServer`] — real inference through [`crate::runtime`],
+//! * the same server in **sim-only** mode (no artifacts needed) where the
+//!   digital twin provides deterministic per-batch latency; used by the
+//!   serving benches and tests.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
+pub use request::{InferRequest, InferResponse, RequestId, Ticket};
+pub use scheduler::{InferencePlan, MacroScheduler};
+pub use server::{EdgeServer, ServerHandle};

@@ -1,0 +1,83 @@
+//! Request/response types flowing through the coordinator.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Monotonic request identifier.
+pub type RequestId = u64;
+
+/// One inference request: a CHW image plus response plumbing.
+pub struct InferRequest {
+    pub id: RequestId,
+    pub image: Vec<f32>,
+    pub enqueued: Instant,
+    pub respond: mpsc::Sender<InferResponse>,
+}
+
+/// The answer delivered to the submitter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferResponse {
+    pub id: RequestId,
+    /// Argmax class.
+    pub class: usize,
+    /// Raw logits (num_classes).
+    pub logits: Vec<f32>,
+    /// Wall-clock time from submit to completion (µs).
+    pub latency_us: u64,
+    /// Device-model latency: CIM cycles this request's share of the batch
+    /// consumed (compute + amortized weight reloads).
+    pub device_cycles: u64,
+    /// Batch size this request was served in.
+    pub batch_size: usize,
+}
+
+/// Handle returned by `submit`: await the response on it.
+pub struct Ticket {
+    pub id: RequestId,
+    pub rx: mpsc::Receiver<InferResponse>,
+}
+
+impl Ticket {
+    /// Block until the response arrives.
+    pub fn wait(self) -> anyhow::Result<InferResponse> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped request {}", self.id))
+    }
+
+    /// Wait with a timeout.
+    pub fn wait_timeout(self, d: std::time::Duration) -> anyhow::Result<InferResponse> {
+        self.rx
+            .recv_timeout(d)
+            .map_err(|e| anyhow::anyhow!("request {}: {e}", self.id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ticket_roundtrip() {
+        let (tx, rx) = mpsc::channel();
+        let t = Ticket { id: 7, rx };
+        let resp = InferResponse {
+            id: 7,
+            class: 3,
+            logits: vec![0.0; 10],
+            latency_us: 42,
+            device_cycles: 100,
+            batch_size: 4,
+        };
+        tx.send(resp.clone()).unwrap();
+        assert_eq!(t.wait().unwrap(), resp);
+    }
+
+    #[test]
+    fn ticket_errors_when_sender_dropped() {
+        let (tx, rx) = mpsc::channel::<InferResponse>();
+        drop(tx);
+        let t = Ticket { id: 1, rx };
+        assert!(t.wait().is_err());
+    }
+}

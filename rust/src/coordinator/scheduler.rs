@@ -1,0 +1,181 @@
+//! CIM macro scheduler: plans a model's layer executions over a limited
+//! set of physical macros, accounting for weight reloads — the latency
+//! effect the paper's Stage-1 morphing exists to minimize.
+//!
+//! The mapping (`mapping::pack_model`) assigns every layer's columns to a
+//! sequence of *logical* macros. The device has `num_macros` *physical*
+//! macros; if the model needs more, logical macros are paged in on demand
+//! (LRU), each page-in costing a full weight-load (256 cycles). The
+//! per-inference compute cycles come from the calibrated cost model, so a
+//! morphed model's plan reproduces the Tables III–V latency columns.
+
+use std::collections::VecDeque;
+
+use crate::config::MacroSpec;
+use crate::latency::ModelCost;
+use crate::mapping::ModelMapping;
+
+/// The static execution plan for one inference.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferencePlan {
+    /// Compute cycles for one image through all conv layers.
+    pub compute_cycles: u64,
+    /// Logical macros the model occupies.
+    pub logical_macros: usize,
+    /// Physical macros available.
+    pub physical_macros: usize,
+    /// Weight-load cycles on a cold start (every logical macro loaded).
+    pub cold_load_cycles: u64,
+    /// Reload events incurred by ONE inference when the model does not
+    /// fit residently (steady state, LRU paging over the layer sequence).
+    pub reloads_per_inference: u64,
+    /// Cycles of those reloads.
+    pub reload_cycles_per_inference: u64,
+}
+
+impl InferencePlan {
+    /// Steady-state device cycles for a batch of `n` images: reloads are
+    /// paid once per pass through the layer sequence (weights stay put
+    /// while the batch streams), compute scales with n.
+    pub fn batch_cycles(&self, n: usize) -> u64 {
+        self.compute_cycles * n as u64 + self.reload_cycles_per_inference
+    }
+
+    /// Device wall time for a batch at `clock_mhz`.
+    pub fn batch_seconds(&self, n: usize, clock_mhz: f64) -> f64 {
+        self.batch_cycles(n) as f64 / (clock_mhz * 1e6)
+    }
+}
+
+/// Scheduler over a model mapping.
+pub struct MacroScheduler {
+    pub plan: InferencePlan,
+}
+
+impl MacroScheduler {
+    /// Build the plan for `mapping` + `cost` on a device with
+    /// `num_macros` physical macros.
+    pub fn new(
+        mapping: &ModelMapping,
+        cost: &ModelCost,
+        spec: &MacroSpec,
+        num_macros: usize,
+    ) -> MacroScheduler {
+        let logical = mapping.num_macros;
+        let physical = num_macros.max(1);
+        let load_per_macro = spec.load_cycles_per_macro as u64;
+
+        // Simulate one inference's macro-access sequence under LRU to
+        // count steady-state page-ins. Layers execute in order; each
+        // touches its logical macros in ascending order.
+        let mut reloads = 0u64;
+        if logical > physical {
+            let mut lru: VecDeque<usize> = VecDeque::new();
+            // Warm cache = the state left by the previous inference; run
+            // the sequence twice and count the second pass.
+            for pass in 0..2 {
+                for lm in &mapping.layers {
+                    let first = lm.bl_start / spec.bitlines;
+                    let last = (lm.bl_start + lm.bl_count - 1) / spec.bitlines;
+                    for mac in first..=last {
+                        if let Some(pos) = lru.iter().position(|&m| m == mac) {
+                            lru.remove(pos);
+                            lru.push_back(mac);
+                        } else {
+                            if lru.len() == physical {
+                                lru.pop_front();
+                            }
+                            lru.push_back(mac);
+                            if pass == 1 {
+                                reloads += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        MacroScheduler {
+            plan: InferencePlan {
+                compute_cycles: cost.computing_latency as u64,
+                logical_macros: logical,
+                physical_macros: physical,
+                cold_load_cycles: logical as u64 * load_per_macro,
+                reloads_per_inference: reloads,
+                reload_cycles_per_inference: reloads * load_per_macro,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vgg9;
+    use crate::latency::model_cost;
+    use crate::mapping::pack_model;
+
+    fn setup(scale: f64, num_macros: usize) -> InferencePlan {
+        let spec = MacroSpec::default();
+        let arch = vgg9().scaled(scale);
+        let mapping = pack_model(&arch, &spec);
+        let cost = model_cost(&arch, &spec);
+        MacroScheduler::new(&mapping, &cost, &spec, num_macros).plan
+    }
+
+    #[test]
+    fn resident_model_never_reloads() {
+        let plan = setup(0.125, 16);
+        assert!(plan.logical_macros <= 16);
+        assert_eq!(plan.reloads_per_inference, 0);
+        assert_eq!(plan.batch_cycles(4), plan.compute_cycles * 4);
+    }
+
+    #[test]
+    fn oversubscribed_model_pages() {
+        // Full VGG9 needs 151 macros; with 8 physical, every inference
+        // reloads every macro (working set >> cache).
+        let plan = setup(1.0, 8);
+        assert_eq!(plan.logical_macros, 151);
+        assert_eq!(plan.reloads_per_inference, 151);
+        assert_eq!(
+            plan.reload_cycles_per_inference,
+            151 * 256
+        );
+    }
+
+    #[test]
+    fn paper_load_latency_reproduced_when_single_macro() {
+        // The paper's "Load Weight Latency" = cold load of all logical
+        // macros: ceil(38592/256)·256 = 38656 for baseline VGG9.
+        let plan = setup(1.0, 1);
+        assert_eq!(plan.cold_load_cycles, 38_656);
+        assert_eq!(plan.compute_cycles, 14_696);
+    }
+
+    #[test]
+    fn batch_amortizes_reloads() {
+        let plan = setup(1.0, 8);
+        let per_image_b1 = plan.batch_cycles(1) as f64;
+        let per_image_b8 = plan.batch_cycles(8) as f64 / 8.0;
+        assert!(per_image_b8 < per_image_b1 * 0.6, "batching should amortize reloads");
+    }
+
+    #[test]
+    fn more_physical_macros_never_hurt() {
+        let mut prev = u64::MAX;
+        for n in [1usize, 4, 16, 64, 151] {
+            let plan = setup(1.0, n);
+            assert!(plan.reload_cycles_per_inference <= prev);
+            prev = plan.reload_cycles_per_inference;
+        }
+        assert_eq!(setup(1.0, 151).reloads_per_inference, 0);
+    }
+
+    #[test]
+    fn batch_seconds_scales_with_clock() {
+        let plan = setup(0.125, 16);
+        let slow = plan.batch_seconds(1, 100.0);
+        let fast = plan.batch_seconds(1, 200.0);
+        assert!((slow / fast - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,453 @@
+//! The edge server: bounded queue → batcher → workers → PJRT/sim backend.
+//!
+//! The `xla` crate's PJRT client is not `Send` (it wraps `Rc` + raw
+//! pointers), so the server hands each worker thread a [`Backend`]
+//! *factory*: every worker constructs its own client + executables inside
+//! the thread and keeps them for its lifetime. Compilation cost is paid
+//! once per worker at startup; the request path never crosses a thread
+//! boundary with PJRT state.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batcher::BatchPolicy;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::request::{InferRequest, InferResponse, Ticket};
+use super::scheduler::{InferencePlan, MacroScheduler};
+use crate::config::ServeConfig;
+use crate::latency::model_cost;
+use crate::mapping::pack_model;
+use crate::runtime::{ArtifactMeta, ModelRuntime};
+
+/// Backend factory: how each worker obtains its execution engine.
+#[derive(Clone)]
+pub enum Backend {
+    /// Compiled artifact (the production path): each worker loads the
+    /// artifact into its own PJRT client.
+    Pjrt {
+        artifact_dir: PathBuf,
+        model: String,
+    },
+    /// Sim-only: classify via a trivial deterministic rule; lets serving
+    /// tests/benches run without built artifacts.
+    Sim { num_classes: usize },
+}
+
+impl Backend {
+    /// Artifact metadata when applicable (validates before spawn).
+    fn meta(&self) -> Result<Option<ArtifactMeta>> {
+        match self {
+            Backend::Pjrt { artifact_dir, model } => Ok(Some(ArtifactMeta::load(
+                &artifact_dir.join(format!("{model}_meta.json")),
+            )?)),
+            Backend::Sim { .. } => Ok(None),
+        }
+    }
+}
+
+/// Per-worker instantiated engine.
+enum Engine {
+    Pjrt(ModelRuntime),
+    Sim { num_classes: usize },
+}
+
+impl Engine {
+    fn build(backend: &Backend) -> Result<Engine> {
+        match backend {
+            Backend::Pjrt { artifact_dir, model } => Ok(Engine::Pjrt(
+                // Serving variants only: skips demo exports (pallas_b1)
+                // whose compile time would stall worker startup.
+                ModelRuntime::load_serving(artifact_dir, model)?,
+            )),
+            Backend::Sim { num_classes } => Ok(Engine::Sim {
+                num_classes: *num_classes,
+            }),
+        }
+    }
+
+    fn num_classes(&self) -> usize {
+        match self {
+            Engine::Pjrt(rt) => rt.meta.num_classes,
+            Engine::Sim { num_classes } => *num_classes,
+        }
+    }
+}
+
+/// The server: owns worker threads; submit via [`ServerHandle`].
+pub struct EdgeServer;
+
+/// Submission handle (thread-safe).
+pub struct ServerHandle {
+    tx: Mutex<Option<mpsc::Sender<InferRequest>>>,
+    next_id: AtomicU64,
+    depth: Arc<AtomicU64>,
+    queue_limit: u64,
+    pub metrics: Arc<Metrics>,
+    pub plan: InferencePlan,
+    workers: Mutex<Vec<thread::JoinHandle<()>>>,
+    accepting: AtomicBool,
+    image_len: usize,
+}
+
+impl EdgeServer {
+    /// Start serving. The CIM execution plan is derived from `arch` (the
+    /// morphed architecture being served) and `spec` (the macro).
+    pub fn start(
+        cfg: &ServeConfig,
+        backend: Backend,
+        arch: &crate::arch::ModelArch,
+        spec: &crate::config::MacroSpec,
+    ) -> Arc<ServerHandle> {
+        let mapping = pack_model(arch, spec);
+        let cost = model_cost(arch, spec);
+        let plan = MacroScheduler::new(&mapping, &cost, spec, cfg.num_macros).plan;
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel::<InferRequest>();
+        let rx = Arc::new(Mutex::new(rx));
+        let depth = Arc::new(AtomicU64::new(0));
+        let image_len = match backend.meta() {
+            Ok(Some(meta)) => meta.image_len(),
+            _ => 3 * 32 * 32,
+        };
+
+        let mut workers = Vec::new();
+        let (ready_tx, ready_rx) = mpsc::channel::<bool>();
+        for wid in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let backend = backend.clone();
+            let metrics = Arc::clone(&metrics);
+            let depth = Arc::clone(&depth);
+            let policy = BatchPolicy::new(cfg.max_batch, cfg.batch_timeout_us);
+            let plan = plan.clone();
+            let ready_tx = ready_tx.clone();
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("cim-serve-{wid}"))
+                    .spawn(move || {
+                        // Engine construction (PJRT compile) happens before
+                        // readiness is signalled, so start() returns a warm
+                        // server and first-request latency excludes
+                        // compilation (§Perf iteration 4).
+                        let engine = match Engine::build(&backend) {
+                            Ok(e) => e,
+                            Err(e) => {
+                                log::error!("worker {wid}: backend init failed: {e:#}");
+                                let _ = ready_tx.send(false);
+                                return;
+                            }
+                        };
+                        let _ = ready_tx.send(true);
+                        worker_loop(rx, engine, metrics, depth, policy, plan)
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        drop(ready_tx);
+        // Wait for every worker's engine (failures are logged; a server
+        // whose workers all failed still returns — submits then error).
+        for _ in 0..workers.len() {
+            let _ = ready_rx.recv();
+        }
+        Arc::new(ServerHandle {
+            tx: Mutex::new(Some(tx)),
+            next_id: AtomicU64::new(1),
+            depth,
+            queue_limit: cfg.queue_depth as u64,
+            metrics,
+            plan,
+            workers: Mutex::new(workers),
+            accepting: AtomicBool::new(true),
+            image_len,
+        })
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<mpsc::Receiver<InferRequest>>>,
+    engine: Engine,
+    metrics: Arc<Metrics>,
+    depth: Arc<AtomicU64>,
+    policy: BatchPolicy,
+    plan: InferencePlan,
+) {
+    loop {
+        // Form a batch while holding the receiver (workers alternate).
+        //
+        // Greedy-then-wait policy: drain whatever is already queued
+        // without blocking (lone requests dispatch immediately instead of
+        // eating the batch timeout — §Perf iteration 2), and only wait
+        // out the timeout when a batch has started forming under load.
+        let batch = {
+            let guard = rx.lock().unwrap();
+            let first = match guard.recv() {
+                Ok(r) => r,
+                Err(_) => return,
+            };
+            let mut batch = vec![first];
+            while batch.len() < policy.max_batch {
+                match guard.try_recv() {
+                    Ok(r) => batch.push(r),
+                    Err(_) => break,
+                }
+            }
+            if batch.len() > 1 && batch.len() < policy.max_batch {
+                // Load present: give concurrent arrivals the window.
+                let deadline = Instant::now() + policy.timeout;
+                while batch.len() < policy.max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match guard.recv_timeout(deadline - now) {
+                        Ok(r) => batch.push(r),
+                        Err(_) => break,
+                    }
+                }
+            }
+            batch
+        };
+        depth.fetch_sub(batch.len() as u64, Ordering::AcqRel);
+        let n = batch.len();
+
+        let (classes, logits_all) = match execute(&engine, &batch) {
+            Ok(x) => x,
+            Err(e) => {
+                log::error!("batch execution failed: {e:#}");
+                continue; // requests drop; Ticket::wait errors out.
+            }
+        };
+
+        let device_cycles = plan.batch_cycles(n);
+        metrics.on_batch(n, device_cycles, plan.reloads_per_inference);
+        let per_req_cycles = device_cycles / n as u64;
+        let k = engine.num_classes();
+        for (i, req) in batch.into_iter().enumerate() {
+            let latency_us = req.enqueued.elapsed().as_micros() as u64;
+            metrics.on_complete(latency_us);
+            let _ = req.respond.send(InferResponse {
+                id: req.id,
+                class: classes[i],
+                logits: logits_all[i * k..(i + 1) * k].to_vec(),
+                latency_us,
+                device_cycles: per_req_cycles,
+                batch_size: n,
+            });
+        }
+    }
+}
+
+fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+fn execute(engine: &Engine, batch: &[InferRequest]) -> Result<(Vec<usize>, Vec<f32>)> {
+    match engine {
+        Engine::Pjrt(rt) => {
+            // Greedily cover the batch with the largest compiled variants.
+            let k = rt.meta.num_classes;
+            let mut classes = Vec::with_capacity(batch.len());
+            let mut logits = Vec::with_capacity(batch.len() * k);
+            let mut i = 0;
+            while i < batch.len() {
+                let remaining = batch.len() - i;
+                let (variant, b) = rt
+                    .best_batch_variant(remaining)
+                    .ok_or_else(|| anyhow::anyhow!("no batch variant available"))?;
+                let mut images = Vec::with_capacity(b * rt.meta.image_len());
+                for req in &batch[i..i + b] {
+                    images.extend_from_slice(&req.image);
+                }
+                let out = rt.infer(variant, &images)?;
+                for row in out.chunks(k) {
+                    classes.push(argmax(row));
+                    logits.extend_from_slice(row);
+                }
+                i += b;
+            }
+            Ok((classes, logits))
+        }
+        Engine::Sim { num_classes } => {
+            // Deterministic stand-in: per-class sums over image chunks.
+            let k = *num_classes;
+            let mut classes = Vec::with_capacity(batch.len());
+            let mut logits = Vec::with_capacity(batch.len() * k);
+            for req in batch {
+                let n = req.image.len().max(1);
+                let mut sums = vec![0.0f32; k];
+                for (i, v) in req.image.iter().enumerate() {
+                    sums[(i * k / n).min(k - 1)] += v;
+                }
+                classes.push(argmax(&sums));
+                logits.extend_from_slice(&sums);
+            }
+            Ok((classes, logits))
+        }
+    }
+}
+
+impl ServerHandle {
+    /// Submit an image; rejects when the queue is full (backpressure).
+    pub fn submit(&self, image: Vec<f32>) -> Result<Ticket> {
+        anyhow::ensure!(
+            self.accepting.load(Ordering::Acquire),
+            "server shutting down"
+        );
+        anyhow::ensure!(
+            image.len() == self.image_len,
+            "image must be {} floats, got {}",
+            self.image_len,
+            image.len()
+        );
+        let cur = self.depth.load(Ordering::Acquire);
+        if cur >= self.queue_limit {
+            self.metrics.on_reject();
+            anyhow::bail!("queue full ({cur} pending)");
+        }
+        self.metrics.on_submit();
+        self.depth.fetch_add(1, Ordering::AcqRel);
+        let id = self.next_id.fetch_add(1, Ordering::AcqRel);
+        let (rtx, rrx) = mpsc::channel();
+        let req = InferRequest {
+            id,
+            image,
+            enqueued: Instant::now(),
+            respond: rtx,
+        };
+        let guard = self.tx.lock().unwrap();
+        guard
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("server stopped"))?
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(Ticket { id, rx: rrx })
+    }
+
+    /// Stop accepting, drain workers, return the final metrics.
+    pub fn shutdown(&self) -> MetricsSnapshot {
+        self.accepting.store(false, Ordering::Release);
+        // Dropping the sender ends the worker loops once drained.
+        *self.tx.lock().unwrap() = None;
+        let mut workers = self.workers.lock().unwrap();
+        for w in workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vgg9;
+    use crate::config::MacroSpec;
+
+    fn sim_server(cfg: ServeConfig) -> Arc<ServerHandle> {
+        let arch = vgg9().scaled(0.125);
+        EdgeServer::start(
+            &cfg,
+            Backend::Sim { num_classes: 10 },
+            &arch,
+            &MacroSpec::default(),
+        )
+    }
+
+    #[test]
+    fn serves_and_shuts_down() {
+        let h = sim_server(ServeConfig {
+            workers: 2,
+            max_batch: 4,
+            batch_timeout_us: 500,
+            ..ServeConfig::default()
+        });
+        let mut tickets = Vec::new();
+        for _ in 0..20 {
+            tickets.push(h.submit(vec![0.5; 3072]).unwrap());
+        }
+        for t in tickets {
+            let r = t.wait().unwrap();
+            assert!(r.class < 10);
+            assert!(r.batch_size >= 1);
+            assert!(r.device_cycles > 0);
+        }
+        let m = h.shutdown();
+        assert_eq!(m.completed, 20);
+        assert_eq!(m.submitted, 20);
+        assert!(m.mean_batch >= 1.0);
+    }
+
+    #[test]
+    fn rejects_wrong_image_size() {
+        let h = sim_server(ServeConfig::default());
+        assert!(h.submit(vec![0.0; 5]).is_err());
+        h.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // Tiny queue with a single worker ⇒ a fast submitter overruns it.
+        let h = sim_server(ServeConfig {
+            workers: 1,
+            max_batch: 1,
+            batch_timeout_us: 1,
+            queue_depth: 4,
+            ..ServeConfig::default()
+        });
+        let mut rejected = 0u64;
+        let mut tickets = Vec::new();
+        for _ in 0..500 {
+            match h.submit(vec![0.1; 3072]) {
+                Ok(t) => tickets.push(t),
+                Err(_) => rejected += 1,
+            }
+        }
+        for t in tickets {
+            let _ = t.wait();
+        }
+        let m = h.shutdown();
+        assert_eq!(m.rejected, rejected);
+        assert!(rejected > 0, "expected backpressure rejections");
+    }
+
+    #[test]
+    fn batching_aggregates_under_load() {
+        let h = sim_server(ServeConfig {
+            workers: 1,
+            max_batch: 8,
+            batch_timeout_us: 3000,
+            ..ServeConfig::default()
+        });
+        let tickets: Vec<_> = (0..32)
+            .map(|_| h.submit(vec![0.2; 3072]).unwrap())
+            .collect();
+        let mut max_batch_seen = 0;
+        for t in tickets {
+            max_batch_seen = max_batch_seen.max(t.wait().unwrap().batch_size);
+        }
+        let m = h.shutdown();
+        assert!(
+            max_batch_seen > 1,
+            "expected some batching, mean={}",
+            m.mean_batch
+        );
+    }
+
+    #[test]
+    fn sim_classifier_is_deterministic() {
+        let h = sim_server(ServeConfig::default());
+        let img = crate::data::SynthCifar::sample(4, 9);
+        let a = h.submit(img.data.clone()).unwrap().wait().unwrap();
+        let b = h.submit(img.data).unwrap().wait().unwrap();
+        assert_eq!(a.class, b.class);
+        assert_eq!(a.logits, b.logits);
+        h.shutdown();
+    }
+}

@@ -1,0 +1,13 @@
+//! Input data for the serving path and benchmarks.
+//!
+//! The paper evaluates on CIFAR-10, which is not available offline; the
+//! substitution (DESIGN.md §5) is **SynthCIFAR**: a deterministic
+//! 10-class 32×32×3 distribution of class-conditioned oriented sinusoid
+//! textures + per-class color bias + noise. The identical generator
+//! exists in python (`python/compile/data.py`) — same formula, same
+//! constants — so the model trained in JAX and the inputs generated in
+//! Rust for serving come from the same distribution.
+
+pub mod synth;
+
+pub use synth::{SynthCifar, Image, IMAGE_DIM, NUM_CLASSES};

@@ -1,0 +1,175 @@
+//! SynthCIFAR — deterministic synthetic 10-class image distribution.
+//!
+//! Sample `(class c, index i)` is generated closed-form (no sequential
+//! RNG), so Rust and Python produce **bit-identical** images:
+//!
+//! ```text
+//! tex(y,x)   = 0.5 + 0.25·sin(fx·x + fy·y + φ)        class-tuned grating
+//! pixel      = clip(tex + color_bias[c][ch] + 0.08·η)  η = hash noise
+//! ```
+//!
+//! with `fx, fy, φ` functions of `(c, i)` and `η ∈ [-1,1)` from a
+//! SplitMix64 hash of `(i, c, y, x, ch)`. The python twin lives in
+//! `python/compile/data.py`; the parity unit test pins several pixels to
+//! literal values both sides assert on.
+
+pub const IMAGE_DIM: usize = 32;
+pub const NUM_CLASSES: usize = 10;
+const CHANNELS: usize = 3;
+const NOISE_AMP: f32 = 0.08;
+
+/// One CHW float image in [0,1].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Image {
+    /// CHW layout: `data[ch][y][x]` flattened.
+    pub data: Vec<f32>,
+    pub label: usize,
+}
+
+impl Image {
+    pub fn pixel(&self, ch: usize, y: usize, x: usize) -> f32 {
+        self.data[(ch * IMAGE_DIM + y) * IMAGE_DIM + x]
+    }
+}
+
+/// Per-class RGB bias (matches python `CLASS_COLOR`).
+const CLASS_COLOR: [[f32; 3]; NUM_CLASSES] = [
+    [0.15, -0.05, -0.10],
+    [-0.10, 0.15, -0.05],
+    [-0.05, -0.10, 0.15],
+    [0.12, 0.12, -0.12],
+    [-0.12, 0.12, 0.12],
+    [0.12, -0.12, 0.12],
+    [0.18, 0.00, 0.00],
+    [0.00, 0.18, 0.00],
+    [0.00, 0.00, 0.18],
+    [-0.15, -0.15, -0.15],
+];
+
+#[inline]
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Hash noise in [-1, 1).
+#[inline]
+fn eta(i: u64, c: u64, y: u64, x: u64, ch: u64) -> f32 {
+    let key = i
+        .wrapping_mul(1_000_003)
+        .wrapping_add(c.wrapping_mul(10_007))
+        .wrapping_add(y.wrapping_mul(1_009))
+        .wrapping_add(x.wrapping_mul(101))
+        .wrapping_add(ch);
+    let h = splitmix64(key);
+    // Top 24 bits → [0,1) → [-1,1).
+    ((h >> 40) as f32) * (1.0 / (1u64 << 24) as f32) * 2.0 - 1.0
+}
+
+/// The dataset generator.
+#[derive(Debug, Clone, Copy)]
+pub struct SynthCifar;
+
+impl SynthCifar {
+    /// Generate sample `index` of class `class`.
+    pub fn sample(class: usize, index: u64) -> Image {
+        assert!(class < NUM_CLASSES);
+        let c = class as f32;
+        let fx = 0.20 + 0.15 * c;
+        let fy = 0.30 + 0.10 * ((class * 7) % NUM_CLASSES) as f32;
+        let phase = 0.70 * (index % 64) as f32;
+        let mut data = vec![0.0f32; CHANNELS * IMAGE_DIM * IMAGE_DIM];
+        for ch in 0..CHANNELS {
+            let bias = CLASS_COLOR[class][ch];
+            for y in 0..IMAGE_DIM {
+                for x in 0..IMAGE_DIM {
+                    let tex = 0.5 + 0.25 * (fx * x as f32 + fy * y as f32 + phase).sin();
+                    let n = NOISE_AMP
+                        * eta(index, class as u64, y as u64, x as u64, ch as u64);
+                    let v = (tex + bias + n).clamp(0.0, 1.0);
+                    data[(ch * IMAGE_DIM + y) * IMAGE_DIM + x] = v;
+                }
+            }
+        }
+        Image {
+            data,
+            label: class,
+        }
+    }
+
+    /// A batch cycling through classes: sample k has class k % 10.
+    pub fn batch(start_index: u64, n: usize) -> Vec<Image> {
+        (0..n)
+            .map(|k| {
+                let idx = start_index + k as u64;
+                SynthCifar::sample((idx % NUM_CLASSES as u64) as usize, idx / NUM_CLASSES as u64)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = SynthCifar::sample(3, 17);
+        let b = SynthCifar::sample(3, 17);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pixels_in_unit_range() {
+        for class in 0..NUM_CLASSES {
+            let img = SynthCifar::sample(class, 5);
+            assert!(img.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            assert_eq!(img.data.len(), 3 * 32 * 32);
+            assert_eq!(img.label, class);
+        }
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Mean channel intensity should differ across classes by more than
+        // the noise floor — otherwise nothing is learnable.
+        let mean = |img: &Image, ch: usize| {
+            (0..IMAGE_DIM)
+                .flat_map(|y| (0..IMAGE_DIM).map(move |x| (y, x)))
+                .map(|(y, x)| img.pixel(ch, y, x))
+                .sum::<f32>()
+                / (IMAGE_DIM * IMAGE_DIM) as f32
+        };
+        let m6 = mean(&SynthCifar::sample(6, 0), 0); // red-biased class
+        let m9 = mean(&SynthCifar::sample(9, 0), 0); // dark class
+        assert!(m6 - m9 > 0.15, "m6={m6} m9={m9}");
+    }
+
+    #[test]
+    fn batch_cycles_classes() {
+        let b = SynthCifar::batch(0, 25);
+        assert_eq!(b.len(), 25);
+        for (k, img) in b.iter().enumerate() {
+            assert_eq!(img.label, k % NUM_CLASSES);
+        }
+    }
+
+    /// Python parity pin: `python/tests/test_data.py` asserts these same
+    /// literals. If either side changes the formula, both tests break.
+    #[test]
+    fn parity_pins() {
+        let img = SynthCifar::sample(0, 0);
+        let p0 = img.pixel(0, 0, 0);
+        let p1 = img.pixel(1, 7, 19);
+        let p2 = img.pixel(2, 31, 31);
+        // Recompute here so the pin is explicit about the formula.
+        let expect0 = (0.5 + 0.25 * (0.0f32).sin() + 0.15 + 0.08 * eta(0, 0, 0, 0, 0))
+            .clamp(0.0, 1.0);
+        assert_eq!(p0, expect0);
+        assert!((p0 - 0.7113297).abs() < 2e-6, "p0={p0}");
+        assert!((p1 - 0.35891524).abs() < 2e-6, "p1={p1}");
+        assert!((p2 - 0.5198377).abs() < 2e-6, "p2={p2}");
+    }
+}

@@ -1,0 +1,226 @@
+//! Per-layer and whole-model cost computation.
+
+use crate::arch::{ConvLayer, ModelArch};
+use crate::config::MacroSpec;
+use crate::util::{ceil_div, round_up};
+
+/// Cost breakdown of one convolution layer mapped onto the macro.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerCost {
+    /// Wordline segments the input channels split into (Fig. 3 / Fig. 9).
+    pub segments: usize,
+    /// Bitline columns this layer occupies (= segments·Cout).
+    pub bls: usize,
+    /// Conv parameters k²·Cin·Cout.
+    pub params: usize,
+    /// ADC activations: output pixels × segments × Cout.
+    pub macs: usize,
+    /// Macro compute cycles: px × segments × (ceil(Cout/ADCs) + 1).
+    pub computing_latency: usize,
+    /// Partial sums alive at once: px × Cout × segments (5-bit words).
+    pub psum_words: usize,
+    /// Cells actually occupied: Cin·k²·Cout (≤ 256 rows/col used).
+    pub used_cells: usize,
+}
+
+/// Whole-model cost (the Tables III–V columns).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelCost {
+    pub params: usize,
+    pub bls: usize,
+    pub macs: usize,
+    /// Cycles to stream all weights into macros: ceil(BLs/256)·256.
+    pub load_weight_latency: usize,
+    /// Cycles for one inference pass over the conv stack.
+    pub computing_latency: usize,
+    /// Max partial-sum storage requirement (5-bit words).
+    pub psum_storage: usize,
+    /// Per-layer breakdown, parallel to `ModelArch::layers`.
+    pub per_layer: Vec<LayerCost>,
+}
+
+impl ModelCost {
+    /// Parameters in "paper millions" (rounded to 3 decimals).
+    pub fn params_m(&self) -> f64 {
+        (self.params as f64 / 1e6 * 1000.0).round() / 1000.0
+    }
+
+    /// Partial-sum storage in bits given the ADC precision.
+    pub fn psum_bits(&self, spec: &MacroSpec) -> usize {
+        self.psum_storage * spec.adc_bits as usize
+    }
+
+    /// Number of physical macros needed to hold all weights at once.
+    pub fn macros_needed(&self, spec: &MacroSpec) -> usize {
+        ceil_div(self.bls, spec.bitlines)
+    }
+}
+
+/// Cost of a single layer on the given macro.
+pub fn layer_cost(layer: &ConvLayer, spec: &MacroSpec) -> LayerCost {
+    let cpb = spec.channels_per_bl(layer.kernel);
+    assert!(
+        cpb > 0,
+        "kernel {}x{} does not fit in {} wordlines",
+        layer.kernel,
+        layer.kernel,
+        spec.wordlines
+    );
+    let segments = ceil_div(layer.c_in, cpb);
+    let bls = segments * layer.c_out;
+    let px = layer.out_px();
+    let adc_rounds = ceil_div(layer.c_out, spec.num_adcs);
+    LayerCost {
+        segments,
+        bls,
+        params: layer.params(),
+        macs: px * segments * layer.c_out,
+        computing_latency: px * segments * (adc_rounds + 1),
+        psum_words: px * layer.c_out * segments,
+        used_cells: layer.rows() * layer.c_out,
+    }
+}
+
+/// Cost of a whole model on the given macro.
+pub fn model_cost(model: &ModelArch, spec: &MacroSpec) -> ModelCost {
+    let per_layer: Vec<LayerCost> = model.layers.iter().map(|l| layer_cost(l, spec)).collect();
+    let bls: usize = per_layer.iter().map(|c| c.bls).sum();
+    ModelCost {
+        params: per_layer.iter().map(|c| c.params).sum(),
+        bls,
+        macs: per_layer.iter().map(|c| c.macs).sum(),
+        load_weight_latency: round_up(bls, spec.bitlines) / spec.bitlines
+            * spec.load_cycles_per_macro,
+        computing_latency: per_layer.iter().map(|c| c.computing_latency).sum(),
+        psum_storage: per_layer.iter().map(|c| c.psum_words).max().unwrap_or(0),
+        per_layer,
+    }
+}
+
+/// Macro usage as the paper reports it: fraction of the **provisioned**
+/// capacity (`target_bl` columns × `wordlines` rows) storing real weights.
+pub fn macro_usage(params: usize, target_bl: usize, spec: &MacroSpec) -> f64 {
+    if target_bl == 0 {
+        return 0.0;
+    }
+    params as f64 / (target_bl as f64 * spec.wordlines as f64)
+}
+
+/// Usage relative to the bitlines actually allocated (diagnostic; shows
+/// the 252/256-row packing ceiling of 3×3 kernels = 98.4%).
+pub fn allocated_usage(cost: &ModelCost, spec: &MacroSpec) -> f64 {
+    if cost.bls == 0 {
+        return 0.0;
+    }
+    let used: usize = cost.per_layer.iter().map(|c| c.used_cells).sum();
+    used as f64 / (cost.bls as f64 * spec.wordlines as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{vgg9, LayerKind};
+
+    fn spec() -> MacroSpec {
+        MacroSpec::default()
+    }
+
+    fn mk(c_in: usize, c_out: usize, hw: usize) -> ConvLayer {
+        ConvLayer {
+            name: "t".into(),
+            kind: LayerKind::Standard,
+            c_in,
+            c_out,
+            kernel: 3,
+            out_hw: hw,
+            input_from: None,
+        }
+    }
+
+    #[test]
+    fn single_segment_layer() {
+        // 28 channels fit exactly in one segment for 3×3 @ 256 WL.
+        let c = layer_cost(&mk(28, 64, 8), &spec());
+        assert_eq!(c.segments, 1);
+        assert_eq!(c.bls, 64);
+        assert_eq!(c.macs, 64 * 64);
+        assert_eq!(c.computing_latency, 64 * (1 + 1));
+    }
+
+    #[test]
+    fn segment_boundary() {
+        assert_eq!(layer_cost(&mk(28, 1, 1), &spec()).segments, 1);
+        assert_eq!(layer_cost(&mk(29, 1, 1), &spec()).segments, 2);
+        assert_eq!(layer_cost(&mk(56, 1, 1), &spec()).segments, 2);
+        assert_eq!(layer_cost(&mk(57, 1, 1), &spec()).segments, 3);
+    }
+
+    #[test]
+    fn paper_example_56_channels_two_groups() {
+        // Fig. 9: 56 input channels, 3×3 → two groups of 28.
+        let c = layer_cost(&mk(56, 3, 32), &spec());
+        assert_eq!(c.segments, 2);
+        assert_eq!(c.bls, 6); // 3 filters × 2 segments
+    }
+
+    #[test]
+    fn adc_rounds_step_at_64() {
+        let l64 = layer_cost(&mk(28, 64, 1), &spec());
+        let l65 = layer_cost(&mk(28, 65, 1), &spec());
+        assert_eq!(l64.computing_latency, 2); // 1 ADC round + 1 evaluate
+        assert_eq!(l65.computing_latency, 3); // 2 ADC rounds + 1 evaluate
+    }
+
+    #[test]
+    fn load_latency_rounds_to_macro() {
+        let m = vgg9();
+        let c = model_cost(&m, &spec());
+        assert_eq!(c.macros_needed(&spec()), 151);
+        assert_eq!(c.load_weight_latency, 151 * 256);
+    }
+
+    #[test]
+    fn allocated_usage_below_packing_ceiling() {
+        let c = model_cost(&vgg9(), &spec());
+        let u = allocated_usage(&c, &spec());
+        // 3×3 columns use at most 252/256 rows = 98.4%.
+        assert!(u > 0.90 && u <= 252.0 / 256.0 + 1e-9, "u={u}");
+    }
+
+    #[test]
+    fn different_macro_spec_changes_costs() {
+        // Halving wordlines doubles segments for deep layers.
+        let small = MacroSpec {
+            wordlines: 128,
+            ..MacroSpec::default()
+        };
+        let big = layer_cost(&mk(256, 64, 4), &spec());
+        let halved = layer_cost(&mk(256, 64, 4), &small);
+        assert_eq!(big.segments, ceil_div(256, 28));
+        assert_eq!(halved.segments, ceil_div(256, 14));
+        assert!(halved.macs > big.macs);
+    }
+
+    #[test]
+    fn usage_is_linear_in_params() {
+        let s = spec();
+        let u1 = macro_usage(1_000_000, 4096, &s);
+        let u2 = macro_usage(2_000_000, 4096, &s);
+        assert!((u2 - 2.0 * u1).abs() < 1e-12);
+        assert_eq!(macro_usage(1, 0, &s), 0.0);
+    }
+
+    #[test]
+    fn one_by_one_kernels_pack_densely() {
+        // 1×1 layers fit 256 channels per bitline column.
+        let c = layer_cost(
+            &ConvLayer {
+                kernel: 1,
+                ..mk(256, 32, 4)
+            },
+            &spec(),
+        );
+        assert_eq!(c.segments, 1);
+        assert_eq!(c.bls, 32);
+    }
+}

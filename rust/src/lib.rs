@@ -1,0 +1,52 @@
+//! # cim-adapt
+//!
+//! Reproduction of *"Computing-In-Memory Aware Model Adaption For Edge
+//! Devices"* (Lin & Chang, IEEE TCAS-AI 2025/2026).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * [`cim`] — bit-exact digital twin of the paper's 256×256 multibit CIM
+//!   macro (4-bit cells, 4-bit DAC inputs, 64 rotating 5-bit ADCs, adder
+//!   tree, learned scaling).
+//! * [`mapping`] — packs convolution weights into macro bitlines (Fig. 3)
+//!   and renders occupancy maps (Figs. 12–13).
+//! * [`latency`] — the analytic cost model behind Tables III–V (BLs, MACs,
+//!   load-weight latency, computing latency, partial-sum storage, macro
+//!   usage). Calibrated to reproduce the paper's baseline rows **exactly**.
+//! * [`morph`] — Stage 1: CIM-aware morphing (shrink from BN-γ importance,
+//!   expand via the one-dimensional exhaustive ratio search of Eqs. 4–5).
+//! * [`quant`] — Stage 2 substrate: LSQ step-size math, BN folding,
+//!   partial-sum (ADC) quantization, power-of-two scale approximation.
+//! * [`coordinator`] — the edge-serving runtime: request queue, batcher,
+//!   macro scheduler with weight-reload accounting, metrics.
+//! * [`runtime`] — PJRT bridge that loads the AOT-lowered JAX models
+//!   (`artifacts/*.hlo.txt`) and executes them from the Rust hot path.
+//! * [`baselines`] — E-UPQ-like and XPert-like operating points for the
+//!   Table VI comparison.
+//! * [`report`] — regenerates every table and figure of the paper.
+//!
+//! Python (`python/compile/`) is **build-time only**: it authors the JAX
+//! model (Layer 2) and the Pallas CIM kernel (Layer 1), trains/adapts the
+//! model, and lowers the inference graph to HLO text consumed by
+//! [`runtime`]. Python never runs on the request path.
+
+pub mod util;
+pub mod config;
+pub mod arch;
+pub mod cim;
+pub mod mapping;
+pub mod latency;
+pub mod morph;
+pub mod quant;
+pub mod data;
+pub mod baselines;
+pub mod coordinator;
+pub mod runtime;
+pub mod report;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Crate version string (from Cargo).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,239 @@
+//! `cim-adapt` — CLI launcher for the whole stack.
+//!
+//! ```text
+//! cim-adapt tables  [--artifacts DIR]          regenerate Tables I–VI
+//! cim-adapt map     --model vgg9 --bl 512      Figs. 12/13 occupancy maps
+//! cim-adapt morph   --model vgg9 --bl 4096     run the morphing flow
+//! cim-adapt cost    --model vgg16              cost-model columns
+//! cim-adapt serve   [--requests N]             edge-serving demo (PJRT)
+//! cim-adapt inspect --model vgg9               CIM mapping details
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use cim_adapt::arch::by_name;
+use cim_adapt::config::{MacroSpec, MorphConfig, ServeConfig};
+use cim_adapt::coordinator::server::{Backend, EdgeServer};
+use cim_adapt::data::SynthCifar;
+use cim_adapt::latency::{cost::allocated_usage, model_cost};
+use cim_adapt::mapping::pack_model;
+use cim_adapt::morph::flow::morph_flow_synthetic;
+use cim_adapt::report::{fig12_13, table1, table2, table3_4_5, table6};
+use cim_adapt::runtime::ModelRuntime;
+use cim_adapt::util::cli::{Args, Help};
+use cim_adapt::util::commas;
+
+fn main() -> anyhow::Result<()> {
+    cim_adapt::util::logging::init();
+    let args = Args::from_env();
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    match args.cmd.as_deref() {
+        Some("tables") => cmd_tables(&artifacts),
+        Some("map") => cmd_map(&args),
+        Some("morph") => cmd_morph(&args),
+        Some("cost") => cmd_cost(&args),
+        Some("serve") => cmd_serve(&args, &artifacts),
+        Some("inspect") => cmd_inspect(&args),
+        _ => {
+            print!(
+                "{}",
+                Help::new("cim-adapt", "CIM-aware model adaptation for edge devices")
+                    .cmd("tables", "regenerate Tables I–VI of the paper")
+                    .cmd("map --model M --bl N [--out DIR]", "occupancy maps (Figs. 12–13)")
+                    .cmd("morph --model M --bl N", "run the Stage-1 morphing flow")
+                    .cmd("cost --model M", "analytic cost columns for a model")
+                    .cmd("serve [--requests N] [--batch B]", "edge-serving demo over PJRT")
+                    .cmd("inspect --model M", "per-layer CIM mapping details")
+                    .render()
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_tables(artifacts: &Path) -> anyhow::Result<()> {
+    println!("{}\n", table1(artifacts).rendered);
+    println!("{}\n", table2(artifacts).rendered);
+    for m in ["vgg9", "vgg16", "resnet18"] {
+        println!("{}\n", table3_4_5(m, artifacts).rendered);
+    }
+    println!("{}", table6(artifacts).rendered);
+    Ok(())
+}
+
+fn cmd_map(args: &Args) -> anyhow::Result<()> {
+    let bl = args.usize_or("bl", 512);
+    let out = args.get("out").map(PathBuf::from);
+    let fig = fig12_13(bl, out.as_deref())?;
+    println!("{}", fig.rendered);
+    if let Some(p) = fig.ppm_path {
+        println!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_morph(args: &Args) -> anyhow::Result<()> {
+    let model = args.str_or("model", "vgg9");
+    let target = args.usize_or("bl", 4096);
+    let spec = MacroSpec::default();
+    let cfg = MorphConfig {
+        target_bl: target,
+        rounds: args.usize_or("rounds", 3),
+        ..MorphConfig::default()
+    };
+    let arch = by_name(model)?;
+    let base = model_cost(&arch, &spec);
+    let out = morph_flow_synthetic(
+        &arch,
+        &spec,
+        &cfg,
+        args.f64_or("sparsity", 0.4),
+        args.u64_or("seed", 11),
+    );
+    println!(
+        "model {model}: baseline {:.3}M params, {} BLs",
+        base.params as f64 / 1e6,
+        commas(base.bls as u64)
+    );
+    for r in &out.rounds {
+        println!(
+            "  round {}: pruned to {:.3}M, expanded ×{:.3} → {:.3}M ({} BLs)",
+            r.round + 1,
+            r.pruned_params as f64 / 1e6,
+            r.expansion_ratio,
+            r.expanded_params as f64 / 1e6,
+            commas(r.expanded_bls as u64)
+        );
+    }
+    println!(
+        "final: {:.3}M params | {} BLs | usage {:.2}% | load {} | compute {} cycles",
+        out.cost.params as f64 / 1e6,
+        commas(out.cost.bls as u64),
+        out.macro_usage * 100.0,
+        commas(out.cost.load_weight_latency as u64),
+        commas(out.cost.computing_latency as u64)
+    );
+    println!(
+        "channels: {:?}",
+        out.arch.layers.iter().map(|l| l.c_out).collect::<Vec<_>>()
+    );
+    Ok(())
+}
+
+fn cmd_cost(args: &Args) -> anyhow::Result<()> {
+    let model = args.str_or("model", "vgg9");
+    let spec = MacroSpec::default();
+    let arch = by_name(model)?;
+    let c = model_cost(&arch, &spec);
+    println!("model {model} on {}×{} macro:", spec.wordlines, spec.bitlines);
+    println!("  params            {}", commas(c.params as u64));
+    println!("  bitlines          {}", commas(c.bls as u64));
+    println!("  macros needed     {}", c.macros_needed(&spec));
+    println!("  MACs (ADC conv.)  {}", commas(c.macs as u64));
+    println!("  load latency      {} cycles", commas(c.load_weight_latency as u64));
+    println!("  compute latency   {} cycles", commas(c.computing_latency as u64));
+    println!(
+        "  psum storage      {} words ({} bits)",
+        commas(c.psum_storage as u64),
+        commas(c.psum_bits(&spec) as u64)
+    );
+    println!("  allocated usage   {:.2}%", allocated_usage(&c, &spec) * 100.0);
+    println!("  per-layer:");
+    for (l, lc) in arch.layers.iter().zip(&c.per_layer) {
+        println!(
+            "    {:<10} {:>4}→{:<4} segs {:>2}  bls {:>6}  macs {:>9}  cycles {:>7}",
+            l.name, l.c_in, l.c_out, lc.segments, lc.bls, lc.macs, lc.computing_latency
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, artifacts: &Path) -> anyhow::Result<()> {
+    let n = args.usize_or("requests", 256);
+    let mut cfg = ServeConfig::default();
+    cfg.max_batch = args.usize_or("batch", cfg.max_batch);
+    cfg.workers = args.usize_or("workers", cfg.workers);
+    cfg.num_macros = args.usize_or("macros", cfg.num_macros);
+
+    let model = args.str_or("model", "vgg9_edge");
+    // Probe-load once for banner info; workers construct their own.
+    let rt = ModelRuntime::load(artifacts, model)?;
+    println!(
+        "loaded '{model}' on {} (variants {:?}); morphed arch: {} layers, {:.3}M params",
+        rt.platform(),
+        rt.variants(),
+        rt.meta.arch.layers.len(),
+        rt.meta.arch.params() as f64 / 1e6
+    );
+    let arch = rt.meta.arch.clone();
+    drop(rt);
+    let spec = MacroSpec::default();
+    let backend = Backend::Pjrt {
+        artifact_dir: artifacts.to_path_buf(),
+        model: model.to_string(),
+    };
+    let handle = EdgeServer::start(&cfg, backend, &arch, &spec);
+    println!(
+        "plan: {} logical macros on {} physical; reloads/inference {}",
+        handle.plan.logical_macros, handle.plan.physical_macros, handle.plan.reloads_per_inference
+    );
+    let t0 = std::time::Instant::now();
+    let mut tickets = Vec::with_capacity(n);
+    let mut correct = 0usize;
+    for k in 0..n {
+        let cls = k % 10;
+        let img = SynthCifar::sample(cls, 7000 + k as u64);
+        tickets.push((cls, handle.submit(img.data)?));
+    }
+    for (cls, t) in tickets {
+        let r = t.wait()?;
+        if r.class == cls {
+            correct += 1;
+        }
+    }
+    let elapsed = t0.elapsed();
+    let m = handle.shutdown();
+    println!(
+        "served {n} requests in {:.2}s ({:.0} rps) | accuracy {:.1}% | mean batch {:.2} | p50 {}µs p95 {}µs p99 {}µs",
+        elapsed.as_secs_f64(),
+        n as f64 / elapsed.as_secs_f64(),
+        correct as f64 / n as f64 * 100.0,
+        m.mean_batch,
+        m.latency.p50_us,
+        m.latency.p95_us,
+        m.latency.p99_us
+    );
+    println!(
+        "device model: {} cycles total, {} weight reloads (= {:.2}ms @200MHz)",
+        commas(m.device_cycles),
+        m.weight_reloads,
+        m.device_cycles as f64 / 200e6 * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let model = args.str_or("model", "vgg9");
+    let spec = MacroSpec::default();
+    let arch = by_name(model)?;
+    let mapping = pack_model(&arch, &spec);
+    println!(
+        "model {model}: {} bitline columns over {} macros, occupancy {:.2}%",
+        commas(mapping.total_bls as u64),
+        mapping.num_macros,
+        mapping.occupancy() * 100.0
+    );
+    for lm in &mapping.layers {
+        println!(
+            "  layer {:>2} '{}': BL [{}, {}) — {} segments × {} filters, rows/seg {:?}",
+            lm.layer,
+            arch.layers[lm.layer].name,
+            lm.bl_start,
+            lm.bl_start + lm.bl_count,
+            lm.segments,
+            lm.c_out,
+            lm.rows_per_segment
+        );
+    }
+    Ok(())
+}

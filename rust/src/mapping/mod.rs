@@ -1,0 +1,18 @@
+//! Weight → macro mapping (paper Fig. 3) and occupancy visualisation
+//! (paper Figs. 12–13).
+//!
+//! The packer lays a model's convolution weights out over a sequence of
+//! physical macros: every layer contributes `segments × c_out` bitline
+//! columns (segment-major), each column holding up to
+//! `channels_per_bl · k²` weight rows. Columns are assigned to global
+//! bitline indices in layer order, spilling into additional macros every
+//! `bitlines` columns — exactly the allocation the analytic cost model
+//! charges for.
+
+pub mod occupancy;
+pub mod packer;
+pub mod viz;
+
+pub use occupancy::OccupancyGrid;
+pub use packer::{pack_model, ColumnAssignment, LayerMapping, ModelMapping};
+pub use viz::{render_ascii, render_ppm};

@@ -1,0 +1,111 @@
+//! Per-macro occupancy grids — the data behind Figs. 12–13.
+
+use super::packer::ModelMapping;
+
+/// Cell ownership for one macro: `grid[wl][bl]` = layer index + 1, or 0
+/// for an empty cell.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OccupancyGrid {
+    pub macro_id: usize,
+    pub wordlines: usize,
+    pub bitlines: usize,
+    grid: Vec<u16>,
+}
+
+impl OccupancyGrid {
+    /// Build grids for every macro in a mapping.
+    pub fn from_mapping(map: &ModelMapping) -> Vec<OccupancyGrid> {
+        let (wl, bl) = (map.spec.wordlines, map.spec.bitlines);
+        let mut grids: Vec<OccupancyGrid> = (0..map.num_macros)
+            .map(|m| OccupancyGrid {
+                macro_id: m,
+                wordlines: wl,
+                bitlines: bl,
+                grid: vec![0; wl * bl],
+            })
+            .collect();
+        for c in map.columns() {
+            let g = &mut grids[c.macro_id];
+            for r in 0..c.rows {
+                g.grid[r * bl + c.local_bl] = (c.layer + 1) as u16;
+            }
+        }
+        grids
+    }
+
+    /// Layer owning the cell (None = empty).
+    pub fn owner(&self, wl: usize, bl: usize) -> Option<usize> {
+        match self.grid[wl * self.bitlines + bl] {
+            0 => None,
+            l => Some(l as usize - 1),
+        }
+    }
+
+    /// Fraction of cells occupied.
+    pub fn fill(&self) -> f64 {
+        let used = self.grid.iter().filter(|&&v| v != 0).count();
+        used as f64 / self.grid.len() as f64
+    }
+
+    /// Count of occupied cells per layer present in this macro.
+    pub fn per_layer_cells(&self) -> Vec<(usize, usize)> {
+        let max_layer = self.grid.iter().copied().max().unwrap_or(0) as usize;
+        let mut counts = vec![0usize; max_layer + 1];
+        for &v in &self.grid {
+            counts[v as usize] += 1;
+        }
+        counts
+            .iter()
+            .enumerate()
+            .skip(1)
+            .filter(|&(_, &c)| c > 0)
+            .map(|(l, &c)| (l - 1, c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vgg9;
+    use crate::config::MacroSpec;
+    use crate::mapping::pack_model;
+
+    #[test]
+    fn grids_reconstruct_mapping_occupancy() {
+        let map = pack_model(&vgg9(), &MacroSpec::default());
+        let grids = OccupancyGrid::from_mapping(&map);
+        assert_eq!(grids.len(), map.num_macros);
+        let total_fill: f64 =
+            grids.iter().map(|g| g.fill()).sum::<f64>() / grids.len() as f64;
+        assert!((total_fill - map.occupancy()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn first_macro_starts_with_layer0() {
+        let map = pack_model(&vgg9(), &MacroSpec::default());
+        let grids = OccupancyGrid::from_mapping(&map);
+        assert_eq!(grids[0].owner(0, 0), Some(0));
+        // Layer 0 column has 27 rows: row 27 is either empty or another
+        // layer never (column owned entirely by layer 0 up to rows).
+        assert_eq!(grids[0].owner(26, 0), Some(0));
+        assert_eq!(grids[0].owner(27, 0), None);
+    }
+
+    #[test]
+    fn per_layer_cells_sum_to_params_share() {
+        let map = pack_model(&vgg9(), &MacroSpec::default());
+        let grids = OccupancyGrid::from_mapping(&map);
+        let mut per_layer = vec![0usize; 8];
+        for g in &grids {
+            for (l, c) in g.per_layer_cells() {
+                per_layer[l] += c;
+            }
+        }
+        // Each layer's occupied cells = c_in·k²·c_out = its params.
+        let m = vgg9();
+        for (l, cells) in per_layer.iter().enumerate() {
+            assert_eq!(*cells, m.layers[l].params(), "layer {l}");
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! The bitline packer.
+
+use crate::arch::ModelArch;
+use crate::config::MacroSpec;
+use crate::latency::{layer_cost, LayerCost};
+use crate::util::ceil_div;
+
+/// Where one (layer, segment, filter) column landed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ColumnAssignment {
+    pub layer: usize,
+    pub segment: usize,
+    pub filter: usize,
+    /// Global bitline index across the macro sequence.
+    pub global_bl: usize,
+    /// Physical macro and local bitline.
+    pub macro_id: usize,
+    pub local_bl: usize,
+    /// Occupied rows in this column (≤ wordlines).
+    pub rows: usize,
+}
+
+/// One layer's slice of the global bitline space.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerMapping {
+    pub layer: usize,
+    /// First global bitline of the layer.
+    pub bl_start: usize,
+    /// Columns (= segments · c_out).
+    pub bl_count: usize,
+    pub segments: usize,
+    pub c_out: usize,
+    /// Rows used by each segment's columns (last segment may be ragged).
+    pub rows_per_segment: Vec<usize>,
+    pub cost: LayerCost,
+}
+
+impl LayerMapping {
+    /// Global bitline of (segment, filter) — segment-major layout.
+    pub fn column(&self, segment: usize, filter: usize) -> usize {
+        debug_assert!(segment < self.segments && filter < self.c_out);
+        self.bl_start + segment * self.c_out + filter
+    }
+}
+
+/// The whole model mapped onto a macro sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMapping {
+    pub spec: MacroSpec,
+    pub layers: Vec<LayerMapping>,
+    pub total_bls: usize,
+    pub num_macros: usize,
+}
+
+impl ModelMapping {
+    /// Iterate every column assignment (for viz / loading).
+    pub fn columns(&self) -> impl Iterator<Item = ColumnAssignment> + '_ {
+        let bpm = self.spec.bitlines;
+        self.layers.iter().flat_map(move |lm| {
+            (0..lm.segments).flat_map(move |seg| {
+                (0..lm.c_out).map(move |f| {
+                    let g = lm.column(seg, f);
+                    ColumnAssignment {
+                        layer: lm.layer,
+                        segment: seg,
+                        filter: f,
+                        global_bl: g,
+                        macro_id: g / bpm,
+                        local_bl: g % bpm,
+                        rows: lm.rows_per_segment[seg],
+                    }
+                })
+            })
+        })
+    }
+
+    /// Cells occupied / cells provisioned over the allocated macros.
+    pub fn occupancy(&self) -> f64 {
+        let used: usize = self
+            .layers
+            .iter()
+            .map(|lm| lm.rows_per_segment.iter().sum::<usize>() * lm.c_out)
+            .sum();
+        let provisioned = self.num_macros * self.spec.cells();
+        if provisioned == 0 {
+            0.0
+        } else {
+            used as f64 / provisioned as f64
+        }
+    }
+
+    /// Which layers have columns in macro `m` (for scheduling/reloads).
+    pub fn layers_in_macro(&self, m: usize) -> Vec<usize> {
+        let lo = m * self.spec.bitlines;
+        let hi = lo + self.spec.bitlines;
+        self.layers
+            .iter()
+            .filter(|lm| lm.bl_start < hi && lm.bl_start + lm.bl_count > lo)
+            .map(|lm| lm.layer)
+            .collect()
+    }
+}
+
+/// Pack a model's conv layers into a macro sequence (Fig. 3 layout).
+pub fn pack_model(model: &ModelArch, spec: &MacroSpec) -> ModelMapping {
+    let mut layers = Vec::with_capacity(model.layers.len());
+    let mut next_bl = 0usize;
+    for (i, l) in model.layers.iter().enumerate() {
+        let cost = layer_cost(l, spec);
+        let cpb = spec.channels_per_bl(l.kernel);
+        let k2 = l.kernel * l.kernel;
+        let rows_per_segment: Vec<usize> = (0..cost.segments)
+            .map(|s| {
+                let ch = cpb.min(l.c_in - s * cpb);
+                ch * k2
+            })
+            .collect();
+        layers.push(LayerMapping {
+            layer: i,
+            bl_start: next_bl,
+            bl_count: cost.bls,
+            segments: cost.segments,
+            c_out: l.c_out,
+            rows_per_segment,
+            cost,
+        });
+        next_bl += cost.bls;
+    }
+    ModelMapping {
+        spec: *spec,
+        layers,
+        total_bls: next_bl,
+        num_macros: ceil_div(next_bl.max(1), spec.bitlines),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{vgg9, vgg16};
+    use crate::latency::model_cost;
+
+    fn spec() -> MacroSpec {
+        MacroSpec::default()
+    }
+
+    #[test]
+    fn packing_matches_cost_model() {
+        for m in [vgg9(), vgg16()] {
+            let map = pack_model(&m, &spec());
+            let cost = model_cost(&m, &spec());
+            assert_eq!(map.total_bls, cost.bls);
+            assert_eq!(map.num_macros, cost.macros_needed(&spec()));
+        }
+    }
+
+    #[test]
+    fn columns_are_contiguous_and_disjoint() {
+        let map = pack_model(&vgg9(), &spec());
+        let mut seen = vec![false; map.total_bls];
+        for c in map.columns() {
+            assert!(!seen[c.global_bl], "bitline {} assigned twice", c.global_bl);
+            seen[c.global_bl] = true;
+            assert_eq!(c.macro_id, c.global_bl / 256);
+            assert_eq!(c.local_bl, c.global_bl % 256);
+            assert!(c.rows <= 256);
+        }
+        assert!(seen.iter().all(|&s| s), "every allocated bitline used");
+    }
+
+    #[test]
+    fn ragged_last_segment_rows() {
+        // VGG9 layer 2: c_in=64 → segments of 28, 28, 8 channels.
+        let map = pack_model(&vgg9(), &spec());
+        let lm = &map.layers[2]; // c_in = 128 → 28·4 + 16: segs 28,28,28,28,16
+        assert_eq!(lm.segments, 5);
+        assert_eq!(lm.rows_per_segment, vec![252, 252, 252, 252, 144]);
+    }
+
+    #[test]
+    fn stem_layer_uses_27_rows() {
+        let map = pack_model(&vgg9(), &spec());
+        assert_eq!(map.layers[0].rows_per_segment, vec![27]);
+    }
+
+    #[test]
+    fn occupancy_in_sane_range() {
+        let map = pack_model(&vgg9(), &spec());
+        let occ = map.occupancy();
+        // ≤ 252/256 packing ceiling; > 0.9 for the dense baseline.
+        assert!(occ > 0.90 && occ < 0.985, "occ={occ}");
+    }
+
+    #[test]
+    fn layers_in_macro_partition() {
+        let map = pack_model(&vgg9(), &spec());
+        // First macro hosts the early layers; layer 0 only in macro 0.
+        assert!(map.layers_in_macro(0).contains(&0));
+        let last = map.num_macros - 1;
+        assert!(map.layers_in_macro(last).contains(&7));
+        // Every layer appears in at least one macro.
+        let mut covered = vec![false; 8];
+        for m in 0..map.num_macros {
+            for l in map.layers_in_macro(m) {
+                covered[l] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn segment_major_column_layout() {
+        let map = pack_model(&vgg9(), &spec());
+        let lm = &map.layers[1];
+        assert_eq!(lm.column(0, 0), lm.bl_start);
+        assert_eq!(lm.column(0, 1), lm.bl_start + 1);
+        assert_eq!(lm.column(1, 0), lm.bl_start + lm.c_out);
+    }
+}

@@ -1,0 +1,147 @@
+//! Rendering of occupancy grids — regenerates Figs. 12–13.
+//!
+//! Two backends: a binary PPM (P6) image writer (one pixel per cell,
+//! macros tiled left-to-right) and a down-sampled ASCII rendering for
+//! terminals. Layer colors follow a fixed 12-color palette, empty cells
+//! are white — matching the look of the paper's figures.
+
+use std::io::Write;
+use std::path::Path;
+
+use super::occupancy::OccupancyGrid;
+
+/// Distinct layer palette (RGB).
+const PALETTE: [[u8; 3]; 12] = [
+    [230, 25, 75],   // red
+    [60, 180, 75],   // green
+    [0, 130, 200],   // blue
+    [245, 130, 48],  // orange
+    [145, 30, 180],  // purple
+    [70, 240, 240],  // cyan
+    [240, 50, 230],  // magenta
+    [210, 245, 60],  // lime
+    [250, 190, 190], // pink
+    [0, 128, 128],   // teal
+    [170, 110, 40],  // brown
+    [128, 128, 0],   // olive
+];
+
+fn color(layer: Option<usize>) -> [u8; 3] {
+    match layer {
+        None => [255, 255, 255],
+        Some(l) => PALETTE[l % PALETTE.len()],
+    }
+}
+
+/// Write a P6 PPM with macros tiled horizontally, 2px gutters.
+pub fn render_ppm(grids: &[OccupancyGrid], path: &Path) -> anyhow::Result<()> {
+    anyhow::ensure!(!grids.is_empty(), "no grids to render");
+    let wl = grids[0].wordlines;
+    let bl = grids[0].bitlines;
+    let gutter = 2usize;
+    let width = grids.len() * bl + (grids.len() - 1) * gutter;
+    let height = wl;
+    let mut img = vec![40u8; width * height * 3]; // dark gutter
+    for (gi, g) in grids.iter().enumerate() {
+        let x0 = gi * (bl + gutter);
+        for r in 0..wl {
+            for c in 0..bl {
+                let px = ((r * width) + x0 + c) * 3;
+                img[px..px + 3].copy_from_slice(&color(g.owner(r, c)));
+            }
+        }
+    }
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P6\n{width} {height}\n255\n")?;
+    f.write_all(&img)?;
+    Ok(())
+}
+
+/// ASCII rendering: each macro down-sampled to `cols × rows` characters;
+/// the dominant layer in each block picks the glyph (`A`–`Z`, `.` empty).
+pub fn render_ascii(grids: &[OccupancyGrid], cols: usize, rows: usize) -> String {
+    let mut out = String::new();
+    for g in grids {
+        out.push_str(&format!(
+            "macro {:>2}  (fill {:5.1}%)\n",
+            g.macro_id,
+            g.fill() * 100.0
+        ));
+        let rstep = (g.wordlines / rows.max(1)).max(1);
+        let cstep = (g.bitlines / cols.max(1)).max(1);
+        for rb in (0..g.wordlines).step_by(rstep) {
+            out.push_str("  ");
+            for cb in (0..g.bitlines).step_by(cstep) {
+                // Majority owner in the block.
+                let mut counts = std::collections::BTreeMap::new();
+                for r in rb..(rb + rstep).min(g.wordlines) {
+                    for c in cb..(cb + cstep).min(g.bitlines) {
+                        *counts.entry(g.owner(r, c)).or_insert(0usize) += 1;
+                    }
+                }
+                let (owner, _) = counts
+                    .into_iter()
+                    .max_by_key(|&(_, n)| n)
+                    .unwrap_or((None, 0));
+                out.push(match owner {
+                    None => '.',
+                    Some(l) => (b'A' + (l % 26) as u8) as char,
+                });
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Per-layer legend lines for the ASCII rendering.
+pub fn legend(num_layers: usize) -> String {
+    (0..num_layers)
+        .map(|l| format!("  {} = layer {}", (b'A' + (l % 26) as u8) as char, l + 1))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vgg9;
+    use crate::config::MacroSpec;
+    use crate::mapping::{pack_model, OccupancyGrid};
+
+    #[test]
+    fn ppm_writes_valid_header_and_size() {
+        let map = pack_model(&vgg9().scaled(0.1), &MacroSpec::default());
+        let grids = OccupancyGrid::from_mapping(&map);
+        let path = std::env::temp_dir().join("cim_adapt_viz_test.ppm");
+        render_ppm(&grids, &path).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        assert!(data.starts_with(b"P6\n"));
+        // Parse header dims and check payload size.
+        let header = String::from_utf8_lossy(&data[..40]).to_string();
+        let mut it = header.split_whitespace();
+        it.next(); // P6
+        let w: usize = it.next().unwrap().parse().unwrap();
+        let h: usize = it.next().unwrap().parse().unwrap();
+        assert_eq!(h, 256);
+        assert!(w >= 256);
+        assert!(data.len() > w * h); // header + payload
+    }
+
+    #[test]
+    fn ascii_contains_layers_and_fill() {
+        let map = pack_model(&vgg9().scaled(0.1), &MacroSpec::default());
+        let grids = OccupancyGrid::from_mapping(&map);
+        let s = render_ascii(&grids, 32, 8);
+        assert!(s.contains("macro  0"));
+        assert!(s.contains('A'), "layer 1 glyph present:\n{s}");
+        assert!(s.contains("fill"));
+    }
+
+    #[test]
+    fn legend_lists_layers() {
+        let s = legend(3);
+        assert!(s.contains("A = layer 1"));
+        assert!(s.contains("C = layer 3"));
+    }
+}

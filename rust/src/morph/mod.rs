@@ -1,0 +1,23 @@
+//! Stage 1 — CIM-Aware Morphing (§II-C, Fig. 5).
+//!
+//! MorphNet-style structure learning adapted to CIM macro constraints:
+//!
+//! * **Shrink** ([`shrink`]): filters whose BN-γ magnitude falls below a
+//!   threshold are pruned. The γ values come from the sparsifying training
+//!   run (JAX side, `python/compile/morph.py`, with the Eq. 2 parameter
+//!   regulariser); for cost-side experiments a calibrated synthetic γ
+//!   model reproduces the depth-dependent redundancy profile.
+//! * **Expand** ([`expand`]): all layers are scaled by a single ratio `R`,
+//!   found by the paper's one-dimensional exhaustive search (step 0.001)
+//!   against the bitline-budget constraint of Eqs. 4–5 — which is exactly
+//!   "BLs(scaled model) ≤ target_bl" under the cost model.
+//! * **Flow** ([`flow`]): shrink→expand iterated for a configured number
+//!   of rounds (the paper observes convergence in ~3).
+
+pub mod expand;
+pub mod flow;
+pub mod shrink;
+
+pub use expand::{expand_to_budget, search_expansion_ratio};
+pub use flow::{morph_flow, MorphOutcome, MorphRound};
+pub use shrink::{morphnet_regularizer, prune_by_gamma, synthetic_gammas, PruneResult};

@@ -1,0 +1,185 @@
+//! Shrinking stage: BN-γ–driven filter pruning + the Eq. 2 regulariser.
+
+use crate::arch::ModelArch;
+use crate::util::prng::Pcg;
+
+/// Result of pruning one model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PruneResult {
+    /// The pruned architecture (channels reduced, chaining repaired).
+    pub arch: ModelArch,
+    /// Kept-filter count per layer.
+    pub kept: Vec<usize>,
+    /// Fraction of filters pruned overall.
+    pub prune_fraction: f64,
+}
+
+/// Prune filters whose |γ| < `threshold`.
+///
+/// `gammas[i]` holds layer `i`'s BN γ vector (length = original c_out).
+/// Tied output groups (residual sums) keep the **maximum** kept count over
+/// their members so channel counts stay equal; at least one filter always
+/// survives per layer.
+pub fn prune_by_gamma(model: &ModelArch, gammas: &[Vec<f32>], threshold: f64) -> PruneResult {
+    assert_eq!(
+        gammas.len(),
+        model.layers.len(),
+        "one gamma vector per conv layer"
+    );
+    let mut kept: Vec<usize> = model
+        .layers
+        .iter()
+        .zip(gammas)
+        .map(|(l, g)| {
+            assert_eq!(
+                g.len(),
+                l.c_out,
+                "gamma length mismatch on layer '{}'",
+                l.name
+            );
+            g.iter().filter(|x| x.abs() as f64 >= threshold).count().max(1)
+        })
+        .collect();
+    for group in &model.tied_output_groups {
+        let m = group.iter().map(|&i| kept[i]).max().unwrap_or(1);
+        for &i in group {
+            kept[i] = m;
+        }
+    }
+    let mut arch = model.clone();
+    arch.apply_out_channels(&kept);
+    let orig: usize = model.layers.iter().map(|l| l.c_out).sum();
+    let now: usize = kept.iter().sum();
+    PruneResult {
+        arch,
+        kept,
+        prune_fraction: 1.0 - now as f64 / orig as f64,
+    }
+}
+
+/// The MorphNet regulariser of Eq. 2 for one layer:
+/// `F(L) = x·y·(A_L·Σ|γ_L| + B_L·Σ|γ_{L-1}|)` where `A_L`/`B_L` are the
+/// live input/output channel counts. Used to report the λ·F(θ) term the
+/// shrink training minimises (the actual gradient descent happens in JAX).
+pub fn morphnet_regularizer(
+    kernel: usize,
+    live_in: usize,
+    live_out: usize,
+    gamma_out: &[f32],
+    gamma_in_prev: &[f32],
+) -> f64 {
+    let xy = (kernel * kernel) as f64;
+    let sum_out: f64 = gamma_out.iter().map(|g| g.abs() as f64).sum();
+    let sum_in: f64 = gamma_in_prev.iter().map(|g| g.abs() as f64).sum();
+    xy * (live_in as f64 * sum_out + live_out as f64 * sum_in)
+}
+
+/// Calibrated synthetic γ profile for cost-side experiments.
+///
+/// Matches the qualitative profile the paper reports: deeper, wider layers
+/// carry more redundancy (more near-zero γ), early layers are mostly
+/// essential. `sparsity_bias` ∈ [0,1] shifts the whole profile (plays the
+/// role of λ: larger λ → more γ driven to zero).
+pub fn synthetic_gammas(model: &ModelArch, sparsity_bias: f64, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg::new(seed);
+    let n = model.layers.len().max(1);
+    model
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let depth = i as f64 / n as f64; // 0 early → 1 late
+            let width = (l.c_out as f64 / 512.0).min(1.0);
+            // Probability a filter is redundant grows with depth & width.
+            let p_dead = (0.15 + 0.55 * depth * width + 0.35 * sparsity_bias).min(0.95);
+            let mut layer_rng = rng.fork(i as u64);
+            (0..l.c_out)
+                .map(|_| {
+                    if layer_rng.chance(p_dead) {
+                        // Near-zero γ (pruned by any reasonable threshold).
+                        (layer_rng.next_f64() * 1e-3) as f32
+                    } else {
+                        // Healthy γ around 0.5–1.5.
+                        (0.5 + layer_rng.next_f64()) as f32
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{resnet18, vgg9};
+
+    #[test]
+    fn prune_drops_small_gammas() {
+        let m = vgg9();
+        let mut gammas: Vec<Vec<f32>> = m.layers.iter().map(|l| vec![1.0; l.c_out]).collect();
+        // Kill half of layer 3's filters.
+        for g in gammas[3].iter_mut().take(128) {
+            *g = 1e-6;
+        }
+        let r = prune_by_gamma(&m, &gammas, 1e-2);
+        assert_eq!(r.kept[3], 128);
+        assert_eq!(r.kept[0], 64); // untouched
+        r.arch.validate().unwrap();
+        assert!(r.prune_fraction > 0.0);
+    }
+
+    #[test]
+    fn at_least_one_filter_survives() {
+        let m = vgg9();
+        let gammas: Vec<Vec<f32>> = m.layers.iter().map(|l| vec![0.0; l.c_out]).collect();
+        let r = prune_by_gamma(&m, &gammas, 1e-2);
+        assert!(r.kept.iter().all(|&k| k == 1));
+        r.arch.validate().unwrap();
+    }
+
+    #[test]
+    fn tied_groups_stay_equal() {
+        let m = resnet18();
+        let gammas = synthetic_gammas(&m, 0.5, 42);
+        let r = prune_by_gamma(&m, &gammas, 1e-2);
+        for g in &m.tied_output_groups {
+            let c = r.kept[g[0]];
+            for &i in g {
+                assert_eq!(r.kept[i], c, "tied group {g:?}");
+            }
+        }
+        r.arch.validate().unwrap();
+    }
+
+    #[test]
+    fn synthetic_gammas_deterministic_and_shaped() {
+        let m = vgg9();
+        let a = synthetic_gammas(&m, 0.3, 7);
+        let b = synthetic_gammas(&m, 0.3, 7);
+        assert_eq!(a, b);
+        // Deeper layer should have a higher dead fraction than layer 0.
+        let dead =
+            |g: &Vec<f32>| g.iter().filter(|x| x.abs() < 1e-2).count() as f64 / g.len() as f64;
+        assert!(dead(&a[7]) > dead(&a[0]));
+    }
+
+    #[test]
+    fn higher_sparsity_bias_prunes_more() {
+        let m = vgg9();
+        let lo = prune_by_gamma(&m, &synthetic_gammas(&m, 0.1, 3), 1e-2);
+        let hi = prune_by_gamma(&m, &synthetic_gammas(&m, 0.9, 3), 1e-2);
+        assert!(hi.prune_fraction > lo.prune_fraction);
+    }
+
+    #[test]
+    fn regularizer_monotone_in_gamma() {
+        let g1 = vec![1.0f32; 8];
+        let g2 = vec![2.0f32; 8];
+        let prev = vec![1.0f32; 4];
+        let f1 = morphnet_regularizer(3, 4, 8, &g1, &prev);
+        let f2 = morphnet_regularizer(3, 4, 8, &g2, &prev);
+        assert!(f2 > f1);
+        // Hand value: 9·(4·8 + 8·4) = 576 for all-ones.
+        assert!((f1 - 576.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,124 @@
+//! Batch-norm folding (Phase-1 preprocessing, Fig. 7).
+//!
+//! The paper combines BN parameters with conv kernel weights before
+//! quantizing: for filter `o` with BN (γ, β, μ, σ²):
+//!
+//! ```text
+//! w'[o,...] = w[o,...] · γ[o] / sqrt(σ²[o] + ε)
+//! b'[o]     = β[o] − γ[o]·μ[o] / sqrt(σ²[o] + ε)
+//! ```
+//!
+//! The folded bias is applied digitally after the macro (it is not stored
+//! in cells), so only `w'` is quantized to 4 bits.
+
+/// BN parameters for one conv layer (length = Cout each).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BnParams {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+    pub eps: f32,
+}
+
+impl BnParams {
+    pub fn identity(c_out: usize) -> BnParams {
+        BnParams {
+            gamma: vec![1.0; c_out],
+            beta: vec![0.0; c_out],
+            mean: vec![0.0; c_out],
+            var: vec![1.0; c_out],
+            eps: 1e-5,
+        }
+    }
+
+    pub fn c_out(&self) -> usize {
+        self.gamma.len()
+    }
+
+    fn validate(&self) {
+        let n = self.gamma.len();
+        assert!(
+            self.beta.len() == n && self.mean.len() == n && self.var.len() == n,
+            "BN parameter lengths disagree"
+        );
+        assert!(self.var.iter().all(|&v| v >= 0.0), "negative variance");
+    }
+}
+
+/// Fold BN into conv weights.
+///
+/// `weights` is `[c_out][c_in · k²]` (filter-major). Returns the folded
+/// weights (same shape) and the folded per-filter bias.
+pub fn fold_bn(weights: &[Vec<f32>], bn: &BnParams) -> (Vec<Vec<f32>>, Vec<f32>) {
+    bn.validate();
+    assert_eq!(weights.len(), bn.c_out(), "weights/BN filter count mismatch");
+    let mut folded = Vec::with_capacity(weights.len());
+    let mut bias = Vec::with_capacity(weights.len());
+    for (o, w) in weights.iter().enumerate() {
+        let inv_std = 1.0 / (bn.var[o] + bn.eps).sqrt();
+        let scale = bn.gamma[o] * inv_std;
+        folded.push(w.iter().map(|&x| x * scale).collect());
+        bias.push(bn.beta[o] - bn.gamma[o] * bn.mean[o] * inv_std);
+    }
+    (folded, bias)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_bn_is_noop() {
+        let w = vec![vec![1.0, -2.0, 3.0], vec![0.5, 0.5, 0.5]];
+        let (f, b) = fold_bn(&w, &BnParams::identity(2));
+        // eps=1e-5 perturbs the identity fold by ~5e-6 relative.
+        for (orig, fold) in w.iter().zip(&f) {
+            for (a, c) in orig.iter().zip(fold) {
+                assert!((a - c).abs() < 1e-4);
+            }
+        }
+        assert!(b.iter().all(|&x| x.abs() < 1e-4));
+    }
+
+    #[test]
+    fn folding_matches_explicit_bn() {
+        // y = γ·(conv(x) − μ)/sqrt(σ²+ε) + β must equal conv'(x) + b'.
+        let w = vec![vec![2.0, -1.0]];
+        let bn = BnParams {
+            gamma: vec![3.0],
+            beta: vec![0.25],
+            mean: vec![1.5],
+            var: vec![4.0],
+            eps: 0.0,
+        };
+        let (f, b) = fold_bn(&w, &bn);
+        let x = [0.7f32, -0.3];
+        let conv: f32 = w[0].iter().zip(&x).map(|(a, c)| a * c).sum();
+        let explicit = 3.0 * (conv - 1.5) / 2.0 + 0.25;
+        let folded: f32 = f[0].iter().zip(&x).map(|(a, c)| a * c).sum::<f32>() + b[0];
+        assert!((explicit - folded).abs() < 1e-5);
+    }
+
+    #[test]
+    fn zero_gamma_kills_filter() {
+        // The morphing shrink phase relies on γ→0 making a filter inert.
+        let w = vec![vec![5.0, 5.0]];
+        let bn = BnParams {
+            gamma: vec![0.0],
+            beta: vec![0.0],
+            mean: vec![9.0],
+            var: vec![1.0],
+            eps: 1e-5,
+        };
+        let (f, b) = fold_bn(&w, &bn);
+        assert!(f[0].iter().all(|&x| x == 0.0));
+        assert_eq!(b[0], 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn mismatched_lengths_panic() {
+        fold_bn(&[vec![1.0]], &BnParams::identity(2));
+    }
+}

@@ -1,0 +1,169 @@
+//! Learned Step-size Quantization (LSQ, Esser et al. 2019) — Eq. 6.
+//!
+//! Forward: `w_q = round(clip(w / s, -Q_N, Q_P))`, output `w_q · s`.
+//! Backward (STE): gradients pass through rounding; values outside the
+//! clip range get zero weight-gradient; the step-size gradient is
+//! `(round(v) - v)` inside the range and `±Q` at the clip rails, scaled by
+//! the LSQ gradient normalizer `1/sqrt(N·Q_P)`.
+//!
+//! The python implementation (`python/compile/layers.py`) is the one used
+//! for training; this Rust mirror exists so (a) the serving path can
+//! quantize trained float weights identically, and (b) the python STE can
+//! be validated against an independent implementation via the parity test
+//! vectors.
+
+/// Round half away from zero — matches `jnp.round`'s behaviour on the
+/// half-integer grid points produced by our integer/step combinations and
+/// the silicon's rounding.
+#[inline]
+pub fn round_half_away(x: f32) -> f32 {
+    let a = x.abs();
+    let r = a.floor() + if a.fract() >= 0.5 { 1.0 } else { 0.0 };
+    r.copysign(x)
+}
+
+/// LSQ forward on a single value: returns (q_int, dequantized).
+#[inline]
+pub fn lsq_quantize(w: f32, step: f32, qn: i32, qp: i32) -> (i32, f32) {
+    debug_assert!(step > 0.0);
+    let v = w / step;
+    let clipped = v.clamp(-(qn as f32), qp as f32);
+    let q = round_half_away(clipped) as i32;
+    (q, q as f32 * step)
+}
+
+/// LSQ gradient contributions for one value:
+/// returns (d_loss/d_w passthrough mask, d_loss/d_step contribution).
+#[inline]
+pub fn lsq_grad_step(w: f32, step: f32, qn: i32, qp: i32) -> (f32, f32) {
+    let v = w / step;
+    if v <= -(qn as f32) {
+        (0.0, -(qn as f32))
+    } else if v >= qp as f32 {
+        (0.0, qp as f32)
+    } else {
+        (1.0, round_half_away(v) - v)
+    }
+}
+
+/// LSQ-recommended step initialisation: `2·mean(|w|)/sqrt(Q_P)`.
+pub fn lsq_init_step(ws: &[f32], qp: i32) -> f32 {
+    assert!(!ws.is_empty() && qp > 0);
+    let mean_abs = ws.iter().map(|w| w.abs()).sum::<f32>() / ws.len() as f32;
+    (2.0 * mean_abs / (qp as f32).sqrt()).max(f32::MIN_POSITIVE)
+}
+
+/// A quantized tensor: integer codes + the step that dequantizes them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LsqTensor {
+    pub codes: Vec<i32>,
+    pub step: f32,
+    pub qn: i32,
+    pub qp: i32,
+}
+
+impl LsqTensor {
+    /// Quantize a float tensor with a given (trained) step.
+    pub fn quantize(ws: &[f32], step: f32, bits: u32) -> LsqTensor {
+        let q = (1i32 << (bits - 1)) - 1;
+        LsqTensor {
+            codes: ws.iter().map(|&w| lsq_quantize(w, step, q, q).0).collect(),
+            step,
+            qn: q,
+            qp: q,
+        }
+    }
+
+    /// Quantize with the LSQ-init step (calibration path).
+    pub fn calibrate(ws: &[f32], bits: u32) -> LsqTensor {
+        let q = (1i32 << (bits - 1)) - 1;
+        Self::quantize(ws, lsq_init_step(ws, q), bits)
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.codes.iter().map(|&c| c as f32 * self.step).collect()
+    }
+
+    /// Mean squared quantization error vs the original tensor.
+    pub fn mse(&self, original: &[f32]) -> f32 {
+        assert_eq!(original.len(), self.codes.len());
+        let d = self.dequantize();
+        d.iter()
+            .zip(original)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / original.len().max(1) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_matches_eq6() {
+        // w=0.37, s=0.1 → v=3.7 → round 4 → 0.4.
+        let (q, dq) = lsq_quantize(0.37, 0.1, 7, 7);
+        assert_eq!(q, 4);
+        assert!((dq - 0.4).abs() < 1e-6);
+        // Clip at ±7 for 4-bit.
+        let (q, _) = lsq_quantize(5.0, 0.1, 7, 7);
+        assert_eq!(q, 7);
+        let (q, _) = lsq_quantize(-5.0, 0.1, 7, 7);
+        assert_eq!(q, -7);
+    }
+
+    #[test]
+    fn round_half_away_from_zero() {
+        assert_eq!(round_half_away(0.5), 1.0);
+        assert_eq!(round_half_away(-0.5), -1.0);
+        assert_eq!(round_half_away(1.5), 2.0);
+        assert_eq!(round_half_away(-2.5), -3.0);
+        assert_eq!(round_half_away(2.4), 2.0);
+    }
+
+    #[test]
+    fn grads_zero_outside_clip() {
+        let (gw, gs) = lsq_grad_step(10.0, 0.1, 7, 7);
+        assert_eq!(gw, 0.0);
+        assert_eq!(gs, 7.0);
+        let (gw, gs) = lsq_grad_step(-10.0, 0.1, 7, 7);
+        assert_eq!(gw, 0.0);
+        assert_eq!(gs, -7.0);
+        let (gw, _) = lsq_grad_step(0.3, 0.1, 7, 7);
+        assert_eq!(gw, 1.0);
+    }
+
+    #[test]
+    fn init_step_scales_with_magnitude() {
+        let small = lsq_init_step(&[0.01, -0.02, 0.015], 7);
+        let large = lsq_init_step(&[1.0, -2.0, 1.5], 7);
+        assert!((large / small - 100.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn tensor_roundtrip_error_bounded() {
+        let ws: Vec<f32> = (-20..=20).map(|i| i as f32 * 0.05).collect();
+        let t = LsqTensor::quantize(&ws, 0.15, 4);
+        for (orig, deq) in ws.iter().zip(t.dequantize()) {
+            if orig.abs() <= 7.0 * 0.15 {
+                assert!((deq - orig).abs() <= 0.075 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn calibrate_beats_bad_step() {
+        let ws: Vec<f32> = (0..100).map(|i| ((i * 37) % 100) as f32 / 100.0 - 0.5).collect();
+        let cal = LsqTensor::calibrate(&ws, 4);
+        let bad = LsqTensor::quantize(&ws, 10.0, 4); // absurd step
+        assert!(cal.mse(&ws) < bad.mse(&ws));
+    }
+
+    #[test]
+    fn codes_fit_in_cell_bits() {
+        let ws: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) * 0.01).collect();
+        let t = LsqTensor::calibrate(&ws, 4);
+        assert!(t.codes.iter().all(|&c| (-7..=7).contains(&c)));
+    }
+}

@@ -1,0 +1,23 @@
+//! Stage-2 quantization substrate (§II-D).
+//!
+//! The heavy lifting of Stage 2 — the two-phase quantization-aware
+//! *training* — happens in JAX (`python/compile/layers.py`, build-time).
+//! This module is the serving-side mirror: the exact same arithmetic
+//! (Eqs. 6–8) in Rust, used by the coordinator to quantize trained weights
+//! into macro cells, fold BN parameters, pick LSQ-consistent step sizes
+//! for calibration, and approximate scales by powers of two.
+//!
+//! * [`lsq`]  — learned-step-size quantization forward math + gradient
+//!   (for verifying the python STE implementation against a reference),
+//! * [`psum`] — partial-sum (ADC) quantization, Eq. 7,
+//! * [`fold`] — BN folding into conv weights (Phase-1 preprocessing),
+//! * [`pow2`] — power-of-two scale approximation ("simple digital shift").
+
+pub mod fold;
+pub mod lsq;
+pub mod pow2;
+pub mod psum;
+
+pub use fold::{fold_bn, BnParams};
+pub use lsq::{lsq_grad_step, lsq_init_step, lsq_quantize, LsqTensor};
+pub use psum::{quantize_psum, segment_inputs};

@@ -1,0 +1,75 @@
+//! Power-of-two scale approximation.
+//!
+//! The paper (§II-D, end): "this product can be approximated as a power of
+//! two, allowing the output to be adjusted with a simple digital shift
+//! operation." `nearest_pow2` snaps a positive scale to 2^round(log2 s),
+//! guaranteeing the result is within a factor of √2.
+
+/// Nearest power of two (in log space) to a positive finite scale.
+pub fn nearest_pow2(s: f32) -> f32 {
+    assert!(s > 0.0 && s.is_finite(), "scale must be positive finite");
+    let e = (s as f64).log2().round() as i32;
+    exp2i(e)
+}
+
+/// 2^e as f32 for integer e (exact for the float range used here).
+pub fn exp2i(e: i32) -> f32 {
+    (2.0f64).powi(e) as f32
+}
+
+/// The shift amount (log2) if `s` is an exact power of two.
+pub fn as_shift(s: f32) -> Option<i32> {
+    if s <= 0.0 || !s.is_finite() {
+        return None;
+    }
+    let e = (s as f64).log2();
+    if (e - e.round()).abs() < 1e-9 {
+        Some(e.round() as i32)
+    } else {
+        None
+    }
+}
+
+/// Relative error |pow2(s) - s| / s.
+pub fn pow2_rel_error(s: f32) -> f32 {
+    (nearest_pow2(s) - s).abs() / s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_powers_fixed() {
+        for e in -20..=20 {
+            let s = exp2i(e);
+            assert_eq!(nearest_pow2(s), s);
+            assert_eq!(as_shift(s), Some(e));
+        }
+    }
+
+    #[test]
+    fn snaps_within_sqrt2() {
+        for s in [0.013f32, 0.09, 0.7, 1.3, 5.0, 777.0] {
+            let p = nearest_pow2(s);
+            let ratio = (p / s) as f64;
+            assert!(
+                ratio >= 1.0 / 2f64.sqrt() - 1e-6 && ratio <= 2f64.sqrt() + 1e-6,
+                "s={s} p={p}"
+            );
+        }
+    }
+
+    #[test]
+    fn as_shift_rejects_non_powers() {
+        assert_eq!(as_shift(0.3), None);
+        assert_eq!(as_shift(-2.0), None);
+        assert_eq!(as_shift(f32::NAN), None);
+    }
+
+    #[test]
+    fn rel_error_zero_at_powers() {
+        assert_eq!(pow2_rel_error(0.25), 0.0);
+        assert!(pow2_rel_error(0.3) > 0.0);
+    }
+}

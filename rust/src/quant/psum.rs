@@ -1,0 +1,75 @@
+//! Partial-sum (ADC) quantization — Eq. 7 — and the channel segmentation
+//! of Fig. 9 that produces the partial sums in the first place.
+
+use super::lsq::round_half_away;
+
+/// Quantize an integer-domain partial sum as the ADC does (Eq. 7 inner):
+/// `round(clip(acc / s_adc, -q, q))`.
+#[inline]
+pub fn quantize_psum(acc: i64, s_adc: f32, bits: u32) -> i32 {
+    let q = (1i32 << (bits - 1)) - 1;
+    let v = (acc as f64 / s_adc as f64) as f32;
+    let clipped = v.clamp(-(q as f32), q as f32);
+    round_half_away(clipped) as i32
+}
+
+/// Split a flattened im2col input row of `c_in · k²` values into the
+/// wordline segments of Fig. 9: each segment holds up to
+/// `channels_per_bl · k²` contiguous values (whole channels only).
+///
+/// Returns the list of segment slices (as index ranges) so callers can
+/// avoid copying.
+pub fn segment_inputs(c_in: usize, kernel: usize, channels_per_bl: usize) -> Vec<(usize, usize)> {
+    assert!(channels_per_bl > 0);
+    let k2 = kernel * kernel;
+    let mut out = Vec::new();
+    let mut ch = 0;
+    while ch < c_in {
+        let take = channels_per_bl.min(c_in - ch);
+        out.push((ch * k2, (ch + take) * k2));
+        ch += take;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_matches_adc_math() {
+        assert_eq!(quantize_psum(16, 8.0, 5), 2);
+        assert_eq!(quantize_psum(-16, 8.0, 5), -2);
+        assert_eq!(quantize_psum(4, 8.0, 5), 1); // 0.5 away from zero
+        assert_eq!(quantize_psum(1000, 1.0, 5), 15);
+        assert_eq!(quantize_psum(-1000, 1.0, 5), -15);
+    }
+
+    #[test]
+    fn paper_example_56_channels() {
+        // Fig. 9: 56 channels, 3×3, 28 per bitline → two segments of 252.
+        let segs = segment_inputs(56, 3, 28);
+        assert_eq!(segs, vec![(0, 252), (252, 504)]);
+    }
+
+    #[test]
+    fn ragged_tail_segment() {
+        let segs = segment_inputs(30, 3, 28);
+        assert_eq!(segs, vec![(0, 252), (252, 270)]);
+        // 3-channel stem fits in one.
+        assert_eq!(segment_inputs(3, 3, 28), vec![(0, 27)]);
+    }
+
+    #[test]
+    fn segments_cover_exactly() {
+        for c_in in [1usize, 27, 28, 29, 56, 100, 512] {
+            let segs = segment_inputs(c_in, 3, 28);
+            assert_eq!(segs.first().unwrap().0, 0);
+            assert_eq!(segs.last().unwrap().1, c_in * 9);
+            for w in segs.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            assert_eq!(segs.len(), c_in.div_ceil(28));
+        }
+    }
+}

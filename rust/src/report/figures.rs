@@ -1,0 +1,99 @@
+//! Figure generators (Figs. 12–13: macro occupancy maps).
+
+use std::path::Path;
+
+use crate::arch::by_name;
+use crate::config::{MacroSpec, MorphConfig};
+use crate::mapping::{pack_model, render_ascii, render_ppm, OccupancyGrid};
+use crate::mapping::viz::legend;
+use crate::morph::flow::morph_flow_synthetic;
+
+use super::Rendered;
+
+/// A figure's outputs: ASCII rendering + optional PPM path.
+#[derive(Debug, Clone)]
+pub struct FigureOutput {
+    pub rendered: Rendered,
+    pub ppm_path: Option<std::path::PathBuf>,
+    pub num_macros: usize,
+    pub fill: f64,
+}
+
+/// Figs. 12 (BL=512) and 13 (BL=1024): morph VGG9 to the budget and map
+/// it onto 256×256 macros. Writes `fig<n>_vgg9_bl<bl>.ppm` into `out_dir`
+/// when given.
+pub fn fig12_13(target_bl: usize, out_dir: Option<&Path>) -> anyhow::Result<FigureOutput> {
+    anyhow::ensure!(
+        target_bl == 512 || target_bl == 1024,
+        "paper figures use BL ∈ {{512, 1024}}"
+    );
+    let spec = MacroSpec::default();
+    let cfg = MorphConfig {
+        target_bl,
+        ..MorphConfig::default()
+    };
+    let out = morph_flow_synthetic(&by_name("vgg9")?, &spec, &cfg, 0.4, 11);
+    let mapping = pack_model(&out.arch, &spec);
+    let grids = OccupancyGrid::from_mapping(&mapping);
+    let fill = mapping.occupancy();
+    let mut text = render_ascii(&grids, 64, 16);
+    text.push_str("\nlegend:\n");
+    text.push_str(&legend(out.arch.layers.len()));
+    text.push('\n');
+    let fig_no = if target_bl == 512 { 12 } else { 13 };
+    let ppm_path = if let Some(dir) = out_dir {
+        std::fs::create_dir_all(dir)?;
+        let p = dir.join(format!("fig{fig_no}_vgg9_bl{target_bl}.ppm"));
+        render_ppm(&grids, &p)?;
+        Some(p)
+    } else {
+        None
+    };
+    Ok(FigureOutput {
+        rendered: Rendered {
+            title: format!(
+                "Fig. {fig_no} — VGG9 morphed to {target_bl} BLs mapped onto {} macro(s), fill {:.1}%",
+                mapping.num_macros,
+                fill * 100.0
+            ),
+            text,
+        },
+        ppm_path,
+        num_macros: mapping.num_macros,
+        fill,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig12_fits_two_macros() {
+        // 512 BLs = 2 macros of 256 columns, as in the paper's figure.
+        let f = fig12_13(512, None).unwrap();
+        assert_eq!(f.num_macros, 2);
+        assert!(f.fill > 0.5, "fill {:.2}", f.fill);
+        assert!(f.rendered.text.contains("legend"));
+    }
+
+    #[test]
+    fn fig13_fits_four_macros() {
+        let f = fig12_13(1024, None).unwrap();
+        assert_eq!(f.num_macros, 4);
+    }
+
+    #[test]
+    fn ppm_written_when_dir_given() {
+        let dir = std::env::temp_dir().join("cim_adapt_fig_test");
+        let f = fig12_13(512, Some(&dir)).unwrap();
+        let p = f.ppm_path.unwrap();
+        assert!(p.exists());
+        assert!(std::fs::metadata(&p).unwrap().len() > 1000);
+    }
+
+    #[test]
+    fn invalid_budget_rejected() {
+        assert!(fig12_13(2048, None).is_err());
+    }
+}

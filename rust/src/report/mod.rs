@@ -1,0 +1,31 @@
+//! Report harness: regenerate every table and figure of the paper.
+//!
+//! Each generator returns the formatted table as a `String` (and the raw
+//! rows for programmatic checks), so the same code backs the CLI
+//! (`cim-adapt tables`), the benches (one per table), and the tests that
+//! pin the baseline columns to the paper's numbers.
+//!
+//! Accuracy columns: the deterministic cost columns are computed
+//! full-scale and exactly; accuracy values are filled from the recorded
+//! reduced-scale QAT runs (`artifacts/*_results.json`) when present, and
+//! labelled `n/a` otherwise (DESIGN.md §5).
+
+pub mod figures;
+pub mod tables;
+
+pub use figures::{fig12_13, FigureOutput};
+pub use tables::{table1, table2, table3_4_5, table6, TableOutput};
+
+/// Common output wrapper.
+#[derive(Debug, Clone)]
+pub struct Rendered {
+    pub title: String,
+    pub text: String,
+}
+
+impl std::fmt::Display for Rendered {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "{}", self.title)?;
+        write!(f, "{}", self.text)
+    }
+}

@@ -1,0 +1,157 @@
+//! Artifact metadata (`<name>_meta.json`): what aot.py exported.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::arch::ModelArch;
+use crate::util::json::Json;
+
+/// Variant key helper (`b1`, `b8`, `pallas_b1`, ...).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VariantKey(pub String);
+
+impl VariantKey {
+    /// The batch size encoded in the key, if any.
+    pub fn batch(&self) -> Option<usize> {
+        let tail = self.0.rsplit('b').next()?;
+        tail.parse().ok()
+    }
+}
+
+/// Parsed `<name>_meta.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub arch: ModelArch,
+    pub adc_steps: Vec<f64>,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    /// variant key → HLO file name.
+    pub files: BTreeMap<String, String>,
+    /// Training results recorded by the pipeline (accuracy etc.).
+    pub results: Json,
+}
+
+impl ArtifactMeta {
+    pub fn load(path: &Path) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading metadata {path:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ArtifactMeta> {
+        let arch = ModelArch::from_json(j.get("arch")).context("artifact arch")?;
+        let adc_steps: Vec<f64> = j
+            .get("adc_steps")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|v| v.as_f64())
+            .collect();
+        anyhow::ensure!(
+            adc_steps.len() == arch.layers.len(),
+            "adc_steps ({}) != conv layers ({})",
+            adc_steps.len(),
+            arch.layers.len()
+        );
+        let input_shape: Vec<usize> = j
+            .get("input_shape")
+            .as_arr()
+            .context("input_shape missing")?
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+        anyhow::ensure!(input_shape.len() == 3, "input_shape must be CHW");
+        let files = j
+            .get("files")
+            .as_obj()
+            .context("files missing")?
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_str().unwrap_or_default().to_string()))
+            .collect();
+        Ok(ArtifactMeta {
+            name: j
+                .get("name")
+                .as_str()
+                .context("name missing")?
+                .to_string(),
+            arch,
+            adc_steps,
+            input_shape,
+            num_classes: j.get("num_classes").as_usize().unwrap_or(10),
+            files,
+            results: j.get("results").clone(),
+        })
+    }
+
+    /// (C, H, W) of one input image.
+    pub fn input_chw(&self) -> (usize, usize, usize) {
+        (self.input_shape[0], self.input_shape[1], self.input_shape[2])
+    }
+
+    /// Floats per input image.
+    pub fn image_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Batch size of a variant key.
+    pub fn batch_of(&self, variant: &str) -> Result<usize> {
+        VariantKey(variant.to_string())
+            .batch()
+            .with_context(|| format!("variant '{variant}' encodes no batch size"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta_json() -> Json {
+        let arch = crate::arch::vgg9().scaled(0.125);
+        Json::obj()
+            .with("name", "vgg9_edge")
+            .with("arch", arch.to_json())
+            .with(
+                "adc_steps",
+                Json::Arr((0..8).map(|_| Json::Num(16.0)).collect()),
+            )
+            .with("input_shape", vec![3usize, 32, 32])
+            .with("num_classes", 10usize)
+            .with(
+                "files",
+                Json::obj().with("b1", "x_b1.hlo.txt").with("b8", "x_b8.hlo.txt"),
+            )
+            .with("results", Json::obj().with("p2_acc", 0.9))
+    }
+
+    #[test]
+    fn parses_complete_metadata() {
+        let m = ArtifactMeta::from_json(&meta_json()).unwrap();
+        assert_eq!(m.name, "vgg9_edge");
+        assert_eq!(m.arch.layers.len(), 8);
+        assert_eq!(m.input_chw(), (3, 32, 32));
+        assert_eq!(m.image_len(), 3072);
+        assert_eq!(m.batch_of("b8").unwrap(), 8);
+        assert_eq!(m.files.len(), 2);
+    }
+
+    #[test]
+    fn variant_key_batches() {
+        assert_eq!(VariantKey("b1".into()).batch(), Some(1));
+        assert_eq!(VariantKey("b64".into()).batch(), Some(64));
+        assert_eq!(VariantKey("pallas_b8".into()).batch(), Some(8));
+        assert_eq!(VariantKey("weird".into()).batch(), None);
+    }
+
+    #[test]
+    fn rejects_mismatched_adc_steps() {
+        let mut j = meta_json();
+        if let Json::Obj(ref mut m) = j {
+            m.insert("adc_steps".into(), Json::Arr(vec![Json::Num(16.0)]));
+        }
+        assert!(ArtifactMeta::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! PJRT runtime: load AOT-lowered JAX models and execute them from Rust.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client): HLO **text** artifacts
+//! produced by `python/compile/aot.py` are parsed into `HloModuleProto`s,
+//! compiled once per model variant, and executed on the serving hot path.
+//! Python is never involved at runtime.
+//!
+//! The [`ModelRuntime`] couples a compiled executable with the artifact
+//! metadata (`*_meta.json`): input shape, batch size per variant, the
+//! morphed architecture, ADC steps — everything the coordinator needs to
+//! route requests.
+
+pub mod meta;
+
+pub use meta::{ArtifactMeta, VariantKey};
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A PJRT client + the executables compiled from one artifact directory.
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    pub meta: ArtifactMeta,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    artifact_dir: PathBuf,
+}
+
+impl ModelRuntime {
+    /// Create a CPU PJRT client and load every variant listed in the
+    /// model's metadata file (`<name>_meta.json` in `artifact_dir`).
+    pub fn load(artifact_dir: &Path, model_name: &str) -> Result<ModelRuntime> {
+        Self::load_filtered(artifact_dir, model_name, |_| true)
+    }
+
+    /// Load only the plain batch variants (`b<N>`): the serving hot path.
+    ///
+    /// Demonstration variants (e.g. `pallas_b1`, whose interpret-mode HLO
+    /// takes seconds to compile) are skipped — they exist for parity
+    /// checks, not serving. §Perf iteration 3.
+    pub fn load_serving(artifact_dir: &Path, model_name: &str) -> Result<ModelRuntime> {
+        Self::load_filtered(artifact_dir, model_name, |key| {
+            key.starts_with('b') && key[1..].parse::<usize>().is_ok()
+        })
+    }
+
+    /// Load variants whose key passes `keep`.
+    pub fn load_filtered(
+        artifact_dir: &Path,
+        model_name: &str,
+        keep: impl Fn(&str) -> bool,
+    ) -> Result<ModelRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let meta = ArtifactMeta::load(&artifact_dir.join(format!("{model_name}_meta.json")))?;
+        let mut rt = ModelRuntime {
+            client,
+            meta,
+            executables: BTreeMap::new(),
+            artifact_dir: artifact_dir.to_path_buf(),
+        };
+        let variants: Vec<(String, String)> = rt
+            .meta
+            .files
+            .iter()
+            .filter(|(k, _)| keep(k))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        anyhow::ensure!(!variants.is_empty(), "no artifact variants matched the filter");
+        for (key, file) in variants {
+            rt.load_variant(&key, &file)?;
+        }
+        Ok(rt)
+    }
+
+    /// Compile one HLO text file under a variant key (e.g. `"b8"`).
+    pub fn load_variant(&mut self, key: &str, file: &str) -> Result<()> {
+        let path = self.artifact_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        self.executables.insert(key.to_string(), exe);
+        Ok(())
+    }
+
+    /// Variant keys available (sorted).
+    pub fn variants(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Largest plain batch variant (`b<N>`) not exceeding `n`, if any.
+    pub fn best_batch_variant(&self, n: usize) -> Option<(&str, usize)> {
+        self.executables
+            .keys()
+            .filter_map(|k| {
+                k.strip_prefix('b')
+                    .and_then(|d| d.parse::<usize>().ok())
+                    .map(|b| (k.as_str(), b))
+            })
+            .filter(|&(_, b)| b <= n.max(1))
+            .max_by_key(|&(_, b)| b)
+    }
+
+    /// Execute a variant on a batch of CHW images (flattened f32).
+    ///
+    /// `images` must hold exactly `batch * 3 * 32 * 32` floats for the
+    /// variant's batch size. Returns logits, `batch * num_classes` floats.
+    pub fn infer(&self, variant: &str, images: &[f32]) -> Result<Vec<f32>> {
+        let exe = self
+            .executables
+            .get(variant)
+            .with_context(|| format!("unknown variant '{variant}'"))?;
+        let b = self.meta.batch_of(variant)?;
+        let (c, h, w) = self.meta.input_chw();
+        anyhow::ensure!(
+            images.len() == b * c * h * w,
+            "expected {} floats for variant {variant}, got {}",
+            b * c * h * w,
+            images.len()
+        );
+        let input = xla::Literal::vec1(images)
+            .reshape(&[b as i64, c as i64, h as i64, w as i64])
+            .context("reshaping input literal")?;
+        let result = exe.execute::<xla::Literal>(&[input])?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let logits = result.to_tuple1().context("unwrapping result tuple")?;
+        logits.to_vec::<f32>().context("reading logits")
+    }
+
+    /// Argmax class per image for a batch of logits.
+    pub fn classify(&self, variant: &str, images: &[f32]) -> Result<Vec<usize>> {
+        let logits = self.infer(variant, images)?;
+        let k = self.meta.num_classes;
+        Ok(logits
+            .chunks(k)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+// The runtime requires built artifacts; integration coverage lives in
+// rust/tests/integration_runtime.rs (skips gracefully when artifacts are
+// absent). Pure helpers are unit-tested in `meta`.

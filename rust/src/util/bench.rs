@@ -1,0 +1,228 @@
+//! Criterion-style micro/throughput benchmark harness (the offline
+//! registry has no `criterion`).
+//!
+//! Each `[[bench]]` target builds a [`Runner`], registers closures, and
+//! calls [`Runner::finish`]. The harness warms up, picks an iteration
+//! count targeting ~0.3 s per sample, collects samples, and reports
+//! median / mean / p95 with a simple outlier count. Results can also be
+//! dumped as JSON for EXPERIMENTS.md tooling.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+
+/// Re-export for bench bodies.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// One benchmark's collected statistics (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub iters_per_sample: u64,
+}
+
+impl Stats {
+    fn sorted(&self) -> Vec<f64> {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s
+    }
+
+    pub fn median_ns(&self) -> f64 {
+        let s = self.sorted();
+        let n = s.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            (s[n / 2 - 1] + s[n / 2]) / 2.0
+        }
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        let s = self.sorted();
+        if s.is_empty() {
+            return f64::NAN;
+        }
+        s[((s.len() as f64 * 0.95) as usize).min(s.len() - 1)]
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("name", self.name.as_str())
+            .with("median_ns", self.median_ns())
+            .with("mean_ns", self.mean_ns())
+            .with("p95_ns", self.p95_ns())
+            .with("samples", self.samples.len())
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench harness entry point.
+pub struct Runner {
+    title: String,
+    results: Vec<Stats>,
+    samples: usize,
+    target_sample: Duration,
+    quick: bool,
+}
+
+impl Runner {
+    pub fn new(title: &str) -> Runner {
+        // `cargo bench -- --quick` (or env) trims sampling for CI smoke.
+        let argv: Vec<String> = std::env::args().collect();
+        let quick = argv.iter().any(|a| a == "--quick")
+            || std::env::var("CIM_ADAPT_BENCH_QUICK").is_ok();
+        println!("== bench: {title} ==");
+        Runner {
+            title: title.to_string(),
+            results: Vec::new(),
+            samples: if quick { 10 } else { 30 },
+            target_sample: if quick {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_millis(120)
+            },
+            quick,
+        }
+    }
+
+    pub fn is_quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Measure `f`, auto-scaling the per-sample iteration count.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        // Warm-up + calibration.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(20));
+        let iters = (self.target_sample.as_nanos() / once.as_nanos()).clamp(1, 1_000_000) as u64;
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let total = t.elapsed().as_nanos() as f64;
+            samples.push(total / iters as f64);
+        }
+        let stats = Stats {
+            name: name.to_string(),
+            samples,
+            iters_per_sample: iters,
+        };
+        println!(
+            "  {:<44} median {:>12}  mean {:>12}  p95 {:>12}  ({} iters/sample)",
+            stats.name,
+            fmt_ns(stats.median_ns()),
+            fmt_ns(stats.mean_ns()),
+            fmt_ns(stats.p95_ns()),
+            stats.iters_per_sample
+        );
+        self.results.push(stats);
+    }
+
+    /// Report a throughput metric alongside a timed bench.
+    pub fn bench_throughput<F: FnMut() -> u64>(&mut self, name: &str, unit: &str, mut f: F) {
+        let mut items_total: u64 = 0;
+        let mut calls: u64 = 0;
+        let wrapped_name = name.to_string();
+        // Single calibration call to learn item count per call.
+        let t0 = Instant::now();
+        items_total += f();
+        calls += 1;
+        let once = t0.elapsed().max(Duration::from_nanos(20));
+        let iters = (self.target_sample.as_nanos() / once.as_nanos()).clamp(1, 1_000_000) as u64;
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                items_total += f();
+                calls += 1;
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let stats = Stats {
+            name: wrapped_name,
+            samples,
+            iters_per_sample: iters,
+        };
+        let items_per_call = items_total as f64 / calls as f64;
+        let thru = items_per_call / (stats.median_ns() / 1e9);
+        println!(
+            "  {:<44} median {:>12}  throughput {:>14.0} {unit}/s",
+            stats.name,
+            fmt_ns(stats.median_ns()),
+            thru
+        );
+        self.results.push(stats);
+    }
+
+    /// Print a free-form table row produced by the report module.
+    pub fn table(&mut self, text: &str) {
+        println!("{text}");
+    }
+
+    /// Finish: optionally dump JSON next to the bench name.
+    pub fn finish(self) {
+        if let Ok(dir) = std::env::var("CIM_ADAPT_BENCH_JSON") {
+            let arr = Json::Arr(self.results.iter().map(|s| s.to_json()).collect());
+            let path = format!(
+                "{dir}/{}.json",
+                self.title.replace(|c: char| !c.is_alphanumeric(), "_")
+            );
+            let _ = std::fs::create_dir_all(&dir);
+            let _ = std::fs::write(&path, arr.pretty());
+            println!("(wrote {path})");
+        }
+        println!("== done: {} ==", self.title);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let s = Stats {
+            name: "x".into(),
+            samples: (1..=100).map(|i| i as f64).collect(),
+            iters_per_sample: 1,
+        };
+        assert!((s.median_ns() - 50.5).abs() < 1e-9);
+        assert_eq!(s.p95_ns(), 96.0);
+        assert!((s.mean_ns() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+}

@@ -1,0 +1,187 @@
+//! Tiny declarative CLI argument parser (the offline registry has no
+//! `clap`). Supports subcommands, `--flag`, `--key value` / `--key=value`,
+//! typed accessors with defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, options, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub cmd: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        // First non-dashed token is the subcommand.
+        if let Some(first) = iter.peek() {
+            if !first.starts_with('-') {
+                args.cmd = iter.next();
+            }
+        }
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    let (k, v) = stripped.split_at(eq);
+                    args.opts.insert(k.to_string(), v[1..].to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.opts.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse::<usize>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an unsigned integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| {
+                v.parse::<u64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an unsigned integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+}
+
+/// Help-text builder shared by the `cim-adapt` binary and the examples.
+pub struct Help {
+    name: &'static str,
+    about: &'static str,
+    lines: Vec<(String, String)>,
+}
+
+impl Help {
+    pub fn new(name: &'static str, about: &'static str) -> Help {
+        Help {
+            name,
+            about,
+            lines: Vec::new(),
+        }
+    }
+
+    pub fn cmd(mut self, cmd: &str, desc: &str) -> Help {
+        self.lines.push((format!("  {cmd}"), desc.to_string()));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let width = self.lines.iter().map(|(c, _)| c.len()).max().unwrap_or(0) + 2;
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.name, self.about, self.name);
+        for (c, d) in &self.lines {
+            s.push_str(&format!("{c:width$}{d}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("map --model vgg9 --bl 512 --viz");
+        assert_eq!(a.cmd.as_deref(), Some("map"));
+        assert_eq!(a.str_or("model", "x"), "vgg9");
+        assert_eq!(a.usize_or("bl", 0), 512);
+        assert!(a.flag("viz"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("serve --batch=8 --rate=1.5");
+        assert_eq!(a.usize_or("batch", 0), 8);
+        assert_eq!(a.f64_or("rate", 0.0), 1.5);
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("run file1 file2 --k v");
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("bench");
+        assert_eq!(a.usize_or("iters", 10), 10);
+        assert_eq!(a.str_or("model", "vgg9"), "vgg9");
+    }
+
+    #[test]
+    fn no_subcommand_when_dashed_first() {
+        let a = parse("--help");
+        assert_eq!(a.cmd, None);
+        assert!(a.flag("help"));
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an unsigned integer")]
+    fn bad_int_panics() {
+        let a = parse("x --n abc");
+        a.usize_or("n", 0);
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = Help::new("cim-adapt", "CIM-aware model adaptation")
+            .cmd("map", "pack a model into macros")
+            .cmd("serve", "run the edge server");
+        let text = h.render();
+        assert!(text.contains("map"));
+        assert!(text.contains("COMMANDS"));
+    }
+}

@@ -1,0 +1,69 @@
+//! Minimal `log`-crate backend writing timestamped lines to stderr.
+//!
+//! Level comes from `CIM_ADAPT_LOG` (error|warn|info|debug|trace), default
+//! `info`. Install once with [`init`]; repeated calls are no-ops.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger {
+    max: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.max
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.elapsed();
+        eprintln!(
+            "[{:>9.3}s {:>5} {}] {}",
+            t.as_secs_f64(),
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the stderr logger (idempotent). Returns the active level.
+pub fn init() -> log::LevelFilter {
+    let level = match std::env::var("CIM_ADAPT_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    };
+    if !INSTALLED.swap(true, Ordering::SeqCst) {
+        Lazy::force(&START);
+        let logger = Box::leak(Box::new(StderrLogger { max: level }));
+        let _ = log::set_logger(logger);
+        log::set_max_level(level);
+    }
+    level
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        let a = init();
+        let b = init();
+        assert_eq!(a, b);
+        log::info!("logging smoke test line");
+    }
+}

@@ -1,0 +1,97 @@
+//! Shared infrastructure: deterministic PRNG, JSON (de)serialization, CLI
+//! argument parsing, a scoped thread pool, logging, and the property-test
+//! kit used by the test suite.
+//!
+//! The offline crate registry for this build only ships the `xla` crate's
+//! dependency closure, so the usual suspects (`serde`, `clap`, `rand`,
+//! `rayon`, `proptest`, `criterion`) are re-implemented here at the scale
+//! this project needs. See DESIGN.md §5.
+
+pub mod prng;
+pub mod json;
+pub mod cli;
+pub mod logging;
+pub mod threadpool;
+pub mod testkit;
+pub mod bench;
+
+/// Ceiling division for unsigned integers: `ceil(a / b)`.
+///
+/// Used pervasively by the cost model (wordline segmentation, ADC rounds,
+/// macro counts). Panics if `b == 0`.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    assert!(b != 0, "ceil_div by zero");
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+/// Format a count with thousands separators, e.g. `1443840 -> "1,443,840"`.
+pub fn commas(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    let bytes = s.as_bytes();
+    for (i, b) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(*b as char);
+    }
+    out
+}
+
+/// Format a ratio as a signed percentage delta, paper-style: `-79%`, `+25%`.
+pub fn pct_delta(new: f64, base: f64) -> String {
+    if base == 0.0 {
+        return "n/a".to_string();
+    }
+    let d = (new - base) / base * 100.0;
+    format!("{}{:.0}%", if d >= 0.0 { "+" } else { "" }, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 28), 0);
+        assert_eq!(ceil_div(1, 28), 1);
+        assert_eq!(ceil_div(28, 28), 1);
+        assert_eq!(ceil_div(29, 28), 2);
+        assert_eq!(ceil_div(512, 28), 19); // the VGG segment count
+    }
+
+    #[test]
+    #[should_panic(expected = "ceil_div by zero")]
+    fn ceil_div_zero_panics() {
+        ceil_div(1, 0);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(38592, 256), 38656); // VGG9 load latency
+        assert_eq!(round_up(61440, 256), 61440); // VGG16: already aligned
+        assert_eq!(round_up(0, 256), 0);
+    }
+
+    #[test]
+    fn commas_formats() {
+        assert_eq!(commas(0), "0");
+        assert_eq!(commas(999), "999");
+        assert_eq!(commas(1000), "1,000");
+        assert_eq!(commas(1443840), "1,443,840");
+    }
+
+    #[test]
+    fn pct_delta_formats() {
+        assert_eq!(pct_delta(8186.0, 38592.0), "-79%");
+        assert_eq!(pct_delta(245760.0, 196608.0), "+25%");
+        assert_eq!(pct_delta(1.0, 0.0), "n/a");
+    }
+}

@@ -1,0 +1,340 @@
+//! Property-based testing kit (`proptest` substitute).
+//!
+//! Provides composable random-value generators over [`Pcg`] and a
+//! [`check`] runner that searches for a failing case and then **shrinks**
+//! it: integers shrink toward zero, vectors shrink by halving and element
+//! shrinking. Failures print the minimal counterexample and the seed so a
+//! run can be reproduced exactly.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath; compile-checked only)
+//! use cim_adapt::util::testkit::*;
+//! check("addition commutes", cases(200), pairs(usizes(0..1000), usizes(0..1000)), |&(a, b)| {
+//!     a + b == b + a
+//! });
+//! ```
+
+use std::fmt::Debug;
+use std::ops::Range;
+
+use super::prng::Pcg;
+
+/// A generator: produces values and knows how to shrink them.
+pub trait Gen {
+    type Value: Clone + Debug + PartialEq;
+    fn gen(&self, rng: &mut Pcg) -> Self::Value;
+    /// Candidate smaller values, in decreasing preference order.
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Runner configuration.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrinks: usize,
+}
+
+/// `cases(n)` — default config with `n` random cases.
+pub fn cases(n: usize) -> Config {
+    let seed = std::env::var("CIM_ADAPT_TEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC1A0_5EED);
+    Config {
+        cases: n,
+        seed,
+        max_shrinks: 500,
+    }
+}
+
+/// Run a property. Panics with the minimal counterexample on failure.
+pub fn check<G: Gen>(name: &str, cfg: Config, gen: G, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Pcg::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let v = gen.gen(&mut rng);
+        if !prop(&v) {
+            let minimal = shrink_failure(&gen, v, &prop, cfg.max_shrinks);
+            panic!(
+                "property '{name}' failed at case {case} (seed {:#x})\n  minimal counterexample: {minimal:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+fn shrink_failure<G: Gen>(
+    gen: &G,
+    mut failing: G::Value,
+    prop: &impl Fn(&G::Value) -> bool,
+    budget: usize,
+) -> G::Value {
+    let mut spent = 0;
+    'outer: while spent < budget {
+        for cand in gen.shrink(&failing) {
+            spent += 1;
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+            if spent >= budget {
+                break;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+// ---- primitive generators --------------------------------------------------
+
+/// Uniform `usize` in a half-open range.
+pub struct Usizes(pub Range<usize>);
+
+pub fn usizes(r: Range<usize>) -> Usizes {
+    assert!(!r.is_empty());
+    Usizes(r)
+}
+
+impl Gen for Usizes {
+    type Value = usize;
+    fn gen(&self, rng: &mut Pcg) -> usize {
+        self.0.start + rng.gen_range(self.0.end - self.0.start)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let lo = self.0.start;
+        let mut out = Vec::new();
+        if *v > lo {
+            out.push(lo);
+            out.push(lo + (*v - lo) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out.retain(|x| x != v);
+        out
+    }
+}
+
+/// Uniform `i64` in a half-open range.
+pub struct I64s(pub Range<i64>);
+
+pub fn i64s(r: Range<i64>) -> I64s {
+    assert!(!r.is_empty());
+    I64s(r)
+}
+
+impl Gen for I64s {
+    type Value = i64;
+    fn gen(&self, rng: &mut Pcg) -> i64 {
+        self.0.start + rng.gen_range((self.0.end - self.0.start) as usize) as i64
+    }
+    fn shrink(&self, v: &i64) -> Vec<i64> {
+        let mut out = Vec::new();
+        // Shrink toward 0 when it is in range, else toward the range start.
+        let target = if self.0.contains(&0) { 0 } else { self.0.start };
+        if *v != target {
+            out.push(target);
+            out.push(target + (*v - target) / 2);
+            if *v > target {
+                out.push(v - 1);
+            } else {
+                out.push(v + 1);
+            }
+        }
+        out.dedup();
+        out.retain(|x| x != v);
+        out
+    }
+}
+
+/// Uniform `f32` in `[lo, hi)`.
+pub struct F32s(pub f32, pub f32);
+
+pub fn f32s(lo: f32, hi: f32) -> F32s {
+    assert!(lo < hi);
+    F32s(lo, hi)
+}
+
+impl Gen for F32s {
+    type Value = f32;
+    fn gen(&self, rng: &mut Pcg) -> f32 {
+        self.0 + (self.1 - self.0) * rng.next_f32()
+    }
+    fn shrink(&self, v: &f32) -> Vec<f32> {
+        let target = if self.0 <= 0.0 && self.1 > 0.0 { 0.0 } else { self.0 };
+        if (*v - target).abs() > 1e-6 {
+            vec![target, target + (*v - target) / 2.0]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Vector of values from an element generator with random length.
+pub struct VecOf<G> {
+    pub elem: G,
+    pub len: Range<usize>,
+}
+
+pub fn vecs<G: Gen>(elem: G, len: Range<usize>) -> VecOf<G> {
+    assert!(!len.is_empty());
+    VecOf { elem, len }
+}
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+    fn gen(&self, rng: &mut Pcg) -> Vec<G::Value> {
+        let n = self.len.start + rng.gen_range(self.len.end - self.len.start);
+        (0..n).map(|_| self.elem.gen(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        // Shrink length first.
+        if v.len() > self.len.start {
+            let mut half = v.clone();
+            half.truncate(self.len.start.max(v.len() / 2));
+            out.push(half);
+            let mut minus1 = v.clone();
+            minus1.pop();
+            out.push(minus1);
+        }
+        // Then shrink each element (first shrink candidate only).
+        for i in 0..v.len() {
+            for cand in self.elem.shrink(&v[i]).into_iter().take(1) {
+                let mut w = v.clone();
+                w[i] = cand;
+                out.push(w);
+            }
+        }
+        out.retain(|x| x != v);
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairOf<A, B>(pub A, pub B);
+
+pub fn pairs<A: Gen, B: Gen>(a: A, b: B) -> PairOf<A, B> {
+    PairOf(a, b)
+}
+
+impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+    fn gen(&self, rng: &mut Pcg) -> Self::Value {
+        (self.0.gen(rng), self.1.gen(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Triple of independent generators.
+pub struct TripleOf<A, B, C>(pub A, pub B, pub C);
+
+pub fn triples<A: Gen, B: Gen, C: Gen>(a: A, b: B, c: C) -> TripleOf<A, B, C> {
+    TripleOf(a, b, c)
+}
+
+impl<A: Gen, B: Gen, C: Gen> Gen for TripleOf<A, B, C> {
+    type Value = (A::Value, B::Value, C::Value);
+    fn gen(&self, rng: &mut Pcg) -> Self::Value {
+        (self.0.gen(rng), self.1.gen(rng), self.2.gen(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone(), v.2.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink(&v.1)
+                .into_iter()
+                .map(|b| (v.0.clone(), b, v.2.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink(&v.2)
+                .into_iter()
+                .map(|c| (v.0.clone(), v.1.clone(), c)),
+        );
+        out
+    }
+}
+
+/// One of a fixed set of values.
+pub struct OneOf<T: Clone + Debug + PartialEq>(pub Vec<T>);
+
+pub fn one_of<T: Clone + Debug + PartialEq>(vals: Vec<T>) -> OneOf<T> {
+    assert!(!vals.is_empty());
+    OneOf(vals)
+}
+
+impl<T: Clone + Debug + PartialEq> Gen for OneOf<T> {
+    type Value = T;
+    fn gen(&self, rng: &mut Pcg) -> T {
+        self.0[rng.gen_range(self.0.len())].clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse twice is identity", cases(100), vecs(usizes(0..100), 0..20), |v| {
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            w == *v
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_small() {
+        let result = std::panic::catch_unwind(|| {
+            check("all values below 50", cases(300), usizes(0..100), |&v| v < 50);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Minimal counterexample for v<50 over 0..100 shrinks to exactly 50.
+        assert!(msg.contains("50"), "msg: {msg}");
+    }
+
+    #[test]
+    fn vec_shrink_reduces_length() {
+        let g = vecs(usizes(0..10), 0..50);
+        let v: Vec<usize> = (0..40).map(|i| i % 10).collect();
+        let shrunk = g.shrink(&v);
+        assert!(shrunk.iter().any(|s| s.len() < v.len()));
+    }
+
+    #[test]
+    fn pair_generation_in_bounds() {
+        let mut rng = Pcg::new(3);
+        let g = pairs(usizes(5..10), f32s(-1.0, 1.0));
+        for _ in 0..100 {
+            let (a, b) = g.gen(&mut rng);
+            assert!((5..10).contains(&a));
+            assert!((-1.0..1.0).contains(&b));
+        }
+    }
+
+    #[test]
+    fn i64_shrinks_toward_zero() {
+        let g = i64s(-100..100);
+        let cands = g.shrink(&80);
+        assert!(cands.contains(&0));
+    }
+}

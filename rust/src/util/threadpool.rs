@@ -1,0 +1,207 @@
+//! Fixed-size worker thread pool with a multi-producer job queue.
+//!
+//! `tokio` is not in the offline registry, so the coordinator's concurrency
+//! is built on this pool plus `std::sync::mpsc` channels: workers pull
+//! boxed closures from a shared queue; `scope`-style joins are provided via
+//! [`ThreadPool::run_all`], which blocks until every submitted job in the
+//! batch has finished.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+struct Shared {
+    pending: AtomicUsize,
+    done_cv: Condvar,
+    done_mx: Mutex<()>,
+}
+
+/// A fixed pool of worker threads.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `n` workers (clamped to ≥1).
+    pub fn new(n: usize) -> ThreadPool {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            pending: AtomicUsize::new(0),
+            done_cv: Condvar::new(),
+            done_mx: Mutex::new(()),
+        });
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            let shared = Arc::clone(&shared);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("cim-pool-{i}"))
+                    .spawn(move || loop {
+                        let msg = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match msg {
+                            Ok(Msg::Run(job)) => {
+                                job();
+                                if shared.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                                    let _g = shared.done_mx.lock().unwrap();
+                                    shared.done_cv.notify_all();
+                                }
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool worker"),
+            );
+        }
+        ThreadPool {
+            tx,
+            shared,
+            workers,
+            size: n,
+        }
+    }
+
+    /// Pool sized to the machine (`nproc`, capped at 16).
+    pub fn default_size() -> ThreadPool {
+        let n = thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16);
+        ThreadPool::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.pending.fetch_add(1, Ordering::AcqRel);
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Block until all previously submitted jobs have completed.
+    pub fn wait_idle(&self) {
+        let mut g = self.shared.done_mx.lock().unwrap();
+        while self.shared.pending.load(Ordering::Acquire) != 0 {
+            g = self.shared.done_cv.wait(g).unwrap();
+        }
+    }
+
+    /// Run a batch of closures to completion, collecting results in order.
+    pub fn run_all<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let slots: Arc<Mutex<Vec<Option<T>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let (tx, rx) = mpsc::channel::<()>();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let slots = Arc::clone(&slots);
+            let tx = tx.clone();
+            self.submit(move || {
+                let out = job();
+                slots.lock().unwrap()[i] = Some(out);
+                let _ = tx.send(());
+            });
+        }
+        drop(tx);
+        for _ in 0..n {
+            rx.recv().expect("worker completed");
+        }
+        Arc::try_unwrap(slots)
+            .ok()
+            .expect("all workers done")
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("slot filled"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn run_all_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let jobs: Vec<_> = (0..50)
+            .map(|i| move || i * i)
+            .collect();
+        let out = pool.run_all(jobs);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn pool_size_clamped() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&c);
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        drop(pool);
+        assert_eq!(c.load(Ordering::SeqCst), 10);
+    }
+}

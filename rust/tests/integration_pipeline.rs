@@ -1,0 +1,117 @@
+//! Integration: the whole Stage-1 + cost + mapping stack composed —
+//! morph → pack → schedule → simulate, across models and macro specs.
+
+use cim_adapt::arch::{by_name, MODEL_NAMES};
+use cim_adapt::cim::{CimMacro, WeightCell};
+use cim_adapt::config::{MacroSpec, MorphConfig};
+use cim_adapt::coordinator::MacroScheduler;
+use cim_adapt::latency::{model_cost, cost::allocated_usage};
+use cim_adapt::mapping::{pack_model, OccupancyGrid};
+use cim_adapt::morph::flow::morph_flow_synthetic;
+use cim_adapt::quant::lsq::LsqTensor;
+use cim_adapt::util::prng::Pcg;
+
+#[test]
+fn morph_pack_schedule_compose_for_all_models() {
+    let spec = MacroSpec::default();
+    for model in MODEL_NAMES {
+        let arch = by_name(model).unwrap();
+        let cfg = MorphConfig {
+            target_bl: 1024,
+            ..MorphConfig::default()
+        };
+        let out = morph_flow_synthetic(&arch, &spec, &cfg, 0.4, 5);
+        let mapping = pack_model(&out.arch, &spec);
+        assert_eq!(mapping.total_bls, out.cost.bls);
+        assert!(mapping.num_macros <= 4, "{model}: {}", mapping.num_macros);
+
+        let sched = MacroScheduler::new(&mapping, &out.cost, &spec, 4);
+        assert_eq!(sched.plan.reloads_per_inference, 0, "{model} fits in 4 macros");
+        assert_eq!(sched.plan.compute_cycles, out.cost.computing_latency as u64);
+
+        // Occupancy grids agree with the analytic usage.
+        let grids = OccupancyGrid::from_mapping(&mapping);
+        let fill: f64 = grids.iter().map(|g| g.fill()).sum::<f64>() / grids.len() as f64;
+        assert!((fill - mapping.occupancy()).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn morphed_model_executes_on_digital_twin() {
+    // Morph VGG9 to one macro (256 BLs), quantize random weights with
+    // LSQ, load the first layer onto the twin and run an input through —
+    // verifying the packer's layout drives the macro correctly.
+    let spec = MacroSpec::default();
+    let cfg = MorphConfig {
+        target_bl: 256,
+        ..MorphConfig::default()
+    };
+    let out = morph_flow_synthetic(&by_name("vgg9").unwrap(), &spec, &cfg, 0.5, 9);
+    let mapping = pack_model(&out.arch, &spec);
+    assert_eq!(mapping.num_macros, 1);
+
+    let mut rng = Pcg::new(3);
+    let mut mac = CimMacro::new(spec, 0.1, 16.0);
+    let layer0 = &mapping.layers[0];
+    let l0 = &out.arch.layers[0];
+    // Random float weights → LSQ 4-bit codes → cells.
+    let ws: Vec<f32> = (0..l0.rows() * l0.c_out)
+        .map(|_| (rng.next_f32() - 0.5) * 0.4)
+        .collect();
+    let t = LsqTensor::calibrate(&ws, 4);
+    for seg in 0..layer0.segments {
+        let cols: Vec<Vec<WeightCell>> = (0..layer0.c_out)
+            .map(|f| {
+                (0..layer0.rows_per_segment[seg])
+                    .map(|r| WeightCell::saturating(t.codes[f * l0.rows() + r], 4))
+                    .collect()
+            })
+            .collect();
+        mac.load_columns(layer0.column(seg, 0), &cols);
+    }
+    let codes: Vec<i32> = (0..l0.rows()).map(|_| rng.gen_range(16) as i32).collect();
+    let outv = mac.segmented_matvec(&[codes], layer0.c_out, t.step, false);
+    assert_eq!(outv.len(), layer0.c_out);
+    assert!(outv.iter().all(|v| v.is_finite()));
+    assert_eq!(mac.stats.reloads as usize, layer0.segments);
+}
+
+#[test]
+fn smaller_macro_specs_still_compose() {
+    // A 128×128 macro with 32 ADCs: everything recomputes consistently.
+    let spec = MacroSpec {
+        wordlines: 128,
+        bitlines: 128,
+        num_adcs: 32,
+        load_cycles_per_macro: 128,
+        ..MacroSpec::default()
+    };
+    let arch = by_name("vgg9").unwrap();
+    let cfg = MorphConfig {
+        target_bl: 512,
+        ..MorphConfig::default()
+    };
+    let out = morph_flow_synthetic(&arch, &spec, &cfg, 0.4, 7);
+    assert!(out.cost.bls <= 512);
+    let mapping = pack_model(&out.arch, &spec);
+    assert_eq!(mapping.num_macros, out.cost.macros_needed(&spec));
+    // 3×3 on 128 WLs: 14 channels per column → ≤ 126/128 rows used.
+    let u = allocated_usage(&model_cost(&out.arch, &spec), &spec);
+    assert!(u <= 126.0 / 128.0 + 1e-9, "u={u}");
+}
+
+#[test]
+fn arch_json_roundtrip_through_morph() {
+    // The morphed arch must survive the JSON interchange used between the
+    // python trainer and the rust coordinator.
+    let spec = MacroSpec::default();
+    let cfg = MorphConfig {
+        target_bl: 2048,
+        ..MorphConfig::default()
+    };
+    let out = morph_flow_synthetic(&by_name("resnet18").unwrap(), &spec, &cfg, 0.4, 13);
+    let j = out.arch.to_json();
+    let back = cim_adapt::arch::ModelArch::from_json(&j).unwrap();
+    assert_eq!(back, out.arch);
+    assert_eq!(model_cost(&back, &spec), out.cost);
+}

@@ -1,0 +1,212 @@
+//! Integration: the PJRT runtime against real AOT artifacts, and the
+//! bit-exact CIM digital twin against the python-emitted parity vectors.
+//!
+//! These tests **skip** (pass with a notice) when `artifacts/` has not
+//! been built (`make artifacts`) so `cargo test` works from a clean tree.
+
+use std::path::{Path, PathBuf};
+
+use cim_adapt::cim::{CimMacro, WeightCell};
+use cim_adapt::config::MacroSpec;
+use cim_adapt::data::{SynthCifar, NUM_CLASSES};
+use cim_adapt::runtime::ModelRuntime;
+use cim_adapt::util::json::Json;
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("vgg9_edge_meta.json").exists()
+}
+
+#[test]
+fn runtime_loads_and_classifies() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = ModelRuntime::load(&artifacts_dir(), "vgg9_edge").expect("load runtime");
+    assert!(rt.variants().contains(&"b1"));
+    // One image through b1.
+    let img = SynthCifar::sample(3, 0);
+    let logits = rt.infer("b1", &img.data).expect("infer");
+    assert_eq!(logits.len(), NUM_CLASSES);
+    assert!(logits.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn runtime_batch_variant_consistent_with_single() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let rt = ModelRuntime::load(&artifacts_dir(), "vgg9_edge").expect("load");
+    if !rt.variants().contains(&"b8") {
+        return;
+    }
+    // Same image replicated: batch logits must equal single-image logits.
+    let img = SynthCifar::sample(5, 2);
+    let single = rt.infer("b1", &img.data).unwrap();
+    let mut batch = Vec::new();
+    for _ in 0..8 {
+        batch.extend_from_slice(&img.data);
+    }
+    let all = rt.infer("b8", &batch).unwrap();
+    for row in all.chunks(NUM_CLASSES) {
+        for (a, b) in row.iter().zip(&single) {
+            assert!((a - b).abs() < 1e-4, "batch/single diverge: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn runtime_accuracy_matches_recorded_p2() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let rt = ModelRuntime::load(&artifacts_dir(), "vgg9_edge").expect("load");
+    let recorded = rt.meta.results.get("p2_acc").as_f64().unwrap_or(0.0);
+    // Classify 80 fresh images (indices beyond any quick-preset training
+    // range) and compare against the recorded accuracy.
+    let n = 80usize;
+    let mut correct = 0usize;
+    for k in 0..n {
+        let cls = k % NUM_CLASSES;
+        let img = SynthCifar::sample(cls, 5000 + k as u64);
+        let pred = rt.classify("b1", &img.data).unwrap()[0];
+        if pred == cls {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    // Shape check, not exact: fresh-sample accuracy should be in the same
+    // regime as the recorded test accuracy.
+    assert!(
+        acc >= recorded - 0.25,
+        "serving accuracy {acc:.2} far below recorded {recorded:.2}"
+    );
+    assert!(acc > 1.5 / NUM_CLASSES as f64, "barely above chance: {acc}");
+}
+
+#[test]
+fn pallas_variant_agrees_with_jnp_variant() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let rt = ModelRuntime::load(&artifacts_dir(), "vgg9_edge").expect("load");
+    if !rt.variants().contains(&"pallas_b1") {
+        return;
+    }
+    // The Pallas-kernel export and the jnp export encode identical
+    // arithmetic; logits must agree tightly.
+    for k in 0..5u64 {
+        let img = SynthCifar::sample((k % 10) as usize, 99 + k);
+        let a = rt.infer("b1", &img.data).unwrap();
+        let b = rt.infer("pallas_b1", &img.data).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-3, "pallas/jnp diverge: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn cim_twin_matches_python_parity_vectors() {
+    let path = artifacts_dir().join("parity_vectors.json");
+    if !path.exists() {
+        eprintln!("SKIP: parity vectors not built");
+        return;
+    }
+    let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let cases = j.get("cim_matmul").as_arr().expect("cases");
+    assert!(!cases.is_empty());
+    for (ci, case) in cases.iter().enumerate() {
+        let m = case.get("m").as_usize().unwrap();
+        let k = case.get("k").as_usize().unwrap();
+        let n = case.get("n").as_usize().unwrap();
+        let seg = case.get("seg").as_usize().unwrap();
+        let s_adc = case.get("s_adc").as_f64().unwrap() as f32;
+        let grab = |key: &str| -> Vec<i64> {
+            case.get(key)
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap() as i64)
+                .collect()
+        };
+        let xs = grab("x_codes");
+        let ws = grab("w_codes");
+        let expect = grab("out_codes");
+
+        // Lay the weights out segment-major, as the packer does, on a
+        // macro wide enough for all columns of this case.
+        let num_segs = k.div_ceil(seg);
+        let spec = MacroSpec {
+            bitlines: (num_segs * n).max(256),
+            ..MacroSpec::default()
+        };
+        let mut mac = CimMacro::new(spec, 1.0, s_adc);
+        for s in 0..num_segs {
+            let lo = s * seg;
+            let hi = (lo + seg).min(k);
+            let cols: Vec<Vec<WeightCell>> = (0..n)
+                .map(|j| {
+                    (lo..hi)
+                        .map(|r| WeightCell::saturating(ws[r * n + j] as i32, 4))
+                        .collect()
+                })
+                .collect();
+            mac.load_columns(s * n, &cols);
+        }
+        for row in 0..m {
+            let seg_codes: Vec<Vec<i32>> = (0..num_segs)
+                .map(|s| {
+                    let lo = s * seg;
+                    let hi = (lo + seg).min(k);
+                    (lo..hi).map(|c| xs[row * k + c] as i32).collect()
+                })
+                .collect();
+            // segmented_matvec returns scaled floats; with s_w = 1 the
+            // value is code_sum * s_adc → divide back to get codes.
+            let out = mac.segmented_matvec(&seg_codes, n, 1.0, false);
+            for (jcol, &o) in out.iter().enumerate() {
+                let got = (o / s_adc).round() as i64;
+                let want = expect[row * n + jcol];
+                assert_eq!(
+                    got, want,
+                    "case {ci} out[{row},{jcol}]: rust {got} vs python {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lsq_parity_vectors() {
+    let path = artifacts_dir().join("parity_vectors.json");
+    if !path.exists() {
+        eprintln!("SKIP: parity vectors not built");
+        return;
+    }
+    let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let case = j.get("lsq");
+    let step = case.get("step").as_f64().unwrap() as f32;
+    let ws: Vec<f32> = case
+        .get("w")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    let qs: Vec<i32> = case
+        .get("q")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as i32)
+        .collect();
+    let t = cim_adapt::quant::lsq::LsqTensor::quantize(&ws, step, 4);
+    assert_eq!(t.codes, qs, "rust LSQ codes differ from python");
+}

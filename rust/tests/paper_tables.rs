@@ -1,0 +1,194 @@
+//! Regression tests pinning the cost model to the paper's published
+//! numbers — every deterministic cell of Tables III–V, plus the macro
+//! usage values of Tables II/III and the Table VI operating points.
+
+use cim_adapt::arch::{by_name, resnet18, vgg16, vgg9};
+use cim_adapt::baselines::{eupq_point, xpert_point};
+use cim_adapt::config::{MacroSpec, MorphConfig};
+use cim_adapt::latency::cost::macro_usage;
+use cim_adapt::latency::model_cost;
+use cim_adapt::morph::flow::morph_flow_synthetic;
+
+fn spec() -> MacroSpec {
+    MacroSpec::default()
+}
+
+/// Table III baseline row, exactly.
+#[test]
+fn table3_vgg9_baseline_row() {
+    let c = model_cost(&vgg9(), &spec());
+    assert_eq!(c.params_m(), 9.218);
+    assert_eq!(c.bls, 38_592);
+    assert_eq!(c.macs, 724_992);
+    assert_eq!(c.psum_storage, 163_840);
+    assert_eq!(c.load_weight_latency, 38_656);
+    assert_eq!(c.computing_latency, 14_696);
+}
+
+/// Table IV baseline row, exactly.
+#[test]
+fn table4_vgg16_baseline_row() {
+    let c = model_cost(&vgg16(), &spec());
+    assert_eq!(c.params_m(), 14.710);
+    assert_eq!(c.bls, 61_440);
+    assert_eq!(c.macs, 1_443_840);
+    assert_eq!(c.psum_storage, 196_608);
+    assert_eq!(c.load_weight_latency, 61_440);
+    assert_eq!(c.computing_latency, 31_300);
+}
+
+/// Table V baseline row, exactly.
+#[test]
+fn table5_resnet18_baseline_row() {
+    let c = model_cost(&resnet18(), &spec());
+    assert_eq!(c.params_m(), 10.987);
+    assert_eq!(c.bls, 46_400);
+    assert_eq!(c.macs, 690_176);
+    assert_eq!(c.psum_storage, 65_536);
+    assert_eq!(c.load_weight_latency, 46_592);
+    assert_eq!(c.computing_latency, 16_860);
+}
+
+/// Table III morphed-row *macro usage* column: the paper's params +
+/// budget pairs reproduce the printed usage percentages exactly under
+/// `usage = params / (target_bl · 256)`.
+#[test]
+fn table3_macro_usage_column() {
+    let cases = [
+        (1.971e6, 8192usize, 93.98),
+        (0.924e6, 4096, 88.12),
+        (0.210e6, 1024, 80.11),
+        (0.098e6, 512, 74.77),
+    ];
+    for (params, bl, expect) in cases {
+        let u = macro_usage(params as usize, bl, &spec()) * 100.0;
+        assert!((u - expect).abs() < 0.05, "@{bl}: {u:.2} vs {expect}");
+    }
+}
+
+/// Table IV / V usage columns likewise (paper rounds params to 3
+/// decimals, so allow a slightly wider band).
+#[test]
+fn table4_5_macro_usage_columns() {
+    let cases = [
+        (1.983e6, 8192usize, 94.54), // VGG16
+        (0.952e6, 4096, 90.83),
+        (0.203e6, 1024, 77.58),
+        (0.088e6, 512, 67.07),
+        (1.804e6, 8192, 86.01), // ResNet18
+        (0.829e6, 4096, 78.77),
+        (0.132e6, 1024, 50.71),
+        (0.033e6, 512, 25.37),
+    ];
+    for (params, bl, expect) in cases {
+        let u = macro_usage(params as usize, bl, &spec()) * 100.0;
+        // ±0.4: the paper prints params at 3 decimals (e.g. its 0.132M /
+        // 50.71% ResNet row implies 132,934 actual params).
+        assert!(
+            (u - expect).abs() < 0.4,
+            "params={params} @{bl}: {u:.2} vs {expect}"
+        );
+    }
+}
+
+/// The morphed rows' *shape*: reductions fall in the paper's ranges.
+/// (Exact morphed channel configs are not published; our morphing engine
+/// must land in the same regime — DESIGN.md §4.)
+#[test]
+fn morphed_rows_reduction_shape() {
+    let s = spec();
+    for (model, base_load) in [("vgg9", 38_656usize), ("vgg16", 61_440), ("resnet18", 46_592)] {
+        let arch = by_name(model).unwrap();
+        let base = model_cost(&arch, &s);
+        for target in [8192usize, 4096, 1024, 512] {
+            let cfg = MorphConfig {
+                target_bl: target,
+                ..MorphConfig::default()
+            };
+            let out = morph_flow_synthetic(&arch, &s, &cfg, 0.4, 11);
+            // Load-latency cut 79–99% across the table (paper text).
+            let load_cut = 1.0 - out.cost.load_weight_latency as f64 / base_load as f64;
+            assert!(load_cut >= 0.75, "{model}@{target}: load cut {load_cut:.2}");
+            // Compute latency must not increase.
+            assert!(
+                out.cost.computing_latency <= base.computing_latency,
+                "{model}@{target}: compute grew"
+            );
+            // Compression ≥ 75% everywhere (paper: −79% .. −99.6%).
+            let p_cut = 1.0 - out.cost.params as f64 / base.params as f64;
+            assert!(p_cut >= 0.75, "{model}@{target}: params cut {p_cut:.2}");
+        }
+    }
+}
+
+/// Paper claim: "enhances CIM array utilization to 90%" / "up to 94.54%"
+/// — our morph at 8192/4096 must reach ≥85% on the VGG models.
+#[test]
+fn high_usage_at_large_budgets() {
+    let s = spec();
+    for model in ["vgg9", "vgg16"] {
+        let arch = by_name(model).unwrap();
+        for target in [8192usize, 4096] {
+            let cfg = MorphConfig {
+                target_bl: target,
+                ..MorphConfig::default()
+            };
+            let out = morph_flow_synthetic(&arch, &s, &cfg, 0.4, 11);
+            assert!(
+                out.macro_usage >= 0.85,
+                "{model}@{target}: usage {:.3}",
+                out.macro_usage
+            );
+        }
+    }
+}
+
+/// Table VI fixed columns.
+#[test]
+fn table6_operating_points() {
+    let e1 = eupq_point("resnet18");
+    assert_eq!(e1.activated_wordlines, 16);
+    assert_eq!(e1.memory_cell_bits, 1);
+    assert_eq!(e1.compression_pct, -87.50);
+    let x = xpert_point();
+    assert_eq!(x.activated_wordlines, 64);
+    assert_eq!(x.bits.0, 8.0);
+    // Ours activates all 256 wordlines: 16× / 4× more than E-UPQ / XPert.
+    assert_eq!(256 / e1.activated_wordlines, 16);
+    assert_eq!(256 / x.activated_wordlines, 4);
+}
+
+/// Paper conclusion: "achieves up to 93% compression". VGG16 @ 4096 is
+/// the −93.53% row; our flow should reach ≥90% there.
+#[test]
+fn headline_compression_vgg16() {
+    let s = spec();
+    let arch = vgg16();
+    let base = model_cost(&arch, &s);
+    let cfg = MorphConfig {
+        target_bl: 4096,
+        ..MorphConfig::default()
+    };
+    let out = morph_flow_synthetic(&arch, &s, &cfg, 0.4, 11);
+    let cut = 1.0 - out.cost.params as f64 / base.params as f64;
+    assert!(cut >= 0.90, "compression {cut:.3}");
+}
+
+/// ResNet18's usage penalty at small budgets (paper: 25.37% at 512) —
+/// our flow should show the same qualitative collapse relative to VGG.
+#[test]
+fn resnet_usage_collapses_at_512() {
+    let s = spec();
+    let cfg = MorphConfig {
+        target_bl: 512,
+        ..MorphConfig::default()
+    };
+    let r = morph_flow_synthetic(&resnet18(), &s, &cfg, 0.4, 11);
+    let v = morph_flow_synthetic(&vgg9(), &s, &cfg, 0.4, 11);
+    assert!(
+        r.macro_usage < v.macro_usage,
+        "resnet {:.3} should trail vgg9 {:.3} at 512 BLs (more layers → more ragged columns)",
+        r.macro_usage,
+        v.macro_usage
+    );
+}

@@ -1,0 +1,227 @@
+//! Property-based tests over the coordinator-side invariants: cost model,
+//! packing, morphing, quantization, and the CIM digital twin — using the
+//! in-crate testkit (shrinking generators; see `util::testkit`).
+
+use cim_adapt::arch::{by_name, vgg9, ConvLayer, LayerKind, ModelArch};
+use cim_adapt::cim::{Adc, CimMacro, WeightCell};
+use cim_adapt::config::{MacroSpec, MorphConfig};
+use cim_adapt::latency::{layer_cost, model_cost};
+use cim_adapt::mapping::pack_model;
+use cim_adapt::morph::expand::search_expansion_ratio;
+use cim_adapt::quant::lsq::{lsq_quantize, LsqTensor};
+use cim_adapt::quant::psum::{quantize_psum, segment_inputs};
+use cim_adapt::util::prng::Pcg;
+use cim_adapt::util::testkit::*;
+
+fn layer(c_in: usize, c_out: usize, hw: usize) -> ConvLayer {
+    ConvLayer {
+        name: "p".into(),
+        kind: LayerKind::Standard,
+        c_in,
+        c_out,
+        kernel: 3,
+        out_hw: hw,
+        input_from: None,
+    }
+}
+
+#[test]
+fn prop_layer_cost_monotone_in_channels() {
+    let spec = MacroSpec::default();
+    check(
+        "cost monotone in c_in/c_out",
+        cases(300),
+        triples(usizes(1..600), usizes(1..600), usizes(1..33)),
+        |&(c_in, c_out, hw)| {
+            let base = layer_cost(&layer(c_in, c_out, hw), &spec);
+            let more_in = layer_cost(&layer(c_in + 1, c_out, hw), &spec);
+            let more_out = layer_cost(&layer(c_in, c_out + 1, hw), &spec);
+            more_in.macs >= base.macs
+                && more_out.macs >= base.macs
+                && more_in.bls >= base.bls
+                && more_out.bls >= base.bls
+                && more_out.computing_latency >= base.computing_latency
+        },
+    );
+}
+
+#[test]
+fn prop_segments_cover_channels_exactly() {
+    check(
+        "segmentation covers exactly",
+        cases(300),
+        pairs(usizes(1..2000), usizes(1..257)),
+        |&(c_in, cpb)| {
+            let segs = segment_inputs(c_in, 3, cpb);
+            let covered: usize = segs.iter().map(|(lo, hi)| hi - lo).sum();
+            covered == c_in * 9
+                && segs.len() == c_in.div_ceil(cpb)
+                && segs.windows(2).all(|w| w[0].1 == w[1].0)
+        },
+    );
+}
+
+#[test]
+fn prop_packing_bls_equal_cost_bls() {
+    let spec = MacroSpec::default();
+    check(
+        "pack_model total = cost model BLs",
+        cases(60),
+        pairs(f32s(0.05, 1.2), usizes(0..3)),
+        |&(ratio, model_i)| {
+            let arch = by_name(["vgg9", "vgg16", "resnet18"][model_i])
+                .unwrap()
+                .scaled(ratio as f64);
+            let mapping = pack_model(&arch, &spec);
+            let cost = model_cost(&arch, &spec);
+            mapping.total_bls == cost.bls
+                && mapping.num_macros == cost.macros_needed(&spec)
+        },
+    );
+}
+
+#[test]
+fn prop_expansion_result_always_fits_budget() {
+    let spec = MacroSpec::default();
+    check(
+        "expansion ratio respects budget",
+        cases(40),
+        pairs(f32s(0.05, 0.6), usizes(256..9000)),
+        |&(prune, target)| {
+            let pruned = vgg9().scaled(prune as f64);
+            let r = search_expansion_ratio(&pruned, &spec, target, 0.001);
+            model_cost(&pruned.scaled(r), &spec).bls <= target
+        },
+    );
+}
+
+#[test]
+fn prop_lsq_roundtrip_error_bounded_by_half_step() {
+    check(
+        "LSQ |deq - w| ≤ step/2 inside range",
+        cases(500),
+        pairs(f32s(-0.6, 0.6), f32s(0.01, 0.3)),
+        |&(w, step)| {
+            let (_, deq) = lsq_quantize(w, step, 7, 7);
+            if w.abs() <= 7.0 * step {
+                (deq - w).abs() <= step / 2.0 + 1e-6
+            } else {
+                // Clipped: error is the distance to the rail.
+                (deq.abs() - 7.0 * step).abs() < 1e-5
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_lsq_tensor_codes_in_range() {
+    check(
+        "LSQ codes within ±(2^(b-1)-1)",
+        cases(200),
+        pairs(vecs(f32s(-3.0, 3.0), 1..200), usizes(2..9)),
+        |(ws, bits)| {
+            let t = LsqTensor::calibrate(ws, *bits as u32);
+            let q = (1i32 << (*bits as u32 - 1)) - 1;
+            t.codes.iter().all(|c| (-q..=q).contains(c))
+        },
+    );
+}
+
+#[test]
+fn prop_psum_quantizer_clips_and_rounds() {
+    check(
+        "psum codes bounded and error ≤ s/2 inside range",
+        cases(500),
+        pairs(i64s(-100_000..100_000), usizes(1..64)),
+        |&(acc, s)| {
+            let s_adc = s as f32;
+            let code = quantize_psum(acc, s_adc, 5);
+            if code.abs() < 15 {
+                (code as f64 * s_adc as f64 - acc as f64).abs() <= s_adc as f64 / 2.0 + 1e-6
+            } else {
+                code.abs() == 15
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_adc_monotone_in_input() {
+    let adc = Adc::new(5, 8.0);
+    check(
+        "ADC conversion is monotone",
+        cases(400),
+        pairs(i64s(-3000..3000), usizes(1..200)),
+        |&(a, delta)| adc.convert(a + delta as i64) >= adc.convert(a),
+    );
+}
+
+#[test]
+fn prop_macro_matvec_linear_in_repeated_segments() {
+    // Loading the same weights in two segments and driving the same codes
+    // doubles the (unclipped) output — adder-tree linearity.
+    let spec = MacroSpec::default();
+    check(
+        "adder tree accumulates linearly",
+        cases(100),
+        pairs(usizes(1..8), usizes(0..1000)),
+        |&(w_mag, seed)| {
+            let mut rng = Pcg::new(seed as u64);
+            let w = w_mag as i32;
+            // Keep |psum| ≤ 15·s_adc so nothing clips: codes ≤ 2, rows 4,
+            // |w| ≤ 7 → |analog| ≤ 56; s_adc = 4 → |scaled| ≤ 14.
+            let mut mac = CimMacro::new(spec, 1.0, 4.0);
+            let col: Vec<WeightCell> = (0..4).map(|_| WeightCell::saturating(w, 4)).collect();
+            mac.load_columns(0, &[col.clone()]);
+            mac.load_columns(1, &[col]);
+            let codes: Vec<i32> = (0..4).map(|_| rng.gen_range(3) as i32).collect();
+            let one = mac.segmented_matvec(&[codes.clone()], 1, 1.0, false)[0];
+            let two_segs = {
+                // segment-major: segment 1 occupies column index 1.
+                mac.segmented_matvec(&[codes.clone(), codes.clone()], 1, 1.0, false)[0]
+            };
+            (two_segs - 2.0 * one).abs() < 1e-4
+        },
+    );
+}
+
+#[test]
+fn prop_scaled_arch_valid_and_monotone() {
+    check(
+        "arch scaling keeps invariants",
+        cases(150),
+        pairs(f32s(0.05, 3.0), usizes(0..3)),
+        |&(ratio, model_i)| {
+            let base: ModelArch = by_name(["vgg9", "vgg16", "resnet18"][model_i]).unwrap();
+            let s = base.scaled(ratio as f64);
+            s.validate().is_ok()
+                && (ratio <= 1.0 || s.params() >= base.params())
+                && (ratio >= 1.0 || s.params() <= base.params())
+        },
+    );
+}
+
+#[test]
+fn prop_morph_flow_fits_any_budget() {
+    let spec = MacroSpec::default();
+    check(
+        "morph flow result ≤ budget",
+        cases(25),
+        triples(usizes(256..10_000), usizes(0..1000), f32s(0.1, 0.8)),
+        |&(target, seed, sparsity)| {
+            let cfg = MorphConfig {
+                target_bl: target,
+                rounds: 2,
+                ..MorphConfig::default()
+            };
+            let out = cim_adapt::morph::flow::morph_flow_synthetic(
+                &vgg9(),
+                &spec,
+                &cfg,
+                sparsity as f64,
+                seed as u64,
+            );
+            out.cost.bls <= target && out.arch.validate().is_ok()
+        },
+    );
+}
