@@ -1,0 +1,158 @@
+//! Microbench: fleet-level serving — hot-swap churn, residency hits, and
+//! the headline trade the subsystem exists to expose: under the same
+//! request mix, a morphed (compressed) model sustains strictly fewer
+//! reload cycles than its uncompressed ancestor, because it fits the
+//! pool where the ancestor pages.
+//!
+//! Emits `BENCH_fleet.json` (see `report::write_bench_summary`) so the
+//! perf trajectory is tracked across PRs.
+
+use cim_adapt::arch::by_name;
+use cim_adapt::config::{FleetConfig, MacroSpec, MorphConfig};
+use cim_adapt::data::SynthCifar;
+use cim_adapt::fleet::{EvictionPolicy, Fleet, FleetServer};
+use cim_adapt::morph::flow::morph_flow_synthetic;
+use cim_adapt::report::write_bench_summary;
+use cim_adapt::util::bench::{black_box, Runner};
+use cim_adapt::util::json::Json;
+
+fn tenant(model: &str, target_bl: usize, seed: u64) -> cim_adapt::arch::ModelArch {
+    morph_flow_synthetic(
+        &by_name(model).unwrap(),
+        &MacroSpec::default(),
+        &MorphConfig {
+            target_bl,
+            ..MorphConfig::default()
+        },
+        0.4,
+        seed,
+    )
+    .arch
+}
+
+fn cfg(num_macros: usize) -> FleetConfig {
+    FleetConfig {
+        num_macros,
+        max_batch: 8,
+        batch_timeout_us: 200,
+        queue_depth: 4096,
+        policy: EvictionPolicy::Lru,
+        ..FleetConfig::default()
+    }
+}
+
+/// Run an alternating primary/co request mix on a deterministic core and
+/// return total reload cycles.
+fn reload_cycles_under_mix(
+    primary: cim_adapt::arch::ModelArch,
+    co: cim_adapt::arch::ModelArch,
+    rounds: usize,
+) -> u64 {
+    let spec = MacroSpec::default();
+    let mut fleet = Fleet::new(&cfg(4), &spec);
+    fleet.register("primary", primary, false).unwrap();
+    fleet.register("co", co, false).unwrap();
+    let batch: Vec<Vec<f32>> = (0..4).map(|k| SynthCifar::sample(k, k as u64).data).collect();
+    for _ in 0..rounds {
+        fleet.serve_batch("primary", &batch).unwrap();
+        fleet.serve_batch("co", &batch).unwrap();
+    }
+    let snap = fleet.snapshot();
+    assert_eq!(
+        snap.reload_cycles,
+        snap.macro_load_cycles(),
+        "reload accounting must conserve"
+    );
+    snap.reload_cycles
+}
+
+fn main() {
+    let mut r = Runner::new("micro_fleet");
+    let spec = MacroSpec::default();
+    let img = SynthCifar::sample(0, 0);
+
+    // --- throughput benches over the threaded fleet ----------------------
+    // Residency-hit path: one tenant, always resident after first touch.
+    let h = FleetServer::start(&cfg(4), &spec);
+    h.register("edge", tenant("vgg9", 512, 11), false).unwrap();
+    r.bench("submit+wait roundtrip (resident tenant)", || {
+        let t = h.submit("edge", img.data.clone()).unwrap();
+        black_box(t.wait().unwrap());
+    });
+    r.bench_throughput("pipelined 64-deep (resident tenant)", "req", || {
+        let tickets: Vec<_> = (0..64)
+            .map(|_| h.submit("edge", img.data.clone()).unwrap())
+            .collect();
+        for t in tickets {
+            black_box(t.wait().unwrap());
+        }
+        64
+    });
+    h.shutdown();
+
+    // Hot-swap churn: three 2-macro tenants on 4 macros, round-robin →
+    // every dispatch may swap.
+    let h = FleetServer::start(&cfg(4), &spec);
+    for (i, m) in ["vgg9", "vgg16", "resnet18"].iter().enumerate() {
+        h.register(m, tenant(m, 512, 20 + i as u64), false).unwrap();
+    }
+    r.bench_throughput("round-robin 3 tenants (hot-swap churn)", "req", || {
+        let tickets: Vec<_> = (0..48)
+            .map(|k| {
+                let m = ["vgg9", "vgg16", "resnet18"][k % 3];
+                h.submit(m, img.data.clone()).unwrap()
+            })
+            .collect();
+        for t in tickets {
+            black_box(t.wait().unwrap());
+        }
+        48
+    });
+    let (metrics, churn_snap) = h.shutdown();
+    r.table(&format!(
+        "churn fleet: {} hot-swaps, {} evictions, {} reload cycles over {} requests",
+        churn_snap.hot_swaps, churn_snap.evictions, churn_snap.reload_cycles, metrics.completed
+    ));
+
+    // --- the compression trade (deterministic cycle counts) --------------
+    // Same alternating mix vs the same co-tenant; only the primary's
+    // compression differs. 93%-compressed VGG9 (512 BLs ≈ 2 macros) fits
+    // beside the co-tenant; uncompressed VGG9 (151 macros) pages.
+    let rounds = 16;
+    let co = tenant("vgg16", 512, 30);
+    let morphed_cycles = reload_cycles_under_mix(tenant("vgg9", 512, 31), co.clone(), rounds);
+    let uncompressed_cycles =
+        reload_cycles_under_mix(by_name("vgg9").unwrap(), co, rounds);
+    r.table(&format!(
+        "reload cycles over {rounds} alternating rounds: morphed {morphed_cycles} vs uncompressed {uncompressed_cycles} ({:.1}× fewer)",
+        uncompressed_cycles as f64 / morphed_cycles.max(1) as f64
+    ));
+    assert!(
+        morphed_cycles < uncompressed_cycles,
+        "morphed variant must sustain strictly fewer reload cycles \
+         ({morphed_cycles} vs {uncompressed_cycles})"
+    );
+
+    // --- machine-readable summary ----------------------------------------
+    let summary = Json::obj()
+        .with("bench", "micro_fleet")
+        .with("timings", r.results_json())
+        .with("serving", metrics.to_json())
+        .with("churn", churn_snap.to_json())
+        .with(
+            "compression_trade",
+            Json::obj()
+                .with("rounds", rounds)
+                .with("morphed_reload_cycles", morphed_cycles)
+                .with("uncompressed_reload_cycles", uncompressed_cycles)
+                .with(
+                    "reload_ratio",
+                    uncompressed_cycles as f64 / morphed_cycles.max(1) as f64,
+                ),
+        );
+    match write_bench_summary("fleet", &summary) {
+        Ok(path) => r.table(&format!("(wrote {})", path.display())),
+        Err(e) => r.table(&format!("(BENCH_fleet.json not written: {e})")),
+    }
+    r.finish();
+}

@@ -8,7 +8,9 @@ use cim_adapt::arch::vgg9;
 use cim_adapt::config::{MacroSpec, ServeConfig};
 use cim_adapt::coordinator::server::{Backend, EdgeServer};
 use cim_adapt::data::SynthCifar;
+use cim_adapt::report::write_bench_summary;
 use cim_adapt::util::bench::{black_box, Runner};
+use cim_adapt::util::json::Json;
 
 fn main() {
     let mut r = Runner::new("micro_serving");
@@ -38,7 +40,7 @@ fn main() {
         }
         64
     });
-    h.shutdown();
+    let sim_snap = h.shutdown();
 
     // PJRT path (skipped when artifacts are absent).
     let artifacts = Path::new("artifacts");
@@ -93,6 +95,16 @@ fn main() {
         ));
     } else {
         r.table("(PJRT section skipped: run `make artifacts` first)");
+    }
+
+    // Machine-readable summary for cross-PR perf tracking.
+    let summary = Json::obj()
+        .with("bench", "micro_serving")
+        .with("timings", r.results_json())
+        .with("sim_serving", sim_snap.to_json());
+    match write_bench_summary("serving", &summary) {
+        Ok(path) => r.table(&format!("(wrote {})", path.display())),
+        Err(e) => r.table(&format!("(BENCH_serving.json not written: {e})")),
     }
     r.finish();
 }

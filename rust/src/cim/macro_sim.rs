@@ -28,6 +28,31 @@ pub struct MacroStats {
     pub reloads: u64,
 }
 
+impl MacroStats {
+    /// Fold another macro's counters into this one.
+    pub fn absorb(&mut self, other: &MacroStats) {
+        self.compute_cycles += other.compute_cycles;
+        self.load_cycles += other.load_cycles;
+        self.conversions += other.conversions;
+        self.reloads += other.reloads;
+    }
+
+    /// Aggregate counters across a whole array pool (fleet accounting:
+    /// the fleet-level totals must equal this sum exactly).
+    pub fn aggregate<'a>(stats: impl IntoIterator<Item = &'a MacroStats>) -> MacroStats {
+        let mut total = MacroStats::default();
+        for s in stats {
+            total.absorb(s);
+        }
+        total
+    }
+
+    /// Total busy cycles (compute + weight loading).
+    pub fn busy_cycles(&self) -> u64 {
+        self.compute_cycles + self.load_cycles
+    }
+}
+
 /// Result of digitizing one span of bitlines.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PassResult {
@@ -212,6 +237,25 @@ mod tests {
         m.load_columns(0, &[cells(&[3, -2])]);
         let out = m.segmented_matvec(&[vec![2, 5]], 1, 0.1, false);
         assert!((out[0] - (-0.4)).abs() < 1e-6, "out={}", out[0]);
+    }
+
+    #[test]
+    fn stats_aggregate_across_macros() {
+        let mut a = CimMacro::new(spec(), 1.0, 1.0);
+        let mut b = CimMacro::new(spec(), 1.0, 1.0);
+        a.load_columns(0, &[cells(&[1; 9])]);
+        b.load_columns(0, &[cells(&[2; 9])]);
+        b.load_columns(0, &[cells(&[3; 9])]);
+        a.pass(&[1; 9], 0, 1);
+        let total = MacroStats::aggregate([&a.stats, &b.stats]);
+        assert_eq!(total.reloads, 3);
+        assert_eq!(total.load_cycles, 3 * 256);
+        assert_eq!(total.compute_cycles, 2); // 1 evaluate + 1 ADC round
+        assert_eq!(total.conversions, 1);
+        assert_eq!(total.busy_cycles(), 3 * 256 + 2);
+        let mut manual = a.stats;
+        manual.absorb(&b.stats);
+        assert_eq!(manual, total);
     }
 
     #[test]

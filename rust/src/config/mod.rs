@@ -7,6 +7,7 @@
 
 use std::path::Path;
 
+use crate::fleet::EvictionPolicy;
 use crate::util::json::Json;
 
 /// Physical description of one CIM macro (paper Fig. 1: 256×256 array,
@@ -269,6 +270,69 @@ impl ServeConfig {
     }
 }
 
+/// Fleet-level (multi-tenant) serving parameters: a pool of `num_macros`
+/// physical CIM macro arrays shared by every registered model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Physical macros in the pool.
+    pub num_macros: usize,
+    /// Max per-model batch the fleet dispatcher forms.
+    pub max_batch: usize,
+    /// Per-model batch formation timeout (µs).
+    pub batch_timeout_us: u64,
+    /// Bounded fleet queue depth (backpressure beyond this).
+    pub queue_depth: usize,
+    /// Eviction policy when aggregate demand exceeds the pool.
+    pub policy: EvictionPolicy,
+    /// Clock frequency for cycle → wall-time conversion (MHz).
+    pub clock_mhz: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            num_macros: 4,
+            max_batch: 8,
+            batch_timeout_us: 2000,
+            queue_depth: 1024,
+            policy: EvictionPolicy::Lru,
+            clock_mhz: 200.0,
+        }
+    }
+}
+
+impl FleetConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("num_macros", self.num_macros)
+            .with("max_batch", self.max_batch)
+            .with("batch_timeout_us", self.batch_timeout_us)
+            .with("queue_depth", self.queue_depth)
+            .with("policy", self.policy.as_str())
+            .with("clock_mhz", self.clock_mhz)
+    }
+
+    pub fn from_json(j: &Json) -> FleetConfig {
+        let d = FleetConfig::default();
+        FleetConfig {
+            num_macros: j.get("num_macros").as_usize().unwrap_or(d.num_macros),
+            max_batch: j.get("max_batch").as_usize().unwrap_or(d.max_batch),
+            batch_timeout_us: j
+                .get("batch_timeout_us")
+                .as_usize()
+                .map(|v| v as u64)
+                .unwrap_or(d.batch_timeout_us),
+            queue_depth: j.get("queue_depth").as_usize().unwrap_or(d.queue_depth),
+            policy: j
+                .get("policy")
+                .as_str()
+                .and_then(EvictionPolicy::parse)
+                .unwrap_or(d.policy),
+            clock_mhz: j.get("clock_mhz").as_f64().unwrap_or(d.clock_mhz),
+        }
+    }
+}
+
 /// Top-level config bundle.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
@@ -276,6 +340,7 @@ pub struct Config {
     pub morph: MorphConfig,
     pub quant: QuantConfig,
     pub serve: ServeConfig,
+    pub fleet: FleetConfig,
 }
 
 impl Config {
@@ -285,6 +350,7 @@ impl Config {
             .with("morph", self.morph.to_json())
             .with("quant", self.quant.to_json())
             .with("serve", self.serve.to_json())
+            .with("fleet", self.fleet.to_json())
     }
 
     pub fn from_json(j: &Json) -> Config {
@@ -293,6 +359,7 @@ impl Config {
             morph: MorphConfig::from_json(j.get("morph")),
             quant: QuantConfig::from_json(j.get("quant")),
             serve: ServeConfig::from_json(j.get("serve")),
+            fleet: FleetConfig::from_json(j.get("fleet")),
         }
     }
 
@@ -355,6 +422,22 @@ mod tests {
         c.save(&path).unwrap();
         let back = Config::load(&path).unwrap();
         assert_eq!(back, c);
+    }
+
+    #[test]
+    fn fleet_config_roundtrip_and_policy_parse() {
+        let mut c = FleetConfig::default();
+        c.num_macros = 16;
+        c.policy = EvictionPolicy::CostWeighted;
+        let back = FleetConfig::from_json(&c.to_json());
+        assert_eq!(back, c);
+        // Unknown policy string falls back to the default (LRU).
+        let j = Json::parse(r#"{"policy": "mystery"}"#).unwrap();
+        assert_eq!(FleetConfig::from_json(&j).policy, EvictionPolicy::Lru);
+        let j = Json::parse(r#"{"policy": "cost-weighted", "num_macros": 2}"#).unwrap();
+        let f = FleetConfig::from_json(&j);
+        assert_eq!(f.policy, EvictionPolicy::CostWeighted);
+        assert_eq!(f.num_macros, 2);
     }
 
     #[test]

@@ -99,6 +99,44 @@ mod tests {
     }
 
     #[test]
+    fn lone_request_waits_out_the_timeout_then_dispatches() {
+        // The canonical timeout path: one queued request, nothing else
+        // arrives → a partial batch (size 1 < max_batch) is dispatched
+        // only after `batch_timeout` has elapsed.
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(1)).unwrap();
+        let timeout_us = 5_000u64;
+        let b = Batcher::new(rx, BatchPolicy::new(8, timeout_us));
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        let elapsed = t0.elapsed();
+        assert_eq!(batch.len(), 1, "partial batch with fewer than max_batch");
+        assert!(
+            elapsed >= Duration::from_micros(timeout_us),
+            "dispatched after the timeout window, elapsed {elapsed:?}"
+        );
+        drop(tx);
+    }
+
+    #[test]
+    fn max_batch_zero_clamps_to_one() {
+        // A zero max_batch would make batches impossible; the policy
+        // clamps it to 1 and the batcher dispatches singletons.
+        let policy = BatchPolicy::new(0, 1_000);
+        assert_eq!(policy.max_batch, 1);
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(1)).unwrap();
+        tx.send(req(2)).unwrap();
+        let b = Batcher::new(rx, policy);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1, "clamped policy dispatches singletons");
+        assert_eq!(batch[0].id, 1);
+        let batch2 = b.next_batch().unwrap();
+        assert_eq!(batch2.len(), 1);
+        assert_eq!(batch2[0].id, 2);
+    }
+
+    #[test]
     fn none_when_closed() {
         let (tx, rx) = mpsc::channel::<InferRequest>();
         drop(tx);

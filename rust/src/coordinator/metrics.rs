@@ -3,6 +3,8 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::util::json::Json;
+
 /// Latency statistics over recorded samples (µs).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct LatencyStats {
@@ -46,6 +48,32 @@ pub struct MetricsSnapshot {
     pub latency: LatencyStats,
     pub throughput_rps: f64,
     pub elapsed_s: f64,
+}
+
+impl MetricsSnapshot {
+    /// Machine-readable form for `BENCH_*.json` summaries and dashboards.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("submitted", self.submitted)
+            .with("completed", self.completed)
+            .with("rejected", self.rejected)
+            .with("batches", self.batches)
+            .with("mean_batch", self.mean_batch)
+            .with("device_cycles", self.device_cycles)
+            .with("weight_reloads", self.weight_reloads)
+            .with("throughput_rps", self.throughput_rps)
+            .with("elapsed_s", self.elapsed_s)
+            .with(
+                "latency_us",
+                Json::obj()
+                    .with("count", self.latency.count)
+                    .with("mean", self.latency.mean_us)
+                    .with("p50", self.latency.p50_us)
+                    .with("p95", self.latency.p95_us)
+                    .with("p99", self.latency.p99_us)
+                    .with("max", self.latency.max_us),
+            )
+    }
 }
 
 struct Inner {
@@ -179,5 +207,21 @@ mod tests {
     fn percentiles_ordered() {
         let s = LatencyStats::from_samples((0..1000).collect());
         assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us && s.p99_us <= s.max_us);
+    }
+
+    #[test]
+    fn snapshot_serializes_to_json() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_batch(2, 500, 1);
+        m.on_complete(120);
+        m.on_complete(140);
+        let j = m.snapshot().to_json();
+        assert_eq!(j.get("submitted").as_usize(), Some(1));
+        assert_eq!(j.get("weight_reloads").as_usize(), Some(1));
+        assert_eq!(j.at(&["latency_us", "count"]).as_usize(), Some(2));
+        // Round-trips through the parser.
+        let back = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(back.get("device_cycles").as_usize(), Some(500));
     }
 }

@@ -249,6 +249,25 @@ fn argmax(row: &[f32]) -> usize {
         .unwrap_or(0)
 }
 
+/// The Sim backend's deterministic classifier: per-class sums over image
+/// chunks. Shared with the fleet server so single-model and multi-tenant
+/// serving agree on sim outputs for identical inputs.
+pub fn sim_logits(image: &[f32], num_classes: usize) -> Vec<f32> {
+    let n = image.len().max(1);
+    let k = num_classes.max(1);
+    let mut sums = vec![0.0f32; k];
+    for (i, v) in image.iter().enumerate() {
+        sums[(i * k / n).min(k - 1)] += v;
+    }
+    sums
+}
+
+/// Argmax over [`sim_logits`] (convenience for sim execution paths).
+pub fn sim_classify(image: &[f32], num_classes: usize) -> (usize, Vec<f32>) {
+    let logits = sim_logits(image, num_classes);
+    (argmax(&logits), logits)
+}
+
 fn execute(engine: &Engine, batch: &[InferRequest]) -> Result<(Vec<usize>, Vec<f32>)> {
     match engine {
         Engine::Pjrt(rt) => {
@@ -281,12 +300,8 @@ fn execute(engine: &Engine, batch: &[InferRequest]) -> Result<(Vec<usize>, Vec<f
             let mut classes = Vec::with_capacity(batch.len());
             let mut logits = Vec::with_capacity(batch.len() * k);
             for req in batch {
-                let n = req.image.len().max(1);
-                let mut sums = vec![0.0f32; k];
-                for (i, v) in req.image.iter().enumerate() {
-                    sums[(i * k / n).min(k - 1)] += v;
-                }
-                classes.push(argmax(&sums));
+                let (class, sums) = sim_classify(&req.image, k);
+                classes.push(class);
                 logits.extend_from_slice(&sums);
             }
             Ok((classes, logits))

@@ -1,0 +1,130 @@
+//! Eviction policy: who loses their macros when aggregate demand exceeds
+//! the pool.
+//!
+//! Two pluggable policies, both deterministic (ties broken by model name
+//! so replays are bit-stable):
+//!
+//! * **LRU** — evict the model whose last request is oldest. Good when
+//!   the request mix has temporal locality.
+//! * **Cost-weighted** — evict the model that is *cheapest to bring
+//!   back* (fewest reload cycles, i.e. the most compressed footprint),
+//!   breaking ties toward staleness. This is the policy that makes the
+//!   paper's compression story pay at fleet scale: a 93%-compressed
+//!   model is both less likely to *cause* evictions (smaller footprint)
+//!   and cheaper to re-admit after one.
+//!
+//! Pinned models are excluded from candidacy by the placer before the
+//! policy ever sees them.
+
+/// Which victim-selection rule the fleet uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvictionPolicy {
+    #[default]
+    Lru,
+    CostWeighted,
+}
+
+impl EvictionPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EvictionPolicy::Lru => "lru",
+            EvictionPolicy::CostWeighted => "cost-weighted",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EvictionPolicy> {
+        match s {
+            "lru" => Some(EvictionPolicy::Lru),
+            "cost-weighted" | "cost" => Some(EvictionPolicy::CostWeighted),
+            _ => None,
+        }
+    }
+}
+
+/// One evictable resident model, as the placer describes it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VictimCandidate {
+    pub name: String,
+    /// Placer clock tick of the model's last use (smaller = staler).
+    pub last_used: u64,
+    /// Cycles a future hot-swap back in would cost.
+    pub reload_cycles: u64,
+    /// Physical macros the model currently holds.
+    pub macros_held: usize,
+}
+
+/// Applies an [`EvictionPolicy`] over victim candidates.
+#[derive(Debug, Clone, Copy)]
+pub struct Evictor {
+    pub policy: EvictionPolicy,
+}
+
+impl Evictor {
+    pub fn new(policy: EvictionPolicy) -> Evictor {
+        Evictor { policy }
+    }
+
+    /// Pick the next victim, or `None` when there are no candidates.
+    pub fn choose<'a>(&self, candidates: &'a [VictimCandidate]) -> Option<&'a VictimCandidate> {
+        match self.policy {
+            EvictionPolicy::Lru => candidates
+                .iter()
+                .min_by_key(|c| (c.last_used, c.name.as_str())),
+            EvictionPolicy::CostWeighted => candidates
+                .iter()
+                .min_by_key(|c| (c.reload_cycles, c.last_used, c.name.as_str())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(name: &str, last_used: u64, reload: u64) -> VictimCandidate {
+        VictimCandidate {
+            name: name.to_string(),
+            last_used,
+            reload_cycles: reload,
+            macros_held: 1,
+        }
+    }
+
+    #[test]
+    fn lru_picks_stalest() {
+        let e = Evictor::new(EvictionPolicy::Lru);
+        let cs = vec![cand("a", 5, 100), cand("b", 2, 9000), cand("c", 8, 1)];
+        assert_eq!(e.choose(&cs).unwrap().name, "b");
+    }
+
+    #[test]
+    fn cost_weighted_picks_cheapest_reload() {
+        let e = Evictor::new(EvictionPolicy::CostWeighted);
+        let cs = vec![cand("a", 5, 100), cand("b", 2, 9000), cand("c", 8, 256)];
+        assert_eq!(e.choose(&cs).unwrap().name, "a");
+    }
+
+    #[test]
+    fn ties_break_deterministically() {
+        let lru = Evictor::new(EvictionPolicy::Lru);
+        let cs = vec![cand("z", 3, 10), cand("a", 3, 10)];
+        assert_eq!(lru.choose(&cs).unwrap().name, "a");
+        let cw = Evictor::new(EvictionPolicy::CostWeighted);
+        assert_eq!(cw.choose(&cs).unwrap().name, "a");
+    }
+
+    #[test]
+    fn empty_candidates_yield_none() {
+        let e = Evictor::new(EvictionPolicy::Lru);
+        assert!(e.choose(&[]).is_none());
+    }
+
+    #[test]
+    fn policy_string_roundtrip() {
+        for p in [EvictionPolicy::Lru, EvictionPolicy::CostWeighted] {
+            assert_eq!(EvictionPolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(EvictionPolicy::parse("cost"), Some(EvictionPolicy::CostWeighted));
+        assert_eq!(EvictionPolicy::parse("mru"), None);
+    }
+}

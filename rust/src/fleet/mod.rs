@@ -1,0 +1,41 @@
+//! Fleet subsystem: multi-tenant serving across a pool of CIM macro
+//! arrays.
+//!
+//! The paper's Stage-1 adaptation exists to cut weight-loading latency on
+//! size-limited macros; this layer is where that pays off operationally.
+//! A fleet owns `N` physical macros and serves **multiple adapted model
+//! variants concurrently**:
+//!
+//! * [`registry`] — register/retire model variants with their
+//!   [`mapping`](crate::mapping) footprints and
+//!   [`latency`](crate::latency) cost profiles ([`ModelRegistry`]).
+//! * [`placer`] — reload-aware bin-packing of footprints onto physical
+//!   macros; every placement change is charged the cost model's reload
+//!   cycles ([`Placer`], [`SwapEvent`]).
+//! * [`evictor`] — pluggable victim selection (LRU or reload-cost
+//!   weighted; pinned models are untouchable) when aggregate demand
+//!   exceeds the pool ([`Evictor`], [`EvictionPolicy`]).
+//! * [`server`] — per-model routing and batching over the shared pool,
+//!   with hot-swap (reload) accounting flowing into the same
+//!   [`MacroStats`](crate::cim::MacroStats) /
+//!   [`Metrics`](crate::coordinator::Metrics) counters the single-model
+//!   path uses ([`Fleet`], [`FleetServer`]).
+//!
+//! Invariant (asserted by `rust/tests/integration_fleet.rs`): fleet-level
+//! reload cycles equal the sum of per-macro `MacroStats::load_cycles` —
+//! reload cost is only ever charged through a macro.
+//!
+//! The operational payoff of compression, demonstrated by
+//! `benches/micro_fleet.rs`: a morphed model fits where its uncompressed
+//! ancestor forces evictions or pages, so the same request mix sustains
+//! strictly fewer reload cycles.
+
+pub mod evictor;
+pub mod placer;
+pub mod registry;
+pub mod server;
+
+pub use evictor::{EvictionPolicy, Evictor, VictimCandidate};
+pub use placer::{Placement, Placer, SwapEvent};
+pub use registry::{ModelEntry, ModelRegistry};
+pub use server::{BatchOutcome, Fleet, FleetHandle, FleetServer, FleetSnapshot};

@@ -1,0 +1,342 @@
+//! Reload-aware placement: bin-packs model footprints onto the fleet's
+//! physical macros and charges the cost model's reload cycles for every
+//! placement change.
+//!
+//! Because all macros in the pool are identical, a model's
+//! single-device packing ([`ModelMapping`](crate::mapping::ModelMapping))
+//! is reused verbatim: logical macro `i` lands on the `i`-th physical
+//! macro assigned to the model, so a placement is simply a set of
+//! `macros_needed` physical slots. The interesting work is *when to pay
+//! for moving weights*: a resident model serves for free; a non-resident
+//! model costs [`ModelCost::reload_cycles`](crate::latency::ModelCost::reload_cycles)
+//! to swap in, and may force evictions chosen by the [`Evictor`].
+
+use std::collections::BTreeMap;
+
+use crate::config::MacroSpec;
+
+use super::evictor::{Evictor, VictimCandidate};
+use super::registry::{ModelEntry, ModelRegistry};
+
+/// Where one resident model currently lives.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    pub model: String,
+    pub macros: Vec<usize>,
+}
+
+/// Outcome of ensuring a model is resident.
+///
+/// Deliberately carries no cycle counts: the fleet's `charge_reloads`
+/// is the single place reload cycles enter the books (one
+/// `load_cycles_per_macro` per hot-swapped macro), so placement results
+/// only say *what moved*, never *what it cost*.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SwapEvent {
+    pub model: String,
+    /// True when weights were (re)loaded; false for a residency hit.
+    pub hot_swap: bool,
+    /// Models evicted to make room (in eviction order).
+    pub evicted: Vec<String>,
+    /// Physical macros now hosting the model.
+    pub macros: Vec<usize>,
+}
+
+/// Ownership state of the fleet's physical macros.
+#[derive(Debug, Clone)]
+pub struct Placer {
+    owner: Vec<Option<String>>,
+    resident: BTreeMap<String, Vec<usize>>,
+    last_used: BTreeMap<String, u64>,
+    clock: u64,
+    /// Models evicted to make room.
+    pub evictions: u64,
+}
+
+impl Placer {
+    pub fn new(num_macros: usize) -> Placer {
+        assert!(num_macros > 0, "fleet needs at least one macro");
+        Placer {
+            owner: vec![None; num_macros],
+            resident: BTreeMap::new(),
+            last_used: BTreeMap::new(),
+            clock: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn num_macros(&self) -> usize {
+        self.owner.len()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.owner.iter().filter(|o| o.is_none()).count()
+    }
+
+    /// Indices of currently unowned macros, ascending.
+    pub fn free_macros(&self) -> Vec<usize> {
+        self.owner
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| o.is_none())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn is_resident(&self, name: &str) -> bool {
+        self.resident.contains_key(name)
+    }
+
+    pub fn resident_macros(&self, name: &str) -> Option<&[usize]> {
+        self.resident.get(name).map(|v| v.as_slice())
+    }
+
+    /// Every current placement, by model name.
+    pub fn placements(&self) -> Vec<Placement> {
+        self.resident
+            .iter()
+            .map(|(model, macros)| Placement {
+                model: model.clone(),
+                macros: macros.clone(),
+            })
+            .collect()
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Record a use of a resident model (recency for LRU).
+    pub fn touch(&mut self, name: &str) {
+        if self.resident.contains_key(name) {
+            let t = self.tick();
+            self.last_used.insert(name.to_string(), t);
+        }
+    }
+
+    /// Free a model's macros (eviction or retirement). Returns the
+    /// macros released (empty when the model was not resident).
+    pub fn release(&mut self, name: &str) -> Vec<usize> {
+        let Some(macros) = self.resident.remove(name) else {
+            return Vec::new();
+        };
+        for &m in &macros {
+            self.owner[m] = None;
+        }
+        self.last_used.remove(name);
+        macros
+    }
+
+    /// Evict every non-pinned resident (used before paging an oversized
+    /// model through the pool). Returns the victims in eviction order.
+    pub fn evict_all_evictable(&mut self, registry: &ModelRegistry) -> Vec<String> {
+        let victims: Vec<String> = self
+            .resident
+            .keys()
+            .filter(|n| !registry.get(n).map(|e| e.pinned).unwrap_or(false))
+            .cloned()
+            .collect();
+        for v in &victims {
+            self.release(v);
+            self.evictions += 1;
+        }
+        victims
+    }
+
+    /// Ensure `entry` is resident, evicting per `evictor` as needed.
+    ///
+    /// Errors when the model needs more macros than the whole pool
+    /// (callers handle that via the paging path) or when pinned residents
+    /// block the required space.
+    pub fn place(
+        &mut self,
+        entry: &ModelEntry,
+        registry: &ModelRegistry,
+        evictor: &Evictor,
+        spec: &MacroSpec,
+    ) -> anyhow::Result<SwapEvent> {
+        if let Some(macros) = self.resident.get(&entry.name) {
+            let macros = macros.clone();
+            self.touch(&entry.name);
+            return Ok(SwapEvent {
+                model: entry.name.clone(),
+                hot_swap: false,
+                evicted: Vec::new(),
+                macros,
+            });
+        }
+        let need = entry.macros_needed();
+        anyhow::ensure!(
+            need <= self.num_macros(),
+            "model '{}' needs {need} macros but the fleet has {}",
+            entry.name,
+            self.num_macros()
+        );
+        let mut evicted = Vec::new();
+        while self.free_count() < need {
+            let candidates: Vec<VictimCandidate> = self
+                .resident
+                .iter()
+                .filter(|(n, _)| !registry.get(n).map(|e| e.pinned).unwrap_or(false))
+                .map(|(n, macros)| VictimCandidate {
+                    name: n.clone(),
+                    last_used: self.last_used.get(n).copied().unwrap_or(0),
+                    reload_cycles: registry.get(n).map(|e| e.reload_cycles(spec)).unwrap_or(0),
+                    macros_held: macros.len(),
+                })
+                .collect();
+            let victim = evictor.choose(&candidates).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "cannot place '{}' ({need} macros): only {} free and every resident is pinned",
+                    entry.name,
+                    self.free_count()
+                )
+            })?;
+            let name = victim.name.clone();
+            self.release(&name);
+            self.evictions += 1;
+            evicted.push(name);
+        }
+        let mut macros = Vec::with_capacity(need);
+        for (i, o) in self.owner.iter_mut().enumerate() {
+            if o.is_none() {
+                *o = Some(entry.name.clone());
+                macros.push(i);
+                if macros.len() == need {
+                    break;
+                }
+            }
+        }
+        self.resident.insert(entry.name.clone(), macros.clone());
+        self.touch(&entry.name);
+        Ok(SwapEvent {
+            model: entry.name.clone(),
+            hot_swap: true,
+            evicted,
+            macros,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vgg9;
+    use crate::fleet::evictor::EvictionPolicy;
+
+    /// Registry of `n` two-macro models named m0, m1, ... (pinned set by
+    /// the predicate), over the default spec.
+    fn setup(n: usize, pinned: impl Fn(usize) -> bool) -> (ModelRegistry, Placer) {
+        let spec = MacroSpec::default();
+        let mut reg = ModelRegistry::new(spec);
+        for i in 0..n {
+            // scaled(0.16): 976 BLs for vgg9 → needs a handful of macros?
+            // Use a small fixed scale instead and assert the footprint.
+            let arch = vgg9().scaled(0.1);
+            let e = reg.register(&format!("m{i}"), arch, pinned(i)).unwrap();
+            assert!(e.macros_needed() >= 1 && e.macros_needed() <= 2);
+        }
+        (reg, Placer::new(4))
+    }
+
+    fn place<'a>(
+        placer: &mut Placer,
+        reg: &ModelRegistry,
+        name: &str,
+        policy: EvictionPolicy,
+    ) -> anyhow::Result<SwapEvent> {
+        let entry = reg.get(name).unwrap();
+        placer.place(entry, reg, &Evictor::new(policy), reg.spec())
+    }
+
+    #[test]
+    fn residency_hit_costs_nothing() {
+        let (reg, mut placer) = setup(1, |_| false);
+        let first = place(&mut placer, &reg, "m0", EvictionPolicy::Lru).unwrap();
+        assert!(first.hot_swap);
+        assert!(!first.macros.is_empty());
+        let second = place(&mut placer, &reg, "m0", EvictionPolicy::Lru).unwrap();
+        assert!(!second.hot_swap, "second placement is a residency hit");
+        assert_eq!(second.macros, first.macros);
+        assert_eq!(placer.evictions, 0);
+    }
+
+    #[test]
+    fn lru_evicts_stalest_when_full() {
+        let (reg, mut placer) = setup(3, |_| false);
+        place(&mut placer, &reg, "m0", EvictionPolicy::Lru).unwrap();
+        place(&mut placer, &reg, "m1", EvictionPolicy::Lru).unwrap();
+        // Touch m0 so m1 is stalest, then place m2 (pool is full).
+        placer.touch("m0");
+        let ev = place(&mut placer, &reg, "m2", EvictionPolicy::Lru).unwrap();
+        assert!(ev.hot_swap);
+        assert_eq!(ev.evicted, vec!["m1".to_string()]);
+        assert!(placer.is_resident("m0"));
+        assert!(!placer.is_resident("m1"));
+        assert!(placer.is_resident("m2"));
+        assert_eq!(placer.evictions, 1);
+    }
+
+    #[test]
+    fn pinned_models_never_evicted() {
+        let (reg, mut placer) = setup(3, |i| i < 2); // m0, m1 pinned
+        place(&mut placer, &reg, "m0", EvictionPolicy::Lru).unwrap();
+        place(&mut placer, &reg, "m1", EvictionPolicy::Lru).unwrap();
+        let err = place(&mut placer, &reg, "m2", EvictionPolicy::Lru).unwrap_err();
+        assert!(err.to_string().contains("pinned"), "{err}");
+        assert!(placer.is_resident("m0") && placer.is_resident("m1"));
+    }
+
+    #[test]
+    fn oversized_model_rejected_by_place() {
+        let spec = MacroSpec::default();
+        let mut reg = ModelRegistry::new(spec);
+        reg.register("big", vgg9(), false).unwrap(); // 151 macros
+        let mut placer = Placer::new(4);
+        let entry = reg.get("big").unwrap();
+        let err = placer
+            .place(entry, &reg, &Evictor::new(EvictionPolicy::Lru), &spec)
+            .unwrap_err();
+        assert!(err.to_string().contains("needs 151 macros"), "{err}");
+    }
+
+    #[test]
+    fn release_frees_macros_for_others() {
+        let (reg, mut placer) = setup(3, |_| false);
+        place(&mut placer, &reg, "m0", EvictionPolicy::Lru).unwrap();
+        place(&mut placer, &reg, "m1", EvictionPolicy::Lru).unwrap();
+        let freed = placer.release("m0");
+        assert!(!freed.is_empty());
+        assert_eq!(placer.free_count(), freed.len());
+        let ev = place(&mut placer, &reg, "m2", EvictionPolicy::Lru).unwrap();
+        assert!(ev.evicted.is_empty(), "freed space, no eviction needed");
+    }
+
+    #[test]
+    fn evict_all_evictable_spares_pinned() {
+        let (reg, mut placer) = setup(2, |i| i == 0); // m0 pinned
+        place(&mut placer, &reg, "m0", EvictionPolicy::Lru).unwrap();
+        place(&mut placer, &reg, "m1", EvictionPolicy::Lru).unwrap();
+        let victims = placer.evict_all_evictable(&reg);
+        assert_eq!(victims, vec!["m1".to_string()]);
+        assert!(placer.is_resident("m0"));
+    }
+
+    #[test]
+    fn placements_report_state() {
+        let (reg, mut placer) = setup(2, |_| false);
+        place(&mut placer, &reg, "m0", EvictionPolicy::Lru).unwrap();
+        place(&mut placer, &reg, "m1", EvictionPolicy::Lru).unwrap();
+        let ps = placer.placements();
+        assert_eq!(ps.len(), 2);
+        // Macros are disjoint across placements.
+        let mut seen = vec![false; placer.num_macros()];
+        for p in &ps {
+            for &m in &p.macros {
+                assert!(!seen[m], "macro {m} double-assigned");
+                seen[m] = true;
+            }
+        }
+    }
+}

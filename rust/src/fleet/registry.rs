@@ -1,0 +1,183 @@
+//! The model registry: every adapted model variant the fleet can serve,
+//! with its precomputed macro footprint and cost profile.
+//!
+//! Registration is where the paper's Stage-1 output meets deployment: an
+//! adapted (`morph`ed) architecture is packed once via
+//! [`mapping::pack_model`](crate::mapping::pack_model) and costed once
+//! via [`latency::model_cost`](crate::latency::model_cost); the placer
+//! and evictor then work purely off those footprints — no per-request
+//! recomputation.
+
+use std::collections::BTreeMap;
+
+use crate::arch::ModelArch;
+use crate::config::MacroSpec;
+use crate::latency::{model_cost, ModelCost};
+use crate::mapping::{pack_model, ModelMapping};
+
+/// One registered model variant and its deployment footprint.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub arch: ModelArch,
+    /// Bitline/macro layout (`pack_model` over the fleet's macro spec).
+    pub mapping: ModelMapping,
+    /// Analytic cost profile (compute cycles, load latency, ...).
+    pub cost: ModelCost,
+    /// Pinned models are never evicted.
+    pub pinned: bool,
+}
+
+impl ModelEntry {
+    /// Physical macros this model occupies when fully resident.
+    pub fn macros_needed(&self) -> usize {
+        self.mapping.num_macros
+    }
+
+    /// Cycles one hot-swap of this model costs.
+    pub fn reload_cycles(&self, spec: &MacroSpec) -> u64 {
+        self.cost.reload_cycles(spec)
+    }
+}
+
+/// Registry of model variants, keyed by name.
+#[derive(Debug, Clone)]
+pub struct ModelRegistry {
+    spec: MacroSpec,
+    models: BTreeMap<String, ModelEntry>,
+}
+
+impl ModelRegistry {
+    pub fn new(spec: MacroSpec) -> ModelRegistry {
+        ModelRegistry {
+            spec,
+            models: BTreeMap::new(),
+        }
+    }
+
+    pub fn spec(&self) -> &MacroSpec {
+        &self.spec
+    }
+
+    /// Register a model variant. Fails on duplicate names or invalid
+    /// architectures; the footprint is computed here, once.
+    pub fn register(&mut self, name: &str, arch: ModelArch, pinned: bool) -> anyhow::Result<&ModelEntry> {
+        anyhow::ensure!(
+            !self.models.contains_key(name),
+            "model '{name}' is already registered (retire it first to replace)"
+        );
+        arch.validate()?;
+        let mapping = pack_model(&arch, &self.spec);
+        let cost = model_cost(&arch, &self.spec);
+        self.models.insert(
+            name.to_string(),
+            ModelEntry {
+                name: name.to_string(),
+                arch,
+                mapping,
+                cost,
+                pinned,
+            },
+        );
+        Ok(&self.models[name])
+    }
+
+    /// Remove a model variant, returning its entry.
+    pub fn retire(&mut self, name: &str) -> anyhow::Result<ModelEntry> {
+        self.models
+            .remove(name)
+            .ok_or_else(|| anyhow::anyhow!("model '{name}' is not registered"))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModelEntry> {
+        self.models.get(name)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.models.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ModelEntry> {
+        self.models.values()
+    }
+
+    /// Sum of `macros_needed` over every registered model — when this
+    /// exceeds the fleet size, some requests will force evictions.
+    pub fn total_macro_demand(&self) -> usize {
+        self.models.values().map(|e| e.macros_needed()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vgg9;
+
+    fn registry() -> ModelRegistry {
+        ModelRegistry::new(MacroSpec::default())
+    }
+
+    #[test]
+    fn register_computes_footprint() {
+        let mut r = registry();
+        let e = r.register("edge", vgg9().scaled(0.125), false).unwrap();
+        assert_eq!(e.name, "edge");
+        assert!(e.macros_needed() >= 1);
+        assert_eq!(
+            e.reload_cycles(&MacroSpec::default()),
+            e.cost.load_weight_latency as u64
+        );
+        assert_eq!(r.len(), 1);
+        assert!(r.contains("edge"));
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut r = registry();
+        r.register("m", vgg9().scaled(0.125), false).unwrap();
+        assert!(r.register("m", vgg9().scaled(0.25), false).is_err());
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn retire_then_reregister() {
+        let mut r = registry();
+        r.register("m", vgg9().scaled(0.125), true).unwrap();
+        let e = r.retire("m").unwrap();
+        assert!(e.pinned);
+        assert!(r.is_empty());
+        assert!(r.retire("m").is_err());
+        r.register("m", vgg9().scaled(0.25), false).unwrap();
+        assert!(!r.get("m").unwrap().pinned);
+    }
+
+    #[test]
+    fn total_demand_sums_macros() {
+        let mut r = registry();
+        r.register("a", vgg9().scaled(0.125), false).unwrap();
+        r.register("b", vgg9().scaled(0.125), false).unwrap();
+        let one = r.get("a").unwrap().macros_needed();
+        assert_eq!(r.total_macro_demand(), 2 * one);
+    }
+
+    #[test]
+    fn invalid_arch_rejected() {
+        let mut r = registry();
+        let mut broken = vgg9();
+        broken.layers[3].c_in += 1; // breaks producer/consumer chaining
+        assert!(r.register("broken", broken, false).is_err());
+        assert!(r.is_empty());
+    }
+}

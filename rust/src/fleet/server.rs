@@ -1,0 +1,797 @@
+//! Multi-tenant hot-swap serving over a pool of simulated CIM macros.
+//!
+//! Two layers:
+//!
+//! * [`Fleet`] — the deterministic core: registry + placer + evictor +
+//!   per-macro [`MacroStats`] accounting. `serve_batch` is a pure state
+//!   transition (no threads, no clocks), so tests and benches can replay
+//!   request mixes bit-stably and assert exact cycle counts.
+//! * [`FleetServer`] / [`FleetHandle`] — the coordinator-style runtime:
+//!   tagged submits land in a bounded queue, a dispatcher thread routes
+//!   them into **per-model queues**, forms per-model batches under the
+//!   same size/timeout policy as the single-model
+//!   [`EdgeServer`](crate::coordinator::server::EdgeServer), and drives
+//!   the core. Reload cycles appear in the shared
+//!   [`Metrics`](crate::coordinator::Metrics) accounting and in the
+//!   per-macro stats, and the two always agree (see
+//!   `rust/tests/integration_fleet.rs` for the conservation law).
+//!
+//! Models larger than the whole pool are still servable: they page
+//! through the usable macros exactly like the single-model
+//! [`MacroScheduler`](crate::coordinator::MacroScheduler), evicting every
+//! non-pinned resident and paying steady-state reload cycles per batch —
+//! which is precisely the trade the paper's compression removes, and what
+//! `benches/micro_fleet.rs` measures.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::arch::ModelArch;
+use crate::cim::MacroStats;
+use crate::config::{FleetConfig, MacroSpec};
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::request::{InferResponse, RequestId, Ticket};
+use crate::coordinator::scheduler::MacroScheduler;
+use crate::coordinator::server::sim_classify;
+use crate::util::json::Json;
+
+use super::evictor::Evictor;
+use super::placer::{Placement, Placer};
+use super::registry::ModelRegistry;
+
+/// One served batch's outcome (deterministic core result).
+#[derive(Debug, Clone)]
+pub struct BatchOutcome {
+    pub model: String,
+    pub batch: usize,
+    /// Argmax class per image.
+    pub classes: Vec<usize>,
+    /// Logits per image.
+    pub logits: Vec<Vec<f32>>,
+    /// Device cycles for the whole batch (compute + reloads).
+    pub device_cycles: u64,
+    /// Reload cycles charged to this batch (0 on a residency hit).
+    pub reload_cycles: u64,
+    /// Per-macro reload events behind those cycles.
+    pub reload_events: u64,
+    /// Models evicted to serve this batch.
+    pub evicted: Vec<String>,
+}
+
+/// Point-in-time view of the fleet's accounting.
+#[derive(Debug, Clone, Default)]
+pub struct FleetSnapshot {
+    /// Per physical macro, the same counters the digital twin keeps.
+    pub macro_stats: Vec<MacroStats>,
+    /// Fleet-level reload cycles (must equal the per-macro sum).
+    pub reload_cycles: u64,
+    /// Placements that loaded weights (hot-swaps + paging episodes).
+    pub hot_swaps: u64,
+    /// Models evicted to make room.
+    pub evictions: u64,
+    /// Current placements.
+    pub resident: Vec<Placement>,
+    /// All registered model names.
+    pub registered: Vec<String>,
+}
+
+impl FleetSnapshot {
+    /// Sum of per-macro load cycles — the conservation counterpart of
+    /// [`FleetSnapshot::reload_cycles`].
+    pub fn macro_load_cycles(&self) -> u64 {
+        self.macro_stats.iter().map(|s| s.load_cycles).sum()
+    }
+
+    /// Aggregate counters over the whole pool.
+    pub fn aggregate(&self) -> MacroStats {
+        MacroStats::aggregate(self.macro_stats.iter())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("reload_cycles", self.reload_cycles)
+            .with("hot_swaps", self.hot_swaps)
+            .with("evictions", self.evictions)
+            .with(
+                "macros",
+                Json::Arr(
+                    self.macro_stats
+                        .iter()
+                        .map(|s| {
+                            Json::obj()
+                                .with("compute_cycles", s.compute_cycles)
+                                .with("load_cycles", s.load_cycles)
+                                .with("conversions", s.conversions)
+                                .with("reloads", s.reloads)
+                        })
+                        .collect(),
+                ),
+            )
+            .with(
+                "resident",
+                Json::Arr(
+                    self.resident
+                        .iter()
+                        .map(|p| {
+                            Json::obj().with("model", p.model.as_str()).with(
+                                "macros",
+                                Json::Arr(p.macros.iter().map(|&m| Json::from(m)).collect()),
+                            )
+                        })
+                        .collect(),
+                ),
+            )
+            .with(
+                "registered",
+                Json::Arr(self.registered.iter().map(|n| Json::from(n.as_str())).collect()),
+            )
+    }
+}
+
+/// The deterministic multi-tenant serving core.
+pub struct Fleet {
+    spec: MacroSpec,
+    registry: ModelRegistry,
+    placer: Placer,
+    evictor: Evictor,
+    macro_stats: Vec<MacroStats>,
+    reload_cycles_total: u64,
+    hot_swaps: u64,
+}
+
+impl Fleet {
+    pub fn new(cfg: &FleetConfig, spec: &MacroSpec) -> Fleet {
+        Fleet {
+            spec: *spec,
+            registry: ModelRegistry::new(*spec),
+            placer: Placer::new(cfg.num_macros.max(1)),
+            evictor: Evictor::new(cfg.policy),
+            macro_stats: vec![MacroStats::default(); cfg.num_macros.max(1)],
+            reload_cycles_total: 0,
+            hot_swaps: 0,
+        }
+    }
+
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.registry
+    }
+
+    pub fn num_macros(&self) -> usize {
+        self.placer.num_macros()
+    }
+
+    pub fn is_resident(&self, name: &str) -> bool {
+        self.placer.is_resident(name)
+    }
+
+    /// Register a model variant. A pinned model must fit the pool whole
+    /// (pinning a paging model would wedge the fleet).
+    pub fn register(&mut self, name: &str, arch: ModelArch, pinned: bool) -> Result<()> {
+        let entry = self.registry.register(name, arch, pinned)?;
+        if pinned && entry.macros_needed() > self.placer.num_macros() {
+            let needed = entry.macros_needed();
+            self.registry.retire(name)?;
+            anyhow::bail!(
+                "cannot pin '{name}': needs {needed} macros, fleet has {}",
+                self.placer.num_macros()
+            );
+        }
+        Ok(())
+    }
+
+    /// Retire a model variant, freeing any macros it holds.
+    pub fn retire(&mut self, name: &str) -> Result<()> {
+        self.registry.retire(name)?;
+        self.placer.release(name);
+        Ok(())
+    }
+
+    /// Charge `events` per-macro weight loads round-robin over `macros`,
+    /// returning the cycles charged. This is the **only** place reload
+    /// cycles enter the books, so fleet-level and per-macro accounting
+    /// agree by construction.
+    fn charge_reloads(&mut self, macros: &[usize], events: u64) -> u64 {
+        let load = self.spec.load_cycles_per_macro as u64;
+        for e in 0..events {
+            let m = macros[(e as usize) % macros.len()];
+            self.macro_stats[m].load_cycles += load;
+            self.macro_stats[m].reloads += 1;
+        }
+        let cycles = events * load;
+        self.reload_cycles_total += cycles;
+        cycles
+    }
+
+    /// Spread a batch's compute cycles and conversions over the macros
+    /// that executed it (sum-exact; remainder goes to the first macro).
+    fn charge_compute(&mut self, macros: &[usize], cycles: u64, conversions: u64) {
+        let n = macros.len() as u64;
+        for (i, &m) in macros.iter().enumerate() {
+            let mut share = cycles / n;
+            let mut conv = conversions / n;
+            if i == 0 {
+                share += cycles % n;
+                conv += conversions % n;
+            }
+            self.macro_stats[m].compute_cycles += share;
+            self.macro_stats[m].conversions += conv;
+        }
+    }
+
+    /// Serve one batch for `model`, hot-swapping it in when necessary.
+    pub fn serve_batch(&mut self, model: &str, images: &[Vec<f32>]) -> Result<BatchOutcome> {
+        anyhow::ensure!(!images.is_empty(), "empty batch for model '{model}'");
+        let entry = self
+            .registry
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+        let n = images.len() as u64;
+        let num_classes = entry.arch.num_classes;
+        let compute_total = entry.cost.computing_latency as u64 * n;
+        let conversions_total = entry.cost.macs as u64 * n;
+        let need = entry.macros_needed();
+
+        let (macros_used, reload_events, evicted) = if need <= self.placer.num_macros() {
+            // Fully resident path: at most one hot-swap per placement
+            // change; weights then stay put across batches.
+            let swap = self
+                .placer
+                .place(entry, &self.registry, &self.evictor, &self.spec)?;
+            let events = if swap.hot_swap { need as u64 } else { 0 };
+            (swap.macros, events, swap.evicted)
+        } else {
+            // Paging path: the model cannot be fully resident. Every
+            // non-pinned resident is evicted and the model streams through
+            // the usable macros with LRU paging, exactly like the
+            // single-model MacroScheduler — reloads are paid once per
+            // batch (weights stay put while the batch streams).
+            let evicted = self.placer.evict_all_evictable(&self.registry);
+            let usable = self.placer.free_macros();
+            anyhow::ensure!(
+                !usable.is_empty(),
+                "cannot page '{model}': every macro is held by pinned models"
+            );
+            let plan =
+                MacroScheduler::new(&entry.mapping, &entry.cost, &self.spec, usable.len()).plan;
+            // Oversized ⇒ logical > physical ⇒ the plan always reloads.
+            debug_assert!(plan.reloads_per_inference > 0);
+            (usable, plan.reloads_per_inference, evicted)
+        };
+
+        if reload_events > 0 {
+            self.hot_swaps += 1;
+        }
+        let reload_cycles = self.charge_reloads(&macros_used, reload_events);
+        self.charge_compute(&macros_used, compute_total, conversions_total);
+
+        let mut classes = Vec::with_capacity(images.len());
+        let mut logits = Vec::with_capacity(images.len());
+        for img in images {
+            let (class, l) = sim_classify(img, num_classes);
+            classes.push(class);
+            logits.push(l);
+        }
+        Ok(BatchOutcome {
+            model: model.to_string(),
+            batch: images.len(),
+            classes,
+            logits,
+            device_cycles: compute_total + reload_cycles,
+            reload_cycles,
+            reload_events,
+            evicted,
+        })
+    }
+
+    pub fn snapshot(&self) -> FleetSnapshot {
+        FleetSnapshot {
+            macro_stats: self.macro_stats.clone(),
+            reload_cycles: self.reload_cycles_total,
+            hot_swaps: self.hot_swaps,
+            evictions: self.placer.evictions,
+            resident: self.placer.placements(),
+            registered: self.registry.names().iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+/// One tagged inference request flowing through the fleet.
+pub struct FleetRequest {
+    pub id: RequestId,
+    pub model: String,
+    pub image: Vec<f32>,
+    pub enqueued: Instant,
+    pub respond: mpsc::Sender<InferResponse>,
+}
+
+enum Msg {
+    Infer(FleetRequest),
+    Register {
+        name: String,
+        arch: Box<ModelArch>,
+        pinned: bool,
+        ack: mpsc::Sender<Result<()>>,
+    },
+    Retire {
+        name: String,
+        ack: mpsc::Sender<Result<()>>,
+    },
+    Snapshot {
+        ack: mpsc::Sender<FleetSnapshot>,
+    },
+}
+
+/// The threaded fleet runtime; start via [`FleetServer::start`].
+pub struct FleetServer;
+
+/// Thread-safe submission/control handle for a running fleet.
+pub struct FleetHandle {
+    tx: Mutex<Option<mpsc::Sender<Msg>>>,
+    next_id: AtomicU64,
+    depth: Arc<AtomicU64>,
+    queue_limit: u64,
+    accepting: AtomicBool,
+    pub metrics: Arc<Metrics>,
+    dispatcher: Mutex<Option<thread::JoinHandle<FleetSnapshot>>>,
+    image_len: usize,
+}
+
+impl FleetServer {
+    /// Start the fleet dispatcher. Models are registered afterwards via
+    /// [`FleetHandle::register`].
+    pub fn start(cfg: &FleetConfig, spec: &MacroSpec) -> Arc<FleetHandle> {
+        let fleet = Fleet::new(cfg, spec);
+        let metrics = Arc::new(Metrics::new());
+        let depth = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let policy = BatchPolicy::new(cfg.max_batch, cfg.batch_timeout_us);
+        let dispatcher = {
+            let metrics = Arc::clone(&metrics);
+            let depth = Arc::clone(&depth);
+            thread::Builder::new()
+                .name("cim-fleet".into())
+                .spawn(move || dispatcher_loop(fleet, rx, metrics, depth, policy))
+                .expect("spawn fleet dispatcher")
+        };
+        Arc::new(FleetHandle {
+            tx: Mutex::new(Some(tx)),
+            next_id: AtomicU64::new(1),
+            depth,
+            queue_limit: cfg.queue_depth as u64,
+            accepting: AtomicBool::new(true),
+            metrics,
+            dispatcher: Mutex::new(Some(dispatcher)),
+            image_len: 3 * 32 * 32,
+        })
+    }
+}
+
+impl FleetHandle {
+    fn send(&self, msg: Msg) -> Result<()> {
+        let guard = self.tx.lock().unwrap();
+        guard
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("fleet stopped"))?
+            .send(msg)
+            .map_err(|_| anyhow::anyhow!("fleet stopped"))
+    }
+
+    /// Register a model variant on the live fleet.
+    pub fn register(&self, name: &str, arch: ModelArch, pinned: bool) -> Result<()> {
+        let (ack, ack_rx) = mpsc::channel();
+        self.send(Msg::Register {
+            name: name.to_string(),
+            arch: Box::new(arch),
+            pinned,
+            ack,
+        })?;
+        ack_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("fleet stopped"))?
+    }
+
+    /// Retire a model variant; its queued requests are dropped (their
+    /// tickets error out) and its macros are freed.
+    pub fn retire(&self, name: &str) -> Result<()> {
+        let (ack, ack_rx) = mpsc::channel();
+        self.send(Msg::Retire {
+            name: name.to_string(),
+            ack,
+        })?;
+        ack_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("fleet stopped"))?
+    }
+
+    /// Live accounting snapshot (placements, per-macro stats).
+    pub fn snapshot(&self) -> Result<FleetSnapshot> {
+        let (ack, ack_rx) = mpsc::channel();
+        self.send(Msg::Snapshot { ack })?;
+        ack_rx.recv().map_err(|_| anyhow::anyhow!("fleet stopped"))
+    }
+
+    /// Submit a tagged request; rejects when the fleet queue is full.
+    pub fn submit(&self, model: &str, image: Vec<f32>) -> Result<Ticket> {
+        anyhow::ensure!(
+            self.accepting.load(Ordering::Acquire),
+            "fleet shutting down"
+        );
+        anyhow::ensure!(
+            image.len() == self.image_len,
+            "image must be {} floats, got {}",
+            self.image_len,
+            image.len()
+        );
+        let cur = self.depth.load(Ordering::Acquire);
+        if cur >= self.queue_limit {
+            self.metrics.on_reject();
+            anyhow::bail!("fleet queue full ({cur} pending)");
+        }
+        self.metrics.on_submit();
+        self.depth.fetch_add(1, Ordering::AcqRel);
+        let id = self.next_id.fetch_add(1, Ordering::AcqRel);
+        let (rtx, rrx) = mpsc::channel();
+        self.send(Msg::Infer(FleetRequest {
+            id,
+            model: model.to_string(),
+            image,
+            enqueued: Instant::now(),
+            respond: rtx,
+        }))?;
+        Ok(Ticket { id, rx: rrx })
+    }
+
+    /// Stop accepting, drain, and return final metrics + fleet snapshot.
+    pub fn shutdown(&self) -> (MetricsSnapshot, FleetSnapshot) {
+        self.accepting.store(false, Ordering::Release);
+        *self.tx.lock().unwrap() = None;
+        let handle = self.dispatcher.lock().unwrap().take();
+        let snapshot = handle
+            .and_then(|h| h.join().ok())
+            .unwrap_or_default();
+        (self.metrics.snapshot(), snapshot)
+    }
+}
+
+/// Which per-model queue (if any) should dispatch now.
+fn ready_model(
+    queues: &BTreeMap<String, VecDeque<FleetRequest>>,
+    fleet: &Fleet,
+    policy: &BatchPolicy,
+    draining: bool,
+) -> Option<String> {
+    let now = Instant::now();
+    let mut best: Option<(&String, usize, bool)> = None; // (name, len, resident)
+    for (name, q) in queues {
+        if q.is_empty() {
+            continue;
+        }
+        let timed_out = q
+            .front()
+            .map(|r| now.duration_since(r.enqueued) >= policy.timeout)
+            .unwrap_or(false);
+        if !(q.len() >= policy.max_batch || timed_out || draining) {
+            continue;
+        }
+        let resident = fleet.is_resident(name);
+        // Prefer resident models (no swap), then fuller queues; BTreeMap
+        // order breaks remaining ties deterministically.
+        let better = match best {
+            None => true,
+            Some((_, blen, bres)) => (resident, q.len()) > (bres, blen),
+        };
+        if better {
+            best = Some((name, q.len(), resident));
+        }
+    }
+    best.map(|(name, _, _)| name.clone())
+}
+
+fn handle_msg(
+    msg: Msg,
+    queues: &mut BTreeMap<String, VecDeque<FleetRequest>>,
+    fleet: &mut Fleet,
+    depth: &AtomicU64,
+) {
+    match msg {
+        Msg::Infer(req) => queues.entry(req.model.clone()).or_default().push_back(req),
+        Msg::Register {
+            name,
+            arch,
+            pinned,
+            ack,
+        } => {
+            let _ = ack.send(fleet.register(&name, *arch, pinned));
+        }
+        Msg::Retire { name, ack } => {
+            // Drop queued work for the retired model: tickets error.
+            if let Some(q) = queues.remove(&name) {
+                depth.fetch_sub(q.len() as u64, Ordering::AcqRel);
+            }
+            let _ = ack.send(fleet.retire(&name));
+        }
+        Msg::Snapshot { ack } => {
+            let _ = ack.send(fleet.snapshot());
+        }
+    }
+}
+
+fn dispatcher_loop(
+    mut fleet: Fleet,
+    rx: mpsc::Receiver<Msg>,
+    metrics: Arc<Metrics>,
+    depth: Arc<AtomicU64>,
+    policy: BatchPolicy,
+) -> FleetSnapshot {
+    let mut queues: BTreeMap<String, VecDeque<FleetRequest>> = BTreeMap::new();
+    let mut open = true;
+    loop {
+        let pending = queues.values().any(|q| !q.is_empty());
+        if !open && !pending {
+            break;
+        }
+        // Wait for the next message: block when idle, poll with the
+        // earliest batch deadline when partial batches are forming.
+        let msg = if open {
+            if pending {
+                let deadline = queues
+                    .values()
+                    .filter_map(|q| q.front())
+                    .map(|r| r.enqueued + policy.timeout)
+                    .min()
+                    .unwrap();
+                let now = Instant::now();
+                if deadline > now {
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(m) => Some(m),
+                        Err(mpsc::RecvTimeoutError::Timeout) => None,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            open = false;
+                            None
+                        }
+                    }
+                } else {
+                    None
+                }
+            } else {
+                match rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => {
+                        open = false;
+                        None
+                    }
+                }
+            }
+        } else {
+            None
+        };
+
+        if let Some(msg) = msg {
+            handle_msg(msg, &mut queues, &mut fleet, &depth);
+            // Keep draining greedily before considering dispatch so
+            // bursts coalesce into full batches.
+            while let Ok(m) = rx.try_recv() {
+                handle_msg(m, &mut queues, &mut fleet, &depth);
+            }
+        }
+
+        // Dispatch every queue that is ready (full, timed out, or the
+        // channel is closed and we are draining).
+        while let Some(model) = ready_model(&queues, &fleet, &policy, !open) {
+            let q = queues.get_mut(&model).unwrap();
+            let take = q.len().min(policy.max_batch);
+            let mut batch: Vec<FleetRequest> = q.drain(..take).collect();
+            depth.fetch_sub(batch.len() as u64, Ordering::AcqRel);
+            // Move the images out (12KB each) — the requests only need
+            // their id/enqueued/respond fields afterwards.
+            let images: Vec<Vec<f32>> = batch
+                .iter_mut()
+                .map(|r| std::mem::take(&mut r.image))
+                .collect();
+            match fleet.serve_batch(&model, &images) {
+                Ok(out) => {
+                    metrics.on_batch(out.batch, out.device_cycles, out.reload_events);
+                    let per_req = out.device_cycles / out.batch as u64;
+                    for (i, req) in batch.into_iter().enumerate() {
+                        let latency_us = req.enqueued.elapsed().as_micros() as u64;
+                        metrics.on_complete(latency_us);
+                        let _ = req.respond.send(InferResponse {
+                            id: req.id,
+                            class: out.classes[i],
+                            logits: out.logits[i].clone(),
+                            latency_us,
+                            device_cycles: per_req,
+                            batch_size: out.batch,
+                        });
+                    }
+                }
+                Err(e) => {
+                    // Unknown model / pinned-blocked placement: requests
+                    // drop and their tickets error out. Count them as
+                    // rejected so the failure is visible in the metrics
+                    // snapshot even when no logger is installed.
+                    for _ in &batch {
+                        metrics.on_reject();
+                    }
+                    log::error!(
+                        "fleet batch for '{model}' failed ({} requests dropped): {e:#}",
+                        batch.len()
+                    );
+                }
+            }
+        }
+    }
+    fleet.snapshot()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vgg9;
+    use crate::fleet::evictor::EvictionPolicy;
+
+    fn cfg(num_macros: usize) -> FleetConfig {
+        FleetConfig {
+            num_macros,
+            max_batch: 4,
+            batch_timeout_us: 300,
+            ..FleetConfig::default()
+        }
+    }
+
+    fn img() -> Vec<f32> {
+        crate::data::SynthCifar::sample(2, 5).data
+    }
+
+    #[test]
+    fn core_hot_swap_and_residency_accounting() {
+        let spec = MacroSpec::default();
+        let mut fleet = Fleet::new(&cfg(4), &spec);
+        fleet.register("a", vgg9().scaled(0.1), false).unwrap();
+        let out1 = fleet.serve_batch("a", &[img()]).unwrap();
+        let need = fleet.registry().get("a").unwrap().macros_needed() as u64;
+        assert_eq!(out1.reload_events, need);
+        assert_eq!(out1.reload_cycles, need * 256);
+        let out2 = fleet.serve_batch("a", &[img(), img()]).unwrap();
+        assert_eq!(out2.reload_cycles, 0, "resident batch reloads nothing");
+        let snap = fleet.snapshot();
+        assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+        assert_eq!(snap.hot_swaps, 1);
+        // Compute cycles landed too: 3 images × per-inference compute.
+        let compute = fleet.registry().get("a").unwrap().cost.computing_latency as u64;
+        assert_eq!(snap.aggregate().compute_cycles, 3 * compute);
+    }
+
+    #[test]
+    fn core_oversized_model_pages_and_accounts() {
+        let spec = MacroSpec::default();
+        let mut fleet = Fleet::new(&cfg(4), &spec);
+        fleet.register("big", vgg9(), false).unwrap(); // 151 macros
+        let out = fleet.serve_batch("big", &[img()]).unwrap();
+        assert!(out.reload_events >= 151, "paging reloads every logical macro");
+        let out2 = fleet.serve_batch("big", &[img()]).unwrap();
+        assert_eq!(out2.reload_events, out.reload_events, "steady-state thrash");
+        let snap = fleet.snapshot();
+        assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+    }
+
+    #[test]
+    fn core_unknown_model_errors() {
+        let spec = MacroSpec::default();
+        let mut fleet = Fleet::new(&cfg(4), &spec);
+        assert!(fleet.serve_batch("ghost", &[img()]).is_err());
+        assert!(fleet.serve_batch("ghost", &[]).is_err());
+    }
+
+    #[test]
+    fn core_pinned_oversized_registration_rejected() {
+        let spec = MacroSpec::default();
+        let mut fleet = Fleet::new(&cfg(4), &spec);
+        let err = fleet.register("big", vgg9(), true).unwrap_err();
+        assert!(err.to_string().contains("cannot pin"), "{err}");
+        assert!(!fleet.registry().contains("big"));
+        // Registering unpinned afterwards works.
+        fleet.register("big", vgg9(), false).unwrap();
+    }
+
+    #[test]
+    fn server_roundtrip_and_shutdown() {
+        let spec = MacroSpec::default();
+        let h = FleetServer::start(&cfg(4), &spec);
+        h.register("edge", vgg9().scaled(0.1), false).unwrap();
+        let mut tickets = Vec::new();
+        for _ in 0..12 {
+            tickets.push(h.submit("edge", img()).unwrap());
+        }
+        for t in tickets {
+            let r = t.wait().unwrap();
+            assert!(r.class < 10);
+            assert!(r.device_cycles > 0);
+        }
+        let (m, snap) = h.shutdown();
+        assert_eq!(m.completed, 12);
+        assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+        assert!(snap.hot_swaps >= 1);
+    }
+
+    #[test]
+    fn server_unknown_model_ticket_errors() {
+        let spec = MacroSpec::default();
+        let h = FleetServer::start(&cfg(4), &spec);
+        h.register("known", vgg9().scaled(0.1), false).unwrap();
+        let t = h.submit("ghost", img()).unwrap();
+        assert!(t
+            .wait_timeout(std::time::Duration::from_secs(5))
+            .is_err());
+        h.shutdown();
+    }
+
+    #[test]
+    fn server_retire_drops_queued_work() {
+        let spec = MacroSpec::default();
+        let h = FleetServer::start(
+            &FleetConfig {
+                num_macros: 4,
+                max_batch: 64,
+                batch_timeout_us: 2_000_000, // park requests in the queue
+                ..FleetConfig::default()
+            },
+            &spec,
+        );
+        h.register("m", vgg9().scaled(0.1), false).unwrap();
+        let t = h.submit("m", img()).unwrap();
+        h.retire("m").unwrap();
+        assert!(t
+            .wait_timeout(std::time::Duration::from_secs(5))
+            .is_err());
+        assert!(h.retire("m").is_err(), "double retire fails");
+        h.shutdown();
+    }
+
+    #[test]
+    fn snapshot_json_roundtrips() {
+        let spec = MacroSpec::default();
+        let mut fleet = Fleet::new(&cfg(2), &spec);
+        fleet.register("a", vgg9().scaled(0.1), false).unwrap();
+        fleet.serve_batch("a", &[img()]).unwrap();
+        let j = fleet.snapshot().to_json();
+        let back = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(
+            back.get("reload_cycles").as_usize(),
+            Some(fleet.snapshot().reload_cycles as usize)
+        );
+        assert_eq!(back.get("macros").as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn eviction_policy_is_honored() {
+        let spec = MacroSpec::default();
+        // Two 2-macro models resident on 4 macros; a third forces one out.
+        for (policy, expect_victim) in [
+            (EvictionPolicy::Lru, "a"),          // a is stalest
+            (EvictionPolicy::CostWeighted, "a"), // equal cost → stalest
+        ] {
+            let mut fleet = Fleet::new(
+                &FleetConfig {
+                    num_macros: 4,
+                    policy,
+                    ..FleetConfig::default()
+                },
+                &spec,
+            );
+            fleet.register("a", vgg9().scaled(0.1), false).unwrap();
+            fleet.register("b", vgg9().scaled(0.1), false).unwrap();
+            fleet.register("c", vgg9().scaled(0.1), false).unwrap();
+            fleet.serve_batch("a", &[img()]).unwrap();
+            fleet.serve_batch("b", &[img()]).unwrap();
+            let out = fleet.serve_batch("c", &[img()]).unwrap();
+            assert_eq!(out.evicted, vec![expect_victim.to_string()], "{policy:?}");
+        }
+    }
+}

@@ -54,6 +54,14 @@ impl ModelCost {
     pub fn macros_needed(&self, spec: &MacroSpec) -> usize {
         ceil_div(self.bls, spec.bitlines)
     }
+
+    /// Cycles one **hot-swap** of this model costs: streaming every
+    /// occupied macro's weights in (`macros_needed · load_cycles_per_macro`,
+    /// which equals `load_weight_latency` by construction). This is the
+    /// quantity the fleet placer charges on every placement change.
+    pub fn reload_cycles(&self, spec: &MacroSpec) -> u64 {
+        (self.macros_needed(spec) * spec.load_cycles_per_macro) as u64
+    }
 }
 
 /// Cost of a single layer on the given macro.
@@ -177,6 +185,14 @@ mod tests {
         let c = model_cost(&m, &spec());
         assert_eq!(c.macros_needed(&spec()), 151);
         assert_eq!(c.load_weight_latency, 151 * 256);
+    }
+
+    #[test]
+    fn reload_cycles_equals_load_weight_latency() {
+        for ratio in [1.0, 0.5, 0.125] {
+            let c = model_cost(&vgg9().scaled(ratio), &spec());
+            assert_eq!(c.reload_cycles(&spec()), c.load_weight_latency as u64);
+        }
     }
 
     #[test]

@@ -20,6 +20,9 @@
 //!   partial-sum (ADC) quantization, power-of-two scale approximation.
 //! * [`coordinator`] — the edge-serving runtime: request queue, batcher,
 //!   macro scheduler with weight-reload accounting, metrics.
+//! * [`fleet`] — multi-tenant serving over a pool of macros: model
+//!   registry, reload-aware placement, pluggable eviction, hot-swap
+//!   serving with per-macro accounting.
 //! * [`runtime`] — PJRT bridge that loads the AOT-lowered JAX models
 //!   (`artifacts/*.hlo.txt`) and executes them from the Rust hot path.
 //! * [`baselines`] — E-UPQ-like and XPert-like operating points for the
@@ -42,6 +45,7 @@ pub mod quant;
 pub mod data;
 pub mod baselines;
 pub mod coordinator;
+pub mod fleet;
 pub mod runtime;
 pub mod report;
 

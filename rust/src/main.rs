@@ -12,9 +12,10 @@
 use std::path::{Path, PathBuf};
 
 use cim_adapt::arch::by_name;
-use cim_adapt::config::{MacroSpec, MorphConfig, ServeConfig};
+use cim_adapt::config::{FleetConfig, MacroSpec, MorphConfig, ServeConfig};
 use cim_adapt::coordinator::server::{Backend, EdgeServer};
 use cim_adapt::data::SynthCifar;
+use cim_adapt::fleet::{EvictionPolicy, FleetServer};
 use cim_adapt::latency::{cost::allocated_usage, model_cost};
 use cim_adapt::mapping::pack_model;
 use cim_adapt::morph::flow::morph_flow_synthetic;
@@ -33,6 +34,7 @@ fn main() -> anyhow::Result<()> {
         Some("morph") => cmd_morph(&args),
         Some("cost") => cmd_cost(&args),
         Some("serve") => cmd_serve(&args, &artifacts),
+        Some("fleet") => cmd_fleet(&args),
         Some("inspect") => cmd_inspect(&args),
         _ => {
             print!(
@@ -43,6 +45,10 @@ fn main() -> anyhow::Result<()> {
                     .cmd("morph --model M --bl N", "run the Stage-1 morphing flow")
                     .cmd("cost --model M", "analytic cost columns for a model")
                     .cmd("serve [--requests N] [--batch B]", "edge-serving demo over PJRT")
+                    .cmd(
+                        "fleet [--macros N] [--bl B] [--requests N] [--policy lru|cost]",
+                        "multi-tenant hot-swap serving demo (sim fleet)",
+                    )
                     .cmd("inspect --model M", "per-layer CIM mapping details")
                     .render()
             );
@@ -209,6 +215,97 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> anyhow::Result<()> {
         m.weight_reloads,
         m.device_cycles as f64 / 200e6 * 1e3
     );
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
+    let spec = MacroSpec::default();
+    let cfg = FleetConfig {
+        num_macros: args.usize_or("macros", 4),
+        max_batch: args.usize_or("batch", 8),
+        policy: EvictionPolicy::parse(args.str_or("policy", "lru"))
+            .ok_or_else(|| anyhow::anyhow!("--policy expects 'lru' or 'cost-weighted'"))?,
+        ..FleetConfig::default()
+    };
+    let target_bl = args.usize_or("bl", 512);
+    let n = args.usize_or("requests", 300);
+
+    // Three adapted tenants, morphed to the bitline budget so several can
+    // co-reside on the pool; demand still exceeds it → hot-swaps happen.
+    let models = ["vgg9", "vgg16", "resnet18"];
+    let handle = FleetServer::start(&cfg, &spec);
+    for (i, m) in models.iter().enumerate() {
+        let out = morph_flow_synthetic(
+            &by_name(m)?,
+            &spec,
+            &MorphConfig {
+                target_bl,
+                ..MorphConfig::default()
+            },
+            0.4,
+            11 + i as u64,
+        );
+        let macros = pack_model(&out.arch, &spec).num_macros;
+        println!(
+            "registered '{m}' morphed to {} BLs ({:.3}M params, {} macros)",
+            commas(out.cost.bls as u64),
+            out.cost.params as f64 / 1e6,
+            macros
+        );
+        handle.register(m, out.arch, false)?;
+    }
+    println!(
+        "fleet: {} macros, policy {}, max batch {}",
+        cfg.num_macros,
+        cfg.policy.as_str(),
+        cfg.max_batch
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut tickets = Vec::with_capacity(n);
+    for k in 0..n {
+        let model = models[k % models.len()];
+        let img = SynthCifar::sample(k % 10, 9000 + k as u64);
+        tickets.push(handle.submit(model, img.data)?);
+    }
+    for t in tickets {
+        t.wait()?;
+    }
+    let elapsed = t0.elapsed();
+    let (m, snap) = handle.shutdown();
+    println!(
+        "served {n} requests in {:.2}s ({:.0} rps) | mean batch {:.2} | p95 {}µs",
+        elapsed.as_secs_f64(),
+        n as f64 / elapsed.as_secs_f64(),
+        m.mean_batch,
+        m.latency.p95_us
+    );
+    println!(
+        "hot-swaps {} | evictions {} | reload cycles {} (= per-macro sum {})",
+        snap.hot_swaps,
+        snap.evictions,
+        commas(snap.reload_cycles),
+        commas(snap.macro_load_cycles())
+    );
+    let device = snap.aggregate();
+    println!(
+        "device model @ {:.0} MHz: {} busy cycles = {:.2} ms ({:.1}% spent reloading)",
+        cfg.clock_mhz,
+        commas(device.busy_cycles()),
+        device.busy_cycles() as f64 / (cfg.clock_mhz * 1e6) * 1e3,
+        device.load_cycles as f64 / device.busy_cycles().max(1) as f64 * 100.0
+    );
+    for (i, s) in snap.macro_stats.iter().enumerate() {
+        println!(
+            "  macro {i}: compute {} | load {} | reloads {}",
+            commas(s.compute_cycles),
+            commas(s.load_cycles),
+            s.reloads
+        );
+    }
+    for p in &snap.resident {
+        println!("  resident '{}' on macros {:?}", p.model, p.macros);
+    }
     Ok(())
 }
 

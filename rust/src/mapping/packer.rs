@@ -89,6 +89,20 @@ impl ModelMapping {
         }
     }
 
+    /// Occupied cells per **logical** macro, `num_macros` entries.
+    ///
+    /// Fleet placement reuses a model's single-device packing unchanged:
+    /// logical macro `i` lands verbatim on whichever physical macro the
+    /// placer assigns, so this footprint is also the physical occupancy
+    /// profile after placement.
+    pub fn macro_footprint(&self) -> Vec<usize> {
+        let mut cells = vec![0usize; self.num_macros];
+        for c in self.columns() {
+            cells[c.macro_id] += c.rows;
+        }
+        cells
+    }
+
     /// Which layers have columns in macro `m` (for scheduling/reloads).
     pub fn layers_in_macro(&self, m: usize) -> Vec<usize> {
         let lo = m * self.spec.bitlines;
@@ -206,6 +220,21 @@ mod tests {
             }
         }
         assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn macro_footprint_sums_to_used_cells() {
+        let map = pack_model(&vgg9(), &spec());
+        let fp = map.macro_footprint();
+        assert_eq!(fp.len(), map.num_macros);
+        let used: usize = map
+            .layers
+            .iter()
+            .map(|lm| lm.rows_per_segment.iter().sum::<usize>() * lm.c_out)
+            .sum();
+        assert_eq!(fp.iter().sum::<usize>(), used);
+        // No macro exceeds its provisioned cells.
+        assert!(fp.iter().all(|&c| c <= spec().cells()));
     }
 
     #[test]

@@ -16,6 +16,23 @@ pub mod tables;
 pub use figures::{fig12_13, FigureOutput};
 pub use tables::{table1, table2, table3_4_5, table6, TableOutput};
 
+use std::path::PathBuf;
+
+use crate::util::json::Json;
+
+/// Write a machine-readable bench summary as `BENCH_<name>.json`.
+///
+/// Benches call this unconditionally so the perf trajectory is tracked
+/// across PRs (compare the files between runs). `CIM_ADAPT_BENCH_DIR`
+/// overrides the output directory (default: current directory, i.e.
+/// `rust/` under `cargo bench`).
+pub fn write_bench_summary(name: &str, summary: &Json) -> std::io::Result<PathBuf> {
+    let dir = std::env::var("CIM_ADAPT_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+    let path = PathBuf::from(dir).join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, summary.pretty())?;
+    Ok(path)
+}
+
 /// Common output wrapper.
 #[derive(Debug, Clone)]
 pub struct Rendered {

@@ -186,10 +186,17 @@ impl Runner {
         println!("{text}");
     }
 
+    /// Timing results collected so far, as a JSON array — for
+    /// `report::write_bench_summary` emission alongside bench-specific
+    /// metrics.
+    pub fn results_json(&self) -> Json {
+        Json::Arr(self.results.iter().map(|s| s.to_json()).collect())
+    }
+
     /// Finish: optionally dump JSON next to the bench name.
     pub fn finish(self) {
         if let Ok(dir) = std::env::var("CIM_ADAPT_BENCH_JSON") {
-            let arr = Json::Arr(self.results.iter().map(|s| s.to_json()).collect());
+            let arr = self.results_json();
             let path = format!(
                 "{dir}/{}.json",
                 self.title.replace(|c: char| !c.is_alphanumeric(), "_")

@@ -21,13 +21,21 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-/// Parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+/// Parse error with byte offset. `pos` points **at** the offending byte
+/// (or at end-of-input for truncation errors), so editors can jump to it.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ---- constructors ----------------------------------------------------
@@ -297,10 +305,13 @@ impl<'a> Parser<'a> {
     }
 
     fn expect(&mut self, c: u8) -> Result<(), JsonError> {
-        if self.bump() == Some(c) {
+        // Peek (don't bump) so the error position is the offending byte,
+        // not one past it — this also avoids stepping back before the
+        // input start when the failure is end-of-input.
+        if self.peek() == Some(c) {
+            self.pos += 1;
             Ok(())
         } else {
-            self.pos = self.pos.saturating_sub(1);
             Err(self.err(&format!("expected '{}'", c as char)))
         }
     }
@@ -419,9 +430,13 @@ impl<'a> Parser<'a> {
         loop {
             items.push(self.value()?);
             self.skip_ws();
-            match self.bump() {
-                Some(b',') => continue,
-                Some(b']') => return Ok(Json::Arr(items)),
+            // Peek so a delimiter error points at the offending token.
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
                 _ => return Err(self.err("expected ',' or ']'")),
             }
         }
@@ -443,9 +458,12 @@ impl<'a> Parser<'a> {
             let val = self.value()?;
             map.insert(key, val);
             self.skip_ws();
-            match self.bump() {
-                Some(b',') => continue,
-                Some(b'}') => return Ok(Json::Obj(map)),
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(map));
+                }
                 _ => return Err(self.err("expected ',' or '}'")),
             }
         }
@@ -504,6 +522,31 @@ mod tests {
         assert_eq!(v.as_str(), Some("Aπ"));
         let round = Json::parse(&v.dump()).unwrap();
         assert_eq!(round, v);
+    }
+
+    #[test]
+    fn error_positions_point_at_offending_token() {
+        // Array delimiter: `;` at byte 2 is the offending token.
+        let e = Json::parse("[1;2]").unwrap_err();
+        assert_eq!(e.pos, 2, "{e}");
+        // Object: missing ':' — the value token at byte 5 is offending.
+        let e = Json::parse(r#"{"a" 1}"#).unwrap_err();
+        assert_eq!(e.pos, 5, "{e}");
+        // Object delimiter: `;` at byte 8.
+        let e = Json::parse(r#"{"a": 1 ; "b": 2}"#).unwrap_err();
+        assert_eq!(e.pos, 8, "{e}");
+        // Truncated input: position is end-of-input, never before it.
+        let e = Json::parse("[1, 2").unwrap_err();
+        assert_eq!(e.pos, 5, "{e}");
+        let e = Json::parse("{").unwrap_err();
+        assert_eq!(e.pos, 1, "{e}");
+    }
+
+    #[test]
+    fn error_display_includes_position() {
+        let e = Json::parse("[1;2]").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("byte 2"), "{msg}");
     }
 
     #[test]

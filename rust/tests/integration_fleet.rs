@@ -1,0 +1,275 @@
+//! Integration: multi-tenant fleet serving — 3+ adapted models over a
+//! 4-macro sim fleet, forced eviction + hot-swap behavior, and
+//! conservation of reload accounting (fleet-level reload cycles ==
+//! Σ per-macro `MacroStats::load_cycles`).
+
+use cim_adapt::arch::by_name;
+use cim_adapt::config::{FleetConfig, MacroSpec, MorphConfig};
+use cim_adapt::data::SynthCifar;
+use cim_adapt::fleet::{EvictionPolicy, Fleet, FleetServer};
+use cim_adapt::mapping::pack_model;
+use cim_adapt::morph::flow::morph_flow_synthetic;
+
+const FLEET_MACROS: usize = 4;
+
+fn spec() -> MacroSpec {
+    MacroSpec::default()
+}
+
+/// Morph `model` to a 512-bitline budget: each tenant then needs ≥1 and
+/// ≤2 macros, so three tenants (total demand ≥ 3) can all be registered
+/// on a 4-macro fleet while their aggregate demand forces evictions.
+fn tenant(model: &str, seed: u64) -> cim_adapt::arch::ModelArch {
+    let out = morph_flow_synthetic(
+        &by_name(model).unwrap(),
+        &spec(),
+        &MorphConfig {
+            target_bl: 512,
+            ..MorphConfig::default()
+        },
+        0.4,
+        seed,
+    );
+    out.arch
+}
+
+fn cfg(policy: EvictionPolicy) -> FleetConfig {
+    FleetConfig {
+        num_macros: FLEET_MACROS,
+        max_batch: 4,
+        batch_timeout_us: 300,
+        policy,
+        ..FleetConfig::default()
+    }
+}
+
+fn img(k: usize) -> Vec<f32> {
+    SynthCifar::sample(k % 10, k as u64).data
+}
+
+#[test]
+fn three_models_on_four_macros_with_eviction_and_conservation() {
+    let h = FleetServer::start(&cfg(EvictionPolicy::Lru), &spec());
+    let tenants = ["vgg9", "vgg16", "resnet18"];
+    let mut demand = 0usize;
+    for (i, m) in tenants.iter().enumerate() {
+        let arch = tenant(m, 11 + i as u64);
+        let macros = pack_model(&arch, &spec()).num_macros;
+        assert!(
+            macros <= FLEET_MACROS,
+            "{m}: morphed tenant must fit the fleet ({macros} macros)"
+        );
+        demand += macros;
+        h.register(m, arch, false).unwrap();
+    }
+    assert!(
+        demand > FLEET_MACROS,
+        "aggregate demand ({demand}) must exceed the fleet to force evictions"
+    );
+
+    // Interleaved tagged requests across all three tenants.
+    let total = 90usize;
+    let mut tickets = Vec::with_capacity(total);
+    for k in 0..total {
+        let model = tenants[k % tenants.len()];
+        tickets.push(h.submit(model, img(k)).unwrap());
+    }
+    for t in tickets {
+        let r = t.wait().unwrap();
+        assert!(r.class < 10);
+        assert!(r.device_cycles > 0);
+    }
+
+    let (m, snap) = h.shutdown();
+    assert_eq!(m.completed, total as u64);
+    assert_eq!(m.submitted, total as u64);
+
+    // At least one forced eviction and the hot-swaps that follow.
+    assert!(snap.evictions >= 1, "evictions: {}", snap.evictions);
+    assert!(snap.hot_swaps >= tenants.len() as u64 + 1, "hot_swaps: {}", snap.hot_swaps);
+
+    // Conservation: fleet-level reload cycles equal the per-macro sum,
+    // and the Metrics reload-event count matches the same cycle total.
+    assert!(snap.reload_cycles > 0);
+    assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+    assert_eq!(
+        m.weight_reloads * spec().load_cycles_per_macro as u64,
+        snap.reload_cycles,
+        "Metrics reload events must account for the same cycles"
+    );
+}
+
+#[test]
+fn deterministic_core_hot_swap_sequence() {
+    // a, b resident together fill the pool; c forces an eviction; re-serving
+    // the victim forces another hot-swap. Exact cycle accounting throughout.
+    let mut fleet = Fleet::new(&cfg(EvictionPolicy::Lru), &spec());
+    for (i, m) in ["a", "b", "c"].iter().enumerate() {
+        fleet.register(m, tenant("vgg9", 20 + i as u64), false).unwrap();
+    }
+    let load = spec().load_cycles_per_macro as u64;
+    let need = |f: &Fleet, m: &str| f.registry().get(m).unwrap().macros_needed() as u64;
+    let (na, nb, nc) = (need(&fleet, "a"), need(&fleet, "b"), need(&fleet, "c"));
+    assert!(na + nb <= FLEET_MACROS as u64, "a+b co-reside");
+    assert!(na + nb + nc > FLEET_MACROS as u64, "c forces eviction");
+
+    let batch = vec![img(0)];
+    let o1 = fleet.serve_batch("a", &batch).unwrap();
+    assert_eq!(o1.reload_cycles, na * load);
+    assert!(o1.evicted.is_empty());
+
+    let o2 = fleet.serve_batch("b", &batch).unwrap();
+    assert_eq!(o2.reload_cycles, nb * load);
+    assert!(o2.evicted.is_empty());
+
+    // Residency hits are free.
+    let o3 = fleet.serve_batch("a", &batch).unwrap();
+    assert_eq!(o3.reload_cycles, 0);
+
+    // c evicts the stalest (b, since a was just touched) and reloads.
+    let o4 = fleet.serve_batch("c", &batch).unwrap();
+    assert_eq!(o4.evicted, vec!["b".to_string()]);
+    assert_eq!(o4.reload_cycles, nc * load);
+
+    // b comes back: another hot-swap.
+    let o5 = fleet.serve_batch("b", &batch).unwrap();
+    assert!(o5.reload_cycles == nb * load && !o5.evicted.is_empty());
+
+    let snap = fleet.snapshot();
+    let expected = (na + nb + nc + nb) * load;
+    assert_eq!(snap.reload_cycles, expected);
+    assert_eq!(snap.macro_load_cycles(), expected);
+    assert_eq!(snap.hot_swaps, 4);
+    assert!(snap.evictions >= 2);
+}
+
+#[test]
+fn pinned_tenant_survives_pressure() {
+    let mut fleet = Fleet::new(&cfg(EvictionPolicy::Lru), &spec());
+    fleet.register("vip", tenant("vgg9", 31), true).unwrap();
+    fleet.register("b", tenant("vgg16", 32), false).unwrap();
+    fleet.register("c", tenant("resnet18", 33), false).unwrap();
+    let batch = vec![img(1)];
+    fleet.serve_batch("vip", &batch).unwrap();
+    // Churn the other tenants hard; the pinned one must stay resident.
+    for _ in 0..6 {
+        fleet.serve_batch("b", &batch).unwrap();
+        fleet.serve_batch("c", &batch).unwrap();
+    }
+    assert!(fleet.is_resident("vip"));
+    let o = fleet.serve_batch("vip", &batch).unwrap();
+    assert_eq!(o.reload_cycles, 0, "pinned tenant never reloads");
+    let snap = fleet.snapshot();
+    assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+}
+
+#[test]
+fn cost_weighted_policy_diverges_from_lru() {
+    // A 1-macro tenant (cheap to restore) and a 2-macro tenant (pricier)
+    // co-reside with one macro spare; a third 2-macro tenant needs room.
+    // Serve order makes "large" the STALE one, so:
+    //   * LRU evicts "large" (stalest),
+    //   * cost-weighted evicts "small" (cheapest reload) even though it
+    //     was used more recently.
+    let spec_ = spec();
+    let small = {
+        let out = morph_flow_synthetic(
+            &by_name("vgg9").unwrap(),
+            &spec_,
+            &MorphConfig {
+                target_bl: 256,
+                ..MorphConfig::default()
+            },
+            0.4,
+            41,
+        );
+        out.arch
+    };
+    let large = tenant("vgg16", 42);
+    let small_macros = pack_model(&small, &spec_).num_macros;
+    let large_macros = pack_model(&large, &spec_).num_macros;
+    assert_eq!(small_macros, 1, "256-BL tenant fits one macro");
+    assert!(large_macros > small_macros, "{large_macros} vs {small_macros}");
+
+    for (policy, expect_victim) in [
+        (EvictionPolicy::Lru, "large"),
+        (EvictionPolicy::CostWeighted, "small"),
+    ] {
+        let mut fleet = Fleet::new(&cfg(policy), &spec_);
+        fleet.register("small", small.clone(), false).unwrap();
+        fleet.register("large", large.clone(), false).unwrap();
+        fleet.register("third", tenant("resnet18", 43), false).unwrap();
+        let batch = vec![img(2)];
+        fleet.serve_batch("large", &batch).unwrap();
+        fleet.serve_batch("small", &batch).unwrap(); // small is most recent
+        let o = fleet.serve_batch("third", &batch).unwrap();
+        assert_eq!(
+            o.evicted.first().map(|s| s.as_str()),
+            Some(expect_victim),
+            "{policy:?}: evicted {:?}",
+            o.evicted
+        );
+        let snap = fleet.snapshot();
+        assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+    }
+}
+
+#[test]
+fn retire_frees_capacity_for_new_tenant() {
+    let mut fleet = Fleet::new(&cfg(EvictionPolicy::Lru), &spec());
+    fleet.register("a", tenant("vgg9", 51), false).unwrap();
+    fleet.register("b", tenant("vgg16", 52), false).unwrap();
+    let batch = vec![img(3)];
+    fleet.serve_batch("a", &batch).unwrap();
+    fleet.serve_batch("b", &batch).unwrap();
+    fleet.retire("a").unwrap();
+    assert!(!fleet.is_resident("a"));
+    assert!(fleet.serve_batch("a", &batch).is_err(), "retired = unknown");
+    // A new tenant takes the freed macros without evicting b.
+    fleet.register("c", tenant("resnet18", 53), false).unwrap();
+    let o = fleet.serve_batch("c", &batch).unwrap();
+    assert!(o.evicted.is_empty(), "retirement freed room: {:?}", o.evicted);
+    assert!(fleet.is_resident("b"));
+}
+
+#[test]
+fn compressed_fits_where_uncompressed_evicts() {
+    // The operational payoff of the paper's Stage-1 compression: under
+    // the same alternating request mix against a co-tenant, the morphed
+    // VGG9 coexists (one-time swaps only) while the full VGG9 pages
+    // through the pool every batch. Strictly fewer reload cycles.
+    let spec_ = spec();
+    let co_tenant = tenant("vgg16", 61);
+    let mix = |fleet: &mut Fleet| {
+        let batch: Vec<Vec<f32>> = (0..4).map(img).collect();
+        for _ in 0..5 {
+            fleet.serve_batch("primary", &batch).unwrap();
+            fleet.serve_batch("co", &batch).unwrap();
+        }
+        fleet.snapshot().reload_cycles
+    };
+
+    let mut morphed = Fleet::new(&cfg(EvictionPolicy::Lru), &spec_);
+    morphed.register("primary", tenant("vgg9", 62), false).unwrap();
+    morphed.register("co", co_tenant.clone(), false).unwrap();
+    let morphed_cycles = mix(&mut morphed);
+
+    let mut uncompressed = Fleet::new(&cfg(EvictionPolicy::Lru), &spec_);
+    uncompressed.register("primary", by_name("vgg9").unwrap(), false).unwrap();
+    uncompressed.register("co", co_tenant, false).unwrap();
+    let uncompressed_cycles = mix(&mut uncompressed);
+
+    assert!(
+        morphed_cycles < uncompressed_cycles,
+        "morphed {morphed_cycles} must beat uncompressed {uncompressed_cycles}"
+    );
+    // Both books balance.
+    assert_eq!(
+        morphed.snapshot().reload_cycles,
+        morphed.snapshot().macro_load_cycles()
+    );
+    assert_eq!(
+        uncompressed.snapshot().reload_cycles,
+        uncompressed.snapshot().macro_load_cycles()
+    );
+}

@@ -4,12 +4,14 @@
 
 use cim_adapt::arch::{by_name, vgg9, ConvLayer, LayerKind, ModelArch};
 use cim_adapt::cim::{Adc, CimMacro, WeightCell};
-use cim_adapt::config::{MacroSpec, MorphConfig};
+use cim_adapt::config::{FleetConfig, MacroSpec, MorphConfig};
+use cim_adapt::fleet::Fleet;
 use cim_adapt::latency::{layer_cost, model_cost};
 use cim_adapt::mapping::pack_model;
 use cim_adapt::morph::expand::search_expansion_ratio;
 use cim_adapt::quant::lsq::{lsq_quantize, LsqTensor};
 use cim_adapt::quant::psum::{quantize_psum, segment_inputs};
+use cim_adapt::util::json::Json;
 use cim_adapt::util::prng::Pcg;
 use cim_adapt::util::testkit::*;
 
@@ -197,6 +199,123 @@ fn prop_scaled_arch_valid_and_monotone() {
             s.validate().is_ok()
                 && (ratio <= 1.0 || s.params() >= base.params())
                 && (ratio >= 1.0 || s.params() <= base.params())
+        },
+    );
+}
+
+// ---- util::json: parse ∘ stringify = id over generated values --------------
+
+/// Generator for arbitrary JSON values (depth-bounded).
+struct JsonGen {
+    depth: usize,
+}
+
+fn json_values(depth: usize) -> JsonGen {
+    JsonGen { depth }
+}
+
+fn gen_string(rng: &mut Pcg) -> String {
+    // Exercise escapes, control chars, and multibyte UTF-8.
+    const POOL: &[char] = &[
+        'a', 'Z', '7', ' ', '_', '"', '\\', '/', '\n', '\t', '\r', '\u{7}', 'π', '€', '日',
+    ];
+    let len = rng.gen_range(9);
+    (0..len).map(|_| POOL[rng.gen_range(POOL.len())]).collect()
+}
+
+fn gen_json(rng: &mut Pcg, depth: usize) -> Json {
+    let kinds = if depth == 0 { 4 } else { 6 };
+    match rng.gen_range(kinds) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => {
+            if rng.chance(0.5) {
+                // Integer-valued (the writer's i64 fast path).
+                Json::Num(rng.gen_range(2_000_001) as f64 - 1_000_000.0)
+            } else {
+                // Fractional (the writer's shortest-roundtrip path).
+                Json::Num((rng.next_f64() - 0.5) * 1e6)
+            }
+        }
+        3 => Json::Str(gen_string(rng)),
+        4 => Json::Arr((0..rng.gen_range(5)).map(|_| gen_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.gen_range(5))
+                .map(|_| (gen_string(rng), gen_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+impl Gen for JsonGen {
+    type Value = Json;
+    fn gen(&self, rng: &mut Pcg) -> Json {
+        gen_json(rng, self.depth)
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_compact() {
+    check("parse ∘ dump = id", cases(400), json_values(3), |v| {
+        Json::parse(&v.dump()).map(|back| back == *v).unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_pretty() {
+    check("parse ∘ pretty = id", cases(400), json_values(3), |v| {
+        Json::parse(&v.pretty()).map(|back| back == *v).unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_json_trailing_garbage_error_points_at_it() {
+    check(
+        "trailing-garbage error position = start of garbage",
+        cases(200),
+        json_values(2),
+        |v| {
+            let dumped = v.dump();
+            let broken = format!("{dumped}@@");
+            match Json::parse(&broken) {
+                Err(e) => e.pos == dumped.len(),
+                Ok(_) => false,
+            }
+        },
+    );
+}
+
+// ---- fleet: reload accounting conservation ---------------------------------
+
+#[test]
+fn prop_fleet_reload_accounting_conserves() {
+    // Any request sequence over tenants of mixed footprint (resident and
+    // paging paths both exercised): fleet-level reload cycles always
+    // equal the per-macro load-cycle sum.
+    let spec = MacroSpec::default();
+    check(
+        "fleet reload cycles == Σ per-macro load cycles",
+        cases(25),
+        pairs(vecs(usizes(0..3), 1..20), usizes(2..7)),
+        |(seq, num_macros)| {
+            let cfg = FleetConfig {
+                num_macros: *num_macros,
+                ..FleetConfig::default()
+            };
+            let mut fleet = Fleet::new(&cfg, &spec);
+            // 0.1 → ~2 macros, 0.16 → ~5, 0.25 → ~11: on small pools the
+            // larger tenants take the paging path.
+            for (i, scale) in [0.1, 0.16, 0.25].iter().enumerate() {
+                fleet
+                    .register(&format!("m{i}"), vgg9().scaled(*scale), false)
+                    .unwrap();
+            }
+            let img = vec![0.5f32; 64];
+            for &m in seq {
+                let _ = fleet.serve_batch(&format!("m{m}"), &[img.clone()]);
+            }
+            let snap = fleet.snapshot();
+            snap.reload_cycles == snap.macro_load_cycles()
         },
     );
 }

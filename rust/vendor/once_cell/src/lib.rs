@@ -1,0 +1,55 @@
+//! Offline slice of the `once_cell` API: `sync::Lazy`, backed by
+//! `std::sync::OnceLock`.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access, thread-safe.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy {
+                cell: OnceLock::new(),
+                init,
+            }
+        }
+
+        /// Force initialization and return a reference.
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(|| (this.init)())
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+
+    static N: Lazy<usize> = Lazy::new(|| 41 + 1);
+
+    #[test]
+    fn static_lazy_initializes_once() {
+        assert_eq!(*N, 42);
+        assert_eq!(*Lazy::force(&N), 42);
+    }
+
+    #[test]
+    fn local_lazy_with_capture() {
+        let base = 10usize;
+        let l = Lazy::new(move || base * 2);
+        assert_eq!(*l, 20);
+    }
+}

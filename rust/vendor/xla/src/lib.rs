@@ -1,0 +1,149 @@
+//! Offline **stub** of the `xla` crate's PJRT surface.
+//!
+//! The real bindings need the PJRT C API shared library and a registry
+//! checkout, neither of which exists in this offline build. This stub
+//! keeps the `cim_adapt::runtime` module compiling with identical call
+//! sites; every entry point that would touch a device returns
+//! [`Error::Unavailable`], so the serving stack degrades exactly like a
+//! machine without artifacts: PJRT-backed paths are skipped, the Sim
+//! backend and the cycle-accurate digital twin carry all tests/benches.
+//!
+//! To run against real PJRT, patch the dependency in `rust/Cargo.toml`:
+//!
+//! ```toml
+//! [patch."crates-io"]  # or a [patch] on the path dep
+//! xla = { git = "..." }
+//! ```
+
+use std::fmt;
+
+/// Stub error: the PJRT backend is not present in this build.
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: PJRT backend unavailable (offline `xla` stub; \
+                 substitute the real xla crate to enable)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// Element types a [`Literal`] can be read back as.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Host-side tensor value.
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_values: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("reshaping literal")
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable("unwrapping tuple literal")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("reading literal")
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("parsing HLO text")
+    }
+}
+
+/// An XLA computation ready for compilation.
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer handle.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("fetching buffer")
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute over host inputs; real signature returns per-device,
+    /// per-output buffers (hence `Vec<Vec<_>>`).
+    pub fn execute<L>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executing")
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("creating PJRT CPU client")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compiling")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_device_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(Literal::vec1(&[1.0]).reshape(&[1]).is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+        assert!(PjRtLoadedExecutable.execute::<Literal>(&[]).is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("unavailable"), "{msg}");
+    }
+}

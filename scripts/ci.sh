@@ -1,0 +1,59 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate for the Rust workspace: format, lint, build, test.
+#
+# Usage: scripts/ci.sh [--no-clippy] [--no-fmt]
+#   --no-clippy   skip the clippy step (e.g. toolchain without clippy)
+#   --no-fmt      skip the rustfmt check (e.g. toolchain without rustfmt)
+#
+# Clippy runs with -D warnings plus a small documented allowlist:
+#   clippy::too_many_arguments  — the fleet placer/scheduler entry points
+#                                 thread registry/evictor/spec explicitly
+#                                 rather than hiding them in a context bag.
+#   clippy::new_without_default — constructors like Placer::new(n) take
+#                                 required parameters; Default is wrong.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+run_fmt=1
+run_clippy=1
+for arg in "$@"; do
+  case "$arg" in
+    --no-fmt) run_fmt=0 ;;
+    --no-clippy) run_clippy=0 ;;
+    *) echo "unknown flag: $arg" >&2; exit 2 ;;
+  esac
+done
+
+echo "==> cargo fmt --check"
+if [ "$run_fmt" = 1 ]; then
+  if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all -- --check
+  else
+    echo "    (rustfmt not installed; skipping)"
+  fi
+else
+  echo "    (skipped)"
+fi
+
+echo "==> cargo clippy -- -D warnings (with documented allowlist)"
+if [ "$run_clippy" = 1 ]; then
+  if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --workspace --all-targets -- \
+      -D warnings \
+      -A clippy::too_many_arguments \
+      -A clippy::new_without_default
+  else
+    echo "    (clippy not installed; skipping)"
+  fi
+else
+  echo "    (skipped)"
+fi
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "CI gate passed."
