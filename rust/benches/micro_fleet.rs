@@ -7,10 +7,13 @@
 //! Emits `BENCH_fleet.json` (see `report::write_bench_summary`) so the
 //! perf trajectory is tracked across PRs.
 
+use std::collections::BTreeSet;
+
 use cim_adapt::arch::by_name;
 use cim_adapt::config::{FleetConfig, MacroSpec, MorphConfig};
 use cim_adapt::data::SynthCifar;
 use cim_adapt::fleet::{EvictionPolicy, Fleet, FleetServer};
+use cim_adapt::mapping::pack_model;
 use cim_adapt::morph::flow::morph_flow_synthetic;
 use cim_adapt::report::write_bench_summary;
 use cim_adapt::util::bench::{black_box, Runner};
@@ -38,6 +41,46 @@ fn cfg(num_macros: usize) -> FleetConfig {
         queue_depth: 4096,
         policy: EvictionPolicy::Lru,
         ..FleetConfig::default()
+    }
+}
+
+/// Outcome of the co-residency scenario under one placement granularity.
+struct CoresidencyRun {
+    reload_cycles: u64,
+    resident_macros: usize,
+    utilization: f64,
+}
+
+/// Two fractional-macro tenants alternating on a **1-macro** pool: with
+/// co-residency both live on the macro's columns (one partial swap each);
+/// with whole-macro placement they evict each other every round.
+fn coresidency_mix(coresident: bool, rounds: usize) -> CoresidencyRun {
+    let spec = MacroSpec::default();
+    let fleet_cfg = FleetConfig {
+        num_macros: 1,
+        coresident,
+        ..cfg(1)
+    };
+    let mut fleet = Fleet::new(&fleet_cfg, &spec);
+    fleet.register("a", by_name("vgg9").unwrap().scaled(0.04), false).unwrap();
+    fleet.register("b", by_name("vgg9").unwrap().scaled(0.03), false).unwrap();
+    let batch: Vec<Vec<f32>> = (0..4).map(|k| SynthCifar::sample(k, k as u64).data).collect();
+    for _ in 0..rounds {
+        fleet.serve_batch("a", &batch).unwrap();
+        fleet.serve_batch("b", &batch).unwrap();
+    }
+    let snap = fleet.snapshot();
+    assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+    assert_eq!(snap.reload_cycles, snap.tenant_load_cycles());
+    let resident_macros: BTreeSet<usize> = snap
+        .resident
+        .iter()
+        .flat_map(|p| p.macros())
+        .collect();
+    CoresidencyRun {
+        reload_cycles: snap.reload_cycles,
+        resident_macros: resident_macros.len(),
+        utilization: snap.utilization(),
     }
 }
 
@@ -133,12 +176,69 @@ fn main() {
          ({morphed_cycles} vs {uncompressed_cycles})"
     );
 
+    // --- fractional-macro co-residency (deterministic cycle counts) ------
+    // Two tenants that together fit ONE macro's columns: co-residency
+    // keeps both resident on fewer macros than whole-macro placement
+    // needs, with strictly fewer reload cycles and higher utilization.
+    let co = coresidency_mix(true, rounds);
+    let whole = coresidency_mix(false, rounds);
+    let spec_ = MacroSpec::default();
+    let whole_macros_needed: usize = [0.04, 0.03]
+        .iter()
+        .map(|&s| pack_model(&by_name("vgg9").unwrap().scaled(s), &spec_).num_macros)
+        .sum();
+    r.table(&format!(
+        "co-residency over {rounds} alternating rounds: {} reload cycles on {} macro(s) \
+         at {:.1}% utilization vs whole-macro {} cycles needing {} macros at {:.1}%",
+        co.reload_cycles,
+        co.resident_macros,
+        co.utilization * 100.0,
+        whole.reload_cycles,
+        whole_macros_needed,
+        whole.utilization * 100.0
+    ));
+    assert!(
+        co.reload_cycles < whole.reload_cycles,
+        "co-residency must sustain strictly fewer reload cycles \
+         ({} vs {})",
+        co.reload_cycles,
+        whole.reload_cycles
+    );
+    assert!(
+        co.resident_macros < whole_macros_needed,
+        "co-residents must share macros ({} vs {} needed whole)",
+        co.resident_macros,
+        whole_macros_needed
+    );
+    assert!(
+        co.utilization > whole.utilization,
+        "co-residency must lift fleet utilization ({:.3} vs {:.3})",
+        co.utilization,
+        whole.utilization
+    );
+
     // --- machine-readable summary ----------------------------------------
     let summary = Json::obj()
         .with("bench", "micro_fleet")
         .with("timings", r.results_json())
         .with("serving", metrics.to_json())
         .with("churn", churn_snap.to_json())
+        .with("fleet_utilization", co.utilization)
+        .with(
+            "coresidency",
+            Json::obj()
+                .with("rounds", rounds)
+                .with("coresident_reload_cycles", co.reload_cycles)
+                .with("whole_macro_reload_cycles", whole.reload_cycles)
+                .with(
+                    "reload_advantage",
+                    whole.reload_cycles as f64 / co.reload_cycles.max(1) as f64,
+                )
+                .with("coresident_macros", co.resident_macros)
+                .with("whole_macros_needed", whole_macros_needed)
+                .with("coresident_utilization", co.utilization)
+                .with("whole_macro_utilization", whole.utilization),
+        )
         .with(
             "compression_trade",
             Json::obj()

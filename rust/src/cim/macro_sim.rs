@@ -14,6 +14,7 @@ use super::array::CimArray;
 use super::cell::WeightCell;
 use super::dac::Dac;
 use crate::config::MacroSpec;
+use crate::latency::region_reload_cycles;
 
 /// Running hardware counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -84,8 +85,11 @@ impl CimMacro {
     }
 
     /// Load a set of bitline columns starting at `bl_start`, charging the
-    /// full-macro reload cost (the paper: "a CIM macro would require 256
-    /// cycles for this process" — one row broadcast per cycle).
+    /// **region-granular** reload cost: `ceil(n · load_cycles_per_macro /
+    /// bitlines)` cycles for `n` columns. Loading all `bitlines` columns
+    /// costs exactly `load_cycles_per_macro` — the paper's "a CIM macro
+    /// would require 256 cycles for this process" — while a partial
+    /// region (fractional-macro co-residency) costs proportionally fewer.
     pub fn load_columns(&mut self, bl_start: usize, columns: &[Vec<WeightCell>]) {
         assert!(
             bl_start + columns.len() <= self.spec.bitlines,
@@ -97,7 +101,7 @@ impl CimMacro {
         for (i, col) in columns.iter().enumerate() {
             self.array.load_column(bl_start + i, col);
         }
-        self.stats.load_cycles += self.spec.load_cycles_per_macro as u64;
+        self.stats.load_cycles += region_reload_cycles(columns.len(), &self.spec);
         self.stats.reloads += 1;
     }
 
@@ -221,12 +225,28 @@ mod tests {
     }
 
     #[test]
-    fn reload_accounting() {
+    fn reload_accounting_is_region_granular() {
         let mut m = CimMacro::new(spec(), 1.0, 1.0);
+        // One column of a 256-BL macro: ceil(1·256/256) = 1 cycle.
         m.load_columns(0, &[cells(&[1])]);
         m.load_columns(0, &[cells(&[2])]);
         assert_eq!(m.stats.reloads, 2);
-        assert_eq!(m.stats.load_cycles, 512);
+        assert_eq!(m.stats.load_cycles, 2);
+        // A full-macro load still costs the paper's 256 cycles.
+        m.load_columns(0, &vec![cells(&[3]); 256]);
+        assert_eq!(m.stats.reloads, 3);
+        assert_eq!(m.stats.load_cycles, 2 + 256);
+    }
+
+    #[test]
+    fn partial_load_cheaper_than_full_macro() {
+        let mut partial = CimMacro::new(spec(), 1.0, 1.0);
+        partial.load_columns(0, &vec![cells(&[1]); 100]);
+        let mut full = CimMacro::new(spec(), 1.0, 1.0);
+        full.load_columns(0, &vec![cells(&[1]); 256]);
+        assert_eq!(partial.stats.load_cycles, 100);
+        assert_eq!(full.stats.load_cycles, 256);
+        assert!(partial.stats.load_cycles < full.stats.load_cycles);
     }
 
     #[test]
@@ -249,10 +269,10 @@ mod tests {
         a.pass(&[1; 9], 0, 1);
         let total = MacroStats::aggregate([&a.stats, &b.stats]);
         assert_eq!(total.reloads, 3);
-        assert_eq!(total.load_cycles, 3 * 256);
+        assert_eq!(total.load_cycles, 3); // 3 single-column region loads
         assert_eq!(total.compute_cycles, 2); // 1 evaluate + 1 ADC round
         assert_eq!(total.conversions, 1);
-        assert_eq!(total.busy_cycles(), 3 * 256 + 2);
+        assert_eq!(total.busy_cycles(), 3 + 2);
         let mut manual = a.stats;
         manual.absorb(&b.stats);
         assert_eq!(manual, total);

@@ -26,7 +26,12 @@ pub struct MacroSpec {
     pub adc_bits: u32,
     /// Number of physical ADCs (bitlines/adcs are muxed, Fig. 2).
     pub num_adcs: usize,
-    /// Cycles to load one full macro of weights (1 row/cycle).
+    /// Cycles to load one **full** macro of weights (the paper's 256-cycle
+    /// row-broadcast figure). Partial loads are charged proportionally to
+    /// the columns written — `ceil(cols · load_cycles_per_macro /
+    /// bitlines)`, see `latency::region_reload_cycles` — the column-serial
+    /// write model that makes fractional-macro hot-swaps cheaper than
+    /// whole-macro ones; a full-width load reduces to this figure exactly.
     pub load_cycles_per_macro: usize,
 }
 
@@ -284,6 +289,10 @@ pub struct FleetConfig {
     pub queue_depth: usize,
     /// Eviction policy when aggregate demand exceeds the pool.
     pub policy: EvictionPolicy,
+    /// Fractional-macro co-residency: place models at bitline-region
+    /// granularity so two tenants can share one macro's spare columns.
+    /// Off = the degenerate whole-macro placement (region = full macro).
+    pub coresident: bool,
     /// Clock frequency for cycle → wall-time conversion (MHz).
     pub clock_mhz: f64,
 }
@@ -296,6 +305,7 @@ impl Default for FleetConfig {
             batch_timeout_us: 2000,
             queue_depth: 1024,
             policy: EvictionPolicy::Lru,
+            coresident: false,
             clock_mhz: 200.0,
         }
     }
@@ -309,6 +319,7 @@ impl FleetConfig {
             .with("batch_timeout_us", self.batch_timeout_us)
             .with("queue_depth", self.queue_depth)
             .with("policy", self.policy.as_str())
+            .with("coresident", self.coresident)
             .with("clock_mhz", self.clock_mhz)
     }
 
@@ -328,6 +339,7 @@ impl FleetConfig {
                 .as_str()
                 .and_then(EvictionPolicy::parse)
                 .unwrap_or(d.policy),
+            coresident: j.get("coresident").as_bool().unwrap_or(d.coresident),
             clock_mhz: j.get("clock_mhz").as_f64().unwrap_or(d.clock_mhz),
         }
     }
@@ -429,8 +441,12 @@ mod tests {
         let mut c = FleetConfig::default();
         c.num_macros = 16;
         c.policy = EvictionPolicy::CostWeighted;
+        c.coresident = true;
         let back = FleetConfig::from_json(&c.to_json());
         assert_eq!(back, c);
+        // Missing knob defaults to whole-macro placement.
+        let j = Json::parse(r#"{"num_macros": 8}"#).unwrap();
+        assert!(!FleetConfig::from_json(&j).coresident);
         // Unknown policy string falls back to the default (LRU).
         let j = Json::parse(r#"{"policy": "mystery"}"#).unwrap();
         assert_eq!(FleetConfig::from_json(&j).policy, EvictionPolicy::Lru);

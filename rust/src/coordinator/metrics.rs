@@ -45,6 +45,9 @@ pub struct MetricsSnapshot {
     pub mean_batch: f64,
     pub device_cycles: u64,
     pub weight_reloads: u64,
+    /// Models evicted to make room for dispatched batches (fleet serving;
+    /// always 0 on the single-model path).
+    pub evictions: u64,
     pub latency: LatencyStats,
     pub throughput_rps: f64,
     pub elapsed_s: f64,
@@ -61,6 +64,7 @@ impl MetricsSnapshot {
             .with("mean_batch", self.mean_batch)
             .with("device_cycles", self.device_cycles)
             .with("weight_reloads", self.weight_reloads)
+            .with("evictions", self.evictions)
             .with("throughput_rps", self.throughput_rps)
             .with("elapsed_s", self.elapsed_s)
             .with(
@@ -84,6 +88,7 @@ struct Inner {
     batch_total: u64,
     device_cycles: u64,
     weight_reloads: u64,
+    evictions: u64,
     latencies_us: Vec<u64>,
     started: Instant,
 }
@@ -104,6 +109,7 @@ impl Default for Metrics {
                 batch_total: 0,
                 device_cycles: 0,
                 weight_reloads: 0,
+                evictions: 0,
                 latencies_us: Vec::with_capacity(4096),
                 started: Instant::now(),
             }),
@@ -124,12 +130,13 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
-    pub fn on_batch(&self, batch_size: usize, device_cycles: u64, reloads: u64) {
+    pub fn on_batch(&self, batch_size: usize, device_cycles: u64, reloads: u64, evictions: u64) {
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
         g.batch_total += batch_size as u64;
         g.device_cycles += device_cycles;
         g.weight_reloads += reloads;
+        g.evictions += evictions;
     }
 
     pub fn on_complete(&self, latency_us: u64) {
@@ -157,6 +164,7 @@ impl Metrics {
             },
             device_cycles: g.device_cycles,
             weight_reloads: g.weight_reloads,
+            evictions: g.evictions,
             latency: LatencyStats::from_samples(g.latencies_us.clone()),
             throughput_rps: if elapsed > 0.0 {
                 g.completed as f64 / elapsed
@@ -179,8 +187,8 @@ mod tests {
             m.on_submit();
         }
         m.on_reject();
-        m.on_batch(4, 1000, 2);
-        m.on_batch(8, 2000, 0);
+        m.on_batch(4, 1000, 2, 1);
+        m.on_batch(8, 2000, 0, 0);
         for i in 0..12u64 {
             m.on_complete(100 + i);
         }
@@ -191,6 +199,7 @@ mod tests {
         assert_eq!(s.mean_batch, 6.0);
         assert_eq!(s.device_cycles, 3000);
         assert_eq!(s.weight_reloads, 2);
+        assert_eq!(s.evictions, 1);
         assert_eq!(s.latency.count, 12);
         assert!(s.latency.p50_us >= 100);
         assert!(s.latency.max_us == 111);
@@ -213,12 +222,13 @@ mod tests {
     fn snapshot_serializes_to_json() {
         let m = Metrics::new();
         m.on_submit();
-        m.on_batch(2, 500, 1);
+        m.on_batch(2, 500, 1, 3);
         m.on_complete(120);
         m.on_complete(140);
         let j = m.snapshot().to_json();
         assert_eq!(j.get("submitted").as_usize(), Some(1));
         assert_eq!(j.get("weight_reloads").as_usize(), Some(1));
+        assert_eq!(j.get("evictions").as_usize(), Some(3));
         assert_eq!(j.at(&["latency_us", "count"]).as_usize(), Some(2));
         // Round-trips through the parser.
         let back = Json::parse(&j.pretty()).unwrap();

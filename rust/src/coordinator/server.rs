@@ -223,7 +223,7 @@ fn worker_loop(
         };
 
         let device_cycles = plan.batch_cycles(n);
-        metrics.on_batch(n, device_cycles, plan.reloads_per_inference);
+        metrics.on_batch(n, device_cycles, plan.reloads_per_inference, 0);
         let per_req_cycles = device_cycles / n as u64;
         let k = engine.num_classes();
         for (i, req) in batch.into_iter().enumerate() {

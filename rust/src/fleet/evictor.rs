@@ -1,8 +1,9 @@
-//! Eviction policy: who loses their macros when aggregate demand exceeds
-//! the pool.
+//! Eviction policy: who loses their bitline regions when aggregate demand
+//! exceeds the pool.
 //!
-//! Two pluggable policies, both deterministic (ties broken by model name
-//! so replays are bit-stable):
+//! [`Evictor`] is a trait so victim selection is pluggable; the built-in
+//! [`PolicyEvictor`] applies one of two deterministic rules (ties broken
+//! by model name so replays are bit-stable):
 //!
 //! * **LRU** — evict the model whose last request is oldest. Good when
 //!   the request mix has temporal locality.
@@ -13,8 +14,12 @@
 //!   model is both less likely to *cause* evictions (smaller footprint)
 //!   and cheaper to re-admit after one.
 //!
-//! Pinned models are excluded from candidacy by the placer before the
-//! policy ever sees them.
+//! Eviction is **region-granular**: the placer calls the evictor
+//! repeatedly and stops as soon as enough bitline *columns* are free —
+//! it never rounds the demand up to whole macros — and candidates expose
+//! their column footprint (`bls_held`) so policies can minimize
+//! over-eviction. Pinned models are excluded from candidacy by the placer
+//! before the policy ever sees them.
 
 /// Which victim-selection rule the fleet uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -47,25 +52,39 @@ pub struct VictimCandidate {
     pub name: String,
     /// Placer clock tick of the model's last use (smaller = staler).
     pub last_used: u64,
-    /// Cycles a future hot-swap back in would cost.
+    /// Cycles a future hot-swap back in would cost (region-granular when
+    /// the pool co-resides tenants, whole-macro otherwise).
     pub reload_cycles: u64,
-    /// Physical macros the model currently holds.
+    /// Distinct physical macros the model currently touches.
     pub macros_held: usize,
+    /// Bitline columns the model currently holds — the exact capacity an
+    /// eviction frees under region-granular placement.
+    pub bls_held: usize,
 }
 
-/// Applies an [`EvictionPolicy`] over victim candidates.
+/// Victim selection over the placer's candidates. Implementations must be
+/// deterministic for a given candidate set (fleet replays are bit-stable)
+/// and pick *one* victim per call; the placer re-invokes until enough
+/// columns are free.
+pub trait Evictor {
+    /// Pick the next victim, or `None` when there are no candidates.
+    fn choose<'a>(&self, candidates: &'a [VictimCandidate]) -> Option<&'a VictimCandidate>;
+}
+
+/// The built-in [`EvictionPolicy`] rules as an [`Evictor`].
 #[derive(Debug, Clone, Copy)]
-pub struct Evictor {
+pub struct PolicyEvictor {
     pub policy: EvictionPolicy,
 }
 
-impl Evictor {
-    pub fn new(policy: EvictionPolicy) -> Evictor {
-        Evictor { policy }
+impl PolicyEvictor {
+    pub fn new(policy: EvictionPolicy) -> PolicyEvictor {
+        PolicyEvictor { policy }
     }
+}
 
-    /// Pick the next victim, or `None` when there are no candidates.
-    pub fn choose<'a>(&self, candidates: &'a [VictimCandidate]) -> Option<&'a VictimCandidate> {
+impl Evictor for PolicyEvictor {
+    fn choose<'a>(&self, candidates: &'a [VictimCandidate]) -> Option<&'a VictimCandidate> {
         match self.policy {
             EvictionPolicy::Lru => candidates
                 .iter()
@@ -87,36 +106,44 @@ mod tests {
             last_used,
             reload_cycles: reload,
             macros_held: 1,
+            bls_held: 256,
         }
     }
 
     #[test]
     fn lru_picks_stalest() {
-        let e = Evictor::new(EvictionPolicy::Lru);
+        let e = PolicyEvictor::new(EvictionPolicy::Lru);
         let cs = vec![cand("a", 5, 100), cand("b", 2, 9000), cand("c", 8, 1)];
         assert_eq!(e.choose(&cs).unwrap().name, "b");
     }
 
     #[test]
     fn cost_weighted_picks_cheapest_reload() {
-        let e = Evictor::new(EvictionPolicy::CostWeighted);
+        let e = PolicyEvictor::new(EvictionPolicy::CostWeighted);
         let cs = vec![cand("a", 5, 100), cand("b", 2, 9000), cand("c", 8, 256)];
         assert_eq!(e.choose(&cs).unwrap().name, "a");
     }
 
     #[test]
     fn ties_break_deterministically() {
-        let lru = Evictor::new(EvictionPolicy::Lru);
+        let lru = PolicyEvictor::new(EvictionPolicy::Lru);
         let cs = vec![cand("z", 3, 10), cand("a", 3, 10)];
         assert_eq!(lru.choose(&cs).unwrap().name, "a");
-        let cw = Evictor::new(EvictionPolicy::CostWeighted);
+        let cw = PolicyEvictor::new(EvictionPolicy::CostWeighted);
         assert_eq!(cw.choose(&cs).unwrap().name, "a");
     }
 
     #[test]
     fn empty_candidates_yield_none() {
-        let e = Evictor::new(EvictionPolicy::Lru);
+        let e = PolicyEvictor::new(EvictionPolicy::Lru);
         assert!(e.choose(&[]).is_none());
+    }
+
+    #[test]
+    fn works_as_trait_object() {
+        let e: Box<dyn Evictor> = Box::new(PolicyEvictor::new(EvictionPolicy::Lru));
+        let cs = vec![cand("a", 1, 10), cand("b", 0, 10)];
+        assert_eq!(e.choose(&cs).unwrap().name, "b");
     }
 
     #[test]

@@ -10,20 +10,27 @@
 //!   [`mapping`](crate::mapping) footprints and
 //!   [`latency`](crate::latency) cost profiles ([`ModelRegistry`]).
 //! * [`placer`] — reload-aware bin-packing of footprints onto physical
-//!   macros; every placement change is charged the cost model's reload
-//!   cycles ([`Placer`], [`SwapEvent`]).
-//! * [`evictor`] — pluggable victim selection (LRU or reload-cost
-//!   weighted; pinned models are untouchable) when aggregate demand
-//!   exceeds the pool ([`Evictor`], [`EvictionPolicy`]).
+//!   macros at **bitline-region granularity**
+//!   ([`Region`](crate::mapping::Region)): with co-residency enabled two
+//!   models share one macro's spare columns, and every placement change
+//!   is charged the cost model's (partial) reload cycles ([`Placer`],
+//!   [`SwapEvent`]). Whole-macro placement remains the degenerate case.
+//! * [`evictor`] — pluggable victim selection (the [`Evictor`] trait;
+//!   built-in LRU or reload-cost weighted [`PolicyEvictor`]; pinned
+//!   models are untouchable) when aggregate demand exceeds the pool.
+//!   Eviction is region-granular: it stops as soon as enough columns are
+//!   free, so co-residents that fit beside a newcomer survive.
 //! * [`server`] — per-model routing and batching over the shared pool,
 //!   with hot-swap (reload) accounting flowing into the same
 //!   [`MacroStats`](crate::cim::MacroStats) /
 //!   [`Metrics`](crate::coordinator::Metrics) counters the single-model
 //!   path uses ([`Fleet`], [`FleetServer`]).
 //!
-//! Invariant (asserted by `rust/tests/integration_fleet.rs`): fleet-level
-//! reload cycles equal the sum of per-macro `MacroStats::load_cycles` —
-//! reload cost is only ever charged through a macro.
+//! Invariant (asserted by `rust/tests/integration_fleet.rs` and
+//! `rust/tests/proptests.rs`): fleet-level reload cycles equal the sum of
+//! per-macro `MacroStats::load_cycles` **and** the sum of per-tenant
+//! attribution — reload cost is only ever charged through a macro, and
+//! every charge names the tenant that incurred it.
 //!
 //! The operational payoff of compression, demonstrated by
 //! `benches/micro_fleet.rs`: a morphed model fits where its uncompressed
@@ -35,7 +42,7 @@ pub mod placer;
 pub mod registry;
 pub mod server;
 
-pub use evictor::{EvictionPolicy, Evictor, VictimCandidate};
+pub use evictor::{EvictionPolicy, Evictor, PolicyEvictor, VictimCandidate};
 pub use placer::{Placement, Placer, SwapEvent};
 pub use registry::{ModelEntry, ModelRegistry};
 pub use server::{BatchOutcome, Fleet, FleetHandle, FleetServer, FleetSnapshot};

@@ -1,19 +1,34 @@
-//! Reload-aware placement: bin-packs model footprints onto the fleet's
-//! physical macros and charges the cost model's reload cycles for every
-//! placement change.
+//! Reload-aware placement at bitline-region granularity: bin-packs model
+//! footprints onto the fleet's physical macros and lets the fleet charge
+//! the cost model's reload cycles for every placement change.
 //!
-//! Because all macros in the pool are identical, a model's
-//! single-device packing ([`ModelMapping`](crate::mapping::ModelMapping))
-//! is reused verbatim: logical macro `i` lands on the `i`-th physical
-//! macro assigned to the model, so a placement is simply a set of
-//! `macros_needed` physical slots. The interesting work is *when to pay
-//! for moving weights*: a resident model serves for free; a non-resident
-//! model costs [`ModelCost::reload_cycles`](crate::latency::ModelCost::reload_cycles)
-//! to swap in, and may force evictions chosen by the [`Evictor`].
+//! The placement unit is a [`Region`] (`macro_id`, `bl_start`,
+//! `bl_count`), managed by a per-macro free-region list
+//! ([`RegionAllocator`]). Two placement granularities exist:
+//!
+//! * **Co-resident** (region) mode — a model occupies exactly
+//!   `total_bls` columns wherever they are free, so two tenants can share
+//!   one macro's spare columns and a partial swap streams only the
+//!   occupied columns ([`region_reload_cycles`]). This is what keeps the
+//!   paper's ~90% array utilization intact at *fleet* scale.
+//! * **Whole-macro** mode — the degenerate case (region = full macro):
+//!   a model takes `macros_needed` fully-free macros, reproducing the
+//!   pre-region ownership model bit for bit.
+//!
+//! Because all macros in the pool are identical and the analytic compute
+//! cost is placement-invariant, a model's single-device packing
+//! ([`ModelMapping`](crate::mapping::ModelMapping)) is reused verbatim
+//! regardless of which regions it lands on. The interesting work is *when
+//! to pay for moving weights*: a resident model serves for free; a
+//! non-resident model costs a reload to swap in, and may force
+//! region-granular evictions chosen by the [`Evictor`] — only as many
+//! columns as needed, never touching pinned tenants.
 
 use std::collections::BTreeMap;
 
 use crate::config::MacroSpec;
+use crate::latency::region_reload_cycles;
+use crate::mapping::{Region, RegionAllocator};
 
 use super::evictor::{Evictor, VictimCandidate};
 use super::registry::{ModelEntry, ModelRegistry};
@@ -22,15 +37,34 @@ use super::registry::{ModelEntry, ModelRegistry};
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Placement {
     pub model: String,
-    pub macros: Vec<usize>,
+    pub regions: Vec<Region>,
+}
+
+impl Placement {
+    /// Distinct physical macros the placement touches, ascending.
+    pub fn macros(&self) -> Vec<usize> {
+        distinct_macros(&self.regions)
+    }
+
+    /// Total bitline columns held.
+    pub fn bls(&self) -> usize {
+        self.regions.iter().map(|r| r.bl_count).sum()
+    }
+}
+
+fn distinct_macros(regions: &[Region]) -> Vec<usize> {
+    let mut ms: Vec<usize> = regions.iter().map(|r| r.macro_id).collect();
+    ms.sort_unstable();
+    ms.dedup();
+    ms
 }
 
 /// Outcome of ensuring a model is resident.
 ///
-/// Deliberately carries no cycle counts: the fleet's `charge_reloads`
-/// is the single place reload cycles enter the books (one
-/// `load_cycles_per_macro` per hot-swapped macro), so placement results
-/// only say *what moved*, never *what it cost*.
+/// Deliberately carries no cycle counts: the fleet's charge helpers are
+/// the single place reload cycles enter the books (one region-granular
+/// charge per loaded region), so placement results only say *what
+/// moved*, never *what it cost*.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SwapEvent {
     pub model: String,
@@ -38,56 +72,78 @@ pub struct SwapEvent {
     pub hot_swap: bool,
     /// Models evicted to make room (in eviction order).
     pub evicted: Vec<String>,
-    /// Physical macros now hosting the model.
-    pub macros: Vec<usize>,
+    /// Regions now hosting the model.
+    pub regions: Vec<Region>,
 }
 
-/// Ownership state of the fleet's physical macros.
+impl SwapEvent {
+    /// Distinct physical macros now hosting the model, ascending.
+    pub fn macros(&self) -> Vec<usize> {
+        distinct_macros(&self.regions)
+    }
+}
+
+/// Region-granular ownership state of the fleet's physical macros.
 #[derive(Debug, Clone)]
 pub struct Placer {
-    owner: Vec<Option<String>>,
-    resident: BTreeMap<String, Vec<usize>>,
+    alloc: RegionAllocator,
+    coresident: bool,
+    resident: BTreeMap<String, Vec<Region>>,
     last_used: BTreeMap<String, u64>,
     clock: u64,
-    /// Models evicted to make room.
-    pub evictions: u64,
 }
 
 impl Placer {
-    pub fn new(num_macros: usize) -> Placer {
+    /// `coresident = false` is the degenerate whole-macro mode.
+    pub fn new(num_macros: usize, bitlines: usize, coresident: bool) -> Placer {
         assert!(num_macros > 0, "fleet needs at least one macro");
         Placer {
-            owner: vec![None; num_macros],
+            alloc: RegionAllocator::new(num_macros, bitlines),
+            coresident,
             resident: BTreeMap::new(),
             last_used: BTreeMap::new(),
             clock: 0,
-            evictions: 0,
         }
     }
 
     pub fn num_macros(&self) -> usize {
-        self.owner.len()
+        self.alloc.num_macros()
     }
 
-    pub fn free_count(&self) -> usize {
-        self.owner.iter().filter(|o| o.is_none()).count()
+    pub fn coresident(&self) -> bool {
+        self.coresident
     }
 
-    /// Indices of currently unowned macros, ascending.
-    pub fn free_macros(&self) -> Vec<usize> {
-        self.owner
-            .iter()
-            .enumerate()
-            .filter(|(_, o)| o.is_none())
-            .map(|(i, _)| i)
-            .collect()
+    /// Total bitline columns in the pool.
+    pub fn pool_bls(&self) -> usize {
+        self.alloc.pool_bls()
+    }
+
+    /// Free bitline columns across the whole pool.
+    pub fn free_bls(&self) -> usize {
+        self.alloc.free_bls()
+    }
+
+    /// Occupied bitline columns per macro, `num_macros` entries.
+    pub fn occupied_bls(&self) -> Vec<usize> {
+        self.alloc.occupied_bls()
+    }
+
+    /// Fully-free macros, ascending.
+    pub fn free_whole_macros(&self) -> Vec<usize> {
+        self.alloc.free_whole_macros()
+    }
+
+    /// Number of fully-free macros.
+    pub fn free_macro_count(&self) -> usize {
+        self.alloc.free_whole_macros().len()
     }
 
     pub fn is_resident(&self, name: &str) -> bool {
         self.resident.contains_key(name)
     }
 
-    pub fn resident_macros(&self, name: &str) -> Option<&[usize]> {
+    pub fn resident_regions(&self, name: &str) -> Option<&[Region]> {
         self.resident.get(name).map(|v| v.as_slice())
     }
 
@@ -95,11 +151,21 @@ impl Placer {
     pub fn placements(&self) -> Vec<Placement> {
         self.resident
             .iter()
-            .map(|(model, macros)| Placement {
+            .map(|(model, regions)| Placement {
                 model: model.clone(),
-                macros: macros.clone(),
+                regions: regions.clone(),
             })
             .collect()
+    }
+
+    /// Capacity the placer charges `entry` against: columns in region
+    /// mode, whole macros otherwise.
+    pub fn fits(&self, entry: &ModelEntry) -> bool {
+        if self.coresident {
+            entry.bls_needed() <= self.pool_bls()
+        } else {
+            entry.macros_needed() <= self.num_macros()
+        }
     }
 
     fn tick(&mut self) -> u64 {
@@ -115,17 +181,15 @@ impl Placer {
         }
     }
 
-    /// Free a model's macros (eviction or retirement). Returns the
-    /// macros released (empty when the model was not resident).
-    pub fn release(&mut self, name: &str) -> Vec<usize> {
-        let Some(macros) = self.resident.remove(name) else {
+    /// Free a model's regions (eviction or retirement). Returns the
+    /// regions released (empty when the model was not resident).
+    pub fn release(&mut self, name: &str) -> Vec<Region> {
+        let Some(regions) = self.resident.remove(name) else {
             return Vec::new();
         };
-        for &m in &macros {
-            self.owner[m] = None;
-        }
+        self.alloc.release(&regions);
         self.last_used.remove(name);
-        macros
+        regions
     }
 
     /// Evict every non-pinned resident (used before paging an oversized
@@ -139,82 +203,164 @@ impl Placer {
             .collect();
         for v in &victims {
             self.release(v);
-            self.evictions += 1;
         }
         victims
     }
 
-    /// Ensure `entry` is resident, evicting per `evictor` as needed.
+    /// Whether enough capacity is free to admit `entry` without more
+    /// evictions.
+    fn has_room(&self, entry: &ModelEntry) -> bool {
+        if self.coresident {
+            self.alloc.free_bls() >= entry.bls_needed()
+        } else {
+            self.free_macro_count() >= entry.macros_needed()
+        }
+    }
+
+    /// Macros no pinned resident touches — the macros paging can stream
+    /// through once every evictable tenant is released. A macro partially
+    /// held by a pinned tenant is unusable for paging (it needs whole
+    /// macros).
+    pub fn pageable_macro_count(&self, registry: &ModelRegistry) -> usize {
+        let mut pinned = vec![false; self.num_macros()];
+        for (n, regions) in &self.resident {
+            if registry.get(n).map(|e| e.pinned).unwrap_or(false) {
+                for r in regions {
+                    pinned[r.macro_id] = true;
+                }
+            }
+        }
+        pinned.iter().filter(|&&p| !p).count()
+    }
+
+    /// Whether evicting every non-pinned resident would make room for
+    /// `entry`. Checked *before* any eviction so a doomed placement fails
+    /// fast without releasing anyone (evictions must never be stranded on
+    /// an error path the caller cannot account).
+    fn evictable_capacity_suffices(&self, entry: &ModelEntry, registry: &ModelRegistry) -> bool {
+        let pinned_regions = || {
+            self.resident
+                .iter()
+                .filter(|(n, _)| registry.get(n).map(|e| e.pinned).unwrap_or(false))
+                .flat_map(|(_, regions)| regions.iter())
+        };
+        if self.coresident {
+            let pinned_bls: usize = pinned_regions().map(|r| r.bl_count).sum();
+            self.pool_bls() - pinned_bls >= entry.bls_needed()
+        } else {
+            // Whole-macro mode: pinned residents hold whole macros.
+            let pinned_macros: Vec<usize> = pinned_regions().map(|r| r.macro_id).collect();
+            let held = {
+                let mut ms = pinned_macros;
+                ms.sort_unstable();
+                ms.dedup();
+                ms.len()
+            };
+            self.num_macros() - held >= entry.macros_needed()
+        }
+    }
+
+    /// Ensure `entry` is resident, evicting per `evictor` as needed —
+    /// region-granular: eviction stops as soon as enough *columns* are
+    /// free, so co-residents that fit beside the newcomer survive.
     ///
-    /// Errors when the model needs more macros than the whole pool
+    /// Errors when the model needs more capacity than the whole pool
     /// (callers handle that via the paging path) or when pinned residents
     /// block the required space.
     pub fn place(
         &mut self,
         entry: &ModelEntry,
         registry: &ModelRegistry,
-        evictor: &Evictor,
+        evictor: &dyn Evictor,
         spec: &MacroSpec,
     ) -> anyhow::Result<SwapEvent> {
-        if let Some(macros) = self.resident.get(&entry.name) {
-            let macros = macros.clone();
+        if let Some(regions) = self.resident.get(&entry.name) {
+            let regions = regions.clone();
             self.touch(&entry.name);
             return Ok(SwapEvent {
                 model: entry.name.clone(),
                 hot_swap: false,
                 evicted: Vec::new(),
-                macros,
+                regions,
             });
         }
-        let need = entry.macros_needed();
+        if self.coresident {
+            anyhow::ensure!(
+                entry.bls_needed() <= self.pool_bls(),
+                "model '{}' needs {} bitlines but the pool has {}",
+                entry.name,
+                entry.bls_needed(),
+                self.pool_bls()
+            );
+        } else {
+            anyhow::ensure!(
+                entry.macros_needed() <= self.num_macros(),
+                "model '{}' needs {} macros but the fleet has {}",
+                entry.name,
+                entry.macros_needed(),
+                self.num_macros()
+            );
+        }
         anyhow::ensure!(
-            need <= self.num_macros(),
-            "model '{}' needs {need} macros but the fleet has {}",
+            self.evictable_capacity_suffices(entry, registry),
+            "cannot place '{}': pinned residents leave too little reclaimable room ({} of {} bitlines free)",
             entry.name,
-            self.num_macros()
+            self.free_bls(),
+            self.pool_bls()
         );
         let mut evicted = Vec::new();
-        while self.free_count() < need {
+        while !self.has_room(entry) {
             let candidates: Vec<VictimCandidate> = self
                 .resident
                 .iter()
                 .filter(|(n, _)| !registry.get(n).map(|e| e.pinned).unwrap_or(false))
-                .map(|(n, macros)| VictimCandidate {
-                    name: n.clone(),
-                    last_used: self.last_used.get(n).copied().unwrap_or(0),
-                    reload_cycles: registry.get(n).map(|e| e.reload_cycles(spec)).unwrap_or(0),
-                    macros_held: macros.len(),
+                .map(|(n, regions)| {
+                    let reload = registry
+                        .get(n)
+                        .map(|e| {
+                            if self.coresident {
+                                region_reload_cycles(e.bls_needed(), spec)
+                            } else {
+                                e.reload_cycles(spec)
+                            }
+                        })
+                        .unwrap_or(0);
+                    VictimCandidate {
+                        name: n.clone(),
+                        last_used: self.last_used.get(n).copied().unwrap_or(0),
+                        reload_cycles: reload,
+                        macros_held: distinct_macros(regions).len(),
+                        bls_held: regions.iter().map(|r| r.bl_count).sum(),
+                    }
                 })
                 .collect();
+            // Unreachable after the evictable-capacity pre-check; kept as
+            // a defensive error rather than a panic.
             let victim = evictor.choose(&candidates).ok_or_else(|| {
                 anyhow::anyhow!(
-                    "cannot place '{}' ({need} macros): only {} free and every resident is pinned",
+                    "cannot place '{}': no evictable resident left ({} of {} bitlines free)",
                     entry.name,
-                    self.free_count()
+                    self.free_bls(),
+                    self.pool_bls()
                 )
             })?;
             let name = victim.name.clone();
             self.release(&name);
-            self.evictions += 1;
             evicted.push(name);
         }
-        let mut macros = Vec::with_capacity(need);
-        for (i, o) in self.owner.iter_mut().enumerate() {
-            if o.is_none() {
-                *o = Some(entry.name.clone());
-                macros.push(i);
-                if macros.len() == need {
-                    break;
-                }
-            }
+        let regions = if self.coresident {
+            self.alloc.alloc(entry.bls_needed())
+        } else {
+            self.alloc.alloc_whole_macros(entry.macros_needed())
         }
-        self.resident.insert(entry.name.clone(), macros.clone());
+        .expect("has_room() guaranteed capacity");
+        self.resident.insert(entry.name.clone(), regions.clone());
         self.touch(&entry.name);
         Ok(SwapEvent {
             model: entry.name.clone(),
             hot_swap: true,
             evicted,
-            macros,
+            regions,
         })
     }
 }
@@ -223,7 +369,7 @@ impl Placer {
 mod tests {
     use super::*;
     use crate::arch::vgg9;
-    use crate::fleet::evictor::EvictionPolicy;
+    use crate::fleet::evictor::{EvictionPolicy, PolicyEvictor};
 
     /// Registry of `n` two-macro models named m0, m1, ... (pinned set by
     /// the predicate), over the default spec.
@@ -231,23 +377,21 @@ mod tests {
         let spec = MacroSpec::default();
         let mut reg = ModelRegistry::new(spec);
         for i in 0..n {
-            // scaled(0.16): 976 BLs for vgg9 → needs a handful of macros?
-            // Use a small fixed scale instead and assert the footprint.
             let arch = vgg9().scaled(0.1);
             let e = reg.register(&format!("m{i}"), arch, pinned(i)).unwrap();
             assert!(e.macros_needed() >= 1 && e.macros_needed() <= 2);
         }
-        (reg, Placer::new(4))
+        (reg, Placer::new(4, spec.bitlines, false))
     }
 
-    fn place<'a>(
+    fn place(
         placer: &mut Placer,
         reg: &ModelRegistry,
         name: &str,
         policy: EvictionPolicy,
     ) -> anyhow::Result<SwapEvent> {
         let entry = reg.get(name).unwrap();
-        placer.place(entry, reg, &Evictor::new(policy), reg.spec())
+        placer.place(entry, reg, &PolicyEvictor::new(policy), reg.spec())
     }
 
     #[test]
@@ -255,11 +399,21 @@ mod tests {
         let (reg, mut placer) = setup(1, |_| false);
         let first = place(&mut placer, &reg, "m0", EvictionPolicy::Lru).unwrap();
         assert!(first.hot_swap);
-        assert!(!first.macros.is_empty());
+        assert!(!first.regions.is_empty());
         let second = place(&mut placer, &reg, "m0", EvictionPolicy::Lru).unwrap();
         assert!(!second.hot_swap, "second placement is a residency hit");
-        assert_eq!(second.macros, first.macros);
-        assert_eq!(placer.evictions, 0);
+        assert_eq!(second.regions, first.regions);
+        assert!(second.evicted.is_empty());
+    }
+
+    #[test]
+    fn whole_macro_mode_allocates_full_macros() {
+        let (reg, mut placer) = setup(1, |_| false);
+        let ev = place(&mut placer, &reg, "m0", EvictionPolicy::Lru).unwrap();
+        let need = reg.get("m0").unwrap().macros_needed();
+        assert_eq!(ev.regions.len(), need);
+        assert!(ev.regions.iter().all(|r| r.bl_start == 0 && r.bl_count == 256));
+        assert_eq!(ev.macros(), (0..need).collect::<Vec<_>>());
     }
 
     #[test]
@@ -275,7 +429,6 @@ mod tests {
         assert!(placer.is_resident("m0"));
         assert!(!placer.is_resident("m1"));
         assert!(placer.is_resident("m2"));
-        assert_eq!(placer.evictions, 1);
     }
 
     #[test]
@@ -293,10 +446,10 @@ mod tests {
         let spec = MacroSpec::default();
         let mut reg = ModelRegistry::new(spec);
         reg.register("big", vgg9(), false).unwrap(); // 151 macros
-        let mut placer = Placer::new(4);
+        let mut placer = Placer::new(4, spec.bitlines, false);
         let entry = reg.get("big").unwrap();
         let err = placer
-            .place(entry, &reg, &Evictor::new(EvictionPolicy::Lru), &spec)
+            .place(entry, &reg, &PolicyEvictor::new(EvictionPolicy::Lru), &spec)
             .unwrap_err();
         assert!(err.to_string().contains("needs 151 macros"), "{err}");
     }
@@ -308,7 +461,7 @@ mod tests {
         place(&mut placer, &reg, "m1", EvictionPolicy::Lru).unwrap();
         let freed = placer.release("m0");
         assert!(!freed.is_empty());
-        assert_eq!(placer.free_count(), freed.len());
+        assert_eq!(placer.free_macro_count(), freed.len());
         let ev = place(&mut placer, &reg, "m2", EvictionPolicy::Lru).unwrap();
         assert!(ev.evicted.is_empty(), "freed space, no eviction needed");
     }
@@ -324,19 +477,134 @@ mod tests {
     }
 
     #[test]
-    fn placements_report_state() {
+    fn placements_report_disjoint_regions() {
         let (reg, mut placer) = setup(2, |_| false);
         place(&mut placer, &reg, "m0", EvictionPolicy::Lru).unwrap();
         place(&mut placer, &reg, "m1", EvictionPolicy::Lru).unwrap();
         let ps = placer.placements();
         assert_eq!(ps.len(), 2);
-        // Macros are disjoint across placements.
-        let mut seen = vec![false; placer.num_macros()];
-        for p in &ps {
-            for &m in &p.macros {
-                assert!(!seen[m], "macro {m} double-assigned");
-                seen[m] = true;
+        let all: Vec<&Region> = ps.iter().flat_map(|p| &p.regions).collect();
+        for (i, a) in all.iter().enumerate() {
+            for b in &all[i + 1..] {
+                assert!(!a.overlaps(b), "{a:?} overlaps {b:?}");
             }
         }
+    }
+
+    // ---- region (co-resident) mode -----------------------------------------
+
+    /// Registry of fractional-macro tenants over the default spec: every
+    /// scale here yields a single-segment model far below one macro.
+    fn region_setup(num_macros: usize, scales: &[(&str, f64)]) -> (ModelRegistry, Placer) {
+        let spec = MacroSpec::default();
+        let mut reg = ModelRegistry::new(spec);
+        for &(name, scale) in scales {
+            let e = reg.register(name, vgg9().scaled(scale), false).unwrap();
+            assert!(e.bls_needed() < spec.bitlines, "{name} must be fractional");
+        }
+        (reg, Placer::new(num_macros, spec.bitlines, true))
+    }
+
+    #[test]
+    fn coresident_tenants_share_one_macro() {
+        let (reg, mut placer) = region_setup(1, &[("a", 0.04), ("b", 0.03)]);
+        let na = reg.get("a").unwrap().bls_needed();
+        let nb = reg.get("b").unwrap().bls_needed();
+        assert!(na + nb <= 256, "both must fit one macro ({na}+{nb})");
+        let ea = place(&mut placer, &reg, "a", EvictionPolicy::Lru).unwrap();
+        let eb = place(&mut placer, &reg, "b", EvictionPolicy::Lru).unwrap();
+        assert!(ea.hot_swap && eb.hot_swap);
+        assert!(eb.evicted.is_empty(), "b fits beside a without eviction");
+        assert!(placer.is_resident("a") && placer.is_resident("b"));
+        // Both on macro 0, on disjoint column spans.
+        assert_eq!(ea.macros(), vec![0]);
+        assert_eq!(eb.macros(), vec![0]);
+        for ra in &ea.regions {
+            for rb in &eb.regions {
+                assert!(!ra.overlaps(rb));
+            }
+        }
+        assert_eq!(placer.occupied_bls(), vec![na + nb]);
+    }
+
+    #[test]
+    fn region_eviction_frees_only_what_is_needed() {
+        // a + b co-reside; c needs more than the spare columns but less
+        // than (spare + a), so evicting only the stalest (a) suffices and
+        // b survives — whole-macro placement would have taken the macro
+        // from both.
+        let (reg, mut placer) = region_setup(1, &[("a", 0.04), ("b", 0.03), ("c", 0.04)]);
+        let nb = reg.get("b").unwrap().bls_needed();
+        let nc = reg.get("c").unwrap().bls_needed();
+        assert!(nc <= 256 - nb, "evicting a alone must make room for c");
+        place(&mut placer, &reg, "a", EvictionPolicy::Lru).unwrap();
+        place(&mut placer, &reg, "b", EvictionPolicy::Lru).unwrap();
+        let ec = place(&mut placer, &reg, "c", EvictionPolicy::Lru).unwrap();
+        assert_eq!(ec.evicted, vec!["a".to_string()]);
+        assert!(placer.is_resident("b"), "co-resident b survives the eviction");
+        assert!(placer.is_resident("c"));
+    }
+
+    #[test]
+    fn doomed_placement_fails_fast_without_evicting() {
+        // A pinned tenant leaves too little evictable room for c, so the
+        // placement must error *before* releasing anyone: b survives.
+        let spec = MacroSpec::default();
+        let mut reg = ModelRegistry::new(spec);
+        reg.register("pin", vgg9().scaled(0.04), true).unwrap();
+        reg.register("b", vgg9().scaled(0.03), false).unwrap();
+        reg.register("c", vgg9().scaled(0.055), false).unwrap();
+        let mut placer = Placer::new(1, spec.bitlines, true);
+        place(&mut placer, &reg, "pin", EvictionPolicy::Lru).unwrap();
+        place(&mut placer, &reg, "b", EvictionPolicy::Lru).unwrap();
+        let need = reg.get("c").unwrap().bls_needed();
+        let pinned = reg.get("pin").unwrap().bls_needed();
+        assert!(need <= spec.bitlines, "c alone would fit the pool");
+        assert!(need > spec.bitlines - pinned, "but not beside the pinned tenant");
+        let err = place(&mut placer, &reg, "c", EvictionPolicy::Lru).unwrap_err();
+        assert!(err.to_string().contains("pinned"), "{err}");
+        assert!(placer.is_resident("b"), "failed placement must not evict b");
+        assert!(placer.is_resident("pin"));
+    }
+
+    #[test]
+    fn pageable_macro_count_excludes_pinned_macros() {
+        let spec = MacroSpec::default();
+        let mut reg = ModelRegistry::new(spec);
+        reg.register("pin", vgg9().scaled(0.04), true).unwrap();
+        reg.register("b", vgg9().scaled(0.03), false).unwrap();
+        let mut placer = Placer::new(3, spec.bitlines, true);
+        assert_eq!(placer.pageable_macro_count(&reg), 3);
+        place(&mut placer, &reg, "pin", EvictionPolicy::Lru).unwrap();
+        place(&mut placer, &reg, "b", EvictionPolicy::Lru).unwrap();
+        // Both fractional tenants share macro 0; only the pinned one
+        // blocks paging there. Non-pinned residents don't count — paging
+        // evicts them first.
+        assert_eq!(placer.pageable_macro_count(&reg), 2);
+    }
+
+    #[test]
+    fn region_mode_reports_bitline_capacity_errors() {
+        let spec = MacroSpec::default();
+        let mut reg = ModelRegistry::new(spec);
+        reg.register("big", vgg9(), false).unwrap();
+        let mut placer = Placer::new(2, spec.bitlines, true);
+        let entry = reg.get("big").unwrap();
+        let err = placer
+            .place(entry, &reg, &PolicyEvictor::new(EvictionPolicy::Lru), &spec)
+            .unwrap_err();
+        assert!(err.to_string().contains("bitlines"), "{err}");
+    }
+
+    #[test]
+    fn region_release_recoalesces_the_macro() {
+        let (reg, mut placer) = region_setup(1, &[("a", 0.04), ("b", 0.03)]);
+        place(&mut placer, &reg, "a", EvictionPolicy::Lru).unwrap();
+        place(&mut placer, &reg, "b", EvictionPolicy::Lru).unwrap();
+        assert_eq!(placer.free_macro_count(), 0);
+        placer.release("a");
+        placer.release("b");
+        assert_eq!(placer.free_macro_count(), 1, "freed spans coalesce");
+        assert_eq!(placer.free_bls(), 256);
     }
 }

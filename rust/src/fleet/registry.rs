@@ -29,14 +29,28 @@ pub struct ModelEntry {
 }
 
 impl ModelEntry {
-    /// Physical macros this model occupies when fully resident.
+    /// Physical macros this model occupies when fully resident under
+    /// whole-macro placement.
     pub fn macros_needed(&self) -> usize {
         self.mapping.num_macros
     }
 
-    /// Cycles one hot-swap of this model costs.
+    /// Bitline columns this model occupies — the region-granular
+    /// placement unit (co-residency packs by columns, not macros).
+    pub fn bls_needed(&self) -> usize {
+        self.mapping.total_bls
+    }
+
+    /// Cycles one whole-macro hot-swap of this model costs.
     pub fn reload_cycles(&self, spec: &MacroSpec) -> u64 {
         self.cost.reload_cycles(spec)
+    }
+
+    /// Cycles one region-granular hot-swap costs: only the occupied
+    /// columns stream in, so a fractional-macro tenant pays less than
+    /// [`ModelEntry::reload_cycles`] unless its footprint is macro-aligned.
+    pub fn region_reload_cycles(&self, spec: &MacroSpec) -> u64 {
+        self.cost.region_reload_cycles(spec)
     }
 }
 
@@ -118,6 +132,13 @@ impl ModelRegistry {
     pub fn total_macro_demand(&self) -> usize {
         self.models.values().map(|e| e.macros_needed()).sum()
     }
+
+    /// Sum of `bls_needed` over every registered model — the co-resident
+    /// counterpart of [`ModelRegistry::total_macro_demand`]: demand only
+    /// forces evictions once the *columns* exceed the pool's columns.
+    pub fn total_bl_demand(&self) -> usize {
+        self.models.values().map(|e| e.bls_needed()).sum()
+    }
 }
 
 #[cfg(test)]
@@ -170,6 +191,19 @@ mod tests {
         r.register("b", vgg9().scaled(0.125), false).unwrap();
         let one = r.get("a").unwrap().macros_needed();
         assert_eq!(r.total_macro_demand(), 2 * one);
+        let one_bls = r.get("a").unwrap().bls_needed();
+        assert_eq!(r.total_bl_demand(), 2 * one_bls);
+    }
+
+    #[test]
+    fn region_reload_undercuts_whole_macro_reload() {
+        let spec = MacroSpec::default();
+        let mut r = registry();
+        // A fractional-macro tenant: not macro-aligned → strictly cheaper.
+        let e = r.register("frac", vgg9().scaled(0.04), false).unwrap();
+        assert!(e.bls_needed() % spec.bitlines != 0);
+        assert!(e.region_reload_cycles(&spec) < e.reload_cycles(&spec));
+        assert_eq!(e.region_reload_cycles(&spec), e.bls_needed() as u64);
     }
 
     #[test]

@@ -16,6 +16,13 @@
 //!   per-macro stats, and the two always agree (see
 //!   `rust/tests/integration_fleet.rs` for the conservation law).
 //!
+//! Placement is region-granular (see [`Placer`]): with
+//! `FleetConfig::coresident` two tenants can share one macro's spare
+//! bitline columns, and a hot-swap streams only the occupied columns.
+//! Every charge lands in **three** ledgers that agree by construction:
+//! fleet totals, per-macro [`MacroStats`], and per-tenant `MacroStats`
+//! (attribution on shared macros follows who incurred the cycles).
+//!
 //! Models larger than the whole pool are still servable: they page
 //! through the usable macros exactly like the single-model
 //! [`MacroScheduler`](crate::coordinator::MacroScheduler), evicting every
@@ -39,9 +46,11 @@ use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::request::{InferResponse, RequestId, Ticket};
 use crate::coordinator::scheduler::MacroScheduler;
 use crate::coordinator::server::sim_classify;
+use crate::latency::region_reload_cycles;
+use crate::mapping::Region;
 use crate::util::json::Json;
 
-use super::evictor::Evictor;
+use super::evictor::{Evictor, PolicyEvictor};
 use super::placer::{Placement, Placer};
 use super::registry::ModelRegistry;
 
@@ -58,7 +67,8 @@ pub struct BatchOutcome {
     pub device_cycles: u64,
     /// Reload cycles charged to this batch (0 on a residency hit).
     pub reload_cycles: u64,
-    /// Per-macro reload events behind those cycles.
+    /// Load events behind those cycles: one per region on a hot-swap
+    /// (whole-macro mode: one per macro), one per macro load when paging.
     pub reload_events: u64,
     /// Models evicted to serve this batch.
     pub evicted: Vec<String>,
@@ -69,16 +79,39 @@ pub struct BatchOutcome {
 pub struct FleetSnapshot {
     /// Per physical macro, the same counters the digital twin keeps.
     pub macro_stats: Vec<MacroStats>,
-    /// Fleet-level reload cycles (must equal the per-macro sum).
+    /// Per tenant (by model name), the same counters attributed to the
+    /// model that incurred them — survives retirement so the books always
+    /// balance against the per-macro view, even on shared macros.
+    pub tenant_stats: Vec<(String, MacroStats)>,
+    /// Fleet-level reload cycles (must equal the per-macro sum *and* the
+    /// per-tenant sum).
     pub reload_cycles: u64,
     /// Placements that loaded weights (hot-swaps + paging episodes).
     pub hot_swaps: u64,
     /// Models evicted to make room.
     pub evictions: u64,
-    /// Current placements.
+    /// Current placements (region-granular).
     pub resident: Vec<Placement>,
     /// All registered model names.
     pub registered: Vec<String>,
+    /// Occupied bitline columns per macro (allocator view; must equal the
+    /// per-macro sum of resident tenants' regions).
+    pub occupied_bls: Vec<usize>,
+    /// Bitline columns resident tenants actually *need* (their packed
+    /// footprints). Under co-residency this equals the occupied sum; under
+    /// whole-macro placement it is smaller — the difference is the
+    /// stranded capacity co-residency reclaims.
+    pub resident_bls: usize,
+    /// Bitline columns per macro (for utilization math).
+    pub bitlines_per_macro: usize,
+}
+
+fn stats_json(s: &MacroStats) -> Json {
+    Json::obj()
+        .with("compute_cycles", s.compute_cycles)
+        .with("load_cycles", s.load_cycles)
+        .with("conversions", s.conversions)
+        .with("reloads", s.reloads)
 }
 
 impl FleetSnapshot {
@@ -88,9 +121,36 @@ impl FleetSnapshot {
         self.macro_stats.iter().map(|s| s.load_cycles).sum()
     }
 
+    /// Sum of per-tenant load cycles — the attribution counterpart of
+    /// [`FleetSnapshot::reload_cycles`] (shared macros split per tenant).
+    pub fn tenant_load_cycles(&self) -> u64 {
+        self.tenant_stats.iter().map(|(_, s)| s.load_cycles).sum()
+    }
+
     /// Aggregate counters over the whole pool.
     pub fn aggregate(&self) -> MacroStats {
         MacroStats::aggregate(self.macro_stats.iter())
+    }
+
+    /// Aggregate counters over every tenant — equals
+    /// [`FleetSnapshot::aggregate`] by construction (every charge lands
+    /// once in a macro and once in a tenant).
+    pub fn tenant_aggregate(&self) -> MacroStats {
+        MacroStats::aggregate(self.tenant_stats.iter().map(|(_, s)| s))
+    }
+
+    /// Fraction of the pool's bitline columns doing *useful* work —
+    /// resident tenants' packed footprints over the pool, the fleet-scale
+    /// counterpart of the paper's array-utilization metric. Whole-macro
+    /// placement strands the columns a tenant leaves unused on its last
+    /// macro (held but not needed); co-residency reclaims them for other
+    /// tenants, lifting this number.
+    pub fn utilization(&self) -> f64 {
+        let pool = self.occupied_bls.len() * self.bitlines_per_macro;
+        if pool == 0 {
+            return 0.0;
+        }
+        self.resident_bls as f64 / pool as f64
     }
 
     pub fn to_json(&self) -> Json {
@@ -98,20 +158,21 @@ impl FleetSnapshot {
             .with("reload_cycles", self.reload_cycles)
             .with("hot_swaps", self.hot_swaps)
             .with("evictions", self.evictions)
+            .with("fleet_utilization", self.utilization())
+            .with("resident_bls", self.resident_bls)
+            .with(
+                "occupied_bls",
+                Json::Arr(self.occupied_bls.iter().map(|&b| Json::from(b)).collect()),
+            )
             .with(
                 "macros",
-                Json::Arr(
-                    self.macro_stats
-                        .iter()
-                        .map(|s| {
-                            Json::obj()
-                                .with("compute_cycles", s.compute_cycles)
-                                .with("load_cycles", s.load_cycles)
-                                .with("conversions", s.conversions)
-                                .with("reloads", s.reloads)
-                        })
-                        .collect(),
-                ),
+                Json::Arr(self.macro_stats.iter().map(stats_json).collect()),
+            )
+            .with(
+                "tenants",
+                self.tenant_stats
+                    .iter()
+                    .fold(Json::obj(), |j, (name, s)| j.with(name.as_str(), stats_json(s))),
             )
             .with(
                 "resident",
@@ -119,10 +180,28 @@ impl FleetSnapshot {
                     self.resident
                         .iter()
                         .map(|p| {
-                            Json::obj().with("model", p.model.as_str()).with(
-                                "macros",
-                                Json::Arr(p.macros.iter().map(|&m| Json::from(m)).collect()),
-                            )
+                            Json::obj()
+                                .with("model", p.model.as_str())
+                                .with(
+                                    "macros",
+                                    Json::Arr(
+                                        p.macros().iter().map(|&m| Json::from(m)).collect(),
+                                    ),
+                                )
+                                .with(
+                                    "regions",
+                                    Json::Arr(
+                                        p.regions
+                                            .iter()
+                                            .map(|r| {
+                                                Json::obj()
+                                                    .with("macro", r.macro_id)
+                                                    .with("bl_start", r.bl_start)
+                                                    .with("bl_count", r.bl_count)
+                                            })
+                                            .collect(),
+                                    ),
+                                )
                         })
                         .collect(),
                 ),
@@ -139,10 +218,12 @@ pub struct Fleet {
     spec: MacroSpec,
     registry: ModelRegistry,
     placer: Placer,
-    evictor: Evictor,
+    evictor: Box<dyn Evictor + Send>,
     macro_stats: Vec<MacroStats>,
+    tenant_stats: BTreeMap<String, MacroStats>,
     reload_cycles_total: u64,
     hot_swaps: u64,
+    evictions: u64,
 }
 
 impl Fleet {
@@ -150,11 +231,27 @@ impl Fleet {
         Fleet {
             spec: *spec,
             registry: ModelRegistry::new(*spec),
-            placer: Placer::new(cfg.num_macros.max(1)),
-            evictor: Evictor::new(cfg.policy),
+            placer: Placer::new(cfg.num_macros.max(1), spec.bitlines, cfg.coresident),
+            evictor: Box::new(PolicyEvictor::new(cfg.policy)),
             macro_stats: vec![MacroStats::default(); cfg.num_macros.max(1)],
+            tenant_stats: BTreeMap::new(),
             reload_cycles_total: 0,
             hot_swaps: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Like [`Fleet::new`] but with a caller-supplied eviction policy —
+    /// the extension point the [`Evictor`] trait exists for (the
+    /// `FleetConfig::policy` enum only covers the built-ins).
+    pub fn with_evictor(
+        cfg: &FleetConfig,
+        spec: &MacroSpec,
+        evictor: Box<dyn Evictor + Send>,
+    ) -> Fleet {
+        Fleet {
+            evictor,
+            ..Fleet::new(cfg, spec)
         }
     }
 
@@ -170,47 +267,98 @@ impl Fleet {
         self.placer.is_resident(name)
     }
 
-    /// Register a model variant. A pinned model must fit the pool whole
-    /// (pinning a paging model would wedge the fleet).
+    /// Register a model variant. Pinned models must fit the pool
+    /// **together** — not just individually — because pinned tenants are
+    /// never evicted: a jointly-oversized pinned set would wedge every
+    /// later placement.
     pub fn register(&mut self, name: &str, arch: ModelArch, pinned: bool) -> Result<()> {
-        let entry = self.registry.register(name, arch, pinned)?;
-        if pinned && entry.macros_needed() > self.placer.num_macros() {
-            let needed = entry.macros_needed();
-            self.registry.retire(name)?;
-            anyhow::bail!(
-                "cannot pin '{name}': needs {needed} macros, fleet has {}",
-                self.placer.num_macros()
-            );
+        self.registry.register(name, arch, pinned)?;
+        if pinned {
+            let pinned_entries = || self.registry.iter().filter(|e| e.pinned);
+            let (demand, capacity, unit) = if self.placer.coresident() {
+                let d: usize = pinned_entries().map(|e| e.bls_needed()).sum();
+                (d, self.placer.pool_bls(), "bitlines")
+            } else {
+                let d: usize = pinned_entries().map(|e| e.macros_needed()).sum();
+                (d, self.placer.num_macros(), "macros")
+            };
+            if demand > capacity {
+                self.registry.retire(name)?;
+                anyhow::bail!(
+                    "cannot pin '{name}': pinned tenants would need {demand} {unit} \
+                     together, fleet has {capacity}"
+                );
+            }
         }
         Ok(())
     }
 
-    /// Retire a model variant, freeing any macros it holds.
+    /// Retire a model variant, freeing any regions it holds. Its
+    /// per-tenant stats are kept (retired work stays on the books); a
+    /// later re-registration under the same name continues the series.
     pub fn retire(&mut self, name: &str) -> Result<()> {
         self.registry.retire(name)?;
         self.placer.release(name);
         Ok(())
     }
 
-    /// Charge `events` per-macro weight loads round-robin over `macros`,
-    /// returning the cycles charged. This is the **only** place reload
-    /// cycles enter the books, so fleet-level and per-macro accounting
-    /// agree by construction.
-    fn charge_reloads(&mut self, macros: &[usize], events: u64) -> u64 {
+    /// Charge the region-granular loads of one hot-swap. The swap's total
+    /// cost is `region_reload_cycles(Σ bl_count)` — the same whether the
+    /// allocation is contiguous or fragmented, so it always matches the
+    /// evictor's `VictimCandidate::reload_cycles` estimate and never
+    /// exceeds the whole-macro cost of the same footprint. The total is
+    /// distributed over the loaded regions' macros sum-exactly (floor per
+    /// region by its column share; ceil remainder to the first region),
+    /// landing on the macro **and** the tenant, so fleet-level, per-macro
+    /// and per-tenant accounting agree by construction. Returns (cycles,
+    /// events): one event per loaded region.
+    fn charge_region_reloads(&mut self, model: &str, regions: &[Region]) -> (u64, u64) {
         let load = self.spec.load_cycles_per_macro as u64;
+        let bitlines = self.spec.bitlines as u64;
+        let total_bls: usize = regions.iter().map(|r| r.bl_count).sum();
+        let total = region_reload_cycles(total_bls, &self.spec);
+        let floor_sum: u64 = regions
+            .iter()
+            .map(|r| r.bl_count as u64 * load / bitlines)
+            .sum();
+        let tenant = self.tenant_stats.entry(model.to_string()).or_default();
+        for (i, r) in regions.iter().enumerate() {
+            let mut c = r.bl_count as u64 * load / bitlines;
+            if i == 0 {
+                c += total - floor_sum;
+            }
+            self.macro_stats[r.macro_id].load_cycles += c;
+            self.macro_stats[r.macro_id].reloads += 1;
+            tenant.load_cycles += c;
+            tenant.reloads += 1;
+        }
+        self.reload_cycles_total += total;
+        (total, regions.len() as u64)
+    }
+
+    /// Charge `events` whole-macro weight loads round-robin over `macros`
+    /// (the paging path streams full macros), returning the cycles
+    /// charged. Together with [`Fleet::charge_region_reloads`] these are
+    /// the **only** places reload cycles enter the books.
+    fn charge_paging_reloads(&mut self, model: &str, macros: &[usize], events: u64) -> u64 {
+        let load = self.spec.load_cycles_per_macro as u64;
+        let tenant = self.tenant_stats.entry(model.to_string()).or_default();
         for e in 0..events {
             let m = macros[(e as usize) % macros.len()];
             self.macro_stats[m].load_cycles += load;
             self.macro_stats[m].reloads += 1;
         }
         let cycles = events * load;
+        tenant.load_cycles += cycles;
+        tenant.reloads += events;
         self.reload_cycles_total += cycles;
         cycles
     }
 
     /// Spread a batch's compute cycles and conversions over the macros
-    /// that executed it (sum-exact; remainder goes to the first macro).
-    fn charge_compute(&mut self, macros: &[usize], cycles: u64, conversions: u64) {
+    /// that executed it (sum-exact; remainder goes to the first macro),
+    /// attributing the full amounts to the tenant.
+    fn charge_compute(&mut self, model: &str, macros: &[usize], cycles: u64, conversions: u64) {
         let n = macros.len() as u64;
         for (i, &m) in macros.iter().enumerate() {
             let mut share = cycles / n;
@@ -222,6 +370,9 @@ impl Fleet {
             self.macro_stats[m].compute_cycles += share;
             self.macro_stats[m].conversions += conv;
         }
+        let tenant = self.tenant_stats.entry(model.to_string()).or_default();
+        tenant.compute_cycles += cycles;
+        tenant.conversions += conversions;
     }
 
     /// Serve one batch for `model`, hot-swapping it in when necessary.
@@ -235,40 +386,51 @@ impl Fleet {
         let num_classes = entry.arch.num_classes;
         let compute_total = entry.cost.computing_latency as u64 * n;
         let conversions_total = entry.cost.macs as u64 * n;
-        let need = entry.macros_needed();
 
-        let (macros_used, reload_events, evicted) = if need <= self.placer.num_macros() {
+        let (macros_used, reload_cycles, reload_events, evicted) = if self.placer.fits(entry) {
             // Fully resident path: at most one hot-swap per placement
-            // change; weights then stay put across batches.
+            // change; weights then stay put across batches. Under
+            // co-residency the swap streams only the occupied columns.
             let swap = self
                 .placer
-                .place(entry, &self.registry, &self.evictor, &self.spec)?;
-            let events = if swap.hot_swap { need as u64 } else { 0 };
-            (swap.macros, events, swap.evicted)
+                .place(entry, &self.registry, self.evictor.as_ref(), &self.spec)?;
+            let macros = swap.macros();
+            let (cycles, events) = if swap.hot_swap {
+                self.charge_region_reloads(model, &swap.regions)
+            } else {
+                (0, 0)
+            };
+            (macros, cycles, events, swap.evicted)
         } else {
             // Paging path: the model cannot be fully resident. Every
             // non-pinned resident is evicted and the model streams through
-            // the usable macros with LRU paging, exactly like the
+            // the fully-free macros with LRU paging, exactly like the
             // single-model MacroScheduler — reloads are paid once per
-            // batch (weights stay put while the batch streams).
-            let evicted = self.placer.evict_all_evictable(&self.registry);
-            let usable = self.placer.free_macros();
+            // batch (weights stay put while the batch streams). Macros
+            // partially held by pinned tenants are not usable for paging,
+            // and that is checked *before* evicting anyone so a
+            // pinned-wedged pool errors without stranding evictions.
             anyhow::ensure!(
-                !usable.is_empty(),
+                self.placer.pageable_macro_count(&self.registry) > 0,
                 "cannot page '{model}': every macro is held by pinned models"
             );
+            let evicted = self.placer.evict_all_evictable(&self.registry);
+            let usable = self.placer.free_whole_macros();
+            debug_assert!(!usable.is_empty());
             let plan =
                 MacroScheduler::new(&entry.mapping, &entry.cost, &self.spec, usable.len()).plan;
             // Oversized ⇒ logical > physical ⇒ the plan always reloads.
             debug_assert!(plan.reloads_per_inference > 0);
-            (usable, plan.reloads_per_inference, evicted)
+            let events = plan.reloads_per_inference;
+            let cycles = self.charge_paging_reloads(model, &usable, events);
+            (usable, cycles, events, evicted)
         };
 
         if reload_events > 0 {
             self.hot_swaps += 1;
         }
-        let reload_cycles = self.charge_reloads(&macros_used, reload_events);
-        self.charge_compute(&macros_used, compute_total, conversions_total);
+        self.evictions += evicted.len() as u64;
+        self.charge_compute(model, &macros_used, compute_total, conversions_total);
 
         let mut classes = Vec::with_capacity(images.len());
         let mut logits = Vec::with_capacity(images.len());
@@ -290,13 +452,26 @@ impl Fleet {
     }
 
     pub fn snapshot(&self) -> FleetSnapshot {
+        let resident = self.placer.placements();
+        let resident_bls = resident
+            .iter()
+            .filter_map(|p| self.registry.get(&p.model).map(|e| e.bls_needed()))
+            .sum();
         FleetSnapshot {
             macro_stats: self.macro_stats.clone(),
+            tenant_stats: self
+                .tenant_stats
+                .iter()
+                .map(|(n, s)| (n.clone(), *s))
+                .collect(),
             reload_cycles: self.reload_cycles_total,
             hot_swaps: self.hot_swaps,
-            evictions: self.placer.evictions,
-            resident: self.placer.placements(),
+            evictions: self.evictions,
+            resident,
             registered: self.registry.names().iter().map(|s| s.to_string()).collect(),
+            occupied_bls: self.placer.occupied_bls(),
+            resident_bls,
+            bitlines_per_macro: self.spec.bitlines,
         }
     }
 }
@@ -596,7 +771,12 @@ fn dispatcher_loop(
                 .collect();
             match fleet.serve_batch(&model, &images) {
                 Ok(out) => {
-                    metrics.on_batch(out.batch, out.device_cycles, out.reload_events);
+                    metrics.on_batch(
+                        out.batch,
+                        out.device_cycles,
+                        out.reload_events,
+                        out.evicted.len() as u64,
+                    );
                     let per_req = out.device_cycles / out.batch as u64;
                     for (i, req) in batch.into_iter().enumerate() {
                         let latency_us = req.enqueued.elapsed().as_micros() as u64;
@@ -634,7 +814,7 @@ fn dispatcher_loop(
 mod tests {
     use super::*;
     use crate::arch::vgg9;
-    use crate::fleet::evictor::EvictionPolicy;
+    use crate::fleet::evictor::{EvictionPolicy, VictimCandidate};
 
     fn cfg(num_macros: usize) -> FleetConfig {
         FleetConfig {
@@ -662,10 +842,72 @@ mod tests {
         assert_eq!(out2.reload_cycles, 0, "resident batch reloads nothing");
         let snap = fleet.snapshot();
         assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+        assert_eq!(snap.reload_cycles, snap.tenant_load_cycles());
         assert_eq!(snap.hot_swaps, 1);
         // Compute cycles landed too: 3 images × per-inference compute.
         let compute = fleet.registry().get("a").unwrap().cost.computing_latency as u64;
         assert_eq!(snap.aggregate().compute_cycles, 3 * compute);
+        // Per-tenant attribution mirrors the per-macro books exactly.
+        assert_eq!(snap.tenant_aggregate(), snap.aggregate());
+    }
+
+    #[test]
+    fn coresident_core_shares_a_macro_and_charges_partial_reloads() {
+        let spec = MacroSpec::default();
+        let cfg = FleetConfig {
+            num_macros: 1,
+            coresident: true,
+            ..cfg(1)
+        };
+        let mut fleet = Fleet::new(&cfg, &spec);
+        // Two fractional tenants that fit one macro together.
+        fleet.register("a", vgg9().scaled(0.04), false).unwrap();
+        fleet.register("b", vgg9().scaled(0.03), false).unwrap();
+        let na = fleet.registry().get("a").unwrap().bls_needed() as u64;
+        let nb = fleet.registry().get("b").unwrap().bls_needed() as u64;
+        assert!(na + nb <= 256);
+
+        let oa = fleet.serve_batch("a", &[img()]).unwrap();
+        assert_eq!(oa.reload_cycles, na, "partial swap streams only a's columns");
+        assert!(oa.reload_cycles < 256, "cheaper than a whole-macro reload");
+        let ob = fleet.serve_batch("b", &[img()]).unwrap();
+        assert_eq!(ob.reload_cycles, nb);
+        assert!(ob.evicted.is_empty(), "b co-resides with a");
+
+        // Both resident on the same macro; further batches are free.
+        assert!(fleet.is_resident("a") && fleet.is_resident("b"));
+        let o2 = fleet.serve_batch("a", &[img()]).unwrap();
+        assert_eq!(o2.reload_cycles, 0);
+        let snap = fleet.snapshot();
+        assert_eq!(snap.occupied_bls, vec![(na + nb) as usize]);
+        assert!((snap.utilization() - (na + nb) as f64 / 256.0).abs() < 1e-12);
+        assert_eq!(snap.evictions, 0);
+        // Conservation across all three ledgers, per tenant too.
+        assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+        assert_eq!(snap.reload_cycles, snap.tenant_load_cycles());
+        let by_name: std::collections::BTreeMap<_, _> =
+            snap.tenant_stats.iter().cloned().collect();
+        assert_eq!(by_name["a"].load_cycles, na);
+        assert_eq!(by_name["b"].load_cycles, nb);
+    }
+
+    #[test]
+    fn whole_macro_mode_is_the_degenerate_region_case() {
+        // Same tenants, coresident off: b's placement evicts a on a
+        // 1-macro pool and every swap costs the full 256 cycles.
+        let spec = MacroSpec::default();
+        let mut fleet = Fleet::new(&cfg(1), &spec);
+        fleet.register("a", vgg9().scaled(0.04), false).unwrap();
+        fleet.register("b", vgg9().scaled(0.03), false).unwrap();
+        let oa = fleet.serve_batch("a", &[img()]).unwrap();
+        assert_eq!(oa.reload_cycles, 256);
+        let ob = fleet.serve_batch("b", &[img()]).unwrap();
+        assert_eq!(ob.evicted, vec!["a".to_string()]);
+        assert_eq!(ob.reload_cycles, 256);
+        assert!(!fleet.is_resident("a"));
+        let snap = fleet.snapshot();
+        assert_eq!(snap.evictions, 1);
+        assert_eq!(snap.reload_cycles, snap.tenant_load_cycles());
     }
 
     #[test]
@@ -698,6 +940,57 @@ mod tests {
         assert!(!fleet.registry().contains("big"));
         // Registering unpinned afterwards works.
         fleet.register("big", vgg9(), false).unwrap();
+    }
+
+    #[test]
+    fn custom_evictor_via_with_evictor() {
+        // A biggest-footprint-first policy diverges from LRU: serving
+        // order makes `small` the stalest, but the custom evictor frees
+        // `big` instead.
+        struct BiggestFirst;
+        impl Evictor for BiggestFirst {
+            fn choose<'a>(&self, c: &'a [VictimCandidate]) -> Option<&'a VictimCandidate> {
+                c.iter()
+                    .max_by_key(|v| (v.bls_held, std::cmp::Reverse(v.last_used)))
+            }
+        }
+        let spec = MacroSpec::default();
+        let cfg1 = FleetConfig {
+            coresident: true,
+            ..cfg(1)
+        };
+        let mut fleet = Fleet::with_evictor(&cfg1, &spec, Box::new(BiggestFirst));
+        fleet.register("small", vgg9().scaled(0.03), false).unwrap(); // 82 BLs
+        fleet.register("big", vgg9().scaled(0.04), false).unwrap(); // 108 BLs
+        fleet.register("third", vgg9().scaled(0.04), false).unwrap(); // 108 BLs
+        let b = vec![img()];
+        fleet.serve_batch("small", &b).unwrap(); // small is stalest...
+        fleet.serve_batch("big", &b).unwrap();
+        let out = fleet.serve_batch("third", &b).unwrap();
+        assert_eq!(out.evicted, vec!["big".to_string()], "...but big is evicted");
+        assert!(fleet.is_resident("small"));
+    }
+
+    #[test]
+    fn jointly_oversized_pinned_set_rejected() {
+        // Each pinned tenant fits the 1-macro pool alone, but not
+        // together — accepting both would wedge the fleet forever.
+        let spec = MacroSpec::default();
+        let cfg1 = FleetConfig {
+            coresident: true,
+            ..cfg(1)
+        };
+        let mut fleet = Fleet::new(&cfg1, &spec);
+        fleet.register("p1", vgg9().scaled(0.04), true).unwrap(); // 108 BLs
+        let p2 = vgg9().scaled(0.055); // 151 BLs: fits alone, not beside p1
+        assert!(fleet.registry().get("p1").unwrap().bls_needed()
+            + crate::mapping::pack_model(&p2, &spec).total_bls
+            > spec.bitlines);
+        let err = fleet.register("p2", p2.clone(), true).unwrap_err();
+        assert!(err.to_string().contains("cannot pin"), "{err}");
+        assert!(!fleet.registry().contains("p2"));
+        // The same model is accepted unpinned (it can evict or queue).
+        fleet.register("p2", p2, false).unwrap();
     }
 
     #[test]

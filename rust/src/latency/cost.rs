@@ -58,10 +58,33 @@ impl ModelCost {
     /// Cycles one **hot-swap** of this model costs: streaming every
     /// occupied macro's weights in (`macros_needed · load_cycles_per_macro`,
     /// which equals `load_weight_latency` by construction). This is the
-    /// quantity the fleet placer charges on every placement change.
+    /// quantity the fleet placer charges on every whole-macro placement
+    /// change.
     pub fn reload_cycles(&self, spec: &MacroSpec) -> u64 {
         (self.macros_needed(spec) * spec.load_cycles_per_macro) as u64
     }
+
+    /// Cycles one **region-granular** hot-swap costs: only the occupied
+    /// bitline columns are streamed, so a fractional-macro tenant pays
+    /// strictly less than [`ModelCost::reload_cycles`] unless its
+    /// footprint is an exact multiple of a macro.
+    pub fn region_reload_cycles(&self, spec: &MacroSpec) -> u64 {
+        region_reload_cycles(self.bls, spec)
+    }
+}
+
+/// Cycles to stream `bl_count` bitline columns of weights, proportional
+/// to the column fraction of a macro with ceiling rounding:
+/// `ceil(bl_count · load_cycles_per_macro / bitlines)`.
+///
+/// A full macro (`bl_count == bitlines`) costs exactly
+/// `load_cycles_per_macro`; a partial region costs fewer cycles (the
+/// column-serial write model behind fractional-macro placement — the
+/// whole-macro row-broadcast cost is the `bl_count == bitlines` case).
+/// Counts above `bitlines` scale across macros, bounded by the
+/// whole-macro cost of the same span.
+pub fn region_reload_cycles(bl_count: usize, spec: &MacroSpec) -> u64 {
+    ceil_div(bl_count * spec.load_cycles_per_macro, spec.bitlines) as u64
 }
 
 /// Cost of a single layer on the given macro.
@@ -193,6 +216,36 @@ mod tests {
             let c = model_cost(&vgg9().scaled(ratio), &spec());
             assert_eq!(c.reload_cycles(&spec()), c.load_weight_latency as u64);
         }
+    }
+
+    #[test]
+    fn region_reload_is_proportional_and_bounded() {
+        let s = spec();
+        assert_eq!(region_reload_cycles(0, &s), 0);
+        assert_eq!(region_reload_cycles(1, &s), 1);
+        assert_eq!(region_reload_cycles(128, &s), 128);
+        // Full macro = the paper's row-broadcast cost.
+        assert_eq!(region_reload_cycles(256, &s), 256);
+        // Partial regions always undercut the whole-macro charge.
+        for bls in [1usize, 37, 100, 255] {
+            assert!(region_reload_cycles(bls, &s) < s.load_cycles_per_macro as u64);
+        }
+        // Multi-macro spans stay bounded by the whole-macro cost.
+        let c = model_cost(&vgg9().scaled(0.3), &s);
+        assert!(c.region_reload_cycles(&s) <= c.reload_cycles(&s));
+        assert_eq!(region_reload_cycles(c.bls, &s), c.region_reload_cycles(&s));
+    }
+
+    #[test]
+    fn region_reload_rounds_up_on_odd_specs() {
+        // 128 load cycles over 256 bitlines: one column still costs a cycle.
+        let s = MacroSpec {
+            load_cycles_per_macro: 128,
+            ..MacroSpec::default()
+        };
+        assert_eq!(region_reload_cycles(1, &s), 1);
+        assert_eq!(region_reload_cycles(256, &s), 128);
+        assert_eq!(region_reload_cycles(3, &s), 2); // ceil(3·128/256)
     }
 
     #[test]

@@ -20,7 +20,7 @@
 
 pub mod cost;
 
-pub use cost::{layer_cost, model_cost, LayerCost, ModelCost};
+pub use cost::{layer_cost, model_cost, region_reload_cycles, LayerCost, ModelCost};
 
 #[cfg(test)]
 mod tests {

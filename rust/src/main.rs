@@ -17,7 +17,7 @@ use cim_adapt::coordinator::server::{Backend, EdgeServer};
 use cim_adapt::data::SynthCifar;
 use cim_adapt::fleet::{EvictionPolicy, FleetServer};
 use cim_adapt::latency::{cost::allocated_usage, model_cost};
-use cim_adapt::mapping::pack_model;
+use cim_adapt::mapping::{pack_model, pack_model_at};
 use cim_adapt::morph::flow::morph_flow_synthetic;
 use cim_adapt::report::{fig12_13, table1, table2, table3_4_5, table6};
 use cim_adapt::runtime::ModelRuntime;
@@ -46,10 +46,13 @@ fn main() -> anyhow::Result<()> {
                     .cmd("cost --model M", "analytic cost columns for a model")
                     .cmd("serve [--requests N] [--batch B]", "edge-serving demo over PJRT")
                     .cmd(
-                        "fleet [--macros N] [--bl B] [--requests N] [--policy lru|cost]",
+                        "fleet [--macros N] [--bl B] [--requests N] [--policy lru|cost] [--coresident]",
                         "multi-tenant hot-swap serving demo (sim fleet)",
                     )
-                    .cmd("inspect --model M", "per-layer CIM mapping details")
+                    .cmd(
+                        "inspect --model M [--base-bl N]",
+                        "per-layer CIM mapping details (optionally packed at a BL offset)",
+                    )
                     .render()
             );
             Ok(())
@@ -225,6 +228,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         max_batch: args.usize_or("batch", 8),
         policy: EvictionPolicy::parse(args.str_or("policy", "lru"))
             .ok_or_else(|| anyhow::anyhow!("--policy expects 'lru' or 'cost-weighted'"))?,
+        coresident: args.flag("coresident"),
         ..FleetConfig::default()
     };
     let target_bl = args.usize_or("bl", 512);
@@ -255,10 +259,15 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         handle.register(m, out.arch, false)?;
     }
     println!(
-        "fleet: {} macros, policy {}, max batch {}",
+        "fleet: {} macros, policy {}, max batch {}, placement {}",
         cfg.num_macros,
         cfg.policy.as_str(),
-        cfg.max_batch
+        cfg.max_batch,
+        if cfg.coresident {
+            "co-resident (bitline regions)"
+        } else {
+            "whole-macro"
+        }
     );
 
     let t0 = std::time::Instant::now();
@@ -281,11 +290,18 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         m.latency.p95_us
     );
     println!(
-        "hot-swaps {} | evictions {} | reload cycles {} (= per-macro sum {})",
+        "hot-swaps {} | evictions {} | reload cycles {} (= per-macro sum {}, per-tenant sum {})",
         snap.hot_swaps,
         snap.evictions,
         commas(snap.reload_cycles),
-        commas(snap.macro_load_cycles())
+        commas(snap.macro_load_cycles()),
+        commas(snap.tenant_load_cycles())
+    );
+    println!(
+        "fleet utilization {:.1}% of {} pool bitlines (occupied per macro: {:?})",
+        snap.utilization() * 100.0,
+        commas((snap.occupied_bls.len() * snap.bitlines_per_macro) as u64),
+        snap.occupied_bls
     );
     let device = snap.aggregate();
     println!(
@@ -303,8 +319,26 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             s.reloads
         );
     }
+    for (name, s) in &snap.tenant_stats {
+        println!(
+            "  tenant '{name}': compute {} | load {} | reloads {}",
+            commas(s.compute_cycles),
+            commas(s.load_cycles),
+            s.reloads
+        );
+    }
     for p in &snap.resident {
-        println!("  resident '{}' on macros {:?}", p.model, p.macros);
+        let spans: Vec<String> = p
+            .regions
+            .iter()
+            .map(|r| format!("{}:[{},{})", r.macro_id, r.bl_start, r.bl_end()))
+            .collect();
+        println!(
+            "  resident '{}' on macros {:?} (regions {})",
+            p.model,
+            p.macros(),
+            spans.join(" ")
+        );
     }
     Ok(())
 }
@@ -313,11 +347,16 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
     let model = args.str_or("model", "vgg9");
     let spec = MacroSpec::default();
     let arch = by_name(model)?;
-    let mapping = pack_model(&arch, &spec);
+    // --base-bl packs at a bitline offset — the layout a co-resident
+    // fleet placement produces when the model starts mid-macro.
+    let base_bl = args.usize_or("base-bl", 0);
+    let mapping = pack_model_at(&arch, &spec, base_bl);
     println!(
-        "model {model}: {} bitline columns over {} macros, occupancy {:.2}%",
+        "model {model}: {} bitline columns over {} macros (base BL {}, first macro {}), occupancy {:.2}%",
         commas(mapping.total_bls as u64),
         mapping.num_macros,
+        mapping.base_bl,
+        mapping.first_macro(),
         mapping.occupancy() * 100.0
     );
     for lm in &mapping.layers {

@@ -8,11 +8,19 @@
 //! bitline indices in layer order, spilling into additional macros every
 //! `bitlines` columns — exactly the allocation the analytic cost model
 //! charges for.
+//!
+//! [`region`] adds the fractional-macro placement unit: a [`Region`] is a
+//! `(macro_id, bl_start, bl_count)` span and [`RegionAllocator`] manages
+//! per-macro free-region lists, so the fleet can co-locate two models on
+//! one macro's columns. [`pack_model_at`] produces the matching layout
+//! for a packing that starts mid-macro.
 
 pub mod occupancy;
 pub mod packer;
+pub mod region;
 pub mod viz;
 
 pub use occupancy::OccupancyGrid;
-pub use packer::{pack_model, ColumnAssignment, LayerMapping, ModelMapping};
+pub use packer::{pack_model, pack_model_at, ColumnAssignment, LayerMapping, ModelMapping};
+pub use region::{Region, RegionAllocator};
 pub use viz::{render_ascii, render_ppm};

@@ -13,19 +13,22 @@ pub struct OccupancyGrid {
 }
 
 impl OccupancyGrid {
-    /// Build grids for every macro in a mapping.
+    /// Build grids for every macro in a mapping. `macro_id` is the
+    /// absolute macro index, so an offset packing (`pack_model_at`)
+    /// yields grids labelled `first_macro()..`.
     pub fn from_mapping(map: &ModelMapping) -> Vec<OccupancyGrid> {
         let (wl, bl) = (map.spec.wordlines, map.spec.bitlines);
+        let first = map.first_macro();
         let mut grids: Vec<OccupancyGrid> = (0..map.num_macros)
             .map(|m| OccupancyGrid {
-                macro_id: m,
+                macro_id: first + m,
                 wordlines: wl,
                 bitlines: bl,
                 grid: vec![0; wl * bl],
             })
             .collect();
         for c in map.columns() {
-            let g = &mut grids[c.macro_id];
+            let g = &mut grids[c.macro_id - first];
             for r in 0..c.rows {
                 g.grid[r * bl + c.local_bl] = (c.layer + 1) as u16;
             }
@@ -90,6 +93,23 @@ mod tests {
         // layer never (column owned entirely by layer 0 up to rows).
         assert_eq!(grids[0].owner(26, 0), Some(0));
         assert_eq!(grids[0].owner(27, 0), None);
+    }
+
+    #[test]
+    fn offset_mapping_grids_carry_absolute_macro_ids() {
+        use crate::mapping::packer::pack_model_at;
+        let spec = MacroSpec::default();
+        let map = pack_model_at(&vgg9().scaled(0.1), &spec, 100);
+        let grids = OccupancyGrid::from_mapping(&map);
+        assert_eq!(grids.len(), map.num_macros);
+        assert_eq!(grids[0].macro_id, map.first_macro());
+        // Cells below the base offset stay empty in the first macro.
+        assert_eq!(grids[0].owner(0, 0), None);
+        assert!(grids[0].owner(0, 100).is_some());
+        // Total fill equals the mapping occupancy over the same macros.
+        let total_fill: f64 =
+            grids.iter().map(|g| g.fill()).sum::<f64>() / grids.len() as f64;
+        assert!((total_fill - map.occupancy()).abs() < 1e-9);
     }
 
     #[test]

@@ -49,10 +49,20 @@ pub struct ModelMapping {
     pub spec: MacroSpec,
     pub layers: Vec<LayerMapping>,
     pub total_bls: usize,
+    /// Macros the packing touches (≥ 1 even for an off-aligned base).
     pub num_macros: usize,
+    /// Global bitline the packing starts at. `pack_model` packs at 0; a
+    /// non-zero base starts mid-macro on columns a co-resident tenant
+    /// left free (fractional-macro placement).
+    pub base_bl: usize,
 }
 
 impl ModelMapping {
+    /// First macro the packing touches.
+    pub fn first_macro(&self) -> usize {
+        self.base_bl / self.spec.bitlines
+    }
+
     /// Iterate every column assignment (for viz / loading).
     pub fn columns(&self) -> impl Iterator<Item = ColumnAssignment> + '_ {
         let bpm = self.spec.bitlines;
@@ -89,23 +99,27 @@ impl ModelMapping {
         }
     }
 
-    /// Occupied cells per **logical** macro, `num_macros` entries.
+    /// Occupied cells per **logical** macro, `num_macros` entries (entry
+    /// `i` is macro `first_macro() + i`).
     ///
     /// Fleet placement reuses a model's single-device packing unchanged:
     /// logical macro `i` lands verbatim on whichever physical macro the
     /// placer assigns, so this footprint is also the physical occupancy
     /// profile after placement.
     pub fn macro_footprint(&self) -> Vec<usize> {
+        let first = self.first_macro();
         let mut cells = vec![0usize; self.num_macros];
         for c in self.columns() {
-            cells[c.macro_id] += c.rows;
+            cells[c.macro_id - first] += c.rows;
         }
         cells
     }
 
-    /// Which layers have columns in macro `m` (for scheduling/reloads).
+    /// Which layers have columns in the mapping's `m`-th macro — macro
+    /// `first_macro() + m`, the same relative indexing as
+    /// [`ModelMapping::macro_footprint`] (for scheduling/reloads).
     pub fn layers_in_macro(&self, m: usize) -> Vec<usize> {
-        let lo = m * self.spec.bitlines;
+        let lo = (self.first_macro() + m) * self.spec.bitlines;
         let hi = lo + self.spec.bitlines;
         self.layers
             .iter()
@@ -117,8 +131,19 @@ impl ModelMapping {
 
 /// Pack a model's conv layers into a macro sequence (Fig. 3 layout).
 pub fn pack_model(model: &ModelArch, spec: &MacroSpec) -> ModelMapping {
+    pack_model_at(model, spec, 0)
+}
+
+/// Pack starting at an arbitrary global bitline `base_bl`.
+///
+/// With `base_bl % bitlines != 0`, the first layer's columns land
+/// mid-macro — the layout region-granular placement produces when a model
+/// occupies the spare columns of a macro another tenant already uses.
+/// `total_bls` stays base-independent; `num_macros` counts the macros the
+/// span actually touches (an off-aligned base can touch one more).
+pub fn pack_model_at(model: &ModelArch, spec: &MacroSpec, base_bl: usize) -> ModelMapping {
     let mut layers = Vec::with_capacity(model.layers.len());
-    let mut next_bl = 0usize;
+    let mut next_bl = base_bl;
     for (i, l) in model.layers.iter().enumerate() {
         let cost = layer_cost(l, spec);
         let cpb = spec.channels_per_bl(l.kernel);
@@ -140,11 +165,13 @@ pub fn pack_model(model: &ModelArch, spec: &MacroSpec) -> ModelMapping {
         });
         next_bl += cost.bls;
     }
+    let first_macro = base_bl / spec.bitlines;
     ModelMapping {
         spec: *spec,
         layers,
-        total_bls: next_bl,
-        num_macros: ceil_div(next_bl.max(1), spec.bitlines),
+        total_bls: next_bl - base_bl,
+        num_macros: ceil_div(next_bl.max(base_bl + 1), spec.bitlines) - first_macro,
+        base_bl,
     }
 }
 
@@ -235,6 +262,50 @@ mod tests {
         assert_eq!(fp.iter().sum::<usize>(), used);
         // No macro exceeds its provisioned cells.
         assert!(fp.iter().all(|&c| c <= spec().cells()));
+    }
+
+    #[test]
+    fn pack_at_offset_shifts_into_macro() {
+        let base = pack_model(&vgg9(), &spec());
+        let off = pack_model_at(&vgg9(), &spec(), 100);
+        assert_eq!(off.base_bl, 100);
+        assert_eq!(off.total_bls, base.total_bls, "footprint is base-independent");
+        assert_eq!(off.first_macro(), 0);
+        // The first column starts mid-macro at local bitline 100.
+        let first = off.columns().next().unwrap();
+        assert_eq!(first.global_bl, 100);
+        assert_eq!(first.macro_id, 0);
+        assert_eq!(first.local_bl, 100);
+        // An off-aligned base can touch one extra macro, never more.
+        assert!(off.num_macros == base.num_macros || off.num_macros == base.num_macros + 1);
+        // Columns stay contiguous and disjoint from the base upward.
+        let mut seen = vec![false; off.total_bls];
+        for c in off.columns() {
+            assert!(c.global_bl >= 100 && c.global_bl < 100 + off.total_bls);
+            assert!(!seen[c.global_bl - 100]);
+            seen[c.global_bl - 100] = true;
+            assert_eq!(c.macro_id, c.global_bl / 256);
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn pack_at_aligned_offset_translates_macros() {
+        let base = pack_model(&vgg9(), &spec());
+        let off = pack_model_at(&vgg9(), &spec(), 2 * 256);
+        assert_eq!(off.num_macros, base.num_macros);
+        assert_eq!(off.first_macro(), 2);
+        assert_eq!(off.macro_footprint(), base.macro_footprint());
+        // Relative indexing agrees across the per-macro accessors.
+        for m in 0..base.num_macros {
+            assert_eq!(off.layers_in_macro(m), base.layers_in_macro(m));
+        }
+        for (a, b) in base.columns().zip(off.columns()) {
+            assert_eq!(b.global_bl, a.global_bl + 512);
+            assert_eq!(b.macro_id, a.macro_id + 2);
+            assert_eq!(b.local_bl, a.local_bl);
+            assert_eq!(b.rows, a.rows);
+        }
     }
 
     #[test]

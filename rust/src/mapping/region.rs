@@ -1,0 +1,290 @@
+//! Bitline regions — the fractional-macro placement unit.
+//!
+//! The paper's Stage-1 adaptation lifts *within-model* array utilization;
+//! this module is what lets the fleet keep that utilization *across*
+//! models: instead of handing out whole macros, placement deals in
+//! [`Region`]s (`macro_id`, `bl_start`, `bl_count`), so a tenant needing
+//! 1.2 macros strands no bitlines — another tenant can occupy the
+//! remaining columns of the shared macro.
+//!
+//! [`RegionAllocator`] keeps one sorted free-interval list per physical
+//! macro, allocates first-fit (splitting intervals), and coalesces
+//! adjacent intervals on release. Whole-macro placement remains the
+//! degenerate case: [`RegionAllocator::alloc_whole_macros`] only hands
+//! out fully-free macros, which is exactly the pre-region behaviour.
+
+/// A contiguous span of bitline columns inside one physical macro.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Region {
+    /// Physical macro hosting the span.
+    pub macro_id: usize,
+    /// First bitline column of the span (local to the macro).
+    pub bl_start: usize,
+    /// Number of bitline columns in the span.
+    pub bl_count: usize,
+}
+
+impl Region {
+    /// A region covering one whole macro.
+    pub fn whole(macro_id: usize, bitlines: usize) -> Region {
+        Region {
+            macro_id,
+            bl_start: 0,
+            bl_count: bitlines,
+        }
+    }
+
+    /// One past the last bitline column of the span.
+    pub fn bl_end(&self) -> usize {
+        self.bl_start + self.bl_count
+    }
+
+    /// Whether two regions share at least one (macro, bitline) cell column.
+    pub fn overlaps(&self, other: &Region) -> bool {
+        self.macro_id == other.macro_id
+            && self.bl_start < other.bl_end()
+            && other.bl_start < self.bl_end()
+    }
+}
+
+/// Per-macro free-region bookkeeping for a pool of identical macros.
+#[derive(Debug, Clone)]
+pub struct RegionAllocator {
+    bitlines: usize,
+    /// Per macro: sorted, non-overlapping, non-adjacent `(bl_start, bl_count)`
+    /// free intervals.
+    free: Vec<Vec<(usize, usize)>>,
+}
+
+impl RegionAllocator {
+    pub fn new(num_macros: usize, bitlines: usize) -> RegionAllocator {
+        assert!(num_macros > 0, "allocator needs at least one macro");
+        assert!(bitlines > 0, "macros need at least one bitline");
+        RegionAllocator {
+            bitlines,
+            free: vec![vec![(0, bitlines)]; num_macros],
+        }
+    }
+
+    pub fn num_macros(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn bitlines(&self) -> usize {
+        self.bitlines
+    }
+
+    /// Total bitline columns in the pool.
+    pub fn pool_bls(&self) -> usize {
+        self.free.len() * self.bitlines
+    }
+
+    /// Free bitline columns across the whole pool.
+    pub fn free_bls(&self) -> usize {
+        self.free
+            .iter()
+            .map(|m| m.iter().map(|&(_, c)| c).sum::<usize>())
+            .sum()
+    }
+
+    /// Free bitline columns in macro `m`.
+    pub fn free_bls_in(&self, m: usize) -> usize {
+        self.free[m].iter().map(|&(_, c)| c).sum()
+    }
+
+    /// Occupied bitline columns in macro `m`.
+    pub fn occupied_bls_in(&self, m: usize) -> usize {
+        self.bitlines - self.free_bls_in(m)
+    }
+
+    /// Occupied bitline columns per macro, `num_macros` entries.
+    pub fn occupied_bls(&self) -> Vec<usize> {
+        (0..self.free.len()).map(|m| self.occupied_bls_in(m)).collect()
+    }
+
+    /// Indices of fully-free macros, ascending.
+    pub fn free_whole_macros(&self) -> Vec<usize> {
+        (0..self.free.len())
+            .filter(|&m| self.free_bls_in(m) == self.bitlines)
+            .collect()
+    }
+
+    /// First-fit allocation of `bls` columns, splitting free intervals as
+    /// needed; the result may span several macros and several regions per
+    /// macro. Returns `None` (and changes nothing) when the pool lacks
+    /// `bls` free columns in total.
+    pub fn alloc(&mut self, bls: usize) -> Option<Vec<Region>> {
+        if bls == 0 {
+            return Some(Vec::new());
+        }
+        if self.free_bls() < bls {
+            return None;
+        }
+        let mut regions = Vec::new();
+        let mut remaining = bls;
+        for (m, intervals) in self.free.iter_mut().enumerate() {
+            while remaining > 0 {
+                let Some(&(start, count)) = intervals.first() else {
+                    break;
+                };
+                let take = count.min(remaining);
+                regions.push(Region {
+                    macro_id: m,
+                    bl_start: start,
+                    bl_count: take,
+                });
+                remaining -= take;
+                if take == count {
+                    intervals.remove(0);
+                } else {
+                    intervals[0] = (start + take, count - take);
+                }
+            }
+            if remaining == 0 {
+                break;
+            }
+        }
+        debug_assert_eq!(remaining, 0, "free_bls precondition violated");
+        Some(regions)
+    }
+
+    /// Allocate `n` fully-free macros as whole-macro regions (the
+    /// degenerate, pre-region placement mode). Returns `None` (and changes
+    /// nothing) when fewer than `n` macros are fully free.
+    pub fn alloc_whole_macros(&mut self, n: usize) -> Option<Vec<Region>> {
+        let frees = self.free_whole_macros();
+        if frees.len() < n {
+            return None;
+        }
+        let mut regions = Vec::with_capacity(n);
+        for &m in frees.iter().take(n) {
+            self.free[m].clear();
+            regions.push(Region::whole(m, self.bitlines));
+        }
+        Some(regions)
+    }
+
+    /// Return regions to the free lists, coalescing adjacent intervals.
+    ///
+    /// Panics (debug) on double-free: a released region must not overlap
+    /// an already-free interval.
+    pub fn release(&mut self, regions: &[Region]) {
+        for r in regions {
+            assert!(
+                r.macro_id < self.free.len() && r.bl_end() <= self.bitlines,
+                "region {r:?} outside the pool"
+            );
+            let intervals = &mut self.free[r.macro_id];
+            let pos = intervals.partition_point(|&(s, _)| s < r.bl_start);
+            debug_assert!(
+                (pos == 0 || intervals[pos - 1].0 + intervals[pos - 1].1 <= r.bl_start)
+                    && (pos == intervals.len() || r.bl_end() <= intervals[pos].0),
+                "double free of {r:?}"
+            );
+            intervals.insert(pos, (r.bl_start, r.bl_count));
+            // Coalesce with the successor, then the predecessor.
+            let end = |iv: &(usize, usize)| iv.0 + iv.1;
+            if pos + 1 < intervals.len() && end(&intervals[pos]) == intervals[pos + 1].0 {
+                intervals[pos].1 += intervals[pos + 1].1;
+                intervals.remove(pos + 1);
+            }
+            if pos > 0 && end(&intervals[pos - 1]) == intervals[pos].0 {
+                intervals[pos - 1].1 += intervals[pos].1;
+                intervals.remove(pos);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_pool_is_fully_free() {
+        let a = RegionAllocator::new(3, 256);
+        assert_eq!(a.pool_bls(), 768);
+        assert_eq!(a.free_bls(), 768);
+        assert_eq!(a.free_whole_macros(), vec![0, 1, 2]);
+        assert_eq!(a.occupied_bls(), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn alloc_splits_and_release_coalesces() {
+        let mut a = RegionAllocator::new(1, 256);
+        let r1 = a.alloc(100).unwrap();
+        assert_eq!(r1, vec![Region { macro_id: 0, bl_start: 0, bl_count: 100 }]);
+        let r2 = a.alloc(100).unwrap();
+        assert_eq!(r2, vec![Region { macro_id: 0, bl_start: 100, bl_count: 100 }]);
+        assert_eq!(a.free_bls(), 56);
+        assert!(a.alloc(57).is_none(), "over-allocation refused");
+        assert_eq!(a.free_bls(), 56, "failed alloc changes nothing");
+        a.release(&r1);
+        // Freed [0,100) does not merge with [200,256): two fragments.
+        assert_eq!(a.free_bls(), 156);
+        a.release(&r2);
+        // Now [0,100)+[100,200)+[200,256) coalesce back to one macro.
+        assert_eq!(a.free_whole_macros(), vec![0]);
+        let all = a.alloc(256).unwrap();
+        assert_eq!(all, vec![Region::whole(0, 256)]);
+    }
+
+    #[test]
+    fn alloc_spans_macros_when_fragmented() {
+        let mut a = RegionAllocator::new(2, 256);
+        let pin = a.alloc(200).unwrap(); // macro 0: [0,200)
+        let big = a.alloc(200).unwrap(); // 56 from macro 0 + 144 from macro 1
+        assert_eq!(
+            big,
+            vec![
+                Region { macro_id: 0, bl_start: 200, bl_count: 56 },
+                Region { macro_id: 1, bl_start: 0, bl_count: 144 },
+            ]
+        );
+        assert_eq!(big.iter().map(|r| r.bl_count).sum::<usize>(), 200);
+        a.release(&big);
+        a.release(&pin);
+        assert_eq!(a.free_bls(), 512);
+    }
+
+    #[test]
+    fn whole_macro_alloc_ignores_partial_macros() {
+        let mut a = RegionAllocator::new(3, 256);
+        let partial = a.alloc(1).unwrap(); // macro 0 now partial
+        assert_eq!(a.free_whole_macros(), vec![1, 2]);
+        let two = a.alloc_whole_macros(2).unwrap();
+        assert_eq!(two, vec![Region::whole(1, 256), Region::whole(2, 256)]);
+        assert!(a.alloc_whole_macros(1).is_none(), "only a partial macro left");
+        a.release(&two);
+        a.release(&partial);
+        assert_eq!(a.free_whole_macros(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn occupied_accounting_tracks_allocations() {
+        let mut a = RegionAllocator::new(2, 128);
+        let r = a.alloc(150).unwrap(); // 128 in macro 0 + 22 in macro 1
+        assert_eq!(a.occupied_bls(), vec![128, 22]);
+        assert_eq!(a.occupied_bls_in(1), 22);
+        a.release(&r);
+        assert_eq!(a.occupied_bls(), vec![0, 0]);
+    }
+
+    #[test]
+    fn regions_overlap_predicate() {
+        let a = Region { macro_id: 0, bl_start: 0, bl_count: 10 };
+        let b = Region { macro_id: 0, bl_start: 9, bl_count: 5 };
+        let c = Region { macro_id: 0, bl_start: 10, bl_count: 5 };
+        let d = Region { macro_id: 1, bl_start: 0, bl_count: 10 };
+        assert!(a.overlaps(&b) && b.overlaps(&a));
+        assert!(!a.overlaps(&c), "touching is not overlapping");
+        assert!(!a.overlaps(&d), "different macros never overlap");
+    }
+
+    #[test]
+    fn zero_sized_alloc_is_empty() {
+        let mut a = RegionAllocator::new(1, 16);
+        assert_eq!(a.alloc(0).unwrap(), Vec::new());
+        assert_eq!(a.free_bls(), 16);
+    }
+}

@@ -88,14 +88,92 @@ fn three_models_on_four_macros_with_eviction_and_conservation() {
     assert!(snap.evictions >= 1, "evictions: {}", snap.evictions);
     assert!(snap.hot_swaps >= tenants.len() as u64 + 1, "hot_swaps: {}", snap.hot_swaps);
 
-    // Conservation: fleet-level reload cycles equal the per-macro sum,
-    // and the Metrics reload-event count matches the same cycle total.
+    // Conservation: fleet-level reload cycles equal the per-macro sum
+    // and the per-tenant attribution sum, and the Metrics reload-event
+    // count matches the same cycle total.
     assert!(snap.reload_cycles > 0);
     assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+    assert_eq!(snap.reload_cycles, snap.tenant_load_cycles());
     assert_eq!(
         m.weight_reloads * spec().load_cycles_per_macro as u64,
         snap.reload_cycles,
         "Metrics reload events must account for the same cycles"
+    );
+    // The eviction counter flows through the shared Metrics path too.
+    assert_eq!(m.evictions, snap.evictions);
+}
+
+#[test]
+fn coresident_tenants_share_a_macro_with_exact_attribution() {
+    // Two fractional-macro tenants on a 2-macro co-resident fleet: both
+    // end up on macro 0's columns, partial swaps cost fewer cycles than a
+    // whole-macro reload, and per-tenant MacroStats attribution still
+    // sums to the fleet total.
+    let spec_ = spec();
+    let cfg = FleetConfig {
+        num_macros: 2,
+        coresident: true,
+        ..cfg(EvictionPolicy::Lru)
+    };
+    let h = FleetServer::start(&cfg, &spec_);
+    let small_a = by_name("vgg9").unwrap().scaled(0.04);
+    let small_b = by_name("vgg9").unwrap().scaled(0.03);
+    let na = pack_model(&small_a, &spec_).total_bls;
+    let nb = pack_model(&small_b, &spec_).total_bls;
+    assert!(
+        na + nb <= spec_.bitlines,
+        "tenants must fit one macro together ({na}+{nb})"
+    );
+    h.register("a", small_a, false).unwrap();
+    h.register("b", small_b, false).unwrap();
+
+    let total = 40usize;
+    let mut tickets = Vec::with_capacity(total);
+    for k in 0..total {
+        let model = ["a", "b"][k % 2];
+        tickets.push(h.submit(model, img(k)).unwrap());
+    }
+    for t in tickets {
+        let r = t.wait().unwrap();
+        assert!(r.class < 10);
+    }
+    let (m, snap) = h.shutdown();
+    assert_eq!(m.completed, total as u64);
+
+    // Both tenants stayed resident on the shared macro: one partial swap
+    // each, never an eviction.
+    assert_eq!(snap.evictions, 0, "co-residents never evict each other");
+    assert_eq!(m.evictions, snap.evictions);
+    assert_eq!(snap.resident.len(), 2);
+    for p in &snap.resident {
+        assert_eq!(p.macros(), vec![0], "both tenants live on macro 0");
+    }
+    // Regions are disjoint and cover exactly the occupied columns.
+    let all_regions: Vec<_> = snap.resident.iter().flat_map(|p| p.regions.clone()).collect();
+    for (i, a) in all_regions.iter().enumerate() {
+        for b in &all_regions[i + 1..] {
+            assert!(!a.overlaps(b), "{a:?} overlaps {b:?}");
+        }
+    }
+    assert_eq!(snap.occupied_bls, vec![na + nb, 0]);
+    assert!(snap.utilization() > 0.0);
+
+    // Partial swaps: total reload cycles are the tenants' column counts,
+    // strictly below the whole-macro charge for the same two swaps.
+    assert_eq!(snap.reload_cycles, (na + nb) as u64);
+    assert!(snap.reload_cycles < 2 * spec_.load_cycles_per_macro as u64);
+
+    // Per-tenant MacroStats attribution sums to the fleet total.
+    assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+    assert_eq!(snap.reload_cycles, snap.tenant_load_cycles());
+    assert_eq!(snap.tenant_aggregate(), snap.aggregate());
+    let by_name_stats: std::collections::BTreeMap<_, _> =
+        snap.tenant_stats.iter().cloned().collect();
+    assert_eq!(by_name_stats["a"].load_cycles, na as u64);
+    assert_eq!(by_name_stats["b"].load_cycles, nb as u64);
+    assert_eq!(
+        by_name_stats["a"].compute_cycles + by_name_stats["b"].compute_cycles,
+        snap.aggregate().compute_cycles
     );
 }
 

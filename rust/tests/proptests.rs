@@ -288,6 +288,65 @@ fn prop_json_trailing_garbage_error_points_at_it() {
 // ---- fleet: reload accounting conservation ---------------------------------
 
 #[test]
+fn prop_coresident_regions_disjoint_and_books_balance() {
+    // Under random co-resident request sequences over fractional-macro
+    // tenants (resident and paging paths both exercised):
+    //   1. resident regions never overlap,
+    //   2. per-macro occupied columns equal the sum of resident tenants'
+    //      region columns in that macro (× wordlines: occupied cells),
+    //   3. fleet-level reload cycles equal the per-macro MacroStats sum
+    //      AND the per-tenant attribution sum (extends the PR-1
+    //      conservation invariant to shared macros).
+    let spec = MacroSpec::default();
+    check(
+        "co-resident placements: disjoint regions + 3-ledger conservation",
+        cases(25),
+        pairs(vecs(usizes(0..3), 1..20), usizes(1..5)),
+        |(seq, num_macros)| {
+            let cfg = FleetConfig {
+                num_macros: *num_macros,
+                coresident: true,
+                ..FleetConfig::default()
+            };
+            let mut fleet = Fleet::new(&cfg, &spec);
+            // 0.04 → ~108 BLs, 0.06 → ~1–2 macros, 0.1 → ~2 macros: on
+            // small pools the larger tenants take the paging path.
+            for (i, scale) in [0.04, 0.06, 0.1].iter().enumerate() {
+                fleet
+                    .register(&format!("m{i}"), vgg9().scaled(*scale), false)
+                    .unwrap();
+            }
+            let img = vec![0.5f32; 64];
+            for &m in seq {
+                let _ = fleet.serve_batch(&format!("m{m}"), &[img.clone()]);
+            }
+            let snap = fleet.snapshot();
+            // (1) pairwise-disjoint regions across all placements.
+            let regions: Vec<_> = snap
+                .resident
+                .iter()
+                .flat_map(|p| p.regions.clone())
+                .collect();
+            let disjoint = regions
+                .iter()
+                .enumerate()
+                .all(|(i, a)| regions[i + 1..].iter().all(|b| !a.overlaps(b)));
+            // (2) allocator occupancy == per-macro sum of resident regions.
+            let mut per_macro = vec![0usize; *num_macros];
+            for r in &regions {
+                per_macro[r.macro_id] += r.bl_count;
+            }
+            let occupancy_consistent = per_macro == snap.occupied_bls;
+            // (3) three-ledger conservation.
+            let conserved = snap.reload_cycles == snap.macro_load_cycles()
+                && snap.reload_cycles == snap.tenant_load_cycles()
+                && snap.tenant_aggregate() == snap.aggregate();
+            disjoint && occupancy_consistent && conserved
+        },
+    );
+}
+
+#[test]
 fn prop_fleet_reload_accounting_conserves() {
     // Any request sequence over tenants of mixed footprint (resident and
     // paging paths both exercised): fleet-level reload cycles always

@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate for the Rust workspace: format, lint, build, test.
+# Tier-1 CI gate for the Rust workspace: format, lint, build, test, and a
+# cross-PR bench comparison against the committed baselines.
 #
-# Usage: scripts/ci.sh [--no-clippy] [--no-fmt]
+# Usage: scripts/ci.sh [--no-clippy] [--no-fmt] [--no-bench]
 #   --no-clippy   skip the clippy step (e.g. toolchain without clippy)
 #   --no-fmt      skip the rustfmt check (e.g. toolchain without rustfmt)
+#   --no-bench    skip the quick bench run + baseline comparison
 #
 # Clippy runs with -D warnings plus a small documented allowlist:
 #   clippy::too_many_arguments  — the fleet placer/scheduler entry points
@@ -17,10 +19,12 @@ cd "$(dirname "$0")/../rust"
 
 run_fmt=1
 run_clippy=1
+run_bench=1
 for arg in "$@"; do
   case "$arg" in
     --no-fmt) run_fmt=0 ;;
     --no-clippy) run_clippy=0 ;;
+    --no-bench) run_bench=0 ;;
     *) echo "unknown flag: $arg" >&2; exit 2 ;;
   esac
 done
@@ -55,5 +59,23 @@ cargo build --release
 
 echo "==> cargo test -q"
 cargo test -q
+
+echo "==> quick benches (deterministic asserts) + baseline comparison"
+if [ "$run_bench" = 1 ]; then
+  # Quick sampling keeps this a smoke run. The benches assert the
+  # deterministic invariants (morphed < uncompressed reload cycles,
+  # co-resident beats whole-macro placement), so they run regardless of
+  # python availability; the comparison is print-only (timings are
+  # noisy) — pass --strict to compare_bench.py manually to gate on it.
+  CIM_ADAPT_BENCH_QUICK=1 cargo bench --bench micro_fleet
+  CIM_ADAPT_BENCH_QUICK=1 cargo bench --bench micro_serving
+  if command -v python3 >/dev/null 2>&1; then
+    python3 ../scripts/compare_bench.py --current-dir . --baseline-dir ../scripts/bench_baselines
+  else
+    echo "    (python3 not installed; skipping baseline comparison)"
+  fi
+else
+  echo "    (skipped)"
+fi
 
 echo "CI gate passed."

@@ -1,0 +1,171 @@
+#!/usr/bin/env python3
+"""Cross-PR bench comparison: diff current BENCH_*.json files against the
+committed baselines and print regressions.
+
+Usage:
+    scripts/compare_bench.py [--current-dir rust] [--baseline-dir scripts/bench_baselines]
+                             [--threshold 0.25] [--strict] [--update]
+
+  --current-dir    directory holding freshly produced BENCH_<name>.json
+                   files (default: rust/, where `cargo bench` writes them)
+  --baseline-dir   directory holding the committed baselines
+                   (default: scripts/bench_baselines/)
+  --threshold      relative slowdown in a timing median that counts as a
+                   regression (default 0.25 = 25%; timings are noisy, so
+                   this is deliberately loose)
+  --strict         exit non-zero when regressions are found (default:
+                   print-only, so CI stays green on timing noise)
+  --update         copy the current files over the baselines (run after an
+                   intentional perf change, then commit the baselines)
+
+Counters (reload cycles, utilization, ...) are compared exactly with a
+per-metric "which direction is worse" map; timings by median with the
+threshold. A missing baseline is reported, never fatal: run with --update
+once to start tracking.
+"""
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+BENCH_NAMES = ["fleet", "serving"]
+
+# Deterministic scalar metrics worth tracking, as (dotted path, direction)
+# where direction is "lower" or "higher" = which side is BETTER.
+SCALAR_METRICS = {
+    # Control arms (e.g. whole_macro_reload_cycles) are deliberately not
+    # tracked: only the product arm and the A/B ratios are meaningful.
+    "fleet": [
+        ("churn.reload_cycles", "lower"),
+        ("churn.evictions", "lower"),
+        ("fleet_utilization", "higher"),
+        ("coresidency.coresident_reload_cycles", "lower"),
+        ("coresidency.reload_advantage", "higher"),
+        ("coresidency.coresident_utilization", "higher"),
+        ("compression_trade.reload_ratio", "higher"),
+    ],
+    "serving": [
+        ("sim_serving.device_cycles", "lower"),
+        ("sim_serving.weight_reloads", "lower"),
+    ],
+}
+
+
+def dotted(obj, path):
+    for key in path.split("."):
+        if not isinstance(obj, dict) or key not in obj:
+            return None
+        obj = obj[key]
+    return obj
+
+
+def timing_map(summary):
+    """name -> median_ns for the bench's Runner timings."""
+    out = {}
+    for t in summary.get("timings", []) or []:
+        name, median = t.get("name"), t.get("median_ns")
+        if name is not None and isinstance(median, (int, float)):
+            out[name] = float(median)
+    return out
+
+
+def fmt_ns(ns):
+    for unit, scale in [("s", 1e9), ("ms", 1e6), ("us", 1e3)]:
+        if ns >= scale:
+            return f"{ns / scale:.2f} {unit}"
+    return f"{ns:.0f} ns"
+
+
+def compare_one(name, current, baseline, threshold):
+    """Return (report_lines, regressions) for one bench summary pair."""
+    lines, regressions = [], []
+
+    base_t, cur_t = timing_map(baseline), timing_map(current)
+    for bench_name in sorted(base_t):
+        if bench_name not in cur_t:
+            lines.append(f"  ~ timing '{bench_name}' gone from current run")
+            continue
+        b, c = base_t[bench_name], cur_t[bench_name]
+        if b <= 0:
+            continue
+        delta = (c - b) / b
+        marker = " "
+        if delta > threshold:
+            marker = "!"
+            regressions.append(
+                f"{name}: '{bench_name}' median {fmt_ns(c)} vs baseline "
+                f"{fmt_ns(b)} (+{delta * 100:.0f}%)"
+            )
+        lines.append(
+            f"  {marker} {bench_name}: {fmt_ns(c)} vs {fmt_ns(b)} ({delta * +100:+.0f}%)"
+        )
+    for bench_name in sorted(set(cur_t) - set(base_t)):
+        lines.append(f"  + new timing '{bench_name}': {fmt_ns(cur_t[bench_name])}")
+
+    for path, better in SCALAR_METRICS.get(name, []):
+        b, c = dotted(baseline, path), dotted(current, path)
+        if not isinstance(b, (int, float)) or not isinstance(c, (int, float)):
+            continue
+        worse = (c > b) if better == "lower" else (c < b)
+        marker = "!" if worse else " "
+        lines.append(f"  {marker} {path}: {c:g} vs {b:g} (better = {better})")
+        if worse:
+            regressions.append(f"{name}: {path} moved {b:g} -> {c:g} (better = {better})")
+    return lines, regressions
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current-dir", default="rust")
+    ap.add_argument("--baseline-dir", default="scripts/bench_baselines")
+    ap.add_argument("--threshold", type=float, default=0.25)
+    ap.add_argument("--strict", action="store_true")
+    ap.add_argument("--update", action="store_true")
+    args = ap.parse_args()
+
+    all_regressions = []
+    compared = 0
+    for name in BENCH_NAMES:
+        cur_path = os.path.join(args.current_dir, f"BENCH_{name}.json")
+        base_path = os.path.join(args.baseline_dir, f"BENCH_{name}.json")
+        if not os.path.exists(cur_path):
+            print(f"BENCH_{name}.json: no current file in {args.current_dir}/ (bench not run)")
+            continue
+        if args.update:
+            os.makedirs(args.baseline_dir, exist_ok=True)
+            shutil.copyfile(cur_path, base_path)
+            print(f"BENCH_{name}.json: baseline updated from {cur_path}")
+            continue
+        if not os.path.exists(base_path):
+            print(
+                f"BENCH_{name}.json: no committed baseline in {args.baseline_dir}/ "
+                f"(run with --update and commit to start tracking)"
+            )
+            continue
+        with open(cur_path) as f:
+            current = json.load(f)
+        with open(base_path) as f:
+            baseline = json.load(f)
+        print(f"BENCH_{name}.json vs baseline:")
+        lines, regressions = compare_one(name, current, baseline, args.threshold)
+        for line in lines:
+            print(line)
+        all_regressions.extend(regressions)
+        compared += 1
+
+    if compared:
+        if all_regressions:
+            print(f"\n{len(all_regressions)} regression(s):")
+            for r in all_regressions:
+                print(f"  ! {r}")
+        else:
+            print("\nno regressions vs baseline")
+    if all_regressions and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
