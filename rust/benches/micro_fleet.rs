@@ -10,7 +10,7 @@
 use std::collections::BTreeSet;
 
 use cim_adapt::arch::by_name;
-use cim_adapt::config::{FleetConfig, MacroSpec, MorphConfig};
+use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec, MorphConfig};
 use cim_adapt::data::SynthCifar;
 use cim_adapt::fleet::{EvictionPolicy, Fleet, FleetServer};
 use cim_adapt::mapping::pack_model;
@@ -49,16 +49,20 @@ struct CoresidencyRun {
     reload_cycles: u64,
     resident_macros: usize,
     utilization: f64,
+    twin_load_cycles: u64,
 }
 
 /// Two fractional-macro tenants alternating on a **1-macro** pool: with
 /// co-residency both live on the macro's columns (one partial swap each);
-/// with whole-macro placement they evict each other every round.
-fn coresidency_mix(coresident: bool, rounds: usize) -> CoresidencyRun {
+/// with whole-macro placement they evict each other every round. Under
+/// twin execution the same mix also materializes the weights and runs
+/// every image through the simulated macro.
+fn coresidency_mix(coresident: bool, execution: ExecutionMode, rounds: usize) -> CoresidencyRun {
     let spec = MacroSpec::default();
     let fleet_cfg = FleetConfig {
         num_macros: 1,
         coresident,
+        execution,
         ..cfg(1)
     };
     let mut fleet = Fleet::new(&fleet_cfg, &spec);
@@ -81,6 +85,7 @@ fn coresidency_mix(coresident: bool, rounds: usize) -> CoresidencyRun {
         reload_cycles: snap.reload_cycles,
         resident_macros: resident_macros.len(),
         utilization: snap.utilization(),
+        twin_load_cycles: snap.twin_load_cycles(),
     }
 }
 
@@ -180,8 +185,8 @@ fn main() {
     // Two tenants that together fit ONE macro's columns: co-residency
     // keeps both resident on fewer macros than whole-macro placement
     // needs, with strictly fewer reload cycles and higher utilization.
-    let co = coresidency_mix(true, rounds);
-    let whole = coresidency_mix(false, rounds);
+    let co = coresidency_mix(true, ExecutionMode::Analytic, rounds);
+    let whole = coresidency_mix(false, ExecutionMode::Analytic, rounds);
     let spec_ = MacroSpec::default();
     let whole_macros_needed: usize = [0.04, 0.03]
         .iter()
@@ -217,6 +222,48 @@ fn main() {
         whole.utilization
     );
 
+    // --- twin execution (deterministic cycle counts) ----------------------
+    // The same co-resident mix with the digital twin materializing every
+    // placement and executing each image on the simulated macro: the
+    // twin's charged load cycles must equal the analytic ledger exactly,
+    // and the placement economics must not change.
+    let twin = coresidency_mix(true, ExecutionMode::Twin, rounds);
+    r.table(&format!(
+        "twin execution over {rounds} alternating rounds: {} twin load cycles \
+         (analytic ledger {}, delta {}) at {:.1}% utilization",
+        twin.twin_load_cycles,
+        twin.reload_cycles,
+        twin.twin_load_cycles as i64 - twin.reload_cycles as i64,
+        twin.utilization * 100.0
+    ));
+    assert_eq!(
+        twin.twin_load_cycles, twin.reload_cycles,
+        "twin-charged load cycles must equal the analytic ledger"
+    );
+    assert_eq!(
+        twin.reload_cycles, co.reload_cycles,
+        "twin execution must not change placement economics"
+    );
+
+    // Twin forward throughput on a resident tenant (timing only).
+    {
+        let spec_ = MacroSpec::default();
+        let twin_cfg = FleetConfig {
+            num_macros: 1,
+            coresident: true,
+            execution: ExecutionMode::Twin,
+            ..cfg(1)
+        };
+        let mut fleet = Fleet::new(&twin_cfg, &spec_);
+        fleet
+            .register("edge", by_name("vgg9").unwrap().scaled(0.04), false)
+            .unwrap();
+        fleet.serve_batch("edge", &[img.data.clone()]).unwrap();
+        r.bench("twin forward (108-BL resident tenant)", || {
+            black_box(fleet.infer_twin("edge", &img.data).unwrap());
+        });
+    }
+
     // --- machine-readable summary ----------------------------------------
     let summary = Json::obj()
         .with("bench", "micro_fleet")
@@ -249,6 +296,17 @@ fn main() {
                     "reload_ratio",
                     uncompressed_cycles as f64 / morphed_cycles.max(1) as f64,
                 ),
+        )
+        .with(
+            "twin",
+            Json::obj()
+                .with("rounds", rounds)
+                .with("reload_cycles", twin.reload_cycles)
+                .with(
+                    "ledger_delta",
+                    twin.twin_load_cycles as i64 - twin.reload_cycles as i64,
+                )
+                .with("utilization", twin.utilization),
         );
     match write_bench_summary("fleet", &summary) {
         Ok(path) => r.table(&format!("(wrote {})", path.display())),

@@ -105,6 +105,16 @@ impl CimMacro {
         self.stats.reloads += 1;
     }
 
+    /// Read back the cells loaded into one bitline column (only the rows
+    /// the last `load_columns` wrote). Lets the fleet's twin tests verify
+    /// that a materialized placement holds exactly the registry's packed
+    /// weight columns, span by span.
+    pub fn read_column(&self, bl: usize) -> Vec<WeightCell> {
+        (0..self.array.used_rows(bl))
+            .map(|wl| self.array.cell(wl, bl))
+            .collect()
+    }
+
     /// One macro pass: drive `codes` on the wordlines, digitize
     /// `bl_count` bitlines starting at `bl_start`.
     pub fn pass(&mut self, codes: &[i32], bl_start: usize, bl_count: usize) -> PassResult {
@@ -276,6 +286,19 @@ mod tests {
         let mut manual = a.stats;
         manual.absorb(&b.stats);
         assert_eq!(manual, total);
+    }
+
+    #[test]
+    fn read_column_returns_loaded_cells() {
+        let mut m = CimMacro::new(spec(), 1.0, 1.0);
+        let cols = vec![cells(&[1, -2, 3]), cells(&[4, 5])];
+        m.load_columns(100, &cols);
+        assert_eq!(m.read_column(100), cols[0]);
+        assert_eq!(m.read_column(101), cols[1]);
+        assert_eq!(m.read_column(102), Vec::new(), "untouched column reads empty");
+        // Reloading a column shrinks its readback to the new length.
+        m.load_columns(100, &[cells(&[7])]);
+        assert_eq!(m.read_column(100), cells(&[7]));
     }
 
     #[test]

@@ -275,6 +275,41 @@ impl ServeConfig {
     }
 }
 
+/// How the fleet executes inference over its placements.
+///
+/// * `Analytic` — the original shortcut: placements are *accounted*
+///   (reload cycles, per-macro stats) but batches classify via the
+///   deterministic sim rule; no weights ever move.
+/// * `Twin` — placements are *materialized*: the fleet owns a pool of
+///   real [`CimMacro`](crate::cim::CimMacro)s, every hot-swap streams the
+///   tenant's quantized weight columns into them via `load_columns`
+///   (charging the same per-region reload cycles the analytic ledger
+///   records), and inference runs through the macro datapath — DAC
+///   quantization, per-segment passes, ADC clipping, adder-tree scaling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecutionMode {
+    #[default]
+    Analytic,
+    Twin,
+}
+
+impl ExecutionMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExecutionMode::Analytic => "analytic",
+            ExecutionMode::Twin => "twin",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ExecutionMode> {
+        match s {
+            "analytic" => Some(ExecutionMode::Analytic),
+            "twin" => Some(ExecutionMode::Twin),
+            _ => None,
+        }
+    }
+}
+
 /// Fleet-level (multi-tenant) serving parameters: a pool of `num_macros`
 /// physical CIM macro arrays shared by every registered model.
 #[derive(Debug, Clone, PartialEq)]
@@ -293,6 +328,8 @@ pub struct FleetConfig {
     /// granularity so two tenants can share one macro's spare columns.
     /// Off = the degenerate whole-macro placement (region = full macro).
     pub coresident: bool,
+    /// Whether placements run on the simulated macros ([`ExecutionMode`]).
+    pub execution: ExecutionMode,
     /// Clock frequency for cycle → wall-time conversion (MHz).
     pub clock_mhz: f64,
 }
@@ -306,6 +343,7 @@ impl Default for FleetConfig {
             queue_depth: 1024,
             policy: EvictionPolicy::Lru,
             coresident: false,
+            execution: ExecutionMode::Analytic,
             clock_mhz: 200.0,
         }
     }
@@ -320,6 +358,7 @@ impl FleetConfig {
             .with("queue_depth", self.queue_depth)
             .with("policy", self.policy.as_str())
             .with("coresident", self.coresident)
+            .with("execution", self.execution.as_str())
             .with("clock_mhz", self.clock_mhz)
     }
 
@@ -340,6 +379,11 @@ impl FleetConfig {
                 .and_then(EvictionPolicy::parse)
                 .unwrap_or(d.policy),
             coresident: j.get("coresident").as_bool().unwrap_or(d.coresident),
+            execution: j
+                .get("execution")
+                .as_str()
+                .and_then(ExecutionMode::parse)
+                .unwrap_or(d.execution),
             clock_mhz: j.get("clock_mhz").as_f64().unwrap_or(d.clock_mhz),
         }
     }
@@ -442,11 +486,19 @@ mod tests {
         c.num_macros = 16;
         c.policy = EvictionPolicy::CostWeighted;
         c.coresident = true;
+        c.execution = ExecutionMode::Twin;
         let back = FleetConfig::from_json(&c.to_json());
         assert_eq!(back, c);
-        // Missing knob defaults to whole-macro placement.
+        // Missing knobs default to whole-macro placement, analytic execution.
         let j = Json::parse(r#"{"num_macros": 8}"#).unwrap();
         assert!(!FleetConfig::from_json(&j).coresident);
+        assert_eq!(FleetConfig::from_json(&j).execution, ExecutionMode::Analytic);
+        // Execution mode parses both ways; unknown falls back to analytic.
+        let j = Json::parse(r#"{"execution": "twin"}"#).unwrap();
+        assert_eq!(FleetConfig::from_json(&j).execution, ExecutionMode::Twin);
+        let j = Json::parse(r#"{"execution": "mystery"}"#).unwrap();
+        assert_eq!(FleetConfig::from_json(&j).execution, ExecutionMode::Analytic);
+        assert_eq!(ExecutionMode::parse("analytic"), Some(ExecutionMode::Analytic));
         // Unknown policy string falls back to the default (LRU).
         let j = Json::parse(r#"{"policy": "mystery"}"#).unwrap();
         assert_eq!(FleetConfig::from_json(&j).policy, EvictionPolicy::Lru);

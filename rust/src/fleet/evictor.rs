@@ -52,8 +52,10 @@ pub struct VictimCandidate {
     pub name: String,
     /// Placer clock tick of the model's last use (smaller = staler).
     pub last_used: u64,
-    /// Cycles a future hot-swap back in would cost (region-granular when
-    /// the pool co-resides tenants, whole-macro otherwise).
+    /// Cycles a future hot-swap back in would cost (per current span when
+    /// the pool co-resides tenants — matching the fleet's per-region
+    /// charging, so a fragmented tenant's extra rounding cycles count —
+    /// whole-macro otherwise).
     pub reload_cycles: u64,
     /// Distinct physical macros the model currently touches.
     pub macros_held: usize,

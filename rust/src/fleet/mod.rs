@@ -24,7 +24,14 @@
 //!   with hot-swap (reload) accounting flowing into the same
 //!   [`MacroStats`](crate::cim::MacroStats) /
 //!   [`Metrics`](crate::coordinator::Metrics) counters the single-model
-//!   path uses ([`Fleet`], [`FleetServer`]).
+//!   path uses ([`Fleet`], [`FleetServer`]). With
+//!   `FleetConfig::execution = Twin` the fleet owns a pool of real
+//!   [`CimMacro`](crate::cim::CimMacro)s: hot-swaps stream the registry's
+//!   cached weight columns ([`ModelWeights`]) into them along the
+//!   placement's spans
+//!   ([`PlacedMapping`](crate::mapping::PlacedMapping)), and resident
+//!   tenants classify through the macro datapath ([`Fleet::infer_twin`])
+//!   instead of the analytic shortcut.
 //!
 //! Invariant (asserted by `rust/tests/integration_fleet.rs` and
 //! `rust/tests/proptests.rs`): fleet-level reload cycles equal the sum of
@@ -44,5 +51,5 @@ pub mod server;
 
 pub use evictor::{EvictionPolicy, Evictor, PolicyEvictor, VictimCandidate};
 pub use placer::{Placement, Placer, SwapEvent};
-pub use registry::{ModelEntry, ModelRegistry};
+pub use registry::{ModelEntry, ModelRegistry, ModelWeights};
 pub use server::{BatchOutcome, Fleet, FleetHandle, FleetServer, FleetSnapshot};

@@ -9,7 +9,8 @@
 //! * **Co-resident** (region) mode — a model occupies exactly
 //!   `total_bls` columns wherever they are free, so two tenants can share
 //!   one macro's spare columns and a partial swap streams only the
-//!   occupied columns ([`region_reload_cycles`]). This is what keeps the
+//!   occupied columns ([`crate::latency::region_reload_cycles`], summed
+//!   per span via [`spans_reload_cycles`]). This is what keeps the
 //!   paper's ~90% array utilization intact at *fleet* scale.
 //! * **Whole-macro** mode — the degenerate case (region = full macro):
 //!   a model takes `macros_needed` fully-free macros, reproducing the
@@ -27,7 +28,7 @@
 use std::collections::BTreeMap;
 
 use crate::config::MacroSpec;
-use crate::latency::region_reload_cycles;
+use crate::latency::spans_reload_cycles;
 use crate::mapping::{Region, RegionAllocator};
 
 use super::evictor::{Evictor, VictimCandidate};
@@ -315,16 +316,16 @@ impl Placer {
                 .iter()
                 .filter(|(n, _)| !registry.get(n).map(|e| e.pinned).unwrap_or(false))
                 .map(|(n, regions)| {
-                    let reload = registry
-                        .get(n)
-                        .map(|e| {
-                            if self.coresident {
-                                region_reload_cycles(e.bls_needed(), spec)
-                            } else {
-                                e.reload_cycles(spec)
-                            }
-                        })
-                        .unwrap_or(0);
+                    // Restore-cost estimate: what re-loading the victim as
+                    // currently placed would charge — per span, matching
+                    // the fleet's charge_region_reloads semantics (a later
+                    // re-placement may fragment differently, but this is
+                    // the consistent figure for ranking victims).
+                    let reload = if self.coresident {
+                        spans_reload_cycles(regions.iter().map(|r| r.bl_count), spec)
+                    } else {
+                        registry.get(n).map(|e| e.reload_cycles(spec)).unwrap_or(0)
+                    };
                     VictimCandidate {
                         name: n.clone(),
                         last_used: self.last_used.get(n).copied().unwrap_or(0),

@@ -7,13 +7,93 @@
 //! via [`latency::model_cost`](crate::latency::model_cost); the placer
 //! and evictor then work purely off those footprints — no per-request
 //! recomputation.
+//!
+//! Under twin execution the registry additionally caches the model's
+//! **packed weight columns** ([`ModelWeights`]): deterministic synthetic
+//! float weights (seeded by the model name) quantized per layer with LSQ
+//! to the macro's cell precision, sliced into one `Vec<WeightCell>` per
+//! logical bitline column in packing order. Hot-swaps stream these
+//! columns into the twin's macros without re-quantizing anything.
 
 use std::collections::BTreeMap;
 
 use crate::arch::ModelArch;
+use crate::cim::WeightCell;
 use crate::config::MacroSpec;
 use crate::latency::{model_cost, ModelCost};
 use crate::mapping::{pack_model, ModelMapping};
+use crate::quant::lsq::LsqTensor;
+use crate::util::prng::Pcg;
+
+/// A model's quantized weight columns in canonical packing order, plus
+/// the per-layer LSQ steps (`S_W`) the twin's adder tree scales by.
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    /// One column of cells per logical bitline (`columns[global_bl]`,
+    /// `pack_model` order); lengths follow `rows_per_segment`.
+    pub columns: Vec<Vec<WeightCell>>,
+    /// Per-layer weight quantization step, parallel to `arch.layers`.
+    pub steps: Vec<f32>,
+}
+
+/// FNV-1a over the model name — a stable 64-bit weight seed, so the same
+/// tenant name always materializes the same weights.
+fn name_seed(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl ModelWeights {
+    /// Synthesize-and-quantize weights for `arch` laid out per `mapping`
+    /// (which must be the canonical base-0 packing). Deterministic in
+    /// `name`: re-registering a tenant reproduces its weights bit-exactly.
+    pub fn synthesize(
+        name: &str,
+        arch: &ModelArch,
+        mapping: &ModelMapping,
+        spec: &MacroSpec,
+    ) -> ModelWeights {
+        assert_eq!(mapping.base_bl, 0, "weights are cached in canonical packing order");
+        let mut columns: Vec<Vec<WeightCell>> = vec![Vec::new(); mapping.total_bls];
+        let mut steps = Vec::with_capacity(arch.layers.len());
+        let mut rng = Pcg::new(name_seed(name));
+        for lm in &mapping.layers {
+            let mut lr = rng.fork(lm.layer as u64);
+            // One flat float tensor in (segment, filter) order = column
+            // order; column lengths are `rows_per_segment`, so no
+            // per-column staging is needed.
+            let layer_floats: usize =
+                lm.rows_per_segment.iter().map(|&r| r * lm.c_out).sum();
+            let all: Vec<f32> = (0..layer_floats)
+                .map(|_| (lr.next_f32() - 0.5) * 0.5)
+                .collect();
+            // One LSQ step per layer (the paper's per-layer S_W).
+            let t = LsqTensor::calibrate(&all, spec.weight_bits);
+            steps.push(t.step);
+            let mut k = 0usize;
+            for seg in 0..lm.segments {
+                let rows = lm.rows_per_segment[seg];
+                for f in 0..lm.c_out {
+                    columns[lm.column(seg, f)] = t.codes[k..k + rows]
+                        .iter()
+                        .map(|&c| WeightCell::saturating(c, spec.weight_bits))
+                        .collect();
+                    k += rows;
+                }
+            }
+        }
+        ModelWeights { columns, steps }
+    }
+
+    /// Total cells held (= the mapping's occupied cells).
+    pub fn used_cells(&self) -> usize {
+        self.columns.iter().map(|c| c.len()).sum()
+    }
+}
 
 /// One registered model variant and its deployment footprint.
 #[derive(Debug, Clone)]
@@ -26,6 +106,9 @@ pub struct ModelEntry {
     pub cost: ModelCost,
     /// Pinned models are never evicted.
     pub pinned: bool,
+    /// Packed weight columns (`Some` only when the registry materializes
+    /// weights — i.e. the fleet runs twin execution).
+    pub weights: Option<ModelWeights>,
 }
 
 impl ModelEntry {
@@ -59,6 +142,9 @@ impl ModelEntry {
 pub struct ModelRegistry {
     spec: MacroSpec,
     models: BTreeMap<String, ModelEntry>,
+    /// When `Some(limit)`, registration synthesizes + caches packed
+    /// weight columns for models of up to `limit` bitline columns.
+    materialize_limit: Option<usize>,
 }
 
 impl ModelRegistry {
@@ -66,7 +152,37 @@ impl ModelRegistry {
         ModelRegistry {
             spec,
             models: BTreeMap::new(),
+            materialize_limit: None,
         }
+    }
+
+    /// A registry that materializes [`ModelWeights`] at registration —
+    /// what a twin-executing fleet uses, so every hot-swap can stream
+    /// cached columns instead of re-quantizing.
+    pub fn with_weights(spec: MacroSpec) -> ModelRegistry {
+        ModelRegistry {
+            materialize_limit: Some(usize::MAX),
+            ..ModelRegistry::new(spec)
+        }
+    }
+
+    /// Like [`ModelRegistry::with_weights`], but skips weight synthesis
+    /// for models wider than `max_bls` columns. A twin fleet passes its
+    /// pool width: an oversized tenant can only ever page (weights stream
+    /// through without residency), so caching its full column set would
+    /// burn registration-time CPU and hold the footprint in RAM for
+    /// nothing.
+    pub fn with_weights_up_to(spec: MacroSpec, max_bls: usize) -> ModelRegistry {
+        ModelRegistry {
+            materialize_limit: Some(max_bls),
+            ..ModelRegistry::new(spec)
+        }
+    }
+
+    /// Whether this registry caches packed weight columns (for models
+    /// within its materialization limit).
+    pub fn materializes_weights(&self) -> bool {
+        self.materialize_limit.is_some()
     }
 
     pub fn spec(&self) -> &MacroSpec {
@@ -83,6 +199,10 @@ impl ModelRegistry {
         arch.validate()?;
         let mapping = pack_model(&arch, &self.spec);
         let cost = model_cost(&arch, &self.spec);
+        let weights = self
+            .materialize_limit
+            .filter(|&limit| mapping.total_bls <= limit)
+            .map(|_| ModelWeights::synthesize(name, &arch, &mapping, &self.spec));
         self.models.insert(
             name.to_string(),
             ModelEntry {
@@ -91,6 +211,7 @@ impl ModelRegistry {
                 mapping,
                 cost,
                 pinned,
+                weights,
             },
         );
         Ok(&self.models[name])
@@ -204,6 +325,67 @@ mod tests {
         assert!(e.bls_needed() % spec.bitlines != 0);
         assert!(e.region_reload_cycles(&spec) < e.reload_cycles(&spec));
         assert_eq!(e.region_reload_cycles(&spec), e.bls_needed() as u64);
+    }
+
+    #[test]
+    fn weights_cached_only_when_materializing() {
+        let spec = MacroSpec::default();
+        let mut plain = ModelRegistry::new(spec);
+        let e = plain.register("m", vgg9().scaled(0.04), false).unwrap();
+        assert!(e.weights.is_none(), "analytic registry carries no weights");
+
+        let mut mat = ModelRegistry::with_weights(spec);
+        assert!(mat.materializes_weights());
+        let e = mat.register("m", vgg9().scaled(0.04), false).unwrap();
+        let w = e.weights.as_ref().expect("materializing registry caches weights");
+        // One column per logical bitline, cells match the packed rows.
+        assert_eq!(w.columns.len(), e.mapping.total_bls);
+        let used: usize = e
+            .mapping
+            .layers
+            .iter()
+            .map(|lm| lm.rows_per_segment.iter().sum::<usize>() * lm.c_out)
+            .sum();
+        assert_eq!(w.used_cells(), used);
+        assert_eq!(w.steps.len(), e.arch.layers.len());
+        assert!(w.steps.iter().all(|&s| s > 0.0));
+        // Every cell within the macro's precision range.
+        let (lo, hi) = spec.weight_qrange();
+        assert!(w
+            .columns
+            .iter()
+            .flatten()
+            .all(|c| (lo..=hi).contains(&(c.w as i32))));
+        // Column lengths follow the mapping's segment raggedness.
+        for c in e.mapping.columns() {
+            assert_eq!(w.columns[c.global_bl].len(), c.rows, "column {}", c.global_bl);
+        }
+    }
+
+    #[test]
+    fn weight_budget_skips_oversized_tenants() {
+        // A twin fleet passes its pool width: tenants that fit are
+        // materialized, page-only tenants are not.
+        let spec = MacroSpec::default();
+        let mut r = ModelRegistry::with_weights_up_to(spec, 2 * spec.bitlines);
+        assert!(r.materializes_weights());
+        let fits = r.register("fits", vgg9().scaled(0.04), false).unwrap(); // 108 BLs
+        assert!(fits.weights.is_some());
+        let pages = r.register("pages", vgg9().scaled(0.3), false).unwrap(); // 3676 BLs
+        assert!(pages.weights.is_none(), "over-budget tenant gets no weight cache");
+    }
+
+    #[test]
+    fn weights_deterministic_in_name() {
+        let spec = MacroSpec::default();
+        let arch = vgg9().scaled(0.04);
+        let mapping = crate::mapping::pack_model(&arch, &spec);
+        let a = ModelWeights::synthesize("tenant", &arch, &mapping, &spec);
+        let b = ModelWeights::synthesize("tenant", &arch, &mapping, &spec);
+        assert_eq!(a.columns, b.columns);
+        assert_eq!(a.steps, b.steps);
+        let c = ModelWeights::synthesize("other", &arch, &mapping, &spec);
+        assert_ne!(a.columns, c.columns, "different tenants get different weights");
     }
 
     #[test]

@@ -23,6 +23,23 @@
 //! fleet totals, per-macro [`MacroStats`], and per-tenant `MacroStats`
 //! (attribution on shared macros follows who incurred the cycles).
 //!
+//! With `FleetConfig::execution = Twin` the fleet additionally owns a
+//! pool of real [`CimMacro`]s (the digital twin). Every hot-swap wraps
+//! the placement's regions in a [`PlacedMapping`] and **materializes** it
+//! — the tenant's cached weight columns stream into the macros via
+//! `load_columns`, one column-serial write per span, charging the twin
+//! the same `region_reload_cycles(span width)` the analytic ledger
+//! records for that region (agreement by construction: both sides sum
+//! [`spans_reload_cycles`](crate::latency::spans_reload_cycles) over the
+//! same spans). Inference for resident tenants then runs through the
+//! macro datapath ([`Fleet::infer_twin`]): per-segment DAC quantization,
+//! macro passes split at span boundaries, ADC clipping and adder-tree
+//! scaling — so fragmentation, compaction and defrag become *observable*
+//! twin-level effects rather than bookkeeping. Oversized tenants still
+//! page analytically (weights stream through; residency is not modeled),
+//! with the paging charges mirrored onto the twin pool so the load-cycle
+//! books always balance.
+//!
 //! Models larger than the whole pool are still servable: they page
 //! through the usable macros exactly like the single-model
 //! [`MacroScheduler`](crate::coordinator::MacroScheduler), evicting every
@@ -39,20 +56,26 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::arch::ModelArch;
-use crate::cim::MacroStats;
-use crate::config::{FleetConfig, MacroSpec};
+use crate::cim::{AdderTree, CimMacro, MacroStats};
+use crate::config::{ExecutionMode, FleetConfig, MacroSpec};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::request::{InferResponse, RequestId, Ticket};
 use crate::coordinator::scheduler::MacroScheduler;
 use crate::coordinator::server::sim_classify;
 use crate::latency::region_reload_cycles;
-use crate::mapping::Region;
+use crate::mapping::{PlacedMapping, Region};
+use crate::quant::psum::segment_inputs;
 use crate::util::json::Json;
 
 use super::evictor::{Evictor, PolicyEvictor};
 use super::placer::{Placement, Placer};
-use super::registry::ModelRegistry;
+use super::registry::{ModelEntry, ModelRegistry, ModelWeights};
+
+/// ADC step of the twin pool's converters (`S_ADC`). Activation steps are
+/// calibrated per layer at inference time; weight steps come from the
+/// registry's per-layer LSQ calibration.
+const TWIN_S_ADC: f32 = 16.0;
 
 /// One served batch's outcome (deterministic core result).
 #[derive(Debug, Clone)]
@@ -104,6 +127,14 @@ pub struct FleetSnapshot {
     pub resident_bls: usize,
     /// Bitline columns per macro (for utilization math).
     pub bitlines_per_macro: usize,
+    /// How this fleet executes inference.
+    pub execution: ExecutionMode,
+    /// Per-macro counters of the digital twin pool (empty under analytic
+    /// execution). Load cycles and reload events mirror `macro_stats`
+    /// exactly by construction; compute cycles and conversions count the
+    /// passes the twin actually executed (one output position per layer),
+    /// not the analytic full-spatial integral.
+    pub twin_stats: Vec<MacroStats>,
 }
 
 fn stats_json(s: &MacroStats) -> Json {
@@ -125,6 +156,15 @@ impl FleetSnapshot {
     /// [`FleetSnapshot::reload_cycles`] (shared macros split per tenant).
     pub fn tenant_load_cycles(&self) -> u64 {
         self.tenant_stats.iter().map(|(_, s)| s.load_cycles).sum()
+    }
+
+    /// Sum of the twin pool's charged load cycles. Under twin execution
+    /// this equals [`FleetSnapshot::reload_cycles`] exactly — the macros
+    /// were really loaded, and each span's write charged the same
+    /// `region_reload_cycles` the ledger recorded. Zero under analytic
+    /// execution (no twin pool).
+    pub fn twin_load_cycles(&self) -> u64 {
+        self.twin_stats.iter().map(|s| s.load_cycles).sum()
     }
 
     /// Aggregate counters over the whole pool.
@@ -154,7 +194,8 @@ impl FleetSnapshot {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
+            .with("execution", self.execution.as_str())
             .with("reload_cycles", self.reload_cycles)
             .with("hot_swaps", self.hot_swaps)
             .with("evictions", self.evictions)
@@ -209,7 +250,16 @@ impl FleetSnapshot {
             .with(
                 "registered",
                 Json::Arr(self.registered.iter().map(|n| Json::from(n.as_str())).collect()),
-            )
+            );
+        if !self.twin_stats.is_empty() {
+            j = j
+                .with(
+                    "twin",
+                    Json::Arr(self.twin_stats.iter().map(stats_json).collect()),
+                )
+                .with("twin_load_cycles", self.twin_load_cycles());
+        }
+        j
     }
 }
 
@@ -224,20 +274,43 @@ pub struct Fleet {
     reload_cycles_total: u64,
     hot_swaps: u64,
     evictions: u64,
+    execution: ExecutionMode,
+    /// The digital twin pool — one real [`CimMacro`] per physical macro
+    /// under twin execution, empty otherwise.
+    twin: Vec<CimMacro>,
+    /// Materialized placements of resident tenants (twin execution only).
+    placed: BTreeMap<String, PlacedMapping>,
 }
 
 impl Fleet {
     pub fn new(cfg: &FleetConfig, spec: &MacroSpec) -> Fleet {
+        let num = cfg.num_macros.max(1);
+        let registry = match cfg.execution {
+            // Materialize weights only for tenants that can become
+            // resident (≤ the pool's columns); oversized tenants page and
+            // never read their weights.
+            ExecutionMode::Twin => ModelRegistry::with_weights_up_to(*spec, num * spec.bitlines),
+            ExecutionMode::Analytic => ModelRegistry::new(*spec),
+        };
+        let twin = match cfg.execution {
+            ExecutionMode::Twin => (0..num)
+                .map(|_| CimMacro::new(*spec, 1.0, TWIN_S_ADC))
+                .collect(),
+            ExecutionMode::Analytic => Vec::new(),
+        };
         Fleet {
             spec: *spec,
-            registry: ModelRegistry::new(*spec),
-            placer: Placer::new(cfg.num_macros.max(1), spec.bitlines, cfg.coresident),
+            registry,
+            placer: Placer::new(num, spec.bitlines, cfg.coresident),
             evictor: Box::new(PolicyEvictor::new(cfg.policy)),
-            macro_stats: vec![MacroStats::default(); cfg.num_macros.max(1)],
+            macro_stats: vec![MacroStats::default(); num],
             tenant_stats: BTreeMap::new(),
             reload_cycles_total: 0,
             hot_swaps: 0,
             evictions: 0,
+            execution: cfg.execution,
+            twin,
+            placed: BTreeMap::new(),
         }
     }
 
@@ -257,6 +330,21 @@ impl Fleet {
 
     pub fn registry(&self) -> &ModelRegistry {
         &self.registry
+    }
+
+    pub fn execution(&self) -> ExecutionMode {
+        self.execution
+    }
+
+    /// The digital twin pool (empty under analytic execution).
+    pub fn twin_macros(&self) -> &[CimMacro] {
+        &self.twin
+    }
+
+    /// The materialized placement of a resident tenant (twin execution
+    /// only; `None` for non-resident or analytically-served models).
+    pub fn placed_mapping(&self, name: &str) -> Option<&PlacedMapping> {
+        self.placed.get(name)
     }
 
     pub fn num_macros(&self) -> usize {
@@ -299,38 +387,33 @@ impl Fleet {
     pub fn retire(&mut self, name: &str) -> Result<()> {
         self.registry.retire(name)?;
         self.placer.release(name);
+        self.placed.remove(name);
         Ok(())
     }
 
-    /// Charge the region-granular loads of one hot-swap. The swap's total
-    /// cost is `region_reload_cycles(Σ bl_count)` — the same whether the
-    /// allocation is contiguous or fragmented, so it always matches the
-    /// evictor's `VictimCandidate::reload_cycles` estimate and never
-    /// exceeds the whole-macro cost of the same footprint. The total is
-    /// distributed over the loaded regions' macros sum-exactly (floor per
-    /// region by its column share; ceil remainder to the first region),
-    /// landing on the macro **and** the tenant, so fleet-level, per-macro
-    /// and per-tenant accounting agree by construction. Returns (cycles,
-    /// events): one event per loaded region.
+    /// Charge the region-granular loads of one hot-swap: each loaded
+    /// region is one column-serial write event costing
+    /// `region_reload_cycles(bl_count)` — **exactly** what the twin's
+    /// `CimMacro::load_columns` charges when the same span is
+    /// materialized, so the analytic ledger and the twin pool agree by
+    /// construction (both sum `spans_reload_cycles` over the same spans).
+    /// On the paper's macro (`load_cycles_per_macro == bitlines`) the
+    /// total equals the contiguous cost of the footprint; on coarser
+    /// write granularities a fragmented placement pays one extra rounding
+    /// cycle per span — the fragmentation penalty the twin makes
+    /// observable. Every charge lands on the macro **and** the tenant, so
+    /// fleet-level, per-macro and per-tenant accounting agree. Returns
+    /// (cycles, events): one event per loaded region.
     fn charge_region_reloads(&mut self, model: &str, regions: &[Region]) -> (u64, u64) {
-        let load = self.spec.load_cycles_per_macro as u64;
-        let bitlines = self.spec.bitlines as u64;
-        let total_bls: usize = regions.iter().map(|r| r.bl_count).sum();
-        let total = region_reload_cycles(total_bls, &self.spec);
-        let floor_sum: u64 = regions
-            .iter()
-            .map(|r| r.bl_count as u64 * load / bitlines)
-            .sum();
         let tenant = self.tenant_stats.entry(model.to_string()).or_default();
-        for (i, r) in regions.iter().enumerate() {
-            let mut c = r.bl_count as u64 * load / bitlines;
-            if i == 0 {
-                c += total - floor_sum;
-            }
+        let mut total = 0u64;
+        for r in regions {
+            let c = region_reload_cycles(r.bl_count, &self.spec);
             self.macro_stats[r.macro_id].load_cycles += c;
             self.macro_stats[r.macro_id].reloads += 1;
             tenant.load_cycles += c;
             tenant.reloads += 1;
+            total += c;
         }
         self.reload_cycles_total += total;
         (total, regions.len() as u64)
@@ -339,7 +422,11 @@ impl Fleet {
     /// Charge `events` whole-macro weight loads round-robin over `macros`
     /// (the paging path streams full macros), returning the cycles
     /// charged. Together with [`Fleet::charge_region_reloads`] these are
-    /// the **only** places reload cycles enter the books.
+    /// the **only** places reload cycles enter the books. Under twin
+    /// execution the same charges mirror onto the twin pool's macros:
+    /// paged weights stream *through* the hardware (residency is not
+    /// modeled for oversized tenants), but the cycles land on the same
+    /// physical macro either way, keeping the load-cycle books balanced.
     fn charge_paging_reloads(&mut self, model: &str, macros: &[usize], events: u64) -> u64 {
         let load = self.spec.load_cycles_per_macro as u64;
         let tenant = self.tenant_stats.entry(model.to_string()).or_default();
@@ -347,6 +434,10 @@ impl Fleet {
             let m = macros[(e as usize) % macros.len()];
             self.macro_stats[m].load_cycles += load;
             self.macro_stats[m].reloads += 1;
+            if let Some(mac) = self.twin.get_mut(m) {
+                mac.stats.load_cycles += load;
+                mac.stats.reloads += 1;
+            }
         }
         let cycles = events * load;
         tenant.load_cycles += cycles;
@@ -395,6 +486,23 @@ impl Fleet {
                 .placer
                 .place(entry, &self.registry, self.evictor.as_ref(), &self.spec)?;
             let macros = swap.macros();
+            // Victims' placements drop first: their columns now belong to
+            // the newcomer, and a stale entry would let infer_twin read
+            // overwritten weights.
+            for victim in &swap.evicted {
+                self.placed.remove(victim);
+            }
+            if swap.hot_swap && self.execution == ExecutionMode::Twin {
+                if let Err(e) =
+                    materialize_placement(&mut self.twin, &mut self.placed, entry, &swap.regions)
+                {
+                    // Unwind the placement so the model is not left
+                    // "resident" without weights (which would skip every
+                    // future materialization attempt).
+                    self.placer.release(model);
+                    return Err(e);
+                }
+            }
             let (cycles, events) = if swap.hot_swap {
                 self.charge_region_reloads(model, &swap.regions)
             } else {
@@ -415,6 +523,9 @@ impl Fleet {
                 "cannot page '{model}': every macro is held by pinned models"
             );
             let evicted = self.placer.evict_all_evictable(&self.registry);
+            for victim in &evicted {
+                self.placed.remove(victim);
+            }
             let usable = self.placer.free_whole_macros();
             debug_assert!(!usable.is_empty());
             let plan =
@@ -434,10 +545,32 @@ impl Fleet {
 
         let mut classes = Vec::with_capacity(images.len());
         let mut logits = Vec::with_capacity(images.len());
-        for img in images {
-            let (class, l) = sim_classify(img, num_classes);
-            classes.push(class);
-            logits.push(l);
+        match (self.execution, self.placed.get(model)) {
+            (ExecutionMode::Twin, Some(placed)) => {
+                // Resident twin path: run each image through the real
+                // macro datapath along the placed (possibly fragmented)
+                // layout. A paging tenant has no materialized placement
+                // and falls through to the analytic classifier below.
+                let entry = self.registry.get(model).expect("checked above");
+                let weights = entry.weights.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!("model '{model}' registered without weights")
+                })?;
+                let spec = self.spec;
+                for img in images {
+                    let feats =
+                        twin_forward(&mut self.twin, placed, &entry.arch, weights, &spec, img);
+                    let (class, l) = sim_classify(&feats, num_classes);
+                    classes.push(class);
+                    logits.push(l);
+                }
+            }
+            _ => {
+                for img in images {
+                    let (class, l) = sim_classify(img, num_classes);
+                    classes.push(class);
+                    logits.push(l);
+                }
+            }
         }
         Ok(BatchOutcome {
             model: model.to_string(),
@@ -451,12 +584,49 @@ impl Fleet {
         })
     }
 
+    /// Run one image through the digital twin for a **resident** tenant
+    /// (materialized by a previous `serve_batch` or placement), returning
+    /// `(class, logits)` — the same `twin_forward` datapath the batch
+    /// path inlines, exposed so tests and tools can drive the placed
+    /// layout directly. Unlike `serve_batch` this performs **no** fleet
+    /// bookkeeping: no batching, no analytic compute charge, and no LRU
+    /// touch (a tenant driven only through here still looks idle to the
+    /// evictor).
+    pub fn infer_twin(&mut self, model: &str, image: &[f32]) -> Result<(usize, Vec<f32>)> {
+        anyhow::ensure!(
+            self.execution == ExecutionMode::Twin,
+            "fleet executes analytically; construct it with FleetConfig::execution = Twin"
+        );
+        let entry = self
+            .registry
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+        let placed = self.placed.get(model).ok_or_else(|| {
+            anyhow::anyhow!("model '{model}' is not materialized on the twin (serve it first)")
+        })?;
+        let weights = entry
+            .weights
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("model '{model}' registered without weights"))?;
+        let spec = self.spec;
+        let feats = twin_forward(&mut self.twin, placed, &entry.arch, weights, &spec, image);
+        Ok(sim_classify(&feats, entry.arch.num_classes))
+    }
+
     pub fn snapshot(&self) -> FleetSnapshot {
         let resident = self.placer.placements();
         let resident_bls = resident
             .iter()
             .filter_map(|p| self.registry.get(&p.model).map(|e| e.bls_needed()))
             .sum();
+        // Twin/ledger agreement is structural: every ledger load charge
+        // has a twin counterpart (materialization or mirrored paging).
+        debug_assert!(
+            self.twin.is_empty()
+                || self.twin.iter().map(|m| m.stats.load_cycles).sum::<u64>()
+                    == self.reload_cycles_total,
+            "twin load cycles diverged from the analytic ledger"
+        );
         FleetSnapshot {
             macro_stats: self.macro_stats.clone(),
             tenant_stats: self
@@ -472,8 +642,165 @@ impl Fleet {
             occupied_bls: self.placer.occupied_bls(),
             resident_bls,
             bitlines_per_macro: self.spec.bitlines,
+            execution: self.execution,
+            twin_stats: self.twin.iter().map(|m| m.stats).collect(),
         }
     }
+}
+
+/// Materialize a placement on the twin pool: wrap the allocated regions
+/// in a [`PlacedMapping`] and stream the tenant's cached weight columns
+/// into the macros, one `load_columns` call per allocated region. Each
+/// write charges the twin `region_reload_cycles(region width)` — the
+/// identical per-region figure [`Fleet::charge_region_reloads`] books
+/// analytically, so the two ledgers agree by construction.
+///
+/// Under co-residency the allocation is column-exact and the regions
+/// *are* the mapping's spans. Under whole-macro placement the tail macro
+/// is allocated full-width even when the footprint ends mid-macro: the
+/// placed mapping trims the tail span to the footprint, but the load
+/// still writes (and clears) the macro's full allocated width — the
+/// paper's row-broadcast touches every column, which is exactly why the
+/// ledger charges the whole `load_cycles_per_macro` for it.
+fn materialize_placement(
+    twin: &mut [CimMacro],
+    placed: &mut BTreeMap<String, PlacedMapping>,
+    entry: &ModelEntry,
+    regions: &[Region],
+) -> Result<()> {
+    let weights = entry.weights.as_ref().ok_or_else(|| {
+        anyhow::anyhow!(
+            "model '{}' registered without materialized weights",
+            entry.name
+        )
+    })?;
+    let total = entry.mapping.total_bls;
+    let mut spans = Vec::with_capacity(regions.len());
+    let mut remaining = total;
+    for r in regions {
+        if remaining == 0 {
+            break;
+        }
+        let take = r.bl_count.min(remaining);
+        spans.push(Region { bl_count: take, ..*r });
+        remaining -= take;
+    }
+    anyhow::ensure!(
+        remaining == 0,
+        "placement for '{}' covers {} of {} columns",
+        entry.name,
+        total - remaining,
+        total
+    );
+    // Only the tail region can be wider than its trimmed span (whole-macro
+    // allocation rounds up by less than one macro), so the trimmed spans
+    // and the allocated regions must pair 1:1 — anything else would load
+    // and charge different spans than the ledger books.
+    anyhow::ensure!(
+        spans.len() == regions.len(),
+        "placement for '{}' has {} surplus region(s) beyond its footprint",
+        entry.name,
+        regions.len() - spans.len()
+    );
+    let pm = PlacedMapping::new(entry.mapping.clone(), spans)?;
+    for ((span, range), region) in pm.span_ranges().zip(regions) {
+        debug_assert_eq!((span.macro_id, span.bl_start), (region.macro_id, region.bl_start));
+        if span.bl_count == region.bl_count {
+            twin[span.macro_id].load_columns(span.bl_start, &weights.columns[range]);
+        } else {
+            // Whole-macro tail: pad with empty columns so the write spans
+            // (and charges) the region's full allocated width.
+            let mut cols = weights.columns[range].to_vec();
+            cols.resize(region.bl_count, Vec::new());
+            twin[span.macro_id].load_columns(span.bl_start, &cols);
+        }
+    }
+    placed.insert(entry.name.clone(), pm);
+    Ok(())
+}
+
+/// One image through the macro datapath along a placed layout — the
+/// quant/psum path the coordinator's single-layer twin test exercises,
+/// generalized to the whole layer stack and to fragmented placements.
+///
+/// Per layer, for one representative output position: build the im2col
+/// row from the producing layer's activations, calibrate a dynamic
+/// activation step over the DAC range, segment the row per Fig. 9
+/// ([`segment_inputs`]), drive one macro pass per segment — split into
+/// one pass per physically-contiguous run, so a span boundary in the
+/// placement is a real extra pass — accumulate the ADC codes in the adder
+/// tree, scale by `S_W·S_ADC`, ReLU. The last layer's activations are the
+/// feature vector the (non-CIM) classifier head consumes.
+fn twin_forward(
+    twin: &mut [CimMacro],
+    placed: &PlacedMapping,
+    arch: &ModelArch,
+    weights: &ModelWeights,
+    spec: &MacroSpec,
+    image: &[f32],
+) -> Vec<f32> {
+    let dac_max = (1i32 << spec.dac_bits) - 1;
+    let mut outputs: Vec<Vec<f32>> = Vec::with_capacity(arch.layers.len());
+    for (lm, layer) in placed.mapping.layers.iter().zip(&arch.layers) {
+        let src: Vec<f32> = match layer.input_from {
+            Some(i) => outputs[i].clone(),
+            None => channel_means(image, layer.c_in),
+        };
+        debug_assert_eq!(src.len(), layer.c_in);
+        // One output position's im2col row: each input channel's value at
+        // every kernel tap.
+        let k2 = layer.kernel * layer.kernel;
+        let row: Vec<f32> = src
+            .iter()
+            .flat_map(|&a| std::iter::repeat(a).take(k2))
+            .collect();
+        debug_assert_eq!(row.len(), layer.rows());
+        // Dynamic activation step: span the DAC range per layer.
+        let peak = row.iter().fold(0.0f32, |m, &x| m.max(x));
+        let s_act = if peak > 0.0 { peak / dac_max as f32 } else { 1.0 };
+        let segs = segment_inputs(layer.c_in, layer.kernel, spec.channels_per_bl(layer.kernel));
+        debug_assert_eq!(segs.len(), lm.segments);
+        let mut psum = vec![0i64; lm.c_out];
+        for (seg, &(lo, hi)) in segs.iter().enumerate() {
+            let codes: Vec<i32> = row[lo..hi]
+                .iter()
+                .map(|&x| ((x / s_act).round() as i32).clamp(0, dac_max))
+                .collect();
+            let logical = lm.bl_start + seg * lm.c_out;
+            for run in placed.physical_runs(logical, lm.c_out) {
+                let r = twin[run.macro_id].pass(&codes, run.bl_start, run.bl_count);
+                let off = run.logical_start - logical;
+                for (j, &code) in r.codes.iter().enumerate() {
+                    psum[off + j] += code as i64;
+                }
+            }
+        }
+        // Eq. 7 output scaling: the adder tree applies S_W·S_ADC, and the
+        // activation step folds back in as S_A — without it the forward
+        // would be invariant to input magnitude.
+        let scale = s_act * AdderTree::new(weights.steps[lm.layer], TWIN_S_ADC, false)
+            .effective_scale();
+        outputs.push(psum.iter().map(|&p| (p as f32 * scale).max(0.0)).collect());
+    }
+    outputs.pop().unwrap_or_default()
+}
+
+/// Fold an image into `c` channel activations (mean per contiguous chunk)
+/// — the deterministic stand-in for the stem's receptive field, matching
+/// the chunked spirit of [`sim_classify`]'s head.
+fn channel_means(image: &[f32], c: usize) -> Vec<f32> {
+    assert!(c > 0, "a layer has at least one input channel");
+    let n = image.len();
+    (0..c)
+        .map(|i| {
+            let lo = i * n / c;
+            let hi = ((i + 1) * n / c).min(n);
+            if lo >= hi {
+                return 0.0;
+            }
+            image[lo..hi].iter().sum::<f32>() / (hi - lo) as f32
+        })
+        .collect()
 }
 
 /// One tagged inference request flowing through the fleet.
@@ -1060,6 +1387,156 @@ mod tests {
             Some(fleet.snapshot().reload_cycles as usize)
         );
         assert_eq!(back.get("macros").as_arr().unwrap().len(), 2);
+    }
+
+    fn twin_cfg(num_macros: usize, coresident: bool) -> FleetConfig {
+        FleetConfig {
+            coresident,
+            execution: ExecutionMode::Twin,
+            ..cfg(num_macros)
+        }
+    }
+
+    #[test]
+    fn twin_materializes_weights_and_matches_ledger() {
+        let spec = MacroSpec::default();
+        let mut fleet = Fleet::new(&twin_cfg(1, true), &spec);
+        fleet.register("a", vgg9().scaled(0.04), false).unwrap(); // 108 BLs
+        fleet.register("b", vgg9().scaled(0.03), false).unwrap(); // 82 BLs
+        let oa = fleet.serve_batch("a", &[img()]).unwrap();
+        let ob = fleet.serve_batch("b", &[img()]).unwrap();
+        assert_eq!(oa.reload_cycles, 108);
+        assert_eq!(ob.reload_cycles, 82);
+
+        let snap = fleet.snapshot();
+        assert_eq!(snap.execution, ExecutionMode::Twin);
+        assert_eq!(snap.twin_stats.len(), 1);
+        // The twin's charged load cycles equal the analytic ledger's sum.
+        assert_eq!(snap.twin_load_cycles(), snap.reload_cycles);
+        assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+        assert_eq!(snap.twin_stats[0].reloads, 2, "one span write per tenant");
+
+        // Readback: each tenant's placed columns hold exactly its cached
+        // weight columns.
+        for name in ["a", "b"] {
+            let placed = fleet.placed_mapping(name).unwrap().clone();
+            let weights = fleet.registry().get(name).unwrap().weights.clone().unwrap();
+            for (bl, col) in weights.columns.iter().enumerate() {
+                let (mac, local) = placed.locate(bl);
+                assert_eq!(
+                    &fleet.twin_macros()[mac].read_column(local),
+                    col,
+                    "{name} column {bl}"
+                );
+            }
+        }
+
+        // Residency hits load nothing and execute deterministically.
+        let image = img();
+        let o1 = fleet.serve_batch("a", &[image.clone()]).unwrap();
+        let o2 = fleet.serve_batch("a", &[image]).unwrap();
+        assert_eq!(o1.reload_cycles, 0);
+        assert_eq!(o1.classes, o2.classes);
+        assert_eq!(o1.logits, o2.logits);
+        assert!(o1.logits[0].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn twin_whole_macro_mode_loads_full_macros() {
+        let spec = MacroSpec::default();
+        let mut fleet = Fleet::new(&twin_cfg(4, false), &spec);
+        fleet.register("m", vgg9().scaled(0.1), false).unwrap();
+        let out = fleet.serve_batch("m", &[img()]).unwrap();
+        let need = fleet.registry().get("m").unwrap().macros_needed() as u64;
+        assert_eq!(out.reload_cycles, need * 256);
+        let snap = fleet.snapshot();
+        assert_eq!(snap.twin_load_cycles(), snap.reload_cycles);
+        // The twin's arrays really hold the weights: occupied cells match
+        // the packed footprint.
+        let used: usize = fleet
+            .registry()
+            .get("m")
+            .unwrap()
+            .weights
+            .as_ref()
+            .unwrap()
+            .used_cells();
+        let loaded: usize = fleet
+            .twin_macros()
+            .iter()
+            .map(|m| m.array.occupied_cells())
+            .sum();
+        assert_eq!(loaded, used);
+    }
+
+    #[test]
+    fn twin_paging_mirrors_charges_without_residency() {
+        let spec = MacroSpec::default();
+        let mut fleet = Fleet::new(&twin_cfg(4, false), &spec);
+        fleet.register("big", vgg9().scaled(0.3), false).unwrap(); // ≫ 4 macros
+        assert!(
+            fleet.registry().get("big").unwrap().weights.is_none(),
+            "oversized tenant can only page; its weights are never synthesized"
+        );
+        let out = fleet.serve_batch("big", &[img()]).unwrap();
+        assert!(out.reload_events > 0, "paging reloads every batch");
+        assert!(fleet.placed_mapping("big").is_none(), "paged tenant not materialized");
+        let snap = fleet.snapshot();
+        assert_eq!(snap.twin_load_cycles(), snap.reload_cycles);
+        assert_eq!(
+            snap.twin_stats.iter().map(|s| s.reloads).sum::<u64>(),
+            out.reload_events
+        );
+    }
+
+    #[test]
+    fn infer_twin_requires_twin_mode_and_residency() {
+        let spec = MacroSpec::default();
+        let mut analytic = Fleet::new(&cfg(2), &spec);
+        analytic.register("m", vgg9().scaled(0.04), false).unwrap();
+        analytic.serve_batch("m", &[img()]).unwrap();
+        assert!(analytic.infer_twin("m", &img()).is_err(), "analytic fleet has no twin");
+
+        let mut fleet = Fleet::new(&twin_cfg(2, true), &spec);
+        fleet.register("m", vgg9().scaled(0.04), false).unwrap();
+        assert!(fleet.infer_twin("m", &img()).is_err(), "not yet materialized");
+        fleet.serve_batch("m", &[img()]).unwrap();
+        let image = img();
+        let (class, logits) = fleet.infer_twin("m", &image).unwrap();
+        assert!(class < 10);
+        assert_eq!(logits.len(), 10);
+        // Agrees with the batch path for the same image.
+        let out = fleet.serve_batch("m", &[image]).unwrap();
+        assert_eq!(out.classes[0], class);
+        assert_eq!(out.logits[0], logits);
+        assert!(fleet.infer_twin("ghost", &img()).is_err());
+    }
+
+    #[test]
+    fn twin_eviction_rematerializes_victim_on_return() {
+        // a and b churn on a 1-macro twin pool (whole-macro): every swap
+        // rewrites the macro, and the books stay balanced throughout.
+        let spec = MacroSpec::default();
+        let mut fleet = Fleet::new(&twin_cfg(1, false), &spec);
+        fleet.register("a", vgg9().scaled(0.04), false).unwrap();
+        fleet.register("b", vgg9().scaled(0.03), false).unwrap();
+        fleet.serve_batch("a", &[img()]).unwrap();
+        let ob = fleet.serve_batch("b", &[img()]).unwrap();
+        assert_eq!(ob.evicted, vec!["a".to_string()]);
+        assert!(fleet.placed_mapping("a").is_none(), "victim's placement dropped");
+        assert!(fleet.placed_mapping("b").is_some());
+        let oa = fleet.serve_batch("a", &[img()]).unwrap();
+        assert_eq!(oa.evicted, vec!["b".to_string()]);
+        let snap = fleet.snapshot();
+        assert_eq!(snap.reload_cycles, 3 * 256);
+        assert_eq!(snap.twin_load_cycles(), snap.reload_cycles);
+        // The macro now holds exactly a's weights again.
+        let weights = fleet.registry().get("a").unwrap().weights.clone().unwrap();
+        let placed = fleet.placed_mapping("a").unwrap().clone();
+        for (bl, col) in weights.columns.iter().enumerate() {
+            let (mac, local) = placed.locate(bl);
+            assert_eq!(&fleet.twin_macros()[mac].read_column(local), col);
+        }
     }
 
     #[test]

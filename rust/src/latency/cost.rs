@@ -87,6 +87,24 @@ pub fn region_reload_cycles(bl_count: usize, spec: &MacroSpec) -> u64 {
     ceil_div(bl_count * spec.load_cycles_per_macro, spec.bitlines) as u64
 }
 
+/// Cycles to stream a multi-span placement's weights: **one column-serial
+/// write per span**, each costing [`region_reload_cycles`] of its width.
+///
+/// This is the quantity the fleet ledger charges for a hot-swap *and*
+/// what the digital twin's `CimMacro::load_columns` charges when the same
+/// spans are materialized — the two agree by construction because both
+/// sum the same per-span figure. On specs where `load_cycles_per_macro ==
+/// bitlines` (the paper's macro) this equals the contiguous cost of the
+/// same footprint; on coarser write granularities each extra span can pay
+/// one more rounding cycle, which is exactly the fragmentation penalty a
+/// defragmenter would reclaim.
+pub fn spans_reload_cycles(bl_counts: impl IntoIterator<Item = usize>, spec: &MacroSpec) -> u64 {
+    bl_counts
+        .into_iter()
+        .map(|n| region_reload_cycles(n, spec))
+        .sum()
+}
+
 /// Cost of a single layer on the given macro.
 pub fn layer_cost(layer: &ConvLayer, spec: &MacroSpec) -> LayerCost {
     let cpb = spec.channels_per_bl(layer.kernel);
@@ -234,6 +252,33 @@ mod tests {
         let c = model_cost(&vgg9().scaled(0.3), &s);
         assert!(c.region_reload_cycles(&s) <= c.reload_cycles(&s));
         assert_eq!(region_reload_cycles(c.bls, &s), c.region_reload_cycles(&s));
+    }
+
+    #[test]
+    fn spans_reload_matches_contiguous_on_paper_spec() {
+        // load_cycles_per_macro == bitlines → per-column cost is exact, so
+        // splitting a footprint into spans never changes the total.
+        let s = spec();
+        assert_eq!(spans_reload_cycles([108], &s), region_reload_cycles(108, &s));
+        assert_eq!(spans_reload_cycles([100, 8], &s), 108);
+        assert_eq!(spans_reload_cycles([1; 108], &s), 108);
+        assert_eq!(spans_reload_cycles(std::iter::empty(), &s), 0);
+    }
+
+    #[test]
+    fn spans_reload_pays_rounding_per_span_on_coarse_specs() {
+        // 128 load cycles over 256 bitlines: each span rounds up on its
+        // own, so fragmentation costs extra cycles — the twin-observable
+        // penalty defrag exists to reclaim.
+        let s = MacroSpec {
+            load_cycles_per_macro: 128,
+            ..MacroSpec::default()
+        };
+        assert_eq!(region_reload_cycles(6, &s), 3);
+        assert_eq!(spans_reload_cycles([6], &s), 3);
+        assert_eq!(spans_reload_cycles([3, 3], &s), 4);
+        assert_eq!(spans_reload_cycles([1; 6], &s), 6);
+        assert!(spans_reload_cycles([3, 3], &s) >= region_reload_cycles(6, &s));
     }
 
     #[test]

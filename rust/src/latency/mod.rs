@@ -20,7 +20,9 @@
 
 pub mod cost;
 
-pub use cost::{layer_cost, model_cost, region_reload_cycles, LayerCost, ModelCost};
+pub use cost::{
+    layer_cost, model_cost, region_reload_cycles, spans_reload_cycles, LayerCost, ModelCost,
+};
 
 #[cfg(test)]
 mod tests {

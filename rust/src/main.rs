@@ -12,7 +12,7 @@
 use std::path::{Path, PathBuf};
 
 use cim_adapt::arch::by_name;
-use cim_adapt::config::{FleetConfig, MacroSpec, MorphConfig, ServeConfig};
+use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec, MorphConfig, ServeConfig};
 use cim_adapt::coordinator::server::{Backend, EdgeServer};
 use cim_adapt::data::SynthCifar;
 use cim_adapt::fleet::{EvictionPolicy, FleetServer};
@@ -46,12 +46,12 @@ fn main() -> anyhow::Result<()> {
                     .cmd("cost --model M", "analytic cost columns for a model")
                     .cmd("serve [--requests N] [--batch B]", "edge-serving demo over PJRT")
                     .cmd(
-                        "fleet [--macros N] [--bl B] [--requests N] [--policy lru|cost] [--coresident]",
-                        "multi-tenant hot-swap serving demo (sim fleet)",
+                        "fleet [--macros N] [--bl B] [--requests N] [--policy lru|cost] [--coresident] [--twin]",
+                        "multi-tenant hot-swap serving demo (--twin: run on the simulated macros)",
                     )
                     .cmd(
-                        "inspect --model M [--base-bl N]",
-                        "per-layer CIM mapping details (optionally packed at a BL offset)",
+                        "inspect --model M [--base-bl N] [--spans m:s:c,...]",
+                        "per-layer CIM mapping details (--spans: render a multi-span placement)",
                     )
                     .render()
             );
@@ -229,6 +229,11 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         policy: EvictionPolicy::parse(args.str_or("policy", "lru"))
             .ok_or_else(|| anyhow::anyhow!("--policy expects 'lru' or 'cost-weighted'"))?,
         coresident: args.flag("coresident"),
+        execution: if args.flag("twin") {
+            ExecutionMode::Twin
+        } else {
+            ExecutionMode::Analytic
+        },
         ..FleetConfig::default()
     };
     let target_bl = args.usize_or("bl", 512);
@@ -259,7 +264,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         handle.register(m, out.arch, false)?;
     }
     println!(
-        "fleet: {} macros, policy {}, max batch {}, placement {}",
+        "fleet: {} macros, policy {}, max batch {}, placement {}, execution {}",
         cfg.num_macros,
         cfg.policy.as_str(),
         cfg.max_batch,
@@ -267,7 +272,8 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             "co-resident (bitline regions)"
         } else {
             "whole-macro"
-        }
+        },
+        cfg.execution.as_str()
     );
 
     let t0 = std::time::Instant::now();
@@ -297,6 +303,20 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         commas(snap.macro_load_cycles()),
         commas(snap.tenant_load_cycles())
     );
+    if !snap.twin_stats.is_empty() {
+        println!(
+            "twin: {} load cycles charged on the simulated macros ({} the analytic ledger), \
+             {} executed compute cycles, {} ADC conversions",
+            commas(snap.twin_load_cycles()),
+            if snap.twin_load_cycles() == snap.reload_cycles {
+                "exactly matching"
+            } else {
+                "DIVERGED from"
+            },
+            commas(snap.twin_stats.iter().map(|s| s.compute_cycles).sum::<u64>()),
+            commas(snap.twin_stats.iter().map(|s| s.conversions).sum::<u64>())
+        );
+    }
     println!(
         "fleet utilization {:.1}% of {} pool bitlines (occupied per macro: {:?})",
         snap.utilization() * 100.0,
@@ -347,6 +367,38 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
     let model = args.str_or("model", "vgg9");
     let spec = MacroSpec::default();
     let arch = by_name(model)?;
+    // --spans renders the model placed over an explicit multi-span layout
+    // ("macro:bl_start:bl_count,..."), the shape a fragmented co-resident
+    // fleet placement produces.
+    if let Some(spans_arg) = args.get("spans") {
+        let mut spans = Vec::new();
+        for part in spans_arg.split(',') {
+            let fields: Vec<usize> = part
+                .split(':')
+                .map(|f| {
+                    f.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad span '{part}' (want macro:start:count)"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+            anyhow::ensure!(fields.len() == 3, "bad span '{part}' (want macro:start:count)");
+            spans.push(cim_adapt::mapping::Region {
+                macro_id: fields[0],
+                bl_start: fields[1],
+                bl_count: fields[2],
+            });
+        }
+        let placed = cim_adapt::mapping::PlacedMapping::place_model(&arch, &spec, spans)?;
+        println!(
+            "model {model}: {} columns over {} spans on macros {:?} ({} occupied cells)",
+            commas(placed.total_bls() as u64),
+            placed.spans.len(),
+            placed.macros(),
+            commas(placed.used_cells() as u64)
+        );
+        print!("{}", cim_adapt::mapping::render_placed_ascii(&placed, 64, 8));
+        return Ok(());
+    }
     // --base-bl packs at a bitline offset — the layout a co-resident
     // fleet placement produces when the model starts mid-macro.
     let base_bl = args.usize_or("base-bl", 0);

@@ -13,14 +13,19 @@
 //! `(macro_id, bl_start, bl_count)` span and [`RegionAllocator`] manages
 //! per-macro free-region lists, so the fleet can co-locate two models on
 //! one macro's columns. [`pack_model_at`] produces the matching layout
-//! for a packing that starts mid-macro.
+//! for a packing that starts mid-macro, and [`placed`] generalizes it to
+//! N spans: a [`PlacedMapping`] lays the model's logical column sequence
+//! across an ordered list of disjoint regions — the representation a
+//! fragmented fleet placement materializes onto the digital twin.
 
 pub mod occupancy;
 pub mod packer;
+pub mod placed;
 pub mod region;
 pub mod viz;
 
 pub use occupancy::OccupancyGrid;
 pub use packer::{pack_model, pack_model_at, ColumnAssignment, LayerMapping, ModelMapping};
+pub use placed::{PlacedMapping, PlacedRun};
 pub use region::{Region, RegionAllocator};
-pub use viz::{render_ascii, render_ppm};
+pub use viz::{render_ascii, render_placed_ascii, render_ppm};

@@ -1,6 +1,7 @@
 //! Per-macro occupancy grids — the data behind Figs. 12–13.
 
 use super::packer::ModelMapping;
+use super::placed::PlacedMapping;
 
 /// Cell ownership for one macro: `grid[wl][bl]` = layer index + 1, or 0
 /// for an empty cell.
@@ -29,6 +30,34 @@ impl OccupancyGrid {
             .collect();
         for c in map.columns() {
             let g = &mut grids[c.macro_id - first];
+            for r in 0..c.rows {
+                g.grid[r * bl + c.local_bl] = (c.layer + 1) as u16;
+            }
+        }
+        grids
+    }
+
+    /// Build grids for every **physical** macro a multi-span placement
+    /// touches (ascending macro id). Cells between a macro's spans stay
+    /// empty — a co-resident tenant's grid shows exactly the columns it
+    /// holds, which is what makes fragmentation visible in Figs. 12–13
+    /// style renderings.
+    pub fn from_placed(placed: &PlacedMapping) -> Vec<OccupancyGrid> {
+        let (wl, bl) = (placed.mapping.spec.wordlines, placed.mapping.spec.bitlines);
+        let macros = placed.macros();
+        let index: std::collections::BTreeMap<usize, usize> =
+            macros.iter().enumerate().map(|(i, &m)| (m, i)).collect();
+        let mut grids: Vec<OccupancyGrid> = macros
+            .iter()
+            .map(|&m| OccupancyGrid {
+                macro_id: m,
+                wordlines: wl,
+                bitlines: bl,
+                grid: vec![0; wl * bl],
+            })
+            .collect();
+        for c in placed.columns() {
+            let g = &mut grids[index[&c.macro_id]];
             for r in 0..c.rows {
                 g.grid[r * bl + c.local_bl] = (c.layer + 1) as u16;
             }
@@ -110,6 +139,31 @@ mod tests {
         let total_fill: f64 =
             grids.iter().map(|g| g.fill()).sum::<f64>() / grids.len() as f64;
         assert!((total_fill - map.occupancy()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn placed_grids_show_only_held_spans() {
+        use crate::mapping::{PlacedMapping, Region};
+        let spec = MacroSpec::default();
+        let model = vgg9().scaled(0.04); // 108 columns
+        let spans = vec![
+            Region { macro_id: 2, bl_start: 100, bl_count: 50 },
+            Region { macro_id: 0, bl_start: 0, bl_count: 58 },
+        ];
+        let placed = PlacedMapping::place_model(&model, &spec, spans).unwrap();
+        let grids = OccupancyGrid::from_placed(&placed);
+        assert_eq!(grids.len(), 2);
+        assert_eq!((grids[0].macro_id, grids[1].macro_id), (0, 2));
+        // Cells outside the held spans stay empty.
+        assert!(grids[1].owner(0, 99).is_none());
+        assert!(grids[1].owner(0, 100).is_some());
+        assert!(grids[0].owner(0, 58).is_none());
+        // Total occupied cells equal the placement's used cells.
+        let cells: usize = grids
+            .iter()
+            .map(|g| (g.fill() * (g.wordlines * g.bitlines) as f64).round() as usize)
+            .sum();
+        assert_eq!(cells, placed.used_cells());
     }
 
     #[test]

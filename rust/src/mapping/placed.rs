@@ -1,0 +1,384 @@
+//! Multi-span placed mappings — a model's column layout over an ordered
+//! list of bitline [`Region`]s.
+//!
+//! [`pack_model_at`](crate::mapping::pack_model_at) generalizes the
+//! packer from base 0 to one contiguous base; a [`PlacedMapping`]
+//! generalizes it to **N spans**: the model's logical column sequence
+//! (`0..total_bls`, exactly the order `ModelMapping::columns` yields) is
+//! laid across the concatenation of the spans, so a *fragmented*
+//! fleet placement — the layout region-granular allocation produces on a
+//! churned pool — finally has a representable mapping. This is what lets
+//! the fleet stream a tenant's weight columns into the digital twin's
+//! macros span by span and run inference over the placed layout.
+//!
+//! Conventions: in every [`ColumnAssignment`] this module produces,
+//! `global_bl` is the **logical** column index (position in the model's
+//! canonical base-0 packing) while `macro_id`/`local_bl` are the
+//! **physical** coordinates the spans assign. A contiguous placement at
+//! base `b` ([`PlacedMapping::from_contiguous`]) reproduces
+//! `pack_model_at(model, spec, b)`'s physical coordinates exactly.
+
+use crate::arch::ModelArch;
+use crate::config::MacroSpec;
+
+use super::packer::{pack_model, ColumnAssignment, ModelMapping};
+use super::region::Region;
+
+/// One contiguous physical stretch of a logical column range (the unit a
+/// macro pass or a `load_columns` call can cover in one go).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlacedRun {
+    /// Physical macro hosting the run.
+    pub macro_id: usize,
+    /// First physical bitline of the run (local to the macro).
+    pub bl_start: usize,
+    /// Columns in the run.
+    pub bl_count: usize,
+    /// Logical column index of the run's first column.
+    pub logical_start: usize,
+}
+
+/// A model packed across an ordered list of disjoint bitline spans.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacedMapping {
+    /// The model's canonical packing (base 0): logical column space.
+    pub mapping: ModelMapping,
+    /// Ordered spans; widths sum to `mapping.total_bls`.
+    pub spans: Vec<Region>,
+    /// Exclusive prefix sums: `starts[i]` = logical column of span `i`'s
+    /// first column.
+    starts: Vec<usize>,
+}
+
+impl PlacedMapping {
+    /// Wrap a canonical (base-0) mapping over `spans`. Fails unless the
+    /// spans are in-bounds for the spec's macros, pairwise disjoint, and
+    /// sum to exactly `mapping.total_bls` columns.
+    pub fn new(mapping: ModelMapping, spans: Vec<Region>) -> anyhow::Result<PlacedMapping> {
+        anyhow::ensure!(
+            mapping.base_bl == 0,
+            "placed mappings wrap the canonical base-0 packing (got base {})",
+            mapping.base_bl
+        );
+        let total: usize = spans.iter().map(|r| r.bl_count).sum();
+        anyhow::ensure!(
+            total == mapping.total_bls,
+            "spans cover {total} columns but the model needs {}",
+            mapping.total_bls
+        );
+        for (i, r) in spans.iter().enumerate() {
+            anyhow::ensure!(r.bl_count > 0, "span {i} is empty");
+            anyhow::ensure!(
+                r.bl_end() <= mapping.spec.bitlines,
+                "span {i} ({r:?}) overflows a {}-bitline macro",
+                mapping.spec.bitlines
+            );
+            for (j, other) in spans.iter().enumerate().skip(i + 1) {
+                anyhow::ensure!(
+                    !r.overlaps(other),
+                    "span {i} ({r:?}) overlaps span {j} ({other:?})"
+                );
+            }
+        }
+        let mut starts = Vec::with_capacity(spans.len());
+        let mut acc = 0usize;
+        for r in &spans {
+            starts.push(acc);
+            acc += r.bl_count;
+        }
+        Ok(PlacedMapping {
+            mapping,
+            spans,
+            starts,
+        })
+    }
+
+    /// Pack `model` and place it over `spans`.
+    pub fn place_model(
+        model: &ModelArch,
+        spec: &MacroSpec,
+        spans: Vec<Region>,
+    ) -> anyhow::Result<PlacedMapping> {
+        PlacedMapping::new(pack_model(model, spec), spans)
+    }
+
+    /// The degenerate contiguous placement starting at global bitline
+    /// `base_bl` — one span per macro the range touches. Physically
+    /// identical to `pack_model_at(model, spec, base_bl)`.
+    pub fn from_contiguous(
+        model: &ModelArch,
+        spec: &MacroSpec,
+        base_bl: usize,
+    ) -> anyhow::Result<PlacedMapping> {
+        let mapping = pack_model(model, spec);
+        let bpm = spec.bitlines;
+        let mut spans = Vec::new();
+        let mut pos = base_bl;
+        let end = base_bl + mapping.total_bls;
+        while pos < end {
+            let macro_id = pos / bpm;
+            let local = pos % bpm;
+            let take = (bpm - local).min(end - pos);
+            spans.push(Region {
+                macro_id,
+                bl_start: local,
+                bl_count: take,
+            });
+            pos += take;
+        }
+        PlacedMapping::new(mapping, spans)
+    }
+
+    /// Logical columns the placement covers.
+    pub fn total_bls(&self) -> usize {
+        self.mapping.total_bls
+    }
+
+    /// Span index containing logical column `bl`.
+    fn span_of(&self, bl: usize) -> usize {
+        debug_assert!(bl < self.mapping.total_bls);
+        self.starts.partition_point(|&s| s <= bl) - 1
+    }
+
+    /// Physical `(macro_id, local_bl)` of logical column `bl`.
+    pub fn locate(&self, bl: usize) -> (usize, usize) {
+        let i = self.span_of(bl);
+        let r = &self.spans[i];
+        (r.macro_id, r.bl_start + (bl - self.starts[i]))
+    }
+
+    /// Spans with their logical column ranges, in logical order.
+    pub fn span_ranges(&self) -> impl Iterator<Item = (Region, std::ops::Range<usize>)> + '_ {
+        self.spans
+            .iter()
+            .zip(&self.starts)
+            .map(|(r, &s)| (*r, s..s + r.bl_count))
+    }
+
+    /// Split the logical range `[logical_start, logical_start + len)` into
+    /// maximal physically-contiguous runs (at most one per span touched).
+    pub fn physical_runs(&self, logical_start: usize, len: usize) -> Vec<PlacedRun> {
+        assert!(
+            logical_start + len <= self.mapping.total_bls,
+            "run [{logical_start}, {}) outside {} logical columns",
+            logical_start + len,
+            self.mapping.total_bls
+        );
+        let mut out = Vec::new();
+        if len == 0 {
+            return out;
+        }
+        let mut pos = logical_start;
+        let end = logical_start + len;
+        let mut si = self.span_of(pos);
+        while pos < end {
+            let r = &self.spans[si];
+            let off = pos - self.starts[si];
+            let take = (r.bl_count - off).min(end - pos);
+            out.push(PlacedRun {
+                macro_id: r.macro_id,
+                bl_start: r.bl_start + off,
+                bl_count: take,
+                logical_start: pos,
+            });
+            pos += take;
+            si += 1;
+        }
+        out
+    }
+
+    /// Every column assignment: `global_bl` logical, `macro_id`/`local_bl`
+    /// physical (see the module docs).
+    pub fn columns(&self) -> impl Iterator<Item = ColumnAssignment> + '_ {
+        self.mapping.columns().map(move |c| {
+            let (macro_id, local_bl) = self.locate(c.global_bl);
+            ColumnAssignment {
+                macro_id,
+                local_bl,
+                ..c
+            }
+        })
+    }
+
+    /// Distinct physical macros the placement touches, ascending.
+    pub fn macros(&self) -> Vec<usize> {
+        let mut ms: Vec<usize> = self.spans.iter().map(|r| r.macro_id).collect();
+        ms.sort_unstable();
+        ms.dedup();
+        ms
+    }
+
+    /// Cells the model actually occupies (spans included or not, the
+    /// weights are the same — placement moves columns, never resizes them).
+    pub fn used_cells(&self) -> usize {
+        self.mapping
+            .layers
+            .iter()
+            .map(|lm| lm.rows_per_segment.iter().sum::<usize>() * lm.c_out)
+            .sum()
+    }
+
+    /// Occupied cells per span, parallel to [`PlacedMapping::spans`] —
+    /// sums to [`PlacedMapping::used_cells`] (every weight cell lands in
+    /// exactly one span).
+    pub fn span_footprints(&self) -> Vec<usize> {
+        let mut cells = vec![0usize; self.spans.len()];
+        for c in self.mapping.columns() {
+            cells[self.span_of(c.global_bl)] += c.rows;
+        }
+        cells
+    }
+
+    /// Occupied cells per distinct physical macro, as sorted
+    /// `(macro_id, cells)` pairs — the span-aware counterpart of
+    /// [`ModelMapping::macro_footprint`].
+    pub fn macro_footprint(&self) -> Vec<(usize, usize)> {
+        let macros = self.macros();
+        let mut cells: std::collections::BTreeMap<usize, usize> =
+            macros.into_iter().map(|m| (m, 0)).collect();
+        for c in self.columns() {
+            *cells.get_mut(&c.macro_id).expect("column in a placed macro") += c.rows;
+        }
+        cells.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vgg9;
+    use crate::mapping::pack_model_at;
+
+    fn spec() -> MacroSpec {
+        MacroSpec::default()
+    }
+
+    /// A fractional-macro tenant (108 columns over the default spec).
+    fn small() -> ModelArch {
+        vgg9().scaled(0.04)
+    }
+
+    #[test]
+    fn contiguous_placement_matches_pack_model_at() {
+        for base in [0usize, 100, 512, 700] {
+            let placed = PlacedMapping::from_contiguous(&small(), &spec(), base).unwrap();
+            let at = pack_model_at(&small(), &spec(), base);
+            let placed_cols: Vec<_> = placed.columns().collect();
+            let at_cols: Vec<_> = at.columns().collect();
+            assert_eq!(placed_cols.len(), at_cols.len());
+            for (p, a) in placed_cols.iter().zip(&at_cols) {
+                // Physical coordinates agree; `global_bl` is logical for
+                // the placed mapping, absolute for the offset packing.
+                assert_eq!(p.macro_id, a.macro_id, "base {base}");
+                assert_eq!(p.local_bl, a.local_bl, "base {base}");
+                assert_eq!(p.global_bl + base, a.global_bl, "base {base}");
+                assert_eq!(
+                    (p.layer, p.segment, p.filter, p.rows),
+                    (a.layer, a.segment, a.filter, a.rows)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fragmented_spans_cover_all_columns_disjointly() {
+        let model = small();
+        let total = pack_model(&model, &spec()).total_bls; // 108
+        assert_eq!(total, 108);
+        let spans = vec![
+            Region { macro_id: 1, bl_start: 200, bl_count: 56 },
+            Region { macro_id: 0, bl_start: 10, bl_count: 30 },
+            Region { macro_id: 1, bl_start: 0, bl_count: 22 },
+        ];
+        let placed = PlacedMapping::place_model(&model, &spec(), spans).unwrap();
+        let mut seen = std::collections::BTreeSet::new();
+        for c in placed.columns() {
+            assert!(seen.insert((c.macro_id, c.local_bl)), "physical column reused");
+        }
+        assert_eq!(seen.len(), total);
+        assert_eq!(placed.macros(), vec![0, 1]);
+        // Logical order walks the spans in the given order.
+        assert_eq!(placed.locate(0), (1, 200));
+        assert_eq!(placed.locate(55), (1, 255));
+        assert_eq!(placed.locate(56), (0, 10));
+        assert_eq!(placed.locate(86), (1, 0));
+        assert_eq!(placed.locate(107), (1, 21));
+    }
+
+    #[test]
+    fn span_footprints_sum_to_used_cells() {
+        let model = small();
+        let spans = vec![
+            Region { macro_id: 0, bl_start: 0, bl_count: 40 },
+            Region { macro_id: 2, bl_start: 100, bl_count: 68 },
+        ];
+        let placed = PlacedMapping::place_model(&model, &spec(), spans).unwrap();
+        let fp = placed.span_footprints();
+        assert_eq!(fp.len(), 2);
+        assert!(fp.iter().all(|&c| c > 0));
+        assert_eq!(fp.iter().sum::<usize>(), placed.used_cells());
+        // The macro footprint partitions the same cells by physical macro.
+        let mf = placed.macro_footprint();
+        assert_eq!(mf.iter().map(|&(_, c)| c).sum::<usize>(), placed.used_cells());
+        assert_eq!(mf.iter().map(|&(m, _)| m).collect::<Vec<_>>(), vec![0, 2]);
+    }
+
+    #[test]
+    fn physical_runs_split_at_span_boundaries_only() {
+        let model = small();
+        let spans = vec![
+            Region { macro_id: 0, bl_start: 50, bl_count: 58 },
+            Region { macro_id: 3, bl_start: 0, bl_count: 50 },
+        ];
+        let placed = PlacedMapping::place_model(&model, &spec(), spans).unwrap();
+        let run = |macro_id, bl_start, bl_count, logical_start| PlacedRun {
+            macro_id,
+            bl_start,
+            bl_count,
+            logical_start,
+        };
+        // A range inside span 0 is one run.
+        let runs = placed.physical_runs(10, 20);
+        assert_eq!(runs, vec![run(0, 60, 20, 10)]);
+        // A range crossing the boundary splits in two.
+        let runs = placed.physical_runs(50, 20);
+        assert_eq!(runs, vec![run(0, 100, 8, 50), run(3, 0, 12, 58)]);
+        // Runs tile the whole logical space.
+        let all = placed.physical_runs(0, placed.total_bls());
+        assert_eq!(all.iter().map(|r| r.bl_count).sum::<usize>(), 108);
+        assert!(placed.physical_runs(0, 0).is_empty());
+    }
+
+    #[test]
+    fn invalid_spans_rejected() {
+        let model = small();
+        let s = spec();
+        // Wrong total.
+        let err = PlacedMapping::place_model(
+            &model,
+            &s,
+            vec![Region { macro_id: 0, bl_start: 0, bl_count: 107 }],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("107"), "{err}");
+        // Overlapping spans.
+        let err = PlacedMapping::place_model(
+            &model,
+            &s,
+            vec![
+                Region { macro_id: 0, bl_start: 0, bl_count: 60 },
+                Region { macro_id: 0, bl_start: 59, bl_count: 48 },
+            ],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("overlaps"), "{err}");
+        // Span overflowing the macro.
+        let err = PlacedMapping::place_model(
+            &model,
+            &s,
+            vec![Region { macro_id: 0, bl_start: 200, bl_count: 108 }],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("overflows"), "{err}");
+    }
+}

@@ -9,6 +9,7 @@ use std::io::Write;
 use std::path::Path;
 
 use super::occupancy::OccupancyGrid;
+use super::placed::PlacedMapping;
 
 /// Distinct layer palette (RGB).
 const PALETTE: [[u8; 3]; 12] = [
@@ -94,6 +95,26 @@ pub fn render_ascii(grids: &[OccupancyGrid], cols: usize, rows: usize) -> String
     out
 }
 
+/// Span-aware ASCII rendering of a multi-span placement: one header line
+/// per span (logical range → physical location), then the per-macro
+/// occupancy grids with cells outside the held spans left empty — the
+/// fragmentation a churned co-resident pool produces, made visible.
+pub fn render_placed_ascii(placed: &PlacedMapping, cols: usize, rows: usize) -> String {
+    let mut out = String::new();
+    for (i, (r, range)) in placed.span_ranges().enumerate() {
+        out.push_str(&format!(
+            "span {i}: logical [{}, {}) -> macro {} BL [{}, {})\n",
+            range.start,
+            range.end,
+            r.macro_id,
+            r.bl_start,
+            r.bl_end()
+        ));
+    }
+    out.push_str(&render_ascii(&OccupancyGrid::from_placed(placed), cols, rows));
+    out
+}
+
 /// Per-layer legend lines for the ASCII rendering.
 pub fn legend(num_layers: usize) -> String {
     (0..num_layers)
@@ -136,6 +157,24 @@ mod tests {
         assert!(s.contains("macro  0"));
         assert!(s.contains('A'), "layer 1 glyph present:\n{s}");
         assert!(s.contains("fill"));
+    }
+
+    #[test]
+    fn placed_ascii_lists_spans_and_macros() {
+        use crate::mapping::{PlacedMapping, Region};
+        let placed = PlacedMapping::place_model(
+            &vgg9().scaled(0.04),
+            &MacroSpec::default(),
+            vec![
+                Region { macro_id: 1, bl_start: 128, bl_count: 100 },
+                Region { macro_id: 0, bl_start: 0, bl_count: 8 },
+            ],
+        )
+        .unwrap();
+        let s = render_placed_ascii(&placed, 32, 4);
+        assert!(s.contains("span 0: logical [0, 100) -> macro 1 BL [128, 228)"), "{s}");
+        assert!(s.contains("span 1: logical [100, 108) -> macro 0 BL [0, 8)"), "{s}");
+        assert!(s.contains("macro  0") && s.contains("macro  1"));
     }
 
     #[test]

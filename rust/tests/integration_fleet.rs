@@ -4,7 +4,7 @@
 //! Σ per-macro `MacroStats::load_cycles`).
 
 use cim_adapt::arch::by_name;
-use cim_adapt::config::{FleetConfig, MacroSpec, MorphConfig};
+use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec, MorphConfig};
 use cim_adapt::data::SynthCifar;
 use cim_adapt::fleet::{EvictionPolicy, Fleet, FleetServer};
 use cim_adapt::mapping::pack_model;
@@ -175,6 +175,125 @@ fn coresident_tenants_share_a_macro_with_exact_attribution() {
         by_name_stats["a"].compute_cycles + by_name_stats["b"].compute_cycles,
         snap.aggregate().compute_cycles
     );
+}
+
+#[test]
+fn twin_and_analytic_ledgers_agree_on_fragmented_coresident_swap() {
+    // The acceptance scenario for twin-driven execution: a churned
+    // 1-macro co-resident pool fragments tenant c's placement into two
+    // regions, the twin materializes both spans with real weight columns,
+    // and the twin's charged load cycles equal the analytic ledger's
+    // per-region reload-cycle sum *exactly* — in the twin fleet and
+    // against an identical analytically-executed fleet.
+    let spec_ = spec();
+    let mk = |execution: ExecutionMode| {
+        let cfg = FleetConfig {
+            num_macros: 1,
+            coresident: true,
+            execution,
+            ..cfg(EvictionPolicy::Lru)
+        };
+        let mut fleet = Fleet::new(&cfg, &spec_);
+        // 108 + 82 + 139 BLs on a 256-column macro: c forces a's eviction
+        // and lands fragmented around the surviving b.
+        fleet.register("a", by_name("vgg9").unwrap().scaled(0.04), false).unwrap();
+        fleet.register("b", by_name("vgg9").unwrap().scaled(0.03), false).unwrap();
+        fleet.register("c", by_name("vgg9").unwrap().scaled(0.05), false).unwrap();
+        let batch = vec![img(0)];
+        fleet.serve_batch("a", &batch).unwrap();
+        fleet.serve_batch("b", &batch).unwrap();
+        let oc = fleet.serve_batch("c", &batch).unwrap();
+        assert_eq!(oc.evicted, vec!["a".to_string()]);
+        (fleet, oc)
+    };
+
+    let (mut twin_fleet, oc) = mk(ExecutionMode::Twin);
+    let (na, nb, nc) = (108u64, 82, 139);
+    assert_eq!(
+        twin_fleet.registry().get("c").unwrap().bls_needed() as u64,
+        nc
+    );
+    // c's placement is genuinely fragmented: two disjoint spans.
+    let placed = twin_fleet.placed_mapping("c").unwrap().clone();
+    assert_eq!(placed.spans.len(), 2, "churn must fragment c: {:?}", placed.spans);
+    assert_eq!(oc.reload_events, 2, "one load event per span");
+    assert_eq!(oc.reload_cycles, nc, "region cycles sum to the footprint");
+    assert!(twin_fleet.is_resident("b"), "co-resident b survives");
+
+    let snap = twin_fleet.snapshot();
+    assert_eq!(snap.reload_cycles, na + nb + nc);
+    // The headline agreement: twin charge == analytic ledger, exactly.
+    assert_eq!(snap.twin_load_cycles(), snap.reload_cycles);
+    assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+    assert_eq!(snap.reload_cycles, snap.tenant_load_cycles());
+    assert_eq!(
+        snap.twin_stats.iter().map(|s| s.reloads).sum::<u64>(),
+        4,
+        "a + b + two spans of c"
+    );
+
+    // The spans hold c's real weight columns (readback across fragments).
+    let weights = twin_fleet.registry().get("c").unwrap().weights.clone().unwrap();
+    for (bl, col) in weights.columns.iter().enumerate() {
+        let (mac, local) = placed.locate(bl);
+        assert_eq!(&twin_fleet.twin_macros()[mac].read_column(local), col, "column {bl}");
+    }
+
+    // Twin inference over the fragmented layout is deterministic and
+    // reachable through both the batch path and infer_twin.
+    let image = img(7);
+    let (class, logits) = twin_fleet.infer_twin("c", &image).unwrap();
+    let out = twin_fleet.serve_batch("c", &[image]).unwrap();
+    assert_eq!(out.classes[0], class);
+    assert_eq!(out.logits[0], logits);
+    assert!(logits.iter().all(|v| v.is_finite()));
+
+    // Analytic execution books the same placement cycles — the twin
+    // changed *what runs*, never *what is charged*.
+    let (analytic_fleet, oc_analytic) = mk(ExecutionMode::Analytic);
+    assert_eq!(oc_analytic.reload_cycles, oc.reload_cycles);
+    let analytic_snap = analytic_fleet.snapshot();
+    assert_eq!(analytic_snap.reload_cycles, na + nb + nc);
+    assert!(analytic_snap.twin_stats.is_empty(), "no twin pool when analytic");
+}
+
+#[test]
+fn twin_fleet_server_roundtrip_keeps_books_balanced() {
+    // The threaded dispatcher path with twin execution: tagged submits,
+    // per-model batching, hot-swaps materializing onto the twin — and the
+    // final snapshot's twin/ledger agreement survives the whole run.
+    let spec_ = spec();
+    let cfg = FleetConfig {
+        num_macros: 2,
+        max_batch: 4,
+        batch_timeout_us: 300,
+        coresident: true,
+        execution: ExecutionMode::Twin,
+        ..FleetConfig::default()
+    };
+    let h = FleetServer::start(&cfg, &spec_);
+    h.register("a", by_name("vgg9").unwrap().scaled(0.04), false).unwrap();
+    h.register("b", by_name("vgg9").unwrap().scaled(0.03), false).unwrap();
+    let total = 24usize;
+    let mut tickets = Vec::with_capacity(total);
+    for k in 0..total {
+        let model = ["a", "b"][k % 2];
+        tickets.push(h.submit(model, img(k)).unwrap());
+    }
+    for t in tickets {
+        let r = t.wait().unwrap();
+        assert!(r.class < 10);
+        assert_eq!(r.logits.len(), 10);
+    }
+    let (m, snap) = h.shutdown();
+    assert_eq!(m.completed, total as u64);
+    assert_eq!(snap.execution, ExecutionMode::Twin);
+    assert_eq!(snap.twin_load_cycles(), snap.reload_cycles);
+    assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+    assert_eq!(snap.reload_cycles, (108 + 82) as u64, "one partial swap each");
+    // The twin really computed: executed passes and conversions are on
+    // the books (the analytic per-macro ledger never sees pass counts).
+    assert!(snap.twin_stats.iter().map(|s| s.conversions).sum::<u64>() > 0);
 }
 
 #[test]

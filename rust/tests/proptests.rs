@@ -4,10 +4,10 @@
 
 use cim_adapt::arch::{by_name, vgg9, ConvLayer, LayerKind, ModelArch};
 use cim_adapt::cim::{Adc, CimMacro, WeightCell};
-use cim_adapt::config::{FleetConfig, MacroSpec, MorphConfig};
-use cim_adapt::fleet::Fleet;
-use cim_adapt::latency::{layer_cost, model_cost};
-use cim_adapt::mapping::pack_model;
+use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec, MorphConfig};
+use cim_adapt::fleet::{Fleet, ModelWeights};
+use cim_adapt::latency::{layer_cost, model_cost, spans_reload_cycles};
+use cim_adapt::mapping::{pack_model, PlacedMapping, RegionAllocator};
 use cim_adapt::morph::expand::search_expansion_ratio;
 use cim_adapt::quant::lsq::{lsq_quantize, LsqTensor};
 use cim_adapt::quant::psum::{quantize_psum, segment_inputs};
@@ -281,6 +281,120 @@ fn prop_json_trailing_garbage_error_points_at_it() {
                 Err(e) => e.pos == dumped.len(),
                 Ok(_) => false,
             }
+        },
+    );
+}
+
+// ---- placed mappings: multi-span packing preserves the weights -------------
+
+#[test]
+fn prop_placed_mapping_preserves_every_weight_cell() {
+    // Over random fragmentations of a pool (blockers allocated, alternate
+    // ones freed, tenant allocated across the holes):
+    //   1. loading the placed spans into real macros and reading back per
+    //      logical column reproduces the packed weight columns exactly —
+    //      and matches a contiguous base-0 packing's cells,
+    //   2. per-span footprints sum to the model's used cells,
+    //   3. the twin's charged load cycles equal `spans_reload_cycles`.
+    let spec = MacroSpec::default();
+    check(
+        "placed spans preserve cells + footprints + load cycles",
+        cases(20),
+        pairs(f32s(0.03, 0.08), vecs(usizes(1..120), 0..6)),
+        |(scale, blockers)| {
+            let arch = vgg9().scaled(*scale as f64);
+            let mapping = pack_model(&arch, &spec);
+            let total = mapping.total_bls;
+            let num_macros = total / spec.bitlines + 2;
+            // Fragment: allocate blockers, free every other one.
+            let mut alloc = RegionAllocator::new(num_macros, spec.bitlines);
+            let held: Vec<_> = blockers.iter().filter_map(|&b| alloc.alloc(b)).collect();
+            for (i, r) in held.iter().enumerate() {
+                if i % 2 == 1 {
+                    alloc.release(r);
+                }
+            }
+            let Some(spans) = alloc.alloc(total) else {
+                return true; // blockers left too little room — vacuous
+            };
+            let span_widths: Vec<usize> = spans.iter().map(|r| r.bl_count).collect();
+            let weights = ModelWeights::synthesize("prop-tenant", &arch, &mapping, &spec);
+            let placed = match PlacedMapping::new(mapping.clone(), spans) {
+                Ok(p) => p,
+                Err(_) => return false,
+            };
+
+            // Materialize the placed spans and a contiguous reference.
+            let mut pool: Vec<CimMacro> =
+                (0..num_macros).map(|_| CimMacro::new(spec, 1.0, 16.0)).collect();
+            for (span, range) in placed.span_ranges() {
+                pool[span.macro_id].load_columns(span.bl_start, &weights.columns[range]);
+            }
+            let contiguous = PlacedMapping::from_contiguous(&arch, &spec, 0).unwrap();
+            let mut ref_pool: Vec<CimMacro> =
+                (0..num_macros).map(|_| CimMacro::new(spec, 1.0, 16.0)).collect();
+            for (span, range) in contiguous.span_ranges() {
+                ref_pool[span.macro_id].load_columns(span.bl_start, &weights.columns[range]);
+            }
+
+            // (1) readback per logical column, against the cache and the
+            // contiguous packing.
+            let cells_preserved = (0..total).all(|bl| {
+                let (m, local) = placed.locate(bl);
+                let (rm, rlocal) = contiguous.locate(bl);
+                let col = pool[m].read_column(local);
+                col == weights.columns[bl] && col == ref_pool[rm].read_column(rlocal)
+            });
+            // (2) span footprints partition the used cells.
+            let fp = placed.span_footprints();
+            let footprints_sum = fp.len() == placed.spans.len()
+                && fp.iter().sum::<usize>() == placed.used_cells()
+                && placed
+                    .macro_footprint()
+                    .iter()
+                    .map(|&(_, c)| c)
+                    .sum::<usize>()
+                    == placed.used_cells();
+            // (3) twin charge == the analytic per-span figure.
+            let charged: u64 = pool.iter().map(|m| m.stats.load_cycles).sum();
+            let charge_agrees = charged == spans_reload_cycles(span_widths, &spec);
+            cells_preserved && footprints_sum && charge_agrees
+        },
+    );
+}
+
+#[test]
+fn prop_twin_fleet_load_books_always_balance() {
+    // Any co-resident request sequence on a twin-executing fleet: the
+    // twin pool's charged load cycles equal the analytic ledger, which
+    // equals the per-macro and per-tenant sums (resident materializations
+    // and mirrored paging charges both included).
+    let spec = MacroSpec::default();
+    check(
+        "twin fleet: twin loads == analytic reload ledger",
+        cases(15),
+        pairs(vecs(usizes(0..3), 1..14), usizes(1..4)),
+        |(seq, num_macros)| {
+            let cfg = FleetConfig {
+                num_macros: *num_macros,
+                coresident: true,
+                execution: ExecutionMode::Twin,
+                ..FleetConfig::default()
+            };
+            let mut fleet = Fleet::new(&cfg, &spec);
+            for (i, scale) in [0.04, 0.06, 0.1].iter().enumerate() {
+                fleet
+                    .register(&format!("m{i}"), vgg9().scaled(*scale), false)
+                    .unwrap();
+            }
+            let img = vec![0.5f32; 64];
+            for &m in seq {
+                let _ = fleet.serve_batch(&format!("m{m}"), &[img.clone()]);
+            }
+            let snap = fleet.snapshot();
+            snap.twin_load_cycles() == snap.reload_cycles
+                && snap.reload_cycles == snap.macro_load_cycles()
+                && snap.reload_cycles == snap.tenant_load_cycles()
         },
     );
 }

@@ -2,10 +2,14 @@
 # Tier-1 CI gate for the Rust workspace: format, lint, build, test, and a
 # cross-PR bench comparison against the committed baselines.
 #
-# Usage: scripts/ci.sh [--no-clippy] [--no-fmt] [--no-bench]
-#   --no-clippy   skip the clippy step (e.g. toolchain without clippy)
-#   --no-fmt      skip the rustfmt check (e.g. toolchain without rustfmt)
-#   --no-bench    skip the quick bench run + baseline comparison
+# Usage: scripts/ci.sh [--no-clippy] [--no-fmt] [--no-bench] [--strict-counters]
+#   --no-clippy        skip the clippy step (e.g. toolchain without clippy)
+#   --no-fmt           skip the rustfmt check (e.g. toolchain without rustfmt)
+#   --no-bench         skip the quick bench run + baseline comparison
+#   --strict-counters  fail the baseline comparison when a DETERMINISTIC
+#                      counter (reload cycles, fleet utilization, twin
+#                      ledger delta) drifts from scripts/bench_baselines/;
+#                      timings stay print-only. This is what CI passes.
 #
 # Clippy runs with -D warnings plus a small documented allowlist:
 #   clippy::too_many_arguments  — the fleet placer/scheduler entry points
@@ -20,14 +24,23 @@ cd "$(dirname "$0")/../rust"
 run_fmt=1
 run_clippy=1
 run_bench=1
+strict_counters=0
 for arg in "$@"; do
   case "$arg" in
     --no-fmt) run_fmt=0 ;;
     --no-clippy) run_clippy=0 ;;
     --no-bench) run_bench=0 ;;
+    --strict-counters) strict_counters=1 ;;
     *) echo "unknown flag: $arg" >&2; exit 2 ;;
   esac
 done
+
+if [ "$strict_counters" = 1 ] && [ "$run_bench" = 0 ]; then
+  # The counter gate lives inside the bench stage; skipping the stage
+  # would silently disarm the check the caller explicitly requested.
+  echo "conflicting flags: --strict-counters requires the bench stage (--no-bench given)" >&2
+  exit 2
+fi
 
 echo "==> cargo fmt --check"
 if [ "$run_fmt" = 1 ]; then
@@ -60,17 +73,36 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+echo "==> compare_bench.py unit tests"
+if command -v python3 >/dev/null 2>&1; then
+  python3 ../scripts/test_compare_bench.py
+else
+  echo "    (python3 not installed; skipping)"
+fi
+
 echo "==> quick benches (deterministic asserts) + baseline comparison"
 if [ "$run_bench" = 1 ]; then
   # Quick sampling keeps this a smoke run. The benches assert the
   # deterministic invariants (morphed < uncompressed reload cycles,
-  # co-resident beats whole-macro placement), so they run regardless of
-  # python availability; the comparison is print-only (timings are
-  # noisy) — pass --strict to compare_bench.py manually to gate on it.
+  # co-resident beats whole-macro placement, twin loads == analytic
+  # ledger), so they run regardless of python availability. The
+  # comparison is print-only for timings (noisy); with --strict-counters
+  # it gates on the deterministic counters in scripts/bench_baselines/.
   CIM_ADAPT_BENCH_QUICK=1 cargo bench --bench micro_fleet
   CIM_ADAPT_BENCH_QUICK=1 cargo bench --bench micro_serving
   if command -v python3 >/dev/null 2>&1; then
-    python3 ../scripts/compare_bench.py --current-dir . --baseline-dir ../scripts/bench_baselines
+    compare_flags=""
+    if [ "$strict_counters" = 1 ]; then
+      compare_flags="--strict-counters"
+    fi
+    # shellcheck disable=SC2086
+    python3 ../scripts/compare_bench.py --current-dir . \
+      --baseline-dir ../scripts/bench_baselines $compare_flags
+  elif [ "$strict_counters" = 1 ]; then
+    # The caller asked for a hard gate; skipping it silently would
+    # disarm exactly the check they requested.
+    echo "    ERROR: --strict-counters requires python3 for the baseline comparison" >&2
+    exit 1
   else
     echo "    (python3 not installed; skipping baseline comparison)"
   fi

@@ -4,19 +4,25 @@ committed baselines and print regressions.
 
 Usage:
     scripts/compare_bench.py [--current-dir rust] [--baseline-dir scripts/bench_baselines]
-                             [--threshold 0.25] [--strict] [--update]
+                             [--threshold 0.25] [--strict] [--strict-counters] [--update]
 
-  --current-dir    directory holding freshly produced BENCH_<name>.json
-                   files (default: rust/, where `cargo bench` writes them)
-  --baseline-dir   directory holding the committed baselines
-                   (default: scripts/bench_baselines/)
-  --threshold      relative slowdown in a timing median that counts as a
-                   regression (default 0.25 = 25%; timings are noisy, so
-                   this is deliberately loose)
-  --strict         exit non-zero when regressions are found (default:
-                   print-only, so CI stays green on timing noise)
-  --update         copy the current files over the baselines (run after an
-                   intentional perf change, then commit the baselines)
+  --current-dir      directory holding freshly produced BENCH_<name>.json
+                     files (default: rust/, where `cargo bench` writes them)
+  --baseline-dir     directory holding the committed baselines
+                     (default: scripts/bench_baselines/)
+  --threshold        relative slowdown in a timing median that counts as a
+                     regression (default 0.25 = 25%; timings are noisy, so
+                     this is deliberately loose)
+  --strict           exit non-zero when ANY regression is found, timing or
+                     counter (default: print-only, so CI stays green on
+                     timing noise)
+  --strict-counters  exit non-zero only when a DETERMINISTIC counter
+                     (EXACT_COUNTERS below: reload cycles, utilization,
+                     twin/ledger delta) differs from the baseline; timings
+                     stay print-only. This is the CI gate: counters are
+                     bit-stable across machines, medians are not.
+  --update           copy the current files over the baselines (run after
+                     an intentional perf change, then commit the baselines)
 
 Counters (reload cycles, utilization, ...) are compared exactly with a
 per-metric "which direction is worse" map; timings by median with the
@@ -32,24 +38,46 @@ import sys
 
 BENCH_NAMES = ["fleet", "serving"]
 
-# Deterministic scalar metrics worth tracking, as (dotted path, direction)
-# where direction is "lower" or "higher" = which side is BETTER.
+# Noisy-but-worth-watching scalar metrics, as (dotted path, direction)
+# where direction is "lower" or "higher" = which side is BETTER. Metrics
+# listed in EXACT_COUNTERS below are deliberately NOT repeated here —
+# exact comparison subsumes the directional one, and double-listing would
+# report the same drift twice (possibly contradictorily).
 SCALAR_METRICS = {
     # Control arms (e.g. whole_macro_reload_cycles) are deliberately not
-    # tracked: only the product arm and the A/B ratios are meaningful.
+    # tracked directionally: only the product arm and A/B ratios matter.
     "fleet": [
         ("churn.reload_cycles", "lower"),
         ("churn.evictions", "lower"),
-        ("fleet_utilization", "higher"),
-        ("coresidency.coresident_reload_cycles", "lower"),
         ("coresidency.reload_advantage", "higher"),
-        ("coresidency.coresident_utilization", "higher"),
         ("compression_trade.reload_ratio", "higher"),
     ],
     "serving": [
         ("sim_serving.device_cycles", "lower"),
         ("sim_serving.weight_reloads", "lower"),
     ],
+}
+
+# Counters that are deterministic BY CONSTRUCTION (pure cycle accounting
+# over a fixed request script on the non-threaded fleet core): any drift
+# from the committed baseline is a real behaviour change, never noise.
+# `--strict-counters` gates on exactly these.
+EXACT_COUNTERS = {
+    "fleet": [
+        "fleet_utilization",
+        "coresidency.coresident_reload_cycles",
+        "coresidency.whole_macro_reload_cycles",
+        "coresidency.coresident_utilization",
+        "coresidency.whole_macro_utilization",
+        "coresidency.coresident_macros",
+        "coresidency.whole_macros_needed",
+        "twin.reload_cycles",
+        "twin.ledger_delta",
+        "twin.utilization",
+    ],
+    # The serving bench's counters flow through the threaded batcher
+    # (batch formation is timing-dependent), so none qualify yet.
+    "serving": [],
 }
 
 
@@ -79,8 +107,9 @@ def fmt_ns(ns):
 
 
 def compare_one(name, current, baseline, threshold):
-    """Return (report_lines, regressions) for one bench summary pair."""
-    lines, regressions = [], []
+    """Return (report_lines, regressions, exact_mismatches) for one bench
+    summary pair."""
+    lines, regressions, exact_mismatches = [], [], []
 
     base_t, cur_t = timing_map(baseline), timing_map(current)
     for bench_name in sorted(base_t):
@@ -113,7 +142,29 @@ def compare_one(name, current, baseline, threshold):
         lines.append(f"  {marker} {path}: {c:g} vs {b:g} (better = {better})")
         if worse:
             regressions.append(f"{name}: {path} moved {b:g} -> {c:g} (better = {better})")
-    return lines, regressions
+
+    for path in EXACT_COUNTERS.get(name, []):
+        b, c = dotted(baseline, path), dotted(current, path)
+        if not isinstance(b, (int, float)):
+            # Not yet in the baseline (older snapshot): report, don't gate
+            # — committing an updated baseline starts tracking it.
+            if isinstance(c, (int, float)):
+                lines.append(f"  + exact counter '{path}' not in baseline yet: {c:g}")
+            continue
+        if not isinstance(c, (int, float)):
+            # In the baseline but GONE from the current run: a rename or
+            # dropped emission would otherwise disarm the gate silently.
+            lines.append(f"  ! {path}: in baseline ({b:g}) but missing from current run")
+            exact_mismatches.append(
+                f"{name}: exact counter {path} missing from current run (baseline {b:g})"
+            )
+            continue
+        if c != b:
+            lines.append(f"  ! {path}: {c:g} != baseline {b:g} (exact counter)")
+            exact_mismatches.append(f"{name}: exact counter {path} moved {b:g} -> {c:g}")
+        else:
+            lines.append(f"    {path}: {c:g} (exact, matches baseline)")
+    return lines, regressions, exact_mismatches
 
 
 def main():
@@ -122,10 +173,12 @@ def main():
     ap.add_argument("--baseline-dir", default="scripts/bench_baselines")
     ap.add_argument("--threshold", type=float, default=0.25)
     ap.add_argument("--strict", action="store_true")
+    ap.add_argument("--strict-counters", action="store_true")
     ap.add_argument("--update", action="store_true")
     args = ap.parse_args()
 
     all_regressions = []
+    all_exact_mismatches = []
     compared = 0
     for name in BENCH_NAMES:
         cur_path = os.path.join(args.current_dir, f"BENCH_{name}.json")
@@ -149,20 +202,26 @@ def main():
         with open(base_path) as f:
             baseline = json.load(f)
         print(f"BENCH_{name}.json vs baseline:")
-        lines, regressions = compare_one(name, current, baseline, args.threshold)
+        lines, regressions, exact_mismatches = compare_one(
+            name, current, baseline, args.threshold
+        )
         for line in lines:
             print(line)
         all_regressions.extend(regressions)
+        all_exact_mismatches.extend(exact_mismatches)
         compared += 1
 
     if compared:
-        if all_regressions:
-            print(f"\n{len(all_regressions)} regression(s):")
-            for r in all_regressions:
+        if all_regressions or all_exact_mismatches:
+            print(f"\n{len(all_regressions)} regression(s), "
+                  f"{len(all_exact_mismatches)} exact-counter mismatch(es):")
+            for r in all_regressions + all_exact_mismatches:
                 print(f"  ! {r}")
         else:
             print("\nno regressions vs baseline")
-    if all_regressions and args.strict:
+    if (all_regressions or all_exact_mismatches) and args.strict:
+        return 1
+    if all_exact_mismatches and args.strict_counters:
         return 1
     return 0
 

@@ -1,0 +1,194 @@
+#!/usr/bin/env python3
+"""Unit tests for compare_bench.py (stdlib unittest only).
+
+Run directly (`python3 scripts/test_compare_bench.py`) or via ci.sh.
+Covers: timing threshold breach, exact-counter mismatch gating, missing
+baseline handling, and --update.
+"""
+
+import importlib.util
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def load_module():
+    spec = importlib.util.spec_from_file_location(
+        "compare_bench", os.path.join(HERE, "compare_bench.py")
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+cb = load_module()
+
+
+def fleet_summary(
+    coresident_cycles=190,
+    utilization=0.7421875,
+    twin_delta=0,
+    timing_ns=None,
+):
+    s = {
+        "bench": "micro_fleet",
+        "timings": [],
+        "fleet_utilization": utilization,
+        "coresidency": {
+            "rounds": 16,
+            "coresident_reload_cycles": coresident_cycles,
+            "whole_macro_reload_cycles": 8192,
+            "coresident_utilization": utilization,
+            "whole_macro_utilization": 0.3203125,
+            "coresident_macros": 1,
+            "whole_macros_needed": 2,
+        },
+        "twin": {
+            "rounds": 16,
+            "reload_cycles": coresident_cycles,
+            "ledger_delta": twin_delta,
+            "utilization": utilization,
+        },
+    }
+    if timing_ns is not None:
+        s["timings"] = [{"name": "roundtrip", "median_ns": timing_ns, "samples": 10}]
+    return s
+
+
+def run_main(argv):
+    """Run compare_bench.main() with argv, capturing the exit code."""
+    old_argv = sys.argv
+    sys.argv = ["compare_bench.py"] + argv
+    try:
+        return cb.main()
+    finally:
+        sys.argv = old_argv
+
+
+class CompareBenchTest(unittest.TestCase):
+    def setUp(self):
+        self.tmp = tempfile.TemporaryDirectory()
+        self.cur = os.path.join(self.tmp.name, "cur")
+        self.base = os.path.join(self.tmp.name, "base")
+        os.makedirs(self.cur)
+        os.makedirs(self.base)
+
+    def tearDown(self):
+        self.tmp.cleanup()
+
+    def write(self, directory, name, summary):
+        with open(os.path.join(directory, f"BENCH_{name}.json"), "w") as f:
+            json.dump(summary, f)
+
+    def argv(self, *extra):
+        return ["--current-dir", self.cur, "--baseline-dir", self.base] + list(extra)
+
+    def test_identical_files_pass_even_strict(self):
+        self.write(self.cur, "fleet", fleet_summary(timing_ns=1000.0))
+        self.write(self.base, "fleet", fleet_summary(timing_ns=1000.0))
+        self.assertEqual(run_main(self.argv()), 0)
+        self.assertEqual(run_main(self.argv("--strict")), 0)
+        self.assertEqual(run_main(self.argv("--strict-counters")), 0)
+
+    def test_timing_breach_gates_only_under_strict(self):
+        self.write(self.base, "fleet", fleet_summary(timing_ns=1000.0))
+        # +50% > the 25% threshold.
+        self.write(self.cur, "fleet", fleet_summary(timing_ns=1500.0))
+        self.assertEqual(run_main(self.argv()), 0, "print-only by default")
+        self.assertEqual(run_main(self.argv("--strict")), 1)
+        # Timings never trip the counters-only gate.
+        self.assertEqual(run_main(self.argv("--strict-counters")), 0)
+
+    def test_timing_within_threshold_passes_strict(self):
+        self.write(self.base, "fleet", fleet_summary(timing_ns=1000.0))
+        self.write(self.cur, "fleet", fleet_summary(timing_ns=1100.0))
+        self.assertEqual(run_main(self.argv("--strict")), 0)
+
+    def test_exact_counter_mismatch_gates_under_strict_counters(self):
+        self.write(self.base, "fleet", fleet_summary(coresident_cycles=190))
+        self.write(self.cur, "fleet", fleet_summary(coresident_cycles=192))
+        self.assertEqual(run_main(self.argv()), 0, "print-only by default")
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+        self.assertEqual(run_main(self.argv("--strict")), 1)
+
+    def test_exact_counter_mismatch_in_either_direction(self):
+        # "Improvements" on exact counters still gate: the baseline must
+        # be updated deliberately, not drift silently.
+        self.write(self.base, "fleet", fleet_summary(coresident_cycles=190))
+        self.write(self.cur, "fleet", fleet_summary(coresident_cycles=100))
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+
+    def test_exact_counter_missing_from_current_is_gated(self):
+        # A renamed/dropped counter must not silently disarm the gate.
+        self.write(self.base, "fleet", fleet_summary())
+        gutted = fleet_summary()
+        del gutted["twin"]
+        self.write(self.cur, "fleet", gutted)
+        self.assertEqual(run_main(self.argv()), 0, "print-only by default")
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+
+    def test_exact_counter_missing_from_baseline_is_not_gated(self):
+        # The reverse (counter newer than the baseline) only reports: the
+        # baseline update procedure starts tracking it.
+        stale = fleet_summary()
+        del stale["twin"]
+        self.write(self.base, "fleet", stale)
+        self.write(self.cur, "fleet", fleet_summary())
+        self.assertEqual(run_main(self.argv("--strict", "--strict-counters")), 0)
+
+    def test_twin_ledger_delta_is_gated(self):
+        self.write(self.base, "fleet", fleet_summary(twin_delta=0))
+        self.write(self.cur, "fleet", fleet_summary(twin_delta=5))
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+
+    def test_missing_baseline_is_not_fatal(self):
+        self.write(self.cur, "fleet", fleet_summary())
+        self.assertEqual(run_main(self.argv()), 0)
+        self.assertEqual(run_main(self.argv("--strict", "--strict-counters")), 0)
+
+    def test_missing_current_is_not_fatal(self):
+        self.write(self.base, "fleet", fleet_summary())
+        self.assertEqual(run_main(self.argv("--strict", "--strict-counters")), 0)
+
+    def test_update_copies_current_over_baseline(self):
+        changed = fleet_summary(coresident_cycles=200)
+        self.write(self.cur, "fleet", changed)
+        self.write(self.base, "fleet", fleet_summary(coresident_cycles=190))
+        self.assertEqual(run_main(self.argv("--update")), 0)
+        with open(os.path.join(self.base, "BENCH_fleet.json")) as f:
+            self.assertEqual(json.load(f), changed)
+        # After the update the strict gate passes again.
+        self.assertEqual(run_main(self.argv("--strict", "--strict-counters")), 0)
+
+    def test_update_creates_baseline_dir(self):
+        fresh = os.path.join(self.tmp.name, "fresh_base")
+        self.write(self.cur, "fleet", fleet_summary())
+        code = run_main(["--current-dir", self.cur, "--baseline-dir", fresh, "--update"])
+        self.assertEqual(code, 0)
+        self.assertTrue(os.path.exists(os.path.join(fresh, "BENCH_fleet.json")))
+
+    def test_compare_one_reports_new_and_missing_timings(self):
+        base = fleet_summary(timing_ns=1000.0)
+        cur = fleet_summary()
+        cur["timings"] = [{"name": "other", "median_ns": 5.0, "samples": 3}]
+        lines, regressions, exact = cb.compare_one("fleet", cur, base, 0.25)
+        text = "\n".join(lines)
+        self.assertIn("gone from current run", text)
+        self.assertIn("new timing 'other'", text)
+        self.assertEqual(regressions, [])
+        self.assertEqual(exact, [])
+
+    def test_exact_counters_all_known_paths(self):
+        # Every configured exact counter is actually present in the bench
+        # summary shape — guards against renames going unnoticed.
+        s = fleet_summary()
+        for path in cb.EXACT_COUNTERS["fleet"]:
+            self.assertIsNotNone(cb.dotted(s, path), f"missing {path}")
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
