@@ -4,16 +4,22 @@
 //! reload cycles than its uncompressed ancestor, because it fits the
 //! pool where the ancestor pages.
 //!
+//! Also measures the fragmentation story end to end: a register/retire
+//! churn under first-fit vs best-fit vs best-fit + online defrag, with
+//! the defrag win asserted in twin cycles (fewer spans per tenant, fewer
+//! load events, lower load+migration+pass total).
+//!
 //! Emits `BENCH_fleet.json` (see `report::write_bench_summary`) so the
 //! perf trajectory is tracked across PRs.
 
 use std::collections::BTreeSet;
 
 use cim_adapt::arch::by_name;
+use cim_adapt::cim::MacroStats;
 use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec, MorphConfig};
 use cim_adapt::data::SynthCifar;
 use cim_adapt::fleet::{EvictionPolicy, Fleet, FleetServer};
-use cim_adapt::mapping::pack_model;
+use cim_adapt::mapping::{pack_model, FitPolicyKind};
 use cim_adapt::morph::flow::morph_flow_synthetic;
 use cim_adapt::report::write_bench_summary;
 use cim_adapt::util::bench::{black_box, Runner};
@@ -87,6 +93,86 @@ fn coresidency_mix(coresident: bool, execution: ExecutionMode, rounds: usize) ->
         utilization: snap.utilization(),
         twin_load_cycles: snap.twin_load_cycles(),
     }
+}
+
+/// Outcome of the register/retire churn scenario under one fit policy
+/// (and optionally online defrag) — all deterministic twin-pool counters.
+struct ChurnRun {
+    spans_per_tenant: f64,
+    fragmentation: f64,
+    reload_cycles: u64,
+    migration_cycles: u64,
+    reload_events: u64,
+    compactions: u64,
+    /// Twin busy cycles: load + migration + executed pass cycles — the
+    /// headline "reload+pass" figure the defrag win is measured in.
+    twin_total_cycles: u64,
+}
+
+/// Register/retire churn on a 2-macro co-resident **twin** pool: four
+/// tenants land, two retire (leaving two holes), a fifth arrives, and
+/// the surviving mix then serves `rounds` alternating batches. Under
+/// first-fit the fifth tenant splinters across the holes — every span is
+/// a separately-charged load event and an extra macro pass per segment
+/// it splits, on every image. Best-fit lands it whole; the defrag arm
+/// additionally compacts the pool (threshold-triggered) before the
+/// placement, paying one-time migration cycles to keep every tenant
+/// contiguous.
+fn churn_mix(fit: FitPolicyKind, defrag_threshold: f64, rounds: usize) -> ChurnRun {
+    let spec = MacroSpec::default();
+    let fleet_cfg = FleetConfig {
+        num_macros: 2,
+        coresident: true,
+        execution: ExecutionMode::Twin,
+        fit,
+        defrag_threshold,
+        ..cfg(2)
+    };
+    let mut fleet = Fleet::new(&fleet_cfg, &spec);
+    let scaled = |s: f64| by_name("vgg9").unwrap().scaled(s);
+    let batch: Vec<Vec<f32>> = (0..4).map(|k| SynthCifar::sample(k, k as u64).data).collect();
+    for (name, s) in [("a", 0.04), ("b", 0.03), ("c", 0.05), ("d", 0.04)] {
+        fleet.register(name, scaled(s), false).unwrap();
+        fleet.serve_batch(name, &batch).unwrap();
+    }
+    fleet.retire("b").unwrap();
+    fleet.retire("d").unwrap();
+    fleet.register("e", scaled(0.05), false).unwrap();
+    for _ in 0..rounds {
+        for m in ["a", "c", "e"] {
+            fleet.serve_batch(m, &batch).unwrap();
+        }
+    }
+    let snap = fleet.snapshot();
+    // Both charge classes conserve across all four ledgers.
+    assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+    assert_eq!(snap.reload_cycles, snap.tenant_load_cycles());
+    assert_eq!(snap.twin_load_cycles(), snap.reload_cycles);
+    assert_eq!(snap.migration_cycles, snap.macro_migration_cycles());
+    assert_eq!(snap.migration_cycles, snap.tenant_migration_cycles());
+    assert_eq!(snap.twin_migration_cycles(), snap.migration_cycles);
+    let frag = snap.fragmentation();
+    let twin = MacroStats::aggregate(snap.twin_stats.iter());
+    ChurnRun {
+        spans_per_tenant: frag.mean_spans_per_tenant(),
+        fragmentation: frag.score(),
+        reload_cycles: snap.reload_cycles,
+        migration_cycles: snap.migration_cycles,
+        reload_events: snap.aggregate().reloads,
+        compactions: snap.compactions,
+        twin_total_cycles: twin.busy_cycles(),
+    }
+}
+
+fn churn_json(r: &ChurnRun) -> Json {
+    Json::obj()
+        .with("spans_per_tenant", r.spans_per_tenant)
+        .with("fragmentation", r.fragmentation)
+        .with("reload_cycles", r.reload_cycles)
+        .with("migration_cycles", r.migration_cycles)
+        .with("reload_events", r.reload_events)
+        .with("compactions", r.compactions)
+        .with("twin_total_cycles", r.twin_total_cycles)
 }
 
 /// Run an alternating primary/co request mix on a deterministic core and
@@ -245,6 +331,54 @@ fn main() {
         "twin execution must not change placement economics"
     );
 
+    // --- churn + fit policies + online defrag (deterministic) -------------
+    // Same register/retire churn, three arms: first-fit fragments the
+    // late arrival, best-fit lands it whole, best-fit + defrag also
+    // compacts the pool first (one-time migration). The defragged pool
+    // must serve the same mix with fewer spans per tenant and fewer
+    // total twin cycles (load + migration + passes) than first-fit.
+    let ff = churn_mix(FitPolicyKind::FirstFit, 0.0, rounds);
+    let bf = churn_mix(FitPolicyKind::BestFit, 0.0, rounds);
+    let dg = churn_mix(FitPolicyKind::BestFit, 0.3, rounds);
+    r.table(&format!(
+        "churn scenario over {rounds} rounds: first-fit {:.2} spans/tenant, {} twin cycles, \
+         {} load events | best-fit {:.2}, {}, {} | defrag {:.2}, {}, {} (+{} migration, \
+         {} compaction(s))",
+        ff.spans_per_tenant,
+        ff.twin_total_cycles,
+        ff.reload_events,
+        bf.spans_per_tenant,
+        bf.twin_total_cycles,
+        bf.reload_events,
+        dg.spans_per_tenant,
+        dg.twin_total_cycles,
+        dg.reload_events,
+        dg.migration_cycles,
+        dg.compactions
+    ));
+    assert!(
+        dg.spans_per_tenant < ff.spans_per_tenant,
+        "defrag must reduce mean spans per tenant ({:.3} vs {:.3})",
+        dg.spans_per_tenant,
+        ff.spans_per_tenant
+    );
+    assert!(
+        bf.spans_per_tenant <= ff.spans_per_tenant,
+        "best-fit must not fragment more than first-fit"
+    );
+    assert!(
+        dg.twin_total_cycles < ff.twin_total_cycles,
+        "defrag must win on total twin reload+pass cycles ({} vs {})",
+        dg.twin_total_cycles,
+        ff.twin_total_cycles
+    );
+    assert!(
+        dg.reload_events < ff.reload_events,
+        "defragged placements load in fewer span writes"
+    );
+    assert!(dg.compactions >= 1 && dg.migration_cycles > 0, "defrag really ran");
+    assert_eq!(ff.migration_cycles, 0, "no defrag in the first-fit arm");
+
     // Twin forward throughput on a resident tenant (timing only).
     {
         let spec_ = MacroSpec::default();
@@ -271,6 +405,20 @@ fn main() {
         .with("serving", metrics.to_json())
         .with("churn", churn_snap.to_json())
         .with("fleet_utilization", co.utilization)
+        .with("fleet_fragmentation", ff.fragmentation)
+        .with("fleet_spans_per_tenant", ff.spans_per_tenant)
+        .with(
+            "churn_scenario",
+            Json::obj()
+                .with("rounds", rounds)
+                .with("first_fit", churn_json(&ff))
+                .with("best_fit", churn_json(&bf))
+                .with("defrag", churn_json(&dg))
+                .with(
+                    "defrag_win_cycles",
+                    ff.twin_total_cycles - dg.twin_total_cycles,
+                ),
+        )
         .with(
             "coresidency",
             Json::obj()

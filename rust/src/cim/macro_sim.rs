@@ -21,12 +21,18 @@ use crate::latency::region_reload_cycles;
 pub struct MacroStats {
     /// Total cycles spent computing (evaluate + ADC rounds).
     pub compute_cycles: u64,
-    /// Total cycles spent (re)loading weights.
+    /// Total cycles spent (re)loading weights (hot-swaps and paging).
     pub load_cycles: u64,
+    /// Total cycles spent on compaction migration writes — attributed
+    /// separately from `load_cycles` so defrag traffic never hides
+    /// inside (or inflates) the hot-swap ledger.
+    pub migration_cycles: u64,
     /// Individual ADC conversions performed (the paper's "MACs").
     pub conversions: u64,
     /// Number of weight reload events.
     pub reloads: u64,
+    /// Number of migration write events (one per moved span).
+    pub migrations: u64,
 }
 
 impl MacroStats {
@@ -34,8 +40,10 @@ impl MacroStats {
     pub fn absorb(&mut self, other: &MacroStats) {
         self.compute_cycles += other.compute_cycles;
         self.load_cycles += other.load_cycles;
+        self.migration_cycles += other.migration_cycles;
         self.conversions += other.conversions;
         self.reloads += other.reloads;
+        self.migrations += other.migrations;
     }
 
     /// Aggregate counters across a whole array pool (fleet accounting:
@@ -48,9 +56,9 @@ impl MacroStats {
         total
     }
 
-    /// Total busy cycles (compute + weight loading).
+    /// Total busy cycles (compute + weight loading + migration).
     pub fn busy_cycles(&self) -> u64 {
-        self.compute_cycles + self.load_cycles
+        self.compute_cycles + self.load_cycles + self.migration_cycles
     }
 }
 
@@ -91,6 +99,36 @@ impl CimMacro {
     /// would require 256 cycles for this process" — while a partial
     /// region (fractional-macro co-residency) costs proportionally fewer.
     pub fn load_columns(&mut self, bl_start: usize, columns: &[Vec<WeightCell>]) {
+        self.write_columns(bl_start, columns);
+        self.stats.load_cycles += region_reload_cycles(columns.len(), &self.spec);
+        self.stats.reloads += 1;
+    }
+
+    /// Write a set of bitline columns as a **compaction migration**: the
+    /// physics and the cycle figure are identical to
+    /// [`CimMacro::load_columns`] (one column-serial write charged
+    /// `region_reload_cycles(n)`), but the charge lands in
+    /// `MacroStats::migration_cycles`/`migrations` so defrag traffic is
+    /// attributed separately from hot-swap traffic — mirroring the fleet
+    /// ledger's split, which is what keeps the two equal by construction
+    /// per class.
+    pub fn migrate_columns(&mut self, bl_start: usize, columns: &[Vec<WeightCell>]) {
+        self.write_columns(bl_start, columns);
+        self.stats.migration_cycles += region_reload_cycles(columns.len(), &self.spec);
+        self.stats.migrations += 1;
+    }
+
+    /// Clear a span of bitline columns (the vacated source of a
+    /// migration). Bookkeeping only — the charge model prices a move as
+    /// its destination write, so clearing is free, but without it the
+    /// array's occupancy would keep counting stale source cells.
+    pub fn clear_columns(&mut self, bl_start: usize, bl_count: usize) {
+        for bl in bl_start..bl_start + bl_count {
+            self.array.load_column(bl, &[]);
+        }
+    }
+
+    fn write_columns(&mut self, bl_start: usize, columns: &[Vec<WeightCell>]) {
         assert!(
             bl_start + columns.len() <= self.spec.bitlines,
             "columns overflow macro ({} + {} > {})",
@@ -101,8 +139,6 @@ impl CimMacro {
         for (i, col) in columns.iter().enumerate() {
             self.array.load_column(bl_start + i, col);
         }
-        self.stats.load_cycles += region_reload_cycles(columns.len(), &self.spec);
-        self.stats.reloads += 1;
     }
 
     /// Read back the cells loaded into one bitline column (only the rows
@@ -246,6 +282,26 @@ mod tests {
         m.load_columns(0, &vec![cells(&[3]); 256]);
         assert_eq!(m.stats.reloads, 3);
         assert_eq!(m.stats.load_cycles, 2 + 256);
+    }
+
+    #[test]
+    fn migration_writes_charge_their_own_ledger() {
+        let mut m = CimMacro::new(spec(), 1.0, 1.0);
+        m.load_columns(0, &vec![cells(&[1, 2]); 10]);
+        // Migrate the 10 columns to [100, 110): same physics and the same
+        // per-span figure as a load, different ledger.
+        let cols: Vec<Vec<WeightCell>> = (0..10).map(|bl| m.read_column(bl)).collect();
+        m.migrate_columns(100, &cols);
+        m.clear_columns(0, 10);
+        assert_eq!(m.stats.load_cycles, 10);
+        assert_eq!(m.stats.reloads, 1);
+        assert_eq!(m.stats.migration_cycles, 10);
+        assert_eq!(m.stats.migrations, 1);
+        assert_eq!(m.stats.busy_cycles(), 20, "migration counts as busy time");
+        // The cells really moved: destination holds them, source reads empty.
+        assert_eq!(m.read_column(100), cells(&[1, 2]));
+        assert_eq!(m.read_column(0), Vec::new());
+        assert_eq!(m.array.occupied_cells(), 20, "no stale source cells");
     }
 
     #[test]

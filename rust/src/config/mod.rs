@@ -8,6 +8,7 @@
 use std::path::Path;
 
 use crate::fleet::EvictionPolicy;
+use crate::mapping::FitPolicyKind;
 use crate::util::json::Json;
 
 /// Physical description of one CIM macro (paper Fig. 1: 256×256 array,
@@ -324,10 +325,18 @@ pub struct FleetConfig {
     pub queue_depth: usize,
     /// Eviction policy when aggregate demand exceeds the pool.
     pub policy: EvictionPolicy,
+    /// Fit policy choosing *where* region-granular allocations land
+    /// (first/best/worst/buddy/affinity; `cim-adapt fleet --fit`).
+    pub fit: FitPolicyKind,
     /// Fractional-macro co-residency: place models at bitline-region
     /// granularity so two tenants can share one macro's spare columns.
     /// Off = the degenerate whole-macro placement (region = full macro).
     pub coresident: bool,
+    /// Online-defrag trigger (`cim-adapt fleet --defrag`): when > 0 and
+    /// a hot-swap is imminent on the resident path, the fleet compacts
+    /// the pool first if its fragmentation score exceeds this threshold.
+    /// 0 disables; migration traffic is charged on its own ledger.
+    pub defrag_threshold: f64,
     /// Whether placements run on the simulated macros ([`ExecutionMode`]).
     pub execution: ExecutionMode,
     /// Clock frequency for cycle → wall-time conversion (MHz).
@@ -342,7 +351,9 @@ impl Default for FleetConfig {
             batch_timeout_us: 2000,
             queue_depth: 1024,
             policy: EvictionPolicy::Lru,
+            fit: FitPolicyKind::FirstFit,
             coresident: false,
+            defrag_threshold: 0.0,
             execution: ExecutionMode::Analytic,
             clock_mhz: 200.0,
         }
@@ -357,7 +368,9 @@ impl FleetConfig {
             .with("batch_timeout_us", self.batch_timeout_us)
             .with("queue_depth", self.queue_depth)
             .with("policy", self.policy.as_str())
+            .with("fit", self.fit.as_str())
             .with("coresident", self.coresident)
+            .with("defrag_threshold", self.defrag_threshold)
             .with("execution", self.execution.as_str())
             .with("clock_mhz", self.clock_mhz)
     }
@@ -378,7 +391,16 @@ impl FleetConfig {
                 .as_str()
                 .and_then(EvictionPolicy::parse)
                 .unwrap_or(d.policy),
+            fit: j
+                .get("fit")
+                .as_str()
+                .and_then(FitPolicyKind::parse)
+                .unwrap_or(d.fit),
             coresident: j.get("coresident").as_bool().unwrap_or(d.coresident),
+            defrag_threshold: j
+                .get("defrag_threshold")
+                .as_f64()
+                .unwrap_or(d.defrag_threshold),
             execution: j
                 .get("execution")
                 .as_str()
@@ -485,14 +507,26 @@ mod tests {
         let mut c = FleetConfig::default();
         c.num_macros = 16;
         c.policy = EvictionPolicy::CostWeighted;
+        c.fit = FitPolicyKind::BestFit;
         c.coresident = true;
+        c.defrag_threshold = 0.35;
         c.execution = ExecutionMode::Twin;
         let back = FleetConfig::from_json(&c.to_json());
         assert_eq!(back, c);
-        // Missing knobs default to whole-macro placement, analytic execution.
+        // Missing knobs default to whole-macro placement, analytic
+        // execution, first-fit, defrag off.
         let j = Json::parse(r#"{"num_macros": 8}"#).unwrap();
         assert!(!FleetConfig::from_json(&j).coresident);
         assert_eq!(FleetConfig::from_json(&j).execution, ExecutionMode::Analytic);
+        assert_eq!(FleetConfig::from_json(&j).fit, FitPolicyKind::FirstFit);
+        assert_eq!(FleetConfig::from_json(&j).defrag_threshold, 0.0);
+        // Fit strings parse; unknown falls back to first-fit.
+        let j = Json::parse(r#"{"fit": "best", "defrag_threshold": 0.5}"#).unwrap();
+        let f = FleetConfig::from_json(&j);
+        assert_eq!(f.fit, FitPolicyKind::BestFit);
+        assert_eq!(f.defrag_threshold, 0.5);
+        let j = Json::parse(r#"{"fit": "mystery"}"#).unwrap();
+        assert_eq!(FleetConfig::from_json(&j).fit, FitPolicyKind::FirstFit);
         // Execution mode parses both ways; unknown falls back to analytic.
         let j = Json::parse(r#"{"execution": "twin"}"#).unwrap();
         assert_eq!(FleetConfig::from_json(&j).execution, ExecutionMode::Twin);

@@ -1,0 +1,493 @@
+//! Online region compaction: plan a minimal set of span moves that
+//! slides resident tenants toward the bottom of the pool, coalescing
+//! free columns back into large contiguous runs.
+//!
+//! First-fit on a churned co-resident pool splits placements into many
+//! spans, and every span is a separately-charged `load_columns` write
+//! plus a separate macro pass per segment at inference time. The
+//! compactor reverses that: [`plan_compaction`] computes *where* every
+//! tenant should live (greedy macro-aware sliding, in ascending current
+//! address order) and emits one [`SpanMove`] per physically-contiguous
+//! piece that actually changes position — tenants already home emit
+//! nothing, and the executor only accepts strictly-improving plans
+//! ([`CompactionPlan::improves`]), so repeated compaction converges in a
+//! few passes. The fleet's executor
+//! ([`Fleet::compact`](super::Fleet)) materializes each move on the twin
+//! pool and charges `region_reload_cycles(width)` per move into the same
+//! 4-ledger accounting as hot-swaps, under a separate **migration**
+//! attribution — analytic and twin charges agree by construction because
+//! both sum the identical per-move figure.
+//!
+//! [`Fragmentation`] is the observability side: free-region count,
+//! largest-free-run ratio and mean spans per resident tenant, the
+//! metrics the defrag trigger (`FleetConfig::defrag_threshold`) and
+//! `BENCH_fleet.json` report.
+
+use crate::config::MacroSpec;
+use crate::latency::region_reload_cycles;
+use crate::mapping::Region;
+use crate::util::json::Json;
+
+use super::placer::Placement;
+
+/// Point-in-time fragmentation metrics of a region-granular pool.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Fragmentation {
+    /// Free intervals across the pool (1 per macro when coalesced).
+    pub free_regions: usize,
+    /// Width of the largest contiguous free run (never crosses a macro).
+    pub largest_free_run: usize,
+    /// Free bitline columns across the pool.
+    pub free_bls: usize,
+    /// Bitline columns per macro (the ceiling on any free run).
+    pub bitlines_per_macro: usize,
+    /// Total spans across all resident placements.
+    pub resident_spans: usize,
+    /// Resident tenants.
+    pub resident_tenants: usize,
+}
+
+impl Fragmentation {
+    /// External-fragmentation score in `[0, 1]`: how far the largest
+    /// contiguous free run falls short of the best this pool could offer
+    /// (free space capped at one macro's width — a run cannot cross
+    /// macros). 0 = perfectly coalesced; also 0 on a full pool, where
+    /// there is nothing left to coalesce.
+    pub fn score(&self) -> f64 {
+        let best = self.free_bls.min(self.bitlines_per_macro);
+        if best == 0 {
+            return 0.0;
+        }
+        1.0 - self.largest_free_run as f64 / best as f64
+    }
+
+    /// Mean spans per resident tenant — 1.0 means every placement is
+    /// contiguous; every extra span is one more charged load event and
+    /// one more macro pass per segment it splits.
+    pub fn mean_spans_per_tenant(&self) -> f64 {
+        if self.resident_tenants == 0 {
+            return 0.0;
+        }
+        self.resident_spans as f64 / self.resident_tenants as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("score", self.score())
+            .with("free_regions", self.free_regions)
+            .with("largest_free_run", self.largest_free_run)
+            .with("free_bls", self.free_bls)
+            .with("resident_spans", self.resident_spans)
+            .with("resident_tenants", self.resident_tenants)
+            .with("spans_per_tenant", self.mean_spans_per_tenant())
+    }
+}
+
+/// One physical rewrite of a contiguous piece of a resident placement:
+/// `from.bl_count == to.bl_count` always; the logical columns covered
+/// keep their order and their weight cells.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanMove {
+    /// Tenant whose columns move.
+    pub tenant: String,
+    /// Current physical location of the piece.
+    pub from: Region,
+    /// Destination location (same width).
+    pub to: Region,
+}
+
+/// Output of [`plan_compaction`]: the moves, plus each moved tenant's
+/// full new layout (spans in logical order) and the plan's bookkeeping.
+#[derive(Debug, Clone, Default)]
+pub struct CompactionPlan {
+    /// Physical moves, grouped by tenant in plan order. Destinations
+    /// only use space that is free or vacated by the plan itself, and
+    /// never overlap an unmoved tenant.
+    pub moves: Vec<SpanMove>,
+    /// Moved tenants with their complete new span lists (logical order,
+    /// adjacent spans pre-merged); untouched tenants are absent.
+    pub relocated: Vec<(String, Vec<Region>)>,
+    /// Total resident spans before the plan.
+    pub spans_before: usize,
+    /// Total resident spans after the plan.
+    pub spans_after: usize,
+    /// Columns the plan moves.
+    pub moved_bls: usize,
+    /// Cycles the executor will charge: `region_reload_cycles(width)`
+    /// per move — identical on the analytic ledger and the twin pool.
+    pub migration_cycles: u64,
+    /// Largest contiguous free run the packed layout leaves (the biggest
+    /// per-macro tail) — compare against the pool's current run to
+    /// decide whether executing is worth the migration traffic.
+    pub largest_free_run_after: usize,
+}
+
+impl CompactionPlan {
+    /// True when the pool is already as compact as this planner gets it.
+    pub fn is_noop(&self) -> bool {
+        self.moves.is_empty()
+    }
+
+    /// Whether executing strictly improves the pool: fewer resident
+    /// spans, or the same spans with a larger contiguous free run —
+    /// a strict lexicographic decrease of `(spans, -largest_free_run)`.
+    /// The executor refuses anything else; that avoids paying migration
+    /// for nothing (the greedy can propose reshuffles that help neither
+    /// metric, or even add spans) and makes repeated compaction
+    /// terminate: the measure is bounded and strictly decreases on every
+    /// executed plan (fixpoint within a few passes in practice).
+    pub fn improves(&self, current_largest_free_run: usize) -> bool {
+        !self.is_noop()
+            && (self.spans_after < self.spans_before
+                || (self.spans_after == self.spans_before
+                    && self.largest_free_run_after > current_largest_free_run))
+    }
+}
+
+/// Plan the compaction of `placements` over a `num_macros × bitlines`
+/// pool. Deterministic: tenants slide toward the pool's bottom in
+/// ascending order of their current lowest physical address (ties by
+/// name). Each tenant lands contiguously in the first macro with room;
+/// a tenant wider than every remaining tail (multi-macro footprints
+/// included) splits across free tails in ascending macro order. Tenants
+/// already at their target emit no moves, so a second plan over the
+/// result is a no-op.
+pub fn plan_compaction(
+    placements: &[Placement],
+    num_macros: usize,
+    bitlines: usize,
+    spec: &MacroSpec,
+) -> CompactionPlan {
+    let addr = |r: &Region| r.macro_id * bitlines + r.bl_start;
+    let min_addr = |p: &Placement| p.regions.iter().map(addr).min().unwrap_or(usize::MAX);
+    let mut order: Vec<&Placement> =
+        placements.iter().filter(|p| !p.regions.is_empty()).collect();
+    order.sort_by(|a, b| min_addr(a).cmp(&min_addr(b)).then_with(|| a.model.cmp(&b.model)));
+
+    let mut fill = vec![0usize; num_macros];
+    let mut moves: Vec<SpanMove> = Vec::new();
+    let mut relocated = Vec::new();
+    let mut spans_after = 0usize;
+    for p in &order {
+        let w = p.bls();
+        let target = match (0..num_macros).find(|&m| bitlines - fill[m] >= w) {
+            Some(m) => {
+                let t = vec![Region {
+                    macro_id: m,
+                    bl_start: fill[m],
+                    bl_count: w,
+                }];
+                fill[m] += w;
+                t
+            }
+            None => {
+                // Wider than every remaining tail: split across free
+                // tails in ascending macro order.
+                let mut t = Vec::new();
+                let mut remaining = w;
+                for (m, f) in fill.iter_mut().enumerate() {
+                    if remaining == 0 {
+                        break;
+                    }
+                    let room = bitlines - *f;
+                    if room == 0 {
+                        continue;
+                    }
+                    let take = room.min(remaining);
+                    t.push(Region {
+                        macro_id: m,
+                        bl_start: *f,
+                        bl_count: take,
+                    });
+                    *f += take;
+                    remaining -= take;
+                }
+                assert_eq!(remaining, 0, "resident tenants exceed the pool");
+                t
+            }
+        };
+        spans_after += target.len();
+        let tenant_moves = diff_moves(&p.model, &p.regions, &target);
+        if !tenant_moves.is_empty() {
+            moves.extend(tenant_moves);
+            relocated.push((p.model.clone(), target));
+        }
+    }
+    let moved_bls = moves.iter().map(|m| m.to.bl_count).sum();
+    let migration_cycles = moves
+        .iter()
+        .map(|m| region_reload_cycles(m.to.bl_count, spec))
+        .sum();
+    let largest_free_run_after = fill.iter().map(|&f| bitlines - f).max().unwrap_or(0);
+    CompactionPlan {
+        spans_before: placements.iter().map(|p| p.regions.len()).sum(),
+        spans_after,
+        moved_bls,
+        migration_cycles,
+        largest_free_run_after,
+        moves,
+        relocated,
+    }
+}
+
+/// Decompose `from` → `to` (two span lists covering the same logical
+/// columns, in logical order) into maximal physical moves: one per piece
+/// that is contiguous in both the source and the destination. Pieces
+/// whose physical location is unchanged emit nothing.
+fn diff_moves(model: &str, from: &[Region], to: &[Region]) -> Vec<SpanMove> {
+    let total: usize = from.iter().map(|r| r.bl_count).sum();
+    debug_assert_eq!(
+        total,
+        to.iter().map(|r| r.bl_count).sum::<usize>(),
+        "relocation must preserve the tenant's width"
+    );
+    let mut moves = Vec::new();
+    let (mut fi, mut fo) = (0usize, 0usize);
+    let (mut ti, mut to_off) = (0usize, 0usize);
+    let mut done = 0usize;
+    while done < total {
+        let f = &from[fi];
+        let t = &to[ti];
+        let take = (f.bl_count - fo).min(t.bl_count - to_off);
+        let src = Region {
+            macro_id: f.macro_id,
+            bl_start: f.bl_start + fo,
+            bl_count: take,
+        };
+        let dst = Region {
+            macro_id: t.macro_id,
+            bl_start: t.bl_start + to_off,
+            bl_count: take,
+        };
+        if src != dst {
+            moves.push(SpanMove {
+                tenant: model.to_string(),
+                from: src,
+                to: dst,
+            });
+        }
+        fo += take;
+        to_off += take;
+        done += take;
+        if fo == f.bl_count {
+            fi += 1;
+            fo = 0;
+        }
+        if to_off == t.bl_count {
+            ti += 1;
+            to_off = 0;
+        }
+    }
+    moves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::spans_reload_cycles;
+
+    fn spec() -> MacroSpec {
+        MacroSpec::default()
+    }
+
+    fn reg(macro_id: usize, bl_start: usize, bl_count: usize) -> Region {
+        Region {
+            macro_id,
+            bl_start,
+            bl_count,
+        }
+    }
+
+    fn place(model: &str, regions: &[Region]) -> Placement {
+        Placement {
+            model: model.to_string(),
+            regions: regions.to_vec(),
+        }
+    }
+
+    #[test]
+    fn empty_and_compact_pools_plan_nothing() {
+        let plan = plan_compaction(&[], 2, 256, &spec());
+        assert!(plan.is_noop());
+        assert_eq!(plan.spans_before, 0);
+        // Already bottom-packed tenants stay put.
+        let ps = vec![
+            place("a", &[reg(0, 0, 108)]),
+            place("b", &[reg(0, 108, 82)]),
+            place("c", &[reg(1, 0, 139)]),
+        ];
+        let plan = plan_compaction(&ps, 2, 256, &spec());
+        assert!(plan.is_noop(), "{:?}", plan.moves);
+        assert_eq!(plan.spans_before, 3);
+        assert_eq!(plan.spans_after, 3);
+        assert_eq!(plan.migration_cycles, 0);
+    }
+
+    #[test]
+    fn fragmented_tenant_coalesces_into_one_span() {
+        // The churned shape: a at the bottom, c split around a hole.
+        let ps = vec![
+            place("a", &[reg(0, 0, 108)]),
+            place("c", &[reg(1, 0, 139)]),
+        ];
+        let plan = plan_compaction(&ps, 2, 256, &spec());
+        assert_eq!(plan.moves.len(), 1);
+        let mv = &plan.moves[0];
+        assert_eq!(mv.tenant, "c");
+        assert_eq!(mv.from, reg(1, 0, 139));
+        assert_eq!(mv.to, reg(0, 108, 139));
+        assert_eq!(plan.relocated, vec![("c".to_string(), vec![reg(0, 108, 139)])]);
+        assert_eq!(plan.moved_bls, 139);
+        assert_eq!(plan.migration_cycles, 139);
+        assert_eq!(plan.spans_before, 2);
+        assert_eq!(plan.spans_after, 2);
+    }
+
+    #[test]
+    fn multi_span_tenant_merges_and_counts_drop() {
+        // b holds two fragments around a freed hole; compaction slides it
+        // into one contiguous span right after a.
+        let ps = vec![
+            place("a", &[reg(0, 0, 100)]),
+            place("b", &[reg(0, 120, 30), reg(0, 200, 20)]),
+        ];
+        let plan = plan_compaction(&ps, 1, 256, &spec());
+        assert_eq!(plan.spans_before, 3);
+        assert_eq!(plan.spans_after, 2);
+        assert_eq!(plan.moves.len(), 2, "one move per contiguous source piece");
+        assert_eq!(plan.moves[0].from, reg(0, 120, 30));
+        assert_eq!(plan.moves[0].to, reg(0, 100, 30));
+        assert_eq!(plan.moves[1].from, reg(0, 200, 20));
+        assert_eq!(plan.moves[1].to, reg(0, 130, 20));
+        assert_eq!(
+            plan.relocated,
+            vec![("b".to_string(), vec![reg(0, 100, 50)])],
+            "the new layout is one merged span"
+        );
+        assert_eq!(
+            plan.migration_cycles,
+            spans_reload_cycles([30, 20], &spec())
+        );
+    }
+
+    #[test]
+    fn tenant_wider_than_a_macro_splits_across_macros() {
+        // A 300-column tenant cannot be contiguous on 256-column macros:
+        // the planner packs it across ascending tails (two spans), and a
+        // packed multi-macro layout re-plans to a no-op.
+        let ps = vec![place("wide", &[reg(0, 10, 150), reg(1, 50, 150)])];
+        let plan = plan_compaction(&ps, 2, 256, &spec());
+        assert_eq!(
+            plan.relocated,
+            vec![("wide".to_string(), vec![reg(0, 0, 256), reg(1, 0, 44)])]
+        );
+        assert_eq!(plan.spans_after, 2);
+        assert_eq!(plan.largest_free_run_after, 212);
+        let packed = vec![place("wide", &[reg(0, 0, 256), reg(1, 0, 44)])];
+        assert!(plan_compaction(&packed, 2, 256, &spec()).is_noop());
+    }
+
+    #[test]
+    fn improvement_gate_refuses_pointless_shuffles() {
+        // `wide` straddles both macro tails; sliding it cannot reduce its
+        // span count, and the free run it would open (12) is what the
+        // current layout already has split 6+6 — the executor must not
+        // pay migration for a reshuffle that helps nothing.
+        let ps = vec![
+            place("a", &[reg(0, 0, 200)]),
+            place("b", &[reg(1, 0, 200)]),
+            place("wide", &[reg(0, 206, 50), reg(1, 206, 50)]),
+        ];
+        let plan = plan_compaction(&ps, 2, 256, &spec());
+        assert!(!plan.is_noop(), "the planner does propose a reshuffle");
+        assert_eq!(plan.spans_after, plan.spans_before);
+        assert_eq!(plan.largest_free_run_after, 12);
+        assert!(plan.improves(6), "a 6-wide current run would improve to 12");
+        assert!(!plan.improves(12), "equal run + equal spans = refused");
+        // A genuinely fragmenting layout improves regardless of the run.
+        let ps = vec![
+            place("a", &[reg(0, 0, 100)]),
+            place("b", &[reg(0, 120, 30), reg(0, 200, 20)]),
+        ];
+        let plan = plan_compaction(&ps, 1, 256, &spec());
+        assert!(plan.improves(106), "span count drops 3 -> 2");
+    }
+
+    #[test]
+    fn targets_stay_disjoint_and_widths_preserved() {
+        let ps = vec![
+            place("a", &[reg(0, 30, 40), reg(1, 100, 10)]),
+            place("b", &[reg(0, 90, 60)]),
+            place("c", &[reg(1, 0, 70), reg(0, 200, 56)]),
+        ];
+        let plan = plan_compaction(&ps, 2, 256, &spec());
+        // Every tenant's new layout preserves its width.
+        for (name, layout) in &plan.relocated {
+            let old: usize = ps
+                .iter()
+                .find(|p| &p.model == name)
+                .unwrap()
+                .regions
+                .iter()
+                .map(|r| r.bl_count)
+                .sum();
+            let new: usize = layout.iter().map(|r| r.bl_count).sum();
+            assert_eq!(old, new, "{name}");
+        }
+        // Targets (moved layouts + untouched placements) are disjoint.
+        let mut all: Vec<Region> = Vec::new();
+        for p in &ps {
+            if !plan.relocated.iter().any(|(n, _)| n == &p.model) {
+                all.extend(p.regions.iter().copied());
+            }
+        }
+        for (_, layout) in &plan.relocated {
+            all.extend(layout.iter().copied());
+        }
+        for (i, a) in all.iter().enumerate() {
+            for b in &all[i + 1..] {
+                assert!(!a.overlaps(b), "{a:?} overlaps {b:?}");
+            }
+        }
+        // Moves pair equal widths and are consistent with the layouts.
+        for mv in &plan.moves {
+            assert_eq!(mv.from.bl_count, mv.to.bl_count);
+        }
+        assert!(plan.spans_after <= plan.spans_before);
+    }
+
+    #[test]
+    fn fragmentation_score_and_spans_per_tenant() {
+        let f = Fragmentation {
+            free_regions: 2,
+            largest_free_run: 183,
+            free_bls: 265,
+            bitlines_per_macro: 256,
+            resident_spans: 5,
+            resident_tenants: 3,
+        };
+        assert!((f.score() - (1.0 - 183.0 / 256.0)).abs() < 1e-12);
+        assert!((f.mean_spans_per_tenant() - 5.0 / 3.0).abs() < 1e-12);
+        // Full pool and empty pool both score 0 (nothing to coalesce).
+        let full = Fragmentation {
+            free_bls: 0,
+            largest_free_run: 0,
+            ..f
+        };
+        assert_eq!(full.score(), 0.0);
+        let fresh = Fragmentation {
+            free_regions: 1,
+            largest_free_run: 256,
+            free_bls: 512,
+            resident_spans: 0,
+            resident_tenants: 0,
+            ..f
+        };
+        assert_eq!(fresh.score(), 0.0);
+        assert_eq!(fresh.mean_spans_per_tenant(), 0.0);
+        // JSON carries the derived metrics.
+        let j = f.to_json();
+        assert_eq!(j.get("free_regions").as_usize(), Some(2));
+        assert!(j.get("score").as_f64().unwrap() > 0.28);
+    }
+}

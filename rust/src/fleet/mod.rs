@@ -14,7 +14,19 @@
 //!   ([`Region`](crate::mapping::Region)): with co-residency enabled two
 //!   models share one macro's spare columns, and every placement change
 //!   is charged the cost model's (partial) reload cycles ([`Placer`],
-//!   [`SwapEvent`]). Whole-macro placement remains the degenerate case.
+//!   [`SwapEvent`]). *Where* allocations land is a pluggable
+//!   [`FitPolicy`](crate::mapping::FitPolicy) (`FleetConfig::fit`:
+//!   first/best/worst/buddy/affinity). Whole-macro placement remains
+//!   the degenerate case.
+//! * [`compactor`] — online defragmentation: plans the minimal span
+//!   moves that coalesce a churned pool's free columns
+//!   ([`plan_compaction`], [`CompactionPlan`], [`SpanMove`]) and the
+//!   [`Fragmentation`] metrics that trigger it
+//!   (`FleetConfig::defrag_threshold`, `cim-adapt fleet --defrag`).
+//!   [`Fleet::compact`] executes a plan: resident placements are
+//!   *relocated* in place (weights preserved — the twin's columns really
+//!   move), and every move is charged `region_reload_cycles(width)`
+//!   under a separate **migration** attribution in all ledgers.
 //! * [`evictor`] — pluggable victim selection (the [`Evictor`] trait;
 //!   built-in LRU or reload-cost weighted [`PolicyEvictor`]; pinned
 //!   models are untouchable) when aggregate demand exceeds the pool.
@@ -37,18 +49,22 @@
 //! `rust/tests/proptests.rs`): fleet-level reload cycles equal the sum of
 //! per-macro `MacroStats::load_cycles` **and** the sum of per-tenant
 //! attribution — reload cost is only ever charged through a macro, and
-//! every charge names the tenant that incurred it.
+//! every charge names the tenant that incurred it. Migration cycles obey
+//! the same conservation law on their own ledger (fleet total = Σ
+//! per-macro = Σ per-tenant = twin `migration_cycles`).
 //!
 //! The operational payoff of compression, demonstrated by
 //! `benches/micro_fleet.rs`: a morphed model fits where its uncompressed
 //! ancestor forces evictions or pages, so the same request mix sustains
 //! strictly fewer reload cycles.
 
+pub mod compactor;
 pub mod evictor;
 pub mod placer;
 pub mod registry;
 pub mod server;
 
+pub use compactor::{plan_compaction, CompactionPlan, Fragmentation, SpanMove};
 pub use evictor::{EvictionPolicy, Evictor, PolicyEvictor, VictimCandidate};
 pub use placer::{Placement, Placer, SwapEvent};
 pub use registry::{ModelEntry, ModelRegistry, ModelWeights};

@@ -29,8 +29,9 @@ use std::collections::BTreeMap;
 
 use crate::config::MacroSpec;
 use crate::latency::spans_reload_cycles;
-use crate::mapping::{Region, RegionAllocator};
+use crate::mapping::{FirstFit, FitHints, FitPolicy, Region, RegionAllocator};
 
+use super::compactor::Fragmentation;
 use super::evictor::{Evictor, VictimCandidate};
 use super::registry::{ModelEntry, ModelRegistry};
 
@@ -85,11 +86,17 @@ impl SwapEvent {
 }
 
 /// Region-granular ownership state of the fleet's physical macros.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct Placer {
     alloc: RegionAllocator,
     coresident: bool,
+    /// Where new allocations land ([`FitPolicy`]); first-fit by default.
+    fit: Box<dyn FitPolicy + Send>,
     resident: BTreeMap<String, Vec<Region>>,
+    /// Macros each tenant touched the last time it was placed — survives
+    /// eviction, so [`AffinityFit`](crate::mapping::AffinityFit) can
+    /// prefer a returning tenant's previous macros.
+    history: BTreeMap<String, Vec<usize>>,
     last_used: BTreeMap<String, u64>,
     clock: u64,
 }
@@ -97,14 +104,33 @@ pub struct Placer {
 impl Placer {
     /// `coresident = false` is the degenerate whole-macro mode.
     pub fn new(num_macros: usize, bitlines: usize, coresident: bool) -> Placer {
+        Placer::with_fit_policy(num_macros, bitlines, coresident, Box::new(FirstFit))
+    }
+
+    /// A placer with a caller-supplied fit policy — the extension point
+    /// the [`FitPolicy`] trait exists for (`FleetConfig::fit` only
+    /// covers the built-ins).
+    pub fn with_fit_policy(
+        num_macros: usize,
+        bitlines: usize,
+        coresident: bool,
+        fit: Box<dyn FitPolicy + Send>,
+    ) -> Placer {
         assert!(num_macros > 0, "fleet needs at least one macro");
         Placer {
             alloc: RegionAllocator::new(num_macros, bitlines),
             coresident,
+            fit,
             resident: BTreeMap::new(),
+            history: BTreeMap::new(),
             last_used: BTreeMap::new(),
             clock: 0,
         }
+    }
+
+    /// Name of the active fit policy.
+    pub fn fit_name(&self) -> &'static str {
+        self.fit.name()
     }
 
     pub fn num_macros(&self) -> usize {
@@ -133,6 +159,32 @@ impl Placer {
     /// Fully-free macros, ascending.
     pub fn free_whole_macros(&self) -> Vec<usize> {
         self.alloc.free_whole_macros()
+    }
+
+    /// Free intervals across the pool (see
+    /// [`RegionAllocator::free_region_count`]).
+    pub fn free_region_count(&self) -> usize {
+        self.alloc.free_region_count()
+    }
+
+    /// Largest contiguous free run (see
+    /// [`RegionAllocator::largest_free_run`]).
+    pub fn largest_free_run(&self) -> usize {
+        self.alloc.largest_free_run()
+    }
+
+    /// Current fragmentation metrics: free-space splintering plus the
+    /// resident side (spans per tenant) — what the fleet's defrag
+    /// trigger and `FleetSnapshot::fragmentation` report.
+    pub fn fragmentation(&self) -> Fragmentation {
+        Fragmentation {
+            free_regions: self.alloc.free_region_count(),
+            largest_free_run: self.alloc.largest_free_run(),
+            free_bls: self.alloc.free_bls(),
+            bitlines_per_macro: self.alloc.bitlines(),
+            resident_spans: self.resident.values().map(|r| r.len()).sum(),
+            resident_tenants: self.resident.len(),
+        }
     }
 
     /// Number of fully-free macros.
@@ -350,12 +402,19 @@ impl Placer {
             evicted.push(name);
         }
         let regions = if self.coresident {
-            self.alloc.alloc(entry.bls_needed())
+            let prefs = self.history.get(&entry.name).cloned().unwrap_or_default();
+            let hints = FitHints {
+                preferred_macros: &prefs,
+            };
+            self.alloc
+                .alloc_with(self.fit.as_ref(), entry.bls_needed(), &hints)
         } else {
             self.alloc.alloc_whole_macros(entry.macros_needed())
         }
         .expect("has_room() guaranteed capacity");
         self.resident.insert(entry.name.clone(), regions.clone());
+        self.history
+            .insert(entry.name.clone(), distinct_macros(&regions));
         self.touch(&entry.name);
         Ok(SwapEvent {
             model: entry.name.clone(),
@@ -363,6 +422,38 @@ impl Placer {
             evicted,
             regions,
         })
+    }
+
+    /// Apply a compaction plan's relocations: every named tenant must be
+    /// resident, and its new layout must preserve its width and land on
+    /// space that is free once all relocated tenants' old spans are
+    /// released (the planner guarantees this; violating it is a bug, so
+    /// the placer asserts rather than unwinding a half-moved pool).
+    /// Recency is untouched — migration is not a use.
+    pub fn relocate(&mut self, relocated: &[(String, Vec<Region>)]) {
+        for (name, regions) in relocated {
+            let old = self
+                .resident
+                .get(name)
+                .unwrap_or_else(|| panic!("relocating non-resident tenant '{name}'"));
+            let old_w: usize = old.iter().map(|r| r.bl_count).sum();
+            let new_w: usize = regions.iter().map(|r| r.bl_count).sum();
+            assert_eq!(old_w, new_w, "relocation changes '{name}'s width");
+        }
+        // Two phases: vacate every moved tenant, then claim every new
+        // layout — targets may overlap another tenant's *old* spans.
+        for (name, _) in relocated {
+            let old = self.resident.get(name).cloned().unwrap_or_default();
+            self.alloc.release(&old);
+        }
+        for (name, regions) in relocated {
+            assert!(
+                self.alloc.reserve(regions),
+                "compaction target for '{name}' overlaps occupied space"
+            );
+            self.resident.insert(name.clone(), regions.clone());
+            self.history.insert(name.clone(), distinct_macros(regions));
+        }
     }
 }
 
@@ -607,5 +698,122 @@ mod tests {
         placer.release("b");
         assert_eq!(placer.free_macro_count(), 1, "freed spans coalesce");
         assert_eq!(placer.free_bls(), 256);
+    }
+
+    // ---- fit policies, affinity history, relocation ------------------------
+
+    #[test]
+    fn best_fit_placer_avoids_the_split_first_fit_takes() {
+        // Holes {82 @ m0, 183 @ m1} (the churned-pool shape): first-fit
+        // splits a 139-column tenant across both, best-fit lands it in
+        // one span inside the big hole.
+        let spec = MacroSpec::default();
+        let mut reg = ModelRegistry::new(spec);
+        for (name, scale) in [("a", 0.04), ("b", 0.03), ("c", 0.05), ("d", 0.04), ("e", 0.05)] {
+            reg.register(name, vgg9().scaled(scale), false).unwrap();
+        }
+        // Register/retire churn, then a fresh 139-column tenant `e`.
+        let churn_then_place_e = |placer: &mut Placer| {
+            for name in ["a", "b", "c", "d"] {
+                let entry = reg.get(name).unwrap();
+                placer
+                    .place(entry, &reg, &PolicyEvictor::new(EvictionPolicy::Lru), &spec)
+                    .unwrap();
+            }
+            placer.release("b");
+            placer.release("d");
+            placer
+                .place(reg.get("e").unwrap(), &reg, &PolicyEvictor::new(EvictionPolicy::Lru), &spec)
+                .unwrap()
+        };
+
+        let mut ff = Placer::new(2, spec.bitlines, true);
+        assert_eq!(ff.fit_name(), "first");
+        let ev = churn_then_place_e(&mut ff);
+        assert_eq!(ev.regions.len(), 2, "first-fit splits: {:?}", ev.regions);
+
+        let mut bf = Placer::with_fit_policy(
+            2,
+            spec.bitlines,
+            true,
+            crate::mapping::FitPolicyKind::BestFit.policy(),
+        );
+        assert_eq!(bf.fit_name(), "best");
+        let ev = churn_then_place_e(&mut bf);
+        assert_eq!(ev.regions.len(), 1, "best-fit stays whole: {:?}", ev.regions);
+    }
+
+    #[test]
+    fn affinity_history_survives_eviction_and_relocation() {
+        // a starts on macro 0, gets relocated to macro 1 (history
+        // follows the move), is evicted — and on return the affinity
+        // policy re-lands it on macro 1, where its weights last lived,
+        // even though first-fit would pick macro 0.
+        let spec = MacroSpec::default();
+        let mut reg = ModelRegistry::new(spec);
+        reg.register("a", vgg9().scaled(0.04), false).unwrap(); // 108 BLs
+        let mut placer = Placer::with_fit_policy(
+            2,
+            spec.bitlines,
+            true,
+            crate::mapping::FitPolicyKind::Affinity.policy(),
+        );
+        assert_eq!(placer.fit_name(), "affinity");
+        let pe = PolicyEvictor::new(EvictionPolicy::Lru);
+        let na = reg.get("a").unwrap().bls_needed();
+        let ea = placer.place(reg.get("a").unwrap(), &reg, &pe, &spec).unwrap();
+        assert_eq!(ea.macros(), vec![0], "no history yet: first-fit order");
+        placer.relocate(&[(
+            "a".to_string(),
+            vec![Region { macro_id: 1, bl_start: 0, bl_count: na }],
+        )]);
+        placer.release("a");
+        assert_eq!(placer.free_bls(), placer.pool_bls());
+        let ea2 = placer.place(reg.get("a").unwrap(), &reg, &pe, &spec).unwrap();
+        assert_eq!(ea2.macros(), vec![1], "affinity returns a to macro 1");
+    }
+
+    #[test]
+    fn relocate_moves_residents_and_preserves_occupancy() {
+        let (reg, mut placer) = region_setup(2, &[("a", 0.04), ("b", 0.03)]);
+        place(&mut placer, &reg, "a", EvictionPolicy::Lru).unwrap();
+        place(&mut placer, &reg, "b", EvictionPolicy::Lru).unwrap();
+        let na = reg.get("a").unwrap().bls_needed();
+        let nb = reg.get("b").unwrap().bls_needed();
+        // Slide b to macro 1 (legal: its target is free).
+        let target = vec![Region { macro_id: 1, bl_start: 0, bl_count: nb }];
+        placer.relocate(&[("b".to_string(), target.clone())]);
+        assert_eq!(placer.resident_regions("b").unwrap(), target.as_slice());
+        assert_eq!(placer.occupied_bls(), vec![na, nb]);
+        assert!(placer.is_resident("a") && placer.is_resident("b"));
+        let frag = placer.fragmentation();
+        assert_eq!(frag.resident_tenants, 2);
+        assert_eq!(frag.resident_spans, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-resident")]
+    fn relocate_rejects_unknown_tenants() {
+        let (_, mut placer) = region_setup(1, &[]);
+        placer.relocate(&[(
+            "ghost".to_string(),
+            vec![Region { macro_id: 0, bl_start: 0, bl_count: 1 }],
+        )]);
+    }
+
+    #[test]
+    fn fragmentation_reports_the_churned_shape() {
+        let (reg, mut placer) = region_setup(1, &[("a", 0.04), ("b", 0.03)]);
+        place(&mut placer, &reg, "a", EvictionPolicy::Lru).unwrap();
+        place(&mut placer, &reg, "b", EvictionPolicy::Lru).unwrap();
+        placer.release("a");
+        // Free = [0,108) + [190,256): two fragments, largest 108.
+        let frag = placer.fragmentation();
+        assert_eq!(frag.free_regions, 2);
+        assert_eq!(frag.largest_free_run, 108);
+        assert_eq!(frag.free_bls, 108 + 66);
+        assert!(frag.score() > 0.0);
+        assert_eq!(frag.resident_tenants, 1);
+        assert!((frag.mean_spans_per_tenant() - 1.0).abs() < 1e-12);
     }
 }

@@ -19,9 +19,19 @@
 //! Placement is region-granular (see [`Placer`]): with
 //! `FleetConfig::coresident` two tenants can share one macro's spare
 //! bitline columns, and a hot-swap streams only the occupied columns.
-//! Every charge lands in **three** ledgers that agree by construction:
-//! fleet totals, per-macro [`MacroStats`], and per-tenant `MacroStats`
-//! (attribution on shared macros follows who incurred the cycles).
+//! *Where* allocations land is a pluggable
+//! [`FitPolicy`](crate::mapping::FitPolicy) (`FleetConfig::fit`:
+//! first/best/worst/buddy/affinity built-ins), and a churned pool can be
+//! **defragmented online**: [`Fleet::compact`] plans a minimal set of
+//! span moves (see [`super::compactor`]), materializes them on the twin
+//! pool, and charges each move `region_reload_cycles(width)` under a
+//! separate *migration* attribution — triggered manually or by
+//! `FleetConfig::defrag_threshold` whenever a hot-swap is imminent on a
+//! fragmented pool. Every charge lands in ledgers that agree by
+//! construction: fleet totals, per-macro [`MacroStats`], and per-tenant
+//! `MacroStats` (attribution on shared macros follows who incurred the
+//! cycles), with hot-swap and migration traffic kept separate in all of
+//! them.
 //!
 //! With `FleetConfig::execution = Twin` the fleet additionally owns a
 //! pool of real [`CimMacro`]s (the digital twin). Every hot-swap wraps
@@ -56,7 +66,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::arch::ModelArch;
-use crate::cim::{AdderTree, CimMacro, MacroStats};
+use crate::cim::{AdderTree, CimMacro, MacroStats, WeightCell};
 use crate::config::{ExecutionMode, FleetConfig, MacroSpec};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
@@ -64,10 +74,11 @@ use crate::coordinator::request::{InferResponse, RequestId, Ticket};
 use crate::coordinator::scheduler::MacroScheduler;
 use crate::coordinator::server::sim_classify;
 use crate::latency::region_reload_cycles;
-use crate::mapping::{PlacedMapping, Region};
+use crate::mapping::{FitPolicy, PlacedMapping, Region};
 use crate::quant::psum::segment_inputs;
 use crate::util::json::Json;
 
+use super::compactor::{plan_compaction, CompactionPlan, Fragmentation};
 use super::evictor::{Evictor, PolicyEvictor};
 use super::placer::{Placement, Placer};
 use super::registry::{ModelEntry, ModelRegistry, ModelWeights};
@@ -93,6 +104,9 @@ pub struct BatchOutcome {
     /// Load events behind those cycles: one per region on a hot-swap
     /// (whole-macro mode: one per macro), one per macro load when paging.
     pub reload_events: u64,
+    /// Migration cycles a threshold-triggered compaction charged before
+    /// this batch's placement (0 unless online defrag ran).
+    pub migration_cycles: u64,
     /// Models evicted to serve this batch.
     pub evicted: Vec<String>,
 }
@@ -109,6 +123,12 @@ pub struct FleetSnapshot {
     /// Fleet-level reload cycles (must equal the per-macro sum *and* the
     /// per-tenant sum).
     pub reload_cycles: u64,
+    /// Fleet-level compaction-migration cycles — attributed separately
+    /// from `reload_cycles` in every ledger (per-macro, per-tenant,
+    /// twin), so defrag traffic never masquerades as hot-swap traffic.
+    pub migration_cycles: u64,
+    /// Compaction passes that actually moved spans.
+    pub compactions: u64,
     /// Placements that loaded weights (hot-swaps + paging episodes).
     pub hot_swaps: u64,
     /// Models evicted to make room.
@@ -127,6 +147,10 @@ pub struct FleetSnapshot {
     pub resident_bls: usize,
     /// Bitline columns per macro (for utilization math).
     pub bitlines_per_macro: usize,
+    /// Free intervals across the pool (allocator view).
+    pub free_region_count: usize,
+    /// Largest contiguous free run in the pool (allocator view).
+    pub largest_free_run: usize,
     /// How this fleet executes inference.
     pub execution: ExecutionMode,
     /// Per-macro counters of the digital twin pool (empty under analytic
@@ -141,8 +165,10 @@ fn stats_json(s: &MacroStats) -> Json {
     Json::obj()
         .with("compute_cycles", s.compute_cycles)
         .with("load_cycles", s.load_cycles)
+        .with("migration_cycles", s.migration_cycles)
         .with("conversions", s.conversions)
         .with("reloads", s.reloads)
+        .with("migrations", s.migrations)
 }
 
 impl FleetSnapshot {
@@ -165,6 +191,42 @@ impl FleetSnapshot {
     /// execution (no twin pool).
     pub fn twin_load_cycles(&self) -> u64 {
         self.twin_stats.iter().map(|s| s.load_cycles).sum()
+    }
+
+    /// Sum of per-macro migration cycles — the conservation counterpart
+    /// of [`FleetSnapshot::migration_cycles`].
+    pub fn macro_migration_cycles(&self) -> u64 {
+        self.macro_stats.iter().map(|s| s.migration_cycles).sum()
+    }
+
+    /// Sum of per-tenant migration cycles — the attribution counterpart
+    /// of [`FleetSnapshot::migration_cycles`].
+    pub fn tenant_migration_cycles(&self) -> u64 {
+        self.tenant_stats.iter().map(|(_, s)| s.migration_cycles).sum()
+    }
+
+    /// Sum of the twin pool's charged migration cycles. Under twin
+    /// execution this equals [`FleetSnapshot::migration_cycles`] exactly
+    /// — every planned move was really executed as one `migrate_columns`
+    /// write charged the identical per-span figure.
+    pub fn twin_migration_cycles(&self) -> u64 {
+        self.twin_stats.iter().map(|s| s.migration_cycles).sum()
+    }
+
+    /// Fragmentation metrics of the pool at snapshot time: free-space
+    /// splintering (region count, largest run) plus the resident side
+    /// (mean spans per tenant).
+    pub fn fragmentation(&self) -> Fragmentation {
+        let pool = self.occupied_bls.len() * self.bitlines_per_macro;
+        let occupied: usize = self.occupied_bls.iter().sum();
+        Fragmentation {
+            free_regions: self.free_region_count,
+            largest_free_run: self.largest_free_run,
+            free_bls: pool - occupied,
+            bitlines_per_macro: self.bitlines_per_macro,
+            resident_spans: self.resident.iter().map(|p| p.regions.len()).sum(),
+            resident_tenants: self.resident.len(),
+        }
     }
 
     /// Aggregate counters over the whole pool.
@@ -197,9 +259,12 @@ impl FleetSnapshot {
         let mut j = Json::obj()
             .with("execution", self.execution.as_str())
             .with("reload_cycles", self.reload_cycles)
+            .with("migration_cycles", self.migration_cycles)
+            .with("compactions", self.compactions)
             .with("hot_swaps", self.hot_swaps)
             .with("evictions", self.evictions)
             .with("fleet_utilization", self.utilization())
+            .with("fragmentation", self.fragmentation().to_json())
             .with("resident_bls", self.resident_bls)
             .with(
                 "occupied_bls",
@@ -257,7 +322,8 @@ impl FleetSnapshot {
                     "twin",
                     Json::Arr(self.twin_stats.iter().map(stats_json).collect()),
                 )
-                .with("twin_load_cycles", self.twin_load_cycles());
+                .with("twin_load_cycles", self.twin_load_cycles())
+                .with("twin_migration_cycles", self.twin_migration_cycles());
         }
         j
     }
@@ -272,6 +338,11 @@ pub struct Fleet {
     macro_stats: Vec<MacroStats>,
     tenant_stats: BTreeMap<String, MacroStats>,
     reload_cycles_total: u64,
+    migration_cycles_total: u64,
+    compactions: u64,
+    /// Online-defrag trigger (0 = disabled): compact before a hot-swap
+    /// when the pool's fragmentation score exceeds this.
+    defrag_threshold: f64,
     hot_swaps: u64,
     evictions: u64,
     execution: ExecutionMode,
@@ -301,11 +372,14 @@ impl Fleet {
         Fleet {
             spec: *spec,
             registry,
-            placer: Placer::new(num, spec.bitlines, cfg.coresident),
+            placer: Placer::with_fit_policy(num, spec.bitlines, cfg.coresident, cfg.fit.policy()),
             evictor: Box::new(PolicyEvictor::new(cfg.policy)),
             macro_stats: vec![MacroStats::default(); num],
             tenant_stats: BTreeMap::new(),
             reload_cycles_total: 0,
+            migration_cycles_total: 0,
+            compactions: 0,
+            defrag_threshold: cfg.defrag_threshold,
             hot_swaps: 0,
             evictions: 0,
             execution: cfg.execution,
@@ -326,6 +400,24 @@ impl Fleet {
             evictor,
             ..Fleet::new(cfg, spec)
         }
+    }
+
+    /// Like [`Fleet::new`] but with a caller-supplied fit policy — the
+    /// extension point the [`FitPolicy`] trait exists for (the
+    /// `FleetConfig::fit` enum only covers the built-ins).
+    pub fn with_fit_policy(
+        cfg: &FleetConfig,
+        spec: &MacroSpec,
+        fit: Box<dyn FitPolicy + Send>,
+    ) -> Fleet {
+        let mut fleet = Fleet::new(cfg, spec);
+        fleet.placer = Placer::with_fit_policy(
+            cfg.num_macros.max(1),
+            spec.bitlines,
+            cfg.coresident,
+            fit,
+        );
+        fleet
     }
 
     pub fn registry(&self) -> &ModelRegistry {
@@ -389,6 +481,97 @@ impl Fleet {
         self.placer.release(name);
         self.placed.remove(name);
         Ok(())
+    }
+
+    /// Current fragmentation metrics of the pool.
+    pub fn fragmentation(&self) -> Fragmentation {
+        self.placer.fragmentation()
+    }
+
+    /// Defragment the pool online: plan the minimal span moves that
+    /// coalesce free space ([`plan_compaction`]), execute them on the
+    /// twin pool (read the moving columns, clear the vacated cells,
+    /// write each destination as one charged `migrate_columns` span),
+    /// rewrite the placer and the materialized
+    /// [`PlacedMapping`]s, and charge every move
+    /// `region_reload_cycles(width)` to the migration ledgers — fleet
+    /// total, destination macro, owning tenant, and (by construction,
+    /// since the twin charged the identical figure per move) the twin
+    /// pool. Pinned tenants may move: migration is not eviction, they
+    /// stay resident throughout.
+    ///
+    /// Plans that would not strictly improve the pool (fewer resident
+    /// spans, or a larger contiguous free run) are discarded without
+    /// charging anything, which also guarantees repeated compaction
+    /// converges. Whole-macro pools never fragment, so non-coresident
+    /// fleets always return the empty plan.
+    pub fn compact(&mut self) -> Result<CompactionPlan> {
+        if !self.placer.coresident() {
+            return Ok(CompactionPlan::default());
+        }
+        let plan = plan_compaction(
+            &self.placer.placements(),
+            self.placer.num_macros(),
+            self.spec.bitlines,
+            &self.spec,
+        );
+        if !plan.improves(self.placer.largest_free_run()) {
+            return Ok(CompactionPlan::default());
+        }
+        // Rewrite the materialized placements first (pure): any error
+        // leaves the fleet untouched.
+        let mut new_placed: Vec<(String, PlacedMapping)> = Vec::new();
+        for (name, _) in &plan.relocated {
+            if let Some(pm) = self.placed.get(name) {
+                let moves: Vec<(Region, Region)> = plan
+                    .moves
+                    .iter()
+                    .filter(|m| &m.tenant == name)
+                    .map(|m| (m.from, m.to))
+                    .collect();
+                new_placed.push((name.clone(), pm.relocate(&moves)?));
+            }
+        }
+        // Move the real columns on the twin pool: read every source
+        // before any write (a destination may overlap another move's
+        // source — or its own), clear the vacated cells (bookkeeping
+        // only), then write each destination as one charged migration.
+        if !self.twin.is_empty() {
+            let buffers: Vec<Vec<Vec<WeightCell>>> = plan
+                .moves
+                .iter()
+                .map(|mv| {
+                    (0..mv.from.bl_count)
+                        .map(|i| self.twin[mv.from.macro_id].read_column(mv.from.bl_start + i))
+                        .collect()
+                })
+                .collect();
+            for mv in &plan.moves {
+                self.twin[mv.from.macro_id].clear_columns(mv.from.bl_start, mv.from.bl_count);
+            }
+            for (mv, cols) in plan.moves.iter().zip(&buffers) {
+                self.twin[mv.to.macro_id].migrate_columns(mv.to.bl_start, cols);
+            }
+        }
+        // Commit placer + placed state, then charge the analytic ledgers
+        // (destination macro + owning tenant + fleet total) the same
+        // per-move figure the twin just charged.
+        self.placer.relocate(&plan.relocated);
+        for (name, pm) in new_placed {
+            self.placed.insert(name, pm);
+        }
+        for mv in &plan.moves {
+            let c = region_reload_cycles(mv.to.bl_count, &self.spec);
+            let stats = &mut self.macro_stats[mv.to.macro_id];
+            stats.migration_cycles += c;
+            stats.migrations += 1;
+            let tenant = self.tenant_stats.entry(mv.tenant.clone()).or_default();
+            tenant.migration_cycles += c;
+            tenant.migrations += 1;
+            self.migration_cycles_total += c;
+        }
+        self.compactions += 1;
+        Ok(plan)
     }
 
     /// Charge the region-granular loads of one hot-swap: each loaded
@@ -466,9 +649,27 @@ impl Fleet {
         tenant.conversions += conversions;
     }
 
-    /// Serve one batch for `model`, hot-swapping it in when necessary.
+    /// Serve one batch for `model`, hot-swapping it in when necessary —
+    /// compacting the pool first when the defrag threshold is armed, a
+    /// hot-swap is imminent, and fragmentation exceeds the threshold (so
+    /// the incoming tenant lands contiguously instead of splintering).
     pub fn serve_batch(&mut self, model: &str, images: &[Vec<f32>]) -> Result<BatchOutcome> {
         anyhow::ensure!(!images.is_empty(), "empty batch for model '{model}'");
+        let mut migration_cycles = 0u64;
+        if self.defrag_threshold > 0.0 && !self.placer.is_resident(model) {
+            // Only an eviction-free hot-swap benefits: a paging tenant
+            // evicts everyone regardless, and one that needs evictions
+            // would discard the very columns a compaction just moved —
+            // so compact only when the tenant fits the free space as-is.
+            let fits_free = self
+                .registry
+                .get(model)
+                .map(|e| self.placer.coresident() && self.placer.free_bls() >= e.bls_needed())
+                .unwrap_or(false);
+            if fits_free && self.placer.fragmentation().score() > self.defrag_threshold {
+                migration_cycles = self.compact()?.migration_cycles;
+            }
+        }
         let entry = self
             .registry
             .get(model)
@@ -577,9 +778,10 @@ impl Fleet {
             batch: images.len(),
             classes,
             logits,
-            device_cycles: compute_total + reload_cycles,
+            device_cycles: compute_total + reload_cycles + migration_cycles,
             reload_cycles,
             reload_events,
+            migration_cycles,
             evicted,
         })
     }
@@ -620,12 +822,15 @@ impl Fleet {
             .filter_map(|p| self.registry.get(&p.model).map(|e| e.bls_needed()))
             .sum();
         // Twin/ledger agreement is structural: every ledger load charge
-        // has a twin counterpart (materialization or mirrored paging).
+        // has a twin counterpart (materialization or mirrored paging),
+        // and every migration charge a `migrate_columns` write.
         debug_assert!(
             self.twin.is_empty()
-                || self.twin.iter().map(|m| m.stats.load_cycles).sum::<u64>()
-                    == self.reload_cycles_total,
-            "twin load cycles diverged from the analytic ledger"
+                || (self.twin.iter().map(|m| m.stats.load_cycles).sum::<u64>()
+                    == self.reload_cycles_total
+                    && self.twin.iter().map(|m| m.stats.migration_cycles).sum::<u64>()
+                        == self.migration_cycles_total),
+            "twin load/migration cycles diverged from the analytic ledger"
         );
         FleetSnapshot {
             macro_stats: self.macro_stats.clone(),
@@ -635,6 +840,8 @@ impl Fleet {
                 .map(|(n, s)| (n.clone(), *s))
                 .collect(),
             reload_cycles: self.reload_cycles_total,
+            migration_cycles: self.migration_cycles_total,
+            compactions: self.compactions,
             hot_swaps: self.hot_swaps,
             evictions: self.evictions,
             resident,
@@ -642,6 +849,8 @@ impl Fleet {
             occupied_bls: self.placer.occupied_bls(),
             resident_bls,
             bitlines_per_macro: self.spec.bitlines,
+            free_region_count: self.placer.free_region_count(),
+            largest_free_run: self.placer.largest_free_run(),
             execution: self.execution,
             twin_stats: self.twin.iter().map(|m| m.stats).collect(),
         }
@@ -824,6 +1033,9 @@ enum Msg {
         name: String,
         ack: mpsc::Sender<Result<()>>,
     },
+    Compact {
+        ack: mpsc::Sender<Result<CompactionPlan>>,
+    },
     Snapshot {
         ack: mpsc::Sender<FleetSnapshot>,
     },
@@ -916,6 +1128,16 @@ impl FleetHandle {
         let (ack, ack_rx) = mpsc::channel();
         self.send(Msg::Snapshot { ack })?;
         ack_rx.recv().map_err(|_| anyhow::anyhow!("fleet stopped"))
+    }
+
+    /// Defragment the live fleet now (see [`Fleet::compact`]); returns
+    /// the executed plan (empty when nothing improved).
+    pub fn compact(&self) -> Result<CompactionPlan> {
+        let (ack, ack_rx) = mpsc::channel();
+        self.send(Msg::Compact { ack })?;
+        ack_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("fleet stopped"))?
     }
 
     /// Submit a tagged request; rejects when the fleet queue is full.
@@ -1017,6 +1239,9 @@ fn handle_msg(
                 depth.fetch_sub(q.len() as u64, Ordering::AcqRel);
             }
             let _ = ack.send(fleet.retire(&name));
+        }
+        Msg::Compact { ack } => {
+            let _ = ack.send(fleet.compact());
         }
         Msg::Snapshot { ack } => {
             let _ = ack.send(fleet.snapshot());
@@ -1537,6 +1762,119 @@ mod tests {
             let (mac, local) = placed.locate(bl);
             assert_eq!(&fleet.twin_macros()[mac].read_column(local), col);
         }
+    }
+
+    #[test]
+    fn compact_coalesces_fragments_and_charges_migration_ledgers() {
+        // Churn a 1-macro twin pool until c is fragmented (the PR-3
+        // acceptance shape), then compact: b and c both slide, every
+        // ledger books the migration separately from reloads, and the
+        // twin's arrays still hold exactly the right weight columns.
+        let spec = MacroSpec::default();
+        let mut fleet = Fleet::new(&twin_cfg(1, true), &spec);
+        fleet.register("a", vgg9().scaled(0.04), false).unwrap(); // 108
+        fleet.register("b", vgg9().scaled(0.03), false).unwrap(); // 82
+        fleet.register("c", vgg9().scaled(0.05), false).unwrap(); // 139
+        let batch = vec![img()];
+        fleet.serve_batch("a", &batch).unwrap();
+        fleet.serve_batch("b", &batch).unwrap();
+        let oc = fleet.serve_batch("c", &batch).unwrap();
+        assert_eq!(oc.evicted, vec!["a".to_string()]);
+        assert_eq!(fleet.placed_mapping("c").unwrap().spans.len(), 2);
+        let frag = fleet.fragmentation();
+        assert_eq!(frag.resident_spans, 3);
+
+        let reloads_before = fleet.snapshot().reload_cycles;
+        let plan = fleet.compact().unwrap();
+        // c's tail (31 columns) and the whole of b (82) slide down; c's
+        // head piece is already home and must not be charged.
+        assert_eq!(plan.moves.len(), 2);
+        assert_eq!(plan.moved_bls, 31 + 82);
+        assert_eq!(plan.migration_cycles, 31 + 82);
+        assert_eq!(fleet.placed_mapping("c").unwrap().spans.len(), 1);
+        assert_eq!(fleet.placed_mapping("b").unwrap().spans.len(), 1);
+
+        let snap = fleet.snapshot();
+        assert_eq!(snap.compactions, 1);
+        assert_eq!(snap.migration_cycles, 113);
+        assert_eq!(snap.macro_migration_cycles(), 113);
+        assert_eq!(snap.tenant_migration_cycles(), 113);
+        assert_eq!(snap.twin_migration_cycles(), 113, "twin charge by construction");
+        assert_eq!(snap.reload_cycles, reloads_before, "reloads untouched");
+        assert_eq!(snap.twin_load_cycles(), snap.reload_cycles);
+        assert!((snap.fragmentation().mean_spans_per_tenant() - 1.0).abs() < 1e-12);
+        let by_name: std::collections::BTreeMap<_, _> =
+            snap.tenant_stats.iter().cloned().collect();
+        assert_eq!(by_name["c"].migration_cycles, 31);
+        assert_eq!(by_name["b"].migration_cycles, 82);
+        assert_eq!(by_name["b"].migrations, 1);
+
+        // The weights really moved (readback across the new layout), and
+        // a second compaction is a no-op.
+        for name in ["b", "c"] {
+            let placed = fleet.placed_mapping(name).unwrap().clone();
+            let weights = fleet.registry().get(name).unwrap().weights.clone().unwrap();
+            for (bl, col) in weights.columns.iter().enumerate() {
+                let (mac, local) = placed.locate(bl);
+                assert_eq!(&fleet.twin_macros()[mac].read_column(local), col, "{name}:{bl}");
+            }
+        }
+        let again = fleet.compact().unwrap();
+        assert!(again.is_noop(), "compaction converges");
+        assert_eq!(fleet.snapshot().compactions, 1);
+        // Inference over the compacted layout still works.
+        let (class, logits) = fleet.infer_twin("c", &img()).unwrap();
+        assert!(class < 10 && logits.len() == 10);
+    }
+
+    #[test]
+    fn whole_macro_fleet_never_compacts() {
+        let spec = MacroSpec::default();
+        let mut fleet = Fleet::new(&cfg(4), &spec);
+        fleet.register("a", vgg9().scaled(0.1), false).unwrap();
+        fleet.serve_batch("a", &[img()]).unwrap();
+        let plan = fleet.compact().unwrap();
+        assert!(plan.is_noop());
+        let snap = fleet.snapshot();
+        assert_eq!(snap.compactions, 0);
+        assert_eq!(snap.migration_cycles, 0);
+    }
+
+    #[test]
+    fn defrag_threshold_compacts_before_the_hot_swap() {
+        // Best-fit + threshold: after churn the pool scores ~0.42, so
+        // placing the next tenant first compacts (c slides home, 139
+        // migration cycles) and e then lands in one span.
+        let spec = MacroSpec::default();
+        let cfg = FleetConfig {
+            num_macros: 2,
+            coresident: true,
+            fit: crate::mapping::FitPolicyKind::BestFit,
+            defrag_threshold: 0.3,
+            ..cfg(2)
+        };
+        let mut fleet = Fleet::new(&cfg, &spec);
+        for (name, scale) in [("a", 0.04), ("b", 0.03), ("c", 0.05), ("d", 0.04)] {
+            fleet.register(name, vgg9().scaled(scale), false).unwrap();
+            fleet.serve_batch(name, &[img()]).unwrap();
+        }
+        fleet.retire("b").unwrap();
+        fleet.retire("d").unwrap();
+        assert!(fleet.fragmentation().score() > 0.3);
+        fleet.register("e", vgg9().scaled(0.05), false).unwrap();
+        let oe = fleet.serve_batch("e", &[img()]).unwrap();
+        assert_eq!(oe.migration_cycles, 139, "c (139 columns) slid home first");
+        assert!(oe.evicted.is_empty());
+        let snap = fleet.snapshot();
+        assert_eq!(snap.compactions, 1);
+        assert_eq!(snap.migration_cycles, 139);
+        assert_eq!(snap.tenant_migration_cycles(), 139);
+        let e_placement = snap.resident.iter().find(|p| p.model == "e").unwrap();
+        assert_eq!(e_placement.regions.len(), 1, "defragged pool: one span");
+        assert!(snap.fragmentation().score() < 0.3);
+        // Residency hits never re-trigger the compactor.
+        fleet.serve_batch("e", &[img()]).unwrap();
+        assert_eq!(fleet.snapshot().compactions, 1);
     }
 
     #[test]

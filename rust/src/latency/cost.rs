@@ -105,6 +105,25 @@ pub fn spans_reload_cycles(bl_counts: impl IntoIterator<Item = usize>, spec: &Ma
         .sum()
 }
 
+/// Extra reload cycles a fragmented layout pays **per hot-swap** over
+/// the contiguous packing of the same footprint:
+/// `spans_reload_cycles(spans) − region_reload_cycles(Σ spans)`.
+///
+/// Zero on the paper's macro (`load_cycles_per_macro == bitlines`, per-
+/// column cost exact); on coarser write granularities every extra span
+/// can pay one rounding cycle. This is the *reload* half of the
+/// fragmentation tax the fleet's compactor reclaims — the other half is
+/// the extra macro pass per segment a span boundary splits, which only
+/// the digital twin observes.
+pub fn fragmentation_penalty_cycles(
+    bl_counts: impl IntoIterator<Item = usize>,
+    spec: &MacroSpec,
+) -> u64 {
+    let widths: Vec<usize> = bl_counts.into_iter().collect();
+    let total: usize = widths.iter().sum();
+    spans_reload_cycles(widths, spec) - region_reload_cycles(total, spec)
+}
+
 /// Cost of a single layer on the given macro.
 pub fn layer_cost(layer: &ConvLayer, spec: &MacroSpec) -> LayerCost {
     let cpb = spec.channels_per_bl(layer.kernel);
@@ -263,6 +282,23 @@ mod tests {
         assert_eq!(spans_reload_cycles([100, 8], &s), 108);
         assert_eq!(spans_reload_cycles([1; 108], &s), 108);
         assert_eq!(spans_reload_cycles(std::iter::empty(), &s), 0);
+    }
+
+    #[test]
+    fn fragmentation_penalty_counts_only_the_rounding_tax() {
+        let paper = spec();
+        // Exact per-column cost: splitting never costs extra.
+        assert_eq!(fragmentation_penalty_cycles([100, 8], &paper), 0);
+        assert_eq!(fragmentation_penalty_cycles([1; 108], &paper), 0);
+        // Coarse writes: each span rounds up on its own.
+        let coarse = MacroSpec {
+            load_cycles_per_macro: 128,
+            ..MacroSpec::default()
+        };
+        assert_eq!(fragmentation_penalty_cycles([6], &coarse), 0);
+        assert_eq!(fragmentation_penalty_cycles([3, 3], &coarse), 1);
+        assert_eq!(fragmentation_penalty_cycles([1; 6], &coarse), 3);
+        assert_eq!(fragmentation_penalty_cycles(std::iter::empty(), &coarse), 0);
     }
 
     #[test]

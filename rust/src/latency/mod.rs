@@ -21,7 +21,8 @@
 pub mod cost;
 
 pub use cost::{
-    layer_cost, model_cost, region_reload_cycles, spans_reload_cycles, LayerCost, ModelCost,
+    fragmentation_penalty_cycles, layer_cost, model_cost, region_reload_cycles,
+    spans_reload_cycles, LayerCost, ModelCost,
 };
 
 #[cfg(test)]

@@ -17,7 +17,7 @@ use cim_adapt::coordinator::server::{Backend, EdgeServer};
 use cim_adapt::data::SynthCifar;
 use cim_adapt::fleet::{EvictionPolicy, FleetServer};
 use cim_adapt::latency::{cost::allocated_usage, model_cost};
-use cim_adapt::mapping::{pack_model, pack_model_at};
+use cim_adapt::mapping::{pack_model, pack_model_at, FitPolicyKind};
 use cim_adapt::morph::flow::morph_flow_synthetic;
 use cim_adapt::report::{fig12_13, table1, table2, table3_4_5, table6};
 use cim_adapt::runtime::ModelRuntime;
@@ -46,8 +46,12 @@ fn main() -> anyhow::Result<()> {
                     .cmd("cost --model M", "analytic cost columns for a model")
                     .cmd("serve [--requests N] [--batch B]", "edge-serving demo over PJRT")
                     .cmd(
-                        "fleet [--macros N] [--bl B] [--requests N] [--policy lru|cost] [--coresident] [--twin]",
-                        "multi-tenant hot-swap serving demo (--twin: run on the simulated macros)",
+                        "fleet [--macros N] [--bl B] [--requests N] [--policy lru|cost] \
+                         [--fit first|best|worst|buddy|affinity] [--coresident] [--twin] \
+                         [--defrag [--defrag-threshold T]]",
+                        "multi-tenant hot-swap serving demo (--twin: run on the simulated \
+                         macros; --defrag: compact the pool online when fragmentation \
+                         crosses the threshold)",
                     )
                     .cmd(
                         "inspect --model M [--base-bl N] [--spans m:s:c,...]",
@@ -228,7 +232,15 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         max_batch: args.usize_or("batch", 8),
         policy: EvictionPolicy::parse(args.str_or("policy", "lru"))
             .ok_or_else(|| anyhow::anyhow!("--policy expects 'lru' or 'cost-weighted'"))?,
+        fit: FitPolicyKind::parse(args.str_or("fit", "first")).ok_or_else(|| {
+            anyhow::anyhow!("--fit expects 'first', 'best', 'worst', 'buddy' or 'affinity'")
+        })?,
         coresident: args.flag("coresident"),
+        defrag_threshold: if args.flag("defrag") {
+            args.f64_or("defrag-threshold", 0.3)
+        } else {
+            0.0
+        },
         execution: if args.flag("twin") {
             ExecutionMode::Twin
         } else {
@@ -264,16 +276,22 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         handle.register(m, out.arch, false)?;
     }
     println!(
-        "fleet: {} macros, policy {}, max batch {}, placement {}, execution {}",
+        "fleet: {} macros, policy {}, fit {}, max batch {}, placement {}, execution {}{}",
         cfg.num_macros,
         cfg.policy.as_str(),
+        cfg.fit.as_str(),
         cfg.max_batch,
         if cfg.coresident {
             "co-resident (bitline regions)"
         } else {
             "whole-macro"
         },
-        cfg.execution.as_str()
+        cfg.execution.as_str(),
+        if cfg.defrag_threshold > 0.0 {
+            format!(", defrag @ {:.2}", cfg.defrag_threshold)
+        } else {
+            String::new()
+        }
     );
 
     let t0 = std::time::Instant::now();
@@ -302,6 +320,19 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         commas(snap.reload_cycles),
         commas(snap.macro_load_cycles()),
         commas(snap.tenant_load_cycles())
+    );
+    let frag = snap.fragmentation();
+    println!(
+        "compactions {} | migration cycles {} (= per-macro {}, per-tenant {}) | \
+         fragmentation {:.3} ({} free regions, largest run {}, {:.2} spans/tenant)",
+        snap.compactions,
+        commas(snap.migration_cycles),
+        commas(snap.macro_migration_cycles()),
+        commas(snap.tenant_migration_cycles()),
+        frag.score(),
+        frag.free_regions,
+        frag.largest_free_run,
+        frag.mean_spans_per_tenant()
     );
     if !snap.twin_stats.is_empty() {
         println!(

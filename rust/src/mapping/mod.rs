@@ -12,11 +12,15 @@
 //! [`region`] adds the fractional-macro placement unit: a [`Region`] is a
 //! `(macro_id, bl_start, bl_count)` span and [`RegionAllocator`] manages
 //! per-macro free-region lists, so the fleet can co-locate two models on
-//! one macro's columns. [`pack_model_at`] produces the matching layout
-//! for a packing that starts mid-macro, and [`placed`] generalizes it to
-//! N spans: a [`PlacedMapping`] lays the model's logical column sequence
-//! across an ordered list of disjoint regions — the representation a
-//! fragmented fleet placement materializes onto the digital twin.
+//! one macro's columns. *Where* an allocation lands is chosen by a
+//! pluggable [`FitPolicy`] (first/best/worst/buddy/affinity built-ins,
+//! selectable via [`FitPolicyKind`]). [`pack_model_at`] produces the
+//! matching layout for a packing that starts mid-macro, and [`placed`]
+//! generalizes it to N spans: a [`PlacedMapping`] lays the model's
+//! logical column sequence across an ordered list of disjoint regions —
+//! the representation a fragmented fleet placement materializes onto the
+//! digital twin, and the thing [`PlacedMapping::relocate`] rewrites when
+//! the fleet's compactor moves resident spans.
 
 pub mod occupancy;
 pub mod packer;
@@ -27,5 +31,8 @@ pub mod viz;
 pub use occupancy::OccupancyGrid;
 pub use packer::{pack_model, pack_model_at, ColumnAssignment, LayerMapping, ModelMapping};
 pub use placed::{PlacedMapping, PlacedRun};
-pub use region::{Region, RegionAllocator};
+pub use region::{
+    AffinityFit, BestFit, BuddyFit, FirstFit, FitHints, FitPolicy, FitPolicyKind, Region,
+    RegionAllocator, WorstFit,
+};
 pub use viz::{render_ascii, render_placed_ascii, render_ppm};

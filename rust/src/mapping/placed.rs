@@ -187,6 +187,77 @@ impl PlacedMapping {
         out
     }
 
+    /// Rewrite the placement under a set of physical span moves
+    /// (`(from, to)` pairs of equal width, each `from` lying entirely
+    /// inside one current span — the shape the fleet's compaction
+    /// planner emits). The logical column order is untouched, so every
+    /// weight cell keeps its logical position and only its physical
+    /// coordinates change; spans that become physically adjacent are
+    /// merged, which is where a defragged placement's run count (and
+    /// with it the per-segment macro pass count) actually drops.
+    pub fn relocate(&self, moves: &[(Region, Region)]) -> anyhow::Result<PlacedMapping> {
+        for (i, (from, to)) in moves.iter().enumerate() {
+            anyhow::ensure!(
+                from.bl_count == to.bl_count,
+                "move {i} changes width: {from:?} -> {to:?}"
+            );
+        }
+        let mut applied = 0usize;
+        let mut new_spans: Vec<Region> = Vec::new();
+        for span in &self.spans {
+            // Moves sourced inside this span, in source order.
+            let mut cuts: Vec<&(Region, Region)> = moves
+                .iter()
+                .filter(|(from, _)| from.overlaps(span))
+                .collect();
+            cuts.sort_by_key(|(from, _)| from.bl_start);
+            let mut pos = span.bl_start;
+            for (from, to) in cuts {
+                anyhow::ensure!(
+                    span.bl_start <= from.bl_start && from.bl_end() <= span.bl_end(),
+                    "move source {from:?} crosses the boundary of span {span:?}"
+                );
+                anyhow::ensure!(
+                    from.bl_start >= pos,
+                    "move sources overlap inside span {span:?}"
+                );
+                if from.bl_start > pos {
+                    new_spans.push(Region {
+                        macro_id: span.macro_id,
+                        bl_start: pos,
+                        bl_count: from.bl_start - pos,
+                    });
+                }
+                new_spans.push(*to);
+                pos = from.bl_end();
+                applied += 1;
+            }
+            if pos < span.bl_end() {
+                new_spans.push(Region {
+                    macro_id: span.macro_id,
+                    bl_start: pos,
+                    bl_count: span.bl_end() - pos,
+                });
+            }
+        }
+        anyhow::ensure!(
+            applied == moves.len(),
+            "{} move(s) do not source from this placement",
+            moves.len() - applied
+        );
+        // Merge physically-adjacent neighbours.
+        let mut merged: Vec<Region> = Vec::new();
+        for s in new_spans {
+            match merged.last_mut() {
+                Some(last) if last.macro_id == s.macro_id && last.bl_end() == s.bl_start => {
+                    last.bl_count += s.bl_count;
+                }
+                _ => merged.push(s),
+            }
+        }
+        PlacedMapping::new(self.mapping.clone(), merged)
+    }
+
     /// Every column assignment: `global_bl` logical, `macro_id`/`local_bl`
     /// physical (see the module docs).
     pub fn columns(&self) -> impl Iterator<Item = ColumnAssignment> + '_ {
@@ -347,6 +418,105 @@ mod tests {
         let all = placed.physical_runs(0, placed.total_bls());
         assert_eq!(all.iter().map(|r| r.bl_count).sum::<usize>(), 108);
         assert!(placed.physical_runs(0, 0).is_empty());
+    }
+
+    #[test]
+    fn relocate_moves_cells_and_merges_adjacent_spans() {
+        let model = small(); // 108 columns
+        let spans = vec![
+            Region { macro_id: 0, bl_start: 0, bl_count: 60 },
+            Region { macro_id: 1, bl_start: 100, bl_count: 48 },
+        ];
+        let placed = PlacedMapping::place_model(&model, &spec(), spans).unwrap();
+        let before: Vec<_> = placed.columns().collect();
+        // Slide the second span home: [m1 100..148) -> [m0 60..108).
+        let mv = (
+            Region { macro_id: 1, bl_start: 100, bl_count: 48 },
+            Region { macro_id: 0, bl_start: 60, bl_count: 48 },
+        );
+        let moved = placed.relocate(&[mv]).unwrap();
+        // Adjacent spans merged: the placement is now one contiguous run.
+        assert_eq!(
+            moved.spans,
+            vec![Region { macro_id: 0, bl_start: 0, bl_count: 108 }]
+        );
+        assert_eq!(moved.physical_runs(0, moved.total_bls()).len(), 1);
+        // Every weight cell kept its logical identity.
+        let after: Vec<_> = moved.columns().collect();
+        assert_eq!(before.len(), after.len());
+        for (b, a) in before.iter().zip(&after) {
+            assert_eq!(
+                (b.global_bl, b.layer, b.segment, b.filter, b.rows),
+                (a.global_bl, a.layer, a.segment, a.filter, a.rows)
+            );
+        }
+        // A no-move relocation is the identity.
+        assert_eq!(placed.relocate(&[]).unwrap().spans, placed.spans);
+    }
+
+    #[test]
+    fn relocate_splits_spans_at_move_boundaries() {
+        let model = small(); // 108 columns
+        let spans = vec![Region { macro_id: 0, bl_start: 100, bl_count: 108 }];
+        let placed = PlacedMapping::place_model(&model, &spec(), spans).unwrap();
+        // Move only the middle 20 columns of the single span elsewhere.
+        let mv = (
+            Region { macro_id: 0, bl_start: 140, bl_count: 20 },
+            Region { macro_id: 1, bl_start: 0, bl_count: 20 },
+        );
+        let moved = placed.relocate(&[mv]).unwrap();
+        assert_eq!(
+            moved.spans,
+            vec![
+                Region { macro_id: 0, bl_start: 100, bl_count: 40 },
+                Region { macro_id: 1, bl_start: 0, bl_count: 20 },
+                Region { macro_id: 0, bl_start: 160, bl_count: 48 },
+            ]
+        );
+        assert_eq!(moved.total_bls(), 108);
+    }
+
+    #[test]
+    fn relocate_rejects_bad_moves() {
+        let model = small();
+        let spans = vec![
+            Region { macro_id: 0, bl_start: 0, bl_count: 60 },
+            Region { macro_id: 1, bl_start: 0, bl_count: 48 },
+        ];
+        let placed = PlacedMapping::place_model(&model, &spec(), spans).unwrap();
+        // Width change.
+        let err = placed
+            .relocate(&[(
+                Region { macro_id: 0, bl_start: 0, bl_count: 60 },
+                Region { macro_id: 2, bl_start: 0, bl_count: 59 },
+            )])
+            .unwrap_err();
+        assert!(err.to_string().contains("changes width"), "{err}");
+        // Source crossing a span boundary.
+        let err = placed
+            .relocate(&[(
+                Region { macro_id: 0, bl_start: 50, bl_count: 20 },
+                Region { macro_id: 2, bl_start: 0, bl_count: 20 },
+            )])
+            .unwrap_err();
+        assert!(err.to_string().contains("crosses"), "{err}");
+        // Source outside the placement entirely.
+        let err = placed
+            .relocate(&[(
+                Region { macro_id: 3, bl_start: 0, bl_count: 10 },
+                Region { macro_id: 2, bl_start: 0, bl_count: 10 },
+            )])
+            .unwrap_err();
+        assert!(err.to_string().contains("do not source"), "{err}");
+        // A move landing on another span (overlap) is caught by the
+        // wrapped validation.
+        let err = placed
+            .relocate(&[(
+                Region { macro_id: 0, bl_start: 0, bl_count: 60 },
+                Region { macro_id: 1, bl_start: 10, bl_count: 60 },
+            )])
+            .unwrap_err();
+        assert!(err.to_string().contains("overlaps"), "{err}");
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Bitline regions — the fractional-macro placement unit.
+//! Bitline regions — the fractional-macro placement unit — and the
+//! pluggable fit policies that choose *where* a footprint lands.
 //!
 //! The paper's Stage-1 adaptation lifts *within-model* array utilization;
 //! this module is what lets the fleet keep that utilization *across*
@@ -8,10 +9,30 @@
 //! remaining columns of the shared macro.
 //!
 //! [`RegionAllocator`] keeps one sorted free-interval list per physical
-//! macro, allocates first-fit (splitting intervals), and coalesces
-//! adjacent intervals on release. Whole-macro placement remains the
-//! degenerate case: [`RegionAllocator::alloc_whole_macros`] only hands
-//! out fully-free macros, which is exactly the pre-region behaviour.
+//! macro and coalesces adjacent intervals on release. *Which* free
+//! intervals an allocation takes is delegated to a [`FitPolicy`]:
+//!
+//! * [`FirstFit`] — take intervals in (macro, offset) order. The
+//!   original, and still the default, behaviour.
+//! * [`BestFit`] — prefer the smallest interval that holds the whole
+//!   request (fewest leftover columns, fewest spans); when none does,
+//!   consume the largest interval and retry with the remainder.
+//! * [`WorstFit`] — always carve from the largest interval, keeping the
+//!   biggest holes big at the cost of nibbling them.
+//! * [`BuddyFit`] — split the request into power-of-two chunks and land
+//!   each on a size-aligned offset, so releases re-coalesce into aligned
+//!   blocks; falls back to first-fit for chunks that cannot align.
+//! * [`AffinityFit`] — first-fit over a macro order that puts the
+//!   tenant's previous macros first ([`FitHints::preferred_macros`]), so
+//!   a returning tenant re-lands where its weights last lived.
+//!
+//! Every policy obeys the same contract: given enough total free
+//! columns, return pairwise-disjoint sub-intervals of free space summing
+//! to exactly the request ([`RegionAllocator::alloc_with`] falls back to
+//! first-fit if a policy declines, so capacity always implies success).
+//! Whole-macro placement remains the degenerate case:
+//! [`RegionAllocator::alloc_whole_macros`] only hands out fully-free
+//! macros, which is exactly the pre-region behaviour.
 
 /// A contiguous span of bitline columns inside one physical macro.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -44,6 +65,370 @@ impl Region {
         self.macro_id == other.macro_id
             && self.bl_start < other.bl_end()
             && other.bl_start < self.bl_end()
+    }
+}
+
+/// Placement context a [`FitPolicy`] may use beyond the raw free lists.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FitHints<'a> {
+    /// Macros the tenant occupied the last time it was resident,
+    /// ascending; empty for a first placement (or an anonymous one).
+    pub preferred_macros: &'a [usize],
+}
+
+/// Pluggable choice of *which* free intervals an allocation consumes.
+///
+/// `free[m]` is macro `m`'s sorted, non-overlapping, non-adjacent
+/// `(bl_start, bl_count)` free-interval list. Implementations must be
+/// deterministic (fleet replays are bit-stable) and, on success, return
+/// pairwise-disjoint sub-intervals of free space whose widths sum to
+/// exactly `bls`, in the order the tenant's logical columns should walk
+/// them. Returning `None` despite sufficient total capacity is allowed
+/// (e.g. no aligned block); the allocator then falls back to first-fit.
+pub trait FitPolicy: std::fmt::Debug {
+    /// Short stable name (CLI/config/telemetry).
+    fn name(&self) -> &'static str;
+
+    /// Plan an allocation of `bls` columns. Must not assume `free` totals
+    /// at least `bls` (the allocator checks, but direct callers may not).
+    fn plan(
+        &self,
+        free: &[Vec<(usize, usize)>],
+        bitlines: usize,
+        bls: usize,
+        hints: &FitHints,
+    ) -> Option<Vec<Region>>;
+}
+
+/// Mutable scratch copy of the free lists, so a policy can account for
+/// its own earlier takes while planning without touching the allocator.
+struct Scratch {
+    free: Vec<Vec<(usize, usize)>>,
+}
+
+impl Scratch {
+    fn new(free: &[Vec<(usize, usize)>]) -> Scratch {
+        Scratch {
+            free: free.to_vec(),
+        }
+    }
+
+    fn total(&self) -> usize {
+        self.free
+            .iter()
+            .map(|m| m.iter().map(|&(_, c)| c).sum::<usize>())
+            .sum()
+    }
+
+    /// All free intervals as `(macro, start, count)`, macro-major.
+    fn intervals(&self) -> Vec<(usize, usize, usize)> {
+        let mut out = Vec::new();
+        for (m, iv) in self.free.iter().enumerate() {
+            for &(s, c) in iv {
+                out.push((m, s, c));
+            }
+        }
+        out
+    }
+
+    /// Carve `[start, start + count)` out of macro `m`'s free space; the
+    /// range must lie inside one free interval.
+    fn take(&mut self, m: usize, start: usize, count: usize) -> Region {
+        let iv = &mut self.free[m];
+        let idx = iv
+            .iter()
+            .position(|&(s, c)| s <= start && start + count <= s + c)
+            .expect("scratch take outside free space");
+        let (s, c) = iv[idx];
+        iv.remove(idx);
+        if start + count < s + c {
+            iv.insert(idx, (start + count, s + c - (start + count)));
+        }
+        if s < start {
+            iv.insert(idx, (s, start - s));
+        }
+        Region {
+            macro_id: m,
+            bl_start: start,
+            bl_count: count,
+        }
+    }
+}
+
+/// First-fit: walk macros in order, consuming intervals front to back —
+/// bit-identical to the pre-policy allocator.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FirstFit;
+
+/// First-fit over an explicit macro order (shared by [`FirstFit`] and
+/// [`AffinityFit`]).
+fn first_fit_in_order(
+    scratch: &mut Scratch,
+    order: impl IntoIterator<Item = usize>,
+    mut remaining: usize,
+) -> Option<Vec<Region>> {
+    let mut regions = Vec::new();
+    for m in order {
+        while remaining > 0 {
+            let Some(&(start, count)) = scratch.free[m].first() else {
+                break;
+            };
+            let take = count.min(remaining);
+            regions.push(scratch.take(m, start, take));
+            remaining -= take;
+        }
+        if remaining == 0 {
+            return Some(regions);
+        }
+    }
+    None
+}
+
+impl FitPolicy for FirstFit {
+    fn name(&self) -> &'static str {
+        "first"
+    }
+
+    fn plan(
+        &self,
+        free: &[Vec<(usize, usize)>],
+        _bitlines: usize,
+        bls: usize,
+        _hints: &FitHints,
+    ) -> Option<Vec<Region>> {
+        let mut scratch = Scratch::new(free);
+        first_fit_in_order(&mut scratch, 0..free.len(), bls)
+    }
+}
+
+/// Best-fit: the smallest hole that holds the whole (remaining) request,
+/// minimizing both leftover fragments and span count; when no hole is
+/// big enough, consume the largest hole entirely and retry.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BestFit;
+
+impl FitPolicy for BestFit {
+    fn name(&self) -> &'static str {
+        "best"
+    }
+
+    fn plan(
+        &self,
+        free: &[Vec<(usize, usize)>],
+        _bitlines: usize,
+        bls: usize,
+        _hints: &FitHints,
+    ) -> Option<Vec<Region>> {
+        let mut scratch = Scratch::new(free);
+        if scratch.total() < bls {
+            return None;
+        }
+        let mut regions = Vec::new();
+        let mut remaining = bls;
+        while remaining > 0 {
+            // Smallest interval that fits everything left (ties: lowest
+            // address); else the largest interval (ties: lowest address).
+            let exact = scratch
+                .intervals()
+                .into_iter()
+                .filter(|&(_, _, c)| c >= remaining)
+                .min_by_key(|&(m, s, c)| (c, m, s));
+            let region = match exact {
+                Some((m, s, _)) => scratch.take(m, s, remaining),
+                None => take_from_largest(&mut scratch, remaining)?,
+            };
+            remaining -= region.bl_count;
+            regions.push(region);
+        }
+        Some(regions)
+    }
+}
+
+/// Take up to `remaining` columns from the largest free hole (ties:
+/// lowest address) — the shared consume-the-biggest step of [`BestFit`]
+/// (when nothing holds the whole request) and [`WorstFit`].
+fn take_from_largest(scratch: &mut Scratch, remaining: usize) -> Option<Region> {
+    let intervals = scratch.intervals();
+    let &(m, s, c) = intervals
+        .iter()
+        .min_by_key(|&&(m, s, c)| (std::cmp::Reverse(c), m, s))?;
+    Some(scratch.take(m, s, c.min(remaining)))
+}
+
+/// Worst-fit: always carve from the largest hole, so big holes stay the
+/// biggest available (at the cost of slowly nibbling them down).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorstFit;
+
+impl FitPolicy for WorstFit {
+    fn name(&self) -> &'static str {
+        "worst"
+    }
+
+    fn plan(
+        &self,
+        free: &[Vec<(usize, usize)>],
+        _bitlines: usize,
+        bls: usize,
+        _hints: &FitHints,
+    ) -> Option<Vec<Region>> {
+        let mut scratch = Scratch::new(free);
+        if scratch.total() < bls {
+            return None;
+        }
+        let mut regions = Vec::new();
+        let mut remaining = bls;
+        while remaining > 0 {
+            let region = take_from_largest(&mut scratch, remaining)?;
+            remaining -= region.bl_count;
+            regions.push(region);
+        }
+        Some(regions)
+    }
+}
+
+/// Buddy-style power-of-two fit: split the request into power-of-two
+/// chunks (largest first) and land each chunk at an offset aligned to
+/// its size, so later releases coalesce back into aligned blocks. A
+/// chunk that cannot land aligned is halved and retried; whatever cannot
+/// align at all falls back to first-fit, so capacity still implies
+/// success.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BuddyFit;
+
+impl FitPolicy for BuddyFit {
+    fn name(&self) -> &'static str {
+        "buddy"
+    }
+
+    fn plan(
+        &self,
+        free: &[Vec<(usize, usize)>],
+        bitlines: usize,
+        bls: usize,
+        _hints: &FitHints,
+    ) -> Option<Vec<Region>> {
+        let mut scratch = Scratch::new(free);
+        if scratch.total() < bls {
+            return None;
+        }
+        let cap = if bitlines.is_power_of_two() {
+            bitlines
+        } else {
+            bitlines.next_power_of_two() / 2
+        };
+        let mut regions = Vec::new();
+        let mut remaining = bls;
+        'outer: while remaining > 0 {
+            // Largest power of two ≤ remaining (capped at the macro).
+            let mut chunk = if remaining.is_power_of_two() {
+                remaining
+            } else {
+                remaining.next_power_of_two() / 2
+            }
+            .min(cap);
+            while chunk > 0 {
+                // First size-aligned slot entirely inside one free interval.
+                let slot = scratch.intervals().into_iter().find_map(|(m, s, c)| {
+                    let aligned = s.div_ceil(chunk) * chunk;
+                    (aligned + chunk <= s + c).then_some((m, aligned))
+                });
+                if let Some((m, start)) = slot {
+                    regions.push(scratch.take(m, start, chunk));
+                    remaining -= chunk;
+                    continue 'outer;
+                }
+                chunk /= 2;
+            }
+            // Defensive: a 1-column chunk aligns anywhere, so this path
+            // is unreachable while capacity holds — finish first-fit.
+            let macros = scratch.free.len();
+            let rest = first_fit_in_order(&mut scratch, 0..macros, remaining)?;
+            regions.extend(rest);
+            remaining = 0;
+        }
+        Some(regions)
+    }
+}
+
+/// Per-tenant affinity: first-fit over a macro order that visits the
+/// tenant's previous macros first, so a returning tenant re-lands on the
+/// macros that last held its weights (cheapest layout churn, and the
+/// natural prefetch target for predictive placement).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AffinityFit;
+
+impl FitPolicy for AffinityFit {
+    fn name(&self) -> &'static str {
+        "affinity"
+    }
+
+    fn plan(
+        &self,
+        free: &[Vec<(usize, usize)>],
+        _bitlines: usize,
+        bls: usize,
+        hints: &FitHints,
+    ) -> Option<Vec<Region>> {
+        let mut order: Vec<usize> = hints
+            .preferred_macros
+            .iter()
+            .copied()
+            .filter(|&m| m < free.len())
+            .collect();
+        for m in 0..free.len() {
+            if !order.contains(&m) {
+                order.push(m);
+            }
+        }
+        let mut scratch = Scratch::new(free);
+        first_fit_in_order(&mut scratch, order, bls)
+    }
+}
+
+/// The built-in fit policies, as a config/CLI-selectable enum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FitPolicyKind {
+    #[default]
+    FirstFit,
+    BestFit,
+    WorstFit,
+    Buddy,
+    Affinity,
+}
+
+impl FitPolicyKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FitPolicyKind::FirstFit => "first",
+            FitPolicyKind::BestFit => "best",
+            FitPolicyKind::WorstFit => "worst",
+            FitPolicyKind::Buddy => "buddy",
+            FitPolicyKind::Affinity => "affinity",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FitPolicyKind> {
+        match s {
+            "first" | "first-fit" => Some(FitPolicyKind::FirstFit),
+            "best" | "best-fit" => Some(FitPolicyKind::BestFit),
+            "worst" | "worst-fit" => Some(FitPolicyKind::WorstFit),
+            "buddy" => Some(FitPolicyKind::Buddy),
+            "affinity" => Some(FitPolicyKind::Affinity),
+            _ => None,
+        }
+    }
+
+    /// Instantiate the policy (the trait is the extension point; this
+    /// enum only covers the built-ins).
+    pub fn policy(&self) -> Box<dyn FitPolicy + Send> {
+        match self {
+            FitPolicyKind::FirstFit => Box::new(FirstFit),
+            FitPolicyKind::BestFit => Box::new(BestFit),
+            FitPolicyKind::WorstFit => Box::new(WorstFit),
+            FitPolicyKind::Buddy => Box::new(BuddyFit),
+            FitPolicyKind::Affinity => Box::new(AffinityFit),
+        }
     }
 }
 
@@ -102,6 +487,23 @@ impl RegionAllocator {
         (0..self.free.len()).map(|m| self.occupied_bls_in(m)).collect()
     }
 
+    /// Number of free intervals across the pool — the defragmenter's
+    /// "how splintered is free space" counter.
+    pub fn free_region_count(&self) -> usize {
+        self.free.iter().map(|m| m.len()).sum()
+    }
+
+    /// Width of the largest contiguous free run (0 on a full pool). A
+    /// run never crosses a macro boundary, so the best possible value is
+    /// `min(free_bls, bitlines)`.
+    pub fn largest_free_run(&self) -> usize {
+        self.free
+            .iter()
+            .flat_map(|m| m.iter().map(|&(_, c)| c))
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Indices of fully-free macros, ascending.
     pub fn free_whole_macros(&self) -> Vec<usize> {
         (0..self.free.len())
@@ -109,43 +511,100 @@ impl RegionAllocator {
             .collect()
     }
 
-    /// First-fit allocation of `bls` columns, splitting free intervals as
-    /// needed; the result may span several macros and several regions per
-    /// macro. Returns `None` (and changes nothing) when the pool lacks
-    /// `bls` free columns in total.
+    /// First-fit allocation of `bls` columns — the historical behaviour,
+    /// now a shorthand for [`RegionAllocator::alloc_with`] + [`FirstFit`].
     pub fn alloc(&mut self, bls: usize) -> Option<Vec<Region>> {
+        self.alloc_with(&FirstFit, bls, &FitHints::default())
+    }
+
+    /// Allocate `bls` columns where `policy` chooses, splitting free
+    /// intervals as needed; the result may span several macros and
+    /// several regions per macro. Returns `None` (and changes nothing)
+    /// when the pool lacks `bls` free columns in total; a policy that
+    /// declines despite capacity (e.g. no aligned block) falls back to
+    /// first-fit, so capacity always implies success.
+    pub fn alloc_with(
+        &mut self,
+        policy: &dyn FitPolicy,
+        bls: usize,
+        hints: &FitHints,
+    ) -> Option<Vec<Region>> {
         if bls == 0 {
             return Some(Vec::new());
         }
         if self.free_bls() < bls {
             return None;
         }
-        let mut regions = Vec::new();
-        let mut remaining = bls;
-        for (m, intervals) in self.free.iter_mut().enumerate() {
-            while remaining > 0 {
-                let Some(&(start, count)) = intervals.first() else {
-                    break;
-                };
-                let take = count.min(remaining);
-                regions.push(Region {
-                    macro_id: m,
-                    bl_start: start,
-                    bl_count: take,
-                });
-                remaining -= take;
-                if take == count {
-                    intervals.remove(0);
-                } else {
-                    intervals[0] = (start + take, count - take);
+        let regions = policy
+            .plan(&self.free, self.bitlines, bls, hints)
+            .unwrap_or_else(|| {
+                FirstFit
+                    .plan(&self.free, self.bitlines, bls, hints)
+                    .expect("first-fit always succeeds given capacity")
+            });
+        debug_assert_eq!(
+            regions.iter().map(|r| r.bl_count).sum::<usize>(),
+            bls,
+            "fit policy '{}' planned the wrong width",
+            policy.name()
+        );
+        assert!(
+            self.reserve(&regions),
+            "fit policy '{}' planned regions outside free space",
+            policy.name()
+        );
+        // Merge consecutive physically-adjacent picks (buddy chunks often
+        // touch): one span = one load event = one macro pass piece, and
+        // the fleet's span accounting stays canonical — a placement
+        // never holds two regions that are really one contiguous run.
+        let mut merged: Vec<Region> = Vec::with_capacity(regions.len());
+        for r in regions {
+            match merged.last_mut() {
+                Some(last) if last.macro_id == r.macro_id && last.bl_end() == r.bl_start => {
+                    last.bl_count += r.bl_count;
                 }
-            }
-            if remaining == 0 {
-                break;
+                _ => merged.push(r),
             }
         }
-        debug_assert_eq!(remaining, 0, "free_bls precondition violated");
-        Some(regions)
+        Some(merged)
+    }
+
+    /// Carve specific regions out of the free lists (the relocation /
+    /// compaction entry point: the caller decides *where*, the allocator
+    /// only checks the space is really free). Returns `false` — and
+    /// changes nothing — when any region is out of bounds, empty,
+    /// overlaps another, or is not entirely free.
+    pub fn reserve(&mut self, regions: &[Region]) -> bool {
+        for (i, r) in regions.iter().enumerate() {
+            if r.macro_id >= self.free.len() || r.bl_count == 0 || r.bl_end() > self.bitlines {
+                return false;
+            }
+            if regions[i + 1..].iter().any(|o| r.overlaps(o)) {
+                return false;
+            }
+            let covered = self.free[r.macro_id]
+                .iter()
+                .any(|&(s, c)| s <= r.bl_start && r.bl_end() <= s + c);
+            if !covered {
+                return false;
+            }
+        }
+        for r in regions {
+            let intervals = &mut self.free[r.macro_id];
+            let idx = intervals
+                .iter()
+                .position(|&(s, c)| s <= r.bl_start && r.bl_end() <= s + c)
+                .expect("validated cover");
+            let (s, c) = intervals[idx];
+            intervals.remove(idx);
+            if r.bl_end() < s + c {
+                intervals.insert(idx, (r.bl_end(), s + c - r.bl_end()));
+            }
+            if s < r.bl_start {
+                intervals.insert(idx, (s, r.bl_start - s));
+            }
+        }
+        true
     }
 
     /// Allocate `n` fully-free macros as whole-macro regions (the
@@ -200,6 +659,14 @@ impl RegionAllocator {
 mod tests {
     use super::*;
 
+    fn reg(macro_id: usize, bl_start: usize, bl_count: usize) -> Region {
+        Region {
+            macro_id,
+            bl_start,
+            bl_count,
+        }
+    }
+
     #[test]
     fn fresh_pool_is_fully_free() {
         let a = RegionAllocator::new(3, 256);
@@ -207,21 +674,25 @@ mod tests {
         assert_eq!(a.free_bls(), 768);
         assert_eq!(a.free_whole_macros(), vec![0, 1, 2]);
         assert_eq!(a.occupied_bls(), vec![0, 0, 0]);
+        assert_eq!(a.free_region_count(), 3);
+        assert_eq!(a.largest_free_run(), 256);
     }
 
     #[test]
     fn alloc_splits_and_release_coalesces() {
         let mut a = RegionAllocator::new(1, 256);
         let r1 = a.alloc(100).unwrap();
-        assert_eq!(r1, vec![Region { macro_id: 0, bl_start: 0, bl_count: 100 }]);
+        assert_eq!(r1, vec![reg(0, 0, 100)]);
         let r2 = a.alloc(100).unwrap();
-        assert_eq!(r2, vec![Region { macro_id: 0, bl_start: 100, bl_count: 100 }]);
+        assert_eq!(r2, vec![reg(0, 100, 100)]);
         assert_eq!(a.free_bls(), 56);
         assert!(a.alloc(57).is_none(), "over-allocation refused");
         assert_eq!(a.free_bls(), 56, "failed alloc changes nothing");
         a.release(&r1);
         // Freed [0,100) does not merge with [200,256): two fragments.
         assert_eq!(a.free_bls(), 156);
+        assert_eq!(a.free_region_count(), 2);
+        assert_eq!(a.largest_free_run(), 100);
         a.release(&r2);
         // Now [0,100)+[100,200)+[200,256) coalesce back to one macro.
         assert_eq!(a.free_whole_macros(), vec![0]);
@@ -234,13 +705,7 @@ mod tests {
         let mut a = RegionAllocator::new(2, 256);
         let pin = a.alloc(200).unwrap(); // macro 0: [0,200)
         let big = a.alloc(200).unwrap(); // 56 from macro 0 + 144 from macro 1
-        assert_eq!(
-            big,
-            vec![
-                Region { macro_id: 0, bl_start: 200, bl_count: 56 },
-                Region { macro_id: 1, bl_start: 0, bl_count: 144 },
-            ]
-        );
+        assert_eq!(big, vec![reg(0, 200, 56), reg(1, 0, 144)]);
         assert_eq!(big.iter().map(|r| r.bl_count).sum::<usize>(), 200);
         a.release(&big);
         a.release(&pin);
@@ -272,10 +737,10 @@ mod tests {
 
     #[test]
     fn regions_overlap_predicate() {
-        let a = Region { macro_id: 0, bl_start: 0, bl_count: 10 };
-        let b = Region { macro_id: 0, bl_start: 9, bl_count: 5 };
-        let c = Region { macro_id: 0, bl_start: 10, bl_count: 5 };
-        let d = Region { macro_id: 1, bl_start: 0, bl_count: 10 };
+        let a = reg(0, 0, 10);
+        let b = reg(0, 9, 5);
+        let c = reg(0, 10, 5);
+        let d = reg(1, 0, 10);
         assert!(a.overlaps(&b) && b.overlaps(&a));
         assert!(!a.overlaps(&c), "touching is not overlapping");
         assert!(!a.overlaps(&d), "different macros never overlap");
@@ -286,5 +751,181 @@ mod tests {
         let mut a = RegionAllocator::new(1, 16);
         assert_eq!(a.alloc(0).unwrap(), Vec::new());
         assert_eq!(a.free_bls(), 16);
+    }
+
+    // ---- fit policies ------------------------------------------------------
+
+    /// An allocator with free holes {82 @ m0, 183 @ m1} — the shape a
+    /// churned co-resident pool leaves behind.
+    fn churned() -> (RegionAllocator, Vec<Region>) {
+        let mut a = RegionAllocator::new(2, 256);
+        let keep1 = a.alloc(108).unwrap(); // m0 [0,108)
+        let gone1 = a.alloc(82).unwrap(); // m0 [108,190)
+        let keep2 = a.alloc(139).unwrap(); // m0 [190,256) + m1 [0,73)
+        let gone2 = a.alloc(108).unwrap(); // m1 [73,181)
+        a.release(&gone1);
+        a.release(&gone2);
+        let mut held = keep1;
+        held.extend(keep2);
+        (a, held)
+    }
+
+    #[test]
+    fn first_fit_splits_across_the_small_hole() {
+        let (mut a, _) = churned();
+        assert_eq!(a.free_region_count(), 2);
+        assert_eq!(a.largest_free_run(), 183);
+        let r = a
+            .alloc_with(&FirstFit, 139, &FitHints::default())
+            .unwrap();
+        assert_eq!(r, vec![reg(0, 108, 82), reg(1, 73, 57)]);
+    }
+
+    #[test]
+    fn best_fit_prefers_the_smallest_sufficient_hole() {
+        let (mut a, _) = churned();
+        let r = a.alloc_with(&BestFit, 139, &FitHints::default()).unwrap();
+        assert_eq!(r, vec![reg(1, 73, 139)], "one span, no split");
+        // An exact-size request takes the exact hole, not the big one.
+        let (mut a, _) = churned();
+        let r = a.alloc_with(&BestFit, 82, &FitHints::default()).unwrap();
+        assert_eq!(r, vec![reg(0, 108, 82)]);
+    }
+
+    #[test]
+    fn best_fit_consumes_largest_when_nothing_fits_whole() {
+        let (mut a, _) = churned();
+        let r = a.alloc_with(&BestFit, 200, &FitHints::default()).unwrap();
+        assert_eq!(r, vec![reg(1, 73, 183), reg(0, 108, 17)]);
+        assert_eq!(r.iter().map(|x| x.bl_count).sum::<usize>(), 200);
+    }
+
+    #[test]
+    fn worst_fit_carves_the_largest_hole() {
+        let (mut a, _) = churned();
+        let r = a.alloc_with(&WorstFit, 50, &FitHints::default()).unwrap();
+        assert_eq!(r, vec![reg(1, 73, 50)], "took from the 183-column hole");
+        // The 82-hole is untouched; the big hole shrank.
+        assert_eq!(a.largest_free_run(), 133);
+    }
+
+    #[test]
+    fn buddy_fit_lands_power_of_two_chunks_aligned() {
+        // Fresh macro: 96 = 64 @ 0 + 32 @ 64, adjacent chunks merged
+        // into one span by the allocator.
+        let mut a = RegionAllocator::new(1, 256);
+        let r = a.alloc_with(&BuddyFit, 96, &FitHints::default()).unwrap();
+        assert_eq!(r, vec![reg(0, 0, 96)]);
+        // A misaligned prefix shows the alignment preference: first-fit
+        // would take [5, 69), buddy skips to the 64-aligned offset.
+        let mut a = RegionAllocator::new(1, 256);
+        assert!(a.reserve(&[reg(0, 0, 5)]));
+        let r = a.alloc_with(&BuddyFit, 64, &FitHints::default()).unwrap();
+        assert_eq!(r, vec![reg(0, 64, 64)]);
+        let mut a = RegionAllocator::new(1, 256);
+        assert!(a.reserve(&[reg(0, 0, 5)]));
+        let r = a.alloc_with(&FirstFit, 64, &FitHints::default()).unwrap();
+        assert_eq!(r, vec![reg(0, 5, 64)]);
+    }
+
+    #[test]
+    fn buddy_fit_fills_misaligned_holes_by_halving() {
+        // Only a misaligned 3-column hole [5,8) exists; buddy halves its
+        // chunks until they land (capacity always implies success).
+        let mut a = RegionAllocator::new(1, 8);
+        assert!(a.reserve(&[reg(0, 0, 5)]));
+        let r = a.alloc_with(&BuddyFit, 3, &FitHints::default()).unwrap();
+        assert_eq!(r.iter().map(|x| x.bl_count).sum::<usize>(), 3);
+        assert_eq!(a.free_bls(), 0);
+    }
+
+    #[test]
+    fn affinity_fit_prefers_previous_macros() {
+        let mut a = RegionAllocator::new(3, 256);
+        // Without hints: plain first-fit lands on macro 0.
+        let r = a.alloc_with(&AffinityFit, 40, &FitHints::default()).unwrap();
+        assert_eq!(r, vec![reg(0, 0, 40)]);
+        // Preferring macro 2 lands there even though 0/1 have room.
+        let hints = FitHints {
+            preferred_macros: &[2],
+        };
+        let r = a.alloc_with(&AffinityFit, 40, &hints).unwrap();
+        assert_eq!(r, vec![reg(2, 0, 40)]);
+        // Out-of-range preferences are ignored, not fatal.
+        let hints = FitHints {
+            preferred_macros: &[9],
+        };
+        let r = a.alloc_with(&AffinityFit, 40, &hints).unwrap();
+        assert_eq!(r, vec![reg(0, 40, 40)]);
+    }
+
+    #[test]
+    fn every_policy_fills_exactly_and_refuses_over_capacity() {
+        let policies: Vec<Box<dyn FitPolicy + Send>> = vec![
+            Box::new(FirstFit),
+            Box::new(BestFit),
+            Box::new(WorstFit),
+            Box::new(BuddyFit),
+            Box::new(AffinityFit),
+        ];
+        for p in &policies {
+            let (mut a, held) = churned();
+            let free = a.free_bls();
+            assert!(a.alloc_with(p.as_ref(), free + 1, &FitHints::default()).is_none());
+            assert_eq!(a.free_bls(), free, "{}: failed alloc changes nothing", p.name());
+            let r = a.alloc_with(p.as_ref(), free, &FitHints::default()).unwrap();
+            assert_eq!(
+                r.iter().map(|x| x.bl_count).sum::<usize>(),
+                free,
+                "{} fills the pool",
+                p.name()
+            );
+            assert_eq!(a.free_bls(), 0);
+            // Planned regions are disjoint from each other and the held ones.
+            let mut all = held.clone();
+            all.extend(r);
+            for (i, x) in all.iter().enumerate() {
+                for y in &all[i + 1..] {
+                    assert!(!x.overlaps(y), "{}: {x:?} overlaps {y:?}", p.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reserve_carves_exact_regions_and_rejects_conflicts() {
+        let mut a = RegionAllocator::new(2, 256);
+        assert!(a.reserve(&[reg(0, 100, 50)]));
+        assert_eq!(a.occupied_bls(), vec![50, 0]);
+        assert_eq!(a.free_region_count(), 3, "hole split in two + macro 1");
+        // Overlapping an occupied range fails and changes nothing.
+        assert!(!a.reserve(&[reg(0, 120, 10)]));
+        // Self-overlapping requests fail atomically.
+        assert!(!a.reserve(&[reg(1, 0, 10), reg(1, 5, 10)]));
+        assert_eq!(a.occupied_bls(), vec![50, 0]);
+        // Out-of-bounds and empty regions fail.
+        assert!(!a.reserve(&[reg(2, 0, 1)]));
+        assert!(!a.reserve(&[reg(0, 250, 10)]));
+        assert!(!a.reserve(&[reg(0, 0, 0)]));
+        // Two disjoint regions inside one interval work in one call.
+        assert!(a.reserve(&[reg(1, 0, 10), reg(1, 20, 10)]));
+        a.release(&[reg(1, 0, 10), reg(1, 20, 10), reg(0, 100, 50)]);
+        assert_eq!(a.free_bls(), 512);
+    }
+
+    #[test]
+    fn fit_policy_kind_roundtrip_and_policies() {
+        for kind in [
+            FitPolicyKind::FirstFit,
+            FitPolicyKind::BestFit,
+            FitPolicyKind::WorstFit,
+            FitPolicyKind::Buddy,
+            FitPolicyKind::Affinity,
+        ] {
+            assert_eq!(FitPolicyKind::parse(kind.as_str()), Some(kind));
+            assert_eq!(kind.policy().name(), kind.as_str());
+        }
+        assert_eq!(FitPolicyKind::parse("best-fit"), Some(FitPolicyKind::BestFit));
+        assert_eq!(FitPolicyKind::parse("mystery"), None);
     }
 }

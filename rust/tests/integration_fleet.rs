@@ -4,10 +4,11 @@
 //! Σ per-macro `MacroStats::load_cycles`).
 
 use cim_adapt::arch::by_name;
+use cim_adapt::cim::MacroStats;
 use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec, MorphConfig};
 use cim_adapt::data::SynthCifar;
-use cim_adapt::fleet::{EvictionPolicy, Fleet, FleetServer};
-use cim_adapt::mapping::pack_model;
+use cim_adapt::fleet::{EvictionPolicy, Fleet, FleetServer, FleetSnapshot};
+use cim_adapt::mapping::{pack_model, FitPolicyKind};
 use cim_adapt::morph::flow::morph_flow_synthetic;
 
 const FLEET_MACROS: usize = 4;
@@ -255,6 +256,107 @@ fn twin_and_analytic_ledgers_agree_on_fragmented_coresident_swap() {
     let analytic_snap = analytic_fleet.snapshot();
     assert_eq!(analytic_snap.reload_cycles, na + nb + nc);
     assert!(analytic_snap.twin_stats.is_empty(), "no twin pool when analytic");
+}
+
+#[test]
+fn defragged_pool_beats_first_fit_on_churn() {
+    // The PR-4 acceptance scenario: register/retire churn on a 2-macro
+    // co-resident twin pool, then a steady request mix. Under first-fit
+    // the late arrival splinters across the freed holes; `--fit best` +
+    // `--defrag` keeps every tenant contiguous (one threshold-triggered
+    // compaction). The defragged pool must serve the same mix with fewer
+    // mean spans per resident tenant and fewer total twin cycles
+    // (load + migration + executed passes), with the analytic and twin
+    // migration charges equal by construction.
+    let spec_ = spec();
+    let churn = |fit: FitPolicyKind, defrag_threshold: f64| -> (Fleet, FleetSnapshot) {
+        let fleet_cfg = FleetConfig {
+            num_macros: 2,
+            coresident: true,
+            execution: ExecutionMode::Twin,
+            fit,
+            defrag_threshold,
+            ..cfg(EvictionPolicy::Lru)
+        };
+        let mut fleet = Fleet::new(&fleet_cfg, &spec_);
+        let batch: Vec<Vec<f32>> = (0..4).map(img).collect();
+        for (name, s) in [("a", 0.04), ("b", 0.03), ("c", 0.05), ("d", 0.04)] {
+            fleet.register(name, by_name("vgg9").unwrap().scaled(s), false).unwrap();
+            fleet.serve_batch(name, &batch).unwrap();
+        }
+        fleet.retire("b").unwrap();
+        fleet.retire("d").unwrap();
+        fleet.register("e", by_name("vgg9").unwrap().scaled(0.05), false).unwrap();
+        for _ in 0..16 {
+            for m in ["a", "c", "e"] {
+                fleet.serve_batch(m, &batch).unwrap();
+            }
+        }
+        let snap = fleet.snapshot();
+        (fleet, snap)
+    };
+    let twin_total = |s: &FleetSnapshot| MacroStats::aggregate(s.twin_stats.iter()).busy_cycles();
+
+    let (_, ff) = churn(FitPolicyKind::FirstFit, 0.0);
+    let (mut dg_fleet, dg) = churn(FitPolicyKind::BestFit, 0.3);
+
+    // Fewer spans per resident tenant: first-fit splinters c and e into
+    // two spans each (5 spans over 3 tenants); the defragged pool keeps
+    // every placement contiguous.
+    let ff_frag = ff.fragmentation();
+    let dg_frag = dg.fragmentation();
+    assert_eq!(ff_frag.resident_spans, 5, "first-fit fragments c and e");
+    assert!((ff_frag.mean_spans_per_tenant() - 5.0 / 3.0).abs() < 1e-12);
+    assert!((dg_frag.mean_spans_per_tenant() - 1.0).abs() < 1e-12);
+    assert!(dg_frag.mean_spans_per_tenant() < ff_frag.mean_spans_per_tenant());
+
+    // One compaction ran, migrating exactly c's footprint (139 columns),
+    // and the migration charge is identical in all four ledgers.
+    let nc = dg_fleet.registry().get("c").unwrap().bls_needed() as u64;
+    assert_eq!(dg.compactions, 1);
+    assert_eq!(dg.migration_cycles, nc);
+    assert_eq!(dg.macro_migration_cycles(), nc);
+    assert_eq!(dg.tenant_migration_cycles(), nc);
+    assert_eq!(dg.twin_migration_cycles(), nc, "twin charge equal by construction");
+    assert_eq!(ff.migration_cycles, 0);
+    assert_eq!(ff.twin_migration_cycles(), 0);
+
+    // Hot-swap traffic is identical (same tenants, same footprints) —
+    // the twin-cycle win comes from fewer span writes and fewer passes.
+    assert_eq!(ff.reload_cycles, dg.reload_cycles);
+    assert!(
+        ff.aggregate().reloads > dg.aggregate().reloads,
+        "fragmented placements cost extra load events"
+    );
+    assert!(
+        twin_total(&dg) < twin_total(&ff),
+        "defrag must win on total twin cycles ({} vs {})",
+        twin_total(&dg),
+        twin_total(&ff)
+    );
+
+    // Load books balance in both arms, migration included.
+    for snap in [&ff, &dg] {
+        assert_eq!(snap.twin_load_cycles(), snap.reload_cycles);
+        assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+        assert_eq!(snap.reload_cycles, snap.tenant_load_cycles());
+    }
+
+    // The compacted placements still hold the right weights: readback
+    // every resident tenant's columns across the twin pool.
+    for name in ["a", "c", "e"] {
+        let placed = dg_fleet.placed_mapping(name).unwrap().clone();
+        assert_eq!(placed.spans.len(), 1, "{name} is contiguous after defrag");
+        let weights = dg_fleet.registry().get(name).unwrap().weights.clone().unwrap();
+        for (bl, col) in weights.columns.iter().enumerate() {
+            let (mac, local) = placed.locate(bl);
+            assert_eq!(&dg_fleet.twin_macros()[mac].read_column(local), col, "{name}:{bl}");
+        }
+    }
+    // And inference over the compacted layout is reachable + finite.
+    let (class, logits) = dg_fleet.infer_twin("c", &img(1)).unwrap();
+    assert!(class < 10);
+    assert!(logits.iter().all(|v| v.is_finite()));
 }
 
 #[test]

@@ -5,9 +5,9 @@
 use cim_adapt::arch::{by_name, vgg9, ConvLayer, LayerKind, ModelArch};
 use cim_adapt::cim::{Adc, CimMacro, WeightCell};
 use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec, MorphConfig};
-use cim_adapt::fleet::{Fleet, ModelWeights};
+use cim_adapt::fleet::{plan_compaction, Fleet, ModelWeights, Placement};
 use cim_adapt::latency::{layer_cost, model_cost, spans_reload_cycles};
-use cim_adapt::mapping::{pack_model, PlacedMapping, RegionAllocator};
+use cim_adapt::mapping::{pack_model, FitPolicyKind, PlacedMapping, Region, RegionAllocator};
 use cim_adapt::morph::expand::search_expansion_ratio;
 use cim_adapt::quant::lsq::{lsq_quantize, LsqTensor};
 use cim_adapt::quant::psum::{quantize_psum, segment_inputs};
@@ -395,6 +395,190 @@ fn prop_twin_fleet_load_books_always_balance() {
             snap.twin_load_cycles() == snap.reload_cycles
                 && snap.reload_cycles == snap.macro_load_cycles()
                 && snap.reload_cycles == snap.tenant_load_cycles()
+                && snap.twin_migration_cycles() == snap.migration_cycles
+        },
+    );
+}
+
+#[test]
+fn prop_compaction_preserves_cells_and_ledgers() {
+    // Arbitrary serve / retire+re-register churn on a twin-executing
+    // co-resident fleet, then an online compaction: every resident
+    // tenant's twin readback still equals its registry weight columns
+    // (pre-move source of truth), placements stay pairwise disjoint and
+    // consistent with the allocator, and the 4-ledger conservation holds
+    // for BOTH charge classes (load and migration) with the twin equal
+    // to the analytic ledger by construction.
+    let spec = MacroSpec::default();
+    let scales = [0.04f64, 0.03, 0.05];
+    check(
+        "compact: readback + disjoint + 4-ledger conservation",
+        cases(12),
+        pairs(vecs(usizes(0..6), 1..16), usizes(1..4)),
+        |(ops, num_macros)| {
+            let cfg = FleetConfig {
+                num_macros: *num_macros,
+                coresident: true,
+                execution: ExecutionMode::Twin,
+                fit: FitPolicyKind::BestFit,
+                ..FleetConfig::default()
+            };
+            let mut fleet = Fleet::new(&cfg, &spec);
+            for (i, s) in scales.iter().enumerate() {
+                fleet
+                    .register(&format!("m{i}"), vgg9().scaled(*s), false)
+                    .unwrap();
+            }
+            let img = vec![0.5f32; 64];
+            for &op in ops {
+                let name = format!("m{}", op % 3);
+                if op < 3 {
+                    let _ = fleet.serve_batch(&name, &[img.clone()]);
+                } else {
+                    // The churn that fragments: vacate and come back.
+                    fleet.retire(&name).unwrap();
+                    fleet
+                        .register(&name, vgg9().scaled(scales[op % 3]), false)
+                        .unwrap();
+                }
+            }
+            if fleet.compact().is_err() {
+                return false;
+            }
+            let snap = fleet.snapshot();
+            // Disjoint placements consistent with the allocator view.
+            let regions: Vec<Region> = snap
+                .resident
+                .iter()
+                .flat_map(|p| p.regions.clone())
+                .collect();
+            let disjoint = regions
+                .iter()
+                .enumerate()
+                .all(|(i, a)| regions[i + 1..].iter().all(|b| !a.overlaps(b)));
+            let mut per_macro = vec![0usize; *num_macros];
+            for r in &regions {
+                per_macro[r.macro_id] += r.bl_count;
+            }
+            let occupancy_ok = per_macro == snap.occupied_bls;
+            // Readback: every materialized tenant holds its cached columns.
+            let cells_ok = snap.resident.iter().all(|p| {
+                let Some(placed) = fleet.placed_mapping(&p.model) else {
+                    return false;
+                };
+                let entry = fleet.registry().get(&p.model).unwrap();
+                let weights = entry.weights.as_ref().unwrap();
+                weights.columns.iter().enumerate().all(|(bl, col)| {
+                    let (mac, local) = placed.locate(bl);
+                    &fleet.twin_macros()[mac].read_column(local) == col
+                })
+            });
+            // Conservation, migration charges included.
+            let books_ok = snap.twin_load_cycles() == snap.reload_cycles
+                && snap.reload_cycles == snap.macro_load_cycles()
+                && snap.reload_cycles == snap.tenant_load_cycles()
+                && snap.twin_migration_cycles() == snap.migration_cycles
+                && snap.migration_cycles == snap.macro_migration_cycles()
+                && snap.migration_cycles == snap.tenant_migration_cycles();
+            disjoint && occupancy_ok && cells_ok && books_ok
+        },
+    );
+}
+
+#[test]
+fn prop_compaction_plans_are_sound() {
+    // Over random allocate/free churn: the planner's targets stay inside
+    // the pool, pairwise disjoint (relocated layouts + untouched
+    // placements together), width-preserving per tenant and per move,
+    // priced exactly `spans_reload_cycles(move widths)` — and iterating
+    // plan→execute under the improvement gate reaches a fixpoint within
+    // a few passes, with the `(spans, -largest_free_run)` measure
+    // strictly decreasing at every executed step (termination).
+    let spec = MacroSpec::default();
+    let apply = |layout: &[Placement], plan: &cim_adapt::fleet::CompactionPlan| {
+        layout
+            .iter()
+            .map(|p| Placement {
+                model: p.model.clone(),
+                regions: plan
+                    .relocated
+                    .iter()
+                    .find(|(n, _)| n == &p.model)
+                    .map(|(_, l)| l.clone())
+                    .unwrap_or_else(|| p.regions.clone()),
+            })
+            .collect::<Vec<Placement>>()
+    };
+    let largest_free = |layout: &[Placement], num_macros: usize| {
+        let mut check = RegionAllocator::new(num_macros, spec.bitlines);
+        let flat: Vec<Region> = layout.iter().flat_map(|p| p.regions.clone()).collect();
+        if !check.reserve(&flat) {
+            return None; // out of bounds / overlapping: soundness failure
+        }
+        Some(check.largest_free_run())
+    };
+    check(
+        "compaction plans: sound, priced, terminating",
+        cases(60),
+        pairs(vecs(usizes(1..200), 1..10), usizes(1..4)),
+        |(sizes, num_macros)| {
+            let mut alloc = RegionAllocator::new(*num_macros, spec.bitlines);
+            let mut all = Vec::new();
+            for (i, &w) in sizes.iter().enumerate() {
+                if let Some(regions) = alloc.alloc(w) {
+                    all.push(Placement {
+                        model: format!("t{i}"),
+                        regions,
+                    });
+                }
+            }
+            // Free every other tenant to splinter the pool.
+            let mut kept = Vec::new();
+            for (i, p) in all.into_iter().enumerate() {
+                if i % 2 == 0 {
+                    kept.push(p);
+                } else {
+                    alloc.release(&p.regions);
+                }
+            }
+            let mut layout = kept;
+            let mut prev_measure: Option<(usize, i64)> = None;
+            for _round in 0..8 {
+                let Some(current_largest) = largest_free(&layout, *num_macros) else {
+                    return false;
+                };
+                let plan = plan_compaction(&layout, *num_macros, spec.bitlines, &spec);
+                let widths_ok = plan
+                    .moves
+                    .iter()
+                    .all(|m| m.from.bl_count == m.to.bl_count)
+                    && plan.relocated.iter().all(|(n, l)| {
+                        let old: usize = layout
+                            .iter()
+                            .find(|p| &p.model == n)
+                            .map(|p| p.bls())
+                            .unwrap_or(usize::MAX);
+                        l.iter().map(|r| r.bl_count).sum::<usize>() == old
+                    });
+                let priced_ok = plan.migration_cycles
+                    == spans_reload_cycles(plan.moves.iter().map(|m| m.to.bl_count), &spec);
+                if !(widths_ok && priced_ok) {
+                    return false;
+                }
+                if !plan.improves(current_largest) {
+                    // Fixpoint reached; the final layout must be sound.
+                    return largest_free(&layout, *num_macros).is_some();
+                }
+                let measure = (plan.spans_after, -(plan.largest_free_run_after as i64));
+                if let Some(prev) = prev_measure {
+                    if measure >= prev {
+                        return false; // measure must strictly decrease
+                    }
+                }
+                prev_measure = Some(measure);
+                layout = apply(&layout, &plan);
+            }
+            false // never reached a fixpoint within the bound
         },
     );
 }

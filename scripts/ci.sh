@@ -85,9 +85,10 @@ if [ "$run_bench" = 1 ]; then
   # Quick sampling keeps this a smoke run. The benches assert the
   # deterministic invariants (morphed < uncompressed reload cycles,
   # co-resident beats whole-macro placement, twin loads == analytic
-  # ledger), so they run regardless of python availability. The
-  # comparison is print-only for timings (noisy); with --strict-counters
-  # it gates on the deterministic counters in scripts/bench_baselines/.
+  # ledger, defragged churn beats first-fit in twin cycles), so they run
+  # regardless of python availability. The comparison is print-only for
+  # timings (noisy); with --strict-counters it gates on the
+  # deterministic counters in scripts/bench_baselines/.
   CIM_ADAPT_BENCH_QUICK=1 cargo bench --bench micro_fleet
   CIM_ADAPT_BENCH_QUICK=1 cargo bench --bench micro_serving
   if command -v python3 >/dev/null 2>&1; then

@@ -65,6 +65,8 @@ SCALAR_METRICS = {
 EXACT_COUNTERS = {
     "fleet": [
         "fleet_utilization",
+        "fleet_fragmentation",
+        "fleet_spans_per_tenant",
         "coresidency.coresident_reload_cycles",
         "coresidency.whole_macro_reload_cycles",
         "coresidency.coresident_utilization",
@@ -74,6 +76,16 @@ EXACT_COUNTERS = {
         "twin.reload_cycles",
         "twin.ledger_delta",
         "twin.utilization",
+        "churn_scenario.first_fit.spans_per_tenant",
+        "churn_scenario.first_fit.twin_total_cycles",
+        "churn_scenario.first_fit.reload_events",
+        "churn_scenario.best_fit.spans_per_tenant",
+        "churn_scenario.best_fit.twin_total_cycles",
+        "churn_scenario.defrag.spans_per_tenant",
+        "churn_scenario.defrag.twin_total_cycles",
+        "churn_scenario.defrag.migration_cycles",
+        "churn_scenario.defrag.compactions",
+        "churn_scenario.defrag_win_cycles",
     ],
     # The serving bench's counters flow through the threaded batcher
     # (batch formation is timing-dependent), so none qualify yet.
@@ -149,7 +161,10 @@ def compare_one(name, current, baseline, threshold):
             # Not yet in the baseline (older snapshot): report, don't gate
             # — committing an updated baseline starts tracking it.
             if isinstance(c, (int, float)):
-                lines.append(f"  + exact counter '{path}' not in baseline yet: {c:g}")
+                lines.append(
+                    f"  + '{path}' = {c:g} (new counter, not compared; "
+                    f"run --update to start tracking)"
+                )
             continue
         if not isinstance(c, (int, float)):
             # In the baseline but GONE from the current run: a rename or

@@ -28,6 +28,18 @@ def load_module():
 cb = load_module()
 
 
+def churn_arm(spans=1.0, total=3904, migration=0, compactions=0):
+    return {
+        "spans_per_tenant": spans,
+        "fragmentation": 0.0,
+        "reload_cycles": 576,
+        "migration_cycles": migration,
+        "reload_events": 5,
+        "compactions": compactions,
+        "twin_total_cycles": total,
+    }
+
+
 def fleet_summary(
     coresident_cycles=190,
     utilization=0.7421875,
@@ -38,6 +50,8 @@ def fleet_summary(
         "bench": "micro_fleet",
         "timings": [],
         "fleet_utilization": utilization,
+        "fleet_fragmentation": 0.0,
+        "fleet_spans_per_tenant": 5 / 3,
         "coresidency": {
             "rounds": 16,
             "coresident_reload_cycles": coresident_cycles,
@@ -52,6 +66,13 @@ def fleet_summary(
             "reload_cycles": coresident_cycles,
             "ledger_delta": twin_delta,
             "utilization": utilization,
+        },
+        "churn_scenario": {
+            "rounds": 16,
+            "first_fit": churn_arm(spans=5 / 3, total=4168),
+            "best_fit": churn_arm(),
+            "defrag": churn_arm(total=4043, migration=139, compactions=1),
+            "defrag_win_cycles": 125,
         },
     }
     if timing_ns is not None:
@@ -139,6 +160,36 @@ class CompareBenchTest(unittest.TestCase):
         self.write(self.base, "fleet", stale)
         self.write(self.cur, "fleet", fleet_summary())
         self.assertEqual(run_main(self.argv("--strict", "--strict-counters")), 0)
+
+    def test_new_counter_gets_a_not_compared_note(self):
+        # A counter the old baseline predates (e.g. the churn-scenario
+        # counters added with the defrag work) must be reported with a
+        # clear "new counter, not compared" note — never a hard mismatch.
+        stale = fleet_summary()
+        del stale["churn_scenario"]
+        del stale["fleet_fragmentation"]
+        del stale["fleet_spans_per_tenant"]
+        cur = fleet_summary()
+        lines, regressions, exact = cb.compare_one("fleet", cur, stale, 0.25)
+        text = "\n".join(lines)
+        self.assertIn("new counter, not compared", text)
+        self.assertIn("churn_scenario.defrag.migration_cycles", text)
+        self.assertEqual(regressions, [])
+        self.assertEqual(exact, [], "new counters never count as mismatches")
+        # And the full run exits 0 even under both strict gates.
+        self.write(self.base, "fleet", stale)
+        self.write(self.cur, "fleet", cur)
+        self.assertEqual(run_main(self.argv("--strict", "--strict-counters")), 0)
+
+    def test_churn_counter_drift_is_gated(self):
+        # Once the churn counters ARE in the baseline, drift gates like
+        # any other exact counter (the defrag win is CI-protected).
+        self.write(self.base, "fleet", fleet_summary())
+        drifted = fleet_summary()
+        drifted["churn_scenario"]["defrag"]["twin_total_cycles"] += 7
+        self.write(self.cur, "fleet", drifted)
+        self.assertEqual(run_main(self.argv()), 0, "print-only by default")
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
 
     def test_twin_ledger_delta_is_gated(self):
         self.write(self.base, "fleet", fleet_summary(twin_delta=0))
