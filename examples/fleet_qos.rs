@@ -1,0 +1,143 @@
+//! QoS-aware fleet dispatch: the overload story from `rust/README.md`'s
+//! "QoS & admission control" section, on the deterministic core.
+//!
+//! Three tenants overload a 1-macro co-resident pool: a latency-critical
+//! `hi` tenant interleaved behind two throughput tenants. The example
+//! runs the same submit script through the FIFO baseline, the priority
+//! dispatcher, and priority + admission control (budget + a hard rate
+//! cap on the greediest tenant), printing the exact virtual-clock
+//! counters — the same three arms `benches/micro_fleet.rs` gates in CI.
+//!
+//! ```bash
+//! cargo run --release --example fleet_qos -- --rounds 8
+//! ```
+
+use std::collections::BTreeMap;
+
+use cim_adapt::arch::by_name;
+use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec};
+use cim_adapt::data::SynthCifar;
+use cim_adapt::fleet::{QosClass, QosFleet, SchedMode};
+use cim_adapt::latency::model_cost;
+use cim_adapt::util::cli::Args;
+use cim_adapt::util::commas;
+
+struct ArmReport {
+    name: &'static str,
+    reload_cycles: u64,
+    hi_load: u64,
+    hi_delay: u64,
+    admitted: u64,
+    rejected: u64,
+    deferred: u64,
+}
+
+/// One arm of the overload scenario. **Keep in sync with
+/// `qos_overload_mix` in `rust/benches/micro_fleet.rs`** — the bench is
+/// the CI-gated source of truth (exact counters in `BENCH_fleet.json`);
+/// this example mirrors it so the printed numbers match the README.
+fn run_arm(
+    name: &'static str,
+    sched: SchedMode,
+    classes: bool,
+    admission: bool,
+    rounds: usize,
+) -> ArmReport {
+    let spec = MacroSpec::default();
+    let scaled = |s: f64| by_name("vgg9").unwrap().scaled(s);
+    let (hi, lo1, lo2) = (scaled(0.04), scaled(0.03), scaled(0.05));
+    // Budget: resident passes fit, every hot-swap projects over.
+    let pass2 = |a: &cim_adapt::arch::ModelArch| model_cost(a, &spec).pass_cycles(2);
+    let budget = pass2(&hi).max(pass2(&lo1)).max(pass2(&lo2)) + 40;
+    let mut cfg = FleetConfig {
+        num_macros: 1,
+        coresident: true,
+        execution: ExecutionMode::Twin,
+        sched,
+        qos_aging_cycles: 1_000_000,
+        admit_budget_cycles: if admission { budget } else { 0 },
+        ..FleetConfig::default()
+    };
+    if classes {
+        cfg.qos.entry("hi".into()).or_default().class = QosClass::Interactive;
+        cfg.qos.entry("lo1".into()).or_default().class = QosClass::Batch;
+        cfg.qos.entry("lo2".into()).or_default().class = QosClass::Batch;
+    }
+    if admission {
+        // Hard cap: only lo2's first two batches are admitted.
+        cfg.qos.entry("lo2".into()).or_default().burst = 4;
+    }
+    let mut fleet = QosFleet::new(&cfg, &spec);
+    fleet.register("hi", hi, false).unwrap();
+    fleet.register("lo1", lo1, false).unwrap();
+    fleet.register("lo2", lo2, false).unwrap();
+    let batch: Vec<Vec<f32>> = (0..2).map(|k| SynthCifar::sample(k, k as u64).data).collect();
+    for _ in 0..rounds {
+        for m in ["lo1", "lo2", "hi"] {
+            let _ = fleet.submit(m, batch.clone()).unwrap();
+        }
+    }
+    fleet.drain().unwrap();
+    let snap = fleet.snapshot();
+    assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+    assert_eq!(snap.twin_load_cycles(), snap.reload_cycles);
+    let tenants: BTreeMap<_, _> = snap.tenant_stats.iter().cloned().collect();
+    let qos: BTreeMap<_, _> = snap.qos_stats.iter().cloned().collect();
+    let totals = snap.qos_totals();
+    ArmReport {
+        name,
+        reload_cycles: snap.reload_cycles,
+        hi_load: tenants["hi"].load_cycles,
+        hi_delay: qos["hi"].queue_delay_cycles,
+        admitted: totals.admitted,
+        rejected: totals.rejected,
+        deferred: totals.deferred,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    cim_adapt::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    let rounds = args.usize_or("rounds", 8);
+
+    println!(
+        "overload: 3 tenants (108+82+139 BLs) on one 256-column macro, \
+         {rounds} interleaved rounds of 2-image batches\n"
+    );
+    let arms = [
+        run_arm("fifo", SchedMode::Fifo, false, false, rounds),
+        run_arm("priority", SchedMode::Qos, true, false, rounds),
+        run_arm("priority+admission", SchedMode::Qos, true, true, rounds),
+    ];
+    println!(
+        "{:<20} {:>14} {:>12} {:>14} {:>9} {:>9} {:>9}",
+        "arm", "reload cycles", "hi load", "hi delay", "admitted", "rejected", "deferred"
+    );
+    for a in &arms {
+        println!(
+            "{:<20} {:>14} {:>12} {:>14} {:>9} {:>9} {:>9}",
+            a.name,
+            commas(a.reload_cycles),
+            commas(a.hi_load),
+            commas(a.hi_delay),
+            a.admitted,
+            a.rejected,
+            a.deferred
+        );
+    }
+    let (ff, pr, ad) = (&arms[0], &arms[1], &arms[2]);
+    println!(
+        "\npriority cuts the hi tenant's reload thrash {}→{} cycles and its queue \
+         delay {}→{}; admission also drops total reloads {}→{} by refusing {} \
+         requests and deferring {} over-budget swaps.",
+        commas(ff.hi_load),
+        commas(pr.hi_load),
+        commas(ff.hi_delay),
+        commas(pr.hi_delay),
+        commas(ff.reload_cycles),
+        commas(ad.reload_cycles),
+        ad.rejected,
+        ad.deferred
+    );
+    Ok(())
+}

@@ -18,7 +18,8 @@ use cim_adapt::arch::by_name;
 use cim_adapt::cim::MacroStats;
 use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec, MorphConfig};
 use cim_adapt::data::SynthCifar;
-use cim_adapt::fleet::{EvictionPolicy, Fleet, FleetServer};
+use cim_adapt::fleet::{EvictionPolicy, Fleet, FleetServer, QosClass, QosFleet, SchedMode};
+use cim_adapt::latency::model_cost;
 use cim_adapt::mapping::{pack_model, FitPolicyKind};
 use cim_adapt::morph::flow::morph_flow_synthetic;
 use cim_adapt::report::write_bench_summary;
@@ -162,6 +163,141 @@ fn churn_mix(fit: FitPolicyKind, defrag_threshold: f64, rounds: usize) -> ChurnR
         compactions: snap.compactions,
         twin_total_cycles: twin.busy_cycles(),
     }
+}
+
+/// Outcome of the three-tenant overload scenario under one dispatch
+/// arm — all deterministic virtual-clock counters.
+struct QosRun {
+    /// Fleet-wide hot-swap reload cycles.
+    reload_cycles: u64,
+    /// Load cycles attributed to the high-priority tenant.
+    hi_load_cycles: u64,
+    /// The high-priority tenant's total attributed twin cycles
+    /// (compute + load + migration) — the "served with fewer total twin
+    /// cycles" acceptance figure.
+    hi_busy_cycles: u64,
+    /// Virtual cycles the high-priority tenant's requests waited.
+    hi_queue_delay_cycles: u64,
+    /// Twin-pool busy cycles over the whole arm (load + migration +
+    /// executed passes).
+    total_twin_cycles: u64,
+    admitted: u64,
+    rejected: u64,
+    deferred: u64,
+}
+
+/// Three tenants overloading a **1-macro** co-resident twin pool: `hi`
+/// (108 BLs, latency-critical) interleaved behind `lo1` (82) and `lo2`
+/// (139) for `rounds` rounds — together they exceed the macro, so the
+/// dispatch order decides who thrashes. Three arms share the exact same
+/// submit script:
+///
+/// * `fifo` — strict arrival order: every round reloads all three
+///   tenants (the pre-QoS overload pathology).
+/// * `priority` — `hi` is `Interactive`, the rest `Batch`: each tenant
+///   is served as one consecutive run, so each loads exactly once.
+/// * `admission` — priorities plus an admission budget sized so any
+///   hot-swap projects over it (non-resident queues defer behind
+///   resident ones, bounded by the anti-starvation terms) and a hard
+///   token-bucket cap on `lo2` (only its first 2 batches are admitted).
+///
+/// `examples/fleet_qos.rs` mirrors this scenario for the README's worked
+/// example — keep the two in sync (this bench is the CI-gated source of
+/// truth).
+fn qos_overload_mix(sched: SchedMode, classes: bool, admission: bool, rounds: usize) -> QosRun {
+    let spec = MacroSpec::default();
+    let scaled = |s: f64| by_name("vgg9").unwrap().scaled(s);
+    let (hi, lo1, lo2) = (scaled(0.04), scaled(0.03), scaled(0.05));
+    // Budget: every resident 2-image pass fits, every hot-swap projects
+    // over (the smallest footprint is 82 columns > the 40-cycle slack).
+    let pass2 = |a: &cim_adapt::arch::ModelArch| model_cost(a, &spec).pass_cycles(2);
+    let budget = pass2(&hi).max(pass2(&lo1)).max(pass2(&lo2)) + 40;
+    let mut fleet_cfg = FleetConfig {
+        num_macros: 1,
+        coresident: true,
+        execution: ExecutionMode::Twin,
+        sched,
+        // Large aging window: the arms demonstrate pure class ordering;
+        // the anti-starvation *defer* bound still guarantees progress.
+        qos_aging_cycles: 1_000_000,
+        admit_budget_cycles: if admission { budget } else { 0 },
+        ..cfg(1)
+    };
+    if classes {
+        for (name, class) in [
+            ("hi", QosClass::Interactive),
+            ("lo1", QosClass::Batch),
+            ("lo2", QosClass::Batch),
+        ] {
+            fleet_cfg.qos.entry(name.to_string()).or_default().class = class;
+        }
+    }
+    if admission {
+        // Hard cap (burst without refill): only lo2's first 4 requests
+        // (2 batches) are ever admitted.
+        let lo2_spec = fleet_cfg.qos.entry("lo2".to_string()).or_default();
+        lo2_spec.burst = 4;
+    }
+    let mut fleet = QosFleet::new(&fleet_cfg, &spec);
+    fleet.register("hi", hi.clone(), false).unwrap();
+    fleet.register("lo1", lo1.clone(), false).unwrap();
+    fleet.register("lo2", lo2.clone(), false).unwrap();
+    if admission {
+        // The budget really separates the two cases for every tenant.
+        for (name, arch) in [("hi", &hi), ("lo1", &lo1), ("lo2", &lo2)] {
+            let reload = fleet.fleet().registry().get(name).unwrap().bls_needed() as u64;
+            assert!(pass2(arch) <= budget, "resident pass must fit the budget");
+            assert!(pass2(arch) + reload > budget, "hot-swaps must project over");
+        }
+    }
+    let batch: Vec<Vec<f32>> = (0..2).map(|k| SynthCifar::sample(k, k as u64).data).collect();
+    for _ in 0..rounds {
+        for m in ["lo1", "lo2", "hi"] {
+            let _ = fleet.submit(m, batch.clone()).unwrap();
+        }
+    }
+    let outcomes = fleet.drain().unwrap();
+    let snap = fleet.snapshot();
+    // All four ledgers agree, with or without QoS in the loop.
+    assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+    assert_eq!(snap.reload_cycles, snap.tenant_load_cycles());
+    assert_eq!(snap.twin_load_cycles(), snap.reload_cycles);
+    let totals = snap.qos_totals();
+    // Every admitted request was served — nothing starves.
+    let served: u64 = outcomes.iter().map(|o| o.batch as u64).sum();
+    assert_eq!(served, totals.admitted);
+    let tenants: std::collections::BTreeMap<&str, &MacroStats> = snap
+        .tenant_stats
+        .iter()
+        .map(|(n, s)| (n.as_str(), s))
+        .collect();
+    let qos: std::collections::BTreeMap<&str, _> = snap
+        .qos_stats
+        .iter()
+        .map(|(n, s)| (n.as_str(), *s))
+        .collect();
+    QosRun {
+        reload_cycles: snap.reload_cycles,
+        hi_load_cycles: tenants["hi"].load_cycles,
+        hi_busy_cycles: tenants["hi"].busy_cycles(),
+        hi_queue_delay_cycles: qos["hi"].queue_delay_cycles,
+        total_twin_cycles: MacroStats::aggregate(snap.twin_stats.iter()).busy_cycles(),
+        admitted: totals.admitted,
+        rejected: totals.rejected,
+        deferred: totals.deferred,
+    }
+}
+
+fn qos_json(r: &QosRun) -> Json {
+    Json::obj()
+        .with("reload_cycles", r.reload_cycles)
+        .with("hi_load_cycles", r.hi_load_cycles)
+        .with("hi_busy_cycles", r.hi_busy_cycles)
+        .with("hi_queue_delay_cycles", r.hi_queue_delay_cycles)
+        .with("total_twin_cycles", r.total_twin_cycles)
+        .with("admitted", r.admitted)
+        .with("rejected", r.rejected)
+        .with("deferred", r.deferred)
 }
 
 fn churn_json(r: &ChurnRun) -> Json {
@@ -379,6 +515,71 @@ fn main() {
     assert!(dg.compactions >= 1 && dg.migration_cycles > 0, "defrag really ran");
     assert_eq!(ff.migration_cycles, 0, "no defrag in the first-fit arm");
 
+    // --- QoS overload: fifo vs priority vs priority+admission ------------
+    // Same interleaved overload script on a 1-macro twin pool; only the
+    // dispatch arm changes. Priority must kill the high-priority
+    // tenant's reload thrash (it is served as one run and loads once);
+    // admission must also cut the fleet's total twin cycles by refusing
+    // the over-rate tenant and deferring over-budget swaps.
+    let ff_q = qos_overload_mix(SchedMode::Fifo, false, false, rounds / 2);
+    let pr_q = qos_overload_mix(SchedMode::Qos, true, false, rounds / 2);
+    let ad_q = qos_overload_mix(SchedMode::Qos, true, true, rounds / 2);
+    r.table(&format!(
+        "qos overload over {} rounds: fifo hi {} load / {} delay cycles, {} total reload | \
+         priority hi {} / {}, {} | admission hi {} / {}, {} ({} rejected, {} deferrals)",
+        rounds / 2,
+        ff_q.hi_load_cycles,
+        ff_q.hi_queue_delay_cycles,
+        ff_q.reload_cycles,
+        pr_q.hi_load_cycles,
+        pr_q.hi_queue_delay_cycles,
+        pr_q.reload_cycles,
+        ad_q.hi_load_cycles,
+        ad_q.hi_queue_delay_cycles,
+        ad_q.reload_cycles,
+        ad_q.rejected,
+        ad_q.deferred
+    ));
+    assert!(
+        pr_q.hi_load_cycles < ff_q.hi_load_cycles,
+        "priority must kill the hi tenant's reload thrash ({} vs {})",
+        pr_q.hi_load_cycles,
+        ff_q.hi_load_cycles
+    );
+    assert!(
+        pr_q.hi_busy_cycles < ff_q.hi_busy_cycles,
+        "the priority tenant must be served with fewer total twin cycles \
+         ({} vs {})",
+        pr_q.hi_busy_cycles,
+        ff_q.hi_busy_cycles
+    );
+    assert!(
+        pr_q.hi_queue_delay_cycles < ff_q.hi_queue_delay_cycles,
+        "the priority tenant must wait fewer cycles ({} vs {})",
+        pr_q.hi_queue_delay_cycles,
+        ff_q.hi_queue_delay_cycles
+    );
+    assert!(
+        pr_q.reload_cycles < ff_q.reload_cycles,
+        "priority runs must reduce total reload cycles under churn"
+    );
+    assert!(
+        ad_q.reload_cycles < ff_q.reload_cycles && ad_q.total_twin_cycles < ff_q.total_twin_cycles,
+        "admission must reduce total reload and twin cycles ({} vs {}, {} vs {})",
+        ad_q.reload_cycles,
+        ff_q.reload_cycles,
+        ad_q.total_twin_cycles,
+        ff_q.total_twin_cycles
+    );
+    assert!(ad_q.rejected > 0, "the rate-capped tenant must see rejections");
+    assert!(ad_q.deferred > 0, "over-budget swaps must be deferred");
+    assert_eq!(ff_q.rejected, 0, "the fifo baseline admits everything");
+    assert_eq!(ff_q.deferred, 0, "the fifo baseline never defers");
+    assert_eq!(
+        pr_q.admitted, ff_q.admitted,
+        "priority changes order, not admission"
+    );
+
     // Twin forward throughput on a resident tenant (timing only).
     {
         let spec_ = MacroSpec::default();
@@ -417,6 +618,22 @@ fn main() {
                 .with(
                     "defrag_win_cycles",
                     ff.twin_total_cycles - dg.twin_total_cycles,
+                ),
+        )
+        .with(
+            "qos_scenario",
+            Json::obj()
+                .with("rounds", rounds / 2)
+                .with("fifo", qos_json(&ff_q))
+                .with("priority", qos_json(&pr_q))
+                .with("admission", qos_json(&ad_q))
+                .with(
+                    "priority_hi_win_cycles",
+                    ff_q.hi_busy_cycles - pr_q.hi_busy_cycles,
+                )
+                .with(
+                    "admission_reload_win_cycles",
+                    ff_q.reload_cycles - ad_q.reload_cycles,
                 ),
         )
         .with(

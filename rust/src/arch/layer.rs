@@ -7,12 +7,16 @@ use crate::util::json::Json;
 /// paper's 17-conv ResNet18 but supported by the mapper).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LayerKind {
+    /// The first conv: input channels are fixed at 3 (the image).
     Stem,
+    /// A regular k×k conv inside the stack.
     Standard,
+    /// A 1×1 projection on a residual shortcut path.
     Shortcut,
 }
 
 impl LayerKind {
+    /// Stable config/JSON name.
     pub fn as_str(&self) -> &'static str {
         match self {
             LayerKind::Stem => "stem",
@@ -21,6 +25,7 @@ impl LayerKind {
         }
     }
 
+    /// Parse a config/JSON name (see [`LayerKind::as_str`]).
     pub fn parse(s: &str) -> Option<LayerKind> {
         match s {
             "stem" => Some(LayerKind::Stem),
@@ -36,6 +41,7 @@ impl LayerKind {
 pub struct ConvLayer {
     /// Human label, e.g. `"conv3_1"`.
     pub name: String,
+    /// Structural role of the layer (see [`LayerKind`]).
     pub kind: LayerKind,
     /// Input channels (derived; kept in sync by `ModelArch::rechain_inputs`).
     pub c_in: usize,
@@ -65,6 +71,7 @@ impl ConvLayer {
         self.c_in * self.kernel * self.kernel
     }
 
+    /// Machine-readable form (artifact metadata, config files).
     pub fn to_json(&self) -> Json {
         Json::obj()
             .with("name", self.name.as_str())
@@ -82,6 +89,7 @@ impl ConvLayer {
             )
     }
 
+    /// Parse from JSON, failing on missing or malformed fields.
     pub fn from_json(j: &Json) -> anyhow::Result<ConvLayer> {
         let get = |k: &str| {
             j.get(k)

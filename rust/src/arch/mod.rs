@@ -22,7 +22,9 @@ use crate::util::json::Json;
 /// A full model: ordered conv layers + classifier metadata.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelArch {
+    /// Model family name (e.g. `"vgg9"`).
     pub name: String,
+    /// Conv layers in execution order.
     pub layers: Vec<ConvLayer>,
     /// Number of classes of the classifier head (not CIM-accelerated).
     pub num_classes: usize,

@@ -16,21 +16,32 @@ pub use xpert::xpert_point;
 /// A Table VI column.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ComparisonPoint {
+    /// Method label as printed in Table VI (e.g. `"E-UPQ"`).
     pub method: String,
+    /// Model the row reports (e.g. `"resnet18"`).
     pub model: String,
+    /// Dataset the row reports (e.g. `"CIFAR-10"`).
     pub dataset: String,
+    /// Published full-precision accuracy (%).
     pub baseline_acc: f64,
+    /// Published post-compression accuracy (%).
     pub compressed_acc: f64,
     /// (weight, activation, adc) bits as reported.
     pub bits: (f64, f64, f64),
+    /// Bits stored per memory cell (1 = binary cells).
     pub memory_cell_bits: u32,
     /// Compression ratio as a negative percentage (paper convention).
     pub compression_pct: f64,
     /// Macro usage (None where the source paper does not report it).
     pub macro_usage: Option<f64>,
+    /// Concurrently activated wordlines (the speedup lever of Table VI).
     pub activated_wordlines: usize,
+    /// Whether the method prunes weights.
     pub pruning: bool,
+    /// Whether the footprint is adjustable after pruning (the paper's
+    /// Stage-1 distinguishing feature).
     pub adjustable_after_pruning: bool,
+    /// Whether training is ADC-quantization aware (Stage 2).
     pub adc_aware_training: bool,
 }
 

@@ -12,11 +12,14 @@
 /// One ADC (all 64 share bits + step in the paper's design).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Adc {
+    /// Converter precision in bits (5 in the paper's macro).
     pub bits: u32,
+    /// Learned conversion step `S_ADC` (Eq. 7).
     pub s_adc: f32,
 }
 
 impl Adc {
+    /// An ADC with `bits` precision and step `s_adc` (both validated).
     pub fn new(bits: u32, s_adc: f32) -> Adc {
         assert!(bits >= 2 && bits <= 16, "adc bits out of range");
         assert!(s_adc > 0.0 && s_adc.is_finite(), "adc step must be positive");

@@ -16,6 +16,8 @@ pub struct AdderTree {
 }
 
 impl AdderTree {
+    /// An adder tree scaling by `s_w * s_adc` (optionally rounded to the
+    /// nearest power of two).
     pub fn new(s_w: f32, s_adc: f32, pow2: bool) -> AdderTree {
         assert!(s_w > 0.0 && s_adc > 0.0);
         AdderTree {

@@ -11,7 +11,9 @@ use super::cell::WeightCell;
 /// The macro's cell array.
 #[derive(Debug, Clone)]
 pub struct CimArray {
+    /// Array rows (concurrently activatable wordlines).
     pub wordlines: usize,
+    /// Array columns (bitlines).
     pub bitlines: usize,
     /// Column-major cells: `cells[bl * wordlines + wl]`.
     cells: Vec<WeightCell>,
@@ -20,6 +22,7 @@ pub struct CimArray {
 }
 
 impl CimArray {
+    /// An empty `wordlines x bitlines` array.
     pub fn new(wordlines: usize, bitlines: usize) -> CimArray {
         assert!(wordlines > 0 && bitlines > 0);
         CimArray {
@@ -53,11 +56,13 @@ impl CimArray {
         self.used_rows[bl] = weights.len() as u16;
     }
 
+    /// The cell at `(wl, bl)`.
     #[inline]
     pub fn cell(&self, wl: usize, bl: usize) -> WeightCell {
         self.cells[bl * self.wordlines + wl]
     }
 
+    /// Rows occupied in column `bl`.
     pub fn used_rows(&self, bl: usize) -> usize {
         self.used_rows[bl] as usize
     }

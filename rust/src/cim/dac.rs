@@ -9,11 +9,14 @@
 /// DAC with an activation quantization step.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Dac {
+    /// Input precision in bits (4 in the paper's macro).
     pub bits: u32,
+    /// Activation quantization step `S_A`.
     pub s_act: f32,
 }
 
 impl Dac {
+    /// A DAC with `bits` precision and activation step `s_act`.
     pub fn new(bits: u32, s_act: f32) -> Dac {
         assert!(bits >= 1 && bits <= 16, "dac bits out of range");
         assert!(s_act > 0.0, "activation step must be positive");

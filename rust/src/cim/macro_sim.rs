@@ -74,14 +74,20 @@ pub struct PassResult {
 /// One physical macro instance.
 #[derive(Debug, Clone)]
 pub struct CimMacro {
+    /// Physical description the macro was built from.
     pub spec: MacroSpec,
+    /// The weight cell array.
     pub array: CimArray,
+    /// Input converter (activation quantization).
     pub dac: Dac,
+    /// Output converter (partial-sum quantization).
     pub adc: Adc,
+    /// Cycle/event counters (the digital twin's ledger).
     pub stats: MacroStats,
 }
 
 impl CimMacro {
+    /// A macro over `spec` with the given activation and ADC steps.
     pub fn new(spec: MacroSpec, s_act: f32, s_adc: f32) -> CimMacro {
         CimMacro {
             spec,
@@ -209,6 +215,7 @@ impl CimMacro {
         acc.iter().map(|&a| a as f32 * s_w).collect()
     }
 
+    /// Zero the cycle/event counters (measurement boundary).
     pub fn reset_stats(&mut self) {
         self.stats = MacroStats::default();
     }

@@ -5,9 +5,10 @@
 //! hardware (Fig. 1), [`MorphConfig`] drives Stage 1, [`QuantConfig`]
 //! drives Stage 2, and [`ServeConfig`] parameterizes the L3 coordinator.
 
+use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::fleet::EvictionPolicy;
+use crate::fleet::{EvictionPolicy, QosSpec, SchedMode};
 use crate::mapping::FitPolicyKind;
 use crate::util::json::Json;
 
@@ -79,6 +80,7 @@ impl MacroSpec {
         self.wordlines * self.bitlines
     }
 
+    /// Machine-readable form (config files).
     pub fn to_json(&self) -> Json {
         Json::obj()
             .with("wordlines", self.wordlines)
@@ -90,6 +92,7 @@ impl MacroSpec {
             .with("load_cycles_per_macro", self.load_cycles_per_macro)
     }
 
+    /// Parse from JSON; missing fields fall back to the defaults.
     pub fn from_json(j: &Json) -> MacroSpec {
         let d = MacroSpec::default();
         MacroSpec {
@@ -147,6 +150,7 @@ impl Default for MorphConfig {
 }
 
 impl MorphConfig {
+    /// Machine-readable form (config files).
     pub fn to_json(&self) -> Json {
         Json::obj()
             .with("target_bl", self.target_bl)
@@ -156,6 +160,7 @@ impl MorphConfig {
             .with("ratio_step", self.ratio_step)
     }
 
+    /// Parse from JSON; missing fields fall back to the defaults.
     pub fn from_json(j: &Json) -> MorphConfig {
         let d = MorphConfig::default();
         MorphConfig {
@@ -176,11 +181,13 @@ impl MorphConfig {
 pub struct QuantConfig {
     /// Approximate `S_W·S_ADC` by the nearest power of two (digital shift).
     pub pow2_scale: bool,
-    /// Phase-1 epochs / lr (weight quantization).
+    /// Phase-1 epochs (weight quantization).
     pub p1_epochs: usize,
+    /// Phase-1 learning rate.
     pub p1_lr: f64,
-    /// Phase-2 epochs / lr (partial-sum quantization; S_W frozen).
+    /// Phase-2 epochs (partial-sum quantization; S_W frozen).
     pub p2_epochs: usize,
+    /// Phase-2 learning rate.
     pub p2_lr: f64,
 }
 
@@ -197,6 +204,7 @@ impl Default for QuantConfig {
 }
 
 impl QuantConfig {
+    /// Machine-readable form (config files).
     pub fn to_json(&self) -> Json {
         Json::obj()
             .with("pow2_scale", self.pow2_scale)
@@ -206,6 +214,7 @@ impl QuantConfig {
             .with("p2_lr", self.p2_lr)
     }
 
+    /// Parse from JSON; missing fields fall back to the defaults.
     pub fn from_json(j: &Json) -> QuantConfig {
         let d = QuantConfig::default();
         QuantConfig {
@@ -249,6 +258,7 @@ impl Default for ServeConfig {
 }
 
 impl ServeConfig {
+    /// Machine-readable form (config files).
     pub fn to_json(&self) -> Json {
         Json::obj()
             .with("max_batch", self.max_batch)
@@ -259,6 +269,7 @@ impl ServeConfig {
             .with("clock_mhz", self.clock_mhz)
     }
 
+    /// Parse from JSON; missing fields fall back to the defaults.
     pub fn from_json(j: &Json) -> ServeConfig {
         let d = ServeConfig::default();
         ServeConfig {
@@ -289,12 +300,17 @@ impl ServeConfig {
 ///   quantization, per-segment passes, ADC clipping, adder-tree scaling.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ExecutionMode {
+    /// Placements are accounted but inference uses the analytic
+    /// classifier shortcut; no weights move.
     #[default]
     Analytic,
+    /// Placements are materialized on simulated macros and inference
+    /// runs through the macro datapath.
     Twin,
 }
 
 impl ExecutionMode {
+    /// Stable config/CLI name.
     pub fn as_str(&self) -> &'static str {
         match self {
             ExecutionMode::Analytic => "analytic",
@@ -302,6 +318,7 @@ impl ExecutionMode {
         }
     }
 
+    /// Parse a config/CLI name (see [`ExecutionMode::as_str`]).
     pub fn parse(s: &str) -> Option<ExecutionMode> {
         match s {
             "analytic" => Some(ExecutionMode::Analytic),
@@ -339,6 +356,24 @@ pub struct FleetConfig {
     pub defrag_threshold: f64,
     /// Whether placements run on the simulated macros ([`ExecutionMode`]).
     pub execution: ExecutionMode,
+    /// Dispatch discipline: the QoS-aware dispatcher (default) or the
+    /// strict-arrival-order FIFO baseline (`cim-adapt fleet --sched`).
+    pub sched: SchedMode,
+    /// Admission-control budget in device cycles (0 = disabled): a
+    /// request whose pass cycles alone exceed this is rejected at
+    /// submit; a queued batch whose projected reload + pass cycles
+    /// exceed it is deferred behind resident tenants (bounded by the
+    /// anti-starvation terms; see [`crate::fleet::qos`]).
+    pub admit_budget_cycles: u64,
+    /// Aging window in device cycles for the QoS dispatcher (0 = no
+    /// aging): a queued head gains one priority level per window waited,
+    /// so lower classes are delayed, never starved.
+    pub qos_aging_cycles: u64,
+    /// Per-tenant QoS contracts applied at registration, keyed by model
+    /// name; unlisted tenants get the permissive default spec
+    /// (`Interactive`, unlimited, no deadline — pinned registrations
+    /// default to the `Pinned` class instead).
+    pub qos: BTreeMap<String, QosSpec>,
     /// Clock frequency for cycle → wall-time conversion (MHz).
     pub clock_mhz: f64,
 }
@@ -355,12 +390,17 @@ impl Default for FleetConfig {
             coresident: false,
             defrag_threshold: 0.0,
             execution: ExecutionMode::Analytic,
+            sched: SchedMode::Qos,
+            admit_budget_cycles: 0,
+            qos_aging_cycles: 50_000,
+            qos: BTreeMap::new(),
             clock_mhz: 200.0,
         }
     }
 }
 
 impl FleetConfig {
+    /// Machine-readable form (config files).
     pub fn to_json(&self) -> Json {
         Json::obj()
             .with("num_macros", self.num_macros)
@@ -372,9 +412,19 @@ impl FleetConfig {
             .with("coresident", self.coresident)
             .with("defrag_threshold", self.defrag_threshold)
             .with("execution", self.execution.as_str())
+            .with("sched", self.sched.as_str())
+            .with("admit_budget_cycles", self.admit_budget_cycles)
+            .with("qos_aging_cycles", self.qos_aging_cycles)
+            .with(
+                "qos",
+                self.qos
+                    .iter()
+                    .fold(Json::obj(), |j, (name, spec)| j.with(name.as_str(), spec.to_json())),
+            )
             .with("clock_mhz", self.clock_mhz)
     }
 
+    /// Parse from JSON; missing fields fall back to the defaults.
     pub fn from_json(j: &Json) -> FleetConfig {
         let d = FleetConfig::default();
         FleetConfig {
@@ -406,6 +456,30 @@ impl FleetConfig {
                 .as_str()
                 .and_then(ExecutionMode::parse)
                 .unwrap_or(d.execution),
+            sched: j
+                .get("sched")
+                .as_str()
+                .and_then(SchedMode::parse)
+                .unwrap_or(d.sched),
+            admit_budget_cycles: j
+                .get("admit_budget_cycles")
+                .as_usize()
+                .map(|v| v as u64)
+                .unwrap_or(d.admit_budget_cycles),
+            qos_aging_cycles: j
+                .get("qos_aging_cycles")
+                .as_usize()
+                .map(|v| v as u64)
+                .unwrap_or(d.qos_aging_cycles),
+            qos: j
+                .get("qos")
+                .as_obj()
+                .map(|m| {
+                    m.iter()
+                        .map(|(name, spec)| (name.clone(), QosSpec::from_json(spec)))
+                        .collect()
+                })
+                .unwrap_or_default(),
             clock_mhz: j.get("clock_mhz").as_f64().unwrap_or(d.clock_mhz),
         }
     }
@@ -414,14 +488,20 @@ impl FleetConfig {
 /// Top-level config bundle.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
+    /// CIM hardware description (Fig. 1).
     pub macro_spec: MacroSpec,
+    /// Stage-1 morphing parameters.
     pub morph: MorphConfig,
+    /// Stage-2 quantization parameters.
     pub quant: QuantConfig,
+    /// Single-model serving runtime parameters.
     pub serve: ServeConfig,
+    /// Multi-tenant fleet parameters.
     pub fleet: FleetConfig,
 }
 
 impl Config {
+    /// Machine-readable form (config files).
     pub fn to_json(&self) -> Json {
         Json::obj()
             .with("macro", self.macro_spec.to_json())
@@ -431,6 +511,7 @@ impl Config {
             .with("fleet", self.fleet.to_json())
     }
 
+    /// Parse from JSON; missing sections fall back to the defaults.
     pub fn from_json(j: &Json) -> Config {
         Config {
             macro_spec: MacroSpec::from_json(j.get("macro")),
@@ -449,6 +530,7 @@ impl Config {
         Ok(Config::from_json(&j))
     }
 
+    /// Write the config as pretty-printed JSON.
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
         std::fs::write(path, self.to_json().pretty())?;
         Ok(())
@@ -511,6 +593,18 @@ mod tests {
         c.coresident = true;
         c.defrag_threshold = 0.35;
         c.execution = ExecutionMode::Twin;
+        c.sched = SchedMode::Fifo;
+        c.admit_budget_cycles = 12_000;
+        c.qos_aging_cycles = 9_000;
+        c.qos.insert(
+            "edge".to_string(),
+            QosSpec {
+                class: crate::fleet::QosClass::Batch,
+                rate_per_kcycle: 2,
+                burst: 8,
+                deadline_cycles: 4_000,
+            },
+        );
         let back = FleetConfig::from_json(&c.to_json());
         assert_eq!(back, c);
         // Missing knobs default to whole-macro placement, analytic
@@ -520,6 +614,12 @@ mod tests {
         assert_eq!(FleetConfig::from_json(&j).execution, ExecutionMode::Analytic);
         assert_eq!(FleetConfig::from_json(&j).fit, FitPolicyKind::FirstFit);
         assert_eq!(FleetConfig::from_json(&j).defrag_threshold, 0.0);
+        assert_eq!(FleetConfig::from_json(&j).sched, SchedMode::Qos);
+        assert_eq!(FleetConfig::from_json(&j).admit_budget_cycles, 0);
+        assert!(FleetConfig::from_json(&j).qos.is_empty());
+        // Unknown sched string falls back to the QoS dispatcher.
+        let j = Json::parse(r#"{"sched": "mystery"}"#).unwrap();
+        assert_eq!(FleetConfig::from_json(&j).sched, SchedMode::Qos);
         // Fit strings parse; unknown falls back to first-fit.
         let j = Json::parse(r#"{"fit": "best", "defrag_threshold": 0.5}"#).unwrap();
         let f = FleetConfig::from_json(&j);

@@ -8,11 +8,17 @@ use crate::util::json::Json;
 /// Latency statistics over recorded samples (µs).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct LatencyStats {
+    /// Samples recorded.
     pub count: usize,
+    /// Mean latency (µs).
     pub mean_us: f64,
+    /// Median latency (µs).
     pub p50_us: u64,
+    /// 95th-percentile latency (µs).
     pub p95_us: u64,
+    /// 99th-percentile latency (µs).
     pub p99_us: u64,
+    /// Worst observed latency (µs).
     pub max_us: u64,
 }
 
@@ -38,18 +44,30 @@ impl LatencyStats {
 /// Point-in-time view of the server's counters.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct MetricsSnapshot {
+    /// Requests that passed the submit-side backpressure check. The
+    /// fleet's QoS admission control may still reject some of these
+    /// before they reach a queue (they then also count in `rejected`).
     pub submitted: u64,
+    /// Requests answered.
     pub completed: u64,
+    /// Requests refused (backpressure, admission control, failures).
     pub rejected: u64,
+    /// Batches dispatched.
     pub batches: u64,
+    /// Mean dispatched batch size.
     pub mean_batch: f64,
+    /// Total device-model cycles charged (compute + reloads).
     pub device_cycles: u64,
+    /// Weight reload events charged.
     pub weight_reloads: u64,
     /// Models evicted to make room for dispatched batches (fleet serving;
     /// always 0 on the single-model path).
     pub evictions: u64,
+    /// Wall-clock latency distribution of completed requests.
     pub latency: LatencyStats,
+    /// Completed requests per wall-clock second.
     pub throughput_rps: f64,
+    /// Wall-clock seconds since the collector started.
     pub elapsed_s: f64,
 }
 
@@ -118,18 +136,23 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// A fresh collector (clock starts now).
     pub fn new() -> Metrics {
         Metrics::default()
     }
 
+    /// Count an accepted submission.
     pub fn on_submit(&self) {
         self.inner.lock().unwrap().submitted += 1;
     }
 
+    /// Count a refused request (backpressure, admission, failure).
     pub fn on_reject(&self) {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    /// Record one dispatched batch's size, device cycles, reload events
+    /// and evictions.
     pub fn on_batch(&self, batch_size: usize, device_cycles: u64, reloads: u64, evictions: u64) {
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
@@ -139,6 +162,7 @@ impl Metrics {
         g.evictions += evictions;
     }
 
+    /// Record a completed request's wall-clock latency.
     pub fn on_complete(&self, latency_us: u64) {
         let mut g = self.inner.lock().unwrap();
         g.completed += 1;
@@ -149,6 +173,7 @@ impl Metrics {
         g.latencies_us.push(latency_us);
     }
 
+    /// Point-in-time copy of every counter (percentiles computed here).
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         let elapsed = g.started.elapsed().as_secs_f64();

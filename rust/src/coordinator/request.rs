@@ -8,15 +8,20 @@ pub type RequestId = u64;
 
 /// One inference request: a CHW image plus response plumbing.
 pub struct InferRequest {
+    /// Monotonic id assigned at submit.
     pub id: RequestId,
+    /// Flattened CHW image pixels.
     pub image: Vec<f32>,
+    /// Wall-clock submit time (batch-timeout + latency accounting).
     pub enqueued: Instant,
+    /// Channel the response is delivered on.
     pub respond: mpsc::Sender<InferResponse>,
 }
 
 /// The answer delivered to the submitter.
 #[derive(Debug, Clone, PartialEq)]
 pub struct InferResponse {
+    /// Id of the request this answers.
     pub id: RequestId,
     /// Argmax class.
     pub class: usize,
@@ -33,7 +38,9 @@ pub struct InferResponse {
 
 /// Handle returned by `submit`: await the response on it.
 pub struct Ticket {
+    /// Id of the submitted request.
     pub id: RequestId,
+    /// Channel the response arrives on.
     pub rx: mpsc::Receiver<InferResponse>,
 }
 

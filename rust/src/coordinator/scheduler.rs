@@ -49,6 +49,7 @@ impl InferencePlan {
 
 /// Scheduler over a model mapping.
 pub struct MacroScheduler {
+    /// The derived static execution plan.
     pub plan: InferencePlan,
 }
 

@@ -30,12 +30,17 @@ pub enum Backend {
     /// Compiled artifact (the production path): each worker loads the
     /// artifact into its own PJRT client.
     Pjrt {
+        /// Directory holding the AOT-lowered artifacts.
         artifact_dir: PathBuf,
+        /// Artifact model name (e.g. `"vgg9_edge"`).
         model: String,
     },
     /// Sim-only: classify via a trivial deterministic rule; lets serving
     /// tests/benches run without built artifacts.
-    Sim { num_classes: usize },
+    Sim {
+        /// Classifier classes of the simulated head.
+        num_classes: usize,
+    },
 }
 
 impl Backend {
@@ -87,7 +92,9 @@ pub struct ServerHandle {
     next_id: AtomicU64,
     depth: Arc<AtomicU64>,
     queue_limit: u64,
+    /// Live serving counters (shared with the workers).
     pub metrics: Arc<Metrics>,
+    /// The static CIM execution plan being served.
     pub plan: InferencePlan,
     workers: Mutex<Vec<thread::JoinHandle<()>>>,
     accepting: AtomicBool,

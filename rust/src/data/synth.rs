@@ -13,7 +13,9 @@
 //! `python/compile/data.py`; the parity unit test pins several pixels to
 //! literal values both sides assert on.
 
+/// Image side length (CIFAR-shaped: 32×32).
 pub const IMAGE_DIM: usize = 32;
+/// Classes in the synthetic distribution.
 pub const NUM_CLASSES: usize = 10;
 const CHANNELS: usize = 3;
 const NOISE_AMP: f32 = 0.08;
@@ -23,10 +25,12 @@ const NOISE_AMP: f32 = 0.08;
 pub struct Image {
     /// CHW layout: `data[ch][y][x]` flattened.
     pub data: Vec<f32>,
+    /// Ground-truth class the sample was generated for.
     pub label: usize,
 }
 
 impl Image {
+    /// Pixel accessor over the flattened CHW layout.
     pub fn pixel(&self, ch: usize, y: usize, x: usize) -> f32 {
         self.data[(ch * IMAGE_DIM + y) * IMAGE_DIM + x]
     }

@@ -71,6 +71,7 @@ impl Fragmentation {
         self.resident_spans as f64 / self.resident_tenants as f64
     }
 
+    /// Machine-readable form for snapshots and `BENCH_*.json`.
     pub fn to_json(&self) -> Json {
         Json::obj()
             .with("score", self.score())

@@ -24,12 +24,15 @@
 /// Which victim-selection rule the fleet uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum EvictionPolicy {
+    /// Evict the least-recently-used tenant.
     #[default]
     Lru,
+    /// Evict the tenant cheapest to bring back (fewest reload cycles).
     CostWeighted,
 }
 
 impl EvictionPolicy {
+    /// Stable config/CLI name.
     pub fn as_str(&self) -> &'static str {
         match self {
             EvictionPolicy::Lru => "lru",
@@ -37,6 +40,7 @@ impl EvictionPolicy {
         }
     }
 
+    /// Parse a config/CLI name (see [`EvictionPolicy::as_str`]).
     pub fn parse(s: &str) -> Option<EvictionPolicy> {
         match s {
             "lru" => Some(EvictionPolicy::Lru),
@@ -49,6 +53,7 @@ impl EvictionPolicy {
 /// One evictable resident model, as the placer describes it.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct VictimCandidate {
+    /// Model name.
     pub name: String,
     /// Placer clock tick of the model's last use (smaller = staler).
     pub last_used: u64,
@@ -76,10 +81,12 @@ pub trait Evictor {
 /// The built-in [`EvictionPolicy`] rules as an [`Evictor`].
 #[derive(Debug, Clone, Copy)]
 pub struct PolicyEvictor {
+    /// Which built-in rule to apply.
     pub policy: EvictionPolicy,
 }
 
 impl PolicyEvictor {
+    /// An evictor applying `policy`.
     pub fn new(policy: EvictionPolicy) -> PolicyEvictor {
         PolicyEvictor { policy }
     }

@@ -32,6 +32,13 @@
 //!   models are untouchable) when aggregate demand exceeds the pool.
 //!   Eviction is region-granular: it stops as soon as enough columns are
 //!   free, so co-residents that fit beside a newcomer survive.
+//! * [`qos`] — the QoS-aware dispatcher: per-tenant priority classes,
+//!   token-bucket rate limits, deadline-aware ordering and admission
+//!   control over the batch loop ([`QosScheduler`]), with a
+//!   deterministic driver ([`QosFleet`]) for benches and tests. Rejected
+//!   and deferred requests charge zero cycles on every ledger; an aging
+//!   term bounds starvation (`benches/micro_fleet.rs` measures the
+//!   FIFO vs priority vs priority+admission arms).
 //! * [`server`] — per-model routing and batching over the shared pool,
 //!   with hot-swap (reload) accounting flowing into the same
 //!   [`MacroStats`](crate::cim::MacroStats) /
@@ -61,11 +68,16 @@
 pub mod compactor;
 pub mod evictor;
 pub mod placer;
+pub mod qos;
 pub mod registry;
 pub mod server;
 
 pub use compactor::{plan_compaction, CompactionPlan, Fragmentation, SpanMove};
 pub use evictor::{EvictionPolicy, Evictor, PolicyEvictor, VictimCandidate};
 pub use placer::{Placement, Placer, SwapEvent};
+pub use qos::{
+    Admission, DispatchEstimate, QosClass, QosFleet, QosScheduler, QosSpec, QosTenantStats,
+    RejectReason, SchedMode,
+};
 pub use registry::{ModelEntry, ModelRegistry, ModelWeights};
 pub use server::{BatchOutcome, Fleet, FleetHandle, FleetServer, FleetSnapshot};

@@ -38,7 +38,9 @@ use super::registry::{ModelEntry, ModelRegistry};
 /// Where one resident model currently lives.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Placement {
+    /// Model name.
     pub model: String,
+    /// Regions the model holds, in logical-column order.
     pub regions: Vec<Region>,
 }
 
@@ -69,6 +71,7 @@ fn distinct_macros(regions: &[Region]) -> Vec<usize> {
 /// moved*, never *what it cost*.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SwapEvent {
+    /// Model the placement concerned.
     pub model: String,
     /// True when weights were (re)loaded; false for a residency hit.
     pub hot_swap: bool,
@@ -133,10 +136,12 @@ impl Placer {
         self.fit.name()
     }
 
+    /// Physical macros in the pool.
     pub fn num_macros(&self) -> usize {
         self.alloc.num_macros()
     }
 
+    /// Whether region-granular co-residency is enabled.
     pub fn coresident(&self) -> bool {
         self.coresident
     }
@@ -192,10 +197,12 @@ impl Placer {
         self.alloc.free_whole_macros().len()
     }
 
+    /// Whether `name` currently holds regions.
     pub fn is_resident(&self, name: &str) -> bool {
         self.resident.contains_key(name)
     }
 
+    /// The regions `name` holds, if resident.
     pub fn resident_regions(&self, name: &str) -> Option<&[Region]> {
         self.resident.get(name).map(|v| v.as_slice())
     }

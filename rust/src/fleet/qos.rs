@@ -1,0 +1,1082 @@
+//! QoS-aware fleet dispatch: admission control, priorities, rate limits
+//! and deadlines over the multi-tenant serving core.
+//!
+//! The fleet's original batch loop was FIFO with resident-preference, so
+//! under overload one greedy tenant could starve everyone else and force
+//! reload thrash that wipes out the compression wins co-residency and
+//! defrag bought. This module replaces it with a deterministic,
+//! cycle-clocked dispatcher:
+//!
+//! * **Priority classes** ([`QosClass`]): `Pinned` > `Interactive` >
+//!   `Batch`, each with an integer weight. Higher classes dispatch first;
+//!   an **aging** term (`FleetConfig::qos_aging_cycles`) raises a queue's
+//!   effective level the longer its head waits, so a `Batch` tenant is
+//!   delayed, never starved.
+//! * **Token-bucket rate limits** (per tenant, [`QosSpec`]): a tenant
+//!   may spend at most `burst` queued requests plus `rate_per_kcycle`
+//!   requests per 1000 *device cycles* of fleet progress. The time base
+//!   is the deterministic virtual clock (cycles the fleet actually
+//!   charged), so replays are bit-stable and the bound is exact — see
+//!   `tests/proptests.rs`.
+//! * **Deadline-aware ordering**: within a priority level the earliest
+//!   absolute deadline (enqueue clock + `deadline_cycles`) dispatches
+//!   first; batches that complete past their deadline count
+//!   `deadline_misses`.
+//! * **Admission control** (`FleetConfig::admit_budget_cycles`): a
+//!   request whose *pass cycles alone* exceed the budget can never be
+//!   served within it and is rejected at submit; a queued batch whose
+//!   projected reload + pass cycles exceed the budget right now is
+//!   **deferred** — passed over in favour of resident tenants (reload-
+//!   thrash damping) until it either becomes cheap (its tenant turned
+//!   resident) or has been deferred [`MAX_DEFERS`] times, after which it
+//!   is eligible regardless (the anti-starvation bound).
+//!
+//! Rejected and deferred requests charge **zero cycles on all four
+//! ledgers** (fleet / per-macro / per-tenant / twin): admission happens
+//! before any placement or load, so the conservation invariant of
+//! [`super::server`] is untouched (asserted by `tests/proptests.rs`).
+//!
+//! Two drivers share the scheduler core:
+//!
+//! * [`QosFleet`] — the deterministic driver used by benches and tests:
+//!   `submit` queues payloads, `dispatch_next`/`drain` serve them in
+//!   policy order on the non-threaded [`Fleet`], with exact cycle
+//!   counters (`benches/micro_fleet.rs` measures the FIFO vs priority vs
+//!   priority+admission arms this way).
+//! * [`FleetServer`](super::FleetServer) — the threaded runtime: the
+//!   dispatcher loop admits each arriving request through the same
+//!   [`QosScheduler`] and picks the next batch with the same ranking.
+//!
+//! ```
+//! use cim_adapt::arch::vgg9;
+//! use cim_adapt::config::{FleetConfig, MacroSpec};
+//! use cim_adapt::fleet::{QosClass, QosFleet, QosSpec};
+//!
+//! let cfg = FleetConfig { num_macros: 1, coresident: true, ..FleetConfig::default() };
+//! let mut fleet = QosFleet::new(&cfg, &MacroSpec::default());
+//! fleet.register("hi", vgg9().scaled(0.04), false).unwrap();
+//! fleet
+//!     .register_with_qos(
+//!         "lo",
+//!         vgg9().scaled(0.03),
+//!         false,
+//!         QosSpec { class: QosClass::Batch, ..QosSpec::default() },
+//!     )
+//!     .unwrap();
+//! let img = vec![0.5f32; 3 * 32 * 32];
+//! // Submitted lo-first, but the Interactive tenant dispatches first.
+//! assert!(fleet.submit("lo", vec![img.clone()]).unwrap().is_admitted());
+//! assert!(fleet.submit("hi", vec![img]).unwrap().is_admitted());
+//! let first = fleet.dispatch_next().unwrap().unwrap();
+//! assert_eq!(first.model, "hi");
+//! let outcomes = fleet.drain().unwrap();
+//! assert_eq!(outcomes.len(), 1); // the remaining lo batch
+//! ```
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, VecDeque};
+
+use anyhow::Result;
+
+use crate::arch::ModelArch;
+use crate::config::{FleetConfig, MacroSpec};
+use crate::util::json::Json;
+
+use super::server::{BatchOutcome, Fleet, FleetSnapshot};
+
+/// Deferral bound of the admission controller: a queued batch passed
+/// over this many times dispatches regardless of its projected cost —
+/// the anti-starvation term that keeps admission control from parking a
+/// non-resident tenant forever.
+pub const MAX_DEFERS: u32 = 4;
+
+/// Weighted priority class of a tenant's requests.
+///
+/// The weight sets the base dispatch level; aging
+/// (`FleetConfig::qos_aging_cycles`) adds one level per aging window the
+/// queue's head has waited, so lower classes are delayed, never starved.
+/// Compare priorities via [`QosClass::weight`] (deliberately no `Ord`:
+/// the declaration order is display order, not priority order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QosClass {
+    /// Latency-critical traffic: dispatches before everything else.
+    /// (Orthogonal to *placement* pinning — a `Pinned`-class tenant's
+    /// weights may still be evicted; pin the model at registration to
+    /// protect its residency too.)
+    Pinned,
+    /// The default class: user-facing requests.
+    #[default]
+    Interactive,
+    /// Throughput traffic: dispatches when nothing more urgent waits.
+    Batch,
+}
+
+impl QosClass {
+    /// Base dispatch level (higher dispatches first).
+    pub fn weight(&self) -> u64 {
+        match self {
+            QosClass::Pinned => 4,
+            QosClass::Interactive => 2,
+            QosClass::Batch => 1,
+        }
+    }
+
+    /// Stable config/CLI name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            QosClass::Pinned => "pinned",
+            QosClass::Interactive => "interactive",
+            QosClass::Batch => "batch",
+        }
+    }
+
+    /// Parse a config/CLI name (see [`QosClass::as_str`]).
+    pub fn parse(s: &str) -> Option<QosClass> {
+        match s {
+            "pinned" => Some(QosClass::Pinned),
+            "interactive" => Some(QosClass::Interactive),
+            "batch" => Some(QosClass::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// Per-tenant quality-of-service contract.
+///
+/// The default spec is the permissive one: `Interactive` class, no rate
+/// limit, no deadline — a fleet whose tenants all run the default spec
+/// behaves like the pre-QoS dispatcher (resident-preference included).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QosSpec {
+    /// Priority class (dispatch ordering).
+    pub class: QosClass,
+    /// Token-bucket refill: requests admitted per 1000 device cycles of
+    /// fleet progress. `0` together with `burst == 0` means unlimited;
+    /// `0` with `burst > 0` means a hard cap of `burst` requests total
+    /// (no refill) — the deterministic shape tests use.
+    pub rate_per_kcycle: u64,
+    /// Token-bucket capacity in requests (the burst allowance). When
+    /// rate-limited the effective capacity is at least 1, so a positive
+    /// refill rate always makes progress.
+    pub burst: u64,
+    /// Relative deadline in device cycles (0 = none): a queued request's
+    /// absolute deadline is its enqueue clock plus this. Earlier
+    /// deadlines dispatch first within a priority level, and dispatches
+    /// past the deadline count as misses.
+    pub deadline_cycles: u64,
+}
+
+impl Default for QosSpec {
+    fn default() -> Self {
+        QosSpec {
+            class: QosClass::Interactive,
+            rate_per_kcycle: 0,
+            burst: 0,
+            deadline_cycles: 0,
+        }
+    }
+}
+
+impl QosSpec {
+    /// Whether this spec rate-limits at all (see
+    /// [`QosSpec::rate_per_kcycle`]).
+    pub fn rate_limited(&self) -> bool {
+        self.rate_per_kcycle > 0 || self.burst > 0
+    }
+
+    /// Machine-readable form (config files, `FleetConfig::to_json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("class", self.class.as_str())
+            .with("rate_per_kcycle", self.rate_per_kcycle)
+            .with("burst", self.burst)
+            .with("deadline_cycles", self.deadline_cycles)
+    }
+
+    /// Parse from JSON; missing fields fall back to the defaults.
+    pub fn from_json(j: &Json) -> QosSpec {
+        let d = QosSpec::default();
+        QosSpec {
+            class: j
+                .get("class")
+                .as_str()
+                .and_then(QosClass::parse)
+                .unwrap_or(d.class),
+            rate_per_kcycle: j
+                .get("rate_per_kcycle")
+                .as_usize()
+                .map(|v| v as u64)
+                .unwrap_or(d.rate_per_kcycle),
+            burst: j.get("burst").as_usize().map(|v| v as u64).unwrap_or(d.burst),
+            deadline_cycles: j
+                .get("deadline_cycles")
+                .as_usize()
+                .map(|v| v as u64)
+                .unwrap_or(d.deadline_cycles),
+        }
+    }
+}
+
+/// Which dispatch discipline the fleet runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedMode {
+    /// The QoS dispatcher: priority classes, deadlines, admission
+    /// control, reload-thrash damping, aging. With all-default
+    /// [`QosSpec`]s and no admission budget this reduces to
+    /// resident-preferring oldest-first dispatch.
+    #[default]
+    Qos,
+    /// Strict arrival order across all tenants — the overload baseline
+    /// the QoS arms are measured against (`benches/micro_fleet.rs`).
+    /// Rate limits still apply (they police tenants, not the dispatcher);
+    /// the admission budget and priorities do not.
+    Fifo,
+}
+
+impl SchedMode {
+    /// Stable config/CLI name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SchedMode::Qos => "qos",
+            SchedMode::Fifo => "fifo",
+        }
+    }
+
+    /// Parse a config/CLI name (see [`SchedMode::as_str`]).
+    pub fn parse(s: &str) -> Option<SchedMode> {
+        match s {
+            "qos" => Some(SchedMode::Qos),
+            "fifo" => Some(SchedMode::Fifo),
+            _ => None,
+        }
+    }
+}
+
+/// Why a submit was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The tenant's token bucket is empty (over its rate/burst).
+    RateLimited,
+    /// The batch's pass cycles alone exceed the admission budget — it
+    /// could never be served within it, resident or not.
+    OverBudget,
+}
+
+/// Outcome of submitting a batch to the QoS dispatcher.
+///
+/// Deferral is *not* a submit outcome: admitted requests stay queued and
+/// may be deferred at dispatch time (counted in [`QosTenantStats`]), but
+/// they are never dropped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Queued; will be served (the anti-starvation bound guarantees it).
+    Admitted,
+    /// Refused; the request charges zero cycles on every ledger.
+    Rejected(RejectReason),
+}
+
+impl Admission {
+    /// Whether the request was queued.
+    pub fn is_admitted(&self) -> bool {
+        matches!(self, Admission::Admitted)
+    }
+}
+
+/// Per-tenant QoS accounting, reported in
+/// [`FleetSnapshot::qos_stats`](super::FleetSnapshot).
+///
+/// `admitted`/`rejected` count *requests* at submit time; `deferred`
+/// counts dispatch-time postponement events (one per pass-over of a
+/// queue head); `queue_delay_cycles` sums, per dispatched request, the
+/// virtual device cycles between its admission and its dispatch.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QosTenantStats {
+    /// Requests accepted into the queue.
+    pub admitted: u64,
+    /// Requests refused at submit (rate limit or budget).
+    pub rejected: u64,
+    /// Times a queued batch was passed over by admission control.
+    pub deferred: u64,
+    /// Σ over dispatched requests of (dispatch clock − enqueue clock).
+    pub queue_delay_cycles: u64,
+    /// Requests dispatched after their absolute deadline.
+    pub deadline_misses: u64,
+}
+
+impl QosTenantStats {
+    /// Fold another tenant's counters into this one.
+    pub fn absorb(&mut self, other: &QosTenantStats) {
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
+        self.deferred += other.deferred;
+        self.queue_delay_cycles += other.queue_delay_cycles;
+        self.deadline_misses += other.deadline_misses;
+    }
+
+    /// Machine-readable form for snapshots and `BENCH_*.json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("admitted", self.admitted)
+            .with("rejected", self.rejected)
+            .with("deferred", self.deferred)
+            .with("queue_delay_cycles", self.queue_delay_cycles)
+            .with("deadline_misses", self.deadline_misses)
+    }
+}
+
+/// Projected cost of dispatching a batch *now*, as the fleet estimates
+/// it (see `Fleet::dispatch_estimate`): the admission controller's
+/// input. Estimates never enter the ledgers — actual charges happen in
+/// `serve_batch` — they only order and gate dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DispatchEstimate {
+    /// Whether the tenant is resident right now (a dispatch would reload
+    /// nothing).
+    pub resident: bool,
+    /// Projected reload cycles of a dispatch now (0 when resident; the
+    /// region-granular footprint cost on a hot-swap; the steady-state
+    /// paging cost for an oversized tenant).
+    pub reload_cycles: u64,
+    /// Projected pass (compute) cycles for the whole batch.
+    pub pass_cycles: u64,
+}
+
+impl DispatchEstimate {
+    /// Projected total: what the admission budget is compared against.
+    pub fn total_cycles(&self) -> u64 {
+        self.reload_cycles + self.pass_cycles
+    }
+}
+
+/// Token bucket in milli-tokens: `avail` refills by `rate_per_kcycle`
+/// milli-tokens per device cycle (= `rate_per_kcycle` tokens per 1000
+/// cycles) up to `max(burst, 1) · 1000`, and each admitted request
+/// spends 1000.
+#[derive(Debug, Clone, Copy)]
+struct Bucket {
+    avail_milli: u64,
+    stamp: u64,
+}
+
+/// One admitted-but-undispatched batch's metadata.
+#[derive(Debug, Clone, Copy)]
+struct QueuedBatch {
+    /// Requests in the batch.
+    size: usize,
+    /// Virtual clock at admission.
+    enqueued: u64,
+    /// Global admission sequence number — the arrival-order tiebreak
+    /// (the virtual clock only advances when batches serve, so several
+    /// admissions can share one `enqueued` value).
+    seq: u64,
+    /// Absolute deadline (`u64::MAX` = none).
+    deadline: u64,
+    /// Times admission control passed this batch over.
+    defers: u32,
+}
+
+/// The deterministic QoS scheduling core: per-tenant specs, token
+/// buckets, queued-batch metadata and accounting, clocked by the fleet's
+/// virtual device cycles.
+///
+/// The scheduler holds *metadata only* — payloads stay with the driver
+/// ([`QosFleet`] holds image batches, the threaded
+/// [`FleetServer`](super::FleetServer) holds request structs in the same
+/// per-model FIFO order) — so one core serves both the synchronous and
+/// the threaded dispatcher.
+#[derive(Debug)]
+pub struct QosScheduler {
+    mode: SchedMode,
+    admit_budget: u64,
+    aging_cycles: u64,
+    specs: BTreeMap<String, QosSpec>,
+    buckets: BTreeMap<String, Bucket>,
+    queues: BTreeMap<String, VecDeque<QueuedBatch>>,
+    stats: BTreeMap<String, QosTenantStats>,
+    clock: u64,
+    next_seq: u64,
+}
+
+impl QosScheduler {
+    /// A scheduler with the given discipline, admission budget
+    /// (0 = disabled) and aging window (0 = no aging; the
+    /// [`MAX_DEFERS`] bound still guarantees progress).
+    pub fn new(mode: SchedMode, admit_budget_cycles: u64, aging_cycles: u64) -> QosScheduler {
+        QosScheduler {
+            mode,
+            admit_budget: admit_budget_cycles,
+            aging_cycles,
+            specs: BTreeMap::new(),
+            buckets: BTreeMap::new(),
+            queues: BTreeMap::new(),
+            stats: BTreeMap::new(),
+            clock: 0,
+            next_seq: 0,
+        }
+    }
+
+    /// The dispatch discipline this scheduler runs.
+    pub fn mode(&self) -> SchedMode {
+        self.mode
+    }
+
+    /// The admission budget in cycles (0 = disabled).
+    pub fn admit_budget_cycles(&self) -> u64 {
+        self.admit_budget
+    }
+
+    /// Current virtual clock (total device cycles the fleet charged).
+    pub fn now(&self) -> u64 {
+        self.clock
+    }
+
+    /// Advance the virtual clock — the fleet calls this with every
+    /// batch's charged device cycles, so queue delays, bucket refills
+    /// and deadlines are measured in the same unit as the ledgers.
+    pub fn advance(&mut self, device_cycles: u64) {
+        self.clock += device_cycles;
+    }
+
+    /// Install (or replace) a tenant's spec; its token bucket starts
+    /// full.
+    pub fn set_spec(&mut self, name: &str, spec: QosSpec) {
+        self.specs.insert(name.to_string(), spec);
+        self.buckets.insert(
+            name.to_string(),
+            Bucket {
+                avail_milli: spec.burst.max(1) * 1000,
+                stamp: self.clock,
+            },
+        );
+    }
+
+    /// A tenant's spec (the permissive default when none was set).
+    pub fn spec(&self, name: &str) -> QosSpec {
+        self.specs.get(name).copied().unwrap_or_default()
+    }
+
+    /// Drop a tenant's spec, bucket and queued metadata (retirement).
+    /// Its stats are kept — refused and served work stays on the books.
+    pub fn remove(&mut self, name: &str) {
+        self.specs.remove(name);
+        self.buckets.remove(name);
+        self.queues.remove(name);
+    }
+
+    /// Queued (admitted, undispatched) requests for `name`.
+    pub fn queued_requests(&self, name: &str) -> usize {
+        self.queues
+            .get(name)
+            .map(|q| q.iter().map(|b| b.size).sum())
+            .unwrap_or(0)
+    }
+
+    /// Models with at least one queued batch, ascending by name.
+    pub fn pending_models(&self) -> Vec<String> {
+        self.queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(n, _)| n.clone())
+            .collect()
+    }
+
+    /// Whether any batch is queued.
+    pub fn has_pending(&self) -> bool {
+        self.queues.values().any(|q| !q.is_empty())
+    }
+
+    /// Admit or refuse a batch of `size` requests for `model`, given the
+    /// fleet's projected dispatch cost. Admitted batches are queued (the
+    /// driver queues the payload in the same order); refused ones charge
+    /// nothing anywhere.
+    pub fn admit(&mut self, model: &str, size: usize, est: &DispatchEstimate) -> Admission {
+        let spec = self.spec(model);
+        let stats = self.stats.entry(model.to_string()).or_default();
+        if self.mode == SchedMode::Qos
+            && self.admit_budget > 0
+            && est.pass_cycles > self.admit_budget
+        {
+            // Pass cycles never shrink (unlike reload cycles, which drop
+            // to zero once resident), so this batch can never fit the
+            // budget: reject rather than park it forever. Checked before
+            // the token bucket so a budget rejection never burns the
+            // tenant's rate-limit tokens.
+            stats.rejected += size as u64;
+            return Admission::Rejected(RejectReason::OverBudget);
+        }
+        if spec.rate_limited() {
+            let cap = spec.burst.max(1) * 1000;
+            let clock = self.clock;
+            let bucket = self
+                .buckets
+                .entry(model.to_string())
+                .or_insert(Bucket { avail_milli: cap, stamp: clock });
+            bucket.avail_milli = cap
+                .min(bucket.avail_milli + (clock - bucket.stamp) * spec.rate_per_kcycle);
+            bucket.stamp = clock;
+            let need = size as u64 * 1000;
+            if bucket.avail_milli < need {
+                stats.rejected += size as u64;
+                return Admission::Rejected(RejectReason::RateLimited);
+            }
+            // Tokens are spent only on actual admission (this is the last
+            // check that can refuse).
+            bucket.avail_milli -= need;
+        }
+        stats.admitted += size as u64;
+        let deadline = if spec.deadline_cycles == 0 {
+            u64::MAX
+        } else {
+            self.clock + spec.deadline_cycles
+        };
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queues
+            .entry(model.to_string())
+            .or_default()
+            .push_back(QueuedBatch {
+                size,
+                enqueued: self.clock,
+                seq,
+                deadline,
+                defers: 0,
+            });
+        Admission::Admitted
+    }
+
+    /// Pick which of `candidates` (models with queued batches the driver
+    /// considers ready) should dispatch next; `estimate` prices each
+    /// candidate's head batch. Returns `None` only when no candidate has
+    /// a queued batch — when every eligible queue is over budget the
+    /// oldest head is force-served, so the dispatcher always progresses.
+    pub fn select_among<F>(&mut self, candidates: &[String], mut estimate: F) -> Option<String>
+    where
+        F: FnMut(&str, usize) -> DispatchEstimate,
+    {
+        struct Head<'a> {
+            name: &'a str,
+            enqueued: u64,
+            seq: u64,
+            deadline: u64,
+            level: u64,
+            resident: bool,
+            eligible: bool,
+        }
+        let mut heads: Vec<Head> = Vec::with_capacity(candidates.len());
+        for name in candidates {
+            let Some(head) = self.queues.get(name).and_then(|q| q.front()) else {
+                continue;
+            };
+            let est = estimate(name, head.size);
+            let eligible = match self.mode {
+                SchedMode::Fifo => true,
+                SchedMode::Qos => {
+                    self.admit_budget == 0
+                        || est.total_cycles() <= self.admit_budget
+                        || head.defers >= MAX_DEFERS
+                }
+            };
+            let age = self.clock.saturating_sub(head.enqueued);
+            let level = match self.mode {
+                SchedMode::Fifo => 0,
+                SchedMode::Qos => {
+                    self.spec(name).class.weight()
+                        + if self.aging_cycles > 0 { age / self.aging_cycles } else { 0 }
+                }
+            };
+            heads.push(Head {
+                name: name.as_str(),
+                enqueued: head.enqueued,
+                seq: head.seq,
+                deadline: head.deadline,
+                level,
+                resident: est.resident,
+                eligible,
+            });
+        }
+        if heads.is_empty() {
+            return None;
+        }
+        let pick = if self.mode == SchedMode::Fifo {
+            // Strict arrival order (the admission sequence number).
+            heads
+                .iter()
+                .min_by_key(|h| h.seq)
+                .map(|h| h.name.to_string())
+        } else if heads.iter().any(|h| h.eligible) {
+            heads
+                .iter()
+                .filter(|h| h.eligible)
+                .min_by_key(|h| {
+                    (
+                        Reverse(h.level),
+                        Reverse(h.resident),
+                        h.deadline,
+                        h.enqueued,
+                        h.seq,
+                    )
+                })
+                .map(|h| h.name.to_string())
+        } else {
+            // Everyone is over budget: force the oldest head so the
+            // dispatcher never wedges (its defers were already counted).
+            heads
+                .iter()
+                .min_by_key(|h| h.seq)
+                .map(|h| h.name.to_string())
+        };
+        // Count a deferral on every eligible-check failure this round
+        // (the head was passed over by admission control, not by losing
+        // a priority comparison).
+        if let Some(ref winner) = pick {
+            for h in &heads {
+                if !h.eligible && h.name != winner.as_str() {
+                    if let Some(q) = self.queues.get_mut(h.name) {
+                        if let Some(front) = q.front_mut() {
+                            front.defers += 1;
+                        }
+                    }
+                    self.stats.entry(h.name.to_string()).or_default().deferred += 1;
+                }
+            }
+        }
+        pick
+    }
+
+    /// Like [`QosScheduler::select_among`] over every pending model.
+    pub fn select<F>(&mut self, estimate: F) -> Option<String>
+    where
+        F: FnMut(&str, usize) -> DispatchEstimate,
+    {
+        let pending = self.pending_models();
+        self.select_among(&pending, estimate)
+    }
+
+    /// Record the dispatch of `take` queued requests for `model`: pops
+    /// whole batch entries summing to `take`, charging each request its
+    /// queue delay (and a deadline miss when past due). The driver must
+    /// dispatch on submit boundaries (the threaded server submits
+    /// single-request entries, so any batch size aligns).
+    pub fn begin_dispatch(&mut self, model: &str, take: usize) {
+        let Some(q) = self.queues.get_mut(model) else {
+            return;
+        };
+        let stats = self.stats.entry(model.to_string()).or_default();
+        let mut taken = 0usize;
+        while taken < take {
+            let Some(batch) = q.pop_front() else { break };
+            let delay = self.clock.saturating_sub(batch.enqueued);
+            stats.queue_delay_cycles += delay * batch.size as u64;
+            if self.clock > batch.deadline {
+                stats.deadline_misses += batch.size as u64;
+            }
+            taken += batch.size;
+        }
+        debug_assert_eq!(taken, take, "dispatch crossed a submit boundary");
+    }
+
+    /// Per-tenant QoS counters, ascending by name.
+    pub fn stats(&self) -> Vec<(String, QosTenantStats)> {
+        self.stats.iter().map(|(n, s)| (n.clone(), *s)).collect()
+    }
+
+    /// Aggregate counters over every tenant.
+    pub fn totals(&self) -> QosTenantStats {
+        let mut t = QosTenantStats::default();
+        for s in self.stats.values() {
+            t.absorb(s);
+        }
+        t
+    }
+}
+
+/// The deterministic QoS serving driver: a [`Fleet`] plus the payload
+/// queues the scheduler's metadata describes. `submit` runs admission,
+/// `dispatch_next`/`drain` serve queued batches in policy order — all on
+/// the virtual cycle clock, so benches and tests get bit-stable
+/// counters (`benches/micro_fleet.rs` builds its overload arms on this).
+pub struct QosFleet {
+    fleet: Fleet,
+    pending: BTreeMap<String, VecDeque<Vec<Vec<f32>>>>,
+}
+
+impl QosFleet {
+    /// A QoS driver over a fresh fleet configured by `cfg` (scheduling
+    /// discipline, admission budget, aging window and per-tenant specs
+    /// all come from the config; see [`FleetConfig`]).
+    pub fn new(cfg: &FleetConfig, spec: &MacroSpec) -> QosFleet {
+        QosFleet {
+            fleet: Fleet::new(cfg, spec),
+            pending: BTreeMap::new(),
+        }
+    }
+
+    /// The underlying deterministic fleet core.
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
+    }
+
+    /// Mutable access to the underlying fleet core (e.g. to compact).
+    pub fn fleet_mut(&mut self) -> &mut Fleet {
+        &mut self.fleet
+    }
+
+    /// Register a tenant with the config's (or default) QoS spec; see
+    /// [`Fleet::register`] for the placement-side semantics.
+    pub fn register(&mut self, name: &str, arch: ModelArch, pinned: bool) -> Result<()> {
+        self.fleet.register(name, arch, pinned)
+    }
+
+    /// Register a tenant with an explicit QoS spec (overrides any
+    /// config-supplied one).
+    pub fn register_with_qos(
+        &mut self,
+        name: &str,
+        arch: ModelArch,
+        pinned: bool,
+        spec: QosSpec,
+    ) -> Result<()> {
+        self.fleet.register_with_qos(name, arch, pinned, spec)
+    }
+
+    /// Retire a tenant: queued payloads are dropped (their metadata too)
+    /// and its regions are freed.
+    pub fn retire(&mut self, name: &str) -> Result<()> {
+        self.pending.remove(name);
+        self.fleet.retire(name)
+    }
+
+    /// Submit one batch through admission control. Admitted batches are
+    /// queued for [`QosFleet::dispatch_next`]; rejected ones charge
+    /// nothing and are dropped here.
+    pub fn submit(&mut self, model: &str, images: Vec<Vec<f32>>) -> Result<Admission> {
+        anyhow::ensure!(!images.is_empty(), "empty batch for model '{model}'");
+        let est = self.fleet.dispatch_estimate(model, images.len())?;
+        let admission = self.fleet.qos_mut().admit(model, images.len(), &est);
+        if admission.is_admitted() {
+            self.pending
+                .entry(model.to_string())
+                .or_default()
+                .push_back(images);
+        }
+        Ok(admission)
+    }
+
+    /// Queued (admitted, undispatched) batches across all tenants.
+    pub fn pending_batches(&self) -> usize {
+        self.pending.values().map(|q| q.len()).sum()
+    }
+
+    /// Dispatch the next batch in policy order, or `None` when nothing
+    /// is queued. The anti-starvation bound guarantees progress, so
+    /// draining a finite queue always terminates.
+    pub fn dispatch_next(&mut self) -> Result<Option<BatchOutcome>> {
+        let Some(model) = self.fleet.qos_select() else {
+            return Ok(None);
+        };
+        let images = self
+            .pending
+            .get_mut(&model)
+            .and_then(|q| q.pop_front())
+            .expect("scheduler metadata and payload queues move in lockstep");
+        self.fleet.qos_begin(&model, images.len());
+        let out = self.fleet.serve_batch(&model, &images)?;
+        Ok(Some(out))
+    }
+
+    /// Serve every queued batch in policy order.
+    pub fn drain(&mut self) -> Result<Vec<BatchOutcome>> {
+        let mut out = Vec::new();
+        while let Some(o) = self.dispatch_next()? {
+            out.push(o);
+        }
+        Ok(out)
+    }
+
+    /// Accounting snapshot of the underlying fleet (QoS stats included).
+    pub fn snapshot(&self) -> FleetSnapshot {
+        self.fleet.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vgg9;
+    use crate::config::ExecutionMode;
+
+    fn est(resident: bool, reload: u64, pass: u64) -> DispatchEstimate {
+        DispatchEstimate {
+            resident,
+            reload_cycles: reload,
+            pass_cycles: pass,
+        }
+    }
+
+    fn img() -> Vec<f32> {
+        crate::data::SynthCifar::sample(1, 3).data
+    }
+
+    #[test]
+    fn class_weights_ordered_and_parse_roundtrip() {
+        assert!(QosClass::Pinned.weight() > QosClass::Interactive.weight());
+        assert!(QosClass::Interactive.weight() > QosClass::Batch.weight());
+        for c in [QosClass::Pinned, QosClass::Interactive, QosClass::Batch] {
+            assert_eq!(QosClass::parse(c.as_str()), Some(c));
+        }
+        assert_eq!(QosClass::parse("mystery"), None);
+        for m in [SchedMode::Qos, SchedMode::Fifo] {
+            assert_eq!(SchedMode::parse(m.as_str()), Some(m));
+        }
+        let spec = QosSpec {
+            class: QosClass::Batch,
+            rate_per_kcycle: 3,
+            burst: 7,
+            deadline_cycles: 900,
+        };
+        assert_eq!(QosSpec::from_json(&spec.to_json()), spec);
+        assert_eq!(QosSpec::from_json(&Json::obj()), QosSpec::default());
+    }
+
+    #[test]
+    fn token_bucket_hard_cap_and_refill() {
+        let mut s = QosScheduler::new(SchedMode::Qos, 0, 0);
+        // Hard cap: burst 2, no refill.
+        s.set_spec("m", QosSpec { burst: 2, ..QosSpec::default() });
+        assert!(s.admit("m", 1, &est(true, 0, 10)).is_admitted());
+        assert!(s.admit("m", 1, &est(true, 0, 10)).is_admitted());
+        assert_eq!(
+            s.admit("m", 1, &est(true, 0, 10)),
+            Admission::Rejected(RejectReason::RateLimited)
+        );
+        // Refill: 1 request per kcycle.
+        s.set_spec("r", QosSpec { burst: 1, rate_per_kcycle: 1, ..QosSpec::default() });
+        assert!(s.admit("r", 1, &est(true, 0, 10)).is_admitted());
+        assert!(!s.admit("r", 1, &est(true, 0, 10)).is_admitted());
+        s.advance(1000);
+        assert!(s.admit("r", 1, &est(true, 0, 10)).is_admitted());
+        let stats: BTreeMap<_, _> = s.stats().into_iter().collect();
+        assert_eq!(stats["m"].admitted, 2);
+        assert_eq!(stats["m"].rejected, 1);
+        assert_eq!(stats["r"].admitted, 2);
+        assert_eq!(stats["r"].rejected, 1);
+    }
+
+    #[test]
+    fn over_budget_pass_rejected_at_submit() {
+        let mut s = QosScheduler::new(SchedMode::Qos, 100, 0);
+        assert_eq!(
+            s.admit("m", 1, &est(false, 50, 200)),
+            Admission::Rejected(RejectReason::OverBudget)
+        );
+        // Reload-heavy but pass-light is admitted (it may become cheap).
+        assert!(s.admit("m", 1, &est(false, 500, 50)).is_admitted());
+        // Fifo mode never applies the budget.
+        let mut f = QosScheduler::new(SchedMode::Fifo, 100, 0);
+        assert!(f.admit("m", 1, &est(false, 50, 200)).is_admitted());
+    }
+
+    #[test]
+    fn budget_rejection_does_not_burn_rate_tokens() {
+        // A hard-capped tenant (burst 1, no refill) whose first submit is
+        // over budget: the rejection must not spend its only token, so a
+        // later within-budget submit still goes through.
+        let mut s = QosScheduler::new(SchedMode::Qos, 100, 0);
+        s.set_spec("m", QosSpec { burst: 1, ..QosSpec::default() });
+        assert_eq!(
+            s.admit("m", 1, &est(false, 0, 500)),
+            Admission::Rejected(RejectReason::OverBudget)
+        );
+        assert!(s.admit("m", 1, &est(false, 0, 50)).is_admitted());
+        // The token really is gone now.
+        assert_eq!(
+            s.admit("m", 1, &est(false, 0, 50)),
+            Admission::Rejected(RejectReason::RateLimited)
+        );
+    }
+
+    #[test]
+    fn priority_orders_dispatch_and_fifo_ignores_it() {
+        for (mode, expect) in [(SchedMode::Qos, "hi"), (SchedMode::Fifo, "lo")] {
+            let mut s = QosScheduler::new(mode, 0, 0);
+            s.set_spec("hi", QosSpec { class: QosClass::Interactive, ..QosSpec::default() });
+            s.set_spec("lo", QosSpec { class: QosClass::Batch, ..QosSpec::default() });
+            assert!(s.admit("lo", 1, &est(false, 10, 10)).is_admitted());
+            assert!(s.admit("hi", 1, &est(false, 10, 10)).is_admitted());
+            let pick = s.select(|_, _| est(false, 10, 10)).unwrap();
+            assert_eq!(pick, expect, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn resident_preference_within_a_class() {
+        let mut s = QosScheduler::new(SchedMode::Qos, 0, 0);
+        assert!(s.admit("a", 1, &est(false, 10, 10)).is_admitted());
+        assert!(s.admit("b", 1, &est(false, 10, 10)).is_admitted());
+        // Same class: the resident tenant wins even though 'a' is older.
+        let pick = s
+            .select(|name, _| est(name == "b", if name == "b" { 0 } else { 10 }, 10))
+            .unwrap();
+        assert_eq!(pick, "b");
+    }
+
+    #[test]
+    fn earlier_deadline_wins_within_a_class() {
+        let mut s = QosScheduler::new(SchedMode::Qos, 0, 0);
+        s.set_spec("tight", QosSpec { deadline_cycles: 100, ..QosSpec::default() });
+        s.set_spec("loose", QosSpec { deadline_cycles: 10_000, ..QosSpec::default() });
+        assert!(s.admit("loose", 1, &est(false, 0, 10)).is_admitted());
+        assert!(s.admit("tight", 1, &est(false, 0, 10)).is_admitted());
+        let pick = s.select(|_, _| est(false, 0, 10)).unwrap();
+        assert_eq!(pick, "tight");
+        // Dispatch past the deadline counts a miss.
+        s.advance(500);
+        s.begin_dispatch("tight", 1);
+        let stats: BTreeMap<_, _> = s.stats().into_iter().collect();
+        assert_eq!(stats["tight"].deadline_misses, 1);
+        assert_eq!(stats["tight"].queue_delay_cycles, 500);
+    }
+
+    #[test]
+    fn aging_eventually_outranks_higher_classes() {
+        let mut s = QosScheduler::new(SchedMode::Qos, 0, 1000);
+        s.set_spec("bg", QosSpec { class: QosClass::Batch, ..QosSpec::default() });
+        s.set_spec("vip", QosSpec { class: QosClass::Pinned, ..QosSpec::default() });
+        assert!(s.admit("bg", 1, &est(false, 0, 10)).is_admitted());
+        // Fresh VIP outranks the fresh background batch...
+        assert!(s.admit("vip", 1, &est(false, 0, 10)).is_admitted());
+        assert_eq!(s.select(|_, _| est(false, 0, 10)).unwrap(), "vip");
+        s.begin_dispatch("vip", 1);
+        // ...but after (weight gap) aging windows the waiting head has
+        // climbed to the VIP level, and its older enqueue clock breaks
+        // the tie against a fresh VIP arrival.
+        s.advance(3000);
+        assert!(s.admit("vip", 1, &est(false, 0, 10)).is_admitted());
+        assert_eq!(s.select(|_, _| est(false, 0, 10)).unwrap(), "bg");
+    }
+
+    #[test]
+    fn admission_defers_swaps_then_forces_progress() {
+        let mut s = QosScheduler::new(SchedMode::Qos, 100, 0);
+        assert!(s.admit("cheap", 1, &est(true, 0, 50)).is_admitted());
+        assert!(s.admit("dear", 1, &est(false, 500, 50)).is_admitted());
+        // The over-budget swap defers while a resident tenant is ready.
+        for _ in 0..2 {
+            let pick = s
+                .select(|n, _| if n == "dear" { est(false, 500, 50) } else { est(true, 0, 50) })
+                .unwrap();
+            assert_eq!(pick, "cheap");
+        }
+        let stats: BTreeMap<_, _> = s.stats().into_iter().collect();
+        assert_eq!(stats["dear"].deferred, 2);
+        // Once nothing else is queued, the over-budget head force-serves.
+        s.begin_dispatch("cheap", 1);
+        let pick = s.select(|_, _| est(false, 500, 50)).unwrap();
+        assert_eq!(pick, "dear");
+        // And after MAX_DEFERS pass-overs it is eligible on merit even
+        // beside cheaper work.
+        assert!(s.admit("cheap", 1, &est(true, 0, 50)).is_admitted());
+        if let Some(q) = s.queues.get_mut("dear") {
+            q.front_mut().unwrap().defers = MAX_DEFERS;
+        }
+        let pick = s
+            .select(|n, _| if n == "dear" { est(false, 500, 50) } else { est(false, 0, 50) })
+            .unwrap();
+        // 'dear' is now eligible; same class, neither resident → oldest
+        // head wins, which is 'dear'.
+        assert_eq!(pick, "dear");
+    }
+
+    #[test]
+    fn qos_fleet_serves_by_priority_and_books_delay() {
+        let spec = MacroSpec::default();
+        let cfg = FleetConfig {
+            num_macros: 1,
+            coresident: true,
+            ..FleetConfig::default()
+        };
+        let mut f = QosFleet::new(&cfg, &spec);
+        f.register_with_qos(
+            "hi",
+            vgg9().scaled(0.04),
+            false,
+            QosSpec { class: QosClass::Interactive, ..QosSpec::default() },
+        )
+        .unwrap();
+        f.register_with_qos(
+            "lo",
+            vgg9().scaled(0.03),
+            false,
+            QosSpec { class: QosClass::Batch, ..QosSpec::default() },
+        )
+        .unwrap();
+        assert!(f.submit("lo", vec![img()]).unwrap().is_admitted());
+        assert!(f.submit("hi", vec![img()]).unwrap().is_admitted());
+        assert_eq!(f.pending_batches(), 2);
+        let first = f.dispatch_next().unwrap().unwrap();
+        assert_eq!(first.model, "hi", "higher class dispatches first");
+        let rest = f.drain().unwrap();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].model, "lo");
+        assert!(f.dispatch_next().unwrap().is_none());
+        let snap = f.snapshot();
+        let qos: BTreeMap<_, _> = snap.qos_stats.iter().cloned().collect();
+        assert_eq!(qos["hi"].admitted, 1);
+        assert_eq!(qos["lo"].admitted, 1);
+        assert_eq!(qos["hi"].queue_delay_cycles, 0, "hi went first");
+        assert!(qos["lo"].queue_delay_cycles > 0, "lo waited behind hi");
+        // Ledgers conserve exactly as without QoS.
+        assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+        assert_eq!(snap.reload_cycles, snap.tenant_load_cycles());
+    }
+
+    #[test]
+    fn rejected_requests_charge_no_cycles_anywhere() {
+        let spec = MacroSpec::default();
+        let cfg = FleetConfig {
+            num_macros: 1,
+            coresident: true,
+            execution: ExecutionMode::Twin,
+            ..FleetConfig::default()
+        };
+        let mut f = QosFleet::new(&cfg, &spec);
+        f.register_with_qos(
+            "m",
+            vgg9().scaled(0.04),
+            false,
+            QosSpec { burst: 1, ..QosSpec::default() },
+        )
+        .unwrap();
+        assert!(f.submit("m", vec![img()]).unwrap().is_admitted());
+        for _ in 0..3 {
+            assert!(!f.submit("m", vec![img()]).unwrap().is_admitted());
+        }
+        let before = f.snapshot();
+        assert_eq!(before.reload_cycles, 0, "nothing dispatched yet");
+        let served = f.drain().unwrap();
+        assert_eq!(served.len(), 1, "only the admitted batch runs");
+        let snap = f.snapshot();
+        let qos: BTreeMap<_, _> = snap.qos_stats.iter().cloned().collect();
+        assert_eq!(qos["m"].admitted, 1);
+        assert_eq!(qos["m"].rejected, 3);
+        // One hot-swap's worth of cycles, conserved across all four
+        // ledgers — the rejects added nothing.
+        assert_eq!(snap.reload_cycles, 108);
+        assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+        assert_eq!(snap.reload_cycles, snap.tenant_load_cycles());
+        assert_eq!(snap.twin_load_cycles(), snap.reload_cycles);
+    }
+
+    #[test]
+    fn retire_drops_pending_payloads_and_metadata() {
+        let spec = MacroSpec::default();
+        let cfg = FleetConfig { num_macros: 2, ..FleetConfig::default() };
+        let mut f = QosFleet::new(&cfg, &spec);
+        f.register("m", vgg9().scaled(0.04), false).unwrap();
+        assert!(f.submit("m", vec![img()]).unwrap().is_admitted());
+        f.retire("m").unwrap();
+        assert_eq!(f.pending_batches(), 0);
+        assert!(f.dispatch_next().unwrap().is_none());
+        assert!(f.submit("m", vec![img()]).is_err(), "unknown after retire");
+    }
+}

@@ -98,7 +98,9 @@ impl ModelWeights {
 /// One registered model variant and its deployment footprint.
 #[derive(Debug, Clone)]
 pub struct ModelEntry {
+    /// Registered model name.
     pub name: String,
+    /// The adapted architecture.
     pub arch: ModelArch,
     /// Bitline/macro layout (`pack_model` over the fleet's macro spec).
     pub mapping: ModelMapping,
@@ -148,6 +150,7 @@ pub struct ModelRegistry {
 }
 
 impl ModelRegistry {
+    /// An empty registry over `spec` (no weight materialization).
     pub fn new(spec: MacroSpec) -> ModelRegistry {
         ModelRegistry {
             spec,
@@ -185,6 +188,7 @@ impl ModelRegistry {
         self.materialize_limit.is_some()
     }
 
+    /// The macro spec footprints are computed against.
     pub fn spec(&self) -> &MacroSpec {
         &self.spec
     }
@@ -224,26 +228,32 @@ impl ModelRegistry {
             .ok_or_else(|| anyhow::anyhow!("model '{name}' is not registered"))
     }
 
+    /// The entry registered under `name`, if any.
     pub fn get(&self, name: &str) -> Option<&ModelEntry> {
         self.models.get(name)
     }
 
+    /// Whether `name` is registered.
     pub fn contains(&self, name: &str) -> bool {
         self.models.contains_key(name)
     }
 
+    /// Registered names, ascending.
     pub fn names(&self) -> Vec<&str> {
         self.models.keys().map(|s| s.as_str()).collect()
     }
 
+    /// Registered model count.
     pub fn len(&self) -> usize {
         self.models.len()
     }
 
+    /// Whether nothing is registered.
     pub fn is_empty(&self) -> bool {
         self.models.is_empty()
     }
 
+    /// Iterate the entries in name order.
     pub fn iter(&self) -> impl Iterator<Item = &ModelEntry> {
         self.models.values()
     }

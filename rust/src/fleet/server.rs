@@ -7,11 +7,14 @@
 //!   transition (no threads, no clocks), so tests and benches can replay
 //!   request mixes bit-stably and assert exact cycle counts.
 //! * [`FleetServer`] / [`FleetHandle`] — the coordinator-style runtime:
-//!   tagged submits land in a bounded queue, a dispatcher thread routes
-//!   them into **per-model queues**, forms per-model batches under the
-//!   same size/timeout policy as the single-model
-//!   [`EdgeServer`](crate::coordinator::server::EdgeServer), and drives
-//!   the core. Reload cycles appear in the shared
+//!   tagged submits land in a bounded queue, a dispatcher thread runs
+//!   each request through **QoS admission** (rate limits, budget — see
+//!   [`super::qos`]), routes the admitted ones into **per-model
+//!   queues**, forms per-model batches under the same size/timeout
+//!   policy as the single-model
+//!   [`EdgeServer`](crate::coordinator::server::EdgeServer), ranks the
+//!   ready queues by QoS policy (priority class + aging, resident
+//!   preference, deadline), and drives the core. Reload cycles appear in the shared
 //!   [`Metrics`](crate::coordinator::Metrics) accounting and in the
 //!   per-macro stats, and the two always agree (see
 //!   `rust/tests/integration_fleet.rs` for the conservation law).
@@ -81,6 +84,9 @@ use crate::util::json::Json;
 use super::compactor::{plan_compaction, CompactionPlan, Fragmentation};
 use super::evictor::{Evictor, PolicyEvictor};
 use super::placer::{Placement, Placer};
+use super::qos::{
+    Admission, DispatchEstimate, QosClass, QosScheduler, QosSpec, QosTenantStats,
+};
 use super::registry::{ModelEntry, ModelRegistry, ModelWeights};
 
 /// ADC step of the twin pool's converters (`S_ADC`). Activation steps are
@@ -91,7 +97,9 @@ const TWIN_S_ADC: f32 = 16.0;
 /// One served batch's outcome (deterministic core result).
 #[derive(Debug, Clone)]
 pub struct BatchOutcome {
+    /// Model the batch was served for.
     pub model: String,
+    /// Images in the batch.
     pub batch: usize,
     /// Argmax class per image.
     pub classes: Vec<usize>,
@@ -159,6 +167,11 @@ pub struct FleetSnapshot {
     /// passes the twin actually executed (one output position per layer),
     /// not the analytic full-spatial integral.
     pub twin_stats: Vec<MacroStats>,
+    /// Per-tenant QoS accounting (admitted/rejected/deferred requests,
+    /// queue-delay cycles, deadline misses) — all measured on the same
+    /// deterministic virtual clock the ledgers use. Rejected and
+    /// deferred requests never appear in any cycle ledger.
+    pub qos_stats: Vec<(String, QosTenantStats)>,
 }
 
 fn stats_json(s: &MacroStats) -> Json {
@@ -213,6 +226,15 @@ impl FleetSnapshot {
         self.twin_stats.iter().map(|s| s.migration_cycles).sum()
     }
 
+    /// Aggregate QoS counters over every tenant.
+    pub fn qos_totals(&self) -> QosTenantStats {
+        let mut t = QosTenantStats::default();
+        for (_, s) in &self.qos_stats {
+            t.absorb(s);
+        }
+        t
+    }
+
     /// Fragmentation metrics of the pool at snapshot time: free-space
     /// splintering (region count, largest run) plus the resident side
     /// (mean spans per tenant).
@@ -255,6 +277,7 @@ impl FleetSnapshot {
         self.resident_bls as f64 / pool as f64
     }
 
+    /// Machine-readable form for `BENCH_*.json` and dashboards.
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj()
             .with("execution", self.execution.as_str())
@@ -325,6 +348,16 @@ impl FleetSnapshot {
                 .with("twin_load_cycles", self.twin_load_cycles())
                 .with("twin_migration_cycles", self.twin_migration_cycles());
         }
+        if !self.qos_stats.is_empty() {
+            j = j
+                .with(
+                    "qos",
+                    self.qos_stats
+                        .iter()
+                        .fold(Json::obj(), |j, (name, s)| j.with(name.as_str(), s.to_json())),
+                )
+                .with("qos_totals", self.qos_totals().to_json());
+        }
         j
     }
 }
@@ -351,9 +384,18 @@ pub struct Fleet {
     twin: Vec<CimMacro>,
     /// Materialized placements of resident tenants (twin execution only).
     placed: BTreeMap<String, PlacedMapping>,
+    /// The QoS scheduling core: per-tenant specs, token buckets, queued
+    /// batch metadata and accounting, clocked by the device cycles this
+    /// fleet charges (see [`super::qos`]).
+    sched: QosScheduler,
+    /// Per-tenant specs from the config, applied at registration.
+    qos_cfg: BTreeMap<String, QosSpec>,
 }
 
 impl Fleet {
+    /// A fresh fleet over `cfg.num_macros` macros of geometry `spec`
+    /// (placement granularity, execution mode, fit/eviction/QoS policies
+    /// all from `cfg`).
     pub fn new(cfg: &FleetConfig, spec: &MacroSpec) -> Fleet {
         let num = cfg.num_macros.max(1);
         let registry = match cfg.execution {
@@ -385,6 +427,8 @@ impl Fleet {
             execution: cfg.execution,
             twin,
             placed: BTreeMap::new(),
+            sched: QosScheduler::new(cfg.sched, cfg.admit_budget_cycles, cfg.qos_aging_cycles),
+            qos_cfg: cfg.qos.clone(),
         }
     }
 
@@ -420,10 +464,12 @@ impl Fleet {
         fleet
     }
 
+    /// The model registry (footprints, costs, cached weights).
     pub fn registry(&self) -> &ModelRegistry {
         &self.registry
     }
 
+    /// How this fleet executes inference.
     pub fn execution(&self) -> ExecutionMode {
         self.execution
     }
@@ -439,10 +485,12 @@ impl Fleet {
         self.placed.get(name)
     }
 
+    /// Physical macros in the pool.
     pub fn num_macros(&self) -> usize {
         self.placer.num_macros()
     }
 
+    /// Whether `name` currently holds regions on the pool.
     pub fn is_resident(&self, name: &str) -> bool {
         self.placer.is_resident(name)
     }
@@ -470,6 +518,28 @@ impl Fleet {
                 );
             }
         }
+        // QoS contract: the config's spec when one was supplied; pinned
+        // tenants default to the Pinned class (they paid for residency,
+        // they dispatch first), everyone else to the permissive default.
+        let qspec = self.qos_cfg.get(name).copied().unwrap_or(QosSpec {
+            class: if pinned { QosClass::Pinned } else { QosClass::Interactive },
+            ..QosSpec::default()
+        });
+        self.sched.set_spec(name, qspec);
+        Ok(())
+    }
+
+    /// Like [`Fleet::register`] but with an explicit QoS contract,
+    /// overriding any config-supplied spec for this tenant.
+    pub fn register_with_qos(
+        &mut self,
+        name: &str,
+        arch: ModelArch,
+        pinned: bool,
+        qos: QosSpec,
+    ) -> Result<()> {
+        self.register(name, arch, pinned)?;
+        self.sched.set_spec(name, qos);
         Ok(())
     }
 
@@ -480,6 +550,9 @@ impl Fleet {
         self.registry.retire(name)?;
         self.placer.release(name);
         self.placed.remove(name);
+        // Queued metadata dies with the tenant; its QoS stats survive
+        // (refused and served work stays on the books, like tenant_stats).
+        self.sched.remove(name);
         Ok(())
     }
 
@@ -505,6 +578,26 @@ impl Fleet {
     /// charging anything, which also guarantees repeated compaction
     /// converges. Whole-macro pools never fragment, so non-coresident
     /// fleets always return the empty plan.
+    ///
+    /// ```
+    /// use cim_adapt::arch::vgg9;
+    /// use cim_adapt::config::{FleetConfig, MacroSpec};
+    /// use cim_adapt::fleet::Fleet;
+    ///
+    /// let cfg = FleetConfig { num_macros: 1, coresident: true, ..FleetConfig::default() };
+    /// let mut fleet = Fleet::new(&cfg, &MacroSpec::default());
+    /// fleet.register("a", vgg9().scaled(0.04), false).unwrap(); // 108 columns
+    /// fleet.register("b", vgg9().scaled(0.03), false).unwrap(); //  82 columns
+    /// let img = vec![0.5f32; 3 * 32 * 32];
+    /// fleet.serve_batch("a", &[img.clone()]).unwrap();
+    /// fleet.serve_batch("b", &[img]).unwrap();
+    /// fleet.retire("a").unwrap(); // leaves a 108-column hole below b
+    /// let plan = fleet.compact().unwrap();
+    /// assert_eq!(plan.moved_bls, 82, "b slid down into the hole");
+    /// let snap = fleet.snapshot();
+    /// assert_eq!(snap.migration_cycles, 82, "charged on the migration ledger");
+    /// assert_eq!(snap.largest_free_run, 256 - 82, "free space coalesced");
+    /// ```
     pub fn compact(&mut self) -> Result<CompactionPlan> {
         if !self.placer.coresident() {
             return Ok(CompactionPlan::default());
@@ -571,6 +664,12 @@ impl Fleet {
             self.migration_cycles_total += c;
         }
         self.compactions += 1;
+        // The migration charge ticks the QoS virtual clock here — the
+        // clock tracks every cycle the fleet charges, including explicit
+        // compactions outside any batch. `serve_batch` advances only its
+        // compute + reload share, so a threshold-triggered compaction is
+        // never counted twice.
+        self.sched.advance(plan.migration_cycles);
         Ok(plan)
     }
 
@@ -773,6 +872,12 @@ impl Fleet {
                 }
             }
         }
+        // Advance the QoS virtual clock by exactly what this batch
+        // charged, so rate limits, aging and queue delays tick in the
+        // same unit as the ledgers (and replays stay bit-stable). Any
+        // threshold-triggered compaction above already advanced its own
+        // migration cycles inside `compact`.
+        self.sched.advance(compute_total + reload_cycles);
         Ok(BatchOutcome {
             model: model.to_string(),
             batch: images.len(),
@@ -815,6 +920,114 @@ impl Fleet {
         Ok(sim_classify(&feats, entry.arch.num_classes))
     }
 
+    /// The QoS scheduling core (specs, buckets, queued metadata, stats).
+    pub fn qos(&self) -> &QosScheduler {
+        &self.sched
+    }
+
+    /// Mutable access to the QoS scheduling core — drivers run admission
+    /// ([`QosScheduler::admit`]) through this.
+    pub fn qos_mut(&mut self) -> &mut QosScheduler {
+        &mut self.sched
+    }
+
+    /// Projected cost of dispatching a `batch`-image request for `model`
+    /// *right now* — the admission controller's and the dispatcher's
+    /// pricing input. An estimate, never a charge: residency hits
+    /// project zero reload; a fitting tenant projects its footprint's
+    /// region-granular (or whole-macro) swap cost; an oversized tenant
+    /// projects its steady-state paging reloads over the whole pool
+    /// (optimistic when pinned tenants shrink the pageable set). Actual
+    /// cycles enter the ledgers only in [`Fleet::serve_batch`].
+    pub fn dispatch_estimate(&self, model: &str, batch: usize) -> Result<DispatchEstimate> {
+        let entry = self
+            .registry
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+        let pass_cycles = entry.cost.pass_cycles(batch);
+        let (resident, reload_cycles) = if self.placer.is_resident(model) {
+            (true, 0)
+        } else if self.placer.fits(entry) {
+            let reload = if self.placer.coresident() {
+                entry.region_reload_cycles(&self.spec)
+            } else {
+                entry.reload_cycles(&self.spec)
+            };
+            (false, reload)
+        } else {
+            let plan = MacroScheduler::new(
+                &entry.mapping,
+                &entry.cost,
+                &self.spec,
+                self.placer.num_macros(),
+            )
+            .plan;
+            (false, plan.reload_cycles_per_inference)
+        };
+        Ok(DispatchEstimate {
+            resident,
+            reload_cycles,
+            pass_cycles,
+        })
+    }
+
+    /// Pick which queued model should dispatch next, over every pending
+    /// queue (see [`QosScheduler::select_among`] for the ranking). Each
+    /// head batch is priced at its own submitted size — the dispatch
+    /// unit of the deterministic [`QosFleet`](super::QosFleet) driver.
+    pub fn qos_select(&mut self) -> Option<String> {
+        let pending = self.sched.pending_models();
+        self.qos_select_among(&pending, 0)
+    }
+
+    /// Pick which of `candidates` (queued models the driver considers
+    /// ready) should dispatch next, pricing each candidate with
+    /// [`Fleet::dispatch_estimate`].
+    ///
+    /// `batch_hint` is the driver's dispatch unit: with `batch_hint > 0`
+    /// (the threaded server passes its `max_batch`) a candidate is
+    /// priced at `min(queued requests, batch_hint)` — the batch that
+    /// would really dispatch — so the admission budget defers the actual
+    /// batch cost, not a single request's. With `batch_hint == 0` the
+    /// head entry's own size is used (the deterministic driver
+    /// dispatches exactly one submitted batch at a time).
+    pub fn qos_select_among(&mut self, candidates: &[String], batch_hint: usize) -> Option<String> {
+        let mut info: BTreeMap<String, (DispatchEstimate, usize)> = BTreeMap::new();
+        for name in candidates {
+            if let Ok(e) = self.dispatch_estimate(name, 1) {
+                let take = if batch_hint > 0 {
+                    self.sched.queued_requests(name).min(batch_hint).max(1)
+                } else {
+                    0
+                };
+                info.insert(name.clone(), (e, take));
+            }
+        }
+        self.sched.select_among(candidates, |name, head_size| {
+            let (per_image, take) = info.get(name).copied().unwrap_or((
+                DispatchEstimate {
+                    resident: false,
+                    reload_cycles: 0,
+                    pass_cycles: 0,
+                },
+                0,
+            ));
+            let n = if take > 0 { take } else { head_size };
+            DispatchEstimate {
+                pass_cycles: per_image.pass_cycles * n as u64,
+                ..per_image
+            }
+        })
+    }
+
+    /// Record the dispatch of `take` queued requests for `model` (queue
+    /// delay + deadline accounting) — call right before the matching
+    /// [`Fleet::serve_batch`].
+    pub fn qos_begin(&mut self, model: &str, take: usize) {
+        self.sched.begin_dispatch(model, take);
+    }
+
+    /// Point-in-time copy of every ledger, placement and QoS counter.
     pub fn snapshot(&self) -> FleetSnapshot {
         let resident = self.placer.placements();
         let resident_bls = resident
@@ -853,6 +1066,7 @@ impl Fleet {
             largest_free_run: self.placer.largest_free_run(),
             execution: self.execution,
             twin_stats: self.twin.iter().map(|m| m.stats).collect(),
+            qos_stats: self.sched.stats(),
         }
     }
 }
@@ -1014,10 +1228,15 @@ fn channel_means(image: &[f32], c: usize) -> Vec<f32> {
 
 /// One tagged inference request flowing through the fleet.
 pub struct FleetRequest {
+    /// Monotonic id assigned at submit.
     pub id: RequestId,
+    /// Tenant the request targets.
     pub model: String,
+    /// Flattened CHW image pixels.
     pub image: Vec<f32>,
+    /// Wall-clock submit time (batch-timeout accounting).
     pub enqueued: Instant,
+    /// Channel the response is delivered on.
     pub respond: mpsc::Sender<InferResponse>,
 }
 
@@ -1027,6 +1246,7 @@ enum Msg {
         name: String,
         arch: Box<ModelArch>,
         pinned: bool,
+        qos: Option<QosSpec>,
         ack: mpsc::Sender<Result<()>>,
     },
     Retire {
@@ -1051,6 +1271,7 @@ pub struct FleetHandle {
     depth: Arc<AtomicU64>,
     queue_limit: u64,
     accepting: AtomicBool,
+    /// Live serving counters (shared with the dispatcher thread).
     pub metrics: Arc<Metrics>,
     dispatcher: Mutex<Option<thread::JoinHandle<FleetSnapshot>>>,
     image_len: usize,
@@ -1096,13 +1317,37 @@ impl FleetHandle {
             .map_err(|_| anyhow::anyhow!("fleet stopped"))
     }
 
-    /// Register a model variant on the live fleet.
+    /// Register a model variant on the live fleet (config-supplied or
+    /// default QoS spec).
     pub fn register(&self, name: &str, arch: ModelArch, pinned: bool) -> Result<()> {
         let (ack, ack_rx) = mpsc::channel();
         self.send(Msg::Register {
             name: name.to_string(),
             arch: Box::new(arch),
             pinned,
+            qos: None,
+            ack,
+        })?;
+        ack_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("fleet stopped"))?
+    }
+
+    /// Register a model variant with an explicit QoS contract (priority
+    /// class, rate limit, deadline — see [`QosSpec`]).
+    pub fn register_with_qos(
+        &self,
+        name: &str,
+        arch: ModelArch,
+        pinned: bool,
+        qos: QosSpec,
+    ) -> Result<()> {
+        let (ack, ack_rx) = mpsc::channel();
+        self.send(Msg::Register {
+            name: name.to_string(),
+            arch: Box::new(arch),
+            pinned,
+            qos: Some(qos),
             ack,
         })?;
         ack_rx
@@ -1183,38 +1428,27 @@ impl FleetHandle {
     }
 }
 
-/// Which per-model queue (if any) should dispatch now.
-fn ready_model(
+/// Per-model queues whose head batch is ready to form (full, timed out,
+/// or the fleet is draining) — the candidate set handed to the QoS
+/// dispatcher for selection.
+fn ready_candidates(
     queues: &BTreeMap<String, VecDeque<FleetRequest>>,
-    fleet: &Fleet,
     policy: &BatchPolicy,
     draining: bool,
-) -> Option<String> {
+) -> Vec<String> {
     let now = Instant::now();
-    let mut best: Option<(&String, usize, bool)> = None; // (name, len, resident)
-    for (name, q) in queues {
-        if q.is_empty() {
-            continue;
-        }
-        let timed_out = q
-            .front()
-            .map(|r| now.duration_since(r.enqueued) >= policy.timeout)
-            .unwrap_or(false);
-        if !(q.len() >= policy.max_batch || timed_out || draining) {
-            continue;
-        }
-        let resident = fleet.is_resident(name);
-        // Prefer resident models (no swap), then fuller queues; BTreeMap
-        // order breaks remaining ties deterministically.
-        let better = match best {
-            None => true,
-            Some((_, blen, bres)) => (resident, q.len()) > (bres, blen),
-        };
-        if better {
-            best = Some((name, q.len(), resident));
-        }
-    }
-    best.map(|(name, _, _)| name.clone())
+    queues
+        .iter()
+        .filter(|(_, q)| !q.is_empty())
+        .filter(|(_, q)| {
+            let head_age = q
+                .front()
+                .map(|r| now.duration_since(r.enqueued))
+                .unwrap_or_default();
+            policy.ready(q.len(), head_age, draining)
+        })
+        .map(|(name, _)| name.clone())
+        .collect()
 }
 
 fn handle_msg(
@@ -1222,16 +1456,48 @@ fn handle_msg(
     queues: &mut BTreeMap<String, VecDeque<FleetRequest>>,
     fleet: &mut Fleet,
     depth: &AtomicU64,
+    metrics: &Metrics,
 ) {
     match msg {
-        Msg::Infer(req) => queues.entry(req.model.clone()).or_default().push_back(req),
+        Msg::Infer(req) => {
+            // Admission control runs here, on the dispatcher thread (the
+            // fleet and its clock live here): rejected requests never
+            // enter a queue, charge nothing anywhere, and their tickets
+            // error out when the responder drops.
+            match fleet.dispatch_estimate(&req.model, 1) {
+                Ok(est) => match fleet.qos_mut().admit(&req.model, 1, &est) {
+                    Admission::Admitted => {
+                        queues.entry(req.model.clone()).or_default().push_back(req)
+                    }
+                    Admission::Rejected(reason) => {
+                        depth.fetch_sub(1, Ordering::AcqRel);
+                        metrics.on_reject();
+                        log::warn!(
+                            "fleet rejected a request for '{}' ({reason:?})",
+                            req.model
+                        );
+                    }
+                },
+                Err(e) => {
+                    // Unknown model: drop immediately (the ticket errors),
+                    // same observable outcome as the pre-QoS failed batch.
+                    depth.fetch_sub(1, Ordering::AcqRel);
+                    metrics.on_reject();
+                    log::error!("fleet dropped a request: {e:#}");
+                }
+            }
+        }
         Msg::Register {
             name,
             arch,
             pinned,
+            qos,
             ack,
         } => {
-            let _ = ack.send(fleet.register(&name, *arch, pinned));
+            let _ = ack.send(match qos {
+                Some(spec) => fleet.register_with_qos(&name, *arch, pinned, spec),
+                None => fleet.register(&name, *arch, pinned),
+            });
         }
         Msg::Retire { name, ack } => {
             // Drop queued work for the retired model: tickets error.
@@ -1300,21 +1566,31 @@ fn dispatcher_loop(
         };
 
         if let Some(msg) = msg {
-            handle_msg(msg, &mut queues, &mut fleet, &depth);
+            handle_msg(msg, &mut queues, &mut fleet, &depth, &metrics);
             // Keep draining greedily before considering dispatch so
             // bursts coalesce into full batches.
             while let Ok(m) = rx.try_recv() {
-                handle_msg(m, &mut queues, &mut fleet, &depth);
+                handle_msg(m, &mut queues, &mut fleet, &depth, &metrics);
             }
         }
 
-        // Dispatch every queue that is ready (full, timed out, or the
-        // channel is closed and we are draining).
-        while let Some(model) = ready_model(&queues, &fleet, &policy, !open) {
+        // Dispatch ready queues (full, timed out, or the channel is
+        // closed and we are draining) in QoS order: the scheduler ranks
+        // the candidates by priority class + aging, resident preference,
+        // deadline — and defers over-budget hot-swaps (bounded).
+        loop {
+            let candidates = ready_candidates(&queues, &policy, !open);
+            // Price each candidate at the batch that would actually
+            // dispatch (up to max_batch requests), so the admission
+            // budget defers real batch costs, not per-request ones.
+            let Some(model) = fleet.qos_select_among(&candidates, policy.max_batch) else {
+                break;
+            };
             let q = queues.get_mut(&model).unwrap();
             let take = q.len().min(policy.max_batch);
             let mut batch: Vec<FleetRequest> = q.drain(..take).collect();
             depth.fetch_sub(batch.len() as u64, Ordering::AcqRel);
+            fleet.qos_begin(&model, take);
             // Move the images out (12KB each) — the requests only need
             // their id/enqueued/respond fields afterwards.
             let images: Vec<Vec<f32>> = batch

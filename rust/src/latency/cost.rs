@@ -26,8 +26,11 @@ pub struct LayerCost {
 /// Whole-model cost (the Tables III–V columns).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelCost {
+    /// Conv parameters (Σ k²·Cin·Cout).
     pub params: usize,
+    /// Bitline columns the model occupies.
     pub bls: usize,
+    /// ADC conversions per inference (the paper's "MACs").
     pub macs: usize,
     /// Cycles to stream all weights into macros: ceil(BLs/256)·256.
     pub load_weight_latency: usize,
@@ -70,6 +73,15 @@ impl ModelCost {
     /// footprint is an exact multiple of a macro.
     pub fn region_reload_cycles(&self, spec: &MacroSpec) -> u64 {
         region_reload_cycles(self.bls, spec)
+    }
+
+    /// Pass (compute) cycles for a batch of `n` images — linear in the
+    /// batch because reloads are charged separately. This is the
+    /// projection the fleet's QoS admission controller prices dispatches
+    /// with (`Fleet::dispatch_estimate`), and the quantity a batch's
+    /// `compute_cycles` ledger charge equals exactly.
+    pub fn pass_cycles(&self, n: usize) -> u64 {
+        self.computing_latency as u64 * n as u64
     }
 }
 
@@ -245,6 +257,14 @@ mod tests {
         let c = model_cost(&m, &spec());
         assert_eq!(c.macros_needed(&spec()), 151);
         assert_eq!(c.load_weight_latency, 151 * 256);
+    }
+
+    #[test]
+    fn pass_cycles_linear_in_batch() {
+        let c = model_cost(&vgg9(), &spec());
+        assert_eq!(c.pass_cycles(0), 0);
+        assert_eq!(c.pass_cycles(1), c.computing_latency as u64);
+        assert_eq!(c.pass_cycles(8), 8 * c.computing_latency as u64);
     }
 
     #[test]

@@ -34,6 +34,8 @@
 //! model, and lowers the inference graph to HLO text consumed by
 //! [`runtime`]. Python never runs on the request path.
 
+#![warn(missing_docs)]
+
 pub mod util;
 pub mod config;
 pub mod arch;

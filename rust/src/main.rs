@@ -9,13 +9,15 @@
 //! cim-adapt inspect --model vgg9               CIM mapping details
 //! ```
 
+#![warn(missing_docs)]
+
 use std::path::{Path, PathBuf};
 
 use cim_adapt::arch::by_name;
 use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec, MorphConfig, ServeConfig};
 use cim_adapt::coordinator::server::{Backend, EdgeServer};
 use cim_adapt::data::SynthCifar;
-use cim_adapt::fleet::{EvictionPolicy, FleetServer};
+use cim_adapt::fleet::{EvictionPolicy, FleetServer, QosClass, SchedMode};
 use cim_adapt::latency::{cost::allocated_usage, model_cost};
 use cim_adapt::mapping::{pack_model, pack_model_at, FitPolicyKind};
 use cim_adapt::morph::flow::morph_flow_synthetic;
@@ -48,10 +50,15 @@ fn main() -> anyhow::Result<()> {
                     .cmd(
                         "fleet [--macros N] [--bl B] [--requests N] [--policy lru|cost] \
                          [--fit first|best|worst|buddy|affinity] [--coresident] [--twin] \
-                         [--defrag [--defrag-threshold T]]",
+                         [--defrag [--defrag-threshold T]] [--qos] [--sched qos|fifo] \
+                         [--priority m=class,..] [--rate m=R[:BURST],..] \
+                         [--deadline m=CYCLES,..] [--admit-budget N]",
                         "multi-tenant hot-swap serving demo (--twin: run on the simulated \
                          macros; --defrag: compact the pool online when fragmentation \
-                         crosses the threshold)",
+                         crosses the threshold; --qos: demo priority classes; --priority/\
+                         --rate/--deadline: per-tenant QoS contracts; --admit-budget: \
+                         reject/defer dispatches whose projected reload+pass cycles \
+                         exceed N; --sched fifo: the arrival-order baseline)",
                     )
                     .cmd(
                         "inspect --model M [--base-bl N] [--spans m:s:c,...]",
@@ -225,9 +232,55 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse per-tenant `model=value` CSV flags (`--priority`, `--rate`,
+/// `--deadline`) into the config's QoS map.
+fn parse_qos_flags(args: &Args, cfg: &mut FleetConfig) -> anyhow::Result<()> {
+    if let Some(list) = args.get("priority") {
+        for part in list.split(',').filter(|p| !p.is_empty()) {
+            let (model, class) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--priority expects model=class, got '{part}'"))?;
+            let class = QosClass::parse(class).ok_or_else(|| {
+                anyhow::anyhow!("--priority class must be pinned|interactive|batch, got '{class}'")
+            })?;
+            cfg.qos.entry(model.to_string()).or_default().class = class;
+        }
+    }
+    if let Some(list) = args.get("rate") {
+        for part in list.split(',').filter(|p| !p.is_empty()) {
+            let (model, rate) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--rate expects model=R[:BURST], got '{part}'"))?;
+            let (r, burst) = match rate.split_once(':') {
+                Some((r, b)) => (r, b.parse::<u64>().map_err(|_| {
+                    anyhow::anyhow!("--rate burst must be an integer, got '{b}'")
+                })?),
+                None => (rate, 0),
+            };
+            let r: u64 = r
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--rate must be requests/kcycle, got '{r}'"))?;
+            let spec = cfg.qos.entry(model.to_string()).or_default();
+            spec.rate_per_kcycle = r;
+            spec.burst = burst;
+        }
+    }
+    if let Some(list) = args.get("deadline") {
+        for part in list.split(',').filter(|p| !p.is_empty()) {
+            let (model, cycles) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--deadline expects model=CYCLES, got '{part}'"))?;
+            cfg.qos.entry(model.to_string()).or_default().deadline_cycles = cycles
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--deadline must be cycles, got '{cycles}'"))?;
+        }
+    }
+    Ok(())
+}
+
 fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     let spec = MacroSpec::default();
-    let cfg = FleetConfig {
+    let mut cfg = FleetConfig {
         num_macros: args.usize_or("macros", 4),
         max_batch: args.usize_or("batch", 8),
         policy: EvictionPolicy::parse(args.str_or("policy", "lru"))
@@ -246,6 +299,9 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         } else {
             ExecutionMode::Analytic
         },
+        sched: SchedMode::parse(args.str_or("sched", "qos"))
+            .ok_or_else(|| anyhow::anyhow!("--sched expects 'qos' or 'fifo'"))?,
+        admit_budget_cycles: args.u64_or("admit-budget", 0),
         ..FleetConfig::default()
     };
     let target_bl = args.usize_or("bl", 512);
@@ -254,6 +310,18 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     // Three adapted tenants, morphed to the bitline budget so several can
     // co-reside on the pool; demand still exceeds it → hot-swaps happen.
     let models = ["vgg9", "vgg16", "resnet18"];
+    if args.flag("qos") {
+        // Demo mix: the first tenant is latency-critical, the rest are
+        // throughput traffic — overridable per tenant via --priority.
+        for (i, m) in models.iter().enumerate() {
+            cfg.qos.entry(m.to_string()).or_default().class = if i == 0 {
+                QosClass::Interactive
+            } else {
+                QosClass::Batch
+            };
+        }
+    }
+    parse_qos_flags(args, &mut cfg)?;
     let handle = FleetServer::start(&cfg, &spec);
     for (i, m) in models.iter().enumerate() {
         let out = morph_flow_synthetic(
@@ -293,6 +361,34 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             String::new()
         }
     );
+    println!(
+        "dispatch: {} scheduler{}{}",
+        cfg.sched.as_str(),
+        if cfg.admit_budget_cycles > 0 {
+            format!(", admission budget {} cycles", commas(cfg.admit_budget_cycles))
+        } else {
+            String::new()
+        },
+        if cfg.qos.is_empty() {
+            String::new()
+        } else {
+            let specs: Vec<String> = cfg
+                .qos
+                .iter()
+                .map(|(m, s)| {
+                    let mut desc = format!("{m}={}", s.class.as_str());
+                    if s.rate_limited() {
+                        desc.push_str(&format!(" rate {}/kcycle burst {}", s.rate_per_kcycle, s.burst));
+                    }
+                    if s.deadline_cycles > 0 {
+                        desc.push_str(&format!(" deadline {}", s.deadline_cycles));
+                    }
+                    desc
+                })
+                .collect();
+            format!(", qos [{}]", specs.join(", "))
+        }
+    );
 
     let t0 = std::time::Instant::now();
     let mut tickets = Vec::with_capacity(n);
@@ -301,15 +397,24 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         let img = SynthCifar::sample(k % 10, 9000 + k as u64);
         tickets.push(handle.submit(model, img.data)?);
     }
+    // Rate-limited / over-budget requests are rejected by admission
+    // control: their tickets error out, which is the expected shape of
+    // an overloaded fleet, not a failure of the demo.
+    let mut served = 0usize;
+    let mut refused = 0usize;
     for t in tickets {
-        t.wait()?;
+        match t.wait() {
+            Ok(_) => served += 1,
+            Err(_) => refused += 1,
+        }
     }
     let elapsed = t0.elapsed();
     let (m, snap) = handle.shutdown();
     println!(
-        "served {n} requests in {:.2}s ({:.0} rps) | mean batch {:.2} | p95 {}µs",
+        "served {served} of {n} requests ({refused} refused by admission) in {:.2}s \
+         ({:.0} rps) | mean batch {:.2} | p95 {}µs",
         elapsed.as_secs_f64(),
-        n as f64 / elapsed.as_secs_f64(),
+        served as f64 / elapsed.as_secs_f64(),
         m.mean_batch,
         m.latency.p95_us
     );
@@ -377,6 +482,31 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             commas(s.load_cycles),
             s.reloads
         );
+    }
+    if !snap.qos_stats.is_empty() {
+        let totals = snap.qos_totals();
+        println!(
+            "qos: {} admitted | {} rejected | {} deferrals | {} queue-delay cycles | {} deadline misses",
+            totals.admitted,
+            totals.rejected,
+            totals.deferred,
+            commas(totals.queue_delay_cycles),
+            totals.deadline_misses
+        );
+        for (name, q) in &snap.qos_stats {
+            println!(
+                "  qos '{name}': admitted {} | rejected {} | deferred {} | queue delay {} cycles{}",
+                q.admitted,
+                q.rejected,
+                q.deferred,
+                commas(q.queue_delay_cycles),
+                if q.deadline_misses > 0 {
+                    format!(" | {} deadline misses", q.deadline_misses)
+                } else {
+                    String::new()
+                }
+            );
+        }
     }
     for p in &snap.resident {
         let spans: Vec<String> = p

@@ -7,8 +7,11 @@ use super::placed::PlacedMapping;
 /// for an empty cell.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct OccupancyGrid {
+    /// Absolute physical macro index.
     pub macro_id: usize,
+    /// Grid rows.
     pub wordlines: usize,
+    /// Grid columns.
     pub bitlines: usize,
     grid: Vec<u16>,
 }

@@ -8,13 +8,17 @@ use crate::util::ceil_div;
 /// Where one (layer, segment, filter) column landed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ColumnAssignment {
+    /// Layer index in `ModelArch::layers`.
     pub layer: usize,
+    /// Wordline segment within the layer.
     pub segment: usize,
+    /// Filter (output channel) within the layer.
     pub filter: usize,
     /// Global bitline index across the macro sequence.
     pub global_bl: usize,
-    /// Physical macro and local bitline.
+    /// Physical macro hosting the column.
     pub macro_id: usize,
+    /// Bitline local to that macro.
     pub local_bl: usize,
     /// Occupied rows in this column (≤ wordlines).
     pub rows: usize,
@@ -23,15 +27,19 @@ pub struct ColumnAssignment {
 /// One layer's slice of the global bitline space.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerMapping {
+    /// Layer index in `ModelArch::layers`.
     pub layer: usize,
     /// First global bitline of the layer.
     pub bl_start: usize,
     /// Columns (= segments · c_out).
     pub bl_count: usize,
+    /// Wordline segments the input channels split into.
     pub segments: usize,
+    /// Filters (output channels) per segment.
     pub c_out: usize,
     /// Rows used by each segment's columns (last segment may be ragged).
     pub rows_per_segment: Vec<usize>,
+    /// The layer's analytic cost breakdown.
     pub cost: LayerCost,
 }
 
@@ -46,8 +54,11 @@ impl LayerMapping {
 /// The whole model mapped onto a macro sequence.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelMapping {
+    /// Macro geometry the model was packed against.
     pub spec: MacroSpec,
+    /// Per-layer slices, in layer order.
     pub layers: Vec<LayerMapping>,
+    /// Total bitline columns the model occupies.
     pub total_bls: usize,
     /// Macros the packing touches (≥ 1 even for an off-aligned base).
     pub num_macros: usize,

@@ -195,6 +195,28 @@ impl PlacedMapping {
     /// coordinates change; spans that become physically adjacent are
     /// merged, which is where a defragged placement's run count (and
     /// with it the per-segment macro pass count) actually drops.
+    ///
+    /// ```
+    /// use cim_adapt::arch::vgg9;
+    /// use cim_adapt::config::MacroSpec;
+    /// use cim_adapt::mapping::{PlacedMapping, Region};
+    ///
+    /// let spec = MacroSpec::default();
+    /// let arch = vgg9().scaled(0.04); // packs to 108 columns
+    /// // A fragmented placement: two spans with a hole between them.
+    /// let placed = PlacedMapping::place_model(&arch, &spec, vec![
+    ///     Region { macro_id: 0, bl_start: 0, bl_count: 50 },
+    ///     Region { macro_id: 0, bl_start: 100, bl_count: 58 },
+    /// ]).unwrap();
+    /// // Slide the tail span home; physically-adjacent spans merge.
+    /// let from = Region { macro_id: 0, bl_start: 100, bl_count: 58 };
+    /// let to = Region { macro_id: 0, bl_start: 50, bl_count: 58 };
+    /// let moved = placed.relocate(&[(from, to)]).unwrap();
+    /// assert_eq!(moved.spans.len(), 1, "defragged into one span");
+    /// // Logical columns keep their identity; only coordinates changed.
+    /// assert_eq!(moved.locate(0), (0, 0));
+    /// assert_eq!(moved.locate(107), (0, 107));
+    /// ```
     pub fn relocate(&self, moves: &[(Region, Region)]) -> anyhow::Result<PlacedMapping> {
         for (i, (from, to)) in moves.iter().enumerate() {
             anyhow::ensure!(

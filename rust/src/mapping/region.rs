@@ -389,15 +389,21 @@ impl FitPolicy for AffinityFit {
 /// The built-in fit policies, as a config/CLI-selectable enum.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum FitPolicyKind {
+    /// Take free intervals in (macro, offset) order ([`FirstFit`]).
     #[default]
     FirstFit,
+    /// Smallest hole that fits, else largest-first ([`BestFit`]).
     BestFit,
+    /// Always carve from the largest hole ([`WorstFit`]).
     WorstFit,
+    /// Power-of-two chunks on aligned offsets ([`BuddyFit`]).
     Buddy,
+    /// First-fit preferring the tenant's previous macros ([`AffinityFit`]).
     Affinity,
 }
 
 impl FitPolicyKind {
+    /// Stable config/CLI name.
     pub fn as_str(&self) -> &'static str {
         match self {
             FitPolicyKind::FirstFit => "first",
@@ -408,6 +414,7 @@ impl FitPolicyKind {
         }
     }
 
+    /// Parse a config/CLI name (see [`FitPolicyKind::as_str`]).
     pub fn parse(s: &str) -> Option<FitPolicyKind> {
         match s {
             "first" | "first-fit" => Some(FitPolicyKind::FirstFit),
@@ -442,6 +449,7 @@ pub struct RegionAllocator {
 }
 
 impl RegionAllocator {
+    /// A fully-free pool of `num_macros` macros of `bitlines` columns.
     pub fn new(num_macros: usize, bitlines: usize) -> RegionAllocator {
         assert!(num_macros > 0, "allocator needs at least one macro");
         assert!(bitlines > 0, "macros need at least one bitline");
@@ -451,10 +459,12 @@ impl RegionAllocator {
         }
     }
 
+    /// Physical macros in the pool.
     pub fn num_macros(&self) -> usize {
         self.free.len()
     }
 
+    /// Bitline columns per macro.
     pub fn bitlines(&self) -> usize {
         self.bitlines
     }
@@ -523,6 +533,24 @@ impl RegionAllocator {
     /// when the pool lacks `bls` free columns in total; a policy that
     /// declines despite capacity (e.g. no aligned block) falls back to
     /// first-fit, so capacity always implies success.
+    ///
+    /// ```
+    /// use cim_adapt::mapping::{BestFit, FitHints, RegionAllocator};
+    ///
+    /// let mut pool = RegionAllocator::new(2, 256);
+    /// // First-fit a 100-column tenant so macro 0 keeps a 156-column hole.
+    /// let head = pool.alloc(100).unwrap();
+    /// // Best-fit takes the snuggest hole that holds the whole request —
+    /// // the 156-column remainder of macro 0, not pristine macro 1.
+    /// let spans = pool
+    ///     .alloc_with(&BestFit, 156, &FitHints::default())
+    ///     .unwrap();
+    /// assert_eq!(spans.len(), 1, "one exact-fitting span");
+    /// assert_eq!((spans[0].macro_id, spans[0].bl_start, spans[0].bl_count), (0, 100, 156));
+    /// pool.release(&spans);
+    /// pool.release(&head);
+    /// assert_eq!(pool.free_bls(), 2 * 256, "release coalesces fully");
+    /// ```
     pub fn alloc_with(
         &mut self,
         policy: &dyn FitPolicy,

@@ -10,18 +10,26 @@ use super::shrink::{prune_by_gamma, synthetic_gammas};
 /// One shrink→expand round's record.
 #[derive(Debug, Clone)]
 pub struct MorphRound {
+    /// Round index (0-based).
     pub round: usize,
+    /// Parameters left after the shrink step.
     pub pruned_params: usize,
+    /// Expansion ratio the budget search picked.
     pub expansion_ratio: f64,
+    /// Parameters after expansion.
     pub expanded_params: usize,
+    /// Bitline columns after expansion.
     pub expanded_bls: usize,
 }
 
 /// Final morphing outcome.
 #[derive(Debug, Clone)]
 pub struct MorphOutcome {
+    /// The morphed architecture.
     pub arch: ModelArch,
+    /// Per-round shrink/expand records.
     pub rounds: Vec<MorphRound>,
+    /// Cost profile of the final architecture.
     pub cost: ModelCost,
     /// Paper-style macro usage: params / (target_bl · wordlines).
     pub macro_usage: f64,

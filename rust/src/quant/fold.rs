@@ -14,14 +14,20 @@
 /// BN parameters for one conv layer (length = Cout each).
 #[derive(Debug, Clone, PartialEq)]
 pub struct BnParams {
+    /// Scale γ per output channel.
     pub gamma: Vec<f32>,
+    /// Shift β per output channel.
     pub beta: Vec<f32>,
+    /// Running mean per output channel.
     pub mean: Vec<f32>,
+    /// Running variance per output channel.
     pub var: Vec<f32>,
+    /// Numerical-stability epsilon.
     pub eps: f32,
 }
 
 impl BnParams {
+    /// Identity BN (γ=1, β=0, mean=0, var=1) for `c_out` channels.
     pub fn identity(c_out: usize) -> BnParams {
         BnParams {
             gamma: vec![1.0; c_out],
@@ -32,6 +38,7 @@ impl BnParams {
         }
     }
 
+    /// Channels these parameters cover.
     pub fn c_out(&self) -> usize {
         self.gamma.len()
     }

@@ -56,9 +56,13 @@ pub fn lsq_init_step(ws: &[f32], qp: i32) -> f32 {
 /// A quantized tensor: integer codes + the step that dequantizes them.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LsqTensor {
+    /// Integer weight codes.
     pub codes: Vec<i32>,
+    /// Quantization step `S_W`.
     pub step: f32,
+    /// Negative clip bound (codes ≥ `-qn`).
     pub qn: i32,
+    /// Positive clip bound (codes ≤ `qp`).
     pub qp: i32,
 }
 
@@ -80,6 +84,7 @@ impl LsqTensor {
         Self::quantize(ws, lsq_init_step(ws, q), bits)
     }
 
+    /// Reconstruct the float tensor (`code · step`).
     pub fn dequantize(&self) -> Vec<f32> {
         self.codes.iter().map(|&c| c as f32 * self.step).collect()
     }

@@ -13,9 +13,13 @@ use super::Rendered;
 /// A figure's outputs: ASCII rendering + optional PPM path.
 #[derive(Debug, Clone)]
 pub struct FigureOutput {
+    /// Rendered ASCII occupancy map.
     pub rendered: Rendered,
+    /// Path of the written PPM image, if one was requested.
     pub ppm_path: Option<std::path::PathBuf>,
+    /// Macros the mapped model occupies.
     pub num_macros: usize,
+    /// Fraction of the occupied macros' cells holding weights.
     pub fill: f64,
 }
 

@@ -36,7 +36,9 @@ pub fn write_bench_summary(name: &str, summary: &Json) -> std::io::Result<PathBu
 /// Common output wrapper.
 #[derive(Debug, Clone)]
 pub struct Rendered {
+    /// Table/figure caption.
     pub title: String,
+    /// Monospace body.
     pub text: String,
 }
 

@@ -15,7 +15,9 @@ use super::Rendered;
 /// Raw rows + rendering for programmatic checks.
 #[derive(Debug, Clone)]
 pub struct TableOutput {
+    /// Rendered monospace table.
     pub rendered: Rendered,
+    /// One JSON object per table row (programmatic checks).
     pub rows: Vec<Json>,
 }
 

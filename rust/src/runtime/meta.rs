@@ -23,10 +23,15 @@ impl VariantKey {
 /// Parsed `<name>_meta.json`.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// Artifact model name (e.g. `"vgg9_edge"`).
     pub name: String,
+    /// The adapted architecture the artifact serves.
     pub arch: ModelArch,
+    /// Calibrated per-layer ADC steps.
     pub adc_steps: Vec<f64>,
+    /// Input tensor shape (NCHW).
     pub input_shape: Vec<usize>,
+    /// Classifier classes.
     pub num_classes: usize,
     /// variant key → HLO file name.
     pub files: BTreeMap<String, String>,
@@ -35,6 +40,7 @@ pub struct ArtifactMeta {
 }
 
 impl ArtifactMeta {
+    /// Load and parse a `<name>_meta.json` file.
     pub fn load(path: &Path) -> Result<ArtifactMeta> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading metadata {path:?}"))?;
@@ -42,6 +48,7 @@ impl ArtifactMeta {
         Self::from_json(&j)
     }
 
+    /// Parse artifact metadata from its JSON form.
     pub fn from_json(j: &Json) -> Result<ArtifactMeta> {
         let arch = ModelArch::from_json(j.get("arch")).context("artifact arch")?;
         let adc_steps: Vec<f64> = j

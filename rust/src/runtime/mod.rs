@@ -22,6 +22,7 @@ use anyhow::{Context, Result};
 /// A PJRT client + the executables compiled from one artifact directory.
 pub struct ModelRuntime {
     client: xla::PjRtClient,
+    /// Parsed artifact metadata (arch, ADC steps, variants).
     pub meta: ArtifactMeta,
     executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
     artifact_dir: PathBuf,
@@ -151,6 +152,7 @@ impl ModelRuntime {
             .collect())
     }
 
+    /// The PJRT platform name serving this runtime.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -20,8 +20,11 @@ pub fn black_box<T>(x: T) -> T {
 /// One benchmark's collected statistics (nanoseconds per iteration).
 #[derive(Debug, Clone)]
 pub struct Stats {
+    /// Benchmark label.
     pub name: String,
+    /// Per-sample mean nanoseconds per iteration.
     pub samples: Vec<f64>,
+    /// Iterations each sample averaged over.
     pub iters_per_sample: u64,
 }
 
@@ -32,6 +35,7 @@ impl Stats {
         s
     }
 
+    /// Median nanoseconds per iteration.
     pub fn median_ns(&self) -> f64 {
         let s = self.sorted();
         let n = s.len();
@@ -45,10 +49,12 @@ impl Stats {
         }
     }
 
+    /// Mean nanoseconds per iteration.
     pub fn mean_ns(&self) -> f64 {
         self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
     }
 
+    /// 95th-percentile nanoseconds per iteration.
     pub fn p95_ns(&self) -> f64 {
         let s = self.sorted();
         if s.is_empty() {
@@ -57,6 +63,7 @@ impl Stats {
         s[((s.len() as f64 * 0.95) as usize).min(s.len() - 1)]
     }
 
+    /// Machine-readable form for `BENCH_*.json` summaries.
     pub fn to_json(&self) -> Json {
         Json::obj()
             .with("name", self.name.as_str())
@@ -89,6 +96,8 @@ pub struct Runner {
 }
 
 impl Runner {
+    /// A harness titled `title`; `--quick` / `CIM_ADAPT_BENCH_QUICK`
+    /// trims sampling for CI smoke runs.
     pub fn new(title: &str) -> Runner {
         // `cargo bench -- --quick` (or env) trims sampling for CI smoke.
         let argv: Vec<String> = std::env::args().collect();
@@ -108,6 +117,7 @@ impl Runner {
         }
     }
 
+    /// Whether quick (CI smoke) sampling is active.
     pub fn is_quick(&self) -> bool {
         self.quick
     }

@@ -7,9 +7,11 @@ use std::collections::BTreeMap;
 /// Parsed command line: subcommand, options, positionals.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Leading subcommand (first non-dashed token), if any.
     pub cmd: Option<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Non-option tokens after the subcommand.
     pub positional: Vec<String>,
 }
 
@@ -51,19 +53,23 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Whether `--name` was passed as a bare flag (or `--name true`).
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
             || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
     }
 
+    /// The raw value of `--name value` / `--name=value`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// String option with a default.
     pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Unsigned-integer option with a default (panics on malformed input).
     pub fn usize_or(&self, name: &str, default: usize) -> usize {
         self.get(name)
             .map(|v| {
@@ -73,6 +79,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Float option with a default (panics on malformed input).
     pub fn f64_or(&self, name: &str, default: f64) -> f64 {
         self.get(name)
             .map(|v| {
@@ -82,6 +89,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// `u64` option with a default (panics on malformed input).
     pub fn u64_or(&self, name: &str, default: u64) -> u64 {
         self.get(name)
             .map(|v| {
@@ -100,6 +108,7 @@ pub struct Help {
 }
 
 impl Help {
+    /// Start a help text for binary `name` with a one-line description.
     pub fn new(name: &'static str, about: &'static str) -> Help {
         Help {
             name,
@@ -108,11 +117,13 @@ impl Help {
         }
     }
 
+    /// Append one command row (builder style).
     pub fn cmd(mut self, cmd: &str, desc: &str) -> Help {
         self.lines.push((format!("  {cmd}"), desc.to_string()));
         self
     }
 
+    /// Render the aligned help text.
     pub fn render(&self) -> String {
         let width = self.lines.iter().map(|(c, _)| c.len()).max().unwrap_or(0) + 2;
         let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.name, self.about, self.name);

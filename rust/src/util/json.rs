@@ -13,11 +13,17 @@ use std::fmt;
 /// A dynamically-typed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64; integers round-trip to 2^53).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys — emission is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
@@ -25,7 +31,9 @@ pub enum Json {
 /// (or at end-of-input for truncation errors), so editors can jump to it.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
+    /// Byte offset of the offending input byte.
     pub pos: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 
@@ -40,6 +48,7 @@ impl std::error::Error for JsonError {}
 impl Json {
     // ---- constructors ----------------------------------------------------
 
+    /// An empty object (builder root for [`Json::with`]).
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
@@ -54,6 +63,7 @@ impl Json {
 
     // ---- accessors -------------------------------------------------------
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -61,6 +71,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer, if exactly representable.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|f| {
             if f >= 0.0 && f.fract() == 0.0 && f <= usize::MAX as f64 {
@@ -71,6 +82,7 @@ impl Json {
         })
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -78,6 +90,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -85,6 +98,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -92,6 +106,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -117,12 +132,14 @@ impl Json {
         cur
     }
 
+    /// Whether this is `Json::Null`.
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
     }
 
     // ---- parsing ---------------------------------------------------------
 
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(input: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             b: input.as_bytes(),

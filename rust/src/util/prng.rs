@@ -13,10 +13,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Seed the expander.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64 random bits.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;
@@ -53,6 +55,7 @@ impl Pcg {
         Pcg::new(a ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 
+    /// Next 64 random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
@@ -69,6 +72,7 @@ impl Pcg {
         result
     }
 
+    /// Next 32 random bits (top half of a 64-bit draw).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32

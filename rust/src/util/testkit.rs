@@ -21,7 +21,9 @@ use super::prng::Pcg;
 
 /// A generator: produces values and knows how to shrink them.
 pub trait Gen {
+    /// The type of generated values.
     type Value: Clone + Debug + PartialEq;
+    /// Draw one random value.
     fn gen(&self, rng: &mut Pcg) -> Self::Value;
     /// Candidate smaller values, in decreasing preference order.
     fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
@@ -33,8 +35,11 @@ pub trait Gen {
 /// Runner configuration.
 #[derive(Clone, Copy)]
 pub struct Config {
+    /// Random cases to run.
     pub cases: usize,
+    /// Base seed (`CIM_ADAPT_TEST_SEED` overrides).
     pub seed: u64,
+    /// Shrink-step budget when minimizing a failure.
     pub max_shrinks: usize,
 }
 
@@ -94,6 +99,7 @@ fn shrink_failure<G: Gen>(
 /// Uniform `usize` in a half-open range.
 pub struct Usizes(pub Range<usize>);
 
+/// Uniform `usize` in `r`.
 pub fn usizes(r: Range<usize>) -> Usizes {
     assert!(!r.is_empty());
     Usizes(r)
@@ -121,6 +127,7 @@ impl Gen for Usizes {
 /// Uniform `i64` in a half-open range.
 pub struct I64s(pub Range<i64>);
 
+/// Uniform `i64` in `r`.
 pub fn i64s(r: Range<i64>) -> I64s {
     assert!(!r.is_empty());
     I64s(r)
@@ -153,6 +160,7 @@ impl Gen for I64s {
 /// Uniform `f32` in `[lo, hi)`.
 pub struct F32s(pub f32, pub f32);
 
+/// Uniform `f32` in `[lo, hi)`.
 pub fn f32s(lo: f32, hi: f32) -> F32s {
     assert!(lo < hi);
     F32s(lo, hi)
@@ -175,10 +183,13 @@ impl Gen for F32s {
 
 /// Vector of values from an element generator with random length.
 pub struct VecOf<G> {
+    /// Element generator.
     pub elem: G,
+    /// Length range.
     pub len: Range<usize>,
 }
 
+/// Vectors of `elem`-generated values with length in `len`.
 pub fn vecs<G: Gen>(elem: G, len: Range<usize>) -> VecOf<G> {
     assert!(!len.is_empty());
     VecOf { elem, len }
@@ -217,6 +228,7 @@ impl<G: Gen> Gen for VecOf<G> {
 /// Pair of independent generators.
 pub struct PairOf<A, B>(pub A, pub B);
 
+/// Pairs drawn from two independent generators.
 pub fn pairs<A: Gen, B: Gen>(a: A, b: B) -> PairOf<A, B> {
     PairOf(a, b)
 }
@@ -241,6 +253,7 @@ impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
 /// Triple of independent generators.
 pub struct TripleOf<A, B, C>(pub A, pub B, pub C);
 
+/// Triples drawn from three independent generators.
 pub fn triples<A: Gen, B: Gen, C: Gen>(a: A, b: B, c: C) -> TripleOf<A, B, C> {
     TripleOf(a, b, c)
 }
@@ -276,6 +289,7 @@ impl<A: Gen, B: Gen, C: Gen> Gen for TripleOf<A, B, C> {
 /// One of a fixed set of values.
 pub struct OneOf<T: Clone + Debug + PartialEq>(pub Vec<T>);
 
+/// Uniform choice from a fixed value set.
 pub fn one_of<T: Clone + Debug + PartialEq>(vals: Vec<T>) -> OneOf<T> {
     assert!(!vals.is_empty());
     OneOf(vals)

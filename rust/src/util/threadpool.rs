@@ -85,6 +85,7 @@ impl ThreadPool {
         ThreadPool::new(n)
     }
 
+    /// Worker threads in the pool.
     pub fn size(&self) -> usize {
         self.size
     }

@@ -572,3 +572,112 @@ fn compressed_fits_where_uncompressed_evicts() {
         uncompressed.snapshot().macro_load_cycles()
     );
 }
+
+#[test]
+fn threaded_rate_limited_tenant_rejects_excess_deterministically() {
+    // A hard token-bucket cap (burst without refill) is enforced on the
+    // dispatcher thread's virtual clock, so it is deterministic even
+    // through the threaded path: exactly `burst` requests are ever
+    // admitted, the rest reject (tickets error) and charge nothing.
+    use cim_adapt::fleet::QosSpec;
+    let h = FleetServer::start(&cfg(EvictionPolicy::Lru), &spec());
+    h.register_with_qos(
+        "capped",
+        tenant("vgg9", 31),
+        false,
+        QosSpec {
+            burst: 2,
+            ..QosSpec::default()
+        },
+    )
+    .unwrap();
+    let mut tickets = Vec::new();
+    for k in 0..8 {
+        tickets.push(h.submit("capped", img(k)).unwrap());
+    }
+    let mut served = 0u64;
+    let mut refused = 0u64;
+    for t in tickets {
+        match t.wait_timeout(std::time::Duration::from_secs(10)) {
+            Ok(r) => {
+                assert!(r.class < 10);
+                served += 1;
+            }
+            Err(_) => refused += 1,
+        }
+    }
+    assert_eq!(served, 2, "hard cap admits exactly the burst");
+    assert_eq!(refused, 6);
+    let (m, snap) = h.shutdown();
+    assert_eq!(m.completed, 2);
+    assert_eq!(m.rejected, 6);
+    let qos: std::collections::BTreeMap<_, _> = snap.qos_stats.iter().cloned().collect();
+    assert_eq!(qos["capped"].admitted, 2);
+    assert_eq!(qos["capped"].rejected, 6);
+    // Rejected requests charged nothing: the books hold exactly the two
+    // served requests' cycles and still conserve.
+    assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+    assert_eq!(snap.reload_cycles, snap.tenant_load_cycles());
+    assert_eq!(snap.hot_swaps, 1, "one residency-establishing swap");
+}
+
+#[test]
+fn threaded_priority_tenant_preempts_queued_batch_traffic() {
+    // Two tenants' requests parked in queues (long batch timeout): when
+    // the queues flush on shutdown, the Interactive tenant's batch
+    // dispatches before the Batch tenant's, whatever the submit order.
+    use cim_adapt::fleet::{QosClass, QosSpec};
+    let h = FleetServer::start(
+        &FleetConfig {
+            num_macros: FLEET_MACROS,
+            max_batch: 64,
+            batch_timeout_us: 2_000_000, // park requests until drain
+            ..FleetConfig::default()
+        },
+        &spec(),
+    );
+    h.register_with_qos(
+        "urgent",
+        tenant("vgg9", 41),
+        false,
+        QosSpec {
+            class: QosClass::Interactive,
+            ..QosSpec::default()
+        },
+    )
+    .unwrap();
+    h.register_with_qos(
+        "bulk",
+        tenant("vgg16", 42),
+        false,
+        QosSpec {
+            class: QosClass::Batch,
+            ..QosSpec::default()
+        },
+    )
+    .unwrap();
+    let mut tickets = Vec::new();
+    for k in 0..4 {
+        tickets.push(h.submit("bulk", img(k)).unwrap());
+    }
+    for k in 4..8 {
+        tickets.push(h.submit("urgent", img(k)).unwrap());
+    }
+    // Shutdown drains the parked queues in QoS order.
+    let (m, snap) = h.shutdown();
+    assert_eq!(m.completed, 8);
+    for t in tickets {
+        let r = t.wait_timeout(std::time::Duration::from_secs(10)).unwrap();
+        assert!(r.class < 10);
+    }
+    // The urgent batch went first: bulk's requests waited through
+    // urgent's service cycles on the deterministic virtual clock.
+    let qos: std::collections::BTreeMap<_, _> = snap.qos_stats.iter().cloned().collect();
+    assert!(
+        qos["bulk"].queue_delay_cycles > qos["urgent"].queue_delay_cycles,
+        "bulk ({}) must wait longer than urgent ({})",
+        qos["bulk"].queue_delay_cycles,
+        qos["urgent"].queue_delay_cycles
+    );
+    assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+}

@@ -5,7 +5,9 @@
 use cim_adapt::arch::{by_name, vgg9, ConvLayer, LayerKind, ModelArch};
 use cim_adapt::cim::{Adc, CimMacro, WeightCell};
 use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec, MorphConfig};
-use cim_adapt::fleet::{plan_compaction, Fleet, ModelWeights, Placement};
+use cim_adapt::fleet::{
+    plan_compaction, Fleet, ModelWeights, Placement, QosClass, QosFleet, QosSpec,
+};
 use cim_adapt::latency::{layer_cost, model_cost, spans_reload_cycles};
 use cim_adapt::mapping::{pack_model, FitPolicyKind, PlacedMapping, Region, RegionAllocator};
 use cim_adapt::morph::expand::search_expansion_ratio;
@@ -698,6 +700,178 @@ fn prop_morph_flow_fits_any_budget() {
                 seed as u64,
             );
             out.cost.bls <= target && out.arch.validate().is_ok()
+        },
+    );
+}
+
+#[test]
+fn prop_qos_no_admitted_request_starves() {
+    // Any mixed-priority submit script over an overloaded pool, with or
+    // without an admission budget and aging: draining serves EVERY
+    // admitted request (the defer bound + forced progress guarantee it),
+    // and the ledgers still conserve.
+    let spec = MacroSpec::default();
+    check(
+        "every admitted request is eventually served",
+        cases(25),
+        triples(vecs(usizes(0..3), 1..24), usizes(0..3), usizes(0..2000)),
+        |(seq, budget_sel, aging)| {
+            let mut cfg = FleetConfig {
+                num_macros: 1,
+                coresident: true,
+                qos_aging_cycles: *aging as u64,
+                admit_budget_cycles: [0u64, 600, 5000][*budget_sel],
+                ..FleetConfig::default()
+            };
+            cfg.qos.insert(
+                "m0".into(),
+                QosSpec {
+                    class: QosClass::Pinned,
+                    ..QosSpec::default()
+                },
+            );
+            cfg.qos.insert(
+                "m2".into(),
+                QosSpec {
+                    class: QosClass::Batch,
+                    ..QosSpec::default()
+                },
+            );
+            let mut fleet = QosFleet::new(&cfg, &spec);
+            for (i, s) in [0.04, 0.03, 0.05].iter().enumerate() {
+                fleet
+                    .register(&format!("m{i}"), vgg9().scaled(*s), false)
+                    .unwrap();
+            }
+            let img = vec![0.5f32; 64];
+            for &m in seq {
+                let _ = fleet.submit(&format!("m{m}"), vec![img.clone()]).unwrap();
+            }
+            let outcomes = fleet.drain().unwrap();
+            let snap = fleet.snapshot();
+            let totals = snap.qos_totals();
+            let served: u64 = outcomes.iter().map(|o| o.batch as u64).sum();
+            served == totals.admitted
+                && fleet.pending_batches() == 0
+                && totals.admitted + totals.rejected == seq.len() as u64
+                && snap.reload_cycles == snap.macro_load_cycles()
+                && snap.reload_cycles == snap.tenant_load_cycles()
+        },
+    );
+}
+
+#[test]
+fn prop_qos_rejected_requests_charge_nothing() {
+    // Any interleaved submit/dispatch script through a rate-limited twin
+    // fleet: replaying only the admitted sub-script reproduces every
+    // ledger (fleet, per-macro, per-tenant, twin) bit for bit — rejected
+    // requests left zero trace anywhere, and conservation holds.
+    let spec = MacroSpec::default();
+    check(
+        "rejected requests charge zero on all four ledgers",
+        cases(12),
+        pairs(vecs(usizes(0..4), 1..18), usizes(1..4)),
+        |(ops, burst)| {
+            let build = || {
+                let mut cfg = FleetConfig {
+                    num_macros: 1,
+                    coresident: true,
+                    execution: ExecutionMode::Twin,
+                    ..FleetConfig::default()
+                };
+                cfg.qos.insert(
+                    "m1".into(),
+                    QosSpec {
+                        burst: *burst as u64,
+                        ..QosSpec::default()
+                    },
+                );
+                let mut fleet = QosFleet::new(&cfg, &spec);
+                for (i, s) in [0.04, 0.03, 0.05].iter().enumerate() {
+                    fleet
+                        .register(&format!("m{i}"), vgg9().scaled(*s), false)
+                        .unwrap();
+                }
+                fleet
+            };
+            let img = vec![0.5f32; 64];
+            // Run 1: record which submits were admitted.
+            let mut fleet = build();
+            let mut admitted_ops = Vec::with_capacity(ops.len());
+            for &op in ops {
+                if op < 3 {
+                    let a = fleet.submit(&format!("m{op}"), vec![img.clone()]).unwrap();
+                    admitted_ops.push(a.is_admitted());
+                } else {
+                    let _ = fleet.dispatch_next().unwrap();
+                    admitted_ops.push(true);
+                }
+            }
+            fleet.drain().unwrap();
+            let full = fleet.snapshot();
+            // Run 2: the same script minus the rejected submits.
+            let mut replay = build();
+            for (&op, &keep) in ops.iter().zip(&admitted_ops) {
+                if op < 3 {
+                    if keep {
+                        let a = replay.submit(&format!("m{op}"), vec![img.clone()]).unwrap();
+                        assert!(a.is_admitted(), "replay re-admits the same script");
+                    }
+                } else {
+                    let _ = replay.dispatch_next().unwrap();
+                }
+            }
+            replay.drain().unwrap();
+            let lean = replay.snapshot();
+            full.reload_cycles == lean.reload_cycles
+                && full.migration_cycles == lean.migration_cycles
+                && full.aggregate() == lean.aggregate()
+                && full.tenant_aggregate() == lean.tenant_aggregate()
+                && full.twin_load_cycles() == lean.twin_load_cycles()
+                && full.reload_cycles == full.macro_load_cycles()
+                && full.twin_load_cycles() == full.reload_cycles
+        },
+    );
+}
+
+#[test]
+fn prop_qos_rate_limit_bounds_throughput() {
+    // The token-bucket invariant, exactly: admitted requests never
+    // exceed the burst capacity plus the refill earned by the virtual
+    // clock (milli-token ledger: admitted·1000 ≤ max(burst,1)·1000 +
+    // clock·rate).
+    let spec = MacroSpec::default();
+    check(
+        "rate-limited throughput ≤ token-bucket bound",
+        cases(25),
+        triples(vecs(usizes(0..2), 1..30), usizes(0..4), usizes(1..6)),
+        |(ops, rate, burst)| {
+            let mut cfg = FleetConfig {
+                num_macros: 2,
+                coresident: true,
+                ..FleetConfig::default()
+            };
+            cfg.qos.insert(
+                "m".into(),
+                QosSpec {
+                    rate_per_kcycle: *rate as u64,
+                    burst: *burst as u64,
+                    ..QosSpec::default()
+                },
+            );
+            let mut fleet = QosFleet::new(&cfg, &spec);
+            fleet.register("m", vgg9().scaled(0.04), false).unwrap();
+            let img = vec![0.5f32; 64];
+            for &op in ops {
+                if op == 0 {
+                    let _ = fleet.submit("m", vec![img.clone()]).unwrap();
+                } else {
+                    let _ = fleet.dispatch_next().unwrap();
+                }
+            }
+            let totals = fleet.snapshot().qos_totals();
+            let clock = fleet.fleet().qos().now();
+            totals.admitted * 1000 <= (*burst as u64).max(1) * 1000 + clock * *rate as u64
         },
     );
 }

@@ -2,10 +2,13 @@
 # Tier-1 CI gate for the Rust workspace: format, lint, build, test, and a
 # cross-PR bench comparison against the committed baselines.
 #
-# Usage: scripts/ci.sh [--no-clippy] [--no-fmt] [--no-bench] [--strict-counters]
+# Usage: scripts/ci.sh [--no-clippy] [--no-fmt] [--no-bench] [--no-doc] [--strict-counters]
 #   --no-clippy        skip the clippy step (e.g. toolchain without clippy)
 #   --no-fmt           skip the rustfmt check (e.g. toolchain without rustfmt)
 #   --no-bench         skip the quick bench run + baseline comparison
+#   --no-doc           skip the rustdoc gate (cargo doc --no-deps with
+#                      RUSTDOCFLAGS="-D warnings": broken intra-doc links
+#                      and undocumented public items fail CI)
 #   --strict-counters  fail the baseline comparison when a DETERMINISTIC
 #                      counter (reload cycles, fleet utilization, twin
 #                      ledger delta) drifts from scripts/bench_baselines/;
@@ -17,6 +20,10 @@
 #                                 rather than hiding them in a context bag.
 #   clippy::new_without_default — constructors like Placer::new(n) take
 #                                 required parameters; Default is wrong.
+#   missing_docs                — owned by the rustdoc gate below (the
+#                                 doc step denies it); letting clippy
+#                                 also fail on it would report every miss
+#                                 twice with a worse message.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -24,12 +31,14 @@ cd "$(dirname "$0")/../rust"
 run_fmt=1
 run_clippy=1
 run_bench=1
+run_doc=1
 strict_counters=0
 for arg in "$@"; do
   case "$arg" in
     --no-fmt) run_fmt=0 ;;
     --no-clippy) run_clippy=0 ;;
     --no-bench) run_bench=0 ;;
+    --no-doc) run_doc=0 ;;
     --strict-counters) strict_counters=1 ;;
     *) echo "unknown flag: $arg" >&2; exit 2 ;;
   esac
@@ -58,6 +67,7 @@ if [ "$run_clippy" = 1 ]; then
   if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --workspace --all-targets -- \
       -D warnings \
+      -A missing_docs \
       -A clippy::too_many_arguments \
       -A clippy::new_without_default
   else
@@ -72,6 +82,17 @@ cargo build --release
 
 echo "==> cargo test -q"
 cargo test -q
+
+echo "==> cargo doc --no-deps -p cim-adapt (RUSTDOCFLAGS=-D warnings)"
+if [ "$run_doc" = 1 ]; then
+  # The rustdoc gate: the crate root arms #![warn(missing_docs)], and
+  # -D warnings turns that (plus broken intra-doc links) into errors, so
+  # an undocumented public item or a stale [`link`] fails CI here.
+  # Scoped to -p cim-adapt: the vendored shims are not held to it.
+  RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p cim-adapt
+else
+  echo "    (skipped)"
+fi
 
 echo "==> compare_bench.py unit tests"
 if command -v python3 >/dev/null 2>&1; then

@@ -86,6 +86,26 @@ EXACT_COUNTERS = {
         "churn_scenario.defrag.migration_cycles",
         "churn_scenario.defrag.compactions",
         "churn_scenario.defrag_win_cycles",
+        # QoS overload scenario (PR 5): fifo vs priority vs
+        # priority+admission on the deterministic virtual clock.
+        "qos_scenario.fifo.reload_cycles",
+        "qos_scenario.fifo.hi_load_cycles",
+        "qos_scenario.fifo.hi_busy_cycles",
+        "qos_scenario.fifo.hi_queue_delay_cycles",
+        "qos_scenario.fifo.total_twin_cycles",
+        "qos_scenario.fifo.admitted",
+        "qos_scenario.priority.reload_cycles",
+        "qos_scenario.priority.hi_load_cycles",
+        "qos_scenario.priority.hi_busy_cycles",
+        "qos_scenario.priority.hi_queue_delay_cycles",
+        "qos_scenario.priority.total_twin_cycles",
+        "qos_scenario.admission.reload_cycles",
+        "qos_scenario.admission.total_twin_cycles",
+        "qos_scenario.admission.admitted",
+        "qos_scenario.admission.rejected",
+        "qos_scenario.admission.deferred",
+        "qos_scenario.priority_hi_win_cycles",
+        "qos_scenario.admission_reload_win_cycles",
     ],
     # The serving bench's counters flow through the threaded batcher
     # (batch formation is timing-dependent), so none qualify yet.

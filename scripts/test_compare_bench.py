@@ -40,6 +40,19 @@ def churn_arm(spans=1.0, total=3904, migration=0, compactions=0):
     }
 
 
+def qos_arm(hi_load=864, hi_busy=2000, delay=9000, total=12000, admitted=48, rejected=0, deferred=0):
+    return {
+        "reload_cycles": 2632 if hi_load == 864 else 329,
+        "hi_load_cycles": hi_load,
+        "hi_busy_cycles": hi_busy,
+        "hi_queue_delay_cycles": delay,
+        "total_twin_cycles": total,
+        "admitted": admitted,
+        "rejected": rejected,
+        "deferred": deferred,
+    }
+
+
 def fleet_summary(
     coresident_cycles=190,
     utilization=0.7421875,
@@ -73,6 +86,17 @@ def fleet_summary(
             "best_fit": churn_arm(),
             "defrag": churn_arm(total=4043, migration=139, compactions=1),
             "defrag_win_cycles": 125,
+        },
+        "qos_scenario": {
+            "rounds": 8,
+            "fifo": qos_arm(),
+            "priority": qos_arm(hi_load=108, hi_busy=1244, delay=1200, total=9500),
+            "admission": qos_arm(
+                hi_load=108, hi_busy=1244, delay=1100, total=7600,
+                admitted=36, rejected=12, deferred=10,
+            ),
+            "priority_hi_win_cycles": 756,
+            "admission_reload_win_cycles": 2303,
         },
     }
     if timing_ns is not None:
