@@ -1,0 +1,133 @@
+//! Deterministic fleet tracing: the worked example behind the READMEs'
+//! "Observability & tracing" section.
+//!
+//! Runs the QoS overload scenario (three tenants thrashing a 1-macro
+//! co-resident twin pool — the same mix as `examples/fleet_qos.rs`) with
+//! a [`FleetTrace`] attached, then shows everything the event stream
+//! buys: the online four-ledger audit, per-tenant cycle histograms, the
+//! Prometheus text exposition, the Chrome-trace JSON round-trip, and the
+//! ASCII per-macro timeline.
+//!
+//! ```bash
+//! cargo run --release --example fleet_trace -- --rounds 8
+//! # optionally persist the exports:
+//! cargo run --release --example fleet_trace -- --trace-out trace.json --metrics-out metrics.prom
+//! ```
+//!
+//! The binary exposes the same exporters on a full threaded fleet run:
+//! `cim-adapt fleet --trace-out trace.json --metrics-out metrics.prom`,
+//! then `cim-adapt inspect --timeline trace.json`.
+
+use cim_adapt::arch::by_name;
+use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec};
+use cim_adapt::data::SynthCifar;
+use cim_adapt::fleet::{QosClass, QosFleet, SchedMode};
+use cim_adapt::obs::{ascii_timeline, events_from_chrome, EventKind, FleetTrace};
+use cim_adapt::util::cli::Args;
+use cim_adapt::util::commas;
+use cim_adapt::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    cim_adapt::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    let rounds = args.usize_or("rounds", 8);
+
+    let spec = MacroSpec::default();
+    let mut cfg = FleetConfig {
+        num_macros: 1,
+        coresident: true,
+        execution: ExecutionMode::Twin,
+        sched: SchedMode::Qos,
+        qos_aging_cycles: 1_000_000,
+        ..FleetConfig::default()
+    };
+    cfg.qos.entry("hi".into()).or_default().class = QosClass::Interactive;
+    cfg.qos.entry("lo1".into()).or_default().class = QosClass::Batch;
+    cfg.qos.entry("lo2".into()).or_default().class = QosClass::Batch;
+
+    let mut fleet = QosFleet::new(&cfg, &spec);
+    // Attach the trace bundle BEFORE the scenario: every admit, reload,
+    // migration, twin pass and dispatch lands in the ring, the
+    // histograms, and the online auditor, stamped with the virtual
+    // device clock (so two identical runs trace byte-identically).
+    let trace = FleetTrace::default();
+    fleet.fleet_mut().set_trace(Some(trace.sink()));
+    let scaled = |s: f64| by_name("vgg9").unwrap().scaled(s);
+    for (name, s) in [("hi", 0.04), ("lo1", 0.03), ("lo2", 0.05)] {
+        fleet.register(name, scaled(s), false)?;
+    }
+    let batch: Vec<Vec<f32>> = (0..2).map(|k| SynthCifar::sample(k, k as u64).data).collect();
+    println!(
+        "overload: 3 tenants on one 256-column macro, {rounds} interleaved rounds, tracing on\n"
+    );
+    for _ in 0..rounds {
+        for m in ["lo1", "lo2", "hi"] {
+            let _ = fleet.submit(m, batch.clone())?;
+        }
+    }
+    fleet.drain()?;
+    let snap = fleet.snapshot();
+
+    // 1. Per-kind event counts (lifetime totals, eviction-proof).
+    {
+        let log = trace.log.lock().unwrap();
+        println!("event counts ({} total, {} dropped by the ring):", log.total(), log.dropped());
+        for k in EventKind::ALL {
+            let n = log.count(k);
+            if n > 0 {
+                println!("  {:<15} {n}", k.as_str());
+            }
+        }
+    }
+
+    // 2. The online four-ledger audit: the auditor saw only the event
+    // stream, yet must re-derive the fleet/per-macro/per-tenant/twin
+    // ledgers bit-exactly.
+    let report = trace.audit.lock().unwrap().verify(&snap);
+    println!(
+        "\nledger audit: {} ({} checks over {} events)",
+        if report.pass { "PASS" } else { "FAIL" },
+        report.checks,
+        report.events
+    );
+    if let Some(div) = &report.first_divergence {
+        println!("  first divergence: {div}");
+    }
+    anyhow::ensure!(report.pass, "the audit must pass on an untampered run");
+
+    // 3. Per-tenant queue-delay histogram ceilings (p50/p95, log buckets).
+    {
+        let hist = trace.hist.lock().unwrap();
+        println!("\nqueue delay by tenant (log-bucket ceilings):");
+        for (tenant, lanes) in hist.tenants() {
+            println!(
+                "  {tenant:<5} p50 ≤ {} cycles, p95 ≤ {} cycles ({} dispatches)",
+                commas(lanes.queue_delay.quantile_ceiling(0.50)),
+                commas(lanes.queue_delay.quantile_ceiling(0.95)),
+                lanes.queue_delay.count()
+            );
+        }
+    }
+
+    // 4. Exporters: Chrome trace JSON (round-trips through the parser)
+    // and Prometheus text.
+    let tenants: Vec<String> = ["hi", "lo1", "lo2"].iter().map(|s| s.to_string()).collect();
+    let chrome = trace.chrome(1, &tenants);
+    let events = events_from_chrome(&Json::parse(&chrome.dump()).unwrap())?;
+    println!("\nChrome trace: {} events round-tripped through Json::parse", events.len());
+    if let Some(path) = args.get("trace-out") {
+        std::fs::write(path, chrome.pretty())?;
+        println!("  wrote {path} (open in chrome://tracing or ui.perfetto.dev)");
+    }
+    let prom = trace.prometheus(Some(report.pass));
+    println!("Prometheus text: {} lines", prom.lines().count());
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(path, &prom)?;
+        println!("  wrote {path}");
+    }
+
+    // 5. The ASCII timeline the binary renders via
+    // `cim-adapt inspect --timeline`.
+    println!("\n{}", ascii_timeline(&events, args.usize_or("width", 72)));
+    Ok(())
+}

@@ -22,6 +22,7 @@ use cim_adapt::fleet::{EvictionPolicy, Fleet, FleetServer, QosClass, QosFleet, S
 use cim_adapt::latency::model_cost;
 use cim_adapt::mapping::{pack_model, FitPolicyKind};
 use cim_adapt::morph::flow::morph_flow_synthetic;
+use cim_adapt::obs::{events_from_chrome, EventKind, FleetTrace, LedgerAuditor};
 use cim_adapt::report::write_bench_summary;
 use cim_adapt::util::bench::{black_box, Runner};
 use cim_adapt::util::json::Json;
@@ -204,7 +205,17 @@ struct QosRun {
 /// `examples/fleet_qos.rs` mirrors this scenario for the README's worked
 /// example — keep the two in sync (this bench is the CI-gated source of
 /// truth).
-fn qos_overload_mix(sched: SchedMode, classes: bool, admission: bool, rounds: usize) -> QosRun {
+///
+/// When `trace` is given, every fleet/QoS event is recorded into it and
+/// the online [`LedgerAuditor`] must re-derive all four ledgers from the
+/// event stream bit-exactly (asserted against the final snapshot here).
+fn qos_overload_mix(
+    sched: SchedMode,
+    classes: bool,
+    admission: bool,
+    rounds: usize,
+    trace: Option<&FleetTrace>,
+) -> QosRun {
     let spec = MacroSpec::default();
     let scaled = |s: f64| by_name("vgg9").unwrap().scaled(s);
     let (hi, lo1, lo2) = (scaled(0.04), scaled(0.03), scaled(0.05));
@@ -239,6 +250,9 @@ fn qos_overload_mix(sched: SchedMode, classes: bool, admission: bool, rounds: us
         lo2_spec.burst = 4;
     }
     let mut fleet = QosFleet::new(&fleet_cfg, &spec);
+    if let Some(t) = trace {
+        fleet.fleet_mut().set_trace(Some(t.sink()));
+    }
     fleet.register("hi", hi.clone(), false).unwrap();
     fleet.register("lo1", lo1.clone(), false).unwrap();
     fleet.register("lo2", lo2.clone(), false).unwrap();
@@ -266,6 +280,14 @@ fn qos_overload_mix(sched: SchedMode, classes: bool, admission: bool, rounds: us
     // Every admitted request was served — nothing starves.
     let served: u64 = outcomes.iter().map(|o| o.batch as u64).sum();
     assert_eq!(served, totals.admitted);
+    if let Some(t) = trace {
+        let report = t.audit.lock().unwrap().verify(&snap);
+        assert!(
+            report.pass,
+            "online four-ledger audit must re-derive the snapshot: {:?}",
+            report.first_divergence
+        );
+    }
     let tenants: std::collections::BTreeMap<&str, &MacroStats> = snap
         .tenant_stats
         .iter()
@@ -521,9 +543,9 @@ fn main() {
     // tenant's reload thrash (it is served as one run and loads once);
     // admission must also cut the fleet's total twin cycles by refusing
     // the over-rate tenant and deferring over-budget swaps.
-    let ff_q = qos_overload_mix(SchedMode::Fifo, false, false, rounds / 2);
-    let pr_q = qos_overload_mix(SchedMode::Qos, true, false, rounds / 2);
-    let ad_q = qos_overload_mix(SchedMode::Qos, true, true, rounds / 2);
+    let ff_q = qos_overload_mix(SchedMode::Fifo, false, false, rounds / 2, None);
+    let pr_q = qos_overload_mix(SchedMode::Qos, true, false, rounds / 2, None);
+    let ad_q = qos_overload_mix(SchedMode::Qos, true, true, rounds / 2, None);
     r.table(&format!(
         "qos overload over {} rounds: fifo hi {} load / {} delay cycles, {} total reload | \
          priority hi {} / {}, {} | admission hi {} / {}, {} ({} rejected, {} deferrals)",
@@ -580,6 +602,59 @@ fn main() {
         "priority changes order, not admission"
     );
 
+    // --- deterministic tracing + online four-ledger audit -----------------
+    // The admission arm again, twice, each run with a fresh trace bundle:
+    // the online auditor must re-derive all four ledgers from the event
+    // stream alone (asserted inside qos_overload_mix), the Chrome export
+    // must round-trip through the JSON parser, and — because every event
+    // is stamped from the virtual device clock — the two runs must
+    // serialize byte-identically.
+    let tenants: Vec<String> = ["hi", "lo1", "lo2"].iter().map(|s| s.to_string()).collect();
+    let t1 = FleetTrace::default();
+    let tr_q = qos_overload_mix(SchedMode::Qos, true, true, rounds / 2, Some(&t1));
+    let t2 = FleetTrace::default();
+    let _ = qos_overload_mix(SchedMode::Qos, true, true, rounds / 2, Some(&t2));
+    assert_eq!(
+        tr_q.reload_cycles, ad_q.reload_cycles,
+        "tracing must observe the scenario, not perturb it"
+    );
+    let chrome1 = t1.chrome(1, &tenants).dump();
+    let chrome2 = t2.chrome(1, &tenants).dump();
+    let deterministic = chrome1 == chrome2;
+    assert!(deterministic, "same scenario twice must trace byte-identically");
+    assert_eq!(
+        t1.prometheus(Some(true)),
+        t2.prometheus(Some(true)),
+        "Prometheus export must be deterministic too"
+    );
+    let parsed = Json::parse(&chrome1).expect("chrome trace must parse back");
+    let events = events_from_chrome(&parsed).expect("chrome trace must decode");
+    let (events_total, dropped, trace_counts) = {
+        let log = t1.log.lock().unwrap();
+        let mut counts = Json::obj().with("rounds", rounds / 2);
+        for k in EventKind::ALL {
+            counts = counts.with(k.as_str(), log.count(k));
+        }
+        (log.total(), log.dropped(), counts)
+    };
+    assert_eq!(dropped, 0, "the default ring must hold this scenario whole");
+    assert_eq!(events.len() as u64, events_total, "round-trip must keep every event");
+    // Offline replay of the round-tripped stream reproduces the online
+    // auditor's ledgers (which the in-mix assert tied to the snapshot).
+    let offline = LedgerAuditor::replay(&events);
+    {
+        let online = t1.audit.lock().unwrap();
+        assert_eq!(offline.events(), online.events());
+        assert_eq!(offline.fleet_load_cycles(), online.fleet_load_cycles());
+        assert_eq!(offline.fleet_migration_cycles(), online.fleet_migration_cycles());
+        assert_eq!(offline.clock_regressions(), 0);
+    }
+    r.table(&format!(
+        "traced admission arm: {events_total} events, audit PASS, \
+         chrome export deterministic across runs ({} bytes)",
+        chrome1.len()
+    ));
+
     // Twin forward throughput on a resident tenant (timing only).
     {
         let spec_ = MacroSpec::default();
@@ -635,6 +710,17 @@ fn main() {
                     "admission_reload_win_cycles",
                     ff_q.reload_cycles - ad_q.reload_cycles,
                 ),
+        )
+        // Per-kind event counts from the traced admission arm, plus the
+        // audit/determinism verdicts as 0/1 counters (the asserts above
+        // abort the bench before this summary is written if either
+        // fails, so a committed baseline always reads 1).
+        .with(
+            "trace_scenario",
+            trace_counts
+                .with("events_total", events_total)
+                .with("audit_pass", 1u64)
+                .with("deterministic", u64::from(deterministic)),
         )
         .with(
             "coresidency",

@@ -42,6 +42,19 @@ fn main() {
     });
     let sim_snap = h.shutdown();
 
+    // Metrics collector at the latency-sample cap: on_complete must stay
+    // O(1) once the 100k-sample ring is full (it was an O(n) Vec shift —
+    // this arm regresses visibly if that ever comes back).
+    {
+        let m = cim_adapt::coordinator::metrics::Metrics::new();
+        for i in 0..150_000u64 {
+            m.on_complete(i);
+        }
+        r.bench("metrics on_complete at 100k-sample cap", || {
+            m.on_complete(black_box(42));
+        });
+    }
+
     // PJRT path (skipped when artifacts are absent).
     let artifacts = Path::new("artifacts");
     if artifacts.join("vgg9_edge_meta.json").exists() {

@@ -60,6 +60,23 @@ impl MacroStats {
     pub fn busy_cycles(&self) -> u64 {
         self.compute_cycles + self.load_cycles + self.migration_cycles
     }
+
+    /// Field-wise difference `self − before`: the delta between two
+    /// snapshots of the same macro's (monotonically increasing)
+    /// counters. The trace layer brackets a batch's twin forward passes
+    /// with two snapshots and emits the delta as a `TwinPass` event.
+    /// Panics in debug builds if `before` is not an earlier snapshot of
+    /// the same counters.
+    pub fn diff(&self, before: &MacroStats) -> MacroStats {
+        MacroStats {
+            compute_cycles: self.compute_cycles - before.compute_cycles,
+            load_cycles: self.load_cycles - before.load_cycles,
+            migration_cycles: self.migration_cycles - before.migration_cycles,
+            conversions: self.conversions - before.conversions,
+            reloads: self.reloads - before.reloads,
+            migrations: self.migrations - before.migrations,
+        }
+    }
 }
 
 /// Result of digitizing one span of bitlines.
@@ -231,6 +248,20 @@ mod tests {
 
     fn cells(ws: &[i32]) -> Vec<WeightCell> {
         ws.iter().map(|&w| WeightCell::saturating(w, 4)).collect()
+    }
+
+    #[test]
+    fn stats_diff_is_fieldwise_subtraction() {
+        let mut m = CimMacro::new(spec(), 1.0, 1.0);
+        m.load_columns(0, &vec![cells(&[1; 9]); 128]);
+        let before = m.stats;
+        m.pass(&[1; 9], 0, 128);
+        let d = m.stats.diff(&before);
+        assert_eq!(d.compute_cycles, 3);
+        assert_eq!(d.conversions, 128);
+        assert_eq!(d.load_cycles, 0, "the pass loads nothing");
+        assert_eq!(d.reloads, 0);
+        assert_eq!(m.stats.diff(&m.stats), MacroStats::default());
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Serving metrics: counters + latency distribution.
 
+use std::collections::VecDeque;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -107,9 +108,16 @@ struct Inner {
     device_cycles: u64,
     weight_reloads: u64,
     evictions: u64,
-    latencies_us: Vec<u64>,
+    /// Most recent latency samples, oldest at the front — a `VecDeque`
+    /// so the 100k-sample cap evicts in O(1) (a `Vec::remove(0)` here
+    /// made every completion past the cap an O(n) shift).
+    latencies_us: VecDeque<u64>,
     started: Instant,
 }
+
+/// Latency samples retained for percentile computation; completions
+/// beyond this evict the oldest sample.
+const LATENCY_SAMPLE_CAP: usize = 100_000;
 
 /// Thread-safe metrics collector shared across workers.
 pub struct Metrics {
@@ -128,7 +136,7 @@ impl Default for Metrics {
                 device_cycles: 0,
                 weight_reloads: 0,
                 evictions: 0,
-                latencies_us: Vec::with_capacity(4096),
+                latencies_us: VecDeque::with_capacity(4096),
                 started: Instant::now(),
             }),
         }
@@ -166,11 +174,11 @@ impl Metrics {
     pub fn on_complete(&self, latency_us: u64) {
         let mut g = self.inner.lock().unwrap();
         g.completed += 1;
-        // Cap memory: keep the most recent 100k samples.
-        if g.latencies_us.len() >= 100_000 {
-            g.latencies_us.remove(0);
+        // Cap memory: keep the most recent samples only.
+        if g.latencies_us.len() >= LATENCY_SAMPLE_CAP {
+            g.latencies_us.pop_front();
         }
-        g.latencies_us.push(latency_us);
+        g.latencies_us.push_back(latency_us);
     }
 
     /// Point-in-time copy of every counter (percentiles computed here).
@@ -190,7 +198,7 @@ impl Metrics {
             device_cycles: g.device_cycles,
             weight_reloads: g.weight_reloads,
             evictions: g.evictions,
-            latency: LatencyStats::from_samples(g.latencies_us.clone()),
+            latency: LatencyStats::from_samples(g.latencies_us.iter().copied().collect()),
             throughput_rps: if elapsed > 0.0 {
                 g.completed as f64 / elapsed
             } else {
@@ -228,6 +236,26 @@ mod tests {
         assert_eq!(s.latency.count, 12);
         assert!(s.latency.p50_us >= 100);
         assert!(s.latency.max_us == 111);
+    }
+
+    #[test]
+    fn latency_cap_keeps_most_recent_samples() {
+        // Regression for the O(n) `Vec::remove(0)` cap: push past the
+        // 100k bound and check both the count cap and that the evicted
+        // samples are the OLDEST (the minimum retained value moves up).
+        let m = Metrics::new();
+        let extra = 2_048u64;
+        for i in 0..(LATENCY_SAMPLE_CAP as u64 + extra) {
+            m.on_complete(i);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, LATENCY_SAMPLE_CAP as u64 + extra);
+        assert_eq!(s.latency.count, LATENCY_SAMPLE_CAP);
+        assert_eq!(s.latency.max_us, LATENCY_SAMPLE_CAP as u64 + extra - 1);
+        // Oldest `extra` samples (0..extra) were evicted, so the mean of
+        // the retained window is the midpoint of [extra, cap+extra).
+        let expect_mean = (extra as f64 + (LATENCY_SAMPLE_CAP as u64 + extra - 1) as f64) / 2.0;
+        assert!((s.latency.mean_us - expect_mean).abs() < 1e-6);
     }
 
     #[test]

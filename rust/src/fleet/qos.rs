@@ -80,6 +80,7 @@ use anyhow::Result;
 
 use crate::arch::ModelArch;
 use crate::config::{FleetConfig, MacroSpec};
+use crate::obs::{emit, EventKind, SharedSink, TraceEvent};
 use crate::util::json::Json;
 
 use super::server::{BatchOutcome, Fleet, FleetSnapshot};
@@ -395,6 +396,9 @@ pub struct QosScheduler {
     stats: BTreeMap<String, QosTenantStats>,
     clock: u64,
     next_seq: u64,
+    /// Trace sink for admission/dispatch events (`None` = tracing off;
+    /// each emission site then pays exactly one branch).
+    trace: Option<SharedSink>,
 }
 
 impl QosScheduler {
@@ -412,7 +416,21 @@ impl QosScheduler {
             stats: BTreeMap::new(),
             clock: 0,
             next_seq: 0,
+            trace: None,
         }
+    }
+
+    /// Install (or clear) the sink admission/dispatch events are
+    /// recorded into. `Fleet::set_trace` forwards a clone of its sink
+    /// here so queue-side and macro-side events land in one stream.
+    pub fn set_trace(&mut self, trace: Option<SharedSink>) {
+        self.trace = trace;
+    }
+
+    /// The priority class `name` dispatches at (the default class when
+    /// no spec was installed).
+    pub fn class_of(&self, name: &str) -> QosClass {
+        self.spec(name).class
     }
 
     /// The dispatch discipline this scheduler runs.
@@ -502,6 +520,17 @@ impl QosScheduler {
             // the token bucket so a budget rejection never burns the
             // tenant's rate-limit tokens.
             stats.rejected += size as u64;
+            let clock = self.clock;
+            emit(&self.trace, || TraceEvent {
+                clock,
+                kind: EventKind::Reject,
+                tenant: model.to_string(),
+                macro_id: None,
+                cycles: est.total_cycles(),
+                twin: false,
+                detail: size as u64,
+                class: Some(spec.class),
+            });
             return Admission::Rejected(RejectReason::OverBudget);
         }
         if spec.rate_limited() {
@@ -517,6 +546,16 @@ impl QosScheduler {
             let need = size as u64 * 1000;
             if bucket.avail_milli < need {
                 stats.rejected += size as u64;
+                emit(&self.trace, || TraceEvent {
+                    clock,
+                    kind: EventKind::Reject,
+                    tenant: model.to_string(),
+                    macro_id: None,
+                    cycles: est.total_cycles(),
+                    twin: false,
+                    detail: size as u64,
+                    class: Some(spec.class),
+                });
                 return Admission::Rejected(RejectReason::RateLimited);
             }
             // Tokens are spent only on actual admission (this is the last
@@ -541,6 +580,17 @@ impl QosScheduler {
                 deadline,
                 defers: 0,
             });
+        let clock = self.clock;
+        emit(&self.trace, || TraceEvent {
+            clock,
+            kind: EventKind::Admit,
+            tenant: model.to_string(),
+            macro_id: None,
+            cycles: est.total_cycles(),
+            twin: false,
+            detail: size as u64,
+            class: Some(spec.class),
+        });
         Admission::Admitted
     }
 
@@ -631,12 +681,25 @@ impl QosScheduler {
         if let Some(ref winner) = pick {
             for h in &heads {
                 if !h.eligible && h.name != winner.as_str() {
+                    let mut defers_now = 0u32;
                     if let Some(q) = self.queues.get_mut(h.name) {
                         if let Some(front) = q.front_mut() {
                             front.defers += 1;
+                            defers_now = front.defers;
                         }
                     }
                     self.stats.entry(h.name.to_string()).or_default().deferred += 1;
+                    let (clock, class) = (self.clock, self.spec(h.name).class);
+                    emit(&self.trace, || TraceEvent {
+                        clock,
+                        kind: EventKind::Defer,
+                        tenant: h.name.to_string(),
+                        macro_id: None,
+                        cycles: 0,
+                        twin: false,
+                        detail: defers_now as u64,
+                        class: Some(class),
+                    });
                 }
             }
         }
@@ -658,6 +721,7 @@ impl QosScheduler {
     /// dispatch on submit boundaries (the threaded server submits
     /// single-request entries, so any batch size aligns).
     pub fn begin_dispatch(&mut self, model: &str, take: usize) {
+        let (clock, class) = (self.clock, self.spec(model).class);
         let Some(q) = self.queues.get_mut(model) else {
             return;
         };
@@ -665,12 +729,22 @@ impl QosScheduler {
         let mut taken = 0usize;
         while taken < take {
             let Some(batch) = q.pop_front() else { break };
-            let delay = self.clock.saturating_sub(batch.enqueued);
+            let delay = clock.saturating_sub(batch.enqueued);
             stats.queue_delay_cycles += delay * batch.size as u64;
-            if self.clock > batch.deadline {
+            if clock > batch.deadline {
                 stats.deadline_misses += batch.size as u64;
             }
             taken += batch.size;
+            emit(&self.trace, || TraceEvent {
+                clock,
+                kind: EventKind::DispatchStart,
+                tenant: model.to_string(),
+                macro_id: None,
+                cycles: delay,
+                twin: false,
+                detail: batch.size as u64,
+                class: Some(class),
+            });
         }
         debug_assert_eq!(taken, take, "dispatch crossed a submit boundary");
     }

@@ -78,6 +78,7 @@ use crate::coordinator::scheduler::MacroScheduler;
 use crate::coordinator::server::sim_classify;
 use crate::latency::region_reload_cycles;
 use crate::mapping::{FitPolicy, PlacedMapping, Region};
+use crate::obs::{emit, EventKind, FleetTrace, SharedSink, TraceEvent};
 use crate::quant::psum::segment_inputs;
 use crate::util::json::Json;
 
@@ -390,6 +391,11 @@ pub struct Fleet {
     sched: QosScheduler,
     /// Per-tenant specs from the config, applied at registration.
     qos_cfg: BTreeMap<String, QosSpec>,
+    /// Trace sink macro-side events are recorded into (`None` = tracing
+    /// off; every emission site then pays exactly one branch). The
+    /// scheduler holds a clone so queue-side events share the stream —
+    /// see [`Fleet::set_trace`].
+    trace: Option<SharedSink>,
 }
 
 impl Fleet {
@@ -429,7 +435,19 @@ impl Fleet {
             placed: BTreeMap::new(),
             sched: QosScheduler::new(cfg.sched, cfg.admit_budget_cycles, cfg.qos_aging_cycles),
             qos_cfg: cfg.qos.clone(),
+            trace: None,
         }
+    }
+
+    /// Install (or clear) the sink trace events are recorded into; a
+    /// clone is forwarded to the QoS scheduler so admission/dispatch
+    /// events and macro-side events land in one stream, in emission
+    /// order on the shared virtual clock. Pass
+    /// [`FleetTrace::sink`](crate::obs::FleetTrace::sink) for the
+    /// standard log + histograms + audit bundle.
+    pub fn set_trace(&mut self, trace: Option<SharedSink>) {
+        self.sched.set_trace(trace.clone());
+        self.trace = trace;
     }
 
     /// Like [`Fleet::new`] but with a caller-supplied eviction policy —
@@ -653,6 +671,8 @@ impl Fleet {
         for (name, pm) in new_placed {
             self.placed.insert(name, pm);
         }
+        let clock = self.sched.now();
+        let mirror = !self.twin.is_empty();
         for mv in &plan.moves {
             let c = region_reload_cycles(mv.to.bl_count, &self.spec);
             let stats = &mut self.macro_stats[mv.to.macro_id];
@@ -662,8 +682,44 @@ impl Fleet {
             tenant.migration_cycles += c;
             tenant.migrations += 1;
             self.migration_cycles_total += c;
+            let class = self.sched.class_of(&mv.tenant);
+            emit(&self.trace, || TraceEvent {
+                clock,
+                kind: EventKind::MigrateSpan,
+                tenant: mv.tenant.clone(),
+                macro_id: Some(mv.to.macro_id),
+                cycles: c,
+                twin: false,
+                detail: mv.to.bl_count as u64,
+                class: Some(class),
+            });
+            if mirror {
+                // The twin pool charged the identical figure in
+                // `migrate_columns` above; mirror it so the audit can
+                // re-derive the twin ledger from events alone.
+                emit(&self.trace, || TraceEvent {
+                    clock,
+                    kind: EventKind::MigrateSpan,
+                    tenant: mv.tenant.clone(),
+                    macro_id: Some(mv.to.macro_id),
+                    cycles: c,
+                    twin: true,
+                    detail: mv.to.bl_count as u64,
+                    class: Some(class),
+                });
+            }
         }
         self.compactions += 1;
+        emit(&self.trace, || TraceEvent {
+            clock,
+            kind: EventKind::Compaction,
+            tenant: "fleet".to_string(),
+            macro_id: None,
+            cycles: plan.migration_cycles,
+            twin: false,
+            detail: plan.moves.len() as u64,
+            class: None,
+        });
         // The migration charge ticks the QoS virtual clock here — the
         // clock tracks every cycle the fleet charges, including explicit
         // compactions outside any batch. `serve_batch` advances only its
@@ -687,6 +743,13 @@ impl Fleet {
     /// fleet-level, per-macro and per-tenant accounting agree. Returns
     /// (cycles, events): one event per loaded region.
     fn charge_region_reloads(&mut self, model: &str, regions: &[Region]) -> (u64, u64) {
+        let clock = self.sched.now();
+        let class = self.sched.class_of(model);
+        // Under twin execution the materialization that accompanies this
+        // charge books the identical per-region figure on the twin pool
+        // (`load_columns`); mirror each region so the audit can re-derive
+        // the twin ledger from events alone.
+        let mirror = !self.twin.is_empty();
         let tenant = self.tenant_stats.entry(model.to_string()).or_default();
         let mut total = 0u64;
         for r in regions {
@@ -696,6 +759,28 @@ impl Fleet {
             tenant.load_cycles += c;
             tenant.reloads += 1;
             total += c;
+            emit(&self.trace, || TraceEvent {
+                clock,
+                kind: EventKind::RegionReload,
+                tenant: model.to_string(),
+                macro_id: Some(r.macro_id),
+                cycles: c,
+                twin: false,
+                detail: r.bl_count as u64,
+                class: Some(class),
+            });
+            if mirror {
+                emit(&self.trace, || TraceEvent {
+                    clock,
+                    kind: EventKind::RegionReload,
+                    tenant: model.to_string(),
+                    macro_id: Some(r.macro_id),
+                    cycles: c,
+                    twin: true,
+                    detail: r.bl_count as u64,
+                    class: Some(class),
+                });
+            }
         }
         self.reload_cycles_total += total;
         (total, regions.len() as u64)
@@ -711,14 +796,36 @@ impl Fleet {
     /// physical macro either way, keeping the load-cycle books balanced.
     fn charge_paging_reloads(&mut self, model: &str, macros: &[usize], events: u64) -> u64 {
         let load = self.spec.load_cycles_per_macro as u64;
+        let clock = self.sched.now();
+        let class = self.sched.class_of(model);
         let tenant = self.tenant_stats.entry(model.to_string()).or_default();
         for e in 0..events {
             let m = macros[(e as usize) % macros.len()];
             self.macro_stats[m].load_cycles += load;
             self.macro_stats[m].reloads += 1;
+            emit(&self.trace, || TraceEvent {
+                clock,
+                kind: EventKind::RegionReload,
+                tenant: model.to_string(),
+                macro_id: Some(m),
+                cycles: load,
+                twin: false,
+                detail: e,
+                class: Some(class),
+            });
             if let Some(mac) = self.twin.get_mut(m) {
                 mac.stats.load_cycles += load;
                 mac.stats.reloads += 1;
+                emit(&self.trace, || TraceEvent {
+                    clock,
+                    kind: EventKind::RegionReload,
+                    tenant: model.to_string(),
+                    macro_id: Some(m),
+                    cycles: load,
+                    twin: true,
+                    detail: e,
+                    class: Some(class),
+                });
             }
         }
         let cycles = events * load;
@@ -841,8 +948,34 @@ impl Fleet {
             self.hot_swaps += 1;
         }
         self.evictions += evicted.len() as u64;
+        if !evicted.is_empty() {
+            let clock = self.sched.now();
+            for victim in &evicted {
+                let class = self.sched.class_of(victim);
+                emit(&self.trace, || TraceEvent {
+                    clock,
+                    kind: EventKind::Evict,
+                    tenant: victim.clone(),
+                    macro_id: None,
+                    cycles: 0,
+                    twin: false,
+                    detail: 0,
+                    class: Some(class),
+                });
+            }
+        }
         self.charge_compute(model, &macros_used, compute_total, conversions_total);
 
+        // Snapshot the twin's books before the forward passes so the
+        // per-macro compute/conversion deltas can be emitted as
+        // `TwinPass` events — only when tracing is on (the snapshot
+        // allocates).
+        let twin_before: Option<Vec<MacroStats>> = if self.trace.is_some() && !self.twin.is_empty()
+        {
+            Some(self.twin.iter().map(|m| m.stats).collect())
+        } else {
+            None
+        };
         let mut classes = Vec::with_capacity(images.len());
         let mut logits = Vec::with_capacity(images.len());
         match (self.execution, self.placed.get(model)) {
@@ -871,6 +1004,40 @@ impl Fleet {
                     logits.push(l);
                 }
             }
+        }
+        if let Some(before) = twin_before {
+            let clock = self.sched.now();
+            let class = self.sched.class_of(model);
+            for (i, mac) in self.twin.iter().enumerate() {
+                let d = mac.stats.diff(&before[i]);
+                if d.compute_cycles > 0 || d.conversions > 0 {
+                    emit(&self.trace, || TraceEvent {
+                        clock,
+                        kind: EventKind::TwinPass,
+                        tenant: model.to_string(),
+                        macro_id: Some(i),
+                        cycles: d.compute_cycles,
+                        twin: true,
+                        detail: d.conversions,
+                        class: Some(class),
+                    });
+                }
+            }
+        }
+        {
+            let clock = self.sched.now();
+            let class = self.sched.class_of(model);
+            let n = images.len() as u64;
+            emit(&self.trace, || TraceEvent {
+                clock,
+                kind: EventKind::DispatchEnd,
+                tenant: model.to_string(),
+                macro_id: None,
+                cycles: compute_total,
+                twin: false,
+                detail: n,
+                class: Some(class),
+            });
         }
         // Advance the QoS virtual clock by exactly what this batch
         // charged, so rate limits, aging and queue delays tick in the
@@ -1281,7 +1448,21 @@ impl FleetServer {
     /// Start the fleet dispatcher. Models are registered afterwards via
     /// [`FleetHandle::register`].
     pub fn start(cfg: &FleetConfig, spec: &MacroSpec) -> Arc<FleetHandle> {
-        let fleet = Fleet::new(cfg, spec);
+        FleetServer::start_with_trace(cfg, spec, None)
+    }
+
+    /// Like [`FleetServer::start`] with tracing installed before the
+    /// dispatcher thread takes ownership of the fleet. The caller keeps
+    /// the [`FleetTrace`] (its `Arc` handles stay valid across the
+    /// fleet's whole life) and exports after `shutdown()` — e.g. verify
+    /// the audit against the final snapshot, dump the Chrome trace.
+    pub fn start_with_trace(
+        cfg: &FleetConfig,
+        spec: &MacroSpec,
+        trace: Option<&FleetTrace>,
+    ) -> Arc<FleetHandle> {
+        let mut fleet = Fleet::new(cfg, spec);
+        fleet.set_trace(trace.map(|t| t.sink()));
         let metrics = Arc::new(Metrics::new());
         let depth = Arc::new(AtomicU64::new(0));
         let (tx, rx) = mpsc::channel::<Msg>();

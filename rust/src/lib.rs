@@ -23,6 +23,10 @@
 //! * [`fleet`] — multi-tenant serving over a pool of macros: model
 //!   registry, reload-aware placement, pluggable eviction, hot-swap
 //!   serving with per-macro accounting.
+//! * [`obs`] — deterministic fleet tracing on the virtual device-cycle
+//!   clock: typed event log, per-tenant cycle histograms, Chrome-trace
+//!   and Prometheus exporters, and an online audit that re-derives all
+//!   four cycle ledgers from the event stream.
 //! * [`runtime`] — PJRT bridge that loads the AOT-lowered JAX models
 //!   (`artifacts/*.hlo.txt`) and executes them from the Rust hot path.
 //! * [`baselines`] — E-UPQ-like and XPert-like operating points for the
@@ -48,6 +52,7 @@ pub mod data;
 pub mod baselines;
 pub mod coordinator;
 pub mod fleet;
+pub mod obs;
 pub mod runtime;
 pub mod report;
 

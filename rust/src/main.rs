@@ -21,10 +21,12 @@ use cim_adapt::fleet::{EvictionPolicy, FleetServer, QosClass, SchedMode};
 use cim_adapt::latency::{cost::allocated_usage, model_cost};
 use cim_adapt::mapping::{pack_model, pack_model_at, FitPolicyKind};
 use cim_adapt::morph::flow::morph_flow_synthetic;
+use cim_adapt::obs::{ascii_timeline, events_from_chrome, FleetTrace};
 use cim_adapt::report::{fig12_13, table1, table2, table3_4_5, table6};
 use cim_adapt::runtime::ModelRuntime;
 use cim_adapt::util::cli::{Args, Help};
 use cim_adapt::util::commas;
+use cim_adapt::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
     cim_adapt::util::logging::init();
@@ -52,17 +54,22 @@ fn main() -> anyhow::Result<()> {
                          [--fit first|best|worst|buddy|affinity] [--coresident] [--twin] \
                          [--defrag [--defrag-threshold T]] [--qos] [--sched qos|fifo] \
                          [--priority m=class,..] [--rate m=R[:BURST],..] \
-                         [--deadline m=CYCLES,..] [--admit-budget N]",
+                         [--deadline m=CYCLES,..] [--admit-budget N] \
+                         [--trace-out FILE] [--metrics-out FILE]",
                         "multi-tenant hot-swap serving demo (--twin: run on the simulated \
                          macros; --defrag: compact the pool online when fragmentation \
                          crosses the threshold; --qos: demo priority classes; --priority/\
                          --rate/--deadline: per-tenant QoS contracts; --admit-budget: \
                          reject/defer dispatches whose projected reload+pass cycles \
-                         exceed N; --sched fifo: the arrival-order baseline)",
+                         exceed N; --sched fifo: the arrival-order baseline; \
+                         --trace-out: write a Chrome-trace JSON of the run and audit the \
+                         ledgers against it; --metrics-out: write Prometheus text metrics)",
                     )
                     .cmd(
-                        "inspect --model M [--base-bl N] [--spans m:s:c,...]",
-                        "per-layer CIM mapping details (--spans: render a multi-span placement)",
+                        "inspect --model M [--base-bl N] [--spans m:s:c,...] [--timeline FILE]",
+                        "per-layer CIM mapping details (--spans: render a multi-span \
+                         placement; --timeline: render an ASCII per-macro timeline from a \
+                         Chrome-trace JSON written by fleet --trace-out)",
                     )
                     .render()
             );
@@ -322,7 +329,16 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         }
     }
     parse_qos_flags(args, &mut cfg)?;
-    let handle = FleetServer::start(&cfg, &spec);
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    // The trace bundle is only built (and the fleet only pays the
+    // per-event cost) when an exporter will consume it.
+    let trace = if trace_out.is_some() || metrics_out.is_some() {
+        Some(FleetTrace::default())
+    } else {
+        None
+    };
+    let handle = FleetServer::start_with_trace(&cfg, &spec, trace.as_ref());
     for (i, m) in models.iter().enumerate() {
         let out = morph_flow_synthetic(
             &by_name(m)?,
@@ -521,10 +537,49 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             spans.join(" ")
         );
     }
+    if let Some(trace) = &trace {
+        let report = trace.audit.lock().unwrap().verify(&snap);
+        let (total, dropped) = {
+            let log = trace.log.lock().unwrap();
+            (log.total(), log.dropped())
+        };
+        println!(
+            "trace: {total} events recorded ({dropped} dropped by the ring) | \
+             ledger audit {} ({} checks)",
+            if report.pass { "PASS" } else { "FAIL" },
+            report.checks
+        );
+        if let Some(div) = &report.first_divergence {
+            println!("  first divergence: {div}");
+        }
+        if let Some(path) = &trace_out {
+            let tenants: Vec<String> =
+                snap.tenant_stats.iter().map(|(name, _)| name.clone()).collect();
+            let chrome = trace.chrome(snap.macro_stats.len(), &tenants);
+            std::fs::write(path, chrome.pretty())?;
+            println!("wrote Chrome trace to {}", path.display());
+        }
+        if let Some(path) = &metrics_out {
+            std::fs::write(path, trace.prometheus(Some(report.pass)))?;
+            println!("wrote Prometheus metrics to {}", path.display());
+        }
+        anyhow::ensure!(report.pass, "ledger audit failed: {:?}", report.first_divergence);
+    }
     Ok(())
 }
 
 fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    // --timeline renders a trace file, no model needed.
+    if let Some(timeline) = args.flag_or_value("timeline") {
+        let path = timeline
+            .ok_or_else(|| anyhow::anyhow!("--timeline expects a Chrome-trace JSON file"))?;
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read trace file '{path}': {e}"))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad trace JSON: {e:?}"))?;
+        let events = events_from_chrome(&doc)?;
+        print!("{}", ascii_timeline(&events, args.usize_or("width", 72)));
+        return Ok(());
+    }
     let model = args.str_or("model", "vgg9");
     let spec = MacroSpec::default();
     let arch = by_name(model)?;

@@ -1,0 +1,254 @@
+//! The online four-ledger audit.
+//!
+//! `Fleet::snapshot` keeps a `debug_assert` that the fleet, per-macro,
+//! per-tenant, and twin cycle ledgers agree; the [`LedgerAuditor`]
+//! promotes that invariant to an always-on check that works from the
+//! *event stream alone*: it watches `RegionReload` / `MigrateSpan`
+//! events (analytic and twin-mirrored sides separately), re-derives all
+//! four ledgers independently of the fleet's own accounting, and
+//! [`LedgerAuditor::verify`] diffs them against the final
+//! `FleetSnapshot` with a precise first-divergence report. Because it
+//! is a plain [`TraceSink`] it runs online (inside a
+//! [`FleetTrace`](super::FleetTrace)) or offline
+//! ([`LedgerAuditor::replay`] over a recorded [`TraceLog`](super::TraceLog)) —
+//! the proptests check both derivations are bit-identical.
+
+use std::collections::BTreeMap;
+
+use crate::fleet::FleetSnapshot;
+use crate::util::json::Json;
+
+use super::event::{EventKind, TraceEvent};
+use super::sink::TraceSink;
+
+/// Re-derives the four cycle ledgers from trace events.
+#[derive(Debug, Clone, Default)]
+pub struct LedgerAuditor {
+    fleet_load: u64,
+    fleet_migration: u64,
+    macro_load: BTreeMap<usize, u64>,
+    macro_migration: BTreeMap<usize, u64>,
+    tenant_load: BTreeMap<String, u64>,
+    tenant_migration: BTreeMap<String, u64>,
+    twin_load: u64,
+    twin_migration: u64,
+    events: u64,
+    last_clock: u64,
+    clock_regressions: u64,
+}
+
+impl TraceSink for LedgerAuditor {
+    fn record(&mut self, ev: &TraceEvent) {
+        self.events += 1;
+        if ev.clock < self.last_clock {
+            self.clock_regressions += 1;
+        } else {
+            self.last_clock = ev.clock;
+        }
+        let (fleet, per_macro, per_tenant, twin) = match ev.kind {
+            EventKind::RegionReload => (
+                &mut self.fleet_load,
+                &mut self.macro_load,
+                &mut self.tenant_load,
+                &mut self.twin_load,
+            ),
+            EventKind::MigrateSpan => (
+                &mut self.fleet_migration,
+                &mut self.macro_migration,
+                &mut self.tenant_migration,
+                &mut self.twin_migration,
+            ),
+            _ => return,
+        };
+        if ev.twin {
+            *twin += ev.cycles;
+        } else {
+            *fleet += ev.cycles;
+            if let Some(m) = ev.macro_id {
+                *per_macro.entry(m).or_default() += ev.cycles;
+            }
+            *per_tenant.entry(ev.tenant.clone()).or_default() += ev.cycles;
+        }
+    }
+}
+
+impl LedgerAuditor {
+    /// Build an auditor by replaying recorded events (oldest first) —
+    /// the offline twin of feeding it live as a sink.
+    pub fn replay<'a>(events: impl IntoIterator<Item = &'a TraceEvent>) -> LedgerAuditor {
+        let mut a = LedgerAuditor::default();
+        for ev in events {
+            a.record(ev);
+        }
+        a
+    }
+
+    /// Events seen (all kinds, not just ledger-bearing ones).
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Derived fleet-level reload cycles.
+    pub fn fleet_load_cycles(&self) -> u64 {
+        self.fleet_load
+    }
+
+    /// Derived fleet-level migration cycles.
+    pub fn fleet_migration_cycles(&self) -> u64 {
+        self.fleet_migration
+    }
+
+    /// Times the virtual clock went backwards between consecutive
+    /// events (must stay 0 — the clock only ever advances).
+    pub fn clock_regressions(&self) -> u64 {
+        self.clock_regressions
+    }
+
+    /// Diff every derived ledger against the fleet's own books.
+    ///
+    /// Checks run in a fixed order (fleet load, fleet migration,
+    /// per-macro, per-tenant, twin, clock monotonicity) and the first
+    /// failing one becomes [`AuditReport::first_divergence`], so a
+    /// broken charge site is named precisely rather than drowning in
+    /// follow-on mismatches.
+    pub fn verify(&self, snap: &FleetSnapshot) -> AuditReport {
+        struct Acc {
+            checks: usize,
+            first: Option<String>,
+        }
+        impl Acc {
+            fn check(&mut self, label: &str, derived: u64, ledger: u64) {
+                self.checks += 1;
+                if derived != ledger && self.first.is_none() {
+                    self.first = Some(format!("{label}: derived {derived} != ledger {ledger}"));
+                }
+            }
+        }
+        let mut acc = Acc { checks: 0, first: None };
+
+        acc.check("fleet load", self.fleet_load, snap.reload_cycles);
+        acc.check("fleet migration", self.fleet_migration, snap.migration_cycles);
+        for (m, stats) in snap.macro_stats.iter().enumerate() {
+            acc.check(
+                &format!("macro {m} load"),
+                self.macro_load.get(&m).copied().unwrap_or(0),
+                stats.load_cycles,
+            );
+            acc.check(
+                &format!("macro {m} migration"),
+                self.macro_migration.get(&m).copied().unwrap_or(0),
+                stats.migration_cycles,
+            );
+        }
+        for (name, stats) in &snap.tenant_stats {
+            acc.check(
+                &format!("tenant {name} load"),
+                self.tenant_load.get(name).copied().unwrap_or(0),
+                stats.load_cycles,
+            );
+            acc.check(
+                &format!("tenant {name} migration"),
+                self.tenant_migration.get(name).copied().unwrap_or(0),
+                stats.migration_cycles,
+            );
+        }
+        // A derived tenant the snapshot has never heard of means events
+        // carried a bogus attribution (tenant books survive retirement,
+        // so the snapshot's tenant list is a superset of any valid
+        // trace's).
+        for name in self.tenant_load.keys().chain(self.tenant_migration.keys()) {
+            acc.checks += 1;
+            if acc.first.is_none() && !snap.tenant_stats.iter().any(|(n, _)| n == name) {
+                acc.first = Some(format!("tenant {name}: charged in trace, unknown to snapshot"));
+            }
+        }
+        let (twin_load, twin_migration) = (
+            snap.twin_stats.iter().map(|s| s.load_cycles).sum::<u64>(),
+            snap.twin_stats.iter().map(|s| s.migration_cycles).sum::<u64>(),
+        );
+        if snap.twin_stats.is_empty() {
+            // Analytic execution: the trace must not have invented a
+            // twin side.
+            acc.check("twin load (no twin)", self.twin_load, 0);
+            acc.check("twin migration (no twin)", self.twin_migration, 0);
+        } else {
+            acc.check("twin load", self.twin_load, twin_load);
+            acc.check("twin migration", self.twin_migration, twin_migration);
+        }
+        acc.check("clock regressions", self.clock_regressions, 0);
+
+        AuditReport {
+            pass: acc.first.is_none(),
+            checks: acc.checks,
+            events: self.events,
+            first_divergence: acc.first,
+        }
+    }
+}
+
+/// Outcome of [`LedgerAuditor::verify`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AuditReport {
+    /// All checks agreed.
+    pub pass: bool,
+    /// How many ledger comparisons ran.
+    pub checks: usize,
+    /// How many events fed the derivation.
+    pub events: u64,
+    /// The first disagreement, as `"<ledger>: derived X != ledger Y"`;
+    /// `None` when `pass`.
+    pub first_divergence: Option<String>,
+}
+
+impl AuditReport {
+    /// JSON form (for `--metrics-out` consumers and bench summaries).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .with("pass", self.pass)
+            .with("checks", self.checks)
+            .with("events", self.events);
+        if let Some(d) = &self.first_divergence {
+            j = j.with("first_divergence", d.as_str());
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reload(clock: u64, tenant: &str, m: usize, cycles: u64, twin: bool) -> TraceEvent {
+        TraceEvent {
+            clock,
+            kind: EventKind::RegionReload,
+            tenant: tenant.into(),
+            macro_id: Some(m),
+            cycles,
+            twin,
+            detail: 0,
+            class: None,
+        }
+    }
+
+    #[test]
+    fn auditor_accumulates_analytic_and_twin_sides_separately() {
+        let evs = vec![
+            reload(0, "a", 0, 100, false),
+            reload(0, "a", 0, 100, true),
+            reload(5, "b", 1, 40, false),
+            TraceEvent { kind: EventKind::MigrateSpan, ..reload(9, "a", 1, 30, false) },
+        ];
+        let a = LedgerAuditor::replay(&evs);
+        assert_eq!(a.events(), 4);
+        assert_eq!(a.fleet_load_cycles(), 140);
+        assert_eq!(a.fleet_migration_cycles(), 30);
+        assert_eq!(a.clock_regressions(), 0);
+    }
+
+    #[test]
+    fn clock_regression_is_counted() {
+        let a = LedgerAuditor::replay(&[reload(10, "a", 0, 1, false), reload(3, "a", 0, 1, false)]);
+        assert_eq!(a.clock_regressions(), 1);
+    }
+}

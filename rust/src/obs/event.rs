@@ -1,0 +1,204 @@
+//! The typed trace-event schema: what the fleet records, stamped with
+//! the deterministic virtual clock.
+//!
+//! Every event carries the same five coordinates — virtual clock, tenant,
+//! (optional) macro, cycle charge, twin flag — so any sink can re-derive
+//! per-tenant and per-macro views without knowing which subsystem emitted
+//! it. The `detail` field is kind-specific payload (batch size, region
+//! width, deferral count, ...); see [`EventKind`] for the per-kind
+//! meaning. Events serialize to/from JSON ([`TraceEvent::to_json`]) so
+//! the Chrome exporter's `args` blobs round-trip losslessly.
+
+use crate::fleet::QosClass;
+use crate::util::json::Json;
+
+/// What happened. The set is deliberately closed and small: later PRs
+/// (sharding, buffer-traffic ledgers) extend `detail` semantics or add
+/// kinds here, and every exporter/auditor handles the full set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// A submit passed admission control (`detail` = requests admitted;
+    /// `cycles` = the projected dispatch cost the controller saw).
+    Admit,
+    /// A submit was refused — rate limit or budget (`detail` = requests
+    /// refused; `cycles` = the projected cost that was refused).
+    Reject,
+    /// A queued head batch was passed over by admission control
+    /// (`detail` = its deferral count after this pass-over).
+    Defer,
+    /// Queued requests left the queue for serving (`cycles` = the queue
+    /// delay each waited, `detail` = requests dispatched).
+    DispatchStart,
+    /// A batch finished serving (`cycles` = its compute charge,
+    /// `detail` = batch size).
+    DispatchEnd,
+    /// A weight load charged the reload ledger: one region of a hot-swap
+    /// or one whole-macro paging event (`cycles` = the charge, `detail`
+    /// = region width in bitlines / paging event index). Emitted twice
+    /// under twin execution: once analytic, once with
+    /// [`TraceEvent::twin`] set — the mirrored charge
+    /// `CimMacro::load_columns` books.
+    RegionReload,
+    /// A resident tenant lost its columns (`cycles` = 0: eviction itself
+    /// is free, the victim pays on return).
+    Evict,
+    /// One compaction move charged the migration ledger (`cycles` = the
+    /// charge, `detail` = span width in bitlines). Twin-mirrored like
+    /// [`EventKind::RegionReload`], matching `CimMacro::migrate_columns`.
+    MigrateSpan,
+    /// The digital twin executed passes on one macro for a batch
+    /// (`cycles` = twin compute cycles, `detail` = ADC conversions) —
+    /// always [`TraceEvent::twin`].
+    TwinPass,
+    /// A compaction pass committed (`cycles` = total migration charge,
+    /// `detail` = spans moved).
+    Compaction,
+}
+
+impl EventKind {
+    /// Every kind, in schema order — exporters and counters index by
+    /// [`EventKind::index`] into arrays of this length.
+    pub const ALL: [EventKind; 10] = [
+        EventKind::Admit,
+        EventKind::Reject,
+        EventKind::Defer,
+        EventKind::DispatchStart,
+        EventKind::DispatchEnd,
+        EventKind::RegionReload,
+        EventKind::Evict,
+        EventKind::MigrateSpan,
+        EventKind::TwinPass,
+        EventKind::Compaction,
+    ];
+
+    /// Position in [`EventKind::ALL`] (a dense counter index).
+    pub fn index(&self) -> usize {
+        EventKind::ALL.iter().position(|k| k == self).expect("ALL is exhaustive")
+    }
+
+    /// Stable wire/export name (snake_case; also the Prometheus label
+    /// value and the `trace_scenario.*` bench-counter key).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EventKind::Admit => "admit",
+            EventKind::Reject => "reject",
+            EventKind::Defer => "defer",
+            EventKind::DispatchStart => "dispatch_start",
+            EventKind::DispatchEnd => "dispatch_end",
+            EventKind::RegionReload => "region_reload",
+            EventKind::Evict => "evict",
+            EventKind::MigrateSpan => "migrate_span",
+            EventKind::TwinPass => "twin_pass",
+            EventKind::Compaction => "compaction",
+        }
+    }
+
+    /// Parse a wire name (see [`EventKind::as_str`]).
+    pub fn parse(s: &str) -> Option<EventKind> {
+        EventKind::ALL.iter().copied().find(|k| k.as_str() == s)
+    }
+}
+
+/// One recorded event. All timing is the deterministic virtual
+/// device-cycle clock (`QosScheduler::now`) — never wall clock — so two
+/// identical runs produce byte-identical traces.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Virtual device-cycle clock at emission. Every event of one batch
+    /// shares the batch-start clock (the clock advances only when a
+    /// batch's charges commit), so the stream is non-decreasing.
+    pub clock: u64,
+    /// What happened.
+    pub kind: EventKind,
+    /// Tenant (model name) the event is attributed to; `"fleet"` for
+    /// pool-wide events like [`EventKind::Compaction`].
+    pub tenant: String,
+    /// Physical macro the event landed on (`None` for queue/admission
+    /// events that touch no macro).
+    pub macro_id: Option<usize>,
+    /// Device cycles this event charged (0 for free events; see the
+    /// per-kind meaning on [`EventKind`]).
+    pub cycles: u64,
+    /// Whether this is the digital twin's mirrored side of a charge
+    /// (twin events re-derive the twin ledger; analytic events the
+    /// fleet/macro/tenant ledgers — never both).
+    pub twin: bool,
+    /// Kind-specific payload (see [`EventKind`]).
+    pub detail: u64,
+    /// The tenant's QoS class at emission, when known.
+    pub class: Option<QosClass>,
+}
+
+impl TraceEvent {
+    /// Machine-readable form — the Chrome exporter's `args` payload.
+    /// [`TraceEvent::from_json`] inverts it exactly.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .with("clock", self.clock)
+            .with("kind", self.kind.as_str())
+            .with("tenant", self.tenant.as_str())
+            .with("cycles", self.cycles)
+            .with("twin", self.twin)
+            .with("detail", self.detail);
+        if let Some(m) = self.macro_id {
+            j = j.with("macro", m);
+        }
+        if let Some(c) = self.class {
+            j = j.with("class", c.as_str());
+        }
+        j
+    }
+
+    /// Parse the JSON form ([`TraceEvent::to_json`]); `None` when a
+    /// required field is missing or malformed.
+    pub fn from_json(j: &Json) -> Option<TraceEvent> {
+        Some(TraceEvent {
+            clock: j.get("clock").as_usize()? as u64,
+            kind: EventKind::parse(j.get("kind").as_str()?)?,
+            tenant: j.get("tenant").as_str()?.to_string(),
+            macro_id: j.get("macro").as_usize(),
+            cycles: j.get("cycles").as_usize()? as u64,
+            twin: j.get("twin").as_bool()?,
+            detail: j.get("detail").as_usize()? as u64,
+            class: j.get("class").as_str().and_then(QosClass::parse),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_roundtrip_and_index_is_dense() {
+        for (i, k) in EventKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i);
+            assert_eq!(EventKind::parse(k.as_str()), Some(*k));
+        }
+        assert_eq!(EventKind::parse("mystery"), None);
+    }
+
+    #[test]
+    fn event_json_roundtrips_with_and_without_optionals() {
+        let full = TraceEvent {
+            clock: 1234,
+            kind: EventKind::RegionReload,
+            tenant: "hi".into(),
+            macro_id: Some(3),
+            cycles: 108,
+            twin: true,
+            detail: 108,
+            class: Some(QosClass::Interactive),
+        };
+        assert_eq!(TraceEvent::from_json(&full.to_json()), Some(full.clone()));
+        let bare = TraceEvent {
+            macro_id: None,
+            class: None,
+            kind: EventKind::Admit,
+            twin: false,
+            ..full
+        };
+        assert_eq!(TraceEvent::from_json(&bare.to_json()), Some(bare));
+        assert_eq!(TraceEvent::from_json(&Json::obj()), None);
+    }
+}

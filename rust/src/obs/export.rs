@@ -1,0 +1,321 @@
+//! Exporters: Chrome trace-event JSON, Prometheus text exposition, and
+//! an ASCII per-macro timeline.
+//!
+//! All three are pure functions of sink state and are byte-deterministic:
+//! timestamps are virtual device cycles (never wall clock), maps are
+//! `BTreeMap`-ordered, and the JSON dumper is canonical — so two
+//! identical runs export identical bytes, making traces CI-comparable
+//! artifacts like `BENCH_fleet.json`.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+use super::event::{EventKind, TraceEvent};
+use super::hist::{CycleHistogram, Histograms, LaneHists};
+use super::sink::{FleetTrace, TraceLog};
+
+/// Export a recorded log as Chrome trace-event JSON (the
+/// `chrome://tracing` / Perfetto "JSON Array Format", object form).
+///
+/// Layout: pid 1 is the macro pool with one thread (track) per physical
+/// macro; pid 2 is the tenant view with one track per tenant. Both sets
+/// of tracks are declared up front from `num_macros` and `tenants` via
+/// metadata events, so every macro and tenant gets a complete track
+/// even when it recorded nothing. Ledger-bearing events
+/// (`RegionReload`/`MigrateSpan`/`TwinPass`) render as duration slices
+/// (`ph:"X"`, `dur` = cycle charge) on their macro's track;
+/// `DispatchEnd` as a slice on the tenant track; everything else as an
+/// instant. Each event's full schema rides in `args`, so
+/// [`events_from_chrome`] recovers the exact [`TraceEvent`] stream.
+pub fn chrome_trace(log: &TraceLog, num_macros: usize, tenants: &[String]) -> Json {
+    // Tenant → track id: the declared list first, then any tenant the
+    // log mentions that the caller missed (e.g. the synthetic "fleet"
+    // tenant on Compaction events), in sorted order for determinism.
+    let mut names: Vec<String> = tenants.to_vec();
+    let mut extras: Vec<String> = log
+        .events()
+        .map(|e| e.tenant.clone())
+        .filter(|t| !names.contains(t))
+        .collect();
+    extras.sort();
+    extras.dedup();
+    names.extend(extras);
+
+    let mut out: Vec<Json> = Vec::new();
+    let meta = |name: &str, pid: usize, tid: usize, label: &str| {
+        Json::obj()
+            .with("name", name)
+            .with("ph", "M")
+            .with("pid", pid)
+            .with("tid", tid)
+            .with("args", Json::obj().with("name", label))
+    };
+    out.push(meta("process_name", 1, 0, "cim macros"));
+    out.push(meta("process_name", 2, 0, "cim tenants"));
+    for m in 0..num_macros {
+        out.push(meta("thread_name", 1, m, &format!("macro {m}")));
+    }
+    for (i, t) in names.iter().enumerate() {
+        out.push(meta("thread_name", 2, i, &format!("tenant {t}")));
+    }
+
+    for ev in log.events() {
+        let on_macro_track = matches!(
+            ev.kind,
+            EventKind::RegionReload | EventKind::MigrateSpan | EventKind::TwinPass
+        );
+        let (pid, tid) = match ev.macro_id {
+            Some(m) if on_macro_track => (1usize, m),
+            _ => (2usize, names.iter().position(|n| n == &ev.tenant).unwrap_or(0)),
+        };
+        let ph = if on_macro_track || ev.kind == EventKind::DispatchEnd { "X" } else { "i" };
+        let mut j = Json::obj()
+            .with("name", ev.kind.as_str())
+            .with("cat", if ev.twin { "twin" } else { "fleet" })
+            .with("ph", ph)
+            .with("pid", pid)
+            .with("tid", tid)
+            .with("ts", ev.clock)
+            .with("args", ev.to_json());
+        if ph == "X" {
+            j = j.with("dur", ev.cycles);
+        } else {
+            // Thread-scoped instant, so it renders on its track.
+            j = j.with("s", "t");
+        }
+        out.push(j);
+    }
+
+    Json::obj()
+        .with("traceEvents", out)
+        .with("displayTimeUnit", "ms")
+}
+
+/// Recover the [`TraceEvent`] stream from a Chrome trace produced by
+/// [`chrome_trace`] (metadata events are skipped; every other event's
+/// `args` must parse).
+pub fn events_from_chrome(j: &Json) -> Result<Vec<TraceEvent>> {
+    let arr = j
+        .get("traceEvents")
+        .as_arr()
+        .ok_or_else(|| anyhow!("not a Chrome trace: missing traceEvents array"))?;
+    let mut out = Vec::new();
+    for (i, e) in arr.iter().enumerate() {
+        if e.get("ph").as_str() == Some("M") {
+            continue;
+        }
+        let ev = TraceEvent::from_json(e.get("args"))
+            .ok_or_else(|| anyhow!("traceEvents[{i}]: malformed args payload"))?;
+        out.push(ev);
+    }
+    Ok(out)
+}
+
+fn prom_hist(out: &mut String, metric: &str, label_key: &str, label_val: &str, h: &CycleHistogram) {
+    let mut cumulative = 0u64;
+    for (i, b) in h.buckets().iter().enumerate() {
+        if *b == 0 {
+            continue;
+        }
+        cumulative += b;
+        out.push_str(&format!(
+            "{metric}_bucket{{{label_key}=\"{label_val}\",le=\"{}\"}} {cumulative}\n",
+            CycleHistogram::bucket_ceiling(i)
+        ));
+    }
+    out.push_str(&format!(
+        "{metric}_bucket{{{label_key}=\"{label_val}\",le=\"+Inf\"}} {}\n",
+        h.count()
+    ));
+    out.push_str(&format!("{metric}_sum{{{label_key}=\"{label_val}\"}} {}\n", h.sum()));
+    out.push_str(&format!("{metric}_count{{{label_key}=\"{label_val}\"}} {}\n", h.count()));
+}
+
+/// Render a Prometheus text-exposition snapshot: per-kind event
+/// counters (lifetime totals, unaffected by ring eviction), the drop
+/// counter, an optional audit gauge, and the per-tenant / per-class
+/// cycle histograms. Deterministic: fixed metric order, `BTreeMap`
+/// label order, cumulative `le` buckets at power-of-two bounds.
+pub fn prometheus_text(log: &TraceLog, hist: &Histograms, audit_pass: Option<bool>) -> String {
+    let mut out = String::new();
+    out.push_str("# TYPE cim_trace_events_total counter\n");
+    for k in EventKind::ALL {
+        out.push_str(&format!(
+            "cim_trace_events_total{{kind=\"{}\"}} {}\n",
+            k.as_str(),
+            log.count(k)
+        ));
+    }
+    out.push_str("# TYPE cim_trace_events_dropped_total counter\n");
+    out.push_str(&format!("cim_trace_events_dropped_total {}\n", log.dropped()));
+    if let Some(pass) = audit_pass {
+        out.push_str("# TYPE cim_ledger_audit_pass gauge\n");
+        out.push_str(&format!("cim_ledger_audit_pass {}\n", u64::from(pass)));
+    }
+    let lanes: [(&str, fn(&LaneHists) -> &CycleHistogram); 3] = [
+        ("cim_queue_delay_cycles", |l| &l.queue_delay),
+        ("cim_pass_cycles", |l| &l.pass),
+        ("cim_reload_cycles", |l| &l.reload),
+    ];
+    for (metric, pick) in lanes {
+        out.push_str(&format!("# TYPE {metric} histogram\n"));
+        for (tenant, l) in hist.tenants() {
+            prom_hist(&mut out, metric, "tenant", tenant, pick(l));
+        }
+        for (class, l) in hist.classes() {
+            prom_hist(&mut out, metric, "class", class, pick(l));
+        }
+    }
+    out
+}
+
+impl FleetTrace {
+    /// Convenience: lock the bundle's log and export
+    /// [`chrome_trace`] JSON.
+    pub fn chrome(&self, num_macros: usize, tenants: &[String]) -> Json {
+        chrome_trace(&self.log.lock().unwrap(), num_macros, tenants)
+    }
+
+    /// Convenience: lock the bundle's log + histograms and render
+    /// [`prometheus_text`].
+    pub fn prometheus(&self, audit_pass: Option<bool>) -> String {
+        prometheus_text(&self.log.lock().unwrap(), &self.hist.lock().unwrap(), audit_pass)
+    }
+}
+
+/// Render a fixed-width ASCII timeline, one row per macro, over the
+/// trace's full virtual-clock span. Cell symbols: `R` reload, `M`
+/// migration, `P` twin pass, `·` idle (twin-mirrored reload/migrate
+/// events are skipped so each charge paints once). A cell covers
+/// `span/width` cycles; an event paints every cell its
+/// `[clock, clock+cycles]` range touches.
+pub fn ascii_timeline(events: &[TraceEvent], width: usize) -> String {
+    let width = width.max(8);
+    let num_macros = events
+        .iter()
+        .filter_map(|e| e.macro_id)
+        .max()
+        .map(|m| m + 1)
+        .unwrap_or(0);
+    if num_macros == 0 {
+        return "(no macro events in trace)\n".to_string();
+    }
+    let span = events.iter().map(|e| e.clock + e.cycles).max().unwrap_or(0).max(1);
+    let mut rows = vec![vec!['·'; width]; num_macros];
+    for ev in events {
+        let sym = match ev.kind {
+            EventKind::RegionReload if !ev.twin => 'R',
+            EventKind::MigrateSpan if !ev.twin => 'M',
+            EventKind::TwinPass => 'P',
+            _ => continue,
+        };
+        let Some(m) = ev.macro_id else { continue };
+        let lo =
+            (((ev.clock as u128 * width as u128) / span as u128) as usize).min(width - 1);
+        let hi = ((((ev.clock + ev.cycles.max(1)) as u128 * width as u128) / span as u128)
+            as usize)
+            .clamp(lo, width - 1);
+        for cell in &mut rows[m][lo..=hi] {
+            *cell = sym;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "virtual clock 0..{span} cycles, {width} cells ({} cycles/cell)\n",
+        (span + width as u64 - 1) / width as u64
+    ));
+    for (m, row) in rows.iter().enumerate() {
+        out.push_str(&format!("macro {m:>3} |{}|\n", row.iter().collect::<String>()));
+    }
+    out.push_str("R reload · M migration · P twin pass\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sink::TraceSink;
+    use super::*;
+
+    fn ev(clock: u64, kind: EventKind, tenant: &str, m: Option<usize>, cycles: u64) -> TraceEvent {
+        TraceEvent {
+            clock,
+            kind,
+            tenant: tenant.into(),
+            macro_id: m,
+            cycles,
+            twin: false,
+            detail: 1,
+            class: None,
+        }
+    }
+
+    fn sample_log() -> TraceLog {
+        let mut log = TraceLog::new(64);
+        log.record(&ev(0, EventKind::Admit, "hi", None, 900));
+        log.record(&ev(0, EventKind::RegionReload, "hi", Some(0), 108));
+        log.record(&ev(108, EventKind::DispatchEnd, "hi", None, 800));
+        log.record(&ev(908, EventKind::MigrateSpan, "lo", Some(1), 82));
+        log.record(&TraceEvent { twin: true, ..ev(908, EventKind::TwinPass, "lo", Some(1), 50) });
+        log
+    }
+
+    #[test]
+    fn chrome_trace_declares_every_track_and_roundtrips() {
+        let log = sample_log();
+        let j = chrome_trace(&log, 2, &["hi".to_string(), "lo".to_string()]);
+        let parsed = Json::parse(&j.dump()).expect("exporter emits valid JSON");
+        let arr = parsed.get("traceEvents").as_arr().unwrap();
+        // 2 process_name + 2 macro tracks + 2 tenant tracks + 5 events.
+        let metas: Vec<&Json> =
+            arr.iter().filter(|e| e.get("ph").as_str() == Some("M")).collect();
+        assert_eq!(metas.len(), 6);
+        let back = events_from_chrome(&parsed).unwrap();
+        let originals: Vec<TraceEvent> = log.events().cloned().collect();
+        assert_eq!(back, originals, "args payloads recover the exact stream");
+    }
+
+    #[test]
+    fn chrome_trace_adds_undeclared_tenants_deterministically() {
+        let log = sample_log();
+        let j = chrome_trace(&log, 2, &["hi".to_string()]);
+        let txt = j.dump();
+        assert!(txt.contains("tenant lo"), "log-only tenant still gets a track");
+    }
+
+    #[test]
+    fn events_from_chrome_rejects_garbage() {
+        assert!(events_from_chrome(&Json::obj()).is_err());
+        let bad = Json::obj().with(
+            "traceEvents",
+            vec![Json::obj().with("ph", "X").with("args", Json::obj())],
+        );
+        assert!(events_from_chrome(&bad).is_err());
+    }
+
+    #[test]
+    fn prometheus_snapshot_has_counters_and_cumulative_buckets() {
+        let log = sample_log();
+        let mut hist = Histograms::default();
+        for e in log.events() {
+            hist.record(e);
+        }
+        let text = prometheus_text(&log, &hist, Some(true));
+        assert!(text.contains("cim_trace_events_total{kind=\"region_reload\"} 1\n"));
+        assert!(text.contains("cim_trace_events_total{kind=\"evict\"} 0\n"));
+        assert!(text.contains("cim_ledger_audit_pass 1\n"));
+        assert!(text.contains("cim_reload_cycles_bucket{tenant=\"hi\",le=\"127\"} 1\n"));
+        assert!(text.contains("cim_reload_cycles_bucket{tenant=\"hi\",le=\"+Inf\"} 1\n"));
+        assert!(text.contains("cim_reload_cycles_sum{tenant=\"hi\"} 108\n"));
+    }
+
+    #[test]
+    fn ascii_timeline_paints_macro_rows() {
+        let events: Vec<TraceEvent> = sample_log().events().cloned().collect();
+        let t = ascii_timeline(&events, 40);
+        assert!(t.contains("macro   0 |"));
+        assert!(t.contains("macro   1 |"));
+        assert!(t.contains('R') && t.contains('M') && t.contains('P'));
+        assert_eq!(ascii_timeline(&[], 40), "(no macro events in trace)\n");
+    }
+}

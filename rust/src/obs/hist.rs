@@ -1,0 +1,291 @@
+//! Log-bucketed cycle histograms, aggregated per tenant and per QoS
+//! class.
+//!
+//! The QoS scheduler's `TenantStats` keep running sums (means only);
+//! the histograms here answer the tail questions — p99 queue delay,
+//! worst reload burst — that sums cannot. Buckets are powers of two
+//! (bucket `i ≥ 1` holds values in `[2^(i-1), 2^i)`; bucket 0 holds
+//! exactly 0), so recording is two instructions and merging is
+//! element-wise — deterministic, allocation-free, and cheap enough to
+//! run inline as a [`TraceSink`](super::TraceSink).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::event::{EventKind, TraceEvent};
+use super::sink::TraceSink;
+
+/// Number of histogram buckets: bucket 0 for zero, buckets 1..=64 for
+/// each power-of-two magnitude of a `u64`.
+pub const HIST_BUCKETS: usize = 65;
+
+/// A fixed-shape log₂ histogram of cycle counts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CycleHistogram {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum: u64,
+}
+
+impl Default for CycleHistogram {
+    fn default() -> CycleHistogram {
+        CycleHistogram { buckets: [0; HIST_BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl CycleHistogram {
+    /// The bucket index `v` lands in: 0 for 0, else `floor(log2 v) + 1`.
+    pub fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            64 - v.leading_zeros() as usize
+        }
+    }
+
+    /// The largest value bucket `i` can hold (`0`, `2^i - 1`, ...,
+    /// saturating at `u64::MAX`) — the Prometheus `le` bound.
+    pub fn bucket_ceiling(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    /// Record one observation.
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all observations (saturating).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// The raw per-bucket counts (index with [`CycleHistogram::bucket_ceiling`]).
+    pub fn buckets(&self) -> &[u64; HIST_BUCKETS] {
+        &self.buckets
+    }
+
+    /// Element-wise merge of another histogram into this one.
+    pub fn merge(&mut self, other: &CycleHistogram) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    /// Upper bound of the bucket containing the `q`-quantile
+    /// (`0.0 ..= 1.0`); 0 when empty. Log-bucketed, so the answer is an
+    /// order-of-magnitude bound, not an exact rank.
+    pub fn quantile_ceiling(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= rank {
+                return Self::bucket_ceiling(i);
+            }
+        }
+        Self::bucket_ceiling(HIST_BUCKETS - 1)
+    }
+
+    /// JSON form: count, sum, and the non-empty buckets as
+    /// `{le, count}` pairs (deterministic order).
+    pub fn to_json(&self) -> Json {
+        let nonzero: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| **b > 0)
+            .map(|(i, b)| Json::obj().with("le", Self::bucket_ceiling(i)).with("count", *b))
+            .collect();
+        Json::obj()
+            .with("count", self.count)
+            .with("sum", self.sum)
+            .with("buckets", nonzero)
+    }
+}
+
+/// The three per-lane histograms the trace feeds: queue delay
+/// (`DispatchStart`), pass/compute time (`DispatchEnd`), and reload
+/// charges (`RegionReload`, analytic side only).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LaneHists {
+    /// Cycles each dispatched batch waited in its queue.
+    pub queue_delay: CycleHistogram,
+    /// Compute cycles each served batch charged.
+    pub pass: CycleHistogram,
+    /// Cycles each individual reload (region or paging event) charged.
+    pub reload: CycleHistogram,
+}
+
+impl LaneHists {
+    fn observe(&mut self, ev: &TraceEvent) {
+        match ev.kind {
+            EventKind::DispatchStart => self.queue_delay.record(ev.cycles),
+            EventKind::DispatchEnd => self.pass.record(ev.cycles),
+            EventKind::RegionReload if !ev.twin => self.reload.record(ev.cycles),
+            _ => {}
+        }
+    }
+
+    /// JSON form of the three lanes.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("queue_delay", self.queue_delay.to_json())
+            .with("pass", self.pass.to_json())
+            .with("reload", self.reload.to_json())
+    }
+}
+
+/// A sink aggregating [`LaneHists`] per tenant and per QoS class.
+#[derive(Debug, Clone, Default)]
+pub struct Histograms {
+    tenants: BTreeMap<String, LaneHists>,
+    classes: BTreeMap<String, LaneHists>,
+}
+
+impl Histograms {
+    /// The lanes for one tenant, if it recorded anything.
+    pub fn tenant(&self, name: &str) -> Option<&LaneHists> {
+        self.tenants.get(name)
+    }
+
+    /// The lanes for one QoS class name (`QosClass::as_str`), if any
+    /// tenant of that class recorded anything.
+    pub fn class(&self, name: &str) -> Option<&LaneHists> {
+        self.classes.get(name)
+    }
+
+    /// All tenant lanes, name-ordered.
+    pub fn tenants(&self) -> impl Iterator<Item = (&String, &LaneHists)> {
+        self.tenants.iter()
+    }
+
+    /// All class lanes, name-ordered.
+    pub fn classes(&self) -> impl Iterator<Item = (&String, &LaneHists)> {
+        self.classes.iter()
+    }
+
+    /// JSON form: `{tenants: {...}, classes: {...}}`.
+    pub fn to_json(&self) -> Json {
+        let mut tenants = Json::obj();
+        for (name, lanes) in &self.tenants {
+            tenants = tenants.with(name.as_str(), lanes.to_json());
+        }
+        let mut classes = Json::obj();
+        for (name, lanes) in &self.classes {
+            classes = classes.with(name.as_str(), lanes.to_json());
+        }
+        Json::obj().with("tenants", tenants).with("classes", classes)
+    }
+}
+
+impl TraceSink for Histograms {
+    fn record(&mut self, ev: &TraceEvent) {
+        if !matches!(
+            ev.kind,
+            EventKind::DispatchStart | EventKind::DispatchEnd | EventKind::RegionReload
+        ) {
+            return;
+        }
+        self.tenants.entry(ev.tenant.clone()).or_default().observe(ev);
+        if let Some(c) = ev.class {
+            self.classes.entry(c.as_str().to_string()).or_default().observe(ev);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::QosClass;
+
+    #[test]
+    fn bucket_index_is_floor_log2_plus_one() {
+        assert_eq!(CycleHistogram::bucket_index(0), 0);
+        assert_eq!(CycleHistogram::bucket_index(1), 1);
+        assert_eq!(CycleHistogram::bucket_index(2), 2);
+        assert_eq!(CycleHistogram::bucket_index(3), 2);
+        assert_eq!(CycleHistogram::bucket_index(4), 3);
+        assert_eq!(CycleHistogram::bucket_index(u64::MAX), 64);
+        // Every value fits under its bucket's ceiling.
+        for v in [0u64, 1, 2, 3, 7, 8, 1023, 1024, u64::MAX] {
+            assert!(v <= CycleHistogram::bucket_ceiling(CycleHistogram::bucket_index(v)));
+        }
+    }
+
+    #[test]
+    fn record_merge_and_quantiles() {
+        let mut h = CycleHistogram::default();
+        for v in [0u64, 1, 5, 5, 9, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum(), 1020);
+        // p50 of six samples = 3rd ranked = 5, whose bucket tops at 7.
+        assert_eq!(h.quantile_ceiling(0.5), 7);
+        assert_eq!(h.quantile_ceiling(1.0), 1023);
+        let mut other = CycleHistogram::default();
+        other.record(1000);
+        h.merge(&other);
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.sum(), 2020);
+        assert_eq!(CycleHistogram::default().quantile_ceiling(0.99), 0);
+    }
+
+    #[test]
+    fn sink_routes_kinds_to_lanes_per_tenant_and_class() {
+        let mut hists = Histograms::default();
+        let base = TraceEvent {
+            clock: 0,
+            kind: EventKind::DispatchStart,
+            tenant: "hi".into(),
+            macro_id: None,
+            cycles: 12,
+            twin: false,
+            detail: 2,
+            class: Some(QosClass::Interactive),
+        };
+        hists.record(&base);
+        hists.record(&TraceEvent { kind: EventKind::DispatchEnd, cycles: 400, ..base.clone() });
+        hists.record(&TraceEvent {
+            kind: EventKind::RegionReload,
+            cycles: 108,
+            macro_id: Some(0),
+            ..base.clone()
+        });
+        // Twin mirrors and unrelated kinds stay out of the lanes.
+        hists.record(&TraceEvent {
+            kind: EventKind::RegionReload,
+            twin: true,
+            cycles: 108,
+            ..base.clone()
+        });
+        hists.record(&TraceEvent { kind: EventKind::Evict, ..base.clone() });
+        let t = hists.tenant("hi").unwrap();
+        assert_eq!(t.queue_delay.count(), 1);
+        assert_eq!(t.pass.count(), 1);
+        assert_eq!(t.reload.count(), 1);
+        assert_eq!(t.reload.sum(), 108);
+        let c = hists.class(QosClass::Interactive.as_str()).unwrap();
+        assert_eq!(c.queue_delay.count() + c.pass.count() + c.reload.count(), 3);
+        assert!(hists.tenant("lo").is_none());
+    }
+}

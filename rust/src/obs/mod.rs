@@ -1,0 +1,47 @@
+//! Deterministic fleet observability: a bounded trace bus on the
+//! virtual device-cycle clock, plus the aggregators and exporters built
+//! on it.
+//!
+//! The fleet makes rich runtime decisions — QoS admission and
+//! deferral, region hot-swaps, evictions, twin-verified migrations —
+//! but a `FleetSnapshot` only shows the end-of-run totals. This module
+//! records the decisions themselves as typed [`TraceEvent`]s, each
+//! stamped with the same deterministic virtual clock the cycle ledgers
+//! use, so "why was this request late" and "which tenant caused that
+//! reload storm" become answerable — and two identical runs produce
+//! byte-identical traces, making them CI-comparable artifacts.
+//!
+//! The pieces:
+//! - [`TraceEvent`] / [`EventKind`] — the closed event schema (see the
+//!   table in `docs/ARCHITECTURE.md`).
+//! - [`TraceSink`] / [`SharedSink`] — where events go. Emitters
+//!   (`Fleet`, `QosScheduler`) hold an `Option<SharedSink>`; `None`
+//!   (the default) costs one branch per site and never constructs the
+//!   event.
+//! - [`TraceLog`] — bounded ring buffer with eviction-proof per-kind
+//!   totals; [`Tee`] fans one stream to several sinks; [`NoopSink`]
+//!   discards.
+//! - [`Histograms`] — per-tenant / per-class log₂ [`CycleHistogram`]s
+//!   of queue delay, pass time, and reload charges.
+//! - [`LedgerAuditor`] — re-derives the four cycle ledgers (fleet ==
+//!   per-macro == per-tenant == twin) from events alone and diffs them
+//!   against the snapshot with a first-divergence report.
+//! - [`chrome_trace`] / [`prometheus_text`] / [`ascii_timeline`] —
+//!   deterministic exporters (`cim-adapt fleet --trace-out /
+//!   --metrics-out`, `cim-adapt inspect --timeline`).
+//! - [`FleetTrace`] — the standard bundle of log + histograms + audit
+//!   behind one sink; see `FleetServer::start_with_trace`.
+
+mod audit;
+mod event;
+mod export;
+mod hist;
+mod sink;
+
+pub use audit::{AuditReport, LedgerAuditor};
+pub use event::{EventKind, TraceEvent};
+pub use export::{ascii_timeline, chrome_trace, events_from_chrome, prometheus_text};
+pub use hist::{CycleHistogram, Histograms, LaneHists, HIST_BUCKETS};
+pub use sink::{FleetTrace, NoopSink, SharedSink, Tee, TraceLog, TraceSink, DEFAULT_TRACE_CAPACITY};
+
+pub(crate) use sink::emit;

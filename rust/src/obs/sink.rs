@@ -1,0 +1,255 @@
+//! Sinks: where trace events go.
+//!
+//! The contract is deliberately tiny — [`TraceSink::record`] takes one
+//! event by reference — so a sink can be a bounded ring buffer
+//! ([`TraceLog`]), an online aggregator ([`super::Histograms`],
+//! [`super::LedgerAuditor`]), or a fan-out ([`Tee`]) without the
+//! emitters knowing. Emitters hold an `Option<SharedSink>`; `None`
+//! (the default) means tracing is off and each emission site pays
+//! exactly one branch — the event is never even constructed
+//! (see [`emit`]).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use super::audit::LedgerAuditor;
+use super::event::{EventKind, TraceEvent};
+use super::hist::Histograms;
+
+/// Default [`TraceLog`] ring capacity (events). 64Ki events bound the
+/// log to a few MiB however long the run; `TraceLog::dropped` records
+/// how many fell off the head.
+pub const DEFAULT_TRACE_CAPACITY: usize = 1 << 16;
+
+/// Receives trace events as they happen.
+///
+/// `Send + Debug` because the fleet (and the sink handle inside it)
+/// crosses into the `FleetServer` dispatcher thread, and the fleet's
+/// containers want to stay debug-printable. Sinks must not block or
+/// panic: they run inline on the dispatch path under the shared mutex.
+pub trait TraceSink: Send + std::fmt::Debug {
+    /// Record one event. Called in emission order; `ev.clock` is
+    /// non-decreasing across calls on one fleet.
+    fn record(&mut self, ev: &TraceEvent);
+}
+
+/// A shareable, thread-safe handle to any sink. The emitting side
+/// (`Fleet`, `QosScheduler`) and the exporting side (CLI, benches,
+/// tests) each hold clones; the mutex serializes emission against
+/// export.
+pub type SharedSink = Arc<Mutex<dyn TraceSink>>;
+
+/// Record an event into an optional sink, building it lazily.
+///
+/// This is the one emission helper every instrumented site uses: when
+/// `sink` is `None` the closure never runs, so the traced-off hot path
+/// pays a single branch — no `String` clones, no event construction.
+/// Taking the field reference (rather than `&self`) keeps borrows
+/// precise at call sites that hold live `&mut` borrows of sibling
+/// fields.
+pub(crate) fn emit(sink: &Option<SharedSink>, make: impl FnOnce() -> TraceEvent) {
+    if let Some(s) = sink {
+        let ev = make();
+        s.lock().unwrap().record(&ev);
+    }
+}
+
+/// A sink that discards everything — for measuring pure emission
+/// overhead or satisfying an API that wants *a* sink.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoopSink;
+
+impl TraceSink for NoopSink {
+    fn record(&mut self, _ev: &TraceEvent) {}
+}
+
+/// Bounded, deterministic event ring buffer.
+///
+/// Keeps the most recent `capacity` events (older ones fall off the
+/// head, counted in [`TraceLog::dropped`]) plus per-kind totals that
+/// survive eviction — so Prometheus counters and bench counters stay
+/// exact even when the ring wrapped.
+#[derive(Debug)]
+pub struct TraceLog {
+    cap: usize,
+    events: VecDeque<TraceEvent>,
+    counts: [u64; EventKind::ALL.len()],
+    dropped: u64,
+}
+
+impl TraceLog {
+    /// A ring holding at most `capacity` events (minimum 1).
+    pub fn new(capacity: usize) -> TraceLog {
+        TraceLog {
+            cap: capacity.max(1),
+            events: VecDeque::with_capacity(capacity.max(1).min(DEFAULT_TRACE_CAPACITY)),
+            counts: [0; EventKind::ALL.len()],
+            dropped: 0,
+        }
+    }
+
+    /// The retained events, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter()
+    }
+
+    /// Number of events currently retained (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when nothing has been retained.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events evicted off the head because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Lifetime count of `kind` events recorded — NOT affected by ring
+    /// eviction.
+    pub fn count(&self, kind: EventKind) -> u64 {
+        self.counts[kind.index()]
+    }
+
+    /// Lifetime count of all events recorded.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+impl TraceSink for TraceLog {
+    fn record(&mut self, ev: &TraceEvent) {
+        self.counts[ev.kind.index()] += 1;
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev.clone());
+    }
+}
+
+/// Fans one event stream out to several sinks, in order.
+#[derive(Debug)]
+pub struct Tee {
+    sinks: Vec<SharedSink>,
+}
+
+impl Tee {
+    /// A tee over `sinks`; each recorded event reaches every sink.
+    pub fn new(sinks: Vec<SharedSink>) -> Tee {
+        Tee { sinks }
+    }
+}
+
+impl TraceSink for Tee {
+    fn record(&mut self, ev: &TraceEvent) {
+        for s in &self.sinks {
+            s.lock().unwrap().record(ev);
+        }
+    }
+}
+
+/// The standard tracing bundle: ring-buffer log + per-tenant histograms
+/// + online ledger audit, all fed from one [`Tee`].
+///
+/// Lifecycle: build one, hand [`FleetTrace::sink`] to
+/// `Fleet::set_trace` (or `FleetServer::start_with_trace`), run the
+/// scenario, then read/lock the three handles to export — the caller's
+/// `Arc` clones stay valid after the fleet (and its dispatcher thread)
+/// shut down.
+#[derive(Debug)]
+pub struct FleetTrace {
+    /// The bounded event ring (export via `chrome_trace` /
+    /// `ascii_timeline`, replay via `LedgerAuditor::replay`).
+    pub log: Arc<Mutex<TraceLog>>,
+    /// Per-tenant / per-class cycle histograms.
+    pub hist: Arc<Mutex<Histograms>>,
+    /// The online four-ledger audit (call `verify` against the final
+    /// `FleetSnapshot`).
+    pub audit: Arc<Mutex<LedgerAuditor>>,
+}
+
+impl FleetTrace {
+    /// A bundle whose log ring holds `capacity` events.
+    pub fn new(capacity: usize) -> FleetTrace {
+        FleetTrace {
+            log: Arc::new(Mutex::new(TraceLog::new(capacity))),
+            hist: Arc::new(Mutex::new(Histograms::default())),
+            audit: Arc::new(Mutex::new(LedgerAuditor::default())),
+        }
+    }
+
+    /// A fresh shared sink feeding all three aggregators.
+    pub fn sink(&self) -> SharedSink {
+        let log: SharedSink = self.log.clone();
+        let hist: SharedSink = self.hist.clone();
+        let audit: SharedSink = self.audit.clone();
+        Arc::new(Mutex::new(Tee::new(vec![log, hist, audit])))
+    }
+}
+
+impl Default for FleetTrace {
+    fn default() -> FleetTrace {
+        FleetTrace::new(DEFAULT_TRACE_CAPACITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(clock: u64, kind: EventKind) -> TraceEvent {
+        TraceEvent {
+            clock,
+            kind,
+            tenant: "t".into(),
+            macro_id: None,
+            cycles: clock,
+            twin: false,
+            detail: 0,
+            class: None,
+        }
+    }
+
+    #[test]
+    fn ring_evicts_oldest_but_counts_survive() {
+        let mut log = TraceLog::new(4);
+        for i in 0..10 {
+            log.record(&ev(i, EventKind::Admit));
+        }
+        assert_eq!(log.len(), 4);
+        assert_eq!(log.dropped(), 6);
+        assert_eq!(log.count(EventKind::Admit), 10);
+        assert_eq!(log.total(), 10);
+        let clocks: Vec<u64> = log.events().map(|e| e.clock).collect();
+        assert_eq!(clocks, vec![6, 7, 8, 9], "oldest fall off the head");
+    }
+
+    #[test]
+    fn emit_skips_event_construction_when_off() {
+        let mut built = false;
+        emit(&None, || {
+            built = true;
+            ev(0, EventKind::Admit)
+        });
+        assert!(!built, "no sink, no event");
+        let trace = FleetTrace::new(8);
+        let sink = Some(trace.sink());
+        emit(&sink, || ev(1, EventKind::Reject));
+        assert_eq!(trace.log.lock().unwrap().count(EventKind::Reject), 1);
+    }
+
+    #[test]
+    fn tee_fans_out_to_every_sink() {
+        let a: Arc<Mutex<TraceLog>> = Arc::new(Mutex::new(TraceLog::new(4)));
+        let b: Arc<Mutex<TraceLog>> = Arc::new(Mutex::new(TraceLog::new(4)));
+        let (sa, sb): (SharedSink, SharedSink) = (a.clone(), b.clone());
+        let mut tee = Tee::new(vec![sa, sb]);
+        tee.record(&ev(3, EventKind::Evict));
+        assert_eq!(a.lock().unwrap().total(), 1);
+        assert_eq!(b.lock().unwrap().total(), 1);
+    }
+}

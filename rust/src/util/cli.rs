@@ -64,6 +64,21 @@ impl Args {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// Distinguish the three shapes of an option: `None` when `--name`
+    /// was not passed at all, `Some(None)` when it was passed as a bare
+    /// flag, `Some(Some(v))` when it carried a value. Lets a command
+    /// give a "flag needs a FILE argument" error instead of silently
+    /// ignoring a bare `--timeline`.
+    pub fn flag_or_value(&self, name: &str) -> Option<Option<&str>> {
+        if let Some(v) = self.opts.get(name) {
+            Some(Some(v.as_str()))
+        } else if self.flags.iter().any(|f| f == name) {
+            Some(None)
+        } else {
+            None
+        }
+    }
+
     /// String option with a default.
     pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
@@ -170,6 +185,16 @@ mod tests {
         let a = parse("bench");
         assert_eq!(a.usize_or("iters", 10), 10);
         assert_eq!(a.str_or("model", "vgg9"), "vgg9");
+    }
+
+    #[test]
+    fn flag_or_value_distinguishes_three_shapes() {
+        let a = parse("inspect --timeline trace.json --viz");
+        assert_eq!(a.flag_or_value("timeline"), Some(Some("trace.json")));
+        assert_eq!(a.flag_or_value("viz"), Some(None));
+        assert_eq!(a.flag_or_value("absent"), None);
+        let b = parse("inspect --timeline=trace.json");
+        assert_eq!(b.flag_or_value("timeline"), Some(Some("trace.json")));
     }
 
     #[test]

@@ -1,15 +1,21 @@
 //! Minimal `log`-crate backend writing timestamped lines to stderr.
 //!
-//! Level comes from `CIM_ADAPT_LOG` (error|warn|info|debug|trace), default
-//! `info`. Install once with [`init`]; repeated calls are no-ops.
+//! Level comes from `CIM_ADAPT_LOG` (off|error|warn|info|debug|trace),
+//! default `info`. An unrecognized value falls back to `info` with a
+//! one-time warning on stderr (it used to be silent, which made typos
+//! like `CIM_ADAPT_LOG=verbose` invisible). Install once with [`init`];
+//! repeated calls are no-ops that return the level actually installed
+//! the first time — not whatever the environment happens to say now.
 
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use once_cell::sync::Lazy;
 
 static START: Lazy<Instant> = Lazy::new(Instant::now);
-static INSTALLED: AtomicBool = AtomicBool::new(false);
+static INSTALLED: OnceLock<log::LevelFilter> = OnceLock::new();
+static WARNED: AtomicBool = AtomicBool::new(false);
 
 struct StderrLogger {
     max: log::LevelFilter,
@@ -37,33 +43,76 @@ impl log::Log for StderrLogger {
     fn flush(&self) {}
 }
 
-/// Install the stderr logger (idempotent). Returns the active level.
+/// Map a `CIM_ADAPT_LOG` value to a level filter; `None` for an
+/// unrecognized (or unset) value.
+fn parse_level(v: &str) -> Option<log::LevelFilter> {
+    match v {
+        "off" => Some(log::LevelFilter::Off),
+        "error" => Some(log::LevelFilter::Error),
+        "warn" => Some(log::LevelFilter::Warn),
+        "info" => Some(log::LevelFilter::Info),
+        "debug" => Some(log::LevelFilter::Debug),
+        "trace" => Some(log::LevelFilter::Trace),
+        _ => None,
+    }
+}
+
+/// Install the stderr logger (idempotent). Returns the level actually
+/// installed: the first call decides it from `CIM_ADAPT_LOG`, and every
+/// later call returns that same level regardless of the environment
+/// (the `log` crate only accepts one logger per process). An
+/// unrecognized value warns once on stderr and falls back to `info`.
 pub fn init() -> log::LevelFilter {
-    let level = match std::env::var("CIM_ADAPT_LOG").as_deref() {
-        Ok("error") => log::LevelFilter::Error,
-        Ok("warn") => log::LevelFilter::Warn,
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        _ => log::LevelFilter::Info,
-    };
-    if !INSTALLED.swap(true, Ordering::SeqCst) {
+    *INSTALLED.get_or_init(|| {
+        let level = match std::env::var("CIM_ADAPT_LOG").as_deref() {
+            Ok(v) => parse_level(v).unwrap_or_else(|| {
+                if !WARNED.swap(true, Ordering::SeqCst) {
+                    eprintln!(
+                        "cim-adapt: unrecognized CIM_ADAPT_LOG value {v:?} \
+                         (expected off|error|warn|info|debug|trace); using info"
+                    );
+                }
+                log::LevelFilter::Info
+            }),
+            Err(_) => log::LevelFilter::Info,
+        };
         Lazy::force(&START);
         let logger = Box::leak(Box::new(StderrLogger { max: level }));
         let _ = log::set_logger(logger);
         log::set_max_level(level);
-    }
-    level
+        level
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    // One test drives the whole lifecycle: `init` installs a
+    // process-global logger, so separate #[test] fns (which share the
+    // process and may interleave env mutations) cannot independently
+    // observe first-call behaviour.
     #[test]
-    fn init_is_idempotent() {
-        let a = init();
-        let b = init();
-        assert_eq!(a, b);
-        log::info!("logging smoke test line");
+    fn init_installs_once_and_reports_the_installed_level() {
+        // Unrecognized values parse to None (triggering the fallback
+        // path), known ones — including the new `off` — to their level.
+        assert_eq!(parse_level("off"), Some(log::LevelFilter::Off));
+        assert_eq!(parse_level("error"), Some(log::LevelFilter::Error));
+        assert_eq!(parse_level("info"), Some(log::LevelFilter::Info));
+        assert_eq!(parse_level("trace"), Some(log::LevelFilter::Trace));
+        assert_eq!(parse_level("verbose"), None);
+        assert_eq!(parse_level(""), None);
+
+        std::env::set_var("CIM_ADAPT_LOG", "warn");
+        let first = init();
+        assert_eq!(first, log::LevelFilter::Warn);
+        // A repeated init with a *different* environment still reports
+        // the installed level (the old code re-parsed the env and
+        // returned a level that was never installed).
+        std::env::set_var("CIM_ADAPT_LOG", "trace");
+        assert_eq!(init(), first);
+        std::env::remove_var("CIM_ADAPT_LOG");
+        assert_eq!(init(), first);
+        log::info!("logging smoke test line (filtered at warn)");
     }
 }

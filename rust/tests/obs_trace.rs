@@ -1,0 +1,173 @@
+//! End-to-end observability tests: the PR-5 QoS overload scenario run
+//! with tracing on. The online `LedgerAuditor` must re-derive all four
+//! ledgers (fleet, per-macro, per-tenant, twin) bit-exactly from the
+//! event stream, the Chrome export must round-trip through `Json::parse`
+//! with one complete track per macro and per tenant, and the same
+//! scenario run twice must serialize byte-identically.
+
+use cim_adapt::arch::vgg9;
+use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec};
+use cim_adapt::fleet::{FleetSnapshot, QosClass, QosFleet};
+use cim_adapt::obs::{
+    ascii_timeline, events_from_chrome, EventKind, FleetTrace, LedgerAuditor,
+};
+use cim_adapt::util::json::Json;
+
+const TENANTS: [&str; 3] = ["hi", "lo1", "lo2"];
+
+/// The three-tenant overload mix from `benches/micro_fleet.rs` (and
+/// `examples/fleet_qos.rs`), traced: `hi` is latency-critical, all three
+/// overload a 1-macro co-resident twin pool, so every round forces
+/// reloads the trace must account for.
+fn traced_overload(rounds: usize, capacity: usize) -> (FleetTrace, FleetSnapshot) {
+    let spec = MacroSpec::default();
+    let mut cfg = FleetConfig {
+        num_macros: 1,
+        coresident: true,
+        execution: ExecutionMode::Twin,
+        qos_aging_cycles: 1_000_000,
+        ..FleetConfig::default()
+    };
+    for (name, class) in [
+        ("hi", QosClass::Interactive),
+        ("lo1", QosClass::Batch),
+        ("lo2", QosClass::Batch),
+    ] {
+        cfg.qos.entry(name.to_string()).or_default().class = class;
+    }
+    let mut fleet = QosFleet::new(&cfg, &spec);
+    let trace = FleetTrace::new(capacity);
+    fleet.fleet_mut().set_trace(Some(trace.sink()));
+    for (name, s) in [("hi", 0.04), ("lo1", 0.03), ("lo2", 0.05)] {
+        fleet.register(name, vgg9().scaled(s), false).unwrap();
+    }
+    let img = vec![0.5f32; 64];
+    for _ in 0..rounds {
+        for m in ["lo1", "lo2", "hi"] {
+            let _ = fleet.submit(m, vec![img.clone(), img.clone()]).unwrap();
+        }
+    }
+    fleet.drain().unwrap();
+    let snap = fleet.snapshot();
+    (trace, snap)
+}
+
+fn tenant_names() -> Vec<String> {
+    TENANTS.iter().map(|s| s.to_string()).collect()
+}
+
+#[test]
+fn audit_rederives_all_four_ledgers_online_and_offline() {
+    let (trace, snap) = traced_overload(6, 1 << 16);
+    let online = trace.audit.lock().unwrap().verify(&snap);
+    assert!(
+        online.pass,
+        "online audit must pass, first divergence: {:?}",
+        online.first_divergence
+    );
+    assert!(online.checks > 0 && online.events > 0);
+    // Offline replay of the recorded ring reaches the same verdict and
+    // the same derived totals as the fleet's own ledgers.
+    let log = trace.log.lock().unwrap();
+    assert_eq!(log.dropped(), 0, "default-sized ring must hold the scenario");
+    let offline = LedgerAuditor::replay(log.events());
+    let report = offline.verify(&snap);
+    assert!(report.pass, "offline replay diverged: {:?}", report.first_divergence);
+    assert_eq!(offline.fleet_load_cycles(), snap.reload_cycles);
+    assert_eq!(offline.fleet_migration_cycles(), snap.migration_cycles);
+    assert_eq!(offline.clock_regressions(), 0, "virtual clock must be monotone");
+    // The scenario actually exercised the ledger-bearing paths.
+    assert!(snap.reload_cycles > 0, "overload must force reloads");
+    assert!(log.count(EventKind::RegionReload) > 0);
+    assert!(log.count(EventKind::TwinPass) > 0);
+    assert!(log.count(EventKind::DispatchEnd) > 0);
+}
+
+#[test]
+fn audit_flags_a_tampered_stream() {
+    let (trace, snap) = traced_overload(3, 1 << 16);
+    let log = trace.log.lock().unwrap();
+    let mut events: Vec<_> = log.events().cloned().collect();
+    // Inflate one analytic reload charge: the re-derived fleet ledger no
+    // longer matches the snapshot and the audit must name the divergence.
+    let idx = events
+        .iter()
+        .position(|e| e.kind == EventKind::RegionReload && !e.twin)
+        .expect("scenario records reloads");
+    events[idx].cycles += 1;
+    let report = LedgerAuditor::replay(&events).verify(&snap);
+    assert!(!report.pass, "a tampered charge must fail the audit");
+    assert!(report.first_divergence.is_some());
+}
+
+#[test]
+fn chrome_trace_roundtrips_with_one_complete_track_per_macro_and_tenant() {
+    let (trace, _snap) = traced_overload(4, 1 << 16);
+    let dump = trace.chrome(1, &tenant_names()).dump();
+    let parsed = Json::parse(&dump).expect("Chrome export must be valid JSON");
+    let arr = parsed.get("traceEvents").as_arr().unwrap();
+    // Track declarations: 2 process_name metas + 1 macro + 3 tenants
+    // (no compaction in this scenario, so no synthetic "fleet" tenant).
+    let track_labels: Vec<&str> = arr
+        .iter()
+        .filter(|e| e.get("ph").as_str() == Some("M"))
+        .filter_map(|e| e.at(&["args", "name"]).as_str())
+        .collect();
+    assert_eq!(
+        track_labels,
+        vec![
+            "cim macros",
+            "cim tenants",
+            "macro 0",
+            "tenant hi",
+            "tenant lo1",
+            "tenant lo2"
+        ]
+    );
+    // Every recorded event round-trips bit-exactly through the args
+    // payloads, in order.
+    let back = events_from_chrome(&parsed).unwrap();
+    let originals: Vec<_> = trace.log.lock().unwrap().events().cloned().collect();
+    assert_eq!(back, originals);
+}
+
+#[test]
+fn identical_runs_export_byte_identical_traces() {
+    let (t1, s1) = traced_overload(5, 1 << 16);
+    let (t2, s2) = traced_overload(5, 1 << 16);
+    assert_eq!(s1.reload_cycles, s2.reload_cycles, "scenario is deterministic");
+    assert_eq!(
+        t1.chrome(1, &tenant_names()).dump(),
+        t2.chrome(1, &tenant_names()).dump(),
+        "Chrome export must be byte-identical across identical runs"
+    );
+    assert_eq!(
+        t1.prometheus(Some(true)),
+        t2.prometheus(Some(true)),
+        "Prometheus export must be byte-identical across identical runs"
+    );
+}
+
+#[test]
+fn ring_bound_holds_but_lifetime_counts_survive() {
+    let (trace, _snap) = traced_overload(6, 8);
+    let log = trace.log.lock().unwrap();
+    assert!(log.len() <= 8, "ring must never exceed its capacity");
+    assert!(log.dropped() > 0, "a 6-round overload overflows an 8-slot ring");
+    assert_eq!(
+        log.total(),
+        log.len() as u64 + log.dropped(),
+        "per-kind counters must keep counting past eviction"
+    );
+}
+
+#[test]
+fn ascii_timeline_renders_the_traced_scenario() {
+    let (trace, _snap) = traced_overload(4, 1 << 16);
+    let events: Vec<_> = trace.log.lock().unwrap().events().cloned().collect();
+    let t = ascii_timeline(&events, 64);
+    assert!(t.starts_with("virtual clock 0.."));
+    assert!(t.contains("macro   0 |"), "the pool's one macro gets a row");
+    assert!(t.contains('R'), "reloads paint R cells");
+    assert!(t.ends_with("R reload · M migration · P twin pass\n"));
+}

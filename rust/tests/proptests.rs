@@ -11,6 +11,7 @@ use cim_adapt::fleet::{
 use cim_adapt::latency::{layer_cost, model_cost, spans_reload_cycles};
 use cim_adapt::mapping::{pack_model, FitPolicyKind, PlacedMapping, Region, RegionAllocator};
 use cim_adapt::morph::expand::search_expansion_ratio;
+use cim_adapt::obs::{FleetTrace, LedgerAuditor};
 use cim_adapt::quant::lsq::{lsq_quantize, LsqTensor};
 use cim_adapt::quant::psum::{quantize_psum, segment_inputs};
 use cim_adapt::util::json::Json;
@@ -830,6 +831,66 @@ fn prop_qos_rejected_requests_charge_nothing() {
                 && full.twin_load_cycles() == lean.twin_load_cycles()
                 && full.reload_cycles == full.macro_load_cycles()
                 && full.twin_load_cycles() == full.reload_cycles
+        },
+    );
+}
+
+#[test]
+fn prop_trace_replay_reproduces_all_four_ledgers() {
+    // Any interleaved submit/dispatch/compact script through a traced
+    // rate-limited twin fleet: the LedgerAuditor — fed the event stream
+    // online, or replaying the ring offline — re-derives every ledger
+    // (fleet, per-macro, per-tenant, twin) bit-exactly against the final
+    // snapshot, with a monotone clock and nothing dropped.
+    let spec = MacroSpec::default();
+    check(
+        "trace replay reproduces all four ledgers",
+        cases(12),
+        pairs(vecs(usizes(0..5), 1..18), usizes(1..4)),
+        |(ops, burst)| {
+            let mut cfg = FleetConfig {
+                num_macros: 1,
+                coresident: true,
+                execution: ExecutionMode::Twin,
+                ..FleetConfig::default()
+            };
+            cfg.qos.insert(
+                "m1".into(),
+                QosSpec {
+                    burst: *burst as u64,
+                    ..QosSpec::default()
+                },
+            );
+            let mut fleet = QosFleet::new(&cfg, &spec);
+            let trace = FleetTrace::default();
+            fleet.fleet_mut().set_trace(Some(trace.sink()));
+            for (i, s) in [0.04, 0.03, 0.05].iter().enumerate() {
+                fleet
+                    .register(&format!("m{i}"), vgg9().scaled(*s), false)
+                    .unwrap();
+            }
+            let img = vec![0.5f32; 64];
+            for &op in ops {
+                if op < 3 {
+                    let _ = fleet.submit(&format!("m{op}"), vec![img.clone()]).unwrap();
+                } else if op == 3 {
+                    let _ = fleet.dispatch_next().unwrap();
+                } else {
+                    let _ = fleet.fleet_mut().compact();
+                }
+            }
+            fleet.drain().unwrap();
+            let snap = fleet.snapshot();
+            let online = trace.audit.lock().unwrap().verify(&snap);
+            let log = trace.log.lock().unwrap();
+            let offline = LedgerAuditor::replay(log.events());
+            let offline_report = offline.verify(&snap);
+            online.pass
+                && offline_report.pass
+                && log.dropped() == 0
+                && offline.fleet_load_cycles() == snap.reload_cycles
+                && offline.fleet_migration_cycles() == snap.migration_cycles
+                && offline.clock_regressions() == 0
         },
     );
 }

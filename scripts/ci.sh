@@ -107,9 +107,13 @@ if [ "$run_bench" = 1 ]; then
   # deterministic invariants (morphed < uncompressed reload cycles,
   # co-resident beats whole-macro placement, twin loads == analytic
   # ledger, defragged churn beats first-fit in twin cycles), so they run
-  # regardless of python availability. The comparison is print-only for
-  # timings (noisy); with --strict-counters it gates on the
-  # deterministic counters in scripts/bench_baselines/.
+  # regardless of python availability. micro_fleet also runs the traced
+  # admission arm: the online LedgerAuditor must re-derive all four
+  # ledgers from the event stream (the bench aborts on a failed audit)
+  # and two identical runs must export byte-identical Chrome traces —
+  # both verdicts land in BENCH_fleet.json as exact counters. The
+  # comparison is print-only for timings (noisy); with --strict-counters
+  # it gates on the deterministic counters in scripts/bench_baselines/.
   CIM_ADAPT_BENCH_QUICK=1 cargo bench --bench micro_fleet
   CIM_ADAPT_BENCH_QUICK=1 cargo bench --bench micro_serving
   if command -v python3 >/dev/null 2>&1; then

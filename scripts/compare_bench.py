@@ -106,6 +106,23 @@ EXACT_COUNTERS = {
         "qos_scenario.admission.deferred",
         "qos_scenario.priority_hi_win_cycles",
         "qos_scenario.admission_reload_win_cycles",
+        # Traced admission arm (PR 6): per-kind event counts from the
+        # deterministic virtual-clock trace, plus the audit/determinism
+        # verdicts (0/1; the bench aborts before writing the summary if
+        # either assert fails, so a healthy run always reads 1).
+        "trace_scenario.admit",
+        "trace_scenario.reject",
+        "trace_scenario.defer",
+        "trace_scenario.dispatch_start",
+        "trace_scenario.dispatch_end",
+        "trace_scenario.region_reload",
+        "trace_scenario.evict",
+        "trace_scenario.migrate_span",
+        "trace_scenario.twin_pass",
+        "trace_scenario.compaction",
+        "trace_scenario.events_total",
+        "trace_scenario.audit_pass",
+        "trace_scenario.deterministic",
     ],
     # The serving bench's counters flow through the threaded batcher
     # (batch formation is timing-dependent), so none qualify yet.

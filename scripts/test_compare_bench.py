@@ -98,6 +98,22 @@ def fleet_summary(
             "priority_hi_win_cycles": 756,
             "admission_reload_win_cycles": 2303,
         },
+        "trace_scenario": {
+            "rounds": 8,
+            "admit": 36,
+            "reject": 12,
+            "defer": 10,
+            "dispatch_start": 18,
+            "dispatch_end": 18,
+            "region_reload": 6,
+            "evict": 0,
+            "migrate_span": 0,
+            "twin_pass": 18,
+            "compaction": 0,
+            "events_total": 118,
+            "audit_pass": 1,
+            "deterministic": 1,
+        },
     }
     if timing_ns is not None:
         s["timings"] = [{"name": "roundtrip", "median_ns": timing_ns, "samples": 10}]
@@ -213,6 +229,21 @@ class CompareBenchTest(unittest.TestCase):
         drifted["churn_scenario"]["defrag"]["twin_total_cycles"] += 7
         self.write(self.cur, "fleet", drifted)
         self.assertEqual(run_main(self.argv()), 0, "print-only by default")
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+
+    def test_trace_counter_drift_is_gated(self):
+        # The traced-arm event counts and the audit/determinism verdicts
+        # gate like any other exact counter: a lost emission, a broken
+        # audit, or a non-deterministic trace all trip CI.
+        self.write(self.base, "fleet", fleet_summary())
+        drifted = fleet_summary()
+        drifted["trace_scenario"]["region_reload"] += 1
+        self.write(self.cur, "fleet", drifted)
+        self.assertEqual(run_main(self.argv()), 0, "print-only by default")
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+        failed_audit = fleet_summary()
+        failed_audit["trace_scenario"]["audit_pass"] = 0
+        self.write(self.cur, "fleet", failed_audit)
         self.assertEqual(run_main(self.argv("--strict-counters")), 1)
 
     def test_twin_ledger_delta_is_gated(self):
