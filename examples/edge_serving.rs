@@ -8,21 +8,116 @@
 //! ```bash
 //! cargo run --release --example edge_serving -- --requests 512 --rate 800
 //! ```
+//!
+//! `--runtime concurrent` switches to the work-stealing fleet runtime
+//! instead: three twin-backed tenants share the macro pool, admission
+//! and pricing stay sequential on this thread while forward passes
+//! overlap on the executor's workers, and the run ends with the
+//! four-ledger audit over the merged trace. Needs no PJRT artifacts:
+//!
+//! ```bash
+//! cargo run --release --example edge_serving -- --runtime concurrent --requests 256
+//! ```
 
 use std::path::Path;
 use std::time::{Duration, Instant};
 
-use cim_adapt::config::{MacroSpec, ServeConfig};
+use cim_adapt::arch::vgg9;
+use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec, ServeConfig};
 use cim_adapt::coordinator::server::{Backend, EdgeServer};
 use cim_adapt::data::{SynthCifar, NUM_CLASSES};
-use cim_adapt::runtime::ModelRuntime;
+use cim_adapt::obs::FleetTrace;
+use cim_adapt::runtime::{ConcurrentFleet, ModelRuntime};
 use cim_adapt::util::cli::Args;
 use cim_adapt::util::commas;
 use cim_adapt::util::prng::Pcg;
 
+/// Multi-tenant serving on the work-stealing runtime (digital twin
+/// backend — runs anywhere, no artifacts). The sequential virtual-clock
+/// driver would make the exact same decisions; `tests/proptests.rs`
+/// proves that, and the trailing audit re-checks this very run.
+fn run_concurrent(args: &Args) -> anyhow::Result<()> {
+    let n = args.usize_or("requests", 256);
+    let workers = args.usize_or("workers", 3);
+    let cfg = FleetConfig {
+        num_macros: args.usize_or("macros", 4),
+        coresident: true,
+        execution: ExecutionMode::Twin,
+        ..FleetConfig::default()
+    };
+    let mut fleet = ConcurrentFleet::new(&cfg, &MacroSpec::default(), workers);
+    let trace = FleetTrace::new(1 << 14);
+    fleet.set_trace(Some(trace.sink()));
+    let tenants = [("vision", 0.05), ("audio", 0.04), ("sensor", 0.03)];
+    for (name, scale) in tenants {
+        fleet.register(name, vgg9().scaled(scale), false)?;
+    }
+    println!(
+        "serving {} twin tenants on {} macros, {} executor workers",
+        tenants.len(),
+        cfg.num_macros,
+        workers
+    );
+
+    let t0 = Instant::now();
+    let (mut admitted, mut rejected) = (0u64, 0u64);
+    for k in 0..n {
+        let (name, _) = tenants[k % tenants.len()];
+        let img = SynthCifar::sample(k % NUM_CLASSES, 11_000 + k as u64);
+        if fleet.submit(name, vec![img.data])?.is_admitted() {
+            admitted += 1;
+        } else {
+            rejected += 1;
+        }
+        // Admission/compute overlap: dispatch as we go so forward passes
+        // run on the workers while this thread admits the next requests.
+        if k % 2 == 1 {
+            fleet.dispatch_next()?;
+        }
+    }
+    let outcomes = fleet.drain()?;
+    let elapsed = t0.elapsed();
+    let snap = fleet.snapshot();
+    let es = fleet.executor_stats();
+    let served: usize = outcomes.iter().map(|o| o.batch).sum();
+
+    println!("\n── workload ──────────────────────────────");
+    println!("requests          {n} ({admitted} admitted, {rejected} rejected)");
+    println!("batches           {}", outcomes.len());
+    println!(
+        "throughput        {} images in {:.2}s ({:.0}/s)",
+        served,
+        elapsed.as_secs_f64(),
+        served as f64 / elapsed.as_secs_f64().max(1e-9)
+    );
+    println!("\n── runtime ───────────────────────────────");
+    println!(
+        "executor          {} tasks: {} popped by owner, {} stolen",
+        es.executed, es.popped, es.stolen
+    );
+    println!("\n── ledgers (device cycles) ───────────────");
+    let agg = snap.aggregate();
+    println!("compute           {}", commas(agg.compute_cycles));
+    println!("reload            {}", commas(snap.reload_cycles));
+    println!("migration         {}", commas(snap.migration_cycles));
+    let audit = trace.audit.lock().unwrap().verify(&snap);
+    let events = trace.log.lock().unwrap().events().count();
+    println!(
+        "audit             {} ({events} trace events, 4 ledgers re-derived)",
+        if audit.pass { "PASS" } else { "FAIL" }
+    );
+    anyhow::ensure!(audit.pass, "ledger audit failed: {:?}", audit.first_divergence);
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     cim_adapt::util::logging::init();
     let args = Args::parse(std::env::args().skip(1));
+    match args.str_or("runtime", "legacy") {
+        "concurrent" => return run_concurrent(&args),
+        "legacy" => {}
+        other => anyhow::bail!("unknown --runtime '{other}' (legacy|concurrent)"),
+    }
     let n = args.usize_or("requests", 512);
     let rate = args.f64_or("rate", 800.0); // requests/second offered
     let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");

@@ -5,12 +5,16 @@
 use std::path::Path;
 
 use cim_adapt::arch::vgg9;
-use cim_adapt::config::{MacroSpec, ServeConfig};
+use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec, ServeConfig};
 use cim_adapt::coordinator::server::{Backend, EdgeServer};
 use cim_adapt::data::SynthCifar;
+use cim_adapt::fleet::{QosFleet, QosSpec};
+use cim_adapt::obs::FleetTrace;
 use cim_adapt::report::write_bench_summary;
+use cim_adapt::runtime::{ConcurrentFleet, Executor, ResponseView, StreamCodec};
 use cim_adapt::util::bench::{black_box, Runner};
-use cim_adapt::util::json::Json;
+use cim_adapt::util::json::{nodes_allocated, Json};
+use cim_adapt::util::threadpool::ThreadPool;
 
 fn main() {
     let mut r = Runner::new("micro_serving");
@@ -54,6 +58,206 @@ fn main() {
             m.on_complete(black_box(42));
         });
     }
+
+    // Legacy pool vs work-stealing executor on the same job shape: 64
+    // small tasks all submitted to one entry point, so the executor arm
+    // exercises stealing. Steal/pop splits are timing-dependent —
+    // reported for information, never compared as exact counters.
+    {
+        let pool = ThreadPool::new(4);
+        r.bench_throughput("64 jobs: legacy ThreadPool::run_all", "job", || {
+            let jobs: Vec<_> = (0..64u64).map(|i| move || black_box(i * i)).collect();
+            black_box(pool.run_all(jobs));
+            64
+        });
+        let exec = Executor::new(4);
+        r.bench_throughput("64 jobs: work-stealing executor", "job", || {
+            let (tx, rx) = std::sync::mpsc::channel::<u64>();
+            for i in 0..64u64 {
+                let tx = tx.clone();
+                // Pile every task onto worker 0's deque: throughput then
+                // depends on the other workers stealing the excess.
+                exec.spawn_at(0, move || {
+                    let _ = tx.send(black_box(i * i));
+                });
+            }
+            drop(tx);
+            let mut done = 0u64;
+            while rx.recv().is_ok() {
+                done += 1;
+            }
+            assert_eq!(done, 64);
+            64
+        });
+        let es = exec.stats();
+        r.table(&format!(
+            "executor counters: spawned {}, popped {}, stolen {}, executed {} \
+             (steal split is timing-dependent — informational only)",
+            es.spawned, es.popped, es.stolen, es.executed
+        ));
+    }
+
+    // Tree vs streaming JSON on the wire path, plus the deterministic
+    // node-allocation ledger (exact counters: the streaming codec must
+    // allocate ZERO Json nodes, and its encoding must be byte-identical
+    // to the tree writer's).
+    let json_summary = {
+        let mut wire = Vec::from(&br#"{"model":"edge","image":["#[..]);
+        for i in 0..3072usize {
+            if i > 0 {
+                wire.push(b',');
+            }
+            wire.extend_from_slice(format!("{}", (i % 256) as f64 / 256.0).as_bytes());
+        }
+        wire.extend_from_slice(b"]}");
+        let text = String::from_utf8(wire.clone()).unwrap();
+        r.bench("parse 3072-pixel request: tree parser", || {
+            black_box(Json::parse(&text).unwrap());
+        });
+        let mut codec = StreamCodec::new();
+        r.bench("parse 3072-pixel request: streaming codec", || {
+            black_box(codec.decode_request(&wire).unwrap().image().len());
+        });
+
+        let before = nodes_allocated();
+        let tree = Json::parse(&text).unwrap();
+        let tree_nodes = nodes_allocated() - before;
+        black_box(&tree);
+        let logits = [0.5f32, 2.0, -1.25, 0.0];
+        let view = ResponseView {
+            id: 7,
+            class: 1,
+            logits: &logits,
+            latency_us: 42,
+            device_cycles: 1000,
+            batch_size: 8,
+        };
+        let before = nodes_allocated();
+        codec.decode_request(&wire).unwrap();
+        let streamed = codec.encode_response(view).to_vec();
+        let stream_nodes = nodes_allocated() - before;
+        assert_eq!(stream_nodes, 0, "wire path must allocate no Json nodes");
+        let tree_resp = Json::obj()
+            .with("id", 7u64)
+            .with("class", 1usize)
+            .with("logits", vec![0.5, 2.0, -1.25, 0.0])
+            .with("latency_us", 42u64)
+            .with("device_cycles", 1000u64)
+            .with("batch_size", 8usize);
+        assert_eq!(
+            streamed,
+            tree_resp.dump().into_bytes(),
+            "streaming encode must match the tree writer byte-for-byte"
+        );
+        r.table(&format!(
+            "json ledger: tree parse allocates {tree_nodes} nodes/request, streaming 0"
+        ));
+        Json::obj()
+            .with("tree_nodes", tree_nodes)
+            .with("stream_nodes", stream_nodes)
+            .with("bytes_identical", 1u64)
+    };
+
+    // Deterministic serving scenario: the work-stealing runtime vs the
+    // sequential virtual-clock twin on a fixed op script. Every counter
+    // below is decision-level (virtual clock, not wall clock), so it is
+    // bit-stable across machines and thread interleavings — the bench
+    // aborts before writing the summary if equivalence ever breaks.
+    let scenario = {
+        let mut cfg = FleetConfig {
+            num_macros: 2,
+            coresident: true,
+            execution: ExecutionMode::Twin,
+            ..FleetConfig::default()
+        };
+        cfg.qos.insert(
+            "m1".into(),
+            QosSpec {
+                burst: 2,
+                ..QosSpec::default()
+            },
+        );
+        let mut seq = QosFleet::new(&cfg, &spec);
+        let seq_trace = FleetTrace::new(1 << 12);
+        seq.fleet_mut().set_trace(Some(seq_trace.sink()));
+        let mut con = ConcurrentFleet::new(&cfg, &spec, 3);
+        let con_trace = FleetTrace::new(1 << 12);
+        con.set_trace(Some(con_trace.sink()));
+        for (i, s) in [0.04, 0.03, 0.05].iter().enumerate() {
+            seq.register(&format!("m{i}"), vgg9().scaled(*s), false).unwrap();
+            con.register(&format!("m{i}"), vgg9().scaled(*s), false).unwrap();
+        }
+        let img = vec![0.5f32; 64];
+        // Fixed script: submits (0..2 = tenant), dispatches (3), compact (4).
+        let script = [0usize, 1, 2, 3, 1, 1, 3, 0, 2, 4, 3, 0, 1, 1, 2, 3, 3, 4, 0, 3];
+        let (mut admitted, mut rejected) = (0u64, 0u64);
+        for &op in &script {
+            if op < 3 {
+                let a = seq.submit(&format!("m{op}"), vec![img.clone()]).unwrap();
+                let b = con.submit(&format!("m{op}"), vec![img.clone()]).unwrap();
+                assert_eq!(a, b, "admission decisions diverged");
+                if a.is_admitted() {
+                    admitted += 1;
+                } else {
+                    rejected += 1;
+                }
+            } else if op == 3 {
+                let _ = seq.dispatch_next().unwrap();
+                let _ = con.dispatch_next().unwrap();
+            } else {
+                let _ = seq.fleet_mut().compact().unwrap();
+                let _ = con.compact().unwrap();
+            }
+        }
+        let seq_out = seq.drain().unwrap();
+        let con_out = con.drain().unwrap();
+        assert_eq!(seq_out.len(), con_out.len(), "batch counts diverged");
+        for (a, b) in seq_out.iter().zip(&con_out) {
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.classes, b.classes);
+            assert_eq!(a.logits, b.logits);
+            assert_eq!(a.device_cycles, b.device_cycles);
+            assert_eq!(a.reload_cycles, b.reload_cycles);
+            assert_eq!(a.evicted, b.evicted);
+        }
+        let ss = seq.snapshot();
+        let cs = con.snapshot();
+        assert_eq!(ss.reload_cycles, cs.reload_cycles);
+        assert_eq!(ss.aggregate(), cs.aggregate());
+        assert_eq!(ss.tenant_aggregate(), cs.tenant_aggregate());
+        assert_eq!(ss.qos_totals(), cs.qos_totals());
+        let seq_events: Vec<_> = seq_trace.log.lock().unwrap().events().cloned().collect();
+        let con_events: Vec<_> = con_trace.log.lock().unwrap().events().cloned().collect();
+        assert_eq!(seq_events, con_events, "trace streams diverged");
+        let audit = con_trace.audit.lock().unwrap().verify(&cs);
+        assert!(audit.pass, "audit failed: {:?}", audit.first_divergence);
+        let es = con.executor_stats();
+        r.table(&format!(
+            "serving scenario: {} batches, {admitted} admitted, {rejected} rejected, \
+             {} twin events — concurrent ≡ sequential (audit pass)",
+            con_out.len(),
+            con_events.len()
+        ));
+        Json::obj()
+            .with("admitted", admitted)
+            .with("rejected", rejected)
+            .with("batches", con_out.len())
+            .with(
+                "device_cycles",
+                con_out.iter().map(|o| o.device_cycles).sum::<u64>(),
+            )
+            .with("reload_cycles", cs.reload_cycles)
+            .with("twin_load_cycles", cs.twin_load_cycles())
+            .with("twin_compute_cycles", cs.aggregate().compute_cycles)
+            .with("events_total", con_events.len())
+            // 0/1 verdicts: the asserts above abort the bench before the
+            // summary is written, so a healthy run always reads 1.
+            .with("decisions_match", 1u64)
+            .with("events_identical", 1u64)
+            .with("audit_pass", 1u64)
+            // Informational only (timing-dependent): NOT an exact counter.
+            .with("steals", es.stolen)
+    };
 
     // PJRT path (skipped when artifacts are absent).
     let artifacts = Path::new("artifacts");
@@ -114,7 +318,9 @@ fn main() {
     let summary = Json::obj()
         .with("bench", "micro_serving")
         .with("timings", r.results_json())
-        .with("sim_serving", sim_snap.to_json());
+        .with("sim_serving", sim_snap.to_json())
+        .with("json", json_summary)
+        .with("serving_scenario", scenario);
     match write_bench_summary("serving", &summary) {
         Ok(path) => r.table(&format!("(wrote {})", path.display())),
         Err(e) => r.table(&format!("(BENCH_serving.json not written: {e})")),

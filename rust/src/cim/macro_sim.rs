@@ -177,6 +177,25 @@ impl CimMacro {
     /// One macro pass: drive `codes` on the wordlines, digitize
     /// `bl_count` bitlines starting at `bl_start`.
     pub fn pass(&mut self, codes: &[i32], bl_start: usize, bl_count: usize) -> PassResult {
+        let (result, delta) = self.pass_delta(codes, bl_start, bl_count);
+        self.stats.absorb(&delta);
+        result
+    }
+
+    /// [`CimMacro::pass`] without the stats side effect: the physics run on
+    /// a shared `&self` and the would-be counter increments come back as a
+    /// [`MacroStats`] delta for the caller to apply (or defer).
+    ///
+    /// This is what lets the concurrent runtime execute forward passes
+    /// against `Arc`-shared macro snapshots on worker threads while the
+    /// driver thread applies deltas in deterministic dispatch order —
+    /// keeping the twin ledgers bit-identical to the sequential path.
+    pub fn pass_delta(
+        &self,
+        codes: &[i32],
+        bl_start: usize,
+        bl_count: usize,
+    ) -> (PassResult, MacroStats) {
         assert!(
             codes.len() <= self.spec.wordlines,
             "{} codes exceed {} wordlines",
@@ -190,9 +209,12 @@ impl CimMacro {
         let out: Vec<i32> = analogs.iter().map(|&a| self.adc.convert(a)).collect();
         let rounds = Adc::rounds(bl_count, self.spec.num_adcs) as u64;
         let cycles = 1 + rounds; // evaluate + conversion rounds
-        self.stats.compute_cycles += cycles;
-        self.stats.conversions += bl_count as u64;
-        PassResult { codes: out, cycles }
+        let delta = MacroStats {
+            compute_cycles: cycles,
+            conversions: bl_count as u64,
+            ..MacroStats::default()
+        };
+        (PassResult { codes: out, cycles }, delta)
     }
 
     /// Full segmented dot product (Eq. 7 forward path): the weights for
@@ -262,6 +284,24 @@ mod tests {
         assert_eq!(d.load_cycles, 0, "the pass loads nothing");
         assert_eq!(d.reloads, 0);
         assert_eq!(m.stats.diff(&m.stats), MacroStats::default());
+    }
+
+    #[test]
+    fn pass_delta_matches_pass_without_side_effects() {
+        let mut a = CimMacro::new(spec(), 1.0, 1.0);
+        a.load_columns(0, &vec![cells(&[1; 9]); 128]);
+        let b = a.clone();
+        // Read-only variant: same result, no counter movement.
+        let before = b.stats;
+        let (rd, delta) = b.pass_delta(&[1; 9], 0, 128);
+        assert_eq!(b.stats, before, "pass_delta must not touch stats");
+        assert_eq!(delta.compute_cycles, 3);
+        assert_eq!(delta.conversions, 128);
+        assert_eq!(delta.load_cycles + delta.reloads + delta.migrations, 0);
+        // Mutating variant: identical codes, stats advanced by the delta.
+        let r = a.pass(&[1; 9], 0, 128);
+        assert_eq!(r, rd);
+        assert_eq!(a.stats.diff(&before), delta);
     }
 
     #[test]

@@ -22,7 +22,7 @@ use super::scheduler::{InferencePlan, MacroScheduler};
 use crate::config::ServeConfig;
 use crate::latency::model_cost;
 use crate::mapping::pack_model;
-use crate::runtime::{ArtifactMeta, ModelRuntime};
+use crate::runtime::{ArtifactMeta, ModelRuntime, StreamCodec};
 
 /// Backend factory: how each worker obtains its execution engine.
 #[derive(Clone)]
@@ -98,7 +98,12 @@ pub struct ServerHandle {
     pub plan: InferencePlan,
     workers: Mutex<Vec<thread::JoinHandle<()>>>,
     accepting: AtomicBool,
+    /// Set during shutdown: workers skip the batch-timeout wait so the
+    /// queue drains promptly (they still serve everything queued).
+    draining: Arc<AtomicBool>,
     image_len: usize,
+    /// Reusable wire codec behind [`ServerHandle::submit_bytes`].
+    codec: Mutex<StreamCodec>,
 }
 
 impl EdgeServer {
@@ -117,6 +122,7 @@ impl EdgeServer {
         let (tx, rx) = mpsc::channel::<InferRequest>();
         let rx = Arc::new(Mutex::new(rx));
         let depth = Arc::new(AtomicU64::new(0));
+        let draining = Arc::new(AtomicBool::new(false));
         let image_len = match backend.meta() {
             Ok(Some(meta)) => meta.image_len(),
             _ => 3 * 32 * 32,
@@ -129,6 +135,7 @@ impl EdgeServer {
             let backend = backend.clone();
             let metrics = Arc::clone(&metrics);
             let depth = Arc::clone(&depth);
+            let draining = Arc::clone(&draining);
             let policy = BatchPolicy::new(cfg.max_batch, cfg.batch_timeout_us);
             let plan = plan.clone();
             let ready_tx = ready_tx.clone();
@@ -149,7 +156,7 @@ impl EdgeServer {
                             }
                         };
                         let _ = ready_tx.send(true);
-                        worker_loop(rx, engine, metrics, depth, policy, plan)
+                        worker_loop(rx, engine, metrics, depth, draining, policy, plan)
                     })
                     .expect("spawn worker"),
             );
@@ -169,7 +176,9 @@ impl EdgeServer {
             plan,
             workers: Mutex::new(workers),
             accepting: AtomicBool::new(true),
+            draining,
             image_len,
+            codec: Mutex::new(StreamCodec::new()),
         })
     }
 }
@@ -179,6 +188,7 @@ fn worker_loop(
     engine: Engine,
     metrics: Arc<Metrics>,
     depth: Arc<AtomicU64>,
+    draining: Arc<AtomicBool>,
     policy: BatchPolicy,
     plan: InferencePlan,
 ) {
@@ -202,7 +212,11 @@ fn worker_loop(
                     Err(_) => break,
                 }
             }
-            if batch.len() > 1 && batch.len() < policy.max_batch {
+            // During shutdown the flag short-circuits the batch-timeout
+            // wait — checked between batches, never mid-pass, so every
+            // queued request is still served before the worker exits.
+            if batch.len() > 1 && batch.len() < policy.max_batch && !draining.load(Ordering::Acquire)
+            {
                 // Load present: give concurrent arrivals the window.
                 let deadline = Instant::now() + policy.timeout;
                 while batch.len() < policy.max_batch {
@@ -344,18 +358,50 @@ impl ServerHandle {
             enqueued: Instant::now(),
             respond: rtx,
         };
-        let guard = self.tx.lock().unwrap();
-        guard
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("server stopped"))?
-            .send(req)
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        let sent = {
+            let guard = self.tx.lock().unwrap();
+            match guard.as_ref() {
+                Some(tx) => tx.send(req).is_ok(),
+                None => false,
+            }
+        };
+        if !sent {
+            // The request never reached the queue, so no worker will
+            // decrement for it — roll the accounting back here or the
+            // depth counter leaks and backpressure tightens forever.
+            self.depth.fetch_sub(1, Ordering::AcqRel);
+            self.metrics.on_reject();
+            anyhow::bail!("server stopped");
+        }
         Ok(Ticket { id, rx: rrx })
     }
 
-    /// Stop accepting, drain workers, return the final metrics.
+    /// Submit a request from its JSON wire form,
+    /// `{"image": [f32; image_len]}`, decoded through the handle's
+    /// reusable [`StreamCodec`] — no `Json` tree is built.
+    pub fn submit_bytes(&self, bytes: &[u8]) -> Result<Ticket> {
+        let image = {
+            let mut codec = self.codec.lock().unwrap();
+            let req = codec
+                .decode_request(bytes)
+                .map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
+            req.take_image()
+        };
+        self.submit(image)
+    }
+
+    /// Stop accepting, drain every queued request, join workers, and
+    /// return the final metrics.
+    ///
+    /// Graceful-drain contract: a `submit` that returned `Ok` has placed
+    /// its request on the queue, and workers only exit once the queue is
+    /// empty — so **every accepted ticket resolves**, shutdown included
+    /// (`shutdown_resolves_every_accepted_ticket` is the regression
+    /// test). The draining flag only skips the batch-timeout wait
+    /// between batches; no pass is interrupted.
     pub fn shutdown(&self) -> MetricsSnapshot {
         self.accepting.store(false, Ordering::Release);
+        self.draining.store(true, Ordering::Release);
         // Dropping the sender ends the worker loops once drained.
         *self.tx.lock().unwrap() = None;
         let mut workers = self.workers.lock().unwrap();
@@ -460,6 +506,74 @@ mod tests {
             "expected some batching, mean={}",
             m.mean_batch
         );
+    }
+
+    #[test]
+    fn shutdown_resolves_every_accepted_ticket() {
+        // Race a submitter against shutdown: whatever `submit` accepted
+        // must resolve — the drain serves the whole queue before the
+        // workers join, and failed sends roll their accounting back.
+        let h = sim_server(ServeConfig {
+            workers: 2,
+            max_batch: 4,
+            batch_timeout_us: 2000,
+            queue_depth: 4096,
+            ..ServeConfig::default()
+        });
+        let h2 = Arc::clone(&h);
+        let submitter = thread::spawn(move || {
+            let mut tickets = Vec::new();
+            for _ in 0..2000 {
+                match h2.submit(vec![0.3; 3072]) {
+                    Ok(t) => tickets.push(t),
+                    Err(_) => break, // shutdown observed
+                }
+            }
+            tickets
+        });
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let m = h.shutdown();
+        let tickets = submitter.join().unwrap();
+        let accepted = tickets.len() as u64;
+        assert!(accepted > 0, "test needs at least one accepted ticket");
+        for t in tickets {
+            t.wait().expect("accepted ticket must resolve");
+        }
+        assert_eq!(m.completed, accepted);
+        // Depth returned to zero: accepted requests were all consumed
+        // and failed sends rolled their increment back.
+        assert_eq!(h.depth.load(Ordering::Acquire), 0);
+    }
+
+    #[test]
+    fn submit_bytes_round_trips_the_wire_format() {
+        use crate::runtime::{ResponseView, StreamCodec};
+        use crate::util::json::Json;
+
+        let h = sim_server(ServeConfig::default());
+        let img = crate::data::SynthCifar::sample(4, 9);
+        let direct = h.submit(img.data.clone()).unwrap().wait().unwrap();
+
+        let mut wire = Vec::from(&br#"{"image":["#[..]);
+        for (i, v) in img.data.iter().enumerate() {
+            if i > 0 {
+                wire.push(b',');
+            }
+            wire.extend_from_slice(format!("{v}").as_bytes());
+        }
+        wire.extend_from_slice(b"]}");
+        let resp = h.submit_bytes(&wire).unwrap().wait().unwrap();
+        assert_eq!(resp.class, direct.class);
+        assert_eq!(resp.logits, direct.logits);
+
+        let mut codec = StreamCodec::new();
+        let encoded = codec.encode_response(ResponseView::of(&resp));
+        let tree = Json::parse(std::str::from_utf8(encoded).unwrap()).unwrap();
+        assert_eq!(tree.get("class").as_usize(), Some(resp.class));
+        assert_eq!(tree.get("id").as_usize(), Some(resp.id as usize));
+
+        assert!(h.submit_bytes(b"{\"image\": [1;2]}").is_err());
+        h.shutdown();
     }
 
     #[test]

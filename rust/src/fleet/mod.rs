@@ -80,4 +80,7 @@ pub use qos::{
     RejectReason, SchedMode,
 };
 pub use registry::{ModelEntry, ModelRegistry, ModelWeights};
-pub use server::{BatchOutcome, Fleet, FleetHandle, FleetServer, FleetSnapshot};
+pub use server::{
+    BatchOutcome, BatchPlan, Fleet, FleetHandle, FleetServer, FleetSnapshot, ForwardJob,
+    ForwardOutput,
+};

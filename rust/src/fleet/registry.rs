@@ -16,6 +16,7 @@
 //! columns into the twin's macros without re-quantizing anything.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::arch::ModelArch;
 use crate::cim::WeightCell;
@@ -109,8 +110,10 @@ pub struct ModelEntry {
     /// Pinned models are never evicted.
     pub pinned: bool,
     /// Packed weight columns (`Some` only when the registry materializes
-    /// weights — i.e. the fleet runs twin execution).
-    pub weights: Option<ModelWeights>,
+    /// weights — i.e. the fleet runs twin execution). Shared via `Arc` so
+    /// the concurrent runtime's forward tasks can hold a dispatch-time
+    /// snapshot without deep-copying the column set.
+    pub weights: Option<Arc<ModelWeights>>,
 }
 
 impl ModelEntry {
@@ -206,7 +209,7 @@ impl ModelRegistry {
         let weights = self
             .materialize_limit
             .filter(|&limit| mapping.total_bls <= limit)
-            .map(|_| ModelWeights::synthesize(name, &arch, &mapping, &self.spec));
+            .map(|_| Arc::new(ModelWeights::synthesize(name, &arch, &mapping, &self.spec)));
         self.models.insert(
             name.to_string(),
             ModelEntry {

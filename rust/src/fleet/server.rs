@@ -80,6 +80,7 @@ use crate::latency::region_reload_cycles;
 use crate::mapping::{FitPolicy, PlacedMapping, Region};
 use crate::obs::{emit, EventKind, FleetTrace, SharedSink, TraceEvent};
 use crate::quant::psum::segment_inputs;
+use crate::runtime::StreamCodec;
 use crate::util::json::Json;
 
 use super::compactor::{plan_compaction, CompactionPlan, Fragmentation};
@@ -118,6 +119,124 @@ pub struct BatchOutcome {
     pub migration_cycles: u64,
     /// Models evicted to serve this batch.
     pub evicted: Vec<String>,
+}
+
+/// The decision half of one served batch: everything
+/// [`Fleet::serve_begin`] settled — placement, eviction, every ledger
+/// charge, the clock tick — plus the detachable [`ForwardJob`].
+/// `serve_begin` + [`ForwardJob::run`] + [`Fleet::serve_finish`]
+/// recompose [`Fleet::serve_batch`] exactly (same charges, same events,
+/// same clocks); the concurrent runtime
+/// ([`ConcurrentFleet`](crate::runtime::ConcurrentFleet)) instead runs
+/// the job on a worker thread while the driver admits and prices the
+/// next batch.
+pub struct BatchPlan {
+    model: String,
+    batch: usize,
+    compute_total: u64,
+    reload_cycles: u64,
+    reload_events: u64,
+    migration_cycles: u64,
+    evicted: Vec<String>,
+    /// Pre-advance virtual clock — the finish-side events (`TwinPass`,
+    /// `DispatchEnd`) are stamped with this, exactly where the
+    /// sequential path emits them.
+    clock: u64,
+    macros: Vec<usize>,
+    job: Option<ForwardJob>,
+}
+
+impl BatchPlan {
+    /// Model this plan serves.
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Images in the planned batch.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// First physical macro the batch executes on — the concurrent
+    /// runtime's steal-deque affinity hint.
+    pub fn primary_macro(&self) -> usize {
+        self.macros.first().copied().unwrap_or(0)
+    }
+
+    /// Detach the forward job for offload (the plan keeps its decision
+    /// data for [`Fleet::serve_finish`]). Panics if taken twice.
+    pub fn take_job(&mut self) -> ForwardJob {
+        self.job.take().expect("forward job already taken")
+    }
+}
+
+/// The pure compute half of a batch: dispatch-time snapshots of
+/// everything the forward passes read. [`ForwardJob::run`] touches no
+/// fleet state, so the concurrent runtime can execute it on any worker;
+/// the `Arc` snapshots give copy-on-write isolation — if the driver
+/// re-materializes or compacts a macro while this job is in flight,
+/// `Arc::make_mut` clones on the driver side and the job keeps reading
+/// the weights it was dispatched against.
+pub struct ForwardJob {
+    num_classes: usize,
+    kind: ForwardKind,
+}
+
+enum ForwardKind {
+    /// Analytic classifier (no twin pool, or a paging tenant with no
+    /// materialized residency).
+    Analytic,
+    /// Resident twin datapath over dispatch-time macro snapshots.
+    Twin {
+        twin: Vec<Arc<CimMacro>>,
+        placed: PlacedMapping,
+        arch: ModelArch,
+        weights: Arc<ModelWeights>,
+        spec: MacroSpec,
+    },
+}
+
+impl ForwardJob {
+    /// Run the batch's forward passes. Pure with respect to the fleet:
+    /// reads only the snapshots captured at dispatch, accumulates twin
+    /// compute/conversion charges as *deltas* for
+    /// [`Fleet::serve_finish`] to book — so the call is safe from any
+    /// thread, concurrently with later `serve_begin`s.
+    pub fn run(&self, images: &[Vec<f32>]) -> ForwardOutput {
+        let mut classes = Vec::with_capacity(images.len());
+        let mut logits = Vec::with_capacity(images.len());
+        match &self.kind {
+            ForwardKind::Twin { twin, placed, arch, weights, spec } => {
+                let mut deltas = vec![MacroStats::default(); twin.len()];
+                for img in images {
+                    let feats =
+                        twin_forward(twin, placed, arch, weights, spec, img, &mut deltas);
+                    let (class, l) = sim_classify(&feats, self.num_classes);
+                    classes.push(class);
+                    logits.push(l);
+                }
+                ForwardOutput { classes, logits, deltas }
+            }
+            ForwardKind::Analytic => {
+                for img in images {
+                    let (class, l) = sim_classify(img, self.num_classes);
+                    classes.push(class);
+                    logits.push(l);
+                }
+                ForwardOutput { classes, logits, deltas: Vec::new() }
+            }
+        }
+    }
+}
+
+/// What [`ForwardJob::run`] produced: per-image results plus the twin
+/// stat deltas the finish half books.
+pub struct ForwardOutput {
+    classes: Vec<usize>,
+    logits: Vec<Vec<f32>>,
+    /// Per-twin-macro compute/conversion deltas (empty on the analytic
+    /// path).
+    deltas: Vec<MacroStats>,
 }
 
 /// Point-in-time view of the fleet's accounting.
@@ -381,8 +500,13 @@ pub struct Fleet {
     evictions: u64,
     execution: ExecutionMode,
     /// The digital twin pool — one real [`CimMacro`] per physical macro
-    /// under twin execution, empty otherwise.
-    twin: Vec<CimMacro>,
+    /// under twin execution, empty otherwise. Each macro sits behind an
+    /// `Arc` so a dispatched [`ForwardJob`] can hold a copy-on-write
+    /// snapshot: the sequential path always mutates in place
+    /// (`Arc::make_mut` with a unique holder), and the concurrent runtime
+    /// gets isolation for free — a re-materialization while a job is in
+    /// flight clones rather than racing.
+    twin: Vec<Arc<CimMacro>>,
     /// Materialized placements of resident tenants (twin execution only).
     placed: BTreeMap<String, PlacedMapping>,
     /// The QoS scheduling core: per-tenant specs, token buckets, queued
@@ -413,7 +537,7 @@ impl Fleet {
         };
         let twin = match cfg.execution {
             ExecutionMode::Twin => (0..num)
-                .map(|_| CimMacro::new(*spec, 1.0, TWIN_S_ADC))
+                .map(|_| Arc::new(CimMacro::new(*spec, 1.0, TWIN_S_ADC)))
                 .collect(),
             ExecutionMode::Analytic => Vec::new(),
         };
@@ -492,8 +616,10 @@ impl Fleet {
         self.execution
     }
 
-    /// The digital twin pool (empty under analytic execution).
-    pub fn twin_macros(&self) -> &[CimMacro] {
+    /// The digital twin pool (empty under analytic execution). The `Arc`
+    /// wrappers are the copy-on-write handles dispatched forward jobs
+    /// snapshot; plain reads go straight through `Deref`.
+    pub fn twin_macros(&self) -> &[Arc<CimMacro>] {
         &self.twin
     }
 
@@ -658,10 +784,12 @@ impl Fleet {
                 })
                 .collect();
             for mv in &plan.moves {
-                self.twin[mv.from.macro_id].clear_columns(mv.from.bl_start, mv.from.bl_count);
+                Arc::make_mut(&mut self.twin[mv.from.macro_id])
+                    .clear_columns(mv.from.bl_start, mv.from.bl_count);
             }
             for (mv, cols) in plan.moves.iter().zip(&buffers) {
-                self.twin[mv.to.macro_id].migrate_columns(mv.to.bl_start, cols);
+                Arc::make_mut(&mut self.twin[mv.to.macro_id])
+                    .migrate_columns(mv.to.bl_start, cols);
             }
         }
         // Commit placer + placed state, then charge the analytic ledgers
@@ -814,6 +942,7 @@ impl Fleet {
                 class: Some(class),
             });
             if let Some(mac) = self.twin.get_mut(m) {
+                let mac = Arc::make_mut(mac);
                 mac.stats.load_cycles += load;
                 mac.stats.reloads += 1;
                 emit(&self.trace, || TraceEvent {
@@ -859,8 +988,33 @@ impl Fleet {
     /// compacting the pool first when the defrag threshold is armed, a
     /// hot-swap is imminent, and fragmentation exceeds the threshold (so
     /// the incoming tenant lands contiguously instead of splintering).
+    ///
+    /// Composed of [`Fleet::serve_begin`] (decisions + charges),
+    /// [`ForwardJob::run`] (pure compute) and [`Fleet::serve_finish`]
+    /// (delta booking + finish events): the pieces the concurrent
+    /// runtime overlaps, run back-to-back here so the sequential path
+    /// stays bit-identical to what it always was.
     pub fn serve_batch(&mut self, model: &str, images: &[Vec<f32>]) -> Result<BatchOutcome> {
         anyhow::ensure!(!images.is_empty(), "empty batch for model '{model}'");
+        let mut plan = self.serve_begin(model, images.len())?;
+        let job = plan.take_job();
+        let fwd = job.run(images);
+        // Release the job's Arc snapshots before finishing so the delta
+        // application below mutates the twin in place (unique holder).
+        drop(job);
+        Ok(self.serve_finish(plan, fwd))
+    }
+
+    /// The decision half of [`Fleet::serve_batch`]: defrag check,
+    /// placement/eviction/paging, every ledger charge, the begin-side
+    /// trace events, and the virtual-clock tick — everything admission
+    /// and the next dispatch decision depend on. Returns a [`BatchPlan`]
+    /// whose [`ForwardJob`] can run on any thread; the clock is advanced
+    /// *here* (the charges are already final), so the concurrent driver
+    /// prices the next batch against post-batch time while this batch's
+    /// forward passes are still in flight.
+    pub fn serve_begin(&mut self, model: &str, batch: usize) -> Result<BatchPlan> {
+        anyhow::ensure!(batch > 0, "empty batch for model '{model}'");
         let mut migration_cycles = 0u64;
         if self.defrag_threshold > 0.0 && !self.placer.is_resident(model) {
             // Only an eviction-free hot-swap benefits: a paging tenant
@@ -880,7 +1034,7 @@ impl Fleet {
             .registry
             .get(model)
             .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
-        let n = images.len() as u64;
+        let n = batch as u64;
         let num_classes = entry.arch.num_classes;
         let compute_total = entry.cost.computing_latency as u64 * n;
         let conversions_total = entry.cost.macs as u64 * n;
@@ -966,96 +1120,107 @@ impl Fleet {
         }
         self.charge_compute(model, &macros_used, compute_total, conversions_total);
 
-        // Snapshot the twin's books before the forward passes so the
-        // per-macro compute/conversion deltas can be emitted as
-        // `TwinPass` events — only when tracing is on (the snapshot
-        // allocates).
-        let twin_before: Option<Vec<MacroStats>> = if self.trace.is_some() && !self.twin.is_empty()
-        {
-            Some(self.twin.iter().map(|m| m.stats).collect())
-        } else {
-            None
-        };
-        let mut classes = Vec::with_capacity(images.len());
-        let mut logits = Vec::with_capacity(images.len());
-        match (self.execution, self.placed.get(model)) {
+        // Snapshot the forward job's inputs at dispatch time. A resident
+        // twin tenant runs the real macro datapath along the placed
+        // (possibly fragmented) layout; a paging tenant has no
+        // materialized placement and gets the analytic classifier.
+        let kind = match (self.execution, self.placed.get(model)) {
             (ExecutionMode::Twin, Some(placed)) => {
-                // Resident twin path: run each image through the real
-                // macro datapath along the placed (possibly fragmented)
-                // layout. A paging tenant has no materialized placement
-                // and falls through to the analytic classifier below.
                 let entry = self.registry.get(model).expect("checked above");
-                let weights = entry.weights.as_ref().ok_or_else(|| {
+                let weights = entry.weights.clone().ok_or_else(|| {
                     anyhow::anyhow!("model '{model}' registered without weights")
                 })?;
-                let spec = self.spec;
-                for img in images {
-                    let feats =
-                        twin_forward(&mut self.twin, placed, &entry.arch, weights, &spec, img);
-                    let (class, l) = sim_classify(&feats, num_classes);
-                    classes.push(class);
-                    logits.push(l);
+                ForwardKind::Twin {
+                    twin: self.twin.clone(),
+                    placed: placed.clone(),
+                    arch: entry.arch.clone(),
+                    weights,
+                    spec: self.spec,
                 }
             }
-            _ => {
-                for img in images {
-                    let (class, l) = sim_classify(img, num_classes);
-                    classes.push(class);
-                    logits.push(l);
-                }
-            }
-        }
-        if let Some(before) = twin_before {
-            let clock = self.sched.now();
-            let class = self.sched.class_of(model);
-            for (i, mac) in self.twin.iter().enumerate() {
-                let d = mac.stats.diff(&before[i]);
-                if d.compute_cycles > 0 || d.conversions > 0 {
-                    emit(&self.trace, || TraceEvent {
-                        clock,
-                        kind: EventKind::TwinPass,
-                        tenant: model.to_string(),
-                        macro_id: Some(i),
-                        cycles: d.compute_cycles,
-                        twin: true,
-                        detail: d.conversions,
-                        class: Some(class),
-                    });
-                }
-            }
-        }
-        {
-            let clock = self.sched.now();
-            let class = self.sched.class_of(model);
-            let n = images.len() as u64;
-            emit(&self.trace, || TraceEvent {
-                clock,
-                kind: EventKind::DispatchEnd,
-                tenant: model.to_string(),
-                macro_id: None,
-                cycles: compute_total,
-                twin: false,
-                detail: n,
-                class: Some(class),
-            });
-        }
-        // Advance the QoS virtual clock by exactly what this batch
-        // charged, so rate limits, aging and queue delays tick in the
-        // same unit as the ledgers (and replays stay bit-stable). Any
-        // threshold-triggered compaction above already advanced its own
-        // migration cycles inside `compact`.
+            _ => ForwardKind::Analytic,
+        };
+        // Capture the pre-advance clock the finish-side events are
+        // stamped with, then advance the QoS virtual clock by exactly
+        // what this batch charged, so rate limits, aging and queue
+        // delays tick in the same unit as the ledgers (and replays stay
+        // bit-stable). Any threshold-triggered compaction above already
+        // advanced its own migration cycles inside `compact`.
+        let clock = self.sched.now();
         self.sched.advance(compute_total + reload_cycles);
-        Ok(BatchOutcome {
+        Ok(BatchPlan {
             model: model.to_string(),
-            batch: images.len(),
-            classes,
-            logits,
+            batch,
+            compute_total,
+            reload_cycles,
+            reload_events,
+            migration_cycles,
+            evicted,
+            clock,
+            macros: macros_used,
+            job: Some(ForwardJob { num_classes, kind }),
+        })
+    }
+
+    /// The finish half of [`Fleet::serve_batch`]: book the forward
+    /// passes' twin stat deltas and emit the finish-side trace events
+    /// (`TwinPass` per touched macro, then `DispatchEnd`), all stamped
+    /// with the plan's **pre-advance** clock — the stream is therefore
+    /// byte-identical to the sequential path's, whenever finishes are
+    /// applied in dispatch (FIFO) order.
+    pub fn serve_finish(&mut self, plan: BatchPlan, fwd: ForwardOutput) -> BatchOutcome {
+        let BatchPlan {
+            model,
+            batch,
+            compute_total,
+            reload_cycles,
+            reload_events,
+            migration_cycles,
+            evicted,
+            clock,
+            job,
+            ..
+        } = plan;
+        // Release any un-taken job first: with no other snapshot holder,
+        // `Arc::make_mut` below mutates the twin in place.
+        drop(job);
+        let class = self.sched.class_of(&model);
+        for (i, d) in fwd.deltas.iter().enumerate() {
+            if d.compute_cycles > 0 || d.conversions > 0 {
+                Arc::make_mut(&mut self.twin[i]).stats.absorb(d);
+                emit(&self.trace, || TraceEvent {
+                    clock,
+                    kind: EventKind::TwinPass,
+                    tenant: model.clone(),
+                    macro_id: Some(i),
+                    cycles: d.compute_cycles,
+                    twin: true,
+                    detail: d.conversions,
+                    class: Some(class),
+                });
+            }
+        }
+        emit(&self.trace, || TraceEvent {
+            clock,
+            kind: EventKind::DispatchEnd,
+            tenant: model.clone(),
+            macro_id: None,
+            cycles: compute_total,
+            twin: false,
+            detail: batch as u64,
+            class: Some(class),
+        });
+        BatchOutcome {
+            model,
+            batch,
+            classes: fwd.classes,
+            logits: fwd.logits,
             device_cycles: compute_total + reload_cycles + migration_cycles,
             reload_cycles,
             reload_events,
             migration_cycles,
             evicted,
-        })
+        }
     }
 
     /// Run one image through the digital twin for a **resident** tenant
@@ -1083,8 +1248,16 @@ impl Fleet {
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("model '{model}' registered without weights"))?;
         let spec = self.spec;
-        let feats = twin_forward(&mut self.twin, placed, &entry.arch, weights, &spec, image);
-        Ok(sim_classify(&feats, entry.arch.num_classes))
+        let mut deltas = vec![MacroStats::default(); self.twin.len()];
+        let feats =
+            twin_forward(&self.twin, placed, &entry.arch, weights, &spec, image, &mut deltas);
+        let num_classes = entry.arch.num_classes;
+        for (i, d) in deltas.iter().enumerate() {
+            if d.compute_cycles > 0 || d.conversions > 0 {
+                Arc::make_mut(&mut self.twin[i]).stats.absorb(d);
+            }
+        }
+        Ok(sim_classify(&feats, num_classes))
     }
 
     /// The QoS scheduling core (specs, buckets, queued metadata, stats).
@@ -1253,7 +1426,7 @@ impl Fleet {
 /// paper's row-broadcast touches every column, which is exactly why the
 /// ledger charges the whole `load_cycles_per_macro` for it.
 fn materialize_placement(
-    twin: &mut [CimMacro],
+    twin: &mut [Arc<CimMacro>],
     placed: &mut BTreeMap<String, PlacedMapping>,
     entry: &ModelEntry,
     regions: &[Region],
@@ -1296,13 +1469,14 @@ fn materialize_placement(
     for ((span, range), region) in pm.span_ranges().zip(regions) {
         debug_assert_eq!((span.macro_id, span.bl_start), (region.macro_id, region.bl_start));
         if span.bl_count == region.bl_count {
-            twin[span.macro_id].load_columns(span.bl_start, &weights.columns[range]);
+            Arc::make_mut(&mut twin[span.macro_id])
+                .load_columns(span.bl_start, &weights.columns[range]);
         } else {
             // Whole-macro tail: pad with empty columns so the write spans
             // (and charges) the region's full allocated width.
             let mut cols = weights.columns[range].to_vec();
             cols.resize(region.bl_count, Vec::new());
-            twin[span.macro_id].load_columns(span.bl_start, &cols);
+            Arc::make_mut(&mut twin[span.macro_id]).load_columns(span.bl_start, &cols);
         }
     }
     placed.insert(entry.name.clone(), pm);
@@ -1321,13 +1495,20 @@ fn materialize_placement(
 /// placement is a real extra pass — accumulate the ADC codes in the adder
 /// tree, scale by `S_W·S_ADC`, ReLU. The last layer's activations are the
 /// feature vector the (non-CIM) classifier head consumes.
+///
+/// Read-only over the macro snapshots: each pass runs through
+/// [`CimMacro::pass_delta`] and its compute/conversion charges accumulate
+/// into `deltas` (indexed by macro id) for the caller to book — which is
+/// what lets [`ForwardJob::run`] execute on a worker thread while the
+/// driver keeps mutating the live pool.
 fn twin_forward(
-    twin: &mut [CimMacro],
+    twin: &[Arc<CimMacro>],
     placed: &PlacedMapping,
     arch: &ModelArch,
     weights: &ModelWeights,
     spec: &MacroSpec,
     image: &[f32],
+    deltas: &mut [MacroStats],
 ) -> Vec<f32> {
     let dac_max = (1i32 << spec.dac_bits) - 1;
     let mut outputs: Vec<Vec<f32>> = Vec::with_capacity(arch.layers.len());
@@ -1358,7 +1539,8 @@ fn twin_forward(
                 .collect();
             let logical = lm.bl_start + seg * lm.c_out;
             for run in placed.physical_runs(logical, lm.c_out) {
-                let r = twin[run.macro_id].pass(&codes, run.bl_start, run.bl_count);
+                let (r, d) = twin[run.macro_id].pass_delta(&codes, run.bl_start, run.bl_count);
+                deltas[run.macro_id].absorb(&d);
                 let off = run.logical_start - logical;
                 for (j, &code) in r.codes.iter().enumerate() {
                     psum[off + j] += code as i64;
@@ -1442,6 +1624,8 @@ pub struct FleetHandle {
     pub metrics: Arc<Metrics>,
     dispatcher: Mutex<Option<thread::JoinHandle<FleetSnapshot>>>,
     image_len: usize,
+    /// Reusable wire codec behind [`FleetHandle::submit_bytes`].
+    codec: Mutex<StreamCodec>,
 }
 
 impl FleetServer {
@@ -1484,6 +1668,7 @@ impl FleetServer {
             metrics,
             dispatcher: Mutex::new(Some(dispatcher)),
             image_len: 3 * 32 * 32,
+            codec: Mutex::new(StreamCodec::new()),
         })
     }
 }
@@ -1587,14 +1772,36 @@ impl FleetHandle {
         self.depth.fetch_add(1, Ordering::AcqRel);
         let id = self.next_id.fetch_add(1, Ordering::AcqRel);
         let (rtx, rrx) = mpsc::channel();
-        self.send(Msg::Infer(FleetRequest {
+        let sent = self.send(Msg::Infer(FleetRequest {
             id,
             model: model.to_string(),
             image,
             enqueued: Instant::now(),
             respond: rtx,
-        }))?;
+        }));
+        if sent.is_err() {
+            // The request never reached the dispatcher, which therefore
+            // will never decrement for it — roll the depth back here.
+            self.depth.fetch_sub(1, Ordering::AcqRel);
+            self.metrics.on_reject();
+            anyhow::bail!("fleet stopped");
+        }
         Ok(Ticket { id, rx: rrx })
+    }
+
+    /// Submit a tagged request from its JSON wire form,
+    /// `{"model": "name", "image": [f32; image_len]}`, decoded through
+    /// the handle's reusable [`StreamCodec`] — no `Json` tree is built.
+    pub fn submit_bytes(&self, bytes: &[u8]) -> Result<Ticket> {
+        let mut codec = self.codec.lock().unwrap();
+        let req = codec
+            .decode_request(bytes)
+            .map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
+        let image = req.take_image();
+        let model = req
+            .model()
+            .ok_or_else(|| anyhow::anyhow!("fleet request needs a 'model'"))?;
+        self.submit(model, image)
     }
 
     /// Stop accepting, drain, and return final metrics + fleet snapshot.
@@ -2020,6 +2227,32 @@ mod tests {
         assert_eq!(m.completed, 12);
         assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
         assert!(snap.hot_swaps >= 1);
+    }
+
+    #[test]
+    fn server_submit_bytes_routes_by_model() {
+        let spec = MacroSpec::default();
+        let h = FleetServer::start(&cfg(4), &spec);
+        h.register("edge", vgg9().scaled(0.1), false).unwrap();
+        let image = img();
+        let direct = h.submit("edge", image.clone()).unwrap().wait().unwrap();
+
+        let mut wire = Vec::from(&br#"{"model":"edge","image":["#[..]);
+        for (i, v) in image.iter().enumerate() {
+            if i > 0 {
+                wire.push(b',');
+            }
+            wire.extend_from_slice(format!("{v}").as_bytes());
+        }
+        wire.extend_from_slice(b"]}");
+        let resp = h.submit_bytes(&wire).unwrap().wait().unwrap();
+        assert_eq!(resp.class, direct.class);
+        assert_eq!(resp.logits, direct.logits);
+
+        // Missing model and malformed JSON both reject at decode time.
+        assert!(h.submit_bytes(br#"{"image": [1, 2]}"#).is_err());
+        assert!(h.submit_bytes(br#"{"model": "edge", "image": [1;]}"#).is_err());
+        h.shutdown();
     }
 
     #[test]

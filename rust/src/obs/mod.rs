@@ -42,6 +42,9 @@ pub use audit::{AuditReport, LedgerAuditor};
 pub use event::{EventKind, TraceEvent};
 pub use export::{ascii_timeline, chrome_trace, events_from_chrome, prometheus_text};
 pub use hist::{CycleHistogram, Histograms, LaneHists, HIST_BUCKETS};
-pub use sink::{FleetTrace, NoopSink, SharedSink, Tee, TraceLog, TraceSink, DEFAULT_TRACE_CAPACITY};
+pub use sink::{
+    FleetTrace, NoopSink, ReorderSink, SharedSink, Tee, TraceLog, TraceSink,
+    DEFAULT_TRACE_CAPACITY,
+};
 
 pub(crate) use sink::emit;

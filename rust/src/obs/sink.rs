@@ -9,7 +9,7 @@
 //! exactly one branch — the event is never even constructed
 //! (see [`emit`]).
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Mutex};
 
 use super::audit::LedgerAuditor;
@@ -152,6 +152,100 @@ impl TraceSink for Tee {
     }
 }
 
+/// Reorders event segments back into deterministic op order.
+///
+/// The concurrent runtime ([`crate::runtime::ConcurrentFleet`]) overlaps
+/// batches: op *k*'s finish events are emitted after op *k+1*'s begin
+/// events. Sequential replays — and the [`LedgerAuditor`]'s
+/// clock-monotonicity check — want the stream in op order, with each
+/// op's begin and finish contiguous. The driver brackets every emission
+/// burst in a numbered *slot* (`begin_segment`/`end_segment`, slots
+/// numbered in op order) and `seal`s a slot when its op has fully
+/// finished; sealed slots flush to the inner sink strictly in slot
+/// order, so the merged stream is byte-identical to what the sequential
+/// driver would have produced.
+///
+/// Events recorded outside any open segment pass straight through.
+/// All emission happens on the driver thread — workers never touch the
+/// sink — so no cross-thread buffering is needed, only re-sequencing.
+#[derive(Debug)]
+pub struct ReorderSink {
+    inner: SharedSink,
+    slots: BTreeMap<u64, Slot>,
+    current: Option<u64>,
+    next_flush: u64,
+}
+
+#[derive(Debug, Default)]
+struct Slot {
+    events: Vec<TraceEvent>,
+    sealed: bool,
+}
+
+impl ReorderSink {
+    /// A reorder buffer in front of `inner`.
+    pub fn new(inner: SharedSink) -> ReorderSink {
+        ReorderSink {
+            inner,
+            slots: BTreeMap::new(),
+            current: None,
+            next_flush: 0,
+        }
+    }
+
+    /// Route subsequent events into slot `seq` (creating it if new —
+    /// a finish burst re-opens the slot its begin burst created).
+    pub fn begin_segment(&mut self, seq: u64) {
+        self.slots.entry(seq).or_default();
+        self.current = Some(seq);
+    }
+
+    /// Stop routing into the current slot (events pass through again).
+    pub fn end_segment(&mut self) {
+        self.current = None;
+    }
+
+    /// Mark slot `seq` complete and flush every leading sealed slot, in
+    /// slot order, to the inner sink.
+    pub fn seal(&mut self, seq: u64) {
+        if let Some(s) = self.slots.get_mut(&seq) {
+            s.sealed = true;
+        }
+        while self
+            .slots
+            .get(&self.next_flush)
+            .map(|s| s.sealed)
+            .unwrap_or(false)
+        {
+            let slot = self.slots.remove(&self.next_flush).expect("checked above");
+            let mut inner = self.inner.lock().unwrap();
+            for ev in &slot.events {
+                inner.record(ev);
+            }
+            self.next_flush += 1;
+        }
+    }
+
+    /// Events buffered in unsealed (or not-yet-flushable) slots.
+    pub fn buffered(&self) -> usize {
+        self.slots.values().map(|s| s.events.len()).sum()
+    }
+}
+
+impl TraceSink for ReorderSink {
+    fn record(&mut self, ev: &TraceEvent) {
+        match self.current {
+            Some(seq) => self
+                .slots
+                .get_mut(&seq)
+                .expect("begin_segment created the slot")
+                .events
+                .push(ev.clone()),
+            None => self.inner.lock().unwrap().record(ev),
+        }
+    }
+}
+
 /// The standard tracing bundle: ring-buffer log + per-tenant histograms
 /// + online ledger audit, all fed from one [`Tee`].
 ///
@@ -240,6 +334,44 @@ mod tests {
         let sink = Some(trace.sink());
         emit(&sink, || ev(1, EventKind::Reject));
         assert_eq!(trace.log.lock().unwrap().count(EventKind::Reject), 1);
+    }
+
+    #[test]
+    fn reorder_sink_flushes_sealed_slots_in_order() {
+        let log: Arc<Mutex<TraceLog>> = Arc::new(Mutex::new(TraceLog::new(16)));
+        let inner: SharedSink = log.clone();
+        let mut r = ReorderSink::new(inner);
+        // Op 0 begin, op 1 begin+seal (a synchronous op), op 0 finish+seal
+        // — the overlapped emission order the concurrent driver produces.
+        r.begin_segment(0);
+        r.record(&ev(10, EventKind::DispatchStart));
+        r.end_segment();
+        r.begin_segment(1);
+        r.record(&ev(20, EventKind::Admit));
+        r.end_segment();
+        r.seal(1);
+        assert_eq!(log.lock().unwrap().total(), 0, "slot 0 still open blocks slot 1");
+        assert_eq!(r.buffered(), 2);
+        r.begin_segment(0);
+        r.record(&ev(10, EventKind::DispatchEnd));
+        r.end_segment();
+        r.seal(0);
+        assert_eq!(r.buffered(), 0);
+        let kinds: Vec<EventKind> = log.lock().unwrap().events().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![EventKind::DispatchStart, EventKind::DispatchEnd, EventKind::Admit],
+            "op 0's begin+finish flush contiguously before op 1"
+        );
+    }
+
+    #[test]
+    fn reorder_sink_passes_through_outside_segments() {
+        let log: Arc<Mutex<TraceLog>> = Arc::new(Mutex::new(TraceLog::new(16)));
+        let inner: SharedSink = log.clone();
+        let mut r = ReorderSink::new(inner);
+        r.record(&ev(1, EventKind::Admit));
+        assert_eq!(log.lock().unwrap().total(), 1);
     }
 
     #[test]

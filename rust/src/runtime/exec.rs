@@ -1,0 +1,616 @@
+//! The work-stealing serving runtime: real threads, deterministic books.
+//!
+//! Two layers:
+//!
+//! * [`Executor`] — a `std`-only work-stealing thread pool: each worker
+//!   owns a [`StealDeque`] (owner pops LIFO bottom, idle workers steal
+//!   FIFO top — see [`super::steal`]). Submission pushes straight onto
+//!   the target worker's deque, so the fast path contends on one
+//!   per-worker mutex at most, never on a global queue (the
+//!   single-`Mutex<Receiver>` hand-off in `util/threadpool.rs` is
+//!   exactly the bottleneck this replaces).
+//! * [`ConcurrentFleet`] — the concurrent counterpart of the
+//!   deterministic [`QosFleet`](crate::fleet::QosFleet) driver. Every
+//!   *decision* (admission, QoS selection, placement, eviction, every
+//!   ledger charge, the virtual-clock tick) runs sequentially on the
+//!   driver thread via [`Fleet::serve_begin`]; only the pure
+//!   [`ForwardJob`] — the twin passes — is offloaded to the executor,
+//!   keyed to the batch's primary macro so one tenant's passes stay on
+//!   one worker's cache-hot deque until somebody steals. While a job
+//!   runs, the driver admits and prices the **next** batch
+//!   (`dispatch_estimate` off the critical path) — the admission/compute
+//!   overlap the minimal-buffer-traffic dataflow papers motivate.
+//!
+//! Equivalence contract (CI-gated by `tests/proptests.rs`): for any op
+//! script, [`ConcurrentFleet`] and [`QosFleet`](crate::fleet::QosFleet)
+//! make identical admission/dispatch decisions, produce bit-exact
+//! 4-ledger totals, and — through the [`ReorderSink`] slot buffer, which
+//! re-sequences each batch's finish events back behind its begin events
+//! — byte-identical trace streams. This holds by construction:
+//! `serve_begin` advances the clock before the forward runs (the
+//! charges are already final), forward jobs read copy-on-write `Arc`
+//! snapshots and never touch fleet state, and finishes are applied in
+//! dispatch (FIFO) order.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::arch::ModelArch;
+use crate::config::{FleetConfig, MacroSpec};
+use crate::fleet::{
+    Admission, BatchOutcome, BatchPlan, CompactionPlan, Fleet, FleetSnapshot, ForwardOutput,
+    QosSpec,
+};
+use crate::obs::{ReorderSink, SharedSink};
+
+use super::steal::StealDeque;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Aggregate executor counters (monotonic; summed over workers).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecStats {
+    /// Tasks submitted.
+    pub spawned: u64,
+    /// Tasks a worker popped from its own deque (LIFO end).
+    pub popped: u64,
+    /// Tasks taken from another worker's deque (FIFO end).
+    pub stolen: u64,
+    /// Tasks that finished running.
+    pub executed: u64,
+}
+
+struct ExecShared {
+    deques: Vec<StealDeque<Task>>,
+    executed: Vec<AtomicU64>,
+    shutdown: AtomicBool,
+    park_mx: Mutex<()>,
+    park_cv: Condvar,
+}
+
+/// A fixed pool of work-stealing workers.
+///
+/// Each worker services its own deque LIFO and scans the others FIFO
+/// when idle; idle workers park on a condvar with a bounded timeout, so
+/// a lost wakeup costs a millisecond, not liveness. Dropping the
+/// executor drains every queued task, then joins the workers.
+pub struct Executor {
+    shared: Arc<ExecShared>,
+    workers: Vec<thread::JoinHandle<()>>,
+    next: AtomicUsize,
+}
+
+impl Executor {
+    /// An executor with `workers` threads (clamped to ≥ 1).
+    pub fn new(workers: usize) -> Executor {
+        let n = workers.max(1);
+        let shared = Arc::new(ExecShared {
+            deques: (0..n).map(|_| StealDeque::new()).collect(),
+            executed: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            shutdown: AtomicBool::new(false),
+            park_mx: Mutex::new(()),
+            park_cv: Condvar::new(),
+        });
+        let workers = (0..n)
+            .map(|id| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("cim-exec-{id}"))
+                    .spawn(move || worker_loop(id, &shared))
+                    .expect("spawn executor worker")
+            })
+            .collect();
+        Executor {
+            shared,
+            workers,
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    /// Executor sized to the machine (`nproc`, capped at 8).
+    pub fn default_size() -> Executor {
+        let n = thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(8);
+        Executor::new(n)
+    }
+
+    /// Worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.shared.deques.len()
+    }
+
+    /// Submit a task round-robin over the workers.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let w = self.next.fetch_add(1, Ordering::Relaxed) % self.workers();
+        self.spawn_at(w, f);
+    }
+
+    /// Submit a task onto worker `affinity % workers`'s deque — related
+    /// tasks land on one worker's cache-hot LIFO end; the rest of the
+    /// pool can still steal them from the FIFO end when that worker
+    /// backs up.
+    pub fn spawn_at<F: FnOnce() + Send + 'static>(&self, affinity: usize, f: F) {
+        let w = affinity % self.workers();
+        self.shared.deques[w].push(Box::new(f));
+        // Wake any parked worker: the task is stealable, so whoever
+        // wakes first can run it.
+        let _g = self.shared.park_mx.lock().unwrap();
+        self.shared.park_cv.notify_all();
+    }
+
+    /// Aggregate counters over all workers.
+    pub fn stats(&self) -> ExecStats {
+        let mut s = ExecStats::default();
+        for d in &self.shared.deques {
+            let (pushed, popped, stolen) = d.stats().snapshot();
+            s.spawned += pushed;
+            s.popped += popped;
+            s.stolen += stolen;
+        }
+        for e in &self.shared.executed {
+            s.executed += e.load(Ordering::Relaxed);
+        }
+        s
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _g = self.shared.park_mx.lock().unwrap();
+            self.shared.park_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(id: usize, shared: &ExecShared) {
+    let n = shared.deques.len();
+    loop {
+        // Own deque first (LIFO — freshest, cache-hot), then scan the
+        // victims round-robin starting after ourselves (FIFO — their
+        // oldest, coldest task).
+        let task = shared.deques[id]
+            .pop()
+            .or_else(|| (1..n).find_map(|k| shared.deques[(id + k) % n].steal()));
+        match task {
+            Some(t) => {
+                t();
+                shared.executed[id].fetch_add(1, Ordering::Relaxed);
+            }
+            None => {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break;
+                }
+                let g = shared.park_mx.lock().unwrap();
+                // Re-check under the lock so a submit between our scan
+                // and the park can't be missed for longer than the
+                // bounded timeout.
+                if shared.deques.iter().all(|d| d.is_empty())
+                    && !shared.shutdown.load(Ordering::Acquire)
+                {
+                    let _ = shared
+                        .park_cv
+                        .wait_timeout(g, Duration::from_millis(1))
+                        .unwrap();
+                }
+            }
+        }
+    }
+}
+
+/// One dispatched batch whose forward passes are still on a worker.
+struct Inflight {
+    seq: u64,
+    plan: BatchPlan,
+    rx: mpsc::Receiver<ForwardOutput>,
+}
+
+/// The concurrent serving driver: the deterministic [`Fleet`] core plus
+/// payload queues, driven exactly like
+/// [`QosFleet`](crate::fleet::QosFleet) — same admission, same
+/// selection, same charges, same clock — but with every batch's forward
+/// passes offloaded to the work-stealing [`Executor`] while the driver
+/// admits and prices the next batch.
+///
+/// All fleet state lives on the driver thread; workers only ever see
+/// self-contained [`ForwardJob`](crate::fleet::ForwardJob)s holding
+/// copy-on-write snapshots. Finishes are applied in dispatch (FIFO)
+/// order, and trace events are re-sequenced through a [`ReorderSink`]
+/// slot per op, so decisions, ledgers and the event stream are all
+/// bit-identical to the sequential driver's (property-tested in
+/// `tests/proptests.rs`).
+pub struct ConcurrentFleet {
+    fleet: Fleet,
+    pending: BTreeMap<String, VecDeque<Vec<Vec<f32>>>>,
+    exec: Executor,
+    inflight: VecDeque<Inflight>,
+    completed: Vec<BatchOutcome>,
+    reorder: Option<Arc<Mutex<ReorderSink>>>,
+    seq: u64,
+}
+
+impl ConcurrentFleet {
+    /// A concurrent driver over a fresh fleet configured by `cfg`, with
+    /// a `workers`-thread executor.
+    pub fn new(cfg: &FleetConfig, spec: &MacroSpec, workers: usize) -> ConcurrentFleet {
+        ConcurrentFleet {
+            fleet: Fleet::new(cfg, spec),
+            pending: BTreeMap::new(),
+            exec: Executor::new(workers),
+            inflight: VecDeque::new(),
+            completed: Vec::new(),
+            reorder: None,
+            seq: 0,
+        }
+    }
+
+    /// The underlying deterministic fleet core. Twin compute stats lag
+    /// behind by the in-flight batches; call [`ConcurrentFleet::drain`]
+    /// or [`ConcurrentFleet::snapshot`] first for settled books.
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
+    }
+
+    /// Install (or clear) a trace sink. The sink is wrapped in a
+    /// [`ReorderSink`] so the overlapped emission order (op *k*'s finish
+    /// after op *k+1*'s begin) is re-sequenced into deterministic op
+    /// order before it reaches the caller's sink.
+    pub fn set_trace(&mut self, trace: Option<SharedSink>) {
+        match trace {
+            Some(sink) => {
+                let reorder = Arc::new(Mutex::new(ReorderSink::new(sink)));
+                let shared: SharedSink = reorder.clone();
+                self.fleet.set_trace(Some(shared));
+                self.reorder = Some(reorder);
+            }
+            None => {
+                self.fleet.set_trace(None);
+                self.reorder = None;
+            }
+        }
+    }
+
+    /// Register a tenant (see [`Fleet::register`]).
+    pub fn register(&mut self, name: &str, arch: ModelArch, pinned: bool) -> Result<()> {
+        self.fleet.register(name, arch, pinned)
+    }
+
+    /// Register a tenant with an explicit QoS contract.
+    pub fn register_with_qos(
+        &mut self,
+        name: &str,
+        arch: ModelArch,
+        pinned: bool,
+        spec: QosSpec,
+    ) -> Result<()> {
+        self.fleet.register_with_qos(name, arch, pinned, spec)
+    }
+
+    /// Retire a tenant: waits for in-flight batches (their finish events
+    /// read the tenant's QoS spec, which dies with it), then drops its
+    /// queued payloads and frees its regions.
+    pub fn retire(&mut self, name: &str) -> Result<()> {
+        self.wait_inflight();
+        self.pending.remove(name);
+        self.fleet.retire(name)
+    }
+
+    /// Submit one batch through admission control — identical decision
+    /// procedure (and identical `Admit`/`Reject` events) to
+    /// [`QosFleet::submit`](crate::fleet::QosFleet::submit).
+    pub fn submit(&mut self, model: &str, images: Vec<Vec<f32>>) -> Result<Admission> {
+        self.reap_ready();
+        anyhow::ensure!(!images.is_empty(), "empty batch for model '{model}'");
+        let seq = self.segment_begin();
+        let result = self
+            .fleet
+            .dispatch_estimate(model, images.len())
+            .map(|est| {
+                let admission = self.fleet.qos_mut().admit(model, images.len(), &est);
+                if admission.is_admitted() {
+                    self.pending
+                        .entry(model.to_string())
+                        .or_default()
+                        .push_back(images);
+                }
+                admission
+            });
+        self.segment_end();
+        self.segment_seal(seq);
+        result
+    }
+
+    /// Queued (admitted, undispatched) batches across all tenants.
+    pub fn pending_batches(&self) -> usize {
+        self.pending.values().map(|q| q.len()).sum()
+    }
+
+    /// Dispatched batches whose forward passes are still on a worker.
+    pub fn inflight_batches(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Dispatch the next batch in policy order: decisions and charges
+    /// run here on the driver thread ([`Fleet::serve_begin`]); the
+    /// forward job is handed to the executor keyed to the batch's
+    /// primary macro. Returns the dispatched model, or `None` when
+    /// nothing is queued — outcomes surface later, in dispatch order,
+    /// from [`ConcurrentFleet::drain`] / [`ConcurrentFleet::take_completed`].
+    pub fn dispatch_next(&mut self) -> Result<Option<String>> {
+        self.reap_ready();
+        let seq = self.segment_begin();
+        let Some(model) = self.fleet.qos_select() else {
+            // Deferral events (heads passed over with nothing eligible)
+            // still belong to this op's slot.
+            self.segment_end();
+            self.segment_seal(seq);
+            return Ok(None);
+        };
+        let images = self
+            .pending
+            .get_mut(&model)
+            .and_then(|q| q.pop_front())
+            .expect("scheduler metadata and payload queues move in lockstep");
+        self.fleet.qos_begin(&model, images.len());
+        let begun = self.fleet.serve_begin(&model, images.len());
+        self.segment_end();
+        let mut plan = match begun {
+            Ok(p) => p,
+            Err(e) => {
+                self.segment_seal(seq);
+                return Err(e);
+            }
+        };
+        let job = plan.take_job();
+        let (tx, rx) = mpsc::channel();
+        self.exec.spawn_at(plan.primary_macro(), move || {
+            let out = job.run(&images);
+            // Release the Arc snapshots before signalling completion so
+            // the driver's finish (and any later re-materialization)
+            // mutates the twin in place instead of cloning.
+            drop(job);
+            drop(images);
+            let _ = tx.send(out);
+        });
+        self.inflight.push_back(Inflight { seq, plan, rx });
+        Ok(Some(model))
+    }
+
+    /// Defragment the pool (see [`Fleet::compact`]) as one sequenced op.
+    pub fn compact(&mut self) -> Result<CompactionPlan> {
+        self.reap_ready();
+        let seq = self.segment_begin();
+        let out = self.fleet.compact();
+        self.segment_end();
+        self.segment_seal(seq);
+        out
+    }
+
+    /// Serve every queued batch in policy order, wait for all forward
+    /// passes, and return every outcome completed since the last take —
+    /// in dispatch order, exactly the sequence
+    /// [`QosFleet::drain`](crate::fleet::QosFleet::drain) returns.
+    pub fn drain(&mut self) -> Result<Vec<BatchOutcome>> {
+        while self.dispatch_next()?.is_some() {}
+        self.wait_inflight();
+        Ok(std::mem::take(&mut self.completed))
+    }
+
+    /// Outcomes completed so far (dispatch order), without dispatching
+    /// or waiting for anything new.
+    pub fn take_completed(&mut self) -> Vec<BatchOutcome> {
+        self.reap_ready();
+        std::mem::take(&mut self.completed)
+    }
+
+    /// Accounting snapshot with settled books: waits for every in-flight
+    /// batch first.
+    pub fn snapshot(&mut self) -> FleetSnapshot {
+        self.wait_inflight();
+        self.fleet.snapshot()
+    }
+
+    /// The executor's steal/throughput counters.
+    pub fn executor_stats(&self) -> ExecStats {
+        self.exec.stats()
+    }
+
+    /// Apply every finish whose forward output is already available,
+    /// oldest first — finishes are only ever applied in dispatch order,
+    /// which is what keeps twin booking and the event stream identical
+    /// to the sequential driver.
+    fn reap_ready(&mut self) {
+        while let Some(head) = self.inflight.front() {
+            match head.rx.try_recv() {
+                Ok(out) => {
+                    let inf = self.inflight.pop_front().expect("front exists");
+                    self.apply_finish(inf, out);
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    unreachable!("forward task dropped its result channel")
+                }
+            }
+        }
+    }
+
+    /// Block until every in-flight batch has finished and been booked.
+    fn wait_inflight(&mut self) {
+        while let Some(inf) = self.inflight.pop_front() {
+            let out = inf.rx.recv().expect("forward task completes");
+            self.apply_finish(inf, out);
+        }
+    }
+
+    fn apply_finish(&mut self, inf: Inflight, out: ForwardOutput) {
+        if let Some(r) = &self.reorder {
+            r.lock().unwrap().begin_segment(inf.seq);
+        }
+        let outcome = self.fleet.serve_finish(inf.plan, out);
+        if let Some(r) = &self.reorder {
+            let mut g = r.lock().unwrap();
+            g.end_segment();
+            g.seal(inf.seq);
+        }
+        self.completed.push(outcome);
+    }
+
+    fn segment_begin(&mut self) -> u64 {
+        let seq = self.seq;
+        self.seq += 1;
+        if let Some(r) = &self.reorder {
+            r.lock().unwrap().begin_segment(seq);
+        }
+        seq
+    }
+
+    fn segment_end(&mut self) {
+        if let Some(r) = &self.reorder {
+            r.lock().unwrap().end_segment();
+        }
+    }
+
+    fn segment_seal(&mut self, seq: u64) {
+        if let Some(r) = &self.reorder {
+            r.lock().unwrap().seal(seq);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vgg9;
+    use crate::config::ExecutionMode;
+    use crate::data::SynthCifar;
+    use crate::fleet::QosFleet;
+    use crate::obs::FleetTrace;
+    use std::sync::atomic::AtomicU64;
+
+    fn img() -> Vec<f32> {
+        SynthCifar::sample(2, 5).data
+    }
+
+    fn cfg(num_macros: usize) -> FleetConfig {
+        FleetConfig {
+            num_macros,
+            coresident: true,
+            execution: ExecutionMode::Twin,
+            ..FleetConfig::default()
+        }
+    }
+
+    #[test]
+    fn executor_runs_and_steals() {
+        let exec = Executor::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        // Pile everything on worker 0 so the other three must steal.
+        for _ in 0..64 {
+            let c = Arc::clone(&counter);
+            exec.spawn_at(0, move || {
+                std::thread::sleep(Duration::from_micros(200));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while counter.load(Ordering::SeqCst) < 64 {
+            assert!(std::time::Instant::now() < deadline, "executor stalled");
+            std::thread::yield_now();
+        }
+        let s = exec.stats();
+        assert_eq!(s.spawned, 64);
+        assert_eq!(s.executed, 64);
+        assert_eq!(s.popped + s.stolen, 64);
+    }
+
+    #[test]
+    fn executor_drop_drains_queued_tasks() {
+        let exec = Executor::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..32 {
+            let c = Arc::clone(&counter);
+            exec.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(exec);
+        assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn concurrent_matches_sequential_on_fixed_script() {
+        let spec = MacroSpec::default();
+        let mut seq = QosFleet::new(&cfg(4), &spec);
+        let mut con = ConcurrentFleet::new(&cfg(4), &spec, 3);
+        for (name, scale) in [("a", 0.04), ("b", 0.05)] {
+            seq.register(name, vgg9().scaled(scale), false).unwrap();
+            con.register(name, vgg9().scaled(scale), false).unwrap();
+        }
+        let mut seq_out = Vec::new();
+        let mut admissions = (Vec::new(), Vec::new());
+        for round in 0..6 {
+            let model = if round % 2 == 0 { "a" } else { "b" };
+            admissions.0.push(seq.submit(model, vec![img(), img()]).unwrap());
+            admissions.1.push(con.submit(model, vec![img(), img()]).unwrap());
+            if round % 3 == 2 {
+                while let Some(o) = seq.dispatch_next().unwrap() {
+                    seq_out.push(o);
+                }
+                while con.dispatch_next().unwrap().is_some() {}
+            }
+        }
+        seq_out.extend(seq.drain().unwrap());
+        let con_out = con.drain().unwrap();
+        assert_eq!(admissions.0, admissions.1, "identical admission decisions");
+        assert_eq!(seq_out.len(), con_out.len());
+        for (s, c) in seq_out.iter().zip(&con_out) {
+            assert_eq!(s.model, c.model);
+            assert_eq!(s.classes, c.classes);
+            assert_eq!(s.logits, c.logits);
+            assert_eq!(s.device_cycles, c.device_cycles);
+            assert_eq!(s.reload_cycles, c.reload_cycles);
+            assert_eq!(s.evicted, c.evicted);
+        }
+        let (ss, cs) = (seq.snapshot(), con.snapshot());
+        assert_eq!(ss.reload_cycles, cs.reload_cycles);
+        assert_eq!(ss.macro_stats, cs.macro_stats);
+        assert_eq!(ss.tenant_stats, cs.tenant_stats);
+        assert_eq!(ss.twin_stats, cs.twin_stats);
+        assert_eq!(ss.qos_stats, cs.qos_stats);
+    }
+
+    #[test]
+    fn concurrent_trace_matches_sequential_trace() {
+        let spec = MacroSpec::default();
+        let mut seq = QosFleet::new(&cfg(2), &spec);
+        let mut con = ConcurrentFleet::new(&cfg(2), &spec, 2);
+        let (st, ct) = (FleetTrace::new(1 << 12), FleetTrace::new(1 << 12));
+        seq.fleet_mut().set_trace(Some(st.sink()));
+        con.set_trace(Some(ct.sink()));
+        seq.register("a", vgg9().scaled(0.04), false).unwrap();
+        con.register("a", vgg9().scaled(0.04), false).unwrap();
+        for _ in 0..4 {
+            seq.submit("a", vec![img()]).unwrap();
+            con.submit("a", vec![img()]).unwrap();
+        }
+        seq.drain().unwrap();
+        con.drain().unwrap();
+        let sev: Vec<_> = st.log.lock().unwrap().events().cloned().collect();
+        let cev: Vec<_> = ct.log.lock().unwrap().events().cloned().collect();
+        assert_eq!(sev, cev, "merged concurrent trace is byte-identical");
+        let snap = con.snapshot();
+        let audit = ct.audit.lock().unwrap().verify(&snap);
+        assert!(audit.pass, "{:?}", audit.first_divergence);
+    }
+}

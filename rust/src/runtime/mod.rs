@@ -9,10 +9,30 @@
 //! metadata (`*_meta.json`): input shape, batch size per variant, the
 //! morphed architecture, ADC steps — everything the coordinator needs to
 //! route requests.
+//!
+//! Alongside the PJRT loader this module hosts the **serving runtime**:
+//! - [`steal`] — per-worker work-stealing deques ([`StealDeque`]): the
+//!   owner pops LIFO from the bottom, idle thieves steal FIFO from the
+//!   top.
+//! - [`exec`] — the work-stealing [`Executor`] and the
+//!   [`ConcurrentFleet`] driver that overlaps admission/pricing with
+//!   in-flight twin passes while staying decision-identical to the
+//!   sequential [`QosFleet`](crate::fleet::QosFleet).
+//! - [`stream`] — the zero-copy streaming request/response codec over
+//!   [`JsonReader`](crate::util::json::JsonReader) /
+//!   [`JsonWriter`](crate::util::json::JsonWriter): the servers' wire
+//!   path decodes requests and encodes responses without building a
+//!   `Json` tree.
 
+pub mod exec;
 pub mod meta;
+pub mod steal;
+pub mod stream;
 
+pub use exec::{ConcurrentFleet, ExecStats, Executor};
 pub use meta::{ArtifactMeta, VariantKey};
+pub use steal::{DequeStats, StealDeque};
+pub use stream::{RequestBuf, ResponseView, StreamCodec};
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

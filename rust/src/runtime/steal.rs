@@ -1,0 +1,161 @@
+//! Per-worker work-stealing deques for the serving executor.
+//!
+//! Each worker owns one [`StealDeque`]: the owner pushes and pops at the
+//! **bottom** (LIFO — freshly spawned work stays cache-hot), idle workers
+//! steal from the **top** (FIFO — the oldest task migrates, which is the
+//! one least likely to be in the owner's cache and most likely to be a
+//! large subtree of work). This is the classic Chase–Lev discipline; with
+//! no `crossbeam` in the offline registry the ring is a `Mutex<VecDeque>`,
+//! which keeps the memory model trivially sound. The mutex is per-worker,
+//! so the owner's push/pop fast path only ever contends with an active
+//! thief on *that* deque — never with global submission traffic.
+//!
+//! Counters ([`DequeStats`]) are plain relaxed atomics: they feed the
+//! bench report and the executor's idle heuristics, not correctness.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotonic per-deque counters (relaxed; observability only).
+#[derive(Debug, Default)]
+pub struct DequeStats {
+    /// Tasks pushed by the owner.
+    pub pushed: AtomicU64,
+    /// Tasks popped by the owner (LIFO end).
+    pub popped: AtomicU64,
+    /// Tasks stolen by other workers (FIFO end).
+    pub stolen: AtomicU64,
+}
+
+impl DequeStats {
+    /// Snapshot as `(pushed, popped, stolen)`.
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.pushed.load(Ordering::Relaxed),
+            self.popped.load(Ordering::Relaxed),
+            self.stolen.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// A double-ended work queue owned by one worker, stealable by the rest.
+#[derive(Debug)]
+pub struct StealDeque<T> {
+    ring: Mutex<VecDeque<T>>,
+    stats: DequeStats,
+}
+
+impl<T> Default for StealDeque<T> {
+    fn default() -> StealDeque<T> {
+        StealDeque::new()
+    }
+}
+
+impl<T> StealDeque<T> {
+    /// An empty deque.
+    pub fn new() -> StealDeque<T> {
+        StealDeque {
+            ring: Mutex::new(VecDeque::new()),
+            stats: DequeStats::default(),
+        }
+    }
+
+    /// Owner-side push (bottom). Uncontended unless a thief is mid-steal
+    /// on this very deque.
+    pub fn push(&self, task: T) {
+        self.ring.lock().unwrap().push_back(task);
+        self.stats.pushed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Owner-side pop (bottom, LIFO): the most recently pushed task.
+    pub fn pop(&self) -> Option<T> {
+        let t = self.ring.lock().unwrap().pop_back();
+        if t.is_some() {
+            self.stats.popped.fetch_add(1, Ordering::Relaxed);
+        }
+        t
+    }
+
+    /// Thief-side steal (top, FIFO): the oldest task.
+    pub fn steal(&self) -> Option<T> {
+        let t = self.ring.lock().unwrap().pop_front();
+        if t.is_some() {
+            self.stats.stolen.fetch_add(1, Ordering::Relaxed);
+        }
+        t
+    }
+
+    /// Tasks currently queued (racy; scheduling heuristic only).
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    /// Whether the deque is empty (racy; scheduling heuristic only).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The deque's monotonic counters.
+    pub fn stats(&self) -> &DequeStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn owner_pops_lifo_thief_steals_fifo() {
+        let d = StealDeque::new();
+        d.push(1);
+        d.push(2);
+        d.push(3);
+        assert_eq!(d.steal(), Some(1), "thief takes the oldest");
+        assert_eq!(d.pop(), Some(3), "owner takes the newest");
+        assert_eq!(d.pop(), Some(2));
+        assert_eq!(d.pop(), None);
+        assert_eq!(d.steal(), None);
+        assert_eq!(d.stats().snapshot(), (3, 2, 1));
+    }
+
+    #[test]
+    fn concurrent_steals_take_each_task_once() {
+        let d = Arc::new(StealDeque::new());
+        let n = 10_000u64;
+        for i in 0..n {
+            d.push(i);
+        }
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let d = Arc::clone(&d);
+            handles.push(std::thread::spawn(move || {
+                let mut sum = 0u64;
+                let mut count = 0u64;
+                while let Some(v) = d.steal() {
+                    sum += v;
+                    count += 1;
+                }
+                (sum, count)
+            }));
+        }
+        let mut total = 0u64;
+        let mut count = 0u64;
+        while let Some(v) = d.pop() {
+            total += v;
+            count += 1;
+        }
+        for h in handles {
+            let (s, c) = h.join().unwrap();
+            total += s;
+            count += c;
+        }
+        assert_eq!(count, n);
+        assert_eq!(total, n * (n - 1) / 2, "every task seen exactly once");
+        let (pushed, popped, stolen) = d.stats().snapshot();
+        assert_eq!(pushed, n);
+        assert_eq!(popped + stolen, n);
+    }
+}

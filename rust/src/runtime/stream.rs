@@ -1,0 +1,333 @@
+//! Zero-copy streaming request/response codec for the serving wire path.
+//!
+//! The servers speak a tiny JSON protocol: a request is
+//! `{"model": "name", "image": [f32; 3*32*32]}` (the single-model
+//! coordinator omits `"model"`), a response is
+//! `{"id":..,"class":..,"latency_us":..,"device_cycles":..,
+//! "batch_size":..,"logits":[..]}`.
+//!
+//! [`StreamCodec`] moves both directions over the streaming
+//! [`JsonReader`] / [`JsonWriter`] pair instead of the [`Json`] tree:
+//! request pixels are decoded **forward-only** straight into a reusable
+//! `Vec<f32>` and responses are written incrementally into a reusable
+//! byte buffer. No `Json` node is ever allocated on this path — the
+//! serving bench asserts that with the [`nodes_allocated`] ledger — and
+//! after warm-up the codec performs zero heap allocations per request
+//! except the one `Vec<f32>` handed to the server (ownership crosses a
+//! thread boundary there).
+//!
+//! Malformed input reports the same byte positions the tree parser
+//! would, because both front-ends drive the same scanner; shape errors
+//! (missing `"image"`, non-numeric pixel) carry the offset where the
+//! reader stopped.
+//!
+//! [`Json`]: crate::util::json::Json
+//! [`nodes_allocated`]: crate::util::json::nodes_allocated
+
+use crate::coordinator::InferResponse;
+use crate::util::json::{JsonError, JsonReader, JsonToken, JsonWriter};
+
+/// A decoded request, backed by buffers the codec reuses across calls.
+#[derive(Debug, Default)]
+pub struct RequestBuf {
+    model: String,
+    has_model: bool,
+    image: Vec<f32>,
+    has_image: bool,
+}
+
+impl RequestBuf {
+    /// The `"model"` field, when the request carried one.
+    pub fn model(&self) -> Option<&str> {
+        self.has_model.then_some(self.model.as_str())
+    }
+
+    /// The decoded `"image"` pixels.
+    pub fn image(&self) -> &[f32] {
+        &self.image
+    }
+
+    /// Move the pixels out (the codec re-grows the buffer next decode).
+    ///
+    /// This is the one allocation the wire path cannot amortize: the
+    /// server's submit queue takes ownership of the image.
+    pub fn take_image(&mut self) -> Vec<f32> {
+        self.has_image = false;
+        std::mem::take(&mut self.image)
+    }
+
+    fn clear(&mut self) {
+        self.model.clear();
+        self.has_model = false;
+        self.image.clear();
+        self.has_image = false;
+    }
+}
+
+/// Borrowed view of a response about to be encoded — the field set of
+/// [`InferResponse`] without owning the logits.
+#[derive(Debug, Clone, Copy)]
+pub struct ResponseView<'a> {
+    /// Id of the request this answers.
+    pub id: u64,
+    /// Argmax class.
+    pub class: usize,
+    /// Raw logits.
+    pub logits: &'a [f32],
+    /// Wall-clock submit-to-completion time (µs).
+    pub latency_us: u64,
+    /// This request's share of the batch's CIM cycles.
+    pub device_cycles: u64,
+    /// Batch size the request was served in.
+    pub batch_size: usize,
+}
+
+impl<'a> ResponseView<'a> {
+    /// View an [`InferResponse`] (no clone of the logits).
+    pub fn of(r: &'a InferResponse) -> ResponseView<'a> {
+        ResponseView {
+            id: r.id,
+            class: r.class,
+            logits: &r.logits,
+            latency_us: r.latency_us,
+            device_cycles: r.device_cycles,
+            batch_size: r.batch_size,
+        }
+    }
+}
+
+/// Which request field the key we just read selects.
+#[derive(Clone, Copy, PartialEq)]
+enum Field {
+    Model,
+    Image,
+    Skip,
+}
+
+/// Reusable streaming codec: one per connection (or one behind a mutex
+/// per server handle). Holds the request scratch buffers and the
+/// response writer so steady-state decode/encode stays allocation-free.
+#[derive(Debug, Default)]
+pub struct StreamCodec {
+    buf: RequestBuf,
+    w: JsonWriter,
+}
+
+impl StreamCodec {
+    /// A codec with empty buffers.
+    pub fn new() -> StreamCodec {
+        StreamCodec::default()
+    }
+
+    /// Decode one request document into the reusable [`RequestBuf`].
+    ///
+    /// Unknown keys are skipped (forward compatibility); a missing or
+    /// non-numeric `"image"` is an error carrying the byte offset where
+    /// decoding stopped.
+    pub fn decode_request(&mut self, bytes: &[u8]) -> Result<&mut RequestBuf, JsonError> {
+        self.buf.clear();
+        let mut r = JsonReader::new(bytes);
+        match r.next()? {
+            Some(JsonToken::ObjBegin) => {}
+            _ => return Err(err_at(&r, "expected request object")),
+        }
+        loop {
+            let field = match r.next()? {
+                Some(JsonToken::Key(k)) => match k {
+                    "model" => Field::Model,
+                    "image" => Field::Image,
+                    _ => Field::Skip,
+                },
+                Some(JsonToken::ObjEnd) => break,
+                _ => return Err(err_at(&r, "expected key or '}'")),
+            };
+            match field {
+                Field::Model => match r.next()? {
+                    Some(JsonToken::Str(s)) => {
+                        self.buf.model.push_str(s);
+                        self.buf.has_model = true;
+                    }
+                    _ => return Err(err_at(&r, "'model' must be a string")),
+                },
+                Field::Image => {
+                    match r.next()? {
+                        Some(JsonToken::ArrBegin) => {}
+                        _ => return Err(err_at(&r, "'image' must be an array")),
+                    }
+                    loop {
+                        match r.next()? {
+                            Some(JsonToken::Num(n)) => self.buf.image.push(n as f32),
+                            Some(JsonToken::ArrEnd) => break,
+                            _ => return Err(err_at(&r, "'image' must hold numbers")),
+                        }
+                    }
+                    self.buf.has_image = true;
+                }
+                Field::Skip => skip_value(&mut r)?,
+            }
+        }
+        if r.next()?.is_some() {
+            return Err(err_at(&r, "trailing characters"));
+        }
+        if !self.buf.has_image {
+            return Err(err_at(&r, "request has no 'image'"));
+        }
+        Ok(&mut self.buf)
+    }
+
+    /// Encode a response into the reusable output buffer and return it.
+    ///
+    /// Byte-identical to dumping the equivalent [`Json`] tree compactly
+    /// (keys emitted in sorted order), without building one.
+    ///
+    /// [`Json`]: crate::util::json::Json
+    pub fn encode_response(&mut self, r: ResponseView<'_>) -> &[u8] {
+        self.w.reset();
+        self.w.begin_obj();
+        self.w.key("batch_size").num(r.batch_size as f64);
+        self.w.key("class").num(r.class as f64);
+        self.w.key("device_cycles").num(r.device_cycles as f64);
+        self.w.key("id").num(r.id as f64);
+        self.w.key("latency_us").num(r.latency_us as f64);
+        self.w.key("logits").begin_arr();
+        for &l in r.logits {
+            self.w.num(l as f64);
+        }
+        self.w.end_arr();
+        self.w.end_obj();
+        self.w.as_bytes()
+    }
+}
+
+fn err_at(r: &JsonReader<'_>, msg: &str) -> JsonError {
+    JsonError {
+        pos: r.pos(),
+        msg: msg.to_string(),
+    }
+}
+
+/// Consume one complete value (scalar or container) without keeping any
+/// of it — the skip path for unknown request keys.
+fn skip_value(r: &mut JsonReader<'_>) -> Result<(), JsonError> {
+    let mut depth = 0usize;
+    loop {
+        match r.next()? {
+            Some(JsonToken::ObjBegin) | Some(JsonToken::ArrBegin) => depth += 1,
+            Some(JsonToken::ObjEnd) | Some(JsonToken::ArrEnd) => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok(());
+                }
+            }
+            Some(JsonToken::Key(_)) => {}
+            Some(_) => {
+                if depth == 0 {
+                    return Ok(());
+                }
+            }
+            None => return Err(err_at(r, "truncated value")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{nodes_allocated, Json};
+
+    #[test]
+    fn decodes_model_and_image() {
+        let mut c = StreamCodec::new();
+        let req = c
+            .decode_request(br#"{"model": "vgg9", "image": [0.5, -1, 2e0]}"#)
+            .unwrap();
+        assert_eq!(req.model(), Some("vgg9"));
+        assert_eq!(req.image(), &[0.5, -1.0, 2.0]);
+        let img = req.take_image();
+        assert_eq!(img.len(), 3);
+    }
+
+    #[test]
+    fn model_is_optional_and_unknown_keys_skip() {
+        let mut c = StreamCodec::new();
+        let req = c
+            .decode_request(br#"{"tag": {"a": [1, {"b": 2}]}, "image": [1], "v": null}"#)
+            .unwrap();
+        assert_eq!(req.model(), None);
+        assert_eq!(req.image(), &[1.0]);
+    }
+
+    #[test]
+    fn rejects_shapeless_requests() {
+        let mut c = StreamCodec::new();
+        assert!(c.decode_request(b"[]").is_err());
+        assert!(c.decode_request(br#"{"model": "m"}"#).is_err());
+        assert!(c.decode_request(br#"{"image": [1, "x"]}"#).is_err());
+        assert!(c.decode_request(br#"{"image": 3}"#).is_err());
+    }
+
+    #[test]
+    fn malformed_input_reports_tree_parser_positions() {
+        let src = r#"{"image": [1;2]}"#;
+        let te = Json::parse(src).unwrap_err();
+        let mut c = StreamCodec::new();
+        let se = c.decode_request(src.as_bytes()).unwrap_err();
+        assert_eq!(se, te);
+    }
+
+    #[test]
+    fn codec_reuses_buffers_across_requests() {
+        let mut c = StreamCodec::new();
+        c.decode_request(br#"{"model": "a", "image": [1, 2, 3]}"#)
+            .unwrap();
+        let req = c.decode_request(br#"{"image": [9]}"#).unwrap();
+        assert_eq!(req.model(), None, "stale model cleared");
+        assert_eq!(req.image(), &[9.0]);
+    }
+
+    #[test]
+    fn encode_matches_tree_dump() {
+        let resp = InferResponse {
+            id: 7,
+            class: 3,
+            logits: vec![0.5, 2.0, -1.25],
+            latency_us: 42,
+            device_cycles: 1000,
+            batch_size: 4,
+        };
+        let mut c = StreamCodec::new();
+        let bytes = c.encode_response(ResponseView::of(&resp)).to_vec();
+        let tree = Json::obj()
+            .with("id", 7u64)
+            .with("class", 3usize)
+            .with("logits", vec![0.5, 2.0, -1.25])
+            .with("latency_us", 42u64)
+            .with("device_cycles", 1000u64)
+            .with("batch_size", 4usize);
+        assert_eq!(String::from_utf8(bytes).unwrap(), tree.dump());
+    }
+
+    #[test]
+    fn wire_path_allocates_no_json_nodes() {
+        let mut c = StreamCodec::new();
+        let resp = InferResponse {
+            id: 1,
+            class: 0,
+            logits: vec![1.0, 2.0],
+            latency_us: 5,
+            device_cycles: 10,
+            batch_size: 1,
+        };
+        // Warm the buffers, then measure.
+        c.decode_request(br#"{"model": "m", "image": [1, 2]}"#)
+            .unwrap();
+        c.encode_response(ResponseView::of(&resp));
+        let before = nodes_allocated();
+        for _ in 0..16 {
+            c.decode_request(br#"{"model": "m", "image": [1, 2]}"#)
+                .unwrap();
+            c.encode_response(ResponseView::of(&resp));
+        }
+        assert_eq!(nodes_allocated() - before, 0);
+    }
+}

@@ -6,7 +6,24 @@
 //! parser and a pretty printer. It supports the full JSON grammar except
 //! `\u` surrogate pairs beyond the BMP (sufficient here: all our files are
 //! ASCII).
+//!
+//! Two front-ends share one low-level `Scanner`:
+//!
+//! * the **tree API** ([`Json::parse`] / [`Json::dump`]) builds a
+//!   [`Json`] value — used for config files, artifact metadata, and bench
+//!   summaries, where convenience beats allocation count;
+//! * the **streaming API** ([`JsonReader`] / [`JsonWriter`]) tokenizes a
+//!   `&[u8]` forward-only without building any [`Json`] nodes, and writes
+//!   incrementally into a reusable `Vec<u8>` — used on the serving hot
+//!   path. Because both front-ends drive the same scanner in the same
+//!   order, malformed input produces **identical error positions and
+//!   messages** from either API.
+//!
+//! The tree parser counts every [`Json`] node it allocates in a process-wide
+//! ledger ([`nodes_allocated`]); the streaming reader allocates none, which
+//! the serving bench asserts by snapshotting the ledger around the hot path.
 
+use std::cell::Cell;
 use std::collections::BTreeMap;
 use std::fmt;
 
@@ -44,6 +61,27 @@ impl fmt::Display for JsonError {
 }
 
 impl std::error::Error for JsonError {}
+
+thread_local! {
+    /// Per-thread count of [`Json`] nodes allocated by the **tree** parser.
+    /// Thread-local so delta measurements are deterministic even when other
+    /// threads parse concurrently (tests run multi-threaded).
+    static JSON_NODES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Total [`Json`] nodes the tree parser has allocated **on this thread**.
+///
+/// Monotonic; take a delta around the region of interest. The streaming
+/// [`JsonReader`]/[`JsonWriter`] contribute nothing, so a zero delta proves
+/// a code path stayed on the non-allocating streaming pair.
+pub fn nodes_allocated() -> u64 {
+    JSON_NODES.with(|c| c.get())
+}
+
+#[inline]
+fn note_node() {
+    JSON_NODES.with(|c| c.set(c.get() + 1));
+}
 
 impl Json {
     // ---- constructors ----------------------------------------------------
@@ -142,14 +180,13 @@ impl Json {
     /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(input: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
-            b: input.as_bytes(),
-            pos: 0,
+            s: Scanner::new(input.as_bytes()),
         };
-        p.skip_ws();
+        p.s.skip_ws();
         let v = p.value()?;
-        p.skip_ws();
-        if p.pos != p.b.len() {
-            return Err(p.err("trailing characters"));
+        p.s.skip_ws();
+        if p.s.pos != p.s.b.len() {
+            return Err(p.s.err("trailing characters"));
         }
         Ok(v)
     }
@@ -290,12 +327,23 @@ impl fmt::Display for Json {
     }
 }
 
-struct Parser<'a> {
+// ---------------------------------------------------------------------------
+// Scanner: the shared low-level lexer
+// ---------------------------------------------------------------------------
+
+/// Byte-level lexer shared by the tree [`Parser`] and the streaming
+/// [`JsonReader`]. Both front-ends issue the same scanner calls in the same
+/// order, which is what guarantees identical error positions and messages.
+struct Scanner<'a> {
     b: &'a [u8],
     pos: usize,
 }
 
-impl<'a> Parser<'a> {
+impl<'a> Scanner<'a> {
+    fn new(b: &'a [u8]) -> Scanner<'a> {
+        Scanner { b, pos: 0 }
+    }
+
     fn err(&self, msg: &str) -> JsonError {
         JsonError {
             pos: self.pos,
@@ -333,45 +381,32 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn literal(&mut self, lit: &str, v: Json) -> Result<Json, JsonError> {
+    fn literal(&mut self, lit: &str) -> Result<(), JsonError> {
         if self.b[self.pos..].starts_with(lit.as_bytes()) {
             self.pos += lit.len();
-            Ok(v)
+            Ok(())
         } else {
             Err(self.err(&format!("expected '{lit}'")))
         }
     }
 
-    fn value(&mut self) -> Result<Json, JsonError> {
-        self.skip_ws();
-        match self.peek() {
-            Some(b'n') => self.literal("null", Json::Null),
-            Some(b't') => self.literal("true", Json::Bool(true)),
-            Some(b'f') => self.literal("false", Json::Bool(false)),
-            Some(b'"') => Ok(Json::Str(self.string()?)),
-            Some(b'[') => self.array(),
-            Some(b'{') => self.object(),
-            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            _ => Err(self.err("unexpected character")),
-        }
-    }
-
-    fn string(&mut self) -> Result<String, JsonError> {
+    /// Scan a quoted string, decoding escapes into `out` (cleared first).
+    fn string_into(&mut self, out: &mut String) -> Result<(), JsonError> {
+        out.clear();
         self.expect(b'"')?;
-        let mut s = String::new();
         loop {
             match self.bump() {
                 None => return Err(self.err("unterminated string")),
-                Some(b'"') => return Ok(s),
+                Some(b'"') => return Ok(()),
                 Some(b'\\') => match self.bump() {
-                    Some(b'"') => s.push('"'),
-                    Some(b'\\') => s.push('\\'),
-                    Some(b'/') => s.push('/'),
-                    Some(b'n') => s.push('\n'),
-                    Some(b't') => s.push('\t'),
-                    Some(b'r') => s.push('\r'),
-                    Some(b'b') => s.push('\u{8}'),
-                    Some(b'f') => s.push('\u{c}'),
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
                     Some(b'u') => {
                         let mut code = 0u32;
                         for _ in 0..4 {
@@ -381,11 +416,11 @@ impl<'a> Parser<'a> {
                                     .to_digit(16)
                                     .ok_or_else(|| self.err("bad hex in \\u"))?;
                         }
-                        s.push(char::from_u32(code).ok_or_else(|| self.err("bad codepoint"))?);
+                        out.push(char::from_u32(code).ok_or_else(|| self.err("bad codepoint"))?);
                     }
                     _ => return Err(self.err("bad escape")),
                 },
-                Some(c) if c < 0x80 => s.push(c as char),
+                Some(c) if c < 0x80 => out.push(c as char),
                 Some(c) => {
                     // Re-decode UTF-8 multibyte sequence.
                     let start = self.pos - 1;
@@ -400,14 +435,14 @@ impl<'a> Parser<'a> {
                     }
                     let chunk = std::str::from_utf8(&self.b[start..start + len])
                         .map_err(|_| self.err("bad utf8"))?;
-                    s.push_str(chunk);
+                    out.push_str(chunk);
                     self.pos = start + len;
                 }
             }
         }
     }
 
-    fn number(&mut self) -> Result<Json, JsonError> {
+    fn number(&mut self) -> Result<f64, JsonError> {
         let start = self.pos;
         if self.peek() == Some(b'-') {
             self.pos += 1;
@@ -431,60 +466,612 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("bad number"))
+        text.parse::<f64>().map_err(|_| self.err("bad number"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tree parser (builds Json nodes; counts them in the allocation ledger)
+// ---------------------------------------------------------------------------
+
+struct Parser<'a> {
+    s: Scanner<'a>,
+}
+
+impl<'a> Parser<'a> {
+    fn value(&mut self) -> Result<Json, JsonError> {
+        self.s.skip_ws();
+        match self.s.peek() {
+            Some(b'n') => {
+                self.s.literal("null")?;
+                note_node();
+                Ok(Json::Null)
+            }
+            Some(b't') => {
+                self.s.literal("true")?;
+                note_node();
+                Ok(Json::Bool(true))
+            }
+            Some(b'f') => {
+                self.s.literal("false")?;
+                note_node();
+                Ok(Json::Bool(false))
+            }
+            Some(b'"') => {
+                let mut s = String::new();
+                self.s.string_into(&mut s)?;
+                note_node();
+                Ok(Json::Str(s))
+            }
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let n = self.s.number()?;
+                note_node();
+                Ok(Json::Num(n))
+            }
+            _ => Err(self.s.err("unexpected character")),
+        }
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'[')?;
+        self.s.expect(b'[')?;
         let mut items = Vec::new();
-        self.skip_ws();
-        if self.peek() == Some(b']') {
-            self.pos += 1;
+        self.s.skip_ws();
+        if self.s.peek() == Some(b']') {
+            self.s.pos += 1;
+            note_node();
             return Ok(Json::Arr(items));
         }
         loop {
             items.push(self.value()?);
-            self.skip_ws();
+            self.s.skip_ws();
             // Peek so a delimiter error points at the offending token.
-            match self.peek() {
-                Some(b',') => self.pos += 1,
+            match self.s.peek() {
+                Some(b',') => self.s.pos += 1,
                 Some(b']') => {
-                    self.pos += 1;
+                    self.s.pos += 1;
+                    note_node();
                     return Ok(Json::Arr(items));
                 }
-                _ => return Err(self.err("expected ',' or ']'")),
+                _ => return Err(self.s.err("expected ',' or ']'")),
             }
         }
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'{')?;
+        self.s.expect(b'{')?;
         let mut map = BTreeMap::new();
-        self.skip_ws();
-        if self.peek() == Some(b'}') {
-            self.pos += 1;
+        self.s.skip_ws();
+        if self.s.peek() == Some(b'}') {
+            self.s.pos += 1;
+            note_node();
             return Ok(Json::Obj(map));
         }
         loop {
-            self.skip_ws();
-            let key = self.string()?;
-            self.skip_ws();
-            self.expect(b':')?;
+            self.s.skip_ws();
+            let mut key = String::new();
+            self.s.string_into(&mut key)?;
+            self.s.skip_ws();
+            self.s.expect(b':')?;
             let val = self.value()?;
             map.insert(key, val);
-            self.skip_ws();
-            match self.peek() {
-                Some(b',') => self.pos += 1,
+            self.s.skip_ws();
+            match self.s.peek() {
+                Some(b',') => self.s.pos += 1,
                 Some(b'}') => {
-                    self.pos += 1;
+                    self.s.pos += 1;
+                    note_node();
                     return Ok(Json::Obj(map));
                 }
-                _ => return Err(self.err("expected ',' or '}'")),
+                _ => return Err(self.s.err("expected ',' or '}'")),
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming reader (forward-only, allocates no Json nodes)
+// ---------------------------------------------------------------------------
+
+/// One structural token produced by [`JsonReader`].
+///
+/// String-carrying tokens borrow the reader's internal scratch buffer, so a
+/// token must be consumed before the next [`JsonReader::next`] call (the
+/// borrow checker enforces this).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonToken<'a> {
+    /// `{` — an object begins.
+    ObjBegin,
+    /// `}` — the innermost object ends.
+    ObjEnd,
+    /// `[` — an array begins.
+    ArrBegin,
+    /// `]` — the innermost array ends.
+    ArrEnd,
+    /// An object key (the following token is its value).
+    Key(&'a str),
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// A number.
+    Num(f64),
+    /// A string value.
+    Str(&'a str),
+}
+
+/// Which token just got scanned — the borrow-free twin of [`JsonToken`],
+/// used internally so the fallible scan step never returns a borrow.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum TokKind {
+    ObjBegin,
+    ObjEnd,
+    ArrBegin,
+    ArrEnd,
+    Key,
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Frame {
+    Arr,
+    Obj,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum RState {
+    /// Before the top-level value.
+    Start,
+    /// Just consumed `[` — expect `]` or the first element.
+    ArrFirst,
+    /// Just consumed `{` — expect `}` or the first key.
+    ObjFirst,
+    /// Just emitted a key — expect its value.
+    ObjValue,
+    /// Just finished a value inside a container — expect a delimiter.
+    PostValue,
+    /// Top-level value complete — expect end of input.
+    End,
+    /// A previous call returned an error; it is sticky.
+    Failed,
+}
+
+/// Forward-only, non-allocating streaming JSON tokenizer over `&[u8]`.
+///
+/// Drives the same [`Scanner`] as the tree parser in the same order, so
+/// malformed input yields byte-identical error positions and messages.
+/// String contents are decoded into one reusable scratch buffer; no
+/// [`Json`] nodes are ever built (see [`nodes_allocated`]).
+///
+/// ```
+/// # use cim_adapt::util::json::{JsonReader, JsonToken};
+/// let mut r = JsonReader::new(br#"{"model":"vgg9","n":2}"#);
+/// assert_eq!(r.next().unwrap(), Some(JsonToken::ObjBegin));
+/// assert_eq!(r.next().unwrap(), Some(JsonToken::Key("model")));
+/// assert_eq!(r.next().unwrap(), Some(JsonToken::Str("vgg9")));
+/// ```
+#[derive(Debug)]
+pub struct JsonReader<'a> {
+    s: Scanner<'a>,
+    stack: Vec<Frame>,
+    state: RState,
+    scratch: String,
+    err: Option<JsonError>,
+}
+
+impl<'a> JsonReader<'a> {
+    /// Tokenize `input`; nothing is scanned until [`next`](Self::next).
+    pub fn new(input: &'a [u8]) -> JsonReader<'a> {
+        JsonReader {
+            s: Scanner::new(input),
+            stack: Vec::new(),
+            state: RState::Start,
+            scratch: String::new(),
+            err: None,
+        }
+    }
+
+    /// Current byte offset into the input (for error reporting / framing).
+    pub fn pos(&self) -> usize {
+        self.s.pos
+    }
+
+    /// Nesting depth of open containers at this point in the stream.
+    pub fn depth(&self) -> usize {
+        self.stack.len()
+    }
+
+    /// The next token, `Ok(None)` at clean end-of-document, or the parse
+    /// error (sticky: repeated calls keep returning it).
+    #[allow(clippy::should_implement_trait)] // lending iterator, not Iterator
+    pub fn next(&mut self) -> Result<Option<JsonToken<'_>>, JsonError> {
+        let kind = match self.step() {
+            Ok(k) => k,
+            Err(e) => {
+                self.state = RState::Failed;
+                self.err = Some(e.clone());
+                return Err(e);
+            }
+        };
+        Ok(kind.map(|k| match k {
+            TokKind::ObjBegin => JsonToken::ObjBegin,
+            TokKind::ObjEnd => JsonToken::ObjEnd,
+            TokKind::ArrBegin => JsonToken::ArrBegin,
+            TokKind::ArrEnd => JsonToken::ArrEnd,
+            TokKind::Key => JsonToken::Key(&self.scratch),
+            TokKind::Null => JsonToken::Null,
+            TokKind::Bool(b) => JsonToken::Bool(b),
+            TokKind::Num(n) => JsonToken::Num(n),
+            TokKind::Str => JsonToken::Str(&self.scratch),
+        }))
+    }
+
+    /// Scan one token without materializing borrows (strings land in
+    /// `self.scratch`; [`next`](Self::next) wraps them afterwards).
+    fn step(&mut self) -> Result<Option<TokKind>, JsonError> {
+        match self.state {
+            RState::Failed => Err(self
+                .err
+                .clone()
+                .unwrap_or_else(|| self.s.err("reader already failed"))),
+            RState::Start => self.value_token().map(Some),
+            RState::ObjValue => self.value_token().map(Some),
+            RState::ArrFirst => {
+                self.s.skip_ws();
+                if self.s.peek() == Some(b']') {
+                    self.s.pos += 1;
+                    self.close_container();
+                    Ok(Some(TokKind::ArrEnd))
+                } else {
+                    self.value_token().map(Some)
+                }
+            }
+            RState::ObjFirst => {
+                self.s.skip_ws();
+                if self.s.peek() == Some(b'}') {
+                    self.s.pos += 1;
+                    self.close_container();
+                    Ok(Some(TokKind::ObjEnd))
+                } else {
+                    self.key_token().map(Some)
+                }
+            }
+            RState::PostValue => {
+                // Same delimiter handling (and error wording) as the tree
+                // parser's array()/object() loops.
+                let frame = *self.stack.last().expect("PostValue implies open frame");
+                self.s.skip_ws();
+                match frame {
+                    Frame::Arr => match self.s.peek() {
+                        Some(b',') => {
+                            self.s.pos += 1;
+                            self.value_token().map(Some)
+                        }
+                        Some(b']') => {
+                            self.s.pos += 1;
+                            self.close_container();
+                            Ok(Some(TokKind::ArrEnd))
+                        }
+                        _ => Err(self.s.err("expected ',' or ']'")),
+                    },
+                    Frame::Obj => match self.s.peek() {
+                        Some(b',') => {
+                            self.s.pos += 1;
+                            self.key_token().map(Some)
+                        }
+                        Some(b'}') => {
+                            self.s.pos += 1;
+                            self.close_container();
+                            Ok(Some(TokKind::ObjEnd))
+                        }
+                        _ => Err(self.s.err("expected ',' or '}'")),
+                    },
+                }
+            }
+            RState::End => {
+                self.s.skip_ws();
+                if self.s.pos != self.s.b.len() {
+                    Err(self.s.err("trailing characters"))
+                } else {
+                    Ok(None)
+                }
+            }
+        }
+    }
+
+    /// Scan a value token — the streaming twin of `Parser::value`.
+    fn value_token(&mut self) -> Result<TokKind, JsonError> {
+        self.s.skip_ws();
+        match self.s.peek() {
+            Some(b'n') => {
+                self.s.literal("null")?;
+                self.after_value();
+                Ok(TokKind::Null)
+            }
+            Some(b't') => {
+                self.s.literal("true")?;
+                self.after_value();
+                Ok(TokKind::Bool(true))
+            }
+            Some(b'f') => {
+                self.s.literal("false")?;
+                self.after_value();
+                Ok(TokKind::Bool(false))
+            }
+            Some(b'"') => {
+                let JsonReader { s, scratch, .. } = self;
+                s.string_into(scratch)?;
+                self.after_value();
+                Ok(TokKind::Str)
+            }
+            Some(b'[') => {
+                self.s.expect(b'[')?;
+                self.stack.push(Frame::Arr);
+                self.state = RState::ArrFirst;
+                Ok(TokKind::ArrBegin)
+            }
+            Some(b'{') => {
+                self.s.expect(b'{')?;
+                self.stack.push(Frame::Obj);
+                self.state = RState::ObjFirst;
+                Ok(TokKind::ObjBegin)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let n = self.s.number()?;
+                self.after_value();
+                Ok(TokKind::Num(n))
+            }
+            _ => Err(self.s.err("unexpected character")),
+        }
+    }
+
+    /// Scan `"key" :` — the streaming twin of the key half of
+    /// `Parser::object`'s loop body.
+    fn key_token(&mut self) -> Result<TokKind, JsonError> {
+        self.s.skip_ws();
+        let JsonReader { s, scratch, .. } = self;
+        s.string_into(scratch)?;
+        self.s.skip_ws();
+        self.s.expect(b':')?;
+        self.state = RState::ObjValue;
+        Ok(TokKind::Key)
+    }
+
+    fn after_value(&mut self) {
+        self.state = if self.stack.is_empty() {
+            RState::End
+        } else {
+            RState::PostValue
+        };
+    }
+
+    fn close_container(&mut self) {
+        self.stack.pop();
+        self.after_value();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming writer (incremental, into a reusable buffer)
+// ---------------------------------------------------------------------------
+
+/// Incremental JSON writer into a reusable `Vec<u8>`.
+///
+/// Produces byte-for-byte the same compact encoding as [`Json::dump`]
+/// (same number formatting, same escape rules), without requiring a
+/// [`Json`] tree. Comma placement is tracked per nesting level, so callers
+/// just emit tokens in order:
+///
+/// ```
+/// # use cim_adapt::util::json::JsonWriter;
+/// let mut w = JsonWriter::new();
+/// w.begin_obj();
+/// w.key("class").num(3.0);
+/// w.key("logits").begin_arr();
+/// w.num(0.5).num(1.5);
+/// w.end_arr();
+/// w.end_obj();
+/// assert_eq!(w.as_bytes(), br#"{"class":3,"logits":[0.5,1.5]}"#);
+/// ```
+///
+/// [`reset`](Self::reset) clears the buffer but keeps its capacity, so a
+/// long-lived writer amortizes to zero allocations per response.
+#[derive(Debug, Default)]
+pub struct JsonWriter {
+    out: Vec<u8>,
+    /// One entry per open container: `true` once it has an element, so the
+    /// next element knows to lead with a comma.
+    stack: Vec<bool>,
+    /// Set by [`key`](Self::key); the following value skips comma handling.
+    key_pending: bool,
+}
+
+impl JsonWriter {
+    /// A writer with an empty buffer.
+    pub fn new() -> JsonWriter {
+        JsonWriter::default()
+    }
+
+    /// Clear the output (keeping capacity) and all nesting state.
+    pub fn reset(&mut self) {
+        self.out.clear();
+        self.stack.clear();
+        self.key_pending = false;
+    }
+
+    /// The bytes written so far (valid UTF-8 by construction).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.out
+    }
+
+    /// The bytes written so far, as `&str`.
+    pub fn as_str(&self) -> &str {
+        // The writer only ever appends whole UTF-8 sequences.
+        std::str::from_utf8(&self.out).expect("writer emits UTF-8")
+    }
+
+    /// Take the buffer out of the writer, leaving it reset.
+    pub fn take(&mut self) -> Vec<u8> {
+        let buf = std::mem::take(&mut self.out);
+        self.reset();
+        buf
+    }
+
+    fn before_value(&mut self) {
+        if self.key_pending {
+            self.key_pending = false;
+            return;
+        }
+        if let Some(has) = self.stack.last_mut() {
+            if *has {
+                self.out.push(b',');
+            }
+            *has = true;
+        }
+    }
+
+    /// Write an object key (call exactly once before each member value).
+    pub fn key(&mut self, k: &str) -> &mut JsonWriter {
+        if let Some(has) = self.stack.last_mut() {
+            if *has {
+                self.out.push(b',');
+            }
+            *has = true;
+        }
+        escape_into(&mut self.out, k);
+        self.out.push(b':');
+        self.key_pending = true;
+        self
+    }
+
+    /// Open an object (`{`).
+    pub fn begin_obj(&mut self) -> &mut JsonWriter {
+        self.before_value();
+        self.out.push(b'{');
+        self.stack.push(false);
+        self
+    }
+
+    /// Close the innermost object (`}`).
+    pub fn end_obj(&mut self) -> &mut JsonWriter {
+        debug_assert!(!self.key_pending, "key without value");
+        self.stack.pop();
+        self.out.push(b'}');
+        self
+    }
+
+    /// Open an array (`[`).
+    pub fn begin_arr(&mut self) -> &mut JsonWriter {
+        self.before_value();
+        self.out.push(b'[');
+        self.stack.push(false);
+        self
+    }
+
+    /// Close the innermost array (`]`).
+    pub fn end_arr(&mut self) -> &mut JsonWriter {
+        self.stack.pop();
+        self.out.push(b']');
+        self
+    }
+
+    /// Write `null`.
+    pub fn null(&mut self) -> &mut JsonWriter {
+        self.before_value();
+        self.out.extend_from_slice(b"null");
+        self
+    }
+
+    /// Write a boolean.
+    pub fn bool(&mut self, b: bool) -> &mut JsonWriter {
+        self.before_value();
+        self.out
+            .extend_from_slice(if b { b"true" } else { b"false" });
+        self
+    }
+
+    /// Write a number with the exact formatting of [`Json::dump`].
+    pub fn num(&mut self, n: f64) -> &mut JsonWriter {
+        use std::io::Write as _;
+        self.before_value();
+        if n.fract() == 0.0 && n.abs() < 1e15 {
+            let _ = write!(self.out, "{}", n as i64);
+        } else {
+            let _ = write!(self.out, "{}", n);
+        }
+        self
+    }
+
+    /// Write a string value (escaped like [`Json::dump`]).
+    pub fn str(&mut self, s: &str) -> &mut JsonWriter {
+        self.before_value();
+        escape_into(&mut self.out, s);
+        self
+    }
+
+    /// Write a whole [`Json`] tree (compact). Byte-identical to appending
+    /// [`Json::dump`]; used for config/bench values embedded in streamed
+    /// responses and by the round-trip tests.
+    pub fn value(&mut self, v: &Json) -> &mut JsonWriter {
+        match v {
+            Json::Null => {
+                self.null();
+            }
+            Json::Bool(b) => {
+                self.bool(*b);
+            }
+            Json::Num(n) => {
+                self.num(*n);
+            }
+            Json::Str(s) => {
+                self.str(s);
+            }
+            Json::Arr(a) => {
+                self.begin_arr();
+                for item in a {
+                    self.value(item);
+                }
+                self.end_arr();
+            }
+            Json::Obj(m) => {
+                self.begin_obj();
+                for (k, val) in m {
+                    self.key(k);
+                    self.value(val);
+                }
+                self.end_obj();
+            }
+        }
+        self
+    }
+}
+
+/// Escape `s` into `out` with the same rules as the tree writer (note: no
+/// `\b`/`\f` short forms — control characters use `\u00xx`).
+fn escape_into(out: &mut Vec<u8>, s: &str) {
+    use std::io::Write as _;
+    out.push(b'"');
+    for c in s.chars() {
+        match c {
+            '"' => out.extend_from_slice(b"\\\""),
+            '\\' => out.extend_from_slice(b"\\\\"),
+            '\n' => out.extend_from_slice(b"\\n"),
+            '\r' => out.extend_from_slice(b"\\r"),
+            '\t' => out.extend_from_slice(b"\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => {
+                let mut buf = [0u8; 4];
+                out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+            }
+        }
+    }
+    out.push(b'"');
 }
 
 #[cfg(test)]
@@ -571,5 +1158,170 @@ mod tests {
         assert_eq!(Json::parse("42").unwrap().as_usize(), Some(42));
         assert_eq!(Json::parse("-1").unwrap().as_usize(), None);
         assert_eq!(Json::parse("1.5").unwrap().as_usize(), None);
+    }
+
+    // ---- streaming API ---------------------------------------------------
+
+    /// Rebuild a tree by driving the streaming reader — the test-side
+    /// inverse used to cross-check reader and tree parser.
+    fn tree_via_reader(bytes: &[u8]) -> Result<Json, JsonError> {
+        let mut r = JsonReader::new(bytes);
+        // Stack of under-construction containers; `None` key slot for arrays.
+        let mut out: Option<Json> = None;
+        let mut stack: Vec<(Json, Option<String>)> = Vec::new();
+        let mut pending_key: Option<String> = None;
+        loop {
+            let tok = match r.next()? {
+                Some(t) => t,
+                None => break,
+            };
+            let done: Option<Json> = match tok {
+                JsonToken::ObjBegin => {
+                    stack.push((Json::obj(), pending_key.take()));
+                    None
+                }
+                JsonToken::ArrBegin => {
+                    stack.push((Json::Arr(Vec::new()), pending_key.take()));
+                    None
+                }
+                JsonToken::ObjEnd | JsonToken::ArrEnd => {
+                    let (v, k) = stack.pop().unwrap();
+                    pending_key = k;
+                    Some(v)
+                }
+                JsonToken::Key(k) => {
+                    pending_key = Some(k.to_string());
+                    None
+                }
+                JsonToken::Null => Some(Json::Null),
+                JsonToken::Bool(b) => Some(Json::Bool(b)),
+                JsonToken::Num(n) => Some(Json::Num(n)),
+                JsonToken::Str(s) => Some(Json::Str(s.to_string())),
+            };
+            if let Some(v) = done {
+                match stack.last_mut() {
+                    None => out = Some(v),
+                    Some((Json::Arr(items), _)) => items.push(v),
+                    Some((Json::Obj(m), _)) => {
+                        m.insert(pending_key.take().expect("value in object needs key"), v);
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+        Ok(out.expect("document had a value"))
+    }
+
+    #[test]
+    fn reader_matches_tree_parser_on_valid_docs() {
+        for src in [
+            "null",
+            "[]",
+            "{}",
+            "-12.5e3",
+            r#"{"a": [1, 2, {"b": null}], "c": "x\ny", "d": [true, false]}"#,
+            r#"[" spaced ", {"k": []}, 0.125, "Aéπ"]"#,
+        ] {
+            let tree = Json::parse(src).unwrap();
+            let streamed = tree_via_reader(src.as_bytes()).unwrap();
+            assert_eq!(streamed, tree, "src={src}");
+        }
+    }
+
+    #[test]
+    fn reader_matches_tree_parser_error_positions() {
+        for src in [
+            "[1;2]",
+            r#"{"a" 1}"#,
+            r#"{"a": 1 ; "b": 2}"#,
+            "[1, 2",
+            "{",
+            "tru",
+            "1 2",
+            "[1,]",
+            r#"{"a": "unterminated"#,
+            "",
+            "[\"bad\\escape\"]",
+        ] {
+            let te = Json::parse(src).unwrap_err();
+            let se = tree_via_reader(src.as_bytes()).unwrap_err();
+            assert_eq!(se, te, "src={src}");
+        }
+    }
+
+    #[test]
+    fn reader_errors_are_sticky() {
+        let mut r = JsonReader::new(b"[1;2]");
+        assert!(r.next().unwrap().is_some()); // ArrBegin
+        assert!(r.next().unwrap().is_some()); // Num(1)
+        let e1 = r.next().unwrap_err();
+        let e2 = r.next().unwrap_err();
+        assert_eq!(e1, e2);
+        assert_eq!(e1.pos, 2);
+    }
+
+    #[test]
+    fn reader_token_sequence() {
+        let mut r = JsonReader::new(br#"{"image": [0.5, -1], "ok": true}"#);
+        assert_eq!(r.next().unwrap(), Some(JsonToken::ObjBegin));
+        assert_eq!(r.next().unwrap(), Some(JsonToken::Key("image")));
+        assert_eq!(r.next().unwrap(), Some(JsonToken::ArrBegin));
+        assert_eq!(r.next().unwrap(), Some(JsonToken::Num(0.5)));
+        assert_eq!(r.next().unwrap(), Some(JsonToken::Num(-1.0)));
+        assert_eq!(r.next().unwrap(), Some(JsonToken::ArrEnd));
+        assert_eq!(r.next().unwrap(), Some(JsonToken::Key("ok")));
+        assert_eq!(r.next().unwrap(), Some(JsonToken::Bool(true)));
+        assert_eq!(r.next().unwrap(), Some(JsonToken::ObjEnd));
+        assert_eq!(r.next().unwrap(), None);
+        assert_eq!(r.next().unwrap(), None, "end is stable");
+    }
+
+    #[test]
+    fn writer_matches_tree_dump() {
+        let v = Json::obj()
+            .with("model", "vgg9")
+            .with("bl", 4096usize)
+            .with("frac", 0.5)
+            .with("esc", "a\"b\\c\nd\u{1}e")
+            .with("layers", vec![64usize, 128, 256])
+            .with("nested", Json::obj().with("x", Json::Null));
+        let mut w = JsonWriter::new();
+        w.value(&v);
+        assert_eq!(w.as_str(), v.dump());
+    }
+
+    #[test]
+    fn writer_incremental_and_reuse() {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("id").num(7.0);
+        w.key("logits").begin_arr();
+        w.num(0.5).num(2.0);
+        w.end_arr();
+        w.key("ok").bool(true);
+        w.key("note").null();
+        w.end_obj();
+        assert_eq!(w.as_str(), r#"{"id":7,"logits":[0.5,2],"ok":true,"note":null}"#);
+        let cap = w.take().capacity();
+        // After take() the writer is reset and reusable.
+        w.begin_arr();
+        w.str("x");
+        w.end_arr();
+        assert_eq!(w.as_str(), r#"["x"]"#);
+        assert!(cap > 0);
+    }
+
+    #[test]
+    fn allocation_ledger_counts_tree_nodes_only() {
+        let src = r#"{"a": [1, 2], "b": "s"}"#;
+        let before = nodes_allocated();
+        let _ = Json::parse(src).unwrap();
+        let tree_delta = nodes_allocated() - before;
+        // obj + arr + 2 nums + str = 5 nodes.
+        assert_eq!(tree_delta, 5);
+        let before = nodes_allocated();
+        let mut r = JsonReader::new(src.as_bytes());
+        while r.next().unwrap().is_some() {}
+        assert_eq!(nodes_allocated() - before, 0, "streaming allocates no nodes");
     }
 }

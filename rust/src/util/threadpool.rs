@@ -105,33 +105,32 @@ impl ThreadPool {
     }
 
     /// Run a batch of closures to completion, collecting results in order.
+    ///
+    /// Results travel back as `(index, value)` pairs on one channel, so the
+    /// caller does a single collection pass with no shared slot mutex —
+    /// workers never contend on the result path, whatever order they
+    /// finish in.
     pub fn run_all<T, F>(&self, jobs: Vec<F>) -> Vec<T>
     where
         T: Send + 'static,
         F: FnOnce() -> T + Send + 'static,
     {
         let n = jobs.len();
-        let slots: Arc<Mutex<Vec<Option<T>>>> =
-            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
-        let (tx, rx) = mpsc::channel::<()>();
+        let (tx, rx) = mpsc::channel::<(usize, T)>();
         for (i, job) in jobs.into_iter().enumerate() {
-            let slots = Arc::clone(&slots);
             let tx = tx.clone();
             self.submit(move || {
                 let out = job();
-                slots.lock().unwrap()[i] = Some(out);
-                let _ = tx.send(());
+                let _ = tx.send((i, out));
             });
         }
         drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
         for _ in 0..n {
-            rx.recv().expect("worker completed");
+            let (i, out) = rx.recv().expect("worker completed");
+            slots[i] = Some(out);
         }
-        Arc::try_unwrap(slots)
-            .ok()
-            .expect("all workers done")
-            .into_inner()
-            .unwrap()
+        slots
             .into_iter()
             .map(|o| o.expect("slot filled"))
             .collect()
@@ -176,6 +175,31 @@ mod tests {
             .collect();
         let out = pool.run_all(jobs);
         assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_all_collects_out_of_order_completions() {
+        // Early jobs sleep longest, so completions arrive roughly in
+        // reverse submission order — the (index, value) channel must still
+        // reassemble results in submission order.
+        let pool = ThreadPool::new(4);
+        let jobs: Vec<_> = (0..32u64)
+            .map(|i| {
+                move || {
+                    std::thread::sleep(std::time::Duration::from_millis(32 - i));
+                    i * 10
+                }
+            })
+            .collect();
+        let out = pool.run_all(jobs);
+        assert_eq!(out, (0..32u64).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_all_empty_batch() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<u64> = pool.run_all(Vec::<fn() -> u64>::new());
+        assert!(out.is_empty());
     }
 
     #[test]

@@ -14,7 +14,8 @@ use cim_adapt::morph::expand::search_expansion_ratio;
 use cim_adapt::obs::{FleetTrace, LedgerAuditor};
 use cim_adapt::quant::lsq::{lsq_quantize, LsqTensor};
 use cim_adapt::quant::psum::{quantize_psum, segment_inputs};
-use cim_adapt::util::json::Json;
+use cim_adapt::runtime::ConcurrentFleet;
+use cim_adapt::util::json::{Json, JsonError, JsonReader, JsonToken, JsonWriter};
 use cim_adapt::util::prng::Pcg;
 use cim_adapt::util::testkit::*;
 
@@ -269,6 +270,113 @@ fn prop_json_roundtrip_pretty() {
     check("parse ∘ pretty = id", cases(400), json_values(3), |v| {
         Json::parse(&v.pretty()).map(|back| back == *v).unwrap_or(false)
     });
+}
+
+/// Rebuild a [`Json`] tree by driving the streaming reader — the
+/// test-side inverse of [`JsonWriter`], used to cross-check the
+/// streaming pair against the tree parser.
+fn reader_rebuild(bytes: &[u8]) -> Result<Json, JsonError> {
+    let mut r = JsonReader::new(bytes);
+    let mut out: Option<Json> = None;
+    let mut stack: Vec<(Json, Option<String>)> = Vec::new();
+    let mut pending_key: Option<String> = None;
+    loop {
+        let tok = match r.next()? {
+            Some(t) => t,
+            None => break,
+        };
+        let done: Option<Json> = match tok {
+            JsonToken::ObjBegin => {
+                stack.push((Json::obj(), pending_key.take()));
+                None
+            }
+            JsonToken::ArrBegin => {
+                stack.push((Json::Arr(Vec::new()), pending_key.take()));
+                None
+            }
+            JsonToken::ObjEnd | JsonToken::ArrEnd => {
+                let (v, k) = stack.pop().unwrap();
+                pending_key = k;
+                Some(v)
+            }
+            JsonToken::Key(k) => {
+                pending_key = Some(k.to_string());
+                None
+            }
+            JsonToken::Null => Some(Json::Null),
+            JsonToken::Bool(b) => Some(Json::Bool(b)),
+            JsonToken::Num(n) => Some(Json::Num(n)),
+            JsonToken::Str(s) => Some(Json::Str(s.to_string())),
+        };
+        if let Some(v) = done {
+            match stack.last_mut() {
+                None => out = Some(v),
+                Some((Json::Arr(items), _)) => items.push(v),
+                Some((Json::Obj(m), _)) => {
+                    m.insert(pending_key.take().expect("object value needs key"), v);
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+    Ok(out.expect("document had a value"))
+}
+
+#[test]
+fn prop_json_streaming_writer_reader_roundtrip() {
+    // Arbitrary trees through the streaming pair: JsonWriter's bytes are
+    // byte-for-byte Json::dump, and driving JsonReader over them rebuilds
+    // an equal tree — writer ∘ reader = id, with the tree API as oracle.
+    check(
+        "stream-write ∘ stream-read = id, bytes == dump",
+        cases(400),
+        json_values(3),
+        |v| {
+            let mut w = JsonWriter::new();
+            w.value(v);
+            if w.as_bytes() != v.dump().as_bytes() {
+                return false;
+            }
+            reader_rebuild(w.as_bytes()).map(|back| back == *v).unwrap_or(false)
+        },
+    );
+}
+
+#[test]
+fn prop_json_streaming_reader_agrees_with_tree_parser() {
+    // For arbitrary inputs — valid docs, corrupted docs, truncations —
+    // the streaming reader and the tree parser return the SAME result:
+    // equal values on success, equal error (position AND message) on
+    // failure. Both front-ends drive one scanner, and this pins it.
+    check(
+        "streaming reader ≡ tree parser on corrupted inputs",
+        cases(300),
+        triples(json_values(2), usizes(0..4), usizes(0..64)),
+        |(v, mode, at)| {
+            let (mode, at) = (*mode, *at);
+            let mut s = v.dump().into_bytes();
+            match mode {
+                0 => {}                                      // pristine
+                1 => s.truncate(at.min(s.len())),            // truncated
+                2 => {
+                    if !s.is_empty() {
+                        s[at % s.len()] = b';';              // corrupted byte
+                    }
+                }
+                _ => s.insert(at.min(s.len()), b'@'),        // inserted garbage
+            }
+            let tree = match std::str::from_utf8(&s) {
+                Ok(text) => Json::parse(text),
+                Err(_) => return true, // corrupted multibyte: tree API needs str
+            };
+            let streamed = reader_rebuild(&s);
+            match (tree, streamed) {
+                (Ok(a), Ok(b)) => a == b,
+                (Err(a), Err(b)) => a == b,
+                _ => false,
+            }
+        },
+    );
 }
 
 #[test]
@@ -891,6 +999,108 @@ fn prop_trace_replay_reproduces_all_four_ledgers() {
                 && offline.fleet_load_cycles() == snap.reload_cycles
                 && offline.fleet_migration_cycles() == snap.migration_cycles
                 && offline.clock_regressions() == 0
+        },
+    );
+}
+
+#[test]
+fn prop_concurrent_runtime_matches_virtual_clock_twin() {
+    // The work-stealing runtime's equivalence contract, over ARBITRARY
+    // interleaved submit/dispatch/compact scripts on a rate-limited
+    // twin-executing fleet: the concurrent runtime (forward passes on
+    // worker threads, admission overlapped with in-flight compute) and
+    // the sequential virtual-clock QosFleet make IDENTICAL decisions —
+    //   * the same per-submit admission verdicts,
+    //   * the same batch outcomes in the same dispatch order,
+    //   * bit-exact 4-ledger totals and QoS tenant ledgers,
+    //   * byte-identical trace event streams (the reorder sink merges
+    //     the overlapped emission back into op order),
+    //   * and the LedgerAuditor passes on the merged concurrent trace.
+    let spec = MacroSpec::default();
+    check(
+        "concurrent runtime ≡ sequential virtual-clock twin",
+        cases(10),
+        pairs(vecs(usizes(0..5), 1..18), usizes(1..4)),
+        |(ops, burst)| {
+            let cfg = {
+                let mut cfg = FleetConfig {
+                    num_macros: 2,
+                    coresident: true,
+                    execution: ExecutionMode::Twin,
+                    ..FleetConfig::default()
+                };
+                cfg.qos.insert(
+                    "m1".into(),
+                    QosSpec {
+                        burst: *burst as u64,
+                        ..QosSpec::default()
+                    },
+                );
+                cfg
+            };
+            let mut seq = QosFleet::new(&cfg, &spec);
+            let seq_trace = FleetTrace::default();
+            seq.fleet_mut().set_trace(Some(seq_trace.sink()));
+            let mut con = ConcurrentFleet::new(&cfg, &spec, 3);
+            let con_trace = FleetTrace::default();
+            con.set_trace(Some(con_trace.sink()));
+            for (i, s) in [0.04, 0.03, 0.05].iter().enumerate() {
+                seq.register(&format!("m{i}"), vgg9().scaled(*s), false).unwrap();
+                con.register(&format!("m{i}"), vgg9().scaled(*s), false).unwrap();
+            }
+            let img = vec![0.5f32; 64];
+            for &op in ops {
+                if op < 3 {
+                    let a = seq
+                        .submit(&format!("m{op}"), vec![img.clone()])
+                        .unwrap();
+                    let b = con
+                        .submit(&format!("m{op}"), vec![img.clone()])
+                        .unwrap();
+                    if a != b {
+                        return false; // admission decisions must agree
+                    }
+                } else if op == 3 {
+                    let _ = seq.dispatch_next().unwrap();
+                    let _ = con.dispatch_next().unwrap();
+                } else {
+                    let _ = seq.fleet_mut().compact();
+                    let _ = con.compact();
+                }
+            }
+            let seq_out = seq.drain().unwrap();
+            let con_out = con.drain().unwrap();
+            let outcomes_match = seq_out.len() == con_out.len()
+                && seq_out.iter().zip(&con_out).all(|(a, b)| {
+                    a.model == b.model
+                        && a.batch == b.batch
+                        && a.classes == b.classes
+                        && a.logits == b.logits
+                        && a.device_cycles == b.device_cycles
+                        && a.reload_cycles == b.reload_cycles
+                        && a.migration_cycles == b.migration_cycles
+                        && a.evicted == b.evicted
+                });
+            let ss = seq.snapshot();
+            let cs = con.snapshot();
+            let ledgers_match = ss.reload_cycles == cs.reload_cycles
+                && ss.migration_cycles == cs.migration_cycles
+                && ss.aggregate() == cs.aggregate()
+                && ss.tenant_aggregate() == cs.tenant_aggregate()
+                && ss.twin_load_cycles() == cs.twin_load_cycles()
+                && ss.twin_migration_cycles() == cs.twin_migration_cycles()
+                && ss.qos_totals() == cs.qos_totals();
+            let seq_events: Vec<_> =
+                seq_trace.log.lock().unwrap().events().cloned().collect();
+            let con_events: Vec<_> =
+                con_trace.log.lock().unwrap().events().cloned().collect();
+            let audit = con_trace.audit.lock().unwrap().verify(&cs);
+            outcomes_match
+                && ledgers_match
+                && seq_events == con_events
+                && audit.pass
+                && cs.reload_cycles == cs.macro_load_cycles()
+                && cs.reload_cycles == cs.tenant_load_cycles()
         },
     );
 }

@@ -124,9 +124,31 @@ EXACT_COUNTERS = {
         "trace_scenario.audit_pass",
         "trace_scenario.deterministic",
     ],
-    # The serving bench's counters flow through the threaded batcher
-    # (batch formation is timing-dependent), so none qualify yet.
-    "serving": [],
+    # The coordinator-roundtrip counters flow through the threaded
+    # batcher (batch formation is timing-dependent) and stay excluded.
+    # These counters do NOT: the json.* ledger counts Json-node
+    # allocations on the wire codec (zero by contract, byte-identical
+    # encode), and serving_scenario.* replays a fixed op script on the
+    # work-stealing runtime vs the sequential virtual-clock twin — all
+    # decision-level virtual-clock accounting, asserted equal in-bench
+    # before the summary is written. (`serving_scenario.steals` is the
+    # one timing-dependent field and is deliberately absent here.)
+    "serving": [
+        "json.tree_nodes",
+        "json.stream_nodes",
+        "json.bytes_identical",
+        "serving_scenario.admitted",
+        "serving_scenario.rejected",
+        "serving_scenario.batches",
+        "serving_scenario.device_cycles",
+        "serving_scenario.reload_cycles",
+        "serving_scenario.twin_load_cycles",
+        "serving_scenario.twin_compute_cycles",
+        "serving_scenario.events_total",
+        "serving_scenario.decisions_match",
+        "serving_scenario.events_identical",
+        "serving_scenario.audit_pass",
+    ],
 }
 
 

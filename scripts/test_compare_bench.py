@@ -120,6 +120,33 @@ def fleet_summary(
     return s
 
 
+def serving_summary(stream_nodes=0, batches=7, audit_pass=1):
+    return {
+        "bench": "micro_serving",
+        "timings": [],
+        "sim_serving": {"device_cycles": 123456, "weight_reloads": 3},
+        "json": {
+            "tree_nodes": 3075,
+            "stream_nodes": stream_nodes,
+            "bytes_identical": 1,
+        },
+        "serving_scenario": {
+            "admitted": 9,
+            "rejected": 2,
+            "batches": batches,
+            "device_cycles": 41000,
+            "reload_cycles": 5200,
+            "twin_load_cycles": 5200,
+            "twin_compute_cycles": 35800,
+            "events_total": 64,
+            "decisions_match": 1,
+            "events_identical": 1,
+            "audit_pass": audit_pass,
+            "steals": 4,
+        },
+    }
+
+
 def run_main(argv):
     """Run compare_bench.main() with argv, capturing the exit code."""
     old_argv = sys.argv
@@ -288,11 +315,60 @@ class CompareBenchTest(unittest.TestCase):
         self.assertEqual(regressions, [])
         self.assertEqual(exact, [])
 
+    def test_serving_counter_drift_is_gated(self):
+        # The wire-codec allocation ledger and the fixed-script runtime
+        # equivalence verdicts are exact counters: a Json-node allocation
+        # sneaking back onto the streaming path, a changed batch count,
+        # or a failed audit all trip CI.
+        self.write(self.base, "serving", serving_summary())
+        self.write(self.cur, "serving", serving_summary(stream_nodes=2))
+        self.assertEqual(run_main(self.argv()), 0, "print-only by default")
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+        self.write(self.cur, "serving", serving_summary(batches=8))
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+        self.write(self.cur, "serving", serving_summary(audit_pass=0))
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+        self.write(self.cur, "serving", serving_summary())
+        self.assertEqual(run_main(self.argv("--strict", "--strict-counters")), 0)
+
+    def test_serving_counters_new_to_baseline_only_report(self):
+        # A baseline from before the runtime/codec work lacks the json
+        # and serving_scenario sections entirely: current runs report
+        # them as new counters and CI stays green until --update.
+        stale = serving_summary()
+        del stale["json"]
+        del stale["serving_scenario"]
+        cur = serving_summary()
+        lines, regressions, exact = cb.compare_one("serving", cur, stale, 0.25)
+        text = "\n".join(lines)
+        self.assertIn("new counter, not compared", text)
+        self.assertIn("serving_scenario.audit_pass", text)
+        self.assertEqual(regressions, [])
+        self.assertEqual(exact, [])
+        self.write(self.base, "serving", stale)
+        self.write(self.cur, "serving", cur)
+        self.assertEqual(run_main(self.argv("--strict", "--strict-counters")), 0)
+
+    def test_serving_steals_counter_is_not_exact(self):
+        # Steal counts are timing-dependent by nature; make sure nobody
+        # promotes them into the exact set by accident.
+        self.assertNotIn(
+            "serving_scenario.steals", cb.EXACT_COUNTERS["serving"]
+        )
+        self.write(self.base, "serving", serving_summary())
+        drifted = serving_summary()
+        drifted["serving_scenario"]["steals"] += 3
+        self.write(self.cur, "serving", drifted)
+        self.assertEqual(run_main(self.argv("--strict", "--strict-counters")), 0)
+
     def test_exact_counters_all_known_paths(self):
         # Every configured exact counter is actually present in the bench
         # summary shape — guards against renames going unnoticed.
         s = fleet_summary()
         for path in cb.EXACT_COUNTERS["fleet"]:
+            self.assertIsNotNone(cb.dotted(s, path), f"missing {path}")
+        s = serving_summary()
+        for path in cb.EXACT_COUNTERS["serving"]:
             self.assertIsNotNone(cb.dotted(s, path), f"missing {path}")
 
 
