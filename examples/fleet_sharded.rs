@@ -1,0 +1,167 @@
+//! Fleet-of-fleets: the worked example behind the READMEs' "Sharded
+//! serving" section.
+//!
+//! 64 tenants hash onto 8 pools of 3 macros through the consistent-hash
+//! ring. FNV's arc skew piles most of them onto one pool — far past its
+//! column capacity — so a pool stuck with its hash-dealt tenants
+//! reloads every one of them on every round. The example runs the same
+//! request mix twice:
+//!
+//! * **static shard** — shed policy off: the skewed homes are final and
+//!   the hot pool thrashs reloads forever;
+//! * **sharded + migration** — `shed_threshold` armed: the hot pool
+//!   sheds its hottest tenants to the coldest pools, paying bounded
+//!   one-time transfer charges on the fifth ledger, and steady state
+//!   reloads nothing.
+//!
+//! Both runs end with the five-ledger conservation audit: every pool's
+//! four ledgers re-derived from its own event stream, plus the shard's
+//! transfer ledger re-derived from the `MigratePool` events alone.
+//!
+//! ```bash
+//! cargo run --release --example fleet_sharded
+//! cargo run --release --example fleet_sharded -- --pools 8 --tenants 64 --rounds 6
+//! ```
+//!
+//! The binary runs the same topology end to end:
+//! `cim-adapt fleet --pools 8 --tenants 64`.
+//! `benches/micro_fleet.rs` is the CI-gated source of truth for this
+//! scenario (`shard_scenario.*` exact counters) — keep the two in sync.
+
+use cim_adapt::arch::by_name;
+use cim_adapt::config::{FleetConfig, MacroSpec};
+use cim_adapt::data::SynthCifar;
+use cim_adapt::fleet::ShardedFleet;
+use cim_adapt::obs::FleetTrace;
+use cim_adapt::util::cli::Args;
+use cim_adapt::util::commas;
+
+/// One full run of the overload mix; returns the shard and its traces
+/// so the caller can audit and diff the arms.
+fn run(
+    pools: usize,
+    tenants: usize,
+    rounds: usize,
+    shed_threshold: f64,
+) -> anyhow::Result<(ShardedFleet, Vec<FleetTrace>, FleetTrace)> {
+    let spec = MacroSpec::default();
+    let cfg = FleetConfig {
+        pools,
+        num_macros: 3,
+        coresident: true,
+        shed_threshold,
+        ..FleetConfig::default()
+    };
+    let mut shard = ShardedFleet::new(&cfg, &spec);
+    let pool_traces: Vec<FleetTrace> =
+        (0..shard.num_pools()).map(|_| FleetTrace::default()).collect();
+    for (p, t) in pool_traces.iter().enumerate() {
+        shard.pool_mut(p).set_trace(Some(t.sink()));
+    }
+    let shard_trace = FleetTrace::default();
+    shard.set_trace(Some(shard_trace.sink()));
+
+    let arch = by_name("vgg9")?.scaled(0.03); // ~82 columns per tenant
+    let names: Vec<String> = (0..tenants).map(|i| format!("t{i:02}")).collect();
+    for n in &names {
+        shard.register(n, arch.clone(), false)?;
+    }
+    let batch = vec![SynthCifar::sample(1, 7).data];
+    for _ in 0..rounds {
+        for n in &names {
+            shard.serve_batch(n, &batch)?;
+        }
+    }
+    Ok((shard, pool_traces, shard_trace))
+}
+
+fn main() -> anyhow::Result<()> {
+    cim_adapt::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    let pools = args.usize_or("pools", 8);
+    let tenants = args.usize_or("tenants", 64);
+    let rounds = args.usize_or("rounds", 6);
+    let threshold = args.f64_or("shed-threshold", 0.9);
+
+    println!(
+        "sharded serving: {tenants} tenants (~82 columns each) hashed over {pools} pools \
+         of 3 macros, {rounds} round-robin rounds\n"
+    );
+
+    // Arm 1: static shard — the ring's homes are final.
+    let (static_shard, ..) = run(pools, tenants, rounds, 0.0)?;
+    let static_snap = static_shard.snapshot();
+    println!("static shard (no migration): hash-dealt homes and their pressure");
+    for p in 0..static_shard.num_pools() {
+        let homed = static_snap.tenant_homes.iter().filter(|&&(_, h)| h == p).count();
+        println!(
+            "  pool {p}: {homed:>2} tenants, pressure {:.2}, {} reload cycles",
+            static_shard.pressure(p),
+            commas(static_snap.pools[p].reload_cycles)
+        );
+    }
+
+    // Arm 2: same mix, shed policy armed.
+    let (shard, pool_traces, shard_trace) = run(pools, tenants, rounds, threshold)?;
+    let snap = shard.snapshot();
+    println!("\nsharded + migration (shed threshold {threshold}): rebalanced homes");
+    for p in 0..shard.num_pools() {
+        let homed = snap.tenant_homes.iter().filter(|&&(_, h)| h == p).count();
+        println!(
+            "  pool {p}: {homed:>2} tenants, pressure {:.2}, {} reload cycles, \
+             {} transfer cycles in",
+            shard.pressure(p),
+            commas(snap.pools[p].reload_cycles),
+            commas(snap.pool_transfer_cycles[p])
+        );
+    }
+    println!(
+        "\ntransfer ledger: {} charged transfers, {} cycles at link cost {} \
+         (shard total = Σ per-pool = Σ per-tenant)",
+        snap.transfers,
+        commas(snap.transfer_cycles),
+        snap.link_cost
+    );
+
+    // The five-ledger conservation audit: each pool's four ledgers from
+    // its own event stream, the transfer ledger from MigratePool events.
+    let mut pass = true;
+    for (p, t) in pool_traces.iter().enumerate() {
+        pass &= t.audit.lock().unwrap().verify(&snap.pools[p]).pass;
+    }
+    let transfer_report = shard_trace.audit.lock().unwrap().verify_transfers(&snap);
+    pass &= transfer_report.pass;
+    println!(
+        "five-ledger audit: {} ({} pools x 4 ledgers + transfer ledger, {} checks)",
+        if pass { "PASS" } else { "FAIL" },
+        shard.num_pools(),
+        transfer_report.checks
+    );
+    anyhow::ensure!(pass, "conservation audit must pass on an untampered run");
+
+    // The headline: one-time transfers beat steady-state thrash.
+    println!(
+        "\ntotal movement cycles (reload + migration + transfer) over {rounds} rounds:\n\
+           static shard       {}\n\
+           sharded+migration  {}  ({:.1}x fewer)",
+        commas(static_snap.total_movement_cycles()),
+        commas(snap.total_movement_cycles()),
+        static_snap.total_movement_cycles() as f64 / snap.total_movement_cycles().max(1) as f64
+    );
+
+    // Elasticity: growing the fleet moves only the new pool's arc.
+    let mut shard = shard;
+    let before = snap.tenant_homes.clone();
+    let (id, moved) = shard.add_pool()?;
+    let after = shard.snapshot().tenant_homes;
+    let strays = before
+        .iter()
+        .zip(&after)
+        .filter(|((_, old), (_, new))| new != old && *new != id)
+        .count();
+    println!(
+        "\nadd_pool -> pool {id}: {moved} of {tenants} tenants re-homed, \
+         {strays} moved anywhere else (consistent-hash guarantee)"
+    );
+    Ok(())
+}

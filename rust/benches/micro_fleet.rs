@@ -18,7 +18,9 @@ use cim_adapt::arch::by_name;
 use cim_adapt::cim::MacroStats;
 use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec, MorphConfig};
 use cim_adapt::data::SynthCifar;
-use cim_adapt::fleet::{EvictionPolicy, Fleet, FleetServer, QosClass, QosFleet, SchedMode};
+use cim_adapt::fleet::{
+    EvictionPolicy, Fleet, FleetServer, QosClass, QosFleet, SchedMode, ShardedFleet,
+};
 use cim_adapt::latency::model_cost;
 use cim_adapt::mapping::{pack_model, FitPolicyKind};
 use cim_adapt::morph::flow::morph_flow_synthetic;
@@ -331,6 +333,104 @@ fn churn_json(r: &ChurnRun) -> Json {
         .with("reload_events", r.reload_events)
         .with("compactions", r.compactions)
         .with("twin_total_cycles", r.twin_total_cycles)
+}
+
+/// Outcome of the sharded-serving overload scenario under one arm — all
+/// deterministic shard-wide counters.
+struct ShardRun {
+    /// Reload + migration + inter-pool transfer cycles — the figure the
+    /// arms compete on (`ShardSnapshot::total_movement_cycles`).
+    movement_cycles: u64,
+    reload_cycles: u64,
+    migration_cycles: u64,
+    transfer_cycles: u64,
+    /// Charged (resident) cross-pool migrations executed.
+    transfers: u64,
+    /// Highest registered-footprint pressure across pools right after
+    /// registration — i.e. what the hash skew dealt, before any shed.
+    max_pressure: f64,
+    /// Every pool's four-ledger audit plus the shard transfer audit.
+    audit_pass: bool,
+    /// The full shard snapshot, serialized — byte-compared across runs
+    /// for the determinism gate.
+    counters: String,
+}
+
+/// 64 tenants of ~82 columns each hashed across `pools` pools of 3
+/// macros (768 columns per pool) and served round-robin. The ring's arc
+/// skew piles 54 of the 64 onto one pool and 10 onto a second — far
+/// past capacity — so a pool stuck with its hash-dealt tenants reloads
+/// every one of them on every round. The arms in `main`:
+///
+/// * single pool (`pools = 1`, shed off) — the pre-sharding hardware:
+///   all 64 tenants thrash 3 macros.
+/// * static shard (`pools = 8`, shed off) — the skewed homes are final;
+///   the overloaded pools thrash forever while six pools idle.
+/// * sharded + migration (`pools = 8`, `shed_threshold = 0.9`) — the
+///   hot pools shed their hottest tenants to the coldest pools, paying
+///   bounded one-time transfer charges; once every pool fits its
+///   tenants, steady state reloads nothing.
+///
+/// Each pool carries its own trace/auditor (four-ledger re-derivation
+/// from its event stream) and the shard sink carries the transfer
+/// auditor (fifth ledger from `MigratePool` events alone).
+fn shard_overload_mix(pools: usize, shed_threshold: f64, rounds: usize) -> ShardRun {
+    let spec = MacroSpec::default();
+    let fleet_cfg = FleetConfig {
+        pools,
+        num_macros: 3,
+        coresident: true,
+        shed_threshold,
+        ..cfg(3)
+    };
+    let mut shard = ShardedFleet::new(&fleet_cfg, &spec);
+    let pool_traces: Vec<FleetTrace> =
+        (0..shard.num_pools()).map(|_| FleetTrace::default()).collect();
+    for (p, t) in pool_traces.iter().enumerate() {
+        shard.pool_mut(p).set_trace(Some(t.sink()));
+    }
+    let shard_trace = FleetTrace::default();
+    shard.set_trace(Some(shard_trace.sink()));
+    let arch = by_name("vgg9").unwrap().scaled(0.03); // 82 columns
+    let names: Vec<String> = (0..64).map(|i| format!("t{i:02}")).collect();
+    for n in &names {
+        shard.register(n, arch.clone(), false).unwrap();
+    }
+    let max_pressure = (0..shard.num_pools())
+        .map(|p| shard.pressure(p))
+        .fold(0.0_f64, f64::max);
+    let batch = vec![SynthCifar::sample(1, 7).data];
+    for _ in 0..rounds {
+        for n in &names {
+            shard.serve_batch(n, &batch).unwrap();
+        }
+    }
+    let snap = shard.snapshot();
+    let mut audit_pass = true;
+    for (p, t) in pool_traces.iter().enumerate() {
+        audit_pass &= t.audit.lock().unwrap().verify(&snap.pools[p]).pass;
+    }
+    audit_pass &= shard_trace.audit.lock().unwrap().verify_transfers(&snap).pass;
+    ShardRun {
+        movement_cycles: snap.total_movement_cycles(),
+        reload_cycles: snap.total_reload_cycles(),
+        migration_cycles: snap.total_migration_cycles(),
+        transfer_cycles: snap.transfer_cycles,
+        transfers: snap.transfers,
+        max_pressure,
+        audit_pass,
+        counters: snap.to_json().dump(),
+    }
+}
+
+fn shard_json(r: &ShardRun) -> Json {
+    Json::obj()
+        .with("movement_cycles", r.movement_cycles)
+        .with("reload_cycles", r.reload_cycles)
+        .with("migration_cycles", r.migration_cycles)
+        .with("transfer_cycles", r.transfer_cycles)
+        .with("transfers", r.transfers)
+        .with("max_pressure", r.max_pressure)
 }
 
 /// Run an alternating primary/co request mix on a deterministic core and
@@ -655,6 +755,61 @@ fn main() {
         chrome1.len()
     ));
 
+    // --- sharded serving: single pool vs static shard vs shed policy ------
+    // 64 tenants hashed over 8 pools; the ring's arc skew overloads one
+    // pool well past capacity. Static sharding leaves it thrashing
+    // reloads every round; the shed policy pays bounded inter-pool
+    // transfers once and then serves from residency. Competed on total
+    // movement cycles (reload + migration + transfer), with the fifth
+    // ledger conservation-audited and the counters byte-deterministic.
+    let sh_single = shard_overload_mix(1, 0.0, rounds);
+    let sh_static = shard_overload_mix(8, 0.0, rounds);
+    let sh_migrate = shard_overload_mix(8, 0.9, rounds);
+    let sh_repeat = shard_overload_mix(8, 0.9, rounds);
+    r.table(&format!(
+        "shard scenario over {rounds} rounds, 8 pools x 64 tenants: single-pool {} movement \
+         cycles | static-shard {} (max pressure {:.2}) | sharded+migration {} \
+         ({} charged transfers, {} transfer cycles)",
+        sh_single.movement_cycles,
+        sh_static.movement_cycles,
+        sh_static.max_pressure,
+        sh_migrate.movement_cycles,
+        sh_migrate.transfers,
+        sh_migrate.transfer_cycles
+    ));
+    assert!(
+        sh_static.max_pressure > 1.0,
+        "the hash skew must overload at least one pool (max pressure {:.3})",
+        sh_static.max_pressure
+    );
+    assert!(
+        sh_migrate.movement_cycles < sh_single.movement_cycles,
+        "sharded+migration must beat the single pool on total movement cycles ({} vs {})",
+        sh_migrate.movement_cycles,
+        sh_single.movement_cycles
+    );
+    assert!(
+        sh_migrate.movement_cycles < sh_static.movement_cycles,
+        "migration must beat static sharding on total movement cycles ({} vs {})",
+        sh_migrate.movement_cycles,
+        sh_static.movement_cycles
+    );
+    assert!(
+        sh_migrate.transfers > 0 && sh_migrate.transfer_cycles > 0,
+        "the win must be bought through charged transfers, not luck"
+    );
+    assert_eq!(sh_static.transfer_cycles, 0, "no migration in the static arm");
+    assert_eq!(sh_single.transfer_cycles, 0, "no migration on a single pool");
+    assert!(
+        sh_single.audit_pass && sh_static.audit_pass && sh_migrate.audit_pass,
+        "per-pool four-ledger audits and the shard transfer audit must pass"
+    );
+    let shard_deterministic = sh_migrate.counters == sh_repeat.counters;
+    assert!(
+        shard_deterministic,
+        "the same shard scenario twice must produce byte-identical counters"
+    );
+
     // Twin forward throughput on a resident tenant (timing only).
     {
         let spec_ = MacroSpec::default();
@@ -721,6 +876,25 @@ fn main() {
                 .with("events_total", events_total)
                 .with("audit_pass", 1u64)
                 .with("deterministic", u64::from(deterministic)),
+        )
+        // Shard arms: audit/determinism verdicts as 0/1 counters, same
+        // contract as trace_scenario (asserts abort before this summary
+        // is written, so a committed baseline always reads 1).
+        .with(
+            "shard_scenario",
+            Json::obj()
+                .with("rounds", rounds)
+                .with("pools", 8)
+                .with("tenants", 64)
+                .with("single_pool", shard_json(&sh_single))
+                .with("static_shard", shard_json(&sh_static))
+                .with("migration", shard_json(&sh_migrate))
+                .with(
+                    "migration_win_cycles",
+                    sh_static.movement_cycles - sh_migrate.movement_cycles,
+                )
+                .with("audit_pass", 1u64)
+                .with("deterministic", u64::from(shard_deterministic)),
         )
         .with(
             "coresidency",

@@ -374,6 +374,28 @@ pub struct FleetConfig {
     /// (`Interactive`, unlimited, no deadline — pinned registrations
     /// default to the `Pinned` class instead).
     pub qos: BTreeMap<String, QosSpec>,
+    /// Independent pools behind the consistent-hash router
+    /// (`cim-adapt fleet --pools`). 1 = the classic single-pool fleet;
+    /// above 1 each pool owns `num_macros` macros and tenants hash to
+    /// pools via [`crate::fleet::HashRing`]
+    /// ([`crate::fleet::ShardedFleet`]).
+    pub pools: usize,
+    /// Inter-pool link cost in device cycles per transferred bitline
+    /// column (`cim-adapt fleet --link-cost`): a cross-pool migration of
+    /// a `w`-column tenant charges
+    /// `ceil(w / transfer_compression) · link_cost` on the shard-level
+    /// transfer ledger.
+    pub link_cost: u64,
+    /// Compression factor applied to cross-pool transfers (≥ 1.0;
+    /// columns cross the link compressed, per the collaborative-CIM
+    /// charged-transfer model of arxiv 2309.11048). 1.0 = raw columns.
+    pub transfer_compression: f64,
+    /// Pool-level shed trigger (0 = disabled): when a pool's pressure —
+    /// registered resident demand over its capacity — exceeds this on
+    /// the serve path, the sharded router migrates the pool's hottest
+    /// migratable tenant to the coldest pool instead of letting the
+    /// evictor thrash reloads.
+    pub shed_threshold: f64,
     /// Clock frequency for cycle → wall-time conversion (MHz).
     pub clock_mhz: f64,
 }
@@ -394,6 +416,10 @@ impl Default for FleetConfig {
             admit_budget_cycles: 0,
             qos_aging_cycles: 50_000,
             qos: BTreeMap::new(),
+            pools: 1,
+            link_cost: 8,
+            transfer_compression: 1.0,
+            shed_threshold: 0.0,
             clock_mhz: 200.0,
         }
     }
@@ -421,6 +447,10 @@ impl FleetConfig {
                     .iter()
                     .fold(Json::obj(), |j, (name, spec)| j.with(name.as_str(), spec.to_json())),
             )
+            .with("pools", self.pools)
+            .with("link_cost", self.link_cost)
+            .with("transfer_compression", self.transfer_compression)
+            .with("shed_threshold", self.shed_threshold)
             .with("clock_mhz", self.clock_mhz)
     }
 
@@ -480,6 +510,17 @@ impl FleetConfig {
                         .collect()
                 })
                 .unwrap_or_default(),
+            pools: j.get("pools").as_usize().unwrap_or(d.pools),
+            link_cost: j
+                .get("link_cost")
+                .as_usize()
+                .map(|v| v as u64)
+                .unwrap_or(d.link_cost),
+            transfer_compression: j
+                .get("transfer_compression")
+                .as_f64()
+                .unwrap_or(d.transfer_compression),
+            shed_threshold: j.get("shed_threshold").as_f64().unwrap_or(d.shed_threshold),
             clock_mhz: j.get("clock_mhz").as_f64().unwrap_or(d.clock_mhz),
         }
     }
@@ -596,6 +637,10 @@ mod tests {
         c.sched = SchedMode::Fifo;
         c.admit_budget_cycles = 12_000;
         c.qos_aging_cycles = 9_000;
+        c.pools = 8;
+        c.link_cost = 4;
+        c.transfer_compression = 2.0;
+        c.shed_threshold = 0.9;
         c.qos.insert(
             "edge".to_string(),
             QosSpec {
@@ -617,6 +662,12 @@ mod tests {
         assert_eq!(FleetConfig::from_json(&j).sched, SchedMode::Qos);
         assert_eq!(FleetConfig::from_json(&j).admit_budget_cycles, 0);
         assert!(FleetConfig::from_json(&j).qos.is_empty());
+        // Sharding knobs default to the single-pool fleet with the
+        // shed trigger disarmed.
+        assert_eq!(FleetConfig::from_json(&j).pools, 1);
+        assert_eq!(FleetConfig::from_json(&j).link_cost, 8);
+        assert_eq!(FleetConfig::from_json(&j).transfer_compression, 1.0);
+        assert_eq!(FleetConfig::from_json(&j).shed_threshold, 0.0);
         // Unknown sched string falls back to the QoS dispatcher.
         let j = Json::parse(r#"{"sched": "mystery"}"#).unwrap();
         assert_eq!(FleetConfig::from_json(&j).sched, SchedMode::Qos);

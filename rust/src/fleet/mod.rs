@@ -39,6 +39,17 @@
 //!   and deferred requests charge zero cycles on every ledger; an aging
 //!   term bounds starvation (`benches/micro_fleet.rs` measures the
 //!   FIFO vs priority vs priority+admission arms).
+//! * [`shard`] — fleet-of-fleets: N independent pools behind a
+//!   consistent-hash ring router ([`HashRing`], [`ShardedFleet`]).
+//!   Tenants hash to home pools; membership changes remap only the
+//!   affected arc; cross-pool migration reuses the compactor's
+//!   twin-verified column moves but charges a **fifth ledger** — the
+//!   inter-pool transfer ledger (`ceil(width / transfer_compression) ·
+//!   link_cost`, per the charged-transfer model of arxiv 2309.11048) —
+//!   and a shed policy moves a saturated pool's hottest tenant to the
+//!   coldest pool instead of letting it thrash reloads
+//!   (`FleetConfig::pools` / `link_cost` / `shed_threshold`,
+//!   `cim-adapt fleet --pools N`).
 //! * [`server`] — per-model routing and batching over the shared pool,
 //!   with hot-swap (reload) accounting flowing into the same
 //!   [`MacroStats`](crate::cim::MacroStats) /
@@ -71,6 +82,7 @@ pub mod placer;
 pub mod qos;
 pub mod registry;
 pub mod server;
+pub mod shard;
 
 pub use compactor::{plan_compaction, CompactionPlan, Fragmentation, SpanMove};
 pub use evictor::{EvictionPolicy, Evictor, PolicyEvictor, VictimCandidate};
@@ -84,3 +96,4 @@ pub use server::{
     BatchOutcome, BatchPlan, Fleet, FleetHandle, FleetServer, FleetSnapshot, ForwardJob,
     ForwardOutput,
 };
+pub use shard::{HashRing, ShardSnapshot, ShardedFleet, ShedEvent, DEFAULT_VNODES};

@@ -639,6 +639,18 @@ impl Fleet {
         self.placer.is_resident(name)
     }
 
+    /// Whether the pool could hold `name`'s full footprint resident
+    /// right now (after evictions if need be) — the feasibility check a
+    /// cross-pool migration runs before committing to a charged
+    /// transfer ([`crate::fleet::ShardedFleet::migrate_tenant`]).
+    /// `false` for unregistered names.
+    pub fn can_host(&self, name: &str) -> bool {
+        self.registry
+            .get(name)
+            .map(|e| self.placer.fits(e))
+            .unwrap_or(false)
+    }
+
     /// Register a model variant. Pinned models must fit the pool
     /// **together** — not just individually — because pinned tenants are
     /// never evicted: a jointly-oversized pinned set would wedge every
@@ -855,6 +867,162 @@ impl Fleet {
         // never counted twice.
         self.sched.advance(plan.migration_cycles);
         Ok(plan)
+    }
+
+    /// Read a resident tenant's weight columns back off the twin pool,
+    /// in logical (footprint) order — the source half of a cross-pool
+    /// migration ([`crate::fleet::ShardedFleet`]). Returns the empty
+    /// vector under analytic execution or for a registered-but-evicted
+    /// tenant (no columns are resident, so nothing crosses the link —
+    /// re-homing a cold tenant is free; it pays a fresh reload on next
+    /// use instead).
+    pub fn extract_columns(&self, name: &str) -> Result<Vec<Vec<WeightCell>>> {
+        anyhow::ensure!(
+            self.registry.contains(name),
+            "unknown model '{name}'"
+        );
+        let Some(pm) = self.placed.get(name) else {
+            return Ok(Vec::new());
+        };
+        let mut cols = Vec::with_capacity(pm.mapping.total_bls);
+        for (span, _) in pm.span_ranges() {
+            for i in 0..span.bl_count {
+                cols.push(self.twin[span.macro_id].read_column(span.bl_start + i));
+            }
+        }
+        Ok(cols)
+    }
+
+    /// Land a migrated tenant on this pool: place its (already
+    /// registered) footprint, write the transferred `columns` into the
+    /// twin as charged migrations, and book the per-span
+    /// `region_reload_cycles` figure on the **migration** ledgers —
+    /// destination macro, tenant, fleet total, and (by construction,
+    /// via [`CimMacro::migrate_columns`]) the twin — exactly like a
+    /// [`Fleet::compact`] move. This is the destination half of a
+    /// cross-pool migration: the weights arrive over the inter-pool
+    /// link (charged separately on the shard's transfer ledger by
+    /// [`crate::fleet::ShardedFleet`]) instead of re-loading from the
+    /// host, so the reload ledger stays untouched.
+    ///
+    /// `columns` must cover the tenant's full footprint under twin
+    /// execution (use [`Fleet::extract_columns`] on the source pool)
+    /// and is ignored under analytic execution. Returns the migration
+    /// cycles charged.
+    pub fn land_migrated(&mut self, name: &str, columns: &[Vec<WeightCell>]) -> Result<u64> {
+        let entry = self
+            .registry
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+        anyhow::ensure!(
+            !self.placer.is_resident(name),
+            "model '{name}' is already resident on this pool"
+        );
+        anyhow::ensure!(
+            self.placer.fits(entry),
+            "model '{name}' does not fit this pool ({} of {} columns free)",
+            self.placer.free_bls(),
+            self.placer.pool_bls()
+        );
+        let twin_mode = !self.twin.is_empty();
+        if twin_mode {
+            anyhow::ensure!(
+                columns.len() == entry.mapping.total_bls,
+                "transfer for '{name}' carries {} of {} columns",
+                columns.len(),
+                entry.mapping.total_bls
+            );
+        }
+        let swap = self
+            .placer
+            .place(entry, &self.registry, self.evictor.as_ref(), &self.spec)?;
+        for victim in &swap.evicted {
+            self.placed.remove(victim);
+        }
+        self.evictions += swap.evicted.len() as u64;
+        if !swap.evicted.is_empty() {
+            let clock = self.sched.now();
+            for victim in &swap.evicted {
+                let class = self.sched.class_of(victim);
+                emit(&self.trace, || TraceEvent {
+                    clock,
+                    kind: EventKind::Evict,
+                    tenant: victim.clone(),
+                    macro_id: None,
+                    cycles: 0,
+                    twin: false,
+                    detail: 0,
+                    class: Some(class),
+                });
+            }
+        }
+        if twin_mode {
+            // Same span-trimming as `materialize_placement`: only a
+            // whole-macro tail region can be wider than its span, and
+            // the write pads to the full allocated width so the twin
+            // charge covers what the ledger books.
+            let entry = self.registry.get(name).expect("checked above");
+            let total = entry.mapping.total_bls;
+            let mut spans = Vec::with_capacity(swap.regions.len());
+            let mut remaining = total;
+            for r in &swap.regions {
+                if remaining == 0 {
+                    break;
+                }
+                let take = r.bl_count.min(remaining);
+                spans.push(Region { bl_count: take, ..*r });
+                remaining -= take;
+            }
+            anyhow::ensure!(
+                remaining == 0 && spans.len() == swap.regions.len(),
+                "placement for '{name}' does not tile its footprint"
+            );
+            let pm = PlacedMapping::new(entry.mapping.clone(), spans)?;
+            for ((span, range), region) in pm.span_ranges().zip(&swap.regions) {
+                let mut cols = columns[range].to_vec();
+                cols.resize(region.bl_count, Vec::new());
+                Arc::make_mut(&mut self.twin[span.macro_id])
+                    .migrate_columns(span.bl_start, &cols);
+            }
+            self.placed.insert(name.to_string(), pm);
+        }
+        let clock = self.sched.now();
+        let class = self.sched.class_of(name);
+        let tenant = self.tenant_stats.entry(name.to_string()).or_default();
+        let mut total = 0u64;
+        for r in &swap.regions {
+            let c = region_reload_cycles(r.bl_count, &self.spec);
+            self.macro_stats[r.macro_id].migration_cycles += c;
+            self.macro_stats[r.macro_id].migrations += 1;
+            tenant.migration_cycles += c;
+            tenant.migrations += 1;
+            total += c;
+            emit(&self.trace, || TraceEvent {
+                clock,
+                kind: EventKind::MigrateSpan,
+                tenant: name.to_string(),
+                macro_id: Some(r.macro_id),
+                cycles: c,
+                twin: false,
+                detail: r.bl_count as u64,
+                class: Some(class),
+            });
+            if twin_mode {
+                emit(&self.trace, || TraceEvent {
+                    clock,
+                    kind: EventKind::MigrateSpan,
+                    tenant: name.to_string(),
+                    macro_id: Some(r.macro_id),
+                    cycles: c,
+                    twin: true,
+                    detail: r.bl_count as u64,
+                    class: Some(class),
+                });
+            }
+        }
+        self.migration_cycles_total += total;
+        self.sched.advance(total);
+        Ok(total)
     }
 
     /// Charge the region-granular loads of one hot-swap: each loaded

@@ -1,0 +1,818 @@
+//! Fleet-of-fleets: consistent-hash sharded serving across independent
+//! pools, with a charged inter-pool transfer ledger.
+//!
+//! One [`Fleet`] models one pool of CIM macros. Production edge
+//! deployments (ROADMAP item 1; the collaborative CIM-network topology
+//! of arxiv 2309.11048) run **many** such pools behind a router:
+//!
+//! * [`HashRing`] — a deterministic consistent-hash ring. Tenants hash
+//!   to pools through virtual nodes, so adding or removing a pool
+//!   remaps only the tenants whose arc the change touched (property
+//!   tested in `rust/tests/proptests.rs`); everyone else keeps their
+//!   home and, crucially, their resident weights.
+//! * [`ShardedFleet`] — owns the pools, routes every tenant to its home
+//!   pool, and migrates tenants across pools: the source pool's twin
+//!   columns are read back ([`Fleet::extract_columns`]), the weights
+//!   cross the inter-pool link, and the destination books the landing
+//!   as ordinary compactor-style migrations
+//!   ([`Fleet::land_migrated`]). The link itself is charged on a new
+//!   **fifth ledger** — the transfer ledger — at
+//!   `ceil(width / transfer_compression) · link_cost` device cycles per
+//!   footprint (the charged-transfer model of arxiv 2309.11048, where
+//!   inter-device traffic can ride a compressed encoding). The ledger
+//!   is conservation-balanced three ways (shard total = Σ per
+//!   destination pool = Σ per tenant) and re-derived from
+//!   [`EventKind::MigratePool`] events by
+//!   [`LedgerAuditor::verify_transfers`](crate::obs::LedgerAuditor::verify_transfers).
+//! * Pool-level QoS: when a pool's registered footprint pressure
+//!   exceeds `FleetConfig::shed_threshold`, the serve path sheds the
+//!   pool's hottest migratable tenant to the coldest pool
+//!   ([`ShardedFleet::maybe_shed`]) — paying one bounded transfer
+//!   instead of thrashing reloads forever.
+//!
+//! **Migration vs. eviction.** Only *resident* migrations are charged:
+//! weights actually cross the link and land without touching the
+//! destination's reload ledger. Re-homing a cold (registered but
+//! evicted) tenant is free — nothing moves; the tenant pays a normal
+//! reload at its new home on next use. The shed policy therefore trades
+//! one transfer charge now against a reload charge *per future batch*
+//! under thrash.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::arch::ModelArch;
+use crate::config::{FleetConfig, MacroSpec};
+use crate::obs::{emit, EventKind, SharedSink, TraceEvent};
+use crate::util::json::Json;
+
+use super::qos::QosSpec;
+use super::server::{BatchOutcome, Fleet, FleetSnapshot};
+
+/// Virtual nodes per pool on the [`HashRing`]. More vnodes smooth the
+/// arc distribution; 16 keeps the ring small while bounding per-pool
+/// load skew well below 2x at the scales the benches run.
+pub const DEFAULT_VNODES: usize = 16;
+
+/// FNV-1a over the bytes of `s` — the ring's hash. Deterministic and
+/// dependency-free; the ring needs uniformity, not cryptography.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A deterministic consistent-hash ring mapping tenant names to pool
+/// ids.
+///
+/// Each member pool contributes [`HashRing::vnodes`] points at
+/// `fnv1a("pool-{id}-vnode-{v}")`; a tenant routes to the pool owning
+/// the first point clockwise from `fnv1a(name)` (wrapping past the top
+/// of the key space). Membership changes move only the arcs between the
+/// added/removed points and their predecessors — the property that
+/// makes rebalancing cheap, and the one the proptests pin down.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    vnodes: usize,
+    /// Sorted `(point, pool)` pairs — the ring, flattened.
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    /// An empty ring whose future members each contribute `vnodes`
+    /// points (clamped to at least 1).
+    pub fn new(vnodes: usize) -> HashRing {
+        HashRing { vnodes: vnodes.max(1), points: Vec::new() }
+    }
+
+    /// Virtual nodes each member pool contributes.
+    pub fn vnodes(&self) -> usize {
+        self.vnodes
+    }
+
+    /// Pool ids currently in rotation, ascending.
+    pub fn pools(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self.points.iter().map(|&(_, p)| p).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// Whether `pool` is in rotation.
+    pub fn contains(&self, pool: usize) -> bool {
+        self.points.iter().any(|&(_, p)| p == pool)
+    }
+
+    /// Add `pool` to the rotation (idempotent).
+    pub fn add_pool(&mut self, pool: usize) {
+        if self.contains(pool) {
+            return;
+        }
+        for v in 0..self.vnodes {
+            let h = fnv1a(&format!("pool-{pool}-vnode-{v}"));
+            self.points.push((h, pool));
+        }
+        // Point hashes are effectively unique; pool id breaks the
+        // (astronomically unlikely) tie deterministically.
+        self.points.sort_unstable();
+    }
+
+    /// Remove `pool` from the rotation (idempotent). Tenants on its
+    /// arcs fall through to each arc's clockwise successor.
+    pub fn remove_pool(&mut self, pool: usize) {
+        self.points.retain(|&(_, p)| p != pool);
+    }
+
+    /// The pool `tenant` routes to: owner of the first ring point at or
+    /// clockwise-after `fnv1a(tenant)`. `None` on an empty ring.
+    pub fn route(&self, tenant: &str) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let h = fnv1a(tenant);
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        let (_, pool) = self.points[i % self.points.len()];
+        Some(pool)
+    }
+}
+
+/// What the shard remembers about a tenant, pool-independently — enough
+/// to re-register it on a destination pool during migration.
+#[derive(Debug, Clone)]
+struct TenantRecord {
+    arch: ModelArch,
+    pinned: bool,
+}
+
+/// One executed shed decision (see [`ShardedFleet::maybe_shed`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShedEvent {
+    /// Tenant that moved.
+    pub tenant: String,
+    /// Pool it left.
+    pub from: usize,
+    /// Pool it landed on.
+    pub to: usize,
+    /// Transfer cycles charged (0 when the tenant was cold — nothing
+    /// crossed the link).
+    pub cycles: u64,
+}
+
+/// Point-in-time state of a [`ShardedFleet`]: every pool's
+/// [`FleetSnapshot`] plus the shard-level transfer ledger, in the three
+/// conserved views the auditor re-derives
+/// ([`LedgerAuditor::verify_transfers`](crate::obs::LedgerAuditor::verify_transfers)).
+#[derive(Debug, Clone, Default)]
+pub struct ShardSnapshot {
+    /// Per-pool snapshots, indexed by pool id (drained pools included —
+    /// their ledgers stay on the books).
+    pub pools: Vec<FleetSnapshot>,
+    /// Current tenant → home-pool routing, sorted by tenant name.
+    pub tenant_homes: Vec<(String, usize)>,
+    /// Transfer ledger, view 1: total inter-pool transfer cycles.
+    pub transfer_cycles: u64,
+    /// Transfer ledger, view 2: transfer cycles by **destination** pool
+    /// (indexed by pool id; sums to [`ShardSnapshot::transfer_cycles`]).
+    pub pool_transfer_cycles: Vec<u64>,
+    /// Transfer ledger, view 3: transfer cycles by tenant, sorted by
+    /// name (sums to [`ShardSnapshot::transfer_cycles`]).
+    pub tenant_transfer_cycles: Vec<(String, u64)>,
+    /// Charged transfers executed (one per resident migration; cold
+    /// re-homings don't count — see the module docs).
+    pub transfers: u64,
+    /// The shard's monotone transfer clock ([`ShardedFleet::transfer_clock`]).
+    pub transfer_clock: u64,
+    /// Link cost the transfers were charged at
+    /// ([`FleetConfig::link_cost`]).
+    pub link_cost: u64,
+}
+
+impl ShardSnapshot {
+    /// Total reload cycles across every pool.
+    pub fn total_reload_cycles(&self) -> u64 {
+        self.pools.iter().map(|p| p.reload_cycles).sum()
+    }
+
+    /// Total migration cycles across every pool (intra-pool compaction
+    /// moves plus cross-pool landings).
+    pub fn total_migration_cycles(&self) -> u64 {
+        self.pools.iter().map(|p| p.migration_cycles).sum()
+    }
+
+    /// The figure the shard bench arms compete on: every cycle spent
+    /// moving weights — reloads, migrations, and inter-pool transfers.
+    pub fn total_movement_cycles(&self) -> u64 {
+        self.total_reload_cycles() + self.total_migration_cycles() + self.transfer_cycles
+    }
+
+    /// Machine-readable form for `BENCH_*.json` and `--json` CLI output.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("pools", Json::Arr(self.pools.iter().map(|p| p.to_json()).collect()))
+            .with(
+                "tenant_homes",
+                self.tenant_homes
+                    .iter()
+                    .fold(Json::obj(), |j, (n, p)| j.with(n.as_str(), *p)),
+            )
+            .with("transfer_cycles", self.transfer_cycles)
+            .with(
+                "pool_transfer_cycles",
+                Json::Arr(self.pool_transfer_cycles.iter().map(|&c| Json::from(c as usize)).collect()),
+            )
+            .with(
+                "tenant_transfer_cycles",
+                self.tenant_transfer_cycles
+                    .iter()
+                    .fold(Json::obj(), |j, (n, c)| j.with(n.as_str(), *c)),
+            )
+            .with("transfers", self.transfers)
+            .with("transfer_clock", self.transfer_clock)
+            .with("link_cost", self.link_cost)
+            .with("total_reload_cycles", self.total_reload_cycles())
+            .with("total_migration_cycles", self.total_migration_cycles())
+            .with("total_movement_cycles", self.total_movement_cycles())
+    }
+}
+
+/// N independent [`Fleet`] pools behind a consistent-hash router, with
+/// charged cross-pool tenant migration — the fleet-of-fleets the
+/// ROADMAP's "millions of users" north star shards into.
+///
+/// Tenants register through the shard and are homed by the
+/// [`HashRing`]; serving routes to the home pool. Three things move a
+/// tenant: an explicit [`ShardedFleet::migrate_tenant`], a ring
+/// membership change ([`ShardedFleet::add_pool`] /
+/// [`ShardedFleet::drain_pool`]), or the shed policy
+/// ([`ShardedFleet::maybe_shed`]). All three funnel through the same
+/// charged-transfer path, so the fifth ledger stays balanced no matter
+/// who initiated the move.
+///
+/// Determinism: pools are plain deterministic [`Fleet`]s, the ring is a
+/// pure function of names, and the transfer clock advances only by
+/// transfer charges — two identical runs produce byte-identical
+/// snapshots and traces, which is what lets the `micro_fleet` shard arm
+/// gate on exact counters.
+pub struct ShardedFleet {
+    cfg: FleetConfig,
+    spec: MacroSpec,
+    pools: Vec<Fleet>,
+    ring: HashRing,
+    /// Tenant → home pool (every registered tenant has exactly one).
+    homes: BTreeMap<String, usize>,
+    tenants: BTreeMap<String, TenantRecord>,
+    /// Requests served per tenant — the shed policy's heat signal.
+    heat: BTreeMap<String, u64>,
+    link_cost: u64,
+    transfer_compression: f64,
+    shed_threshold: f64,
+    transfer_cycles: u64,
+    pool_transfer_cycles: Vec<u64>,
+    tenant_transfer_cycles: BTreeMap<String, u64>,
+    transfers: u64,
+    transfer_clock: u64,
+    trace: Option<SharedSink>,
+}
+
+impl ShardedFleet {
+    /// Build `cfg.pools` pools (at least one), each a full
+    /// [`Fleet::new`] over `cfg`/`spec` (so `cfg.num_macros` is the
+    /// **per-pool** macro count), all in ring rotation.
+    /// `cfg.transfer_compression` is clamped to ≥ 1.0.
+    pub fn new(cfg: &FleetConfig, spec: &MacroSpec) -> ShardedFleet {
+        let n = cfg.pools.max(1);
+        let mut ring = HashRing::new(DEFAULT_VNODES);
+        let pools = (0..n)
+            .map(|p| {
+                ring.add_pool(p);
+                Fleet::new(cfg, spec)
+            })
+            .collect();
+        ShardedFleet {
+            cfg: cfg.clone(),
+            spec: spec.clone(),
+            pools,
+            ring,
+            homes: BTreeMap::new(),
+            tenants: BTreeMap::new(),
+            heat: BTreeMap::new(),
+            link_cost: cfg.link_cost,
+            transfer_compression: cfg.transfer_compression.max(1.0),
+            shed_threshold: cfg.shed_threshold,
+            transfer_cycles: 0,
+            pool_transfer_cycles: vec![0; n],
+            tenant_transfer_cycles: BTreeMap::new(),
+            transfers: 0,
+            transfer_clock: 0,
+            trace: None,
+        }
+    }
+
+    /// Pools owned (in rotation or drained).
+    pub fn num_pools(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// The router.
+    pub fn ring(&self) -> &HashRing {
+        &self.ring
+    }
+
+    /// Borrow pool `id` (read-only).
+    pub fn pool(&self, id: usize) -> &Fleet {
+        &self.pools[id]
+    }
+
+    /// Borrow pool `id` mutably — e.g. to install a per-pool trace sink
+    /// ([`Fleet::set_trace`]) so each pool's four ledgers audit
+    /// independently; the shard-level sink
+    /// ([`ShardedFleet::set_trace`]) sees only the transfer events.
+    pub fn pool_mut(&mut self, id: usize) -> &mut Fleet {
+        &mut self.pools[id]
+    }
+
+    /// A tenant's current home pool.
+    pub fn home_of(&self, name: &str) -> Option<usize> {
+        self.homes.get(name).copied()
+    }
+
+    /// The shard's monotone transfer clock: advances by each transfer's
+    /// cycles as it commits. [`EventKind::MigratePool`] events are
+    /// stamped with this clock (pool clocks are mutually independent
+    /// and would interleave non-monotonically if merged).
+    pub fn transfer_clock(&self) -> u64 {
+        self.transfer_clock
+    }
+
+    /// Install (or clear) the shard-level trace sink. Only
+    /// [`EventKind::MigratePool`] events flow here; per-pool events go
+    /// to each pool's own sink (see [`ShardedFleet::pool_mut`]).
+    pub fn set_trace(&mut self, trace: Option<SharedSink>) {
+        self.trace = trace;
+    }
+
+    /// Cycles one transfer of `width_bls` footprint columns costs on
+    /// the inter-pool link:
+    /// `ceil(width / transfer_compression) · link_cost` (the
+    /// compressed-encoding transfer model of arxiv 2309.11048).
+    pub fn transfer_cost(&self, width_bls: usize) -> u64 {
+        ((width_bls as f64 / self.transfer_compression).ceil() as u64) * self.link_cost
+    }
+
+    /// Registered-footprint pressure of pool `id`: Σ `bls_needed` over
+    /// its homed tenants, divided by the pool's column capacity. Above
+    /// 1.0 the pool cannot hold its tenants simultaneously — every
+    /// round of their traffic thrashes reloads — which is the signal
+    /// the shed policy acts on.
+    pub fn pressure(&self, id: usize) -> f64 {
+        let cap = (self.pools[id].num_macros() * self.spec.bitlines) as f64;
+        let demand: usize = self
+            .homes
+            .iter()
+            .filter(|&(_, &p)| p == id)
+            .filter_map(|(name, _)| self.pools[id].registry().get(name))
+            .map(|e| e.bls_needed())
+            .sum();
+        demand as f64 / cap
+    }
+
+    /// Register a tenant: the ring picks its home pool, the home pool
+    /// does the real [`Fleet::register`]. Returns the home pool id.
+    pub fn register(&mut self, name: &str, arch: ModelArch, pinned: bool) -> Result<usize> {
+        anyhow::ensure!(
+            !self.tenants.contains_key(name),
+            "tenant '{name}' already registered"
+        );
+        let home = self.ring.route(name).expect("ring always has ≥1 pool");
+        self.pools[home].register(name, arch.clone(), pinned)?;
+        self.tenants.insert(name.to_string(), TenantRecord { arch, pinned });
+        self.homes.insert(name.to_string(), home);
+        self.heat.entry(name.to_string()).or_insert(0);
+        Ok(home)
+    }
+
+    /// Like [`ShardedFleet::register`] with an explicit QoS contract
+    /// (carried along on every later migration).
+    pub fn register_with_qos(
+        &mut self,
+        name: &str,
+        arch: ModelArch,
+        pinned: bool,
+        qos: QosSpec,
+    ) -> Result<usize> {
+        let home = self.register(name, arch, pinned)?;
+        self.pools[home].qos_mut().set_spec(name, qos);
+        Ok(home)
+    }
+
+    /// Retire a tenant from its home pool and the shard's routing
+    /// tables. Its transfer-ledger history stays on the books (like
+    /// per-tenant stats on a single pool).
+    pub fn retire(&mut self, name: &str) -> Result<()> {
+        let home = self
+            .homes
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unknown tenant '{name}'"))?;
+        self.pools[home].retire(name)?;
+        self.homes.remove(name);
+        self.tenants.remove(name);
+        Ok(())
+    }
+
+    /// Serve one batch on the tenant's home pool, then (when
+    /// `shed_threshold` is armed) give the shed policy one look.
+    /// Returns the pool that served and its [`BatchOutcome`].
+    pub fn serve_batch(
+        &mut self,
+        model: &str,
+        images: &[Vec<f32>],
+    ) -> Result<(usize, BatchOutcome)> {
+        let home = self
+            .homes
+            .get(model)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unknown tenant '{model}'"))?;
+        let out = self.pools[home].serve_batch(model, images)?;
+        *self.heat.entry(model.to_string()).or_insert(0) += images.len() as u64;
+        if self.shed_threshold > 0.0 {
+            self.maybe_shed()?;
+        }
+        Ok((home, out))
+    }
+
+    /// Move `name` to pool `dst`, charging the transfer ledger when its
+    /// weights actually cross the link. Returns the transfer cycles
+    /// charged.
+    ///
+    /// Resident tenants are extracted from the source twin
+    /// ([`Fleet::extract_columns`]), re-registered on `dst` with their
+    /// carried QoS contract, and landed as migrations
+    /// ([`Fleet::land_migrated`]) — the destination's reload ledger is
+    /// untouched. Cold tenants (and resident tenants `dst` can't host
+    /// right now) just re-home for free: nothing moves, and the tenant
+    /// pays a normal reload at `dst` on next use. Queued requests do
+    /// not survive the move (same contract as [`Fleet::retire`]):
+    /// migrate between batches, which is when the serve path calls it.
+    pub fn migrate_tenant(&mut self, name: &str, dst: usize) -> Result<u64> {
+        let src = self
+            .homes
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unknown tenant '{name}'"))?;
+        anyhow::ensure!(dst < self.pools.len(), "no pool {dst}");
+        if src == dst {
+            return Ok(0);
+        }
+        let rec = self.tenants.get(name).expect("homed tenant has a record").clone();
+        let qspec = self.pools[src].qos().spec(name);
+        let was_resident = self.pools[src].is_resident(name);
+        let width = self.pools[src]
+            .registry()
+            .get(name)
+            .map(|e| e.bls_needed())
+            .unwrap_or(0);
+        let cols = self.pools[src].extract_columns(name)?;
+        // Destination registers first: if that fails (e.g. a pinned
+        // joint-fit violation) the tenant is left untouched on `src`.
+        self.pools[dst].register_with_qos(name, rec.arch.clone(), rec.pinned, qspec)?;
+        self.pools[src].retire(name)?;
+        let mut cycles = 0;
+        if was_resident && self.pools[dst].can_host(name) {
+            self.pools[dst].land_migrated(name, &cols)?;
+            cycles = self.transfer_cost(width);
+            self.transfer_cycles += cycles;
+            self.pool_transfer_cycles[dst] += cycles;
+            *self.tenant_transfer_cycles.entry(name.to_string()).or_insert(0) += cycles;
+            self.transfers += 1;
+            let clock = self.transfer_clock;
+            emit(&self.trace, || TraceEvent {
+                clock,
+                kind: EventKind::MigratePool,
+                tenant: name.to_string(),
+                macro_id: Some(dst),
+                cycles,
+                twin: false,
+                detail: width as u64,
+                class: Some(qspec.class),
+            });
+            self.transfer_clock += cycles;
+        }
+        self.homes.insert(name.to_string(), dst);
+        Ok(cycles)
+    }
+
+    /// Add a fresh pool (built from the shard's config) to the
+    /// rotation and migrate exactly the tenants whose ring arc it took
+    /// over. Returns `(pool id, tenants moved)`.
+    pub fn add_pool(&mut self) -> Result<(usize, usize)> {
+        let id = self.pools.len();
+        self.pools.push(Fleet::new(&self.cfg, &self.spec));
+        self.pool_transfer_cycles.push(0);
+        self.ring.add_pool(id);
+        let moved = self.rebalance()?;
+        Ok((id, moved))
+    }
+
+    /// Take pool `id` out of rotation and migrate its tenants to their
+    /// new ring homes. The pool object (and its ledgers) stays owned so
+    /// the books never lose history. Returns tenants moved.
+    pub fn drain_pool(&mut self, id: usize) -> Result<usize> {
+        anyhow::ensure!(self.ring.contains(id), "pool {id} not in rotation");
+        anyhow::ensure!(self.ring.pools().len() > 1, "cannot drain the last pool");
+        self.ring.remove_pool(id);
+        self.rebalance()
+    }
+
+    /// Re-home every tenant whose ring route differs from its current
+    /// home (deterministic name order). Only tenants on arcs a
+    /// membership change touched actually move — the consistent-hash
+    /// guarantee. Returns tenants moved.
+    fn rebalance(&mut self) -> Result<usize> {
+        let names: Vec<String> = self.homes.keys().cloned().collect();
+        let mut moved = 0;
+        for name in names {
+            let want = self.ring.route(&name).expect("ring is non-empty");
+            if self.homes[&name] != want {
+                self.migrate_tenant(&name, want)?;
+                moved += 1;
+            }
+        }
+        Ok(moved)
+    }
+
+    /// One look of the shed policy: if the highest-pressure in-rotation
+    /// pool exceeds `shed_threshold`, migrate its hottest non-pinned
+    /// tenant (most requests served; ties break to the
+    /// lexicographically smallest name) to the coldest pool — provided
+    /// the move strictly improves: the destination's pressure *after*
+    /// accepting the tenant must stay below the source's *before*.
+    /// Returns the executed move, `None` when nothing qualified.
+    ///
+    /// At most one tenant moves per call; the serve path calls this
+    /// after every batch, so a saturated pool drains gradually instead
+    /// of rebalancing in one disruptive burst.
+    pub fn maybe_shed(&mut self) -> Result<Option<ShedEvent>> {
+        let in_ring = self.ring.pools();
+        if in_ring.len() < 2 {
+            return Ok(None);
+        }
+        let (&hot, hot_p) = in_ring
+            .iter()
+            .map(|p| (p, self.pressure(*p)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).expect("pressure is finite").then(b.0.cmp(a.0)))
+            .expect("ring has pools");
+        if hot_p <= self.shed_threshold {
+            return Ok(None);
+        }
+        // Hottest migratable tenant homed on the hot pool.
+        let mut candidates: Vec<(&String, u64)> = self
+            .homes
+            .iter()
+            .filter(|&(_, &p)| p == hot)
+            .filter(|(name, _)| !self.tenants[*name].pinned)
+            .map(|(name, _)| (name, self.heat.get(name).copied().unwrap_or(0)))
+            .collect();
+        candidates.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        let Some((name, _)) = candidates.first() else {
+            return Ok(None);
+        };
+        let name = (*name).clone();
+        let width = self.pools[hot]
+            .registry()
+            .get(&name)
+            .map(|e| e.bls_needed())
+            .unwrap_or(0);
+        // Coldest destination that strictly improves and can fit the
+        // tenant's footprint at all.
+        let (&cold, cold_p) = in_ring
+            .iter()
+            .filter(|&&p| p != hot)
+            .map(|p| (p, self.pressure(*p)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).expect("pressure is finite").then(a.0.cmp(b.0)))
+            .expect("≥2 pools in rotation");
+        let cap = (self.pools[cold].num_macros() * self.spec.bitlines) as f64;
+        if width as f64 > cap || cold_p + width as f64 / cap >= hot_p {
+            return Ok(None);
+        }
+        let cycles = self.migrate_tenant(&name, cold)?;
+        Ok(Some(ShedEvent { tenant: name, from: hot, to: cold, cycles }))
+    }
+
+    /// Snapshot every pool plus the transfer ledger. Debug builds
+    /// assert the fifth ledger's three-way conservation here, mirroring
+    /// [`Fleet::snapshot`]'s four-ledger assertion.
+    pub fn snapshot(&self) -> ShardSnapshot {
+        let snap = ShardSnapshot {
+            pools: self.pools.iter().map(|p| p.snapshot()).collect(),
+            tenant_homes: self.homes.iter().map(|(n, &p)| (n.clone(), p)).collect(),
+            transfer_cycles: self.transfer_cycles,
+            pool_transfer_cycles: self.pool_transfer_cycles.clone(),
+            tenant_transfer_cycles: self
+                .tenant_transfer_cycles
+                .iter()
+                .map(|(n, &c)| (n.clone(), c))
+                .collect(),
+            transfers: self.transfers,
+            transfer_clock: self.transfer_clock,
+            link_cost: self.link_cost,
+        };
+        debug_assert_eq!(
+            snap.transfer_cycles,
+            snap.pool_transfer_cycles.iter().sum::<u64>(),
+            "transfer ledger: shard total != Σ per-pool"
+        );
+        debug_assert_eq!(
+            snap.transfer_cycles,
+            snap.tenant_transfer_cycles.iter().map(|(_, c)| c).sum::<u64>(),
+            "transfer ledger: shard total != Σ per-tenant"
+        );
+        snap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vgg9;
+    use crate::config::ExecutionMode;
+
+    fn cfg(pools: usize, macros_per_pool: usize) -> FleetConfig {
+        FleetConfig {
+            pools,
+            num_macros: macros_per_pool,
+            coresident: true,
+            ..FleetConfig::default()
+        }
+    }
+
+    fn img() -> Vec<f32> {
+        crate::data::SynthCifar::sample(2, 5).data
+    }
+
+    #[test]
+    fn ring_add_remove_remaps_only_the_affected_arc() {
+        let mut ring = HashRing::new(8);
+        for p in 0..4 {
+            ring.add_pool(p);
+        }
+        let names: Vec<String> = (0..100).map(|i| format!("tenant-{i}")).collect();
+        let before: Vec<usize> = names.iter().map(|n| ring.route(n).unwrap()).collect();
+        // Deterministic.
+        assert_eq!(before, names.iter().map(|n| ring.route(n).unwrap()).collect::<Vec<_>>());
+        ring.add_pool(4);
+        let mut moved = 0;
+        for (n, &old) in names.iter().zip(&before) {
+            let new = ring.route(n).unwrap();
+            if new != old {
+                assert_eq!(new, 4, "a tenant may only move to the added pool");
+                moved += 1;
+            }
+        }
+        assert!(moved > 0, "an added pool takes over some arc");
+        // Removing it restores the exact prior routing.
+        ring.remove_pool(4);
+        let after: Vec<usize> = names.iter().map(|n| ring.route(n).unwrap()).collect();
+        assert_eq!(after, before);
+    }
+
+    #[test]
+    fn tenants_home_by_ring_and_serve_on_their_home_pool() {
+        let mut shard = ShardedFleet::new(&cfg(4, 1), &MacroSpec::default());
+        for i in 0..8 {
+            let name = format!("m{i}");
+            let home = shard.register(&name, vgg9().scaled(0.03), false).unwrap();
+            assert_eq!(Some(home), shard.ring().route(&name));
+            assert_eq!(shard.home_of(&name), Some(home));
+            let (served_on, _) = shard.serve_batch(&name, &[img()]).unwrap();
+            assert_eq!(served_on, home);
+        }
+        let snap = shard.snapshot();
+        assert_eq!(snap.pools.len(), 4);
+        assert_eq!(snap.transfers, 0, "no migrations happened");
+        assert_eq!(snap.transfer_cycles, 0);
+    }
+
+    #[test]
+    fn resident_migration_charges_transfer_and_lands_without_reloads() {
+        let spec = MacroSpec::default();
+        let c = FleetConfig { execution: ExecutionMode::Twin, ..cfg(2, 1) };
+        let mut shard = ShardedFleet::new(&c, &spec);
+        let home = shard.register("m", vgg9().scaled(0.04), false).unwrap();
+        shard.serve_batch("m", &[img()]).unwrap(); // now resident
+        let width = shard.pool(home).registry().get("m").unwrap().bls_needed();
+        let dst = 1 - home;
+        let reloads_before = shard.snapshot().total_reload_cycles();
+
+        let cycles = shard.migrate_tenant("m", dst).unwrap();
+        assert_eq!(cycles, shard.transfer_cost(width));
+        assert_eq!(cycles, width as u64 * c.link_cost, "default compression 1.0");
+        assert!(!shard.pool(home).is_resident("m"));
+        assert!(shard.pool(dst).is_resident("m"));
+        assert_eq!(shard.home_of("m"), Some(dst));
+
+        let snap = shard.snapshot();
+        assert_eq!(snap.transfer_cycles, cycles);
+        assert_eq!(snap.pool_transfer_cycles[dst], cycles);
+        assert_eq!(snap.tenant_transfer_cycles, vec![("m".to_string(), cycles)]);
+        assert_eq!(snap.transfers, 1);
+        assert_eq!(snap.transfer_clock, cycles);
+        // The landing is booked as migration, never reload...
+        assert_eq!(snap.total_reload_cycles(), reloads_before);
+        assert_eq!(snap.pools[dst].migration_cycles, width as u64);
+        // ...and the tenant really is resident: the next batch reloads
+        // nothing and classifies through the migrated twin columns.
+        let (served_on, out) = shard.serve_batch("m", &[img()]).unwrap();
+        assert_eq!(served_on, dst);
+        assert_eq!(out.reload_cycles, 0);
+    }
+
+    #[test]
+    fn cold_rehoming_is_free() {
+        let mut shard = ShardedFleet::new(&cfg(2, 1), &MacroSpec::default());
+        let home = shard.register("m", vgg9().scaled(0.04), false).unwrap();
+        let dst = 1 - home;
+        // Never served → not resident → nothing crosses the link.
+        assert_eq!(shard.migrate_tenant("m", dst).unwrap(), 0);
+        let snap = shard.snapshot();
+        assert_eq!((snap.transfers, snap.transfer_cycles), (0, 0));
+        assert_eq!(shard.home_of("m"), Some(dst));
+        // The tenant pays a normal reload at its new home instead.
+        let (served_on, out) = shard.serve_batch("m", &[img()]).unwrap();
+        assert_eq!(served_on, dst);
+        assert!(out.reload_cycles > 0);
+    }
+
+    #[test]
+    fn saturated_pool_sheds_hottest_tenant_to_coldest() {
+        let spec = MacroSpec::default();
+        let c = FleetConfig { shed_threshold: 0.9, ..cfg(2, 1) };
+        let mut shard = ShardedFleet::new(&c, &spec);
+        // Four 82-column tenants stacked on pool 0: 328/256 ≈ 1.28
+        // pressure — they can never all be resident at once.
+        for i in 0..4 {
+            let name = format!("t{i}");
+            shard.register(&name, vgg9().scaled(0.03), false).unwrap();
+            shard.migrate_tenant(&name, 0).unwrap(); // cold, free
+        }
+        assert!(shard.pressure(0) > 1.2);
+        // Serving heats t0 and trips the shed policy: t0 (the hottest)
+        // moves to pool 1, resident, paying one charged transfer.
+        shard.serve_batch("t0", &[img()]).unwrap();
+        assert_eq!(shard.home_of("t0"), Some(1));
+        // Pool 0 is still over threshold (3·82/256 ≈ 0.96): the next
+        // served tenant becomes the hottest remaining and sheds too.
+        shard.serve_batch("t1", &[img()]).unwrap();
+        assert_eq!(shard.home_of("t1"), Some(1));
+        // Now 2·82/256 ≈ 0.64 ≤ 0.9 on both sides: stable.
+        shard.serve_batch("t2", &[img()]).unwrap();
+        assert_eq!(shard.home_of("t2"), Some(0));
+        assert!(shard.maybe_shed().unwrap().is_none());
+        let snap = shard.snapshot();
+        assert_eq!(snap.transfers, 2);
+        assert_eq!(snap.transfer_cycles, 2 * shard.transfer_cost(82));
+    }
+
+    #[test]
+    fn transfer_cost_honours_link_cost_and_compression() {
+        let c = FleetConfig {
+            link_cost: 10,
+            transfer_compression: 4.0,
+            ..cfg(2, 1)
+        };
+        let shard = ShardedFleet::new(&c, &MacroSpec::default());
+        assert_eq!(shard.transfer_cost(82), 21 * 10); // ceil(82/4)=21
+        assert_eq!(shard.transfer_cost(0), 0);
+    }
+
+    #[test]
+    fn add_and_drain_pool_move_only_arc_tenants() {
+        let mut shard = ShardedFleet::new(&cfg(3, 1), &MacroSpec::default());
+        for i in 0..20 {
+            shard.register(&format!("m{i}"), vgg9().scaled(0.03), false).unwrap();
+        }
+        let before: BTreeMap<String, usize> =
+            shard.snapshot().tenant_homes.into_iter().collect();
+        let (id, moved) = shard.add_pool().unwrap();
+        assert_eq!(id, 3);
+        let mid: BTreeMap<String, usize> = shard.snapshot().tenant_homes.into_iter().collect();
+        let mut changed = 0;
+        for (name, &old) in &before {
+            if mid[name] != old {
+                assert_eq!(mid[name], id, "rebalance only moves tenants onto the new pool");
+                changed += 1;
+            }
+        }
+        assert_eq!(changed, moved);
+        // All tenants were cold: membership churn cost nothing.
+        assert_eq!(shard.snapshot().transfer_cycles, 0);
+        // Draining the pool hands its arc back: routing fully restores.
+        shard.drain_pool(id).unwrap();
+        let after: BTreeMap<String, usize> = shard.snapshot().tenant_homes.into_iter().collect();
+        assert_eq!(after, before);
+    }
+}

@@ -17,7 +17,7 @@ use cim_adapt::arch::by_name;
 use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec, MorphConfig, ServeConfig};
 use cim_adapt::coordinator::server::{Backend, EdgeServer};
 use cim_adapt::data::SynthCifar;
-use cim_adapt::fleet::{EvictionPolicy, FleetServer, QosClass, SchedMode};
+use cim_adapt::fleet::{EvictionPolicy, FleetServer, QosClass, SchedMode, ShardedFleet};
 use cim_adapt::latency::{cost::allocated_usage, model_cost};
 use cim_adapt::mapping::{pack_model, pack_model_at, FitPolicyKind};
 use cim_adapt::morph::flow::morph_flow_synthetic;
@@ -55,7 +55,9 @@ fn main() -> anyhow::Result<()> {
                          [--defrag [--defrag-threshold T]] [--qos] [--sched qos|fifo] \
                          [--priority m=class,..] [--rate m=R[:BURST],..] \
                          [--deadline m=CYCLES,..] [--admit-budget N] \
-                         [--trace-out FILE] [--metrics-out FILE]",
+                         [--trace-out FILE] [--metrics-out FILE] \
+                         [--pools N [--tenants T] [--link-cost C] \
+                          [--transfer-compression F] [--shed-threshold T] [--json FILE]]",
                         "multi-tenant hot-swap serving demo (--twin: run on the simulated \
                          macros; --defrag: compact the pool online when fragmentation \
                          crosses the threshold; --qos: demo priority classes; --priority/\
@@ -63,7 +65,11 @@ fn main() -> anyhow::Result<()> {
                          reject/defer dispatches whose projected reload+pass cycles \
                          exceed N; --sched fifo: the arrival-order baseline; \
                          --trace-out: write a Chrome-trace JSON of the run and audit the \
-                         ledgers against it; --metrics-out: write Prometheus text metrics)",
+                         ledgers against it; --metrics-out: write Prometheus text metrics; \
+                         --pools N: consistent-hash sharded serving across N pools of \
+                         --macros each — saturated pools shed their hottest tenant over \
+                         the charged inter-pool link and all five ledgers are audited; \
+                         --json: write the shard snapshot as JSON)",
                     )
                     .cmd(
                         "inspect --model M [--base-bl N] [--spans m:s:c,...] [--timeline FILE]",
@@ -287,7 +293,14 @@ fn parse_qos_flags(args: &Args, cfg: &mut FleetConfig) -> anyhow::Result<()> {
 
 fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     let spec = MacroSpec::default();
+    let pools = args.usize_or("pools", 1);
     let mut cfg = FleetConfig {
+        pools,
+        link_cost: args.u64_or("link-cost", FleetConfig::default().link_cost),
+        transfer_compression: args.f64_or("transfer-compression", 1.0),
+        // The sharded demo arms the shed policy by default — that's the
+        // behaviour `--pools` exists to show; single-pool keeps it off.
+        shed_threshold: args.f64_or("shed-threshold", if pools > 1 { 0.9 } else { 0.0 }),
         num_macros: args.usize_or("macros", 4),
         max_batch: args.usize_or("batch", 8),
         policy: EvictionPolicy::parse(args.str_or("policy", "lru"))
@@ -329,6 +342,9 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         }
     }
     parse_qos_flags(args, &mut cfg)?;
+    if cfg.pools > 1 {
+        return cmd_fleet_sharded(args, &cfg, &spec);
+    }
     let trace_out = args.get("trace-out").map(PathBuf::from);
     let metrics_out = args.get("metrics-out").map(PathBuf::from);
     // The trace bundle is only built (and the fleet only pays the
@@ -565,6 +581,109 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         }
         anyhow::ensure!(report.pass, "ledger audit failed: {:?}", report.first_divergence);
     }
+    Ok(())
+}
+
+/// The `--pools N` arm of `cmd_fleet`: a fleet-of-fleets demo. `N`
+/// independent pools sit behind the consistent-hash router; tenants
+/// (scaled variants of `--model`) hash to home pools, and a saturated
+/// pool sheds its hottest tenant to the coldest one over the charged
+/// inter-pool link. Every pool's four ledgers and the shard's fifth
+/// (transfer) ledger are audited against the trace before exit.
+fn cmd_fleet_sharded(args: &Args, cfg: &FleetConfig, spec: &MacroSpec) -> anyhow::Result<()> {
+    let tenants = args.usize_or("tenants", 4 * cfg.pools);
+    let n = args.usize_or("requests", 300);
+    let scale = args.f64_or("scale", 0.03);
+    let base = by_name(args.str_or("model", "vgg9"))?;
+
+    let mut shard = ShardedFleet::new(cfg, spec);
+    // One trace bundle per pool (each audits its own four ledgers) plus
+    // a shard-level bundle that sees only the MigratePool events.
+    let shard_trace = FleetTrace::default();
+    shard.set_trace(Some(shard_trace.sink()));
+    let pool_traces: Vec<FleetTrace> =
+        (0..shard.num_pools()).map(|_| FleetTrace::default()).collect();
+    for (p, t) in pool_traces.iter().enumerate() {
+        shard.pool_mut(p).set_trace(Some(t.sink()));
+    }
+
+    for i in 0..tenants {
+        let name = format!("m{i}");
+        let home = shard.register(&name, base.scaled(scale), false)?;
+        log::debug!("tenant '{name}' homed on pool {home}");
+    }
+    println!(
+        "sharded fleet: {} pools × {} macros ({} columns total) | {} tenants @ scale {:.2} | \
+         link cost {} cycles/column, transfer compression {:.1}x, shed threshold {:.2}",
+        cfg.pools,
+        cfg.num_macros,
+        commas((cfg.pools * cfg.num_macros * spec.bitlines) as u64),
+        tenants,
+        scale,
+        cfg.link_cost,
+        cfg.transfer_compression,
+        cfg.shed_threshold
+    );
+
+    for k in 0..n {
+        let name = format!("m{}", k % tenants);
+        let img = SynthCifar::sample(k % 10, 9000 + k as u64);
+        shard.serve_batch(&name, &[img.data])?;
+    }
+
+    let snap = shard.snapshot();
+    for (p, ps) in snap.pools.iter().enumerate() {
+        println!(
+            "  pool {p}: pressure {:.2} | reload {} | migration {} | transfer-in {} | \
+             evictions {} | residents {}",
+            shard.pressure(p),
+            commas(ps.reload_cycles),
+            commas(ps.migration_cycles),
+            commas(snap.pool_transfer_cycles[p]),
+            ps.evictions,
+            ps.resident.len()
+        );
+    }
+    println!(
+        "transfer ledger: {} cycles over {} transfers (= per-pool sum {}, per-tenant sum {}) | \
+         movement total {} (reload {} + migration {} + transfer {})",
+        commas(snap.transfer_cycles),
+        snap.transfers,
+        commas(snap.pool_transfer_cycles.iter().sum::<u64>()),
+        commas(snap.tenant_transfer_cycles.iter().map(|(_, c)| c).sum::<u64>()),
+        commas(snap.total_movement_cycles()),
+        commas(snap.total_reload_cycles()),
+        commas(snap.total_migration_cycles()),
+        commas(snap.transfer_cycles)
+    );
+
+    // Five-ledger audit: each pool's four ledgers against its own event
+    // stream, then the shard's transfer ledger against the MigratePool
+    // stream.
+    let mut pass = true;
+    for (p, t) in pool_traces.iter().enumerate() {
+        let report = t.audit.lock().unwrap().verify(&snap.pools[p]);
+        if !report.pass {
+            pass = false;
+            println!("  pool {p} audit FAIL: {:?}", report.first_divergence);
+        }
+    }
+    let transfer_report = shard_trace.audit.lock().unwrap().verify_transfers(&snap);
+    if !transfer_report.pass {
+        pass = false;
+        println!("  transfer audit FAIL: {:?}", transfer_report.first_divergence);
+    }
+    println!(
+        "five-ledger audit {} ({} pools × four ledgers + transfer ledger, {} transfer checks)",
+        if pass { "PASS" } else { "FAIL" },
+        snap.pools.len(),
+        transfer_report.checks
+    );
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, snap.to_json().pretty())?;
+        println!("wrote shard snapshot to {path}");
+    }
+    anyhow::ensure!(pass, "five-ledger audit failed");
     Ok(())
 }
 

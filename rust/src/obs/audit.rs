@@ -1,4 +1,4 @@
-//! The online four-ledger audit.
+//! The online four-ledger audit — five under sharded serving.
 //!
 //! `Fleet::snapshot` keeps a `debug_assert` that the fleet, per-macro,
 //! per-tenant, and twin cycle ledgers agree; the [`LedgerAuditor`]
@@ -12,16 +12,28 @@
 //! [`FleetTrace`](super::FleetTrace)) or offline
 //! ([`LedgerAuditor::replay`] over a recorded [`TraceLog`](super::TraceLog)) —
 //! the proptests check both derivations are bit-identical.
+//!
+//! A sharded fleet ([`ShardedFleet`](crate::fleet::ShardedFleet)) adds
+//! the **fifth** ledger: inter-pool transfer cycles, recorded as
+//! [`EventKind::MigratePool`] events on the shard's own monotone
+//! transfer clock. The same auditor re-derives it (fleet total ==
+//! Σ per-destination-pool == Σ per-tenant) and
+//! [`LedgerAuditor::verify_transfers`] diffs it against a
+//! [`ShardSnapshot`](crate::fleet::ShardSnapshot); the per-pool streams
+//! keep their own four-ledger auditors, so the five-ledger statement
+//! decomposes into N pool audits plus one transfer audit.
 
 use std::collections::BTreeMap;
 
-use crate::fleet::FleetSnapshot;
+use crate::fleet::{FleetSnapshot, ShardSnapshot};
 use crate::util::json::Json;
 
 use super::event::{EventKind, TraceEvent};
 use super::sink::TraceSink;
 
-/// Re-derives the four cycle ledgers from trace events.
+/// Re-derives the four cycle ledgers from trace events — plus the
+/// sharded fleet's fifth (inter-pool transfer) ledger when the stream
+/// carries [`EventKind::MigratePool`] events.
 #[derive(Debug, Clone, Default)]
 pub struct LedgerAuditor {
     fleet_load: u64,
@@ -32,6 +44,12 @@ pub struct LedgerAuditor {
     tenant_migration: BTreeMap<String, u64>,
     twin_load: u64,
     twin_migration: u64,
+    /// Shard-level transfer ledger: fleet total, per destination pool
+    /// (`MigratePool` events carry the pool in `macro_id`), per tenant.
+    fleet_transfer: u64,
+    pool_transfer: BTreeMap<usize, u64>,
+    tenant_transfer: BTreeMap<String, u64>,
+    transfers: u64,
     events: u64,
     last_clock: u64,
     clock_regressions: u64,
@@ -44,6 +62,18 @@ impl TraceSink for LedgerAuditor {
             self.clock_regressions += 1;
         } else {
             self.last_clock = ev.clock;
+        }
+        if ev.kind == EventKind::MigratePool {
+            // The transfer ledger has no twin side (the landing write
+            // inside the destination pool books its own mirrored
+            // MigrateSpans), so every MigratePool event is analytic.
+            self.fleet_transfer += ev.cycles;
+            if let Some(p) = ev.macro_id {
+                *self.pool_transfer.entry(p).or_default() += ev.cycles;
+            }
+            *self.tenant_transfer.entry(ev.tenant.clone()).or_default() += ev.cycles;
+            self.transfers += 1;
+            return;
         }
         let (fleet, per_macro, per_tenant, twin) = match ev.kind {
             EventKind::RegionReload => (
@@ -102,6 +132,17 @@ impl LedgerAuditor {
     /// events (must stay 0 — the clock only ever advances).
     pub fn clock_regressions(&self) -> u64 {
         self.clock_regressions
+    }
+
+    /// Derived shard-level inter-pool transfer cycles (the fifth
+    /// ledger; 0 on single-pool streams).
+    pub fn fleet_transfer_cycles(&self) -> u64 {
+        self.fleet_transfer
+    }
+
+    /// Derived cross-pool migrations (`MigratePool` events seen).
+    pub fn transfers(&self) -> u64 {
+        self.transfers
     }
 
     /// Diff every derived ledger against the fleet's own books.
@@ -175,6 +216,76 @@ impl LedgerAuditor {
             acc.check("twin load", self.twin_load, twin_load);
             acc.check("twin migration", self.twin_migration, twin_migration);
         }
+        // A single pool has no inter-pool link: transfer charges in its
+        // stream mean events leaked across shard boundaries.
+        acc.check("transfer (single pool)", self.fleet_transfer, 0);
+        acc.check("clock regressions", self.clock_regressions, 0);
+
+        AuditReport {
+            pass: acc.first.is_none(),
+            checks: acc.checks,
+            events: self.events,
+            first_divergence: acc.first,
+        }
+    }
+
+    /// Diff the derived **transfer** ledger against a sharded fleet's
+    /// books — the fifth-ledger counterpart of [`LedgerAuditor::verify`].
+    ///
+    /// Feed this auditor the shard-level stream (the sink passed to
+    /// `ShardedFleet::set_trace`, which carries only
+    /// [`EventKind::MigratePool`] events on the shard's monotone
+    /// transfer clock); each pool's own stream keeps its own
+    /// four-ledger auditor. Checks, in order: fleet transfer total,
+    /// per-destination-pool attribution, per-tenant attribution,
+    /// unknown-tenant / unknown-pool charges, transfer count, and clock
+    /// monotonicity — the first failure becomes
+    /// [`AuditReport::first_divergence`].
+    pub fn verify_transfers(&self, snap: &ShardSnapshot) -> AuditReport {
+        struct Acc {
+            checks: usize,
+            first: Option<String>,
+        }
+        impl Acc {
+            fn check(&mut self, label: &str, derived: u64, ledger: u64) {
+                self.checks += 1;
+                if derived != ledger && self.first.is_none() {
+                    self.first = Some(format!("{label}: derived {derived} != ledger {ledger}"));
+                }
+            }
+        }
+        let mut acc = Acc { checks: 0, first: None };
+
+        acc.check("shard transfer", self.fleet_transfer, snap.transfer_cycles);
+        for (p, &cycles) in snap.pool_transfer_cycles.iter().enumerate() {
+            acc.check(
+                &format!("pool {p} transfer"),
+                self.pool_transfer.get(&p).copied().unwrap_or(0),
+                cycles,
+            );
+        }
+        for p in self.pool_transfer.keys() {
+            acc.checks += 1;
+            if acc.first.is_none() && *p >= snap.pool_transfer_cycles.len() {
+                acc.first = Some(format!("pool {p}: charged in trace, unknown to snapshot"));
+            }
+        }
+        for (name, cycles) in &snap.tenant_transfer_cycles {
+            acc.check(
+                &format!("tenant {name} transfer"),
+                self.tenant_transfer.get(name).copied().unwrap_or(0),
+                *cycles,
+            );
+        }
+        for name in self.tenant_transfer.keys() {
+            acc.checks += 1;
+            if acc.first.is_none()
+                && !snap.tenant_transfer_cycles.iter().any(|(n, _)| n == name)
+            {
+                acc.first = Some(format!("tenant {name}: charged in trace, unknown to snapshot"));
+            }
+        }
+        acc.check("transfer count", self.transfers, snap.transfers);
         acc.check("clock regressions", self.clock_regressions, 0);
 
         AuditReport {
@@ -250,5 +361,49 @@ mod tests {
     fn clock_regression_is_counted() {
         let a = LedgerAuditor::replay(&[reload(10, "a", 0, 1, false), reload(3, "a", 0, 1, false)]);
         assert_eq!(a.clock_regressions(), 1);
+    }
+
+    #[test]
+    fn transfer_ledger_accumulates_and_single_pool_verify_rejects_it() {
+        let transfer = TraceEvent {
+            kind: EventKind::MigratePool,
+            ..reload(4, "a", 2, 650, false)
+        };
+        let a = LedgerAuditor::replay(&[transfer]);
+        assert_eq!(a.fleet_transfer_cycles(), 650);
+        assert_eq!(a.transfers(), 1);
+        // A single pool's stream must never carry transfer charges.
+        let report = a.verify(&FleetSnapshot::default());
+        assert!(!report.pass);
+        assert!(report
+            .first_divergence
+            .as_deref()
+            .unwrap()
+            .starts_with("transfer (single pool)"));
+    }
+
+    #[test]
+    fn verify_transfers_balances_all_three_views() {
+        let mk = |clock, tenant: &str, pool, cycles| TraceEvent {
+            kind: EventKind::MigratePool,
+            ..reload(clock, tenant, pool, cycles, false)
+        };
+        let a = LedgerAuditor::replay(&[mk(0, "a", 1, 100), mk(5, "b", 0, 40), mk(9, "a", 0, 60)]);
+        let snap = ShardSnapshot {
+            transfer_cycles: 200,
+            pool_transfer_cycles: vec![100, 100],
+            tenant_transfer_cycles: vec![("a".into(), 160), ("b".into(), 40)],
+            transfers: 3,
+            ..ShardSnapshot::default()
+        };
+        assert!(a.verify_transfers(&snap).pass);
+        let mut broken = snap.clone();
+        broken.pool_transfer_cycles[1] = 99;
+        let report = a.verify_transfers(&broken);
+        assert!(!report.pass);
+        assert_eq!(
+            report.first_divergence.as_deref(),
+            Some("pool 1 transfer: derived 100 != ledger 99")
+        );
     }
 }

@@ -53,12 +53,22 @@ pub enum EventKind {
     /// A compaction pass committed (`cycles` = total migration charge,
     /// `detail` = spans moved).
     Compaction,
+    /// A tenant crossed the inter-pool link of a sharded fleet
+    /// (`cycles` = the transfer charge on the shard-level transfer
+    /// ledger, `detail` = footprint width in bitlines). Unlike every
+    /// other ledger-bearing kind, `macro_id` names the **destination
+    /// pool**, not a macro — the link is pool-to-pool hardware — and
+    /// the clock is the shard's own monotone transfer clock (pool
+    /// clocks are independent and would interleave non-monotonically).
+    /// Never twin-mirrored: the landing write inside the destination
+    /// pool books its own twin-mirrored [`EventKind::MigrateSpan`]s.
+    MigratePool,
 }
 
 impl EventKind {
     /// Every kind, in schema order — exporters and counters index by
     /// [`EventKind::index`] into arrays of this length.
-    pub const ALL: [EventKind; 10] = [
+    pub const ALL: [EventKind; 11] = [
         EventKind::Admit,
         EventKind::Reject,
         EventKind::Defer,
@@ -69,6 +79,7 @@ impl EventKind {
         EventKind::MigrateSpan,
         EventKind::TwinPass,
         EventKind::Compaction,
+        EventKind::MigratePool,
     ];
 
     /// Position in [`EventKind::ALL`] (a dense counter index).
@@ -90,6 +101,7 @@ impl EventKind {
             EventKind::MigrateSpan => "migrate_span",
             EventKind::TwinPass => "twin_pass",
             EventKind::Compaction => "compaction",
+            EventKind::MigratePool => "migrate_pool",
         }
     }
 

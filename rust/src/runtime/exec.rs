@@ -233,7 +233,14 @@ struct Inflight {
 pub struct ConcurrentFleet {
     fleet: Fleet,
     pending: BTreeMap<String, VecDeque<Vec<Vec<f32>>>>,
-    exec: Executor,
+    exec: Arc<Executor>,
+    /// Offset added to every batch's primary-macro affinity key. Worker
+    /// affinity is namespaced by **(pool, macro)**: when several pool
+    /// drivers share one [`Executor`] (a sharded fleet's per-pool
+    /// drivers), each driver's base is `pool_id × num_macros`, so pool
+    /// 1's macro 0 and pool 0's macro 0 hash to *different* workers
+    /// instead of serializing onto the same deque.
+    affinity_base: usize,
     inflight: VecDeque<Inflight>,
     completed: Vec<BatchOutcome>,
     reorder: Option<Arc<Mutex<ReorderSink>>>,
@@ -242,12 +249,29 @@ pub struct ConcurrentFleet {
 
 impl ConcurrentFleet {
     /// A concurrent driver over a fresh fleet configured by `cfg`, with
-    /// a `workers`-thread executor.
+    /// a dedicated `workers`-thread executor (affinity base 0).
     pub fn new(cfg: &FleetConfig, spec: &MacroSpec, workers: usize) -> ConcurrentFleet {
+        ConcurrentFleet::new_in_pool(cfg, spec, Arc::new(Executor::new(workers)), 0)
+    }
+
+    /// A concurrent driver sharing `exec` with other pool drivers, as
+    /// pool `pool_id` of a sharded fleet: forward jobs key to
+    /// `pool_id × num_macros + primary_macro`, so distinct pools'
+    /// same-numbered macros spread over distinct workers (see
+    /// [`ConcurrentFleet::new`] for the single-pool case).
+    pub fn new_in_pool(
+        cfg: &FleetConfig,
+        spec: &MacroSpec,
+        exec: Arc<Executor>,
+        pool_id: usize,
+    ) -> ConcurrentFleet {
+        let fleet = Fleet::new(cfg, spec);
+        let affinity_base = pool_id * fleet.num_macros();
         ConcurrentFleet {
-            fleet: Fleet::new(cfg, spec),
+            fleet,
             pending: BTreeMap::new(),
-            exec: Executor::new(workers),
+            exec,
+            affinity_base,
             inflight: VecDeque::new(),
             completed: Vec::new(),
             reorder: None,
@@ -374,7 +398,7 @@ impl ConcurrentFleet {
         };
         let job = plan.take_job();
         let (tx, rx) = mpsc::channel();
-        self.exec.spawn_at(plan.primary_macro(), move || {
+        self.exec.spawn_at(self.affinity_base + plan.primary_macro(), move || {
             let out = job.run(&images);
             // Release the Arc snapshots before signalling completion so
             // the driver's finish (and any later re-materialization)
@@ -532,6 +556,33 @@ mod tests {
         assert_eq!(s.spawned, 64);
         assert_eq!(s.executed, 64);
         assert_eq!(s.popped + s.stolen, 64);
+    }
+
+    #[test]
+    fn pool_drivers_on_a_shared_executor_namespace_affinity() {
+        // Two 2-macro pool drivers share a 4-worker executor. Pool 0's
+        // macros key to workers {0, 1}; pool 1's base of 2 keys its
+        // macros to workers {2, 3} — before the (pool, macro)
+        // namespacing both pools' macro 0 landed on worker 0.
+        let exec = Arc::new(Executor::new(4));
+        let spec = MacroSpec::default();
+        let mut pools: Vec<ConcurrentFleet> = (0..2)
+            .map(|p| ConcurrentFleet::new_in_pool(&cfg(2), &spec, Arc::clone(&exec), p))
+            .collect();
+        for (p, pool) in pools.iter_mut().enumerate() {
+            assert_eq!(pool.affinity_base, p * 2);
+            pool.register("m", vgg9().scaled(0.1), false).unwrap();
+            pool.submit("m", vec![img()]).unwrap();
+            pool.dispatch_next().unwrap();
+        }
+        // Both drivers' books settle independently on the shared pool.
+        for pool in pools.iter_mut() {
+            let outs = pool.drain().unwrap();
+            assert_eq!(outs.len(), 1);
+            let snap = pool.snapshot();
+            assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+        }
+        assert_eq!(exec.stats().executed, 2);
     }
 
     #[test]

@@ -6,7 +6,8 @@ use cim_adapt::arch::{by_name, vgg9, ConvLayer, LayerKind, ModelArch};
 use cim_adapt::cim::{Adc, CimMacro, WeightCell};
 use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec, MorphConfig};
 use cim_adapt::fleet::{
-    plan_compaction, Fleet, ModelWeights, Placement, QosClass, QosFleet, QosSpec,
+    plan_compaction, Fleet, HashRing, ModelWeights, Placement, QosClass, QosFleet, QosSpec,
+    ShardedFleet,
 };
 use cim_adapt::latency::{layer_cost, model_cost, spans_reload_cycles};
 use cim_adapt::mapping::{pack_model, FitPolicyKind, PlacedMapping, Region, RegionAllocator};
@@ -1101,6 +1102,110 @@ fn prop_concurrent_runtime_matches_virtual_clock_twin() {
                 && audit.pass
                 && cs.reload_cycles == cs.macro_load_cycles()
                 && cs.reload_cycles == cs.tenant_load_cycles()
+        },
+    );
+}
+
+#[test]
+fn prop_ring_membership_changes_remap_only_the_affected_arc() {
+    // The consistent-hash guarantee, over random vnode counts, ring
+    // sizes, and tenant populations: adding a pool only pulls tenants
+    // onto the NEW pool (everyone else keeps their home), removing it
+    // restores the exact prior routing, and removing an original member
+    // only moves the tenants that were homed on it.
+    check(
+        "ring add/remove moves only the affected arc",
+        cases(100),
+        triples(usizes(1..33), usizes(2..9), usizes(1..120)),
+        |&(vnodes, pools, tenants)| {
+            let mut ring = HashRing::new(vnodes);
+            for p in 0..pools {
+                ring.add_pool(p);
+            }
+            let names: Vec<String> = (0..tenants).map(|i| format!("tenant-{i}")).collect();
+            let before: Vec<usize> = names.iter().map(|n| ring.route(n).unwrap()).collect();
+            // Adding a pool may only move tenants onto the added pool.
+            ring.add_pool(pools);
+            let mid: Vec<usize> = names.iter().map(|n| ring.route(n).unwrap()).collect();
+            let add_ok = mid
+                .iter()
+                .zip(&before)
+                .all(|(&new, &old)| new == old || new == pools);
+            // Removing it hands every taken arc back to its prior owner.
+            ring.remove_pool(pools);
+            let restored: Vec<usize> = names.iter().map(|n| ring.route(n).unwrap()).collect();
+            // Removing an original member only moves ITS tenants.
+            let victim = tenants % pools;
+            ring.remove_pool(victim);
+            let after: Vec<usize> = names.iter().map(|n| ring.route(n).unwrap()).collect();
+            let remove_ok = after
+                .iter()
+                .zip(&before)
+                .all(|(&new, &old)| (new == old) == (old != victim));
+            add_ok && restored == before && remove_ok
+        },
+    );
+}
+
+#[test]
+fn prop_shard_trace_replay_reproduces_all_five_ledgers() {
+    // Any serve/migrate script (shed policy armed) over a sharded twin
+    // fleet: each pool's auditor re-derives its four ledgers from that
+    // pool's event stream alone — online and replayed offline — and
+    // replaying the shard-level MigratePool sub-script alone re-derives
+    // the transfer ledger. Five ledgers, bit-exact, nothing dropped.
+    let spec = MacroSpec::default();
+    check(
+        "shard trace replay reproduces all five ledgers",
+        cases(10),
+        pairs(vecs(usizes(0..6), 1..16), usizes(2..4)),
+        |(ops, pools)| {
+            let cfg = FleetConfig {
+                pools: *pools,
+                num_macros: 1,
+                coresident: true,
+                execution: ExecutionMode::Twin,
+                shed_threshold: 0.9,
+                ..FleetConfig::default()
+            };
+            let mut shard = ShardedFleet::new(&cfg, &spec);
+            let pool_traces: Vec<FleetTrace> =
+                (0..shard.num_pools()).map(|_| FleetTrace::default()).collect();
+            for (p, t) in pool_traces.iter().enumerate() {
+                shard.pool_mut(p).set_trace(Some(t.sink()));
+            }
+            let shard_trace = FleetTrace::default();
+            shard.set_trace(Some(shard_trace.sink()));
+            for (i, s) in [0.04, 0.03, 0.05].iter().enumerate() {
+                shard
+                    .register(&format!("m{i}"), vgg9().scaled(*s), false)
+                    .unwrap();
+            }
+            let img = vec![0.5f32; 64];
+            for &op in ops {
+                let name = format!("m{}", op % 3);
+                if op < 3 {
+                    let _ = shard.serve_batch(&name, &[img.clone()]);
+                } else {
+                    let _ = shard.migrate_tenant(&name, op % *pools);
+                }
+            }
+            let snap = shard.snapshot();
+            // The four per-pool ledgers, online and offline.
+            let pools_ok = pool_traces.iter().enumerate().all(|(p, t)| {
+                let online = t.audit.lock().unwrap().verify(&snap.pools[p]);
+                let log = t.log.lock().unwrap();
+                let offline = LedgerAuditor::replay(log.events());
+                online.pass && offline.verify(&snap.pools[p]).pass && log.dropped() == 0
+            });
+            // The fifth: replay the MigratePool sub-script alone.
+            let log = shard_trace.log.lock().unwrap();
+            let offline = LedgerAuditor::replay(log.events());
+            pools_ok
+                && offline.verify_transfers(&snap).pass
+                && offline.fleet_transfer_cycles() == snap.transfer_cycles
+                && offline.transfers() == snap.transfers
+                && log.dropped() == 0
         },
     );
 }

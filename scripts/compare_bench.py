@@ -123,6 +123,24 @@ EXACT_COUNTERS = {
         "trace_scenario.events_total",
         "trace_scenario.audit_pass",
         "trace_scenario.deterministic",
+        # Sharded-serving overload scenario (PR 8): single pool vs static
+        # shard vs shed-policy migration, competed on total movement
+        # cycles (reload + migration + inter-pool transfer). All pure
+        # virtual-clock accounting over a fixed request script; the 0/1
+        # verdicts cover the five-ledger audit and the byte-determinism
+        # re-run, asserted in-bench before the summary is written.
+        "shard_scenario.single_pool.movement_cycles",
+        "shard_scenario.single_pool.reload_cycles",
+        "shard_scenario.static_shard.movement_cycles",
+        "shard_scenario.static_shard.reload_cycles",
+        "shard_scenario.migration.movement_cycles",
+        "shard_scenario.migration.reload_cycles",
+        "shard_scenario.migration.migration_cycles",
+        "shard_scenario.migration.transfer_cycles",
+        "shard_scenario.migration.transfers",
+        "shard_scenario.migration_win_cycles",
+        "shard_scenario.audit_pass",
+        "shard_scenario.deterministic",
     ],
     # The coordinator-roundtrip counters flow through the threaded
     # batcher (batch formation is timing-dependent) and stay excluded.

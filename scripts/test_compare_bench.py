@@ -53,6 +53,17 @@ def qos_arm(hi_load=864, hi_busy=2000, delay=9000, total=12000, admitted=48, rej
     }
 
 
+def shard_arm(movement=84000, reload=84000, migration=0, transfer=0, transfers=0):
+    return {
+        "movement_cycles": movement,
+        "reload_cycles": reload,
+        "migration_cycles": migration,
+        "transfer_cycles": transfer,
+        "transfers": transfers,
+        "max_pressure": 5.765625,
+    }
+
+
 def fleet_summary(
     coresident_cycles=190,
     utilization=0.7421875,
@@ -97,6 +108,20 @@ def fleet_summary(
             ),
             "priority_hi_win_cycles": 756,
             "admission_reload_win_cycles": 2303,
+        },
+        "shard_scenario": {
+            "rounds": 16,
+            "pools": 8,
+            "tenants": 64,
+            "single_pool": shard_arm(),
+            "static_shard": shard_arm(movement=83968, reload=83968),
+            "migration": shard_arm(
+                movement=40000, reload=8000, migration=3936, transfer=28064,
+                transfers=42,
+            ),
+            "migration_win_cycles": 43968,
+            "audit_pass": 1,
+            "deterministic": 1,
         },
         "trace_scenario": {
             "rounds": 8,
@@ -272,6 +297,43 @@ class CompareBenchTest(unittest.TestCase):
         failed_audit["trace_scenario"]["audit_pass"] = 0
         self.write(self.cur, "fleet", failed_audit)
         self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+
+    def test_shard_counter_drift_is_gated(self):
+        # The sharded-serving movement totals, the transfer ledger, and
+        # the five-ledger audit / determinism verdicts are exact
+        # counters: a drifted migration win, a lost transfer charge, or
+        # a broken conservation audit all trip CI.
+        self.write(self.base, "fleet", fleet_summary())
+        drifted = fleet_summary()
+        drifted["shard_scenario"]["migration"]["transfer_cycles"] += 656
+        self.write(self.cur, "fleet", drifted)
+        self.assertEqual(run_main(self.argv()), 0, "print-only by default")
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+        failed_audit = fleet_summary()
+        failed_audit["shard_scenario"]["audit_pass"] = 0
+        self.write(self.cur, "fleet", failed_audit)
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+        nondet = fleet_summary()
+        nondet["shard_scenario"]["deterministic"] = 0
+        self.write(self.cur, "fleet", nondet)
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+
+    def test_shard_counters_new_to_baseline_only_report(self):
+        # A baseline from before the sharding work lacks shard_scenario
+        # entirely: current runs report the counters as new and CI stays
+        # green until the baseline is deliberately updated.
+        stale = fleet_summary()
+        del stale["shard_scenario"]
+        cur = fleet_summary()
+        lines, regressions, exact = cb.compare_one("fleet", cur, stale, 0.25)
+        text = "\n".join(lines)
+        self.assertIn("new counter, not compared", text)
+        self.assertIn("shard_scenario.migration.transfer_cycles", text)
+        self.assertEqual(regressions, [])
+        self.assertEqual(exact, [])
+        self.write(self.base, "fleet", stale)
+        self.write(self.cur, "fleet", cur)
+        self.assertEqual(run_main(self.argv("--strict", "--strict-counters")), 0)
 
     def test_twin_ledger_delta_is_gated(self):
         self.write(self.base, "fleet", fleet_summary(twin_delta=0))
