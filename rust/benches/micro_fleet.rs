@@ -16,12 +16,13 @@ use std::collections::BTreeSet;
 
 use cim_adapt::arch::by_name;
 use cim_adapt::cim::MacroStats;
-use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec, MorphConfig};
+use cim_adapt::config::{DataflowKind, ExecutionMode, FleetConfig, MacroSpec, MorphConfig};
 use cim_adapt::data::SynthCifar;
 use cim_adapt::fleet::{
-    EvictionPolicy, Fleet, FleetServer, QosClass, QosFleet, SchedMode, ShardedFleet,
+    scratch_allocs, EvictionPolicy, Fleet, FleetServer, QosClass, QosFleet, SchedMode,
+    ShardedFleet,
 };
-use cim_adapt::latency::model_cost;
+use cim_adapt::latency::{model_cost, BufferTraffic};
 use cim_adapt::mapping::{pack_model, FitPolicyKind};
 use cim_adapt::morph::flow::morph_flow_synthetic;
 use cim_adapt::obs::{events_from_chrome, EventKind, FleetTrace, LedgerAuditor};
@@ -829,6 +830,132 @@ fn main() {
         });
     }
 
+    // --- dataflow scenario: loop orderings on the buffer ledger -----------
+    // The same resident tenant under all three twin loop orderings: the
+    // numerics and compute cycles are identical by construction (variants
+    // change only the *charged* activation-buffer traffic), tap-reuse
+    // strictly beats naive full-spatial on buffer reads, the twin's
+    // compute cycles equal the analytic `computing_latency` exactly, the
+    // steady-state forward allocates nothing, and an oversized tenant
+    // still completes a twin-executed forward via load-on-demand paging.
+    struct DataflowRun {
+        logits: Vec<Vec<f32>>,
+        twin_compute: u64,
+        buffer: BufferTraffic,
+        steady_allocs: u64,
+        audit_pass: bool,
+        snapshot_bytes: String,
+    }
+    let dataflow_arm = |kind: DataflowKind| -> DataflowRun {
+        let spec_ = MacroSpec::default();
+        let dcfg = FleetConfig {
+            num_macros: 1,
+            coresident: true,
+            execution: ExecutionMode::Twin,
+            dataflow: kind,
+            ..cfg(1)
+        };
+        let trace = FleetTrace::default();
+        let mut fleet = Fleet::new(&dcfg, &spec_);
+        fleet.set_trace(Some(trace.sink()));
+        fleet
+            .register("edge", by_name("vgg9").unwrap().scaled(0.04), false)
+            .unwrap();
+        let batch = vec![img.data.clone()];
+        // Warm-up pass grows the thread-local scratch to its high-water
+        // mark (and pays the hot-swap); afterwards forwards are
+        // allocation-free in steady state.
+        fleet.serve_batch("edge", &batch).unwrap();
+        let allocs_before = scratch_allocs();
+        fleet.serve_batch("edge", &batch).unwrap();
+        let out = fleet.serve_batch("edge", &batch).unwrap();
+        let steady_allocs = scratch_allocs() - allocs_before;
+        let snap = fleet.snapshot();
+        let audit = trace.audit.lock().unwrap().verify(&snap);
+        DataflowRun {
+            logits: out.logits,
+            twin_compute: snap.twin_stats.iter().map(|s| s.compute_cycles).sum(),
+            buffer: snap.buffer_fleet,
+            steady_allocs,
+            audit_pass: audit.pass,
+            snapshot_bytes: snap.to_json().dump(),
+        }
+    };
+    let df_pf = dataflow_arm(DataflowKind::PixelFirst);
+    let df_sf = dataflow_arm(DataflowKind::SpatialFirst);
+    let df_tr = dataflow_arm(DataflowKind::TapReuse);
+    let df_repeat = dataflow_arm(DataflowKind::TapReuse);
+    let df_deterministic = df_tr.snapshot_bytes == df_repeat.snapshot_bytes;
+    assert!(df_deterministic, "same dataflow arm twice must snapshot byte-identically");
+    assert_eq!(df_pf.logits, df_sf.logits, "loop order must not change the numerics");
+    assert_eq!(df_sf.logits, df_tr.logits, "loop order must not change the numerics");
+    assert_eq!(df_pf.twin_compute, df_tr.twin_compute);
+    let df_expected_compute = {
+        let spec_ = MacroSpec::default();
+        // 3 served images (1 warm-up + 2 steady) × the analytic latency.
+        3 * model_cost(&by_name("vgg9").unwrap().scaled(0.04), &spec_).computing_latency as u64
+    };
+    let df_twin_equals_analytic = df_tr.twin_compute == df_expected_compute;
+    assert!(
+        df_twin_equals_analytic,
+        "twin compute cycles must equal the analytic latency ({} vs {})",
+        df_tr.twin_compute, df_expected_compute
+    );
+    assert_eq!(df_pf.buffer.writes, df_tr.buffer.writes, "writes are order-invariant");
+    assert!(
+        df_tr.buffer.reads < df_sf.buffer.reads && df_sf.buffer.reads < df_pf.buffer.reads,
+        "tap-reuse must strictly beat spatial-first and naive full-spatial on reads \
+         ({} vs {} vs {})",
+        df_tr.buffer.reads,
+        df_sf.buffer.reads,
+        df_pf.buffer.reads
+    );
+    assert_eq!(df_tr.steady_allocs, 0, "steady-state forwards must not allocate");
+    assert!(
+        df_pf.audit_pass && df_sf.audit_pass && df_tr.audit_pass,
+        "the buffer-ledger audit must pass in every variant"
+    );
+    // Oversized tenant: bigger than the whole pool, still twin-executed.
+    let df_paged_executes = {
+        let spec_ = MacroSpec::default();
+        let mut fleet = Fleet::new(
+            &FleetConfig {
+                execution: ExecutionMode::Twin,
+                ..cfg(4)
+            },
+            &spec_,
+        );
+        fleet
+            .register("big", by_name("vgg9").unwrap().scaled(0.3), false)
+            .unwrap();
+        let bls = fleet.registry().get("big").unwrap().bls_needed();
+        assert!(bls > 4 * spec_.bitlines, "tenant must exceed the pool");
+        let out = fleet.serve_batch("big", &[img.data.clone()]).unwrap();
+        let snap = fleet.snapshot();
+        let twin_compute: u64 = snap.twin_stats.iter().map(|s| s.compute_cycles).sum();
+        out.logits[0].iter().all(|v| v.is_finite())
+            && !fleet.is_resident("big")
+            && twin_compute > 0
+            && snap.reload_cycles == bls as u64
+    };
+    assert!(df_paged_executes, "the oversized tenant must complete a paged twin forward");
+    r.table(&format!(
+        "dataflow scenario: buffer reads pixel-first {} | spatial-first {} | tap-reuse {} \
+         (writes {} in all variants) | twin == analytic compute: {} | paged tenant executes: {}",
+        df_pf.buffer.reads,
+        df_sf.buffer.reads,
+        df_tr.buffer.reads,
+        df_tr.buffer.writes,
+        df_twin_equals_analytic,
+        df_paged_executes
+    ));
+    let df_json = |run: &DataflowRun| {
+        Json::obj()
+            .with("buffer_reads", run.buffer.reads)
+            .with("buffer_writes", run.buffer.writes)
+            .with("twin_compute_cycles", run.twin_compute)
+    };
+
     // --- machine-readable summary ----------------------------------------
     let summary = Json::obj()
         .with("bench", "micro_fleet")
@@ -895,6 +1022,27 @@ fn main() {
                 )
                 .with("audit_pass", 1u64)
                 .with("deterministic", u64::from(shard_deterministic)),
+        )
+        // Dataflow arms: exact buffer-ledger counters per loop ordering,
+        // plus the equality/paging/allocation verdicts as 0/1 counters
+        // (same contract as trace_scenario: the asserts above abort the
+        // bench before this summary is written, so a committed baseline
+        // always reads 1 — except steady_allocs, which reads 0).
+        .with(
+            "dataflow_scenario",
+            Json::obj()
+                .with("pixel_first", df_json(&df_pf))
+                .with("spatial_first", df_json(&df_sf))
+                .with("tap_reuse", df_json(&df_tr))
+                .with(
+                    "tap_reuse_win_reads",
+                    df_pf.buffer.reads - df_tr.buffer.reads,
+                )
+                .with("twin_equals_analytic", u64::from(df_twin_equals_analytic))
+                .with("paged_executes", u64::from(df_paged_executes))
+                .with("steady_allocs", df_tr.steady_allocs)
+                .with("audit_pass", 1u64)
+                .with("deterministic", u64::from(df_deterministic)),
         )
         .with(
             "coresidency",

@@ -328,6 +328,67 @@ impl ExecutionMode {
     }
 }
 
+/// Loop ordering of the twin's full-spatial dataflow engine
+/// ([`crate::fleet::dataflow`]) — *which* order the engine walks output
+/// positions, kernel taps and input activations in, and therefore how
+/// much activation-buffer traffic one inference charges on the
+/// buffer-traffic ledger.
+///
+/// All three variants execute the **identical pass set** (the compute
+/// numerics and cycle charges are loop-order invariant — one macro pass
+/// per output position × input segment × contiguous placed run); they
+/// differ only in how often an input activation must be re-fetched from
+/// the activation buffer, per the loop-ordering analysis of the
+/// minimal-buffer-traffic CIM dataflow paper (arxiv 2508.14375):
+///
+/// * `PixelFirst` — the naive full-spatial order: for every output
+///   pixel, fetch its whole `c_in·k²` receptive field. Every overlap
+///   between adjacent windows is re-read (`out_px · c_in · k²` reads).
+/// * `SpatialFirst` — row-stationary: an input row is held while every
+///   output row that consumes it is produced, so horizontal overlap is
+///   reused and each input activation is fetched once per *distinct
+///   output row* that reads it (≈ k× fewer reads).
+/// * `TapReuse` — the buffer-minimal order: each input activation is
+///   fetched exactly once and reused across all its kernel taps and
+///   overlapping windows (`c_in · in_px` reads — the paper's minimal
+///   traffic bound).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DataflowKind {
+    /// Naive full-spatial: re-fetch the full receptive field per output
+    /// pixel (`out_px · c_in · k²` activation reads per layer).
+    PixelFirst,
+    /// Row-stationary: one fetch per (input activation, consuming output
+    /// row) pair — horizontal tap reuse only.
+    SpatialFirst,
+    /// Buffer-minimal: one fetch per input activation, reused across all
+    /// taps and windows (the default).
+    #[default]
+    TapReuse,
+}
+
+impl DataflowKind {
+    /// Every variant, in schema order (the bench's per-variant arms).
+    pub const ALL: [DataflowKind; 3] = [
+        DataflowKind::PixelFirst,
+        DataflowKind::SpatialFirst,
+        DataflowKind::TapReuse,
+    ];
+
+    /// Stable config/CLI name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DataflowKind::PixelFirst => "pixel-first",
+            DataflowKind::SpatialFirst => "spatial-first",
+            DataflowKind::TapReuse => "tap-reuse",
+        }
+    }
+
+    /// Parse a config/CLI name (see [`DataflowKind::as_str`]).
+    pub fn parse(s: &str) -> Option<DataflowKind> {
+        DataflowKind::ALL.iter().copied().find(|k| k.as_str() == s)
+    }
+}
+
 /// Fleet-level (multi-tenant) serving parameters: a pool of `num_macros`
 /// physical CIM macro arrays shared by every registered model.
 #[derive(Debug, Clone, PartialEq)]
@@ -356,6 +417,11 @@ pub struct FleetConfig {
     pub defrag_threshold: f64,
     /// Whether placements run on the simulated macros ([`ExecutionMode`]).
     pub execution: ExecutionMode,
+    /// Loop ordering of the twin's full-spatial dataflow engine
+    /// ([`DataflowKind`]; `cim-adapt fleet --dataflow`). Decides the
+    /// activation-buffer traffic charged per inference; compute cycles
+    /// are loop-order invariant.
+    pub dataflow: DataflowKind,
     /// Dispatch discipline: the QoS-aware dispatcher (default) or the
     /// strict-arrival-order FIFO baseline (`cim-adapt fleet --sched`).
     pub sched: SchedMode,
@@ -412,6 +478,7 @@ impl Default for FleetConfig {
             coresident: false,
             defrag_threshold: 0.0,
             execution: ExecutionMode::Analytic,
+            dataflow: DataflowKind::TapReuse,
             sched: SchedMode::Qos,
             admit_budget_cycles: 0,
             qos_aging_cycles: 50_000,
@@ -438,6 +505,7 @@ impl FleetConfig {
             .with("coresident", self.coresident)
             .with("defrag_threshold", self.defrag_threshold)
             .with("execution", self.execution.as_str())
+            .with("dataflow", self.dataflow.as_str())
             .with("sched", self.sched.as_str())
             .with("admit_budget_cycles", self.admit_budget_cycles)
             .with("qos_aging_cycles", self.qos_aging_cycles)
@@ -486,6 +554,11 @@ impl FleetConfig {
                 .as_str()
                 .and_then(ExecutionMode::parse)
                 .unwrap_or(d.execution),
+            dataflow: j
+                .get("dataflow")
+                .as_str()
+                .and_then(DataflowKind::parse)
+                .unwrap_or(d.dataflow),
             sched: j
                 .get("sched")
                 .as_str()
@@ -634,6 +707,7 @@ mod tests {
         c.coresident = true;
         c.defrag_threshold = 0.35;
         c.execution = ExecutionMode::Twin;
+        c.dataflow = DataflowKind::PixelFirst;
         c.sched = SchedMode::Fifo;
         c.admit_budget_cycles = 12_000;
         c.qos_aging_cycles = 9_000;
@@ -684,6 +758,15 @@ mod tests {
         let j = Json::parse(r#"{"execution": "mystery"}"#).unwrap();
         assert_eq!(FleetConfig::from_json(&j).execution, ExecutionMode::Analytic);
         assert_eq!(ExecutionMode::parse("analytic"), Some(ExecutionMode::Analytic));
+        // Dataflow variants parse; unknown falls back to tap-reuse (the
+        // buffer-minimal default).
+        for k in DataflowKind::ALL {
+            assert_eq!(DataflowKind::parse(k.as_str()), Some(k));
+        }
+        let j = Json::parse(r#"{"dataflow": "pixel-first"}"#).unwrap();
+        assert_eq!(FleetConfig::from_json(&j).dataflow, DataflowKind::PixelFirst);
+        let j = Json::parse(r#"{"dataflow": "mystery"}"#).unwrap();
+        assert_eq!(FleetConfig::from_json(&j).dataflow, DataflowKind::TapReuse);
         // Unknown policy string falls back to the default (LRU).
         let j = Json::parse(r#"{"policy": "mystery"}"#).unwrap();
         assert_eq!(FleetConfig::from_json(&j).policy, EvictionPolicy::Lru);

@@ -1,0 +1,531 @@
+//! Full-spatial, buffer-minimal twin dataflow engine.
+//!
+//! Earlier revisions of the fleet twin executed **one representative
+//! output position** per layer and left the spatial loop to the analytic
+//! cost model. This module closes that gap: the twin now iterates every
+//! `out_hw × out_hw` output position of every layer, so per-layer twin
+//! compute cycles equal the analytic `computing_latency` **by
+//! construction** — `out_px · segments · (adc_rounds + 1)` passes of the
+//! very same [`CimMacro::pass_delta`] physics, with fragmented placements
+//! paying one extra analog-evaluate cycle per additional physical run,
+//! exactly as [`fragmentation_penalty_cycles`] charges.
+//!
+//! # Loop orders and the buffer-traffic ledger
+//!
+//! The engine quantizes each layer's input plane **once** (one DAC code
+//! per activation) into reusable scratch, then reuses those codes across
+//! every kernel tap and overlapping window — the *tap-reuse* dataflow.
+//! Numerics are loop-order invariant, so the three [`DataflowKind`]
+//! variants produce identical logits and identical compute cycles; what
+//! changes is the **activation-buffer traffic** each ordering would
+//! incur, charged from the closed-form
+//! [`model_buffer_traffic`](crate::latency::model_buffer_traffic) onto
+//! the fleet's buffer ledger (see
+//! [`EventKind::BufferRead`](crate::obs::EventKind)):
+//!
+//! ```text
+//!   pixel-first    for p in out_px { for tap in c_in·k² { read } }
+//!                  reads = out_px · c_in · k²        (no reuse)
+//!   spatial-first  for row in in_hw { read row once per consuming
+//!                  output row }                      (row reuse)
+//!   tap-reuse      for a in c_in·in_px { read once } (full reuse)
+//! ```
+//!
+//! # Load-on-demand paging
+//!
+//! [`forward_paged`] executes tenants whose packed footprint exceeds the
+//! resident pool on the twin datapath anyway: a weight-stationary
+//! schedule ([`paging_spans`]) streams the packing through the usable
+//! macros phase by phase, partial sums accumulate across phases, and the
+//! fleet charges each span's reload through `region_reload_cycles` — the
+//! same books as a resident hot-swap, just paid every batch.
+//!
+//! [`fragmentation_penalty_cycles`]: crate::latency::fragmentation_penalty_cycles
+//! [`DataflowKind`]: crate::config::DataflowKind
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use crate::arch::ModelArch;
+use crate::cim::{AdderTree, CimMacro, MacroStats};
+use crate::config::MacroSpec;
+use crate::mapping::{ModelMapping, PlacedMapping};
+use crate::quant::psum::segment_inputs;
+
+use super::registry::ModelWeights;
+
+/// ADC step of the twin pool's converters (`S_ADC`). Activation steps are
+/// calibrated per layer at inference time; weight steps come from the
+/// registry's per-layer LSQ calibration.
+pub(crate) const TWIN_S_ADC: f32 = 16.0;
+
+/// Reusable per-thread buffers for the resident forward path. Grown once
+/// to the largest tenant seen, then reused allocation-free: steady-state
+/// forwards perform **zero** heap allocations (asserted by the
+/// `dataflow_scenario.steady_allocs` bench counter).
+struct Scratch {
+    /// Stem activation plane (`c_in · in_px` values from the image).
+    stem: Vec<f32>,
+    /// Quantized DAC codes for the current layer's whole input plane.
+    codes: Vec<i32>,
+    /// One output position's im2col row slice for the current segment.
+    row: Vec<i32>,
+    /// Per-layer partial sums, `c_out · out_px` accumulators.
+    psum: Vec<i64>,
+    /// Activation planes per layer, `c_out · out_px` each.
+    planes: Vec<Vec<f32>>,
+    /// Buffer growths observed (capacity-increasing grabs).
+    allocs: u64,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch {
+        stem: Vec::new(),
+        codes: Vec::new(),
+        row: Vec::new(),
+        psum: Vec::new(),
+        planes: Vec::new(),
+        allocs: 0,
+    });
+}
+
+/// Clear `buf` and size it to `len` filled with `zero`, counting a heap
+/// allocation only when capacity actually grows.
+fn grab<T: Copy>(buf: &mut Vec<T>, len: usize, zero: T, allocs: &mut u64) {
+    if buf.capacity() < len {
+        *allocs += 1;
+    }
+    buf.clear();
+    buf.resize(len, zero);
+}
+
+/// Heap allocations the calling thread's forward scratch has performed so
+/// far (monotone). After a warm-up forward sized to the largest resident
+/// tenant, further forwards leave this unchanged — the zero-allocation
+/// steady state `benches/micro_fleet.rs` gates on.
+pub fn scratch_allocs() -> u64 {
+    SCRATCH.with(|s| s.borrow().allocs)
+}
+
+/// Fold an image into `c` activation values: the mean of each contiguous
+/// pixel chunk, the deterministic stand-in for the stem's receptive
+/// field. When `c >= image.len()` there is nothing to average — each of
+/// the first `len` outputs is its own pixel and the remainder is zero
+/// (rather than the old degenerate chunking that zeroed *early* entries).
+pub fn channel_means(image: &[f32], c: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; c];
+    fill_channel_means(image, &mut out);
+    out
+}
+
+/// In-place [`channel_means`] over a pre-sized output slice.
+fn fill_channel_means(image: &[f32], out: &mut [f32]) {
+    let c = out.len();
+    assert!(c > 0, "a layer has at least one input channel");
+    let n = image.len();
+    if c >= n {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = if i < n { image[i] } else { 0.0 };
+        }
+        return;
+    }
+    for (i, o) in out.iter_mut().enumerate() {
+        let lo = i * n / c;
+        let hi = (((i + 1) * n / c).min(n)).max(lo + 1);
+        *o = image[lo..hi].iter().sum::<f32>() / (hi - lo) as f32;
+    }
+}
+
+/// Input plane height/width of layer `li`: the producing layer's output
+/// grid, or the layer's own grid for the stem (stride-1 ingest).
+fn in_hw_of(arch: &ModelArch, li: usize) -> usize {
+    match arch.layers[li].input_from {
+        Some(j) => arch.layers[j].out_hw,
+        None => arch.layers[li].out_hw,
+    }
+}
+
+/// Peak-calibrated DAC activation step for an input plane: span the DAC
+/// range per layer (`peak / dac_max`), degrading to 1.0 on an all-zero
+/// plane.
+fn calibrate(input: &[f32], dac_max: i32) -> f32 {
+    let peak = input.iter().fold(0.0f32, |m, &x| m.max(x));
+    if peak > 0.0 {
+        peak / dac_max as f32
+    } else {
+        1.0
+    }
+}
+
+/// Quantize a whole activation plane to DAC codes once — every kernel tap
+/// and overlapping window reuses these codes (the tap-reuse dataflow).
+fn quantize_into(input: &[f32], s_act: f32, dac_max: i32, out: &mut [i32]) {
+    debug_assert_eq!(input.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(input) {
+        *o = ((x / s_act).round() as i32).clamp(0, dac_max);
+    }
+}
+
+/// Fill one output position's im2col row for rows `[lo, hi)` of the
+/// filter column (channel-major, then `dy`, then `dx` — the packing order
+/// of [`LayerMapping::column`](crate::mapping::LayerMapping)), reading
+/// clamp-padded taps from the plane-major code buffer.
+#[allow(clippy::too_many_arguments)]
+fn fill_row(
+    codes: &[i32],
+    row: &mut [i32],
+    lo: usize,
+    kernel: usize,
+    in_hw: usize,
+    stride: usize,
+    y: usize,
+    x: usize,
+) {
+    let k2 = kernel * kernel;
+    debug_assert_eq!(lo % k2, 0);
+    debug_assert_eq!(row.len() % k2, 0);
+    let ch_lo = lo / k2;
+    let in_px = in_hw * in_hw;
+    for (cc, chunk) in row.chunks_mut(k2).enumerate() {
+        let base = (ch_lo + cc) * in_px;
+        for dy in 0..kernel {
+            let qy = (y * stride + dy).min(in_hw - 1);
+            for dx in 0..kernel {
+                let qx = (x * stride + dx).min(in_hw - 1);
+                chunk[dy * kernel + dx] = codes[base + qy * in_hw + qx];
+            }
+        }
+    }
+}
+
+/// Full-spatial twin forward for a **resident** tenant: every output
+/// position of every layer executes on the placed macros through
+/// [`CimMacro::pass_delta`], so per-layer twin compute cycles equal the
+/// analytic `computing_latency` by construction (plus one evaluate cycle
+/// per extra physical run on fragmented placements). Activation planes,
+/// DAC codes, im2col rows and partial sums all live in per-thread scratch
+/// reused across calls — steady-state forwards allocate nothing (see
+/// [`scratch_allocs`]).
+///
+/// Read-only over the macro snapshots: pass charges accumulate into
+/// `deltas` (indexed by macro id) for the caller to book, which lets
+/// `ForwardJob::run` execute on a worker thread while the driver keeps
+/// mutating the live pool. Returns the last layer's per-filter spatial
+/// means — the feature vector the (non-CIM) classifier head consumes.
+pub fn forward_resident(
+    twin: &[Arc<CimMacro>],
+    placed: &PlacedMapping,
+    arch: &ModelArch,
+    weights: &ModelWeights,
+    spec: &MacroSpec,
+    image: &[f32],
+    deltas: &mut [MacroStats],
+) -> Vec<f32> {
+    let dac_max = (1i32 << spec.dac_bits) - 1;
+    SCRATCH.with(|s| {
+        let mut s = s.borrow_mut();
+        let Scratch {
+            stem,
+            codes,
+            row,
+            psum,
+            planes,
+            allocs,
+        } = &mut *s;
+        if planes.len() < arch.layers.len() {
+            planes.resize_with(arch.layers.len(), Vec::new);
+        }
+        for (li, (lm, layer)) in placed.mapping.layers.iter().zip(&arch.layers).enumerate() {
+            let in_hw = in_hw_of(arch, li);
+            let in_px = in_hw * in_hw;
+            let out_hw = layer.out_hw;
+            let stride = (in_hw / out_hw.max(1)).max(1);
+            let k = layer.kernel;
+            // Quantize the whole input plane once; the input borrow ends
+            // here, freeing `planes` for this layer's output below.
+            let s_act = {
+                let input: &[f32] = match layer.input_from {
+                    Some(j) => &planes[j],
+                    None => {
+                        grab(stem, layer.c_in * in_px, 0.0, allocs);
+                        fill_channel_means(image, stem);
+                        stem
+                    }
+                };
+                debug_assert_eq!(input.len(), layer.c_in * in_px);
+                let s_act = calibrate(input, dac_max);
+                grab(codes, input.len(), 0, allocs);
+                quantize_into(input, s_act, dac_max, codes);
+                s_act
+            };
+            let segs = segment_inputs(layer.c_in, k, spec.channels_per_bl(k));
+            debug_assert_eq!(segs.len(), lm.segments);
+            grab(psum, lm.c_out * layer.out_px(), 0, allocs);
+            for (seg, &(lo, hi)) in segs.iter().enumerate() {
+                let rows = hi - lo;
+                grab(row, rows, 0, allocs);
+                let logical = lm.bl_start + seg * lm.c_out;
+                // Physical runs are position-invariant: hoist the split.
+                let runs = placed.physical_runs(logical, lm.c_out);
+                for p in 0..layer.out_px() {
+                    let (y, x) = (p / out_hw, p % out_hw);
+                    fill_row(codes, row, lo, k, in_hw, stride, y, x);
+                    for run in &runs {
+                        let (r, d) =
+                            twin[run.macro_id].pass_delta(row, run.bl_start, run.bl_count);
+                        deltas[run.macro_id].absorb(&d);
+                        let off = run.logical_start - logical;
+                        for (j, &code) in r.codes.iter().enumerate() {
+                            psum[(off + j) * layer.out_px() + p] += code as i64;
+                        }
+                    }
+                }
+            }
+            // Eq. 7 output scaling: the adder tree applies S_W·S_ADC, and
+            // the activation step folds back in as S_A.
+            let scale = s_act
+                * AdderTree::new(weights.steps[lm.layer], TWIN_S_ADC, false).effective_scale();
+            grab(&mut planes[li], lm.c_out * layer.out_px(), 0.0, allocs);
+            for (o, &p) in planes[li].iter_mut().zip(psum.iter()) {
+                *o = (p as f32 * scale).max(0.0);
+            }
+        }
+        match arch.layers.len() {
+            0 => Vec::new(),
+            n => {
+                let last = &arch.layers[n - 1];
+                let px = last.out_px().max(1);
+                (0..last.c_out)
+                    .map(|f| {
+                        planes[n - 1][f * px..(f + 1) * px].iter().sum::<f32>() / px as f32
+                    })
+                    .collect()
+            }
+        }
+    })
+}
+
+/// One contiguous slice of a paged tenant's logical column space, bound
+/// to a pool slot for one phase of the weight-stationary schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PagingSpan {
+    /// Schedule phase the span is loaded in (phases execute in order).
+    pub phase: usize,
+    /// Usable-macro slot (index into the usable list, not a macro id).
+    pub slot: usize,
+    /// First logical column of the span.
+    pub logical_start: usize,
+    /// Columns in the span (`bitlines`-wide except the tail).
+    pub bl_count: usize,
+}
+
+/// Weight-stationary paging schedule: tile `total_bls` logical columns
+/// into phases of `slots · bitlines` capacity, each phase's columns
+/// spread `bitlines`-wide across the usable slots. Spans are disjoint, in
+/// logical order, and cover the packing exactly.
+pub fn paging_spans(total_bls: usize, slots: usize, bitlines: usize) -> Vec<PagingSpan> {
+    assert!(slots > 0 && bitlines > 0);
+    let cap = slots * bitlines;
+    let mut out = Vec::new();
+    let mut pos = 0;
+    while pos < total_bls {
+        let o = pos % cap;
+        let take = (bitlines - o % bitlines).min(total_bls - pos);
+        out.push(PagingSpan {
+            phase: pos / cap,
+            slot: o / bitlines,
+            logical_start: pos,
+            bl_count: take,
+        });
+        pos += take;
+    }
+    out
+}
+
+/// Full-spatial twin forward for an **oversized** tenant, executed
+/// load-on-demand: the packing streams through `usable.len()` pool slots
+/// phase by phase ([`paging_spans`]), weights load into a private macro
+/// pool (the caller charges the reloads through `region_reload_cycles` —
+/// load stats here are deliberately discarded so the books aren't double
+/// counted), and per-layer partial sums accumulate across phases until a
+/// layer's last column has executed. Compute/conversion charges land in
+/// the returned deltas indexed by **real pool macro id** (via `usable`),
+/// sized `pool_size`.
+///
+/// The schedule is weight-stationary over a batch: phases outer, layers
+/// intersecting the phase in packing order, images inner — each loaded
+/// span serves the whole batch before the next load. Contiguous packing
+/// guarantees a layer's producer is always finalized before the layer's
+/// first column executes. A segment split across a phase boundary costs
+/// extra analog-evaluate cycles, which is precisely the twin-observable
+/// price of paging that residency avoids.
+pub fn forward_paged(
+    arch: &ModelArch,
+    mapping: &ModelMapping,
+    weights: &ModelWeights,
+    spec: &MacroSpec,
+    usable: &[usize],
+    pool_size: usize,
+    images: &[Vec<f32>],
+) -> (Vec<Vec<f32>>, Vec<MacroStats>) {
+    assert!(!usable.is_empty(), "paging needs at least one usable macro");
+    let dac_max = (1i32 << spec.dac_bits) - 1;
+    let bpm = spec.bitlines;
+    let cap = usable.len() * bpm;
+    let mut local: Vec<CimMacro> = usable
+        .iter()
+        .map(|_| CimMacro::new(*spec, 1.0, TWIN_S_ADC))
+        .collect();
+    let mut deltas = vec![MacroStats::default(); pool_size];
+    let n_layers = arch.layers.len();
+    let mut planes: Vec<Vec<Vec<f32>>> = vec![vec![Vec::new(); n_layers]; images.len()];
+    let mut psums: Vec<Vec<Vec<i64>>> = vec![vec![Vec::new(); n_layers]; images.len()];
+    let spans = paging_spans(mapping.total_bls, usable.len(), bpm);
+    let phases = spans.last().map_or(0, |s| s.phase + 1);
+    for ph in 0..phases {
+        let plo = ph * cap;
+        let phi = ((ph + 1) * cap).min(mapping.total_bls);
+        for sp in spans.iter().filter(|s| s.phase == ph) {
+            let cols = &weights.columns[sp.logical_start..sp.logical_start + sp.bl_count];
+            local[sp.slot].load_columns(0, cols);
+        }
+        for (li, lm) in mapping.layers.iter().enumerate() {
+            let (lstart, lend) = (lm.bl_start, lm.bl_start + lm.bl_count);
+            if lstart >= phi || lend <= plo {
+                continue;
+            }
+            let layer = &arch.layers[li];
+            let in_hw = in_hw_of(arch, li);
+            let in_px = in_hw * in_hw;
+            let out_hw = layer.out_hw;
+            let out_px = layer.out_px();
+            let stride = (in_hw / out_hw.max(1)).max(1);
+            let k = layer.kernel;
+            let segs = segment_inputs(layer.c_in, k, spec.channels_per_bl(k));
+            for (img_i, image) in images.iter().enumerate() {
+                let input: Vec<f32> = match layer.input_from {
+                    Some(j) => planes[img_i][j].clone(),
+                    None => channel_means(image, layer.c_in * in_px),
+                };
+                debug_assert_eq!(input.len(), layer.c_in * in_px);
+                let s_act = calibrate(&input, dac_max);
+                let mut codes = vec![0i32; input.len()];
+                quantize_into(&input, s_act, dac_max, &mut codes);
+                if psums[img_i][li].is_empty() {
+                    psums[img_i][li] = vec![0i64; lm.c_out * out_px];
+                }
+                for (seg, &(lo, hi)) in segs.iter().enumerate() {
+                    let seg_lo = lstart + seg * lm.c_out;
+                    let a = seg_lo.max(plo);
+                    let b = (seg_lo + lm.c_out).min(phi);
+                    if a >= b {
+                        continue;
+                    }
+                    let mut row = vec![0i32; hi - lo];
+                    for p in 0..out_px {
+                        let (y, x) = (p / out_hw, p % out_hw);
+                        fill_row(&codes, &mut row, lo, k, in_hw, stride, y, x);
+                        let mut g = a;
+                        while g < b {
+                            let o = g - plo;
+                            let (slot, lb) = (o / bpm, o % bpm);
+                            let take = (bpm - lb).min(b - g);
+                            let (r, d) = local[slot].pass_delta(&row, lb, take);
+                            deltas[usable[slot]].absorb(&d);
+                            for (j, &code) in r.codes.iter().enumerate() {
+                                psums[img_i][li][(g - seg_lo + j) * out_px + p] += code as i64;
+                            }
+                            g += take;
+                        }
+                    }
+                }
+                if lend <= phi {
+                    let scale = s_act
+                        * AdderTree::new(weights.steps[lm.layer], TWIN_S_ADC, false)
+                            .effective_scale();
+                    planes[img_i][li] = psums[img_i][li]
+                        .iter()
+                        .map(|&p| (p as f32 * scale).max(0.0))
+                        .collect();
+                    psums[img_i][li] = Vec::new();
+                }
+            }
+        }
+    }
+    let features = images
+        .iter()
+        .enumerate()
+        .map(|(img_i, _)| match n_layers {
+            0 => Vec::new(),
+            n => {
+                let last = &arch.layers[n - 1];
+                let px = last.out_px().max(1);
+                (0..last.c_out)
+                    .map(|f| {
+                        planes[img_i][n - 1][f * px..(f + 1) * px].iter().sum::<f32>() / px as f32
+                    })
+                    .collect()
+            }
+        })
+        .collect();
+    (features, deltas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_means_guards_c_past_the_image() {
+        // c > n: identity over the pixels that exist, zeros after — no
+        // zeroed-out early chunks from degenerate integer chunking.
+        let img = [1.0, 2.0, 3.0];
+        assert_eq!(channel_means(&img, 5), vec![1.0, 2.0, 3.0, 0.0, 0.0]);
+        // c == n is the identity.
+        assert_eq!(channel_means(&img, 3), vec![1.0, 2.0, 3.0]);
+        // c < n still averages contiguous chunks.
+        let m = channel_means(&[2.0, 4.0, 6.0, 8.0], 2);
+        assert_eq!(m, vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn paging_spans_tile_the_packing_exactly() {
+        let spans = paging_spans(600, 2, 256);
+        // 600 columns over 2×256 capacity: phase 0 holds [0,512), phase 1
+        // the 88-column tail on slot 0.
+        assert_eq!(spans.len(), 3);
+        assert_eq!(
+            spans[0],
+            PagingSpan { phase: 0, slot: 0, logical_start: 0, bl_count: 256 }
+        );
+        assert_eq!(
+            spans[1],
+            PagingSpan { phase: 0, slot: 1, logical_start: 256, bl_count: 256 }
+        );
+        assert_eq!(
+            spans[2],
+            PagingSpan { phase: 1, slot: 0, logical_start: 512, bl_count: 88 }
+        );
+        // Disjoint, ordered, covering.
+        let total: usize = spans.iter().map(|s| s.bl_count).sum();
+        assert_eq!(total, 600);
+        for w in spans.windows(2) {
+            assert_eq!(w[0].logical_start + w[0].bl_count, w[1].logical_start);
+            assert!(w[0].phase <= w[1].phase);
+        }
+        // A packing that fits one phase never pages twice.
+        assert!(paging_spans(200, 4, 256).iter().all(|s| s.phase == 0));
+    }
+
+    #[test]
+    fn fill_row_reads_clamped_taps_in_packing_order() {
+        // 1 channel, 2×2 input plane with distinct codes, k=2, stride 1.
+        let codes = [1, 2, 3, 4];
+        let mut row = vec![0i32; 4];
+        fill_row(&codes, &mut row, 0, 2, 2, 1, 0, 0);
+        assert_eq!(row, vec![1, 2, 3, 4]);
+        // Bottom-right position clamps both taps onto the last pixel.
+        fill_row(&codes, &mut row, 0, 2, 2, 1, 1, 1);
+        assert_eq!(row, vec![4, 4, 4, 4]);
+    }
+}

@@ -62,6 +62,17 @@
 //!   ([`PlacedMapping`](crate::mapping::PlacedMapping)), and resident
 //!   tenants classify through the macro datapath ([`Fleet::infer_twin`])
 //!   instead of the analytic shortcut.
+//! * [`dataflow`] — the full-spatial twin forward engine: every output
+//!   position of every layer executes on the placed macros, so per-layer
+//!   twin compute cycles equal the analytic `computing_latency` by
+//!   construction, with DAC codes quantized once per activation plane
+//!   into reusable scratch (zero steady-state allocations) and oversized
+//!   tenants executed load-on-demand through a weight-stationary paging
+//!   schedule ([`paging_spans`]). Loop orderings (pixel-first /
+//!   spatial-first / tap-reuse, `FleetConfig::dataflow`) charge their
+//!   closed-form activation-buffer traffic onto the fleet's **buffer
+//!   ledger**, conserved fleet == Σ per-tenant == twin like every other
+//!   ledger.
 //!
 //! Invariant (asserted by `rust/tests/integration_fleet.rs` and
 //! `rust/tests/proptests.rs`): fleet-level reload cycles equal the sum of
@@ -77,6 +88,7 @@
 //! strictly fewer reload cycles.
 
 pub mod compactor;
+pub mod dataflow;
 pub mod evictor;
 pub mod placer;
 pub mod qos;
@@ -85,6 +97,9 @@ pub mod server;
 pub mod shard;
 
 pub use compactor::{plan_compaction, CompactionPlan, Fragmentation, SpanMove};
+pub use dataflow::{
+    channel_means, forward_paged, forward_resident, paging_spans, scratch_allocs, PagingSpan,
+};
 pub use evictor::{EvictionPolicy, Evictor, PolicyEvictor, VictimCandidate};
 pub use placer::{Placement, Placer, SwapEvent};
 pub use qos::{

@@ -20,8 +20,8 @@ use std::sync::Arc;
 
 use crate::arch::ModelArch;
 use crate::cim::WeightCell;
-use crate::config::MacroSpec;
-use crate::latency::{model_cost, ModelCost};
+use crate::config::{DataflowKind, MacroSpec};
+use crate::latency::{model_cost, BufferTraffic, ModelCost};
 use crate::mapping::{pack_model, ModelMapping};
 use crate::quant::lsq::LsqTensor;
 use crate::util::prng::Pcg;
@@ -139,6 +139,14 @@ impl ModelEntry {
     /// [`ModelEntry::reload_cycles`] unless its footprint is macro-aligned.
     pub fn region_reload_cycles(&self, spec: &MacroSpec) -> u64 {
         self.cost.region_reload_cycles(spec)
+    }
+
+    /// Activation-buffer words one inference of this model moves under
+    /// the given loop ordering — the closed-form charge the fleet's
+    /// buffer-traffic ledger books per served image
+    /// ([`model_buffer_traffic`](crate::latency::model_buffer_traffic)).
+    pub fn buffer_traffic(&self, kind: DataflowKind) -> BufferTraffic {
+        crate::latency::model_buffer_traffic(&self.arch, kind)
     }
 }
 
@@ -296,6 +304,12 @@ mod tests {
         );
         assert_eq!(r.len(), 1);
         assert!(r.contains("edge"));
+        // Buffer traffic matches the closed form and orders the variants.
+        let tr = e.buffer_traffic(DataflowKind::TapReuse);
+        let pf = e.buffer_traffic(DataflowKind::PixelFirst);
+        assert_eq!(tr, crate::latency::model_buffer_traffic(&e.arch, DataflowKind::TapReuse));
+        assert_eq!(tr.writes, pf.writes);
+        assert!(tr.reads < pf.reads);
     }
 
     #[test]

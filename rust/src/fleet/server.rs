@@ -45,16 +45,27 @@
 //! records for that region (agreement by construction: both sides sum
 //! [`spans_reload_cycles`](crate::latency::spans_reload_cycles) over the
 //! same spans). Inference for resident tenants then runs through the
-//! macro datapath ([`Fleet::infer_twin`]): per-segment DAC quantization,
-//! macro passes split at span boundaries, ADC clipping and adder-tree
-//! scaling — so fragmentation, compaction and defrag become *observable*
-//! twin-level effects rather than bookkeeping. Oversized tenants still
-//! page analytically (weights stream through; residency is not modeled),
-//! with the paging charges mirrored onto the twin pool so the load-cycle
-//! books always balance.
+//! **full-spatial** macro datapath
+//! ([`dataflow::forward_resident`](super::dataflow::forward_resident),
+//! exposed as [`Fleet::infer_twin`]): every output position of every
+//! layer executes as real macro passes — per-segment DAC quantization,
+//! passes split at span boundaries, ADC clipping and adder-tree scaling
+//! — so per-layer twin compute cycles equal the analytic
+//! `computing_latency` by construction, and fragmentation, compaction
+//! and defrag become *observable* twin-level effects rather than
+//! bookkeeping. Twin-executed batches additionally charge the
+//! **buffer-traffic ledger**: the activation reads/writes the configured
+//! `FleetConfig::dataflow` loop ordering incurs (pixel-first /
+//! spatial-first / tap-reuse), conserved fleet == Σ per-tenant == twin
+//! like every cycle ledger.
 //!
-//! Models larger than the whole pool are still servable: they page
-//! through the usable macros exactly like the single-model
+//! Models larger than the whole pool are still servable. Up to the
+//! paging headroom, they execute on the twin too, **load-on-demand**
+//! ([`dataflow::forward_paged`](super::dataflow::forward_paged)): the
+//! packing streams through the free macros phase by phase along a
+//! weight-stationary schedule, with each span reload charged
+//! (twin-mirrored) through `region_reload_cycles` every batch. Beyond
+//! the headroom they page analytically, exactly like the single-model
 //! [`MacroScheduler`](crate::coordinator::MacroScheduler), evicting every
 //! non-pinned resident and paying steady-state reload cycles per batch —
 //! which is precisely the trade the paper's compression removes, and what
@@ -69,21 +80,21 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::arch::ModelArch;
-use crate::cim::{AdderTree, CimMacro, MacroStats, WeightCell};
-use crate::config::{ExecutionMode, FleetConfig, MacroSpec};
+use crate::cim::{CimMacro, MacroStats, WeightCell};
+use crate::config::{DataflowKind, ExecutionMode, FleetConfig, MacroSpec};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::request::{InferResponse, RequestId, Ticket};
 use crate::coordinator::scheduler::MacroScheduler;
 use crate::coordinator::server::sim_classify;
-use crate::latency::region_reload_cycles;
-use crate::mapping::{FitPolicy, PlacedMapping, Region};
+use crate::latency::{model_buffer_traffic, region_reload_cycles, BufferTraffic};
+use crate::mapping::{FitPolicy, ModelMapping, PlacedMapping, Region};
 use crate::obs::{emit, EventKind, FleetTrace, SharedSink, TraceEvent};
-use crate::quant::psum::segment_inputs;
 use crate::runtime::StreamCodec;
 use crate::util::json::Json;
 
 use super::compactor::{plan_compaction, CompactionPlan, Fragmentation};
+use super::dataflow::{self, paging_spans, PagingSpan, TWIN_S_ADC};
 use super::evictor::{Evictor, PolicyEvictor};
 use super::placer::{Placement, Placer};
 use super::qos::{
@@ -91,10 +102,14 @@ use super::qos::{
 };
 use super::registry::{ModelEntry, ModelRegistry, ModelWeights};
 
-/// ADC step of the twin pool's converters (`S_ADC`). Activation steps are
-/// calibrated per layer at inference time; weight steps come from the
-/// registry's per-layer LSQ calibration.
-const TWIN_S_ADC: f32 = 16.0;
+/// Weight-materialization headroom for paged twin execution: under twin
+/// execution the registry caches weight columns for tenants up to
+/// `PAGING_HEADROOM ×` the pool's total columns, so moderately oversized
+/// tenants execute on the twin datapath via load-on-demand paging
+/// ([`dataflow::forward_paged`]) instead of falling back to the analytic
+/// classifier. Tenants larger than that never materialize weights and
+/// still page analytically.
+const PAGING_HEADROOM: usize = 4;
 
 /// One served batch's outcome (deterministic core result).
 #[derive(Debug, Clone)]
@@ -179,12 +194,16 @@ impl BatchPlan {
 /// the weights it was dispatched against.
 pub struct ForwardJob {
     num_classes: usize,
+    /// Configured loop ordering — numerics are loop-order invariant, so
+    /// this only selects which closed-form buffer traffic the job
+    /// reports for the batch.
+    dataflow: DataflowKind,
     kind: ForwardKind,
 }
 
 enum ForwardKind {
-    /// Analytic classifier (no twin pool, or a paging tenant with no
-    /// materialized residency).
+    /// Analytic classifier (no twin pool, or an oversized tenant whose
+    /// weights were never materialized).
     Analytic,
     /// Resident twin datapath over dispatch-time macro snapshots.
     Twin {
@@ -193,6 +212,21 @@ enum ForwardKind {
         arch: ModelArch,
         weights: Arc<ModelWeights>,
         spec: MacroSpec,
+    },
+    /// Load-on-demand twin datapath for an oversized tenant: the packing
+    /// streams through the usable macros phase by phase
+    /// ([`dataflow::forward_paged`]) on a private pool (the fleet charged
+    /// the span reloads at dispatch), so even a tenant bigger than the
+    /// pool executes real macro passes.
+    Paged {
+        arch: ModelArch,
+        mapping: ModelMapping,
+        weights: Arc<ModelWeights>,
+        spec: MacroSpec,
+        /// Fully-free macros the paging schedule cycles through.
+        usable: Vec<usize>,
+        /// Physical pool size (sizes the returned delta vector).
+        pool_size: usize,
     },
 }
 
@@ -209,13 +243,29 @@ impl ForwardJob {
             ForwardKind::Twin { twin, placed, arch, weights, spec } => {
                 let mut deltas = vec![MacroStats::default(); twin.len()];
                 for img in images {
-                    let feats =
-                        twin_forward(twin, placed, arch, weights, spec, img, &mut deltas);
+                    let feats = dataflow::forward_resident(
+                        twin, placed, arch, weights, spec, img, &mut deltas,
+                    );
                     let (class, l) = sim_classify(&feats, self.num_classes);
                     classes.push(class);
                     logits.push(l);
                 }
-                ForwardOutput { classes, logits, deltas }
+                let buffer =
+                    model_buffer_traffic(arch, self.dataflow).scaled(images.len() as u64);
+                ForwardOutput { classes, logits, deltas, buffer }
+            }
+            ForwardKind::Paged { arch, mapping, weights, spec, usable, pool_size } => {
+                let (features, deltas) = dataflow::forward_paged(
+                    arch, mapping, weights, spec, usable, *pool_size, images,
+                );
+                for feats in &features {
+                    let (class, l) = sim_classify(feats, self.num_classes);
+                    classes.push(class);
+                    logits.push(l);
+                }
+                let buffer =
+                    model_buffer_traffic(arch, self.dataflow).scaled(images.len() as u64);
+                ForwardOutput { classes, logits, deltas, buffer }
             }
             ForwardKind::Analytic => {
                 for img in images {
@@ -223,7 +273,12 @@ impl ForwardJob {
                     classes.push(class);
                     logits.push(l);
                 }
-                ForwardOutput { classes, logits, deltas: Vec::new() }
+                ForwardOutput {
+                    classes,
+                    logits,
+                    deltas: Vec::new(),
+                    buffer: BufferTraffic::default(),
+                }
             }
         }
     }
@@ -237,6 +292,11 @@ pub struct ForwardOutput {
     /// Per-twin-macro compute/conversion deltas (empty on the analytic
     /// path).
     deltas: Vec<MacroStats>,
+    /// Activation-buffer traffic the executed dataflow incurred for the
+    /// whole batch (zero on the analytic path) — the twin-mirrored side
+    /// of the charge [`Fleet::serve_begin`] books analytically; the two
+    /// agree by construction (same closed-form, same loop ordering).
+    buffer: BufferTraffic,
 }
 
 /// Point-in-time view of the fleet's accounting.
@@ -283,10 +343,29 @@ pub struct FleetSnapshot {
     pub execution: ExecutionMode,
     /// Per-macro counters of the digital twin pool (empty under analytic
     /// execution). Load cycles and reload events mirror `macro_stats`
-    /// exactly by construction; compute cycles and conversions count the
-    /// passes the twin actually executed (one output position per layer),
-    /// not the analytic full-spatial integral.
+    /// exactly by construction; compute cycles count full-spatial
+    /// executed passes — for a resident tenant on a contiguous placement
+    /// they equal the analytic `computing_latency` per layer by
+    /// construction (fragmented placements pay one extra analog-evaluate
+    /// cycle per additional physical run; paged tenants additionally pay
+    /// for segments split at phase boundaries).
     pub twin_stats: Vec<MacroStats>,
+    /// How the fleet's configured dataflow orders the activation loops
+    /// (prices the buffer ledger; numerics are loop-order invariant).
+    pub dataflow: DataflowKind,
+    /// Fleet-level activation-buffer traffic (analytic side of the
+    /// buffer ledger; charged only for twin-executed batches). No
+    /// per-macro view exists — the activation buffer is per-tenant SRAM,
+    /// not a macro resource.
+    pub buffer_fleet: BufferTraffic,
+    /// Per-tenant attribution of [`FleetSnapshot::buffer_fleet`] (sums
+    /// to it by construction).
+    pub buffer_tenant: Vec<(String, BufferTraffic)>,
+    /// Twin-mirrored buffer traffic, booked from what the forward jobs
+    /// actually executed. Equals [`FleetSnapshot::buffer_fleet`] whenever
+    /// every begun batch has finished (the begin/finish split means a
+    /// snapshot taken between the halves sees the analytic side first).
+    pub buffer_twin: BufferTraffic,
     /// Per-tenant QoS accounting (admitted/rejected/deferred requests,
     /// queue-delay cycles, deadline misses) — all measured on the same
     /// deterministic virtual clock the ledgers use. Rejected and
@@ -346,6 +425,17 @@ impl FleetSnapshot {
         self.twin_stats.iter().map(|s| s.migration_cycles).sum()
     }
 
+    /// Sum of per-tenant buffer traffic — the attribution counterpart of
+    /// [`FleetSnapshot::buffer_fleet`] (they agree by construction:
+    /// every buffer charge names the tenant that incurred it).
+    pub fn tenant_buffer(&self) -> BufferTraffic {
+        let mut t = BufferTraffic::default();
+        for (_, b) in &self.buffer_tenant {
+            t.absorb(*b);
+        }
+        t
+    }
+
     /// Aggregate QoS counters over every tenant.
     pub fn qos_totals(&self) -> QosTenantStats {
         let mut t = QosTenantStats::default();
@@ -401,6 +491,18 @@ impl FleetSnapshot {
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj()
             .with("execution", self.execution.as_str())
+            .with("dataflow", self.dataflow.as_str())
+            .with("buffer_reads", self.buffer_fleet.reads)
+            .with("buffer_writes", self.buffer_fleet.writes)
+            .with(
+                "buffer_tenants",
+                self.buffer_tenant.iter().fold(Json::obj(), |j, (name, b)| {
+                    j.with(
+                        name.as_str(),
+                        Json::obj().with("reads", b.reads).with("writes", b.writes),
+                    )
+                }),
+            )
             .with("reload_cycles", self.reload_cycles)
             .with("migration_cycles", self.migration_cycles)
             .with("compactions", self.compactions)
@@ -466,7 +568,9 @@ impl FleetSnapshot {
                     Json::Arr(self.twin_stats.iter().map(stats_json).collect()),
                 )
                 .with("twin_load_cycles", self.twin_load_cycles())
-                .with("twin_migration_cycles", self.twin_migration_cycles());
+                .with("twin_migration_cycles", self.twin_migration_cycles())
+                .with("twin_buffer_reads", self.buffer_twin.reads)
+                .with("twin_buffer_writes", self.buffer_twin.writes);
         }
         if !self.qos_stats.is_empty() {
             j = j
@@ -499,6 +603,17 @@ pub struct Fleet {
     hot_swaps: u64,
     evictions: u64,
     execution: ExecutionMode,
+    /// Loop ordering the buffer ledger prices twin-executed batches at
+    /// (numerics are loop-order invariant; see [`super::dataflow`]).
+    dataflow: DataflowKind,
+    /// Fleet-level activation-buffer ledger (analytic side, charged at
+    /// `serve_begin` for twin-executed batches).
+    buffer_fleet: BufferTraffic,
+    /// Per-tenant attribution of `buffer_fleet` (sums to it).
+    buffer_tenant: BTreeMap<String, BufferTraffic>,
+    /// Twin-mirrored buffer ledger, booked at `serve_finish` from what
+    /// the forward job actually executed.
+    buffer_twin: BufferTraffic,
     /// The digital twin pool — one real [`CimMacro`] per physical macro
     /// under twin execution, empty otherwise. Each macro sits behind an
     /// `Arc` so a dispatched [`ForwardJob`] can hold a copy-on-write
@@ -529,10 +644,15 @@ impl Fleet {
     pub fn new(cfg: &FleetConfig, spec: &MacroSpec) -> Fleet {
         let num = cfg.num_macros.max(1);
         let registry = match cfg.execution {
-            // Materialize weights only for tenants that can become
-            // resident (≤ the pool's columns); oversized tenants page and
-            // never read their weights.
-            ExecutionMode::Twin => ModelRegistry::with_weights_up_to(*spec, num * spec.bitlines),
+            // Materialize weights for tenants up to PAGING_HEADROOM× the
+            // pool's columns: residents read theirs in place, moderately
+            // oversized tenants stream theirs through the pool
+            // (load-on-demand paged execution). Anything larger pages
+            // analytically and never reads its weights.
+            ExecutionMode::Twin => ModelRegistry::with_weights_up_to(
+                *spec,
+                PAGING_HEADROOM * num * spec.bitlines,
+            ),
             ExecutionMode::Analytic => ModelRegistry::new(*spec),
         };
         let twin = match cfg.execution {
@@ -555,6 +675,10 @@ impl Fleet {
             hot_swaps: 0,
             evictions: 0,
             execution: cfg.execution,
+            dataflow: cfg.dataflow,
+            buffer_fleet: BufferTraffic::default(),
+            buffer_tenant: BTreeMap::new(),
+            buffer_twin: BufferTraffic::default(),
             twin,
             placed: BTreeMap::new(),
             sched: QosScheduler::new(cfg.sched, cfg.admit_budget_cycles, cfg.qos_aging_cycles),
@@ -1132,6 +1256,99 @@ impl Fleet {
         cycles
     }
 
+    /// Charge the span reloads of a **twin-executed** paging schedule
+    /// ([`paging_spans`]): each span books `region_reload_cycles(width)`
+    /// on the usable macro its slot maps to, analytically and mirrored
+    /// onto the twin pool — the forward job really loads those spans
+    /// (into its private pool, stats discarded), so the mirror here is
+    /// what keeps the load-cycle books balanced, exactly like a resident
+    /// hot-swap's materialization.
+    fn charge_paged_span_reloads(
+        &mut self,
+        model: &str,
+        usable: &[usize],
+        spans: &[PagingSpan],
+    ) -> u64 {
+        let clock = self.sched.now();
+        let class = self.sched.class_of(model);
+        let tenant = self.tenant_stats.entry(model.to_string()).or_default();
+        let mut total = 0u64;
+        for sp in spans {
+            let m = usable[sp.slot];
+            let c = region_reload_cycles(sp.bl_count, &self.spec);
+            self.macro_stats[m].load_cycles += c;
+            self.macro_stats[m].reloads += 1;
+            tenant.load_cycles += c;
+            tenant.reloads += 1;
+            total += c;
+            emit(&self.trace, || TraceEvent {
+                clock,
+                kind: EventKind::RegionReload,
+                tenant: model.to_string(),
+                macro_id: Some(m),
+                cycles: c,
+                twin: false,
+                detail: sp.bl_count as u64,
+                class: Some(class),
+            });
+            if let Some(mac) = self.twin.get_mut(m) {
+                let mac = Arc::make_mut(mac);
+                mac.stats.load_cycles += c;
+                mac.stats.reloads += 1;
+                emit(&self.trace, || TraceEvent {
+                    clock,
+                    kind: EventKind::RegionReload,
+                    tenant: model.to_string(),
+                    macro_id: Some(m),
+                    cycles: c,
+                    twin: true,
+                    detail: sp.bl_count as u64,
+                    class: Some(class),
+                });
+            }
+        }
+        self.reload_cycles_total += total;
+        total
+    }
+
+    /// Charge a batch's activation-buffer traffic on the analytic side
+    /// of the buffer ledger (fleet total + per-tenant attribution) and
+    /// emit the matching [`EventKind::BufferRead`] /
+    /// [`EventKind::BufferWrite`] events — `detail` carries the word
+    /// count, `cycles` is 0 (buffer traffic is a movement count), and
+    /// `macro_id` is `None` (the activation buffer is per-tenant SRAM).
+    /// The twin-mirrored side is booked by [`Fleet::serve_finish`] from
+    /// what the forward job actually executed.
+    fn charge_buffer(&mut self, model: &str, traffic: BufferTraffic) {
+        if traffic.total() == 0 {
+            return;
+        }
+        let clock = self.sched.now();
+        let class = self.sched.class_of(model);
+        self.buffer_fleet.absorb(traffic);
+        self.buffer_tenant
+            .entry(model.to_string())
+            .or_default()
+            .absorb(traffic);
+        for (kind, words) in [
+            (EventKind::BufferRead, traffic.reads),
+            (EventKind::BufferWrite, traffic.writes),
+        ] {
+            if words > 0 {
+                emit(&self.trace, || TraceEvent {
+                    clock,
+                    kind,
+                    tenant: model.to_string(),
+                    macro_id: None,
+                    cycles: 0,
+                    twin: false,
+                    detail: words,
+                    class: Some(class),
+                });
+            }
+        }
+    }
+
     /// Spread a batch's compute cycles and conversions over the macros
     /// that executed it (sum-exact; remainder goes to the first macro),
     /// attributing the full amounts to the tenant.
@@ -1206,6 +1423,12 @@ impl Fleet {
         let num_classes = entry.arch.num_classes;
         let compute_total = entry.cost.computing_latency as u64 * n;
         let conversions_total = entry.cost.macs as u64 * n;
+        // Per-image buffer traffic of the configured loop ordering —
+        // charged below only when the batch actually executes on the
+        // twin (resident or paged); analytic batches move no
+        // activations.
+        let unit_buffer = model_buffer_traffic(&entry.arch, self.dataflow);
+        let mut paged_twin = false;
 
         let (macros_used, reload_cycles, reload_events, evicted) = if self.placer.fits(entry) {
             // Fully resident path: at most one hot-swap per placement
@@ -1257,13 +1480,30 @@ impl Fleet {
             }
             let usable = self.placer.free_whole_macros();
             debug_assert!(!usable.is_empty());
-            let plan =
-                MacroScheduler::new(&entry.mapping, &entry.cost, &self.spec, usable.len()).plan;
-            // Oversized ⇒ logical > physical ⇒ the plan always reloads.
-            debug_assert!(plan.reloads_per_inference > 0);
-            let events = plan.reloads_per_inference;
-            let cycles = self.charge_paging_reloads(model, &usable, events);
-            (usable, cycles, events, evicted)
+            if self.execution == ExecutionMode::Twin && entry.weights.is_some() {
+                // Twin-executed load-on-demand paging: the forward job
+                // will stream the packing through a private pool along
+                // the weight-stationary schedule, so the fleet charges
+                // exactly that schedule's span reloads (one
+                // `region_reload_cycles(width)` per span, twin-mirrored)
+                // instead of the analytic scheduler's estimate.
+                let spans =
+                    paging_spans(entry.mapping.total_bls, usable.len(), self.spec.bitlines);
+                let events = spans.len() as u64;
+                paged_twin = true;
+                let cycles = self.charge_paged_span_reloads(model, &usable, &spans);
+                (usable, cycles, events, evicted)
+            } else {
+                let plan =
+                    MacroScheduler::new(&entry.mapping, &entry.cost, &self.spec, usable.len())
+                        .plan;
+                // Oversized ⇒ logical > physical ⇒ the plan always
+                // reloads.
+                debug_assert!(plan.reloads_per_inference > 0);
+                let events = plan.reloads_per_inference;
+                let cycles = self.charge_paging_reloads(model, &usable, events);
+                (usable, cycles, events, evicted)
+            }
         };
 
         if reload_events > 0 {
@@ -1290,8 +1530,10 @@ impl Fleet {
 
         // Snapshot the forward job's inputs at dispatch time. A resident
         // twin tenant runs the real macro datapath along the placed
-        // (possibly fragmented) layout; a paging tenant has no
-        // materialized placement and gets the analytic classifier.
+        // (possibly fragmented) layout; an oversized tenant with
+        // materialized weights runs it load-on-demand along the paging
+        // schedule charged above; only tenants beyond the paging
+        // headroom fall back to the analytic classifier.
         let kind = match (self.execution, self.placed.get(model)) {
             (ExecutionMode::Twin, Some(placed)) => {
                 let entry = self.registry.get(model).expect("checked above");
@@ -1306,8 +1548,27 @@ impl Fleet {
                     spec: self.spec,
                 }
             }
+            (ExecutionMode::Twin, None) if paged_twin => {
+                let entry = self.registry.get(model).expect("checked above");
+                let weights = entry.weights.clone().expect("paged twin requires weights");
+                ForwardKind::Paged {
+                    arch: entry.arch.clone(),
+                    mapping: entry.mapping.clone(),
+                    weights,
+                    spec: self.spec,
+                    usable: macros_used.clone(),
+                    pool_size: self.twin.len(),
+                }
+            }
             _ => ForwardKind::Analytic,
         };
+        // The analytic side of the buffer ledger: charged at dispatch,
+        // at the pre-advance clock, for batches that execute on the twin
+        // (the finish half books the twin-mirrored side from what the
+        // job really moved — equal by construction).
+        if !matches!(kind, ForwardKind::Analytic) {
+            self.charge_buffer(model, unit_buffer.scaled(n));
+        }
         // Capture the pre-advance clock the finish-side events are
         // stamped with, then advance the QoS virtual clock by exactly
         // what this batch charged, so rate limits, aging and queue
@@ -1326,7 +1587,11 @@ impl Fleet {
             evicted,
             clock,
             macros: macros_used,
-            job: Some(ForwardJob { num_classes, kind }),
+            job: Some(ForwardJob {
+                num_classes,
+                dataflow: self.dataflow,
+                kind,
+            }),
         })
     }
 
@@ -1368,6 +1633,29 @@ impl Fleet {
                 });
             }
         }
+        // Twin-mirrored side of the buffer ledger: what the forward job
+        // actually moved (equals the analytic charge `serve_begin`
+        // booked, by construction — same closed-form, same ordering).
+        if fwd.buffer.total() > 0 {
+            self.buffer_twin.absorb(fwd.buffer);
+            for (kind, words) in [
+                (EventKind::BufferRead, fwd.buffer.reads),
+                (EventKind::BufferWrite, fwd.buffer.writes),
+            ] {
+                if words > 0 {
+                    emit(&self.trace, || TraceEvent {
+                        clock,
+                        kind,
+                        tenant: model.clone(),
+                        macro_id: None,
+                        cycles: 0,
+                        twin: true,
+                        detail: words,
+                        class: Some(class),
+                    });
+                }
+            }
+        }
         emit(&self.trace, || TraceEvent {
             clock,
             kind: EventKind::DispatchEnd,
@@ -1393,12 +1681,14 @@ impl Fleet {
 
     /// Run one image through the digital twin for a **resident** tenant
     /// (materialized by a previous `serve_batch` or placement), returning
-    /// `(class, logits)` — the same `twin_forward` datapath the batch
-    /// path inlines, exposed so tests and tools can drive the placed
-    /// layout directly. Unlike `serve_batch` this performs **no** fleet
-    /// bookkeeping: no batching, no analytic compute charge, and no LRU
-    /// touch (a tenant driven only through here still looks idle to the
-    /// evictor).
+    /// `(class, logits)` — the same full-spatial
+    /// [`dataflow::forward_resident`] datapath the batch path runs,
+    /// exposed so tests and tools can drive the placed layout directly.
+    /// Unlike `serve_batch` this performs **no** fleet bookkeeping: no
+    /// batching, no analytic compute charge, no buffer-ledger charge,
+    /// and no LRU touch (a tenant driven only through here still looks
+    /// idle to the evictor) — only the twin's own pass deltas are
+    /// booked.
     pub fn infer_twin(&mut self, model: &str, image: &[f32]) -> Result<(usize, Vec<f32>)> {
         anyhow::ensure!(
             self.execution == ExecutionMode::Twin,
@@ -1417,8 +1707,15 @@ impl Fleet {
             .ok_or_else(|| anyhow::anyhow!("model '{model}' registered without weights"))?;
         let spec = self.spec;
         let mut deltas = vec![MacroStats::default(); self.twin.len()];
-        let feats =
-            twin_forward(&self.twin, placed, &entry.arch, weights, &spec, image, &mut deltas);
+        let feats = dataflow::forward_resident(
+            &self.twin,
+            placed,
+            &entry.arch,
+            weights,
+            &spec,
+            image,
+            &mut deltas,
+        );
         let num_classes = entry.arch.num_classes;
         for (i, d) in deltas.iter().enumerate() {
             if d.compute_cycles > 0 || d.conversions > 0 {
@@ -1574,6 +1871,14 @@ impl Fleet {
             largest_free_run: self.placer.largest_free_run(),
             execution: self.execution,
             twin_stats: self.twin.iter().map(|m| m.stats).collect(),
+            dataflow: self.dataflow,
+            buffer_fleet: self.buffer_fleet,
+            buffer_tenant: self
+                .buffer_tenant
+                .iter()
+                .map(|(n, b)| (n.clone(), *b))
+                .collect(),
+            buffer_twin: self.buffer_twin,
             qos_stats: self.sched.stats(),
         }
     }
@@ -1649,98 +1954,6 @@ fn materialize_placement(
     }
     placed.insert(entry.name.clone(), pm);
     Ok(())
-}
-
-/// One image through the macro datapath along a placed layout — the
-/// quant/psum path the coordinator's single-layer twin test exercises,
-/// generalized to the whole layer stack and to fragmented placements.
-///
-/// Per layer, for one representative output position: build the im2col
-/// row from the producing layer's activations, calibrate a dynamic
-/// activation step over the DAC range, segment the row per Fig. 9
-/// ([`segment_inputs`]), drive one macro pass per segment — split into
-/// one pass per physically-contiguous run, so a span boundary in the
-/// placement is a real extra pass — accumulate the ADC codes in the adder
-/// tree, scale by `S_W·S_ADC`, ReLU. The last layer's activations are the
-/// feature vector the (non-CIM) classifier head consumes.
-///
-/// Read-only over the macro snapshots: each pass runs through
-/// [`CimMacro::pass_delta`] and its compute/conversion charges accumulate
-/// into `deltas` (indexed by macro id) for the caller to book — which is
-/// what lets [`ForwardJob::run`] execute on a worker thread while the
-/// driver keeps mutating the live pool.
-fn twin_forward(
-    twin: &[Arc<CimMacro>],
-    placed: &PlacedMapping,
-    arch: &ModelArch,
-    weights: &ModelWeights,
-    spec: &MacroSpec,
-    image: &[f32],
-    deltas: &mut [MacroStats],
-) -> Vec<f32> {
-    let dac_max = (1i32 << spec.dac_bits) - 1;
-    let mut outputs: Vec<Vec<f32>> = Vec::with_capacity(arch.layers.len());
-    for (lm, layer) in placed.mapping.layers.iter().zip(&arch.layers) {
-        let src: Vec<f32> = match layer.input_from {
-            Some(i) => outputs[i].clone(),
-            None => channel_means(image, layer.c_in),
-        };
-        debug_assert_eq!(src.len(), layer.c_in);
-        // One output position's im2col row: each input channel's value at
-        // every kernel tap.
-        let k2 = layer.kernel * layer.kernel;
-        let row: Vec<f32> = src
-            .iter()
-            .flat_map(|&a| std::iter::repeat(a).take(k2))
-            .collect();
-        debug_assert_eq!(row.len(), layer.rows());
-        // Dynamic activation step: span the DAC range per layer.
-        let peak = row.iter().fold(0.0f32, |m, &x| m.max(x));
-        let s_act = if peak > 0.0 { peak / dac_max as f32 } else { 1.0 };
-        let segs = segment_inputs(layer.c_in, layer.kernel, spec.channels_per_bl(layer.kernel));
-        debug_assert_eq!(segs.len(), lm.segments);
-        let mut psum = vec![0i64; lm.c_out];
-        for (seg, &(lo, hi)) in segs.iter().enumerate() {
-            let codes: Vec<i32> = row[lo..hi]
-                .iter()
-                .map(|&x| ((x / s_act).round() as i32).clamp(0, dac_max))
-                .collect();
-            let logical = lm.bl_start + seg * lm.c_out;
-            for run in placed.physical_runs(logical, lm.c_out) {
-                let (r, d) = twin[run.macro_id].pass_delta(&codes, run.bl_start, run.bl_count);
-                deltas[run.macro_id].absorb(&d);
-                let off = run.logical_start - logical;
-                for (j, &code) in r.codes.iter().enumerate() {
-                    psum[off + j] += code as i64;
-                }
-            }
-        }
-        // Eq. 7 output scaling: the adder tree applies S_W·S_ADC, and the
-        // activation step folds back in as S_A — without it the forward
-        // would be invariant to input magnitude.
-        let scale = s_act * AdderTree::new(weights.steps[lm.layer], TWIN_S_ADC, false)
-            .effective_scale();
-        outputs.push(psum.iter().map(|&p| (p as f32 * scale).max(0.0)).collect());
-    }
-    outputs.pop().unwrap_or_default()
-}
-
-/// Fold an image into `c` channel activations (mean per contiguous chunk)
-/// — the deterministic stand-in for the stem's receptive field, matching
-/// the chunked spirit of [`sim_classify`]'s head.
-fn channel_means(image: &[f32], c: usize) -> Vec<f32> {
-    assert!(c > 0, "a layer has at least one input channel");
-    let n = image.len();
-    (0..c)
-        .map(|i| {
-            let lo = i * n / c;
-            let hi = ((i + 1) * n / c).min(n);
-            if lo >= hi {
-                return 0.0;
-            }
-            image[lo..hi].iter().sum::<f32>() / (hi - lo) as f32
-        })
-        .collect()
 }
 
 /// One tagged inference request flowing through the fleet.
@@ -2553,23 +2766,137 @@ mod tests {
     }
 
     #[test]
-    fn twin_paging_mirrors_charges_without_residency() {
+    fn twin_paging_executes_load_on_demand_and_mirrors_charges() {
         let spec = MacroSpec::default();
         let mut fleet = Fleet::new(&twin_cfg(4, false), &spec);
         fleet.register("big", vgg9().scaled(0.3), false).unwrap(); // ≫ 4 macros
-        assert!(
-            fleet.registry().get("big").unwrap().weights.is_none(),
-            "oversized tenant can only page; its weights are never synthesized"
-        );
+        // Within the paging headroom the oversized tenant's weights ARE
+        // materialized: it executes on the twin, load-on-demand.
+        let entry_bls = fleet.registry().get("big").unwrap().mapping.total_bls;
+        assert!(entry_bls > 4 * 256 && entry_bls <= PAGING_HEADROOM * 4 * 256);
+        assert!(fleet.registry().get("big").unwrap().weights.is_some());
         let out = fleet.serve_batch("big", &[img()]).unwrap();
-        assert!(out.reload_events > 0, "paging reloads every batch");
-        assert!(fleet.placed_mapping("big").is_none(), "paged tenant not materialized");
+        // One reload event per schedule span, each charged
+        // region_reload_cycles(width): the total is exactly the packed
+        // footprint on the default spec (load == bitlines).
+        let spans = paging_spans(entry_bls, 4, spec.bitlines);
+        assert_eq!(out.reload_events, spans.len() as u64);
+        assert_eq!(out.reload_cycles, entry_bls as u64);
+        assert!(fleet.placed_mapping("big").is_none(), "paged tenant not resident");
         let snap = fleet.snapshot();
         assert_eq!(snap.twin_load_cycles(), snap.reload_cycles);
         assert_eq!(
             snap.twin_stats.iter().map(|s| s.reloads).sum::<u64>(),
             out.reload_events
         );
+        // The twin really executed the forward: compute cycles and
+        // conversions landed in the twin pool, and the buffer ledger's
+        // analytic and twin sides agree.
+        assert!(snap.twin_stats.iter().any(|s| s.compute_cycles > 0));
+        assert!(snap.buffer_fleet.total() > 0);
+        assert_eq!(snap.buffer_twin, snap.buffer_fleet);
+        assert_eq!(snap.tenant_buffer(), snap.buffer_fleet);
+        assert!(out.logits[0].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn twin_beyond_headroom_still_pages_analytically() {
+        let spec = MacroSpec::default();
+        let mut fleet = Fleet::new(&twin_cfg(4, false), &spec);
+        fleet.register("huge", vgg9(), false).unwrap(); // 38592 BLs ≫ headroom
+        assert!(
+            fleet.registry().get("huge").unwrap().weights.is_none(),
+            "beyond the paging headroom weights are never synthesized"
+        );
+        let out = fleet.serve_batch("huge", &[img()]).unwrap();
+        assert!(out.reload_events > 0, "paging reloads every batch");
+        let snap = fleet.snapshot();
+        assert_eq!(snap.twin_load_cycles(), snap.reload_cycles);
+        // Analytic fallback: no twin passes, no buffer traffic.
+        assert!(snap.twin_stats.iter().all(|s| s.compute_cycles == 0));
+        assert_eq!(snap.buffer_fleet, BufferTraffic::default());
+    }
+
+    #[test]
+    fn twin_compute_equals_analytic_latency_per_layer() {
+        // Telescoping prefix proof of the per-layer equality: for every
+        // prefix of the layer stack, one twin-executed image's compute
+        // cycles equal the analytic computing_latency (and conversions
+        // equal the analytic MACs) — so each layer's increment matches
+        // its own analytic cost exactly.
+        let spec = MacroSpec::default();
+        let arch = vgg9().scaled(0.04);
+        let mut prev = (0u64, 0u64);
+        for k in 1..=arch.layers.len() {
+            let truncated = ModelArch {
+                layers: arch.layers[..k].to_vec(),
+                ..arch.clone()
+            };
+            let cost = crate::latency::model_cost(&truncated, &spec);
+            let mut fleet = Fleet::new(&twin_cfg(1, true), &spec);
+            fleet.register("m", truncated, false).unwrap();
+            fleet.serve_batch("m", &[img()]).unwrap();
+            let snap = fleet.snapshot();
+            let compute: u64 = snap.twin_stats.iter().map(|s| s.compute_cycles).sum();
+            let conv: u64 = snap.twin_stats.iter().map(|s| s.conversions).sum();
+            assert_eq!(compute, cost.computing_latency as u64, "prefix {k}");
+            assert_eq!(conv, cost.macs as u64, "prefix {k}");
+            // The increment is exactly layer k's analytic cost.
+            let lc = crate::latency::layer_cost(
+                &arch.layers[k - 1],
+                &spec,
+            );
+            assert_eq!(compute - prev.0, lc.computing_latency as u64, "layer {k}");
+            assert_eq!(conv - prev.1, lc.macs as u64, "layer {k}");
+            prev = (compute, conv);
+        }
+    }
+
+    #[test]
+    fn dataflow_variants_share_numerics_and_order_buffer_traffic() {
+        // The three loop orderings execute identical numerics (same
+        // logits, same compute cycles) and differ only in charged buffer
+        // traffic: tap-reuse < spatial-first < pixel-first reads, equal
+        // writes — conserved fleet == Σ per-tenant == twin in each.
+        let spec = MacroSpec::default();
+        let image = img();
+        let mut results = Vec::new();
+        for kind in DataflowKind::ALL {
+            let cfg = FleetConfig {
+                dataflow: kind,
+                ..twin_cfg(1, true)
+            };
+            let mut fleet = Fleet::new(&cfg, &spec);
+            fleet.register("m", vgg9().scaled(0.04), false).unwrap();
+            let out = fleet.serve_batch("m", &[image.clone()]).unwrap();
+            let snap = fleet.snapshot();
+            assert_eq!(snap.dataflow, kind);
+            assert_eq!(snap.buffer_twin, snap.buffer_fleet, "{kind:?}");
+            assert_eq!(snap.tenant_buffer(), snap.buffer_fleet, "{kind:?}");
+            assert!(snap.buffer_fleet.writes > 0, "{kind:?}");
+            let compute: u64 = snap.twin_stats.iter().map(|s| s.compute_cycles).sum();
+            results.push((out.logits, out.classes, compute, snap.buffer_fleet));
+        }
+        let [pf, sf, tr] = &results[..] else { unreachable!() };
+        assert_eq!(pf.0, sf.0, "logits are loop-order invariant");
+        assert_eq!(sf.0, tr.0);
+        assert_eq!(pf.1, tr.1);
+        assert_eq!(pf.2, tr.2, "compute cycles are loop-order invariant");
+        assert_eq!(pf.3.writes, sf.3.writes);
+        assert_eq!(sf.3.writes, tr.3.writes);
+        assert!(
+            tr.3.reads < sf.3.reads && sf.3.reads < pf.3.reads,
+            "tap-reuse {} < spatial-first {} < pixel-first {}",
+            tr.3.reads,
+            sf.3.reads,
+            pf.3.reads
+        );
+
+        // An analytic fleet moves no activations at all.
+        let mut analytic = Fleet::new(&cfg(1), &spec);
+        analytic.register("m", vgg9().scaled(0.04), false).unwrap();
+        analytic.serve_batch("m", &[image]).unwrap();
+        assert_eq!(analytic.snapshot().buffer_fleet, BufferTraffic::default());
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Per-layer and whole-model cost computation.
 
 use crate::arch::{ConvLayer, ModelArch};
-use crate::config::MacroSpec;
+use crate::config::{DataflowKind, MacroSpec};
 use crate::util::{ceil_div, round_up};
 
 /// Cost breakdown of one convolution layer mapped onto the macro.
@@ -134,6 +134,111 @@ pub fn fragmentation_penalty_cycles(
     let widths: Vec<usize> = bl_counts.into_iter().collect();
     let total: usize = widths.iter().sum();
     spans_reload_cycles(widths, spec) - region_reload_cycles(total, spec)
+}
+
+/// Activation-buffer traffic one inference charges: reads of input
+/// activations and writes of output activations, counted in activation
+/// words. This is the quantity the fleet's **buffer-traffic ledger**
+/// conserves (fleet == per-tenant == twin) and the axis the
+/// [`DataflowKind`] loop orderings compete on — compute cycles are
+/// loop-order invariant, buffer traffic is not (arxiv 2508.14375).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BufferTraffic {
+    /// Input activations fetched from the activation buffer.
+    pub reads: u64,
+    /// Output activations written back to the activation buffer.
+    pub writes: u64,
+}
+
+impl BufferTraffic {
+    /// Accumulate another charge into this one.
+    pub fn absorb(&mut self, other: BufferTraffic) {
+        self.reads += other.reads;
+        self.writes += other.writes;
+    }
+
+    /// Total activation words moved (reads + writes).
+    pub fn total(&self) -> u64 {
+        self.reads + self.writes
+    }
+
+    /// Traffic scaled by a batch of `n` images (linear: activations are
+    /// private per image).
+    pub fn scaled(&self, n: u64) -> BufferTraffic {
+        BufferTraffic {
+            reads: self.reads * n,
+            writes: self.writes * n,
+        }
+    }
+}
+
+/// Number of distinct output rows that read input row `y`, under the
+/// clamp-padding tap rule `q = min(y_out·stride + dy, in_hw−1)` the twin
+/// dataflow uses. Symmetric in x/y, so the same count serves columns.
+fn consuming_output_rows(y: usize, in_hw: usize, out_hw: usize, kernel: usize) -> u64 {
+    let stride = in_hw / out_hw.max(1);
+    (0..out_hw)
+        .filter(|&y_out| (0..kernel).any(|dy| (y_out * stride + dy).min(in_hw - 1) == y))
+        .count() as u64
+}
+
+/// Activation-buffer traffic of one layer under a given loop ordering.
+///
+/// `in_hw` is the spatial extent of the layer's input plane (the
+/// producing layer's `out_hw`, or the layer's own `out_hw` for the stem —
+/// [`model_buffer_traffic`] resolves this from the arch). All orderings
+/// write each output activation exactly once (`out_px · c_out`); they
+/// differ in how often an input activation is re-fetched:
+///
+/// * [`DataflowKind::PixelFirst`] — the full `c_in·k²` receptive field per
+///   output pixel: `out_px · c_in · k²` reads.
+/// * [`DataflowKind::SpatialFirst`] — one fetch per (activation, consuming
+///   output row): horizontal tap overlap is reused, vertical is not.
+/// * [`DataflowKind::TapReuse`] — one fetch per input activation
+///   (`c_in · in_hw²`), the minimal-traffic bound of arxiv 2508.14375.
+///
+/// Counts are spec-independent (pure activation movement); the macro
+/// geometry only decides *compute* cycles, which are identical across
+/// orderings.
+pub fn layer_buffer_traffic(layer: &ConvLayer, in_hw: usize, kind: DataflowKind) -> BufferTraffic {
+    assert!(in_hw > 0, "layer input plane must be non-empty");
+    let out_px = layer.out_px() as u64;
+    let k2 = (layer.kernel * layer.kernel) as u64;
+    let c_in = layer.c_in as u64;
+    let reads = match kind {
+        DataflowKind::PixelFirst => out_px * c_in * k2,
+        DataflowKind::SpatialFirst => {
+            // Each input activation in row y is fetched once per distinct
+            // output row consuming it; rows and columns are symmetric so
+            // one axis scan suffices: Σ_y county(y) · (c_in · in_hw).
+            let per_column: u64 = (0..in_hw)
+                .map(|y| consuming_output_rows(y, in_hw, layer.out_hw, layer.kernel))
+                .sum();
+            c_in * in_hw as u64 * per_column
+        }
+        DataflowKind::TapReuse => c_in * (in_hw * in_hw) as u64,
+    };
+    BufferTraffic {
+        reads,
+        writes: out_px * layer.c_out as u64,
+    }
+}
+
+/// Whole-model activation-buffer traffic for one inference: the sum of
+/// [`layer_buffer_traffic`] over the conv stack, with each layer's input
+/// extent resolved from its producer (`input_from`, or the layer's own
+/// `out_hw` for the stem — the twin folds the image into a full-resolution
+/// stem plane).
+pub fn model_buffer_traffic(arch: &ModelArch, kind: DataflowKind) -> BufferTraffic {
+    let mut total = BufferTraffic::default();
+    for layer in &arch.layers {
+        let in_hw = match layer.input_from {
+            Some(j) => arch.layers[j].out_hw,
+            None => layer.out_hw,
+        };
+        total.absorb(layer_buffer_traffic(layer, in_hw, kind));
+    }
+    total
 }
 
 /// Cost of a single layer on the given macro.
@@ -378,6 +483,61 @@ mod tests {
         let u2 = macro_usage(2_000_000, 4096, &s);
         assert!((u2 - 2.0 * u1).abs() < 1e-12);
         assert_eq!(macro_usage(1, 0, &s), 0.0);
+    }
+
+    #[test]
+    fn buffer_traffic_ordering_is_strict_for_overlapping_kernels() {
+        // 3×3 stride-1: tap-reuse < spatial-first < pixel-first, writes
+        // identical — loop order moves reads only.
+        let l = mk(28, 64, 8);
+        let pf = layer_buffer_traffic(&l, 8, DataflowKind::PixelFirst);
+        let sf = layer_buffer_traffic(&l, 8, DataflowKind::SpatialFirst);
+        let tr = layer_buffer_traffic(&l, 8, DataflowKind::TapReuse);
+        assert_eq!(pf.writes, 64 * 64);
+        assert_eq!(sf.writes, pf.writes);
+        assert_eq!(tr.writes, pf.writes);
+        assert_eq!(pf.reads, 64 * 28 * 9);
+        assert_eq!(tr.reads, 28 * 64);
+        assert!(tr.reads < sf.reads, "tap-reuse must beat spatial-first");
+        assert!(sf.reads < pf.reads, "spatial-first must beat pixel-first");
+        assert_eq!(tr.total(), tr.reads + tr.writes);
+    }
+
+    #[test]
+    fn buffer_traffic_strided_layer_counts_clamped_taps() {
+        // 16→8 downsampling (stride 2): every input activation is still
+        // consumed at least once, so tap-reuse reads the full input plane.
+        let l = mk(32, 64, 8);
+        let tr = layer_buffer_traffic(&l, 16, DataflowKind::TapReuse);
+        assert_eq!(tr.reads, 32 * 16 * 16);
+        let sf = layer_buffer_traffic(&l, 16, DataflowKind::SpatialFirst);
+        let pf = layer_buffer_traffic(&l, 16, DataflowKind::PixelFirst);
+        assert!(tr.reads < sf.reads && sf.reads < pf.reads);
+        // Spatial-first re-derivation: county(y) sums over distinct
+        // consuming output rows under the clamped tap rule.
+        let per_col: u64 = (0..16).map(|y| consuming_output_rows(y, 16, 8, 3)).sum();
+        assert_eq!(sf.reads, 32 * 16 * per_col);
+    }
+
+    #[test]
+    fn model_buffer_traffic_sums_layers_and_scales_with_batch() {
+        let m = vgg9();
+        let tr = model_buffer_traffic(&m, DataflowKind::TapReuse);
+        let pf = model_buffer_traffic(&m, DataflowKind::PixelFirst);
+        // Same write volume (one write per output activation of the
+        // whole stack), strictly fewer reads.
+        assert_eq!(tr.writes, pf.writes);
+        assert!(tr.reads < pf.reads);
+        // Stem reads the full-resolution folded plane once per channel.
+        let stem = layer_buffer_traffic(&m.layers[0], m.layers[0].out_hw, DataflowKind::TapReuse);
+        assert_eq!(stem.reads, 3 * 32 * 32);
+        let batch = tr.scaled(4);
+        assert_eq!(batch.reads, 4 * tr.reads);
+        assert_eq!(batch.writes, 4 * tr.writes);
+        let mut acc = BufferTraffic::default();
+        acc.absorb(tr);
+        acc.absorb(tr);
+        assert_eq!(acc, tr.scaled(2));
     }
 
     #[test]

@@ -21,8 +21,8 @@
 pub mod cost;
 
 pub use cost::{
-    fragmentation_penalty_cycles, layer_cost, model_cost, region_reload_cycles,
-    spans_reload_cycles, LayerCost, ModelCost,
+    fragmentation_penalty_cycles, layer_buffer_traffic, layer_cost, model_buffer_traffic,
+    model_cost, region_reload_cycles, spans_reload_cycles, BufferTraffic, LayerCost, ModelCost,
 };
 
 #[cfg(test)]

@@ -14,7 +14,9 @@
 use std::path::{Path, PathBuf};
 
 use cim_adapt::arch::by_name;
-use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec, MorphConfig, ServeConfig};
+use cim_adapt::config::{
+    DataflowKind, ExecutionMode, FleetConfig, MacroSpec, MorphConfig, ServeConfig,
+};
 use cim_adapt::coordinator::server::{Backend, EdgeServer};
 use cim_adapt::data::SynthCifar;
 use cim_adapt::fleet::{EvictionPolicy, FleetServer, QosClass, SchedMode, ShardedFleet};
@@ -52,6 +54,7 @@ fn main() -> anyhow::Result<()> {
                     .cmd(
                         "fleet [--macros N] [--bl B] [--requests N] [--policy lru|cost] \
                          [--fit first|best|worst|buddy|affinity] [--coresident] [--twin] \
+                         [--dataflow pixel-first|spatial-first|tap-reuse] \
                          [--defrag [--defrag-threshold T]] [--qos] [--sched qos|fifo] \
                          [--priority m=class,..] [--rate m=R[:BURST],..] \
                          [--deadline m=CYCLES,..] [--admit-budget N] \
@@ -59,7 +62,9 @@ fn main() -> anyhow::Result<()> {
                          [--pools N [--tenants T] [--link-cost C] \
                           [--transfer-compression F] [--shed-threshold T] [--json FILE]]",
                         "multi-tenant hot-swap serving demo (--twin: run on the simulated \
-                         macros; --defrag: compact the pool online when fragmentation \
+                         macros; --dataflow: the twin's loop ordering — changes only the \
+                         charged activation-buffer traffic, never the numerics; \
+                         --defrag: compact the pool online when fragmentation \
                          crosses the threshold; --qos: demo priority classes; --priority/\
                          --rate/--deadline: per-tenant QoS contracts; --admit-budget: \
                          reject/defer dispatches whose projected reload+pass cycles \
@@ -322,6 +327,9 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         sched: SchedMode::parse(args.str_or("sched", "qos"))
             .ok_or_else(|| anyhow::anyhow!("--sched expects 'qos' or 'fifo'"))?,
         admit_budget_cycles: args.u64_or("admit-budget", 0),
+        dataflow: DataflowKind::parse(args.str_or("dataflow", "tap-reuse")).ok_or_else(|| {
+            anyhow::anyhow!("--dataflow expects 'pixel-first', 'spatial-first' or 'tap-reuse'")
+        })?,
         ..FleetConfig::default()
     };
     let target_bl = args.usize_or("bl", 512);
@@ -483,6 +491,17 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             },
             commas(snap.twin_stats.iter().map(|s| s.compute_cycles).sum::<u64>()),
             commas(snap.twin_stats.iter().map(|s| s.conversions).sum::<u64>())
+        );
+        println!(
+            "buffer ({}): {} activation reads / {} writes charged ({} the twin mirror)",
+            snap.dataflow.as_str(),
+            commas(snap.buffer_fleet.reads),
+            commas(snap.buffer_fleet.writes),
+            if snap.buffer_twin == snap.buffer_fleet {
+                "exactly matching"
+            } else {
+                "DIVERGED from"
+            }
         );
     }
     println!(

@@ -13,6 +13,12 @@
 //! ([`LedgerAuditor::replay`] over a recorded [`TraceLog`](super::TraceLog)) —
 //! the proptests check both derivations are bit-identical.
 //!
+//! The **buffer-traffic ledger** (activation reads/writes from
+//! [`EventKind::BufferRead`] / [`EventKind::BufferWrite`] `detail`
+//! payloads, conserved fleet == per-tenant == twin — there is no
+//! per-macro side because the activation buffer is per-tenant SRAM, not
+//! a macro) is re-derived and verified the same way.
+//!
 //! A sharded fleet ([`ShardedFleet`](crate::fleet::ShardedFleet)) adds
 //! the **fifth** ledger: inter-pool transfer cycles, recorded as
 //! [`EventKind::MigratePool`] events on the shard's own monotone
@@ -26,6 +32,7 @@
 use std::collections::BTreeMap;
 
 use crate::fleet::{FleetSnapshot, ShardSnapshot};
+use crate::latency::BufferTraffic;
 use crate::util::json::Json;
 
 use super::event::{EventKind, TraceEvent};
@@ -44,6 +51,12 @@ pub struct LedgerAuditor {
     tenant_migration: BTreeMap<String, u64>,
     twin_load: u64,
     twin_migration: u64,
+    /// Buffer-traffic ledger (activation words, from event `detail`):
+    /// fleet total, per tenant, and the twin-mirrored side. No per-macro
+    /// view — the activation buffer is per-tenant SRAM.
+    fleet_buffer: BufferTraffic,
+    tenant_buffer: BTreeMap<String, BufferTraffic>,
+    twin_buffer: BufferTraffic,
     /// Shard-level transfer ledger: fleet total, per destination pool
     /// (`MigratePool` events carry the pool in `macro_id`), per tenant.
     fleet_transfer: u64,
@@ -73,6 +86,23 @@ impl TraceSink for LedgerAuditor {
             }
             *self.tenant_transfer.entry(ev.tenant.clone()).or_default() += ev.cycles;
             self.transfers += 1;
+            return;
+        }
+        if matches!(ev.kind, EventKind::BufferRead | EventKind::BufferWrite) {
+            // Buffer traffic is counted in activation words carried by
+            // `detail` (cycles stay 0), and has no per-macro view.
+            let words = ev.detail;
+            let charge = if ev.kind == EventKind::BufferRead {
+                BufferTraffic { reads: words, writes: 0 }
+            } else {
+                BufferTraffic { reads: 0, writes: words }
+            };
+            if ev.twin {
+                self.twin_buffer.absorb(charge);
+            } else {
+                self.fleet_buffer.absorb(charge);
+                self.tenant_buffer.entry(ev.tenant.clone()).or_default().absorb(charge);
+            }
             return;
         }
         let (fleet, per_macro, per_tenant, twin) = match ev.kind {
@@ -138,6 +168,22 @@ impl LedgerAuditor {
     /// ledger; 0 on single-pool streams).
     pub fn fleet_transfer_cycles(&self) -> u64 {
         self.fleet_transfer
+    }
+
+    /// Derived fleet-level activation-buffer traffic (analytic side).
+    pub fn fleet_buffer(&self) -> BufferTraffic {
+        self.fleet_buffer
+    }
+
+    /// Derived twin-mirrored activation-buffer traffic.
+    pub fn twin_buffer(&self) -> BufferTraffic {
+        self.twin_buffer
+    }
+
+    /// Derived activation-buffer traffic attributed to one tenant
+    /// (zero when the trace never charged it).
+    pub fn tenant_buffer(&self, tenant: &str) -> BufferTraffic {
+        self.tenant_buffer.get(tenant).copied().unwrap_or_default()
     }
 
     /// Derived cross-pool migrations (`MigratePool` events seen).
@@ -215,6 +261,30 @@ impl LedgerAuditor {
         } else {
             acc.check("twin load", self.twin_load, twin_load);
             acc.check("twin migration", self.twin_migration, twin_migration);
+        }
+        // Buffer-traffic ledger: fleet total, per-tenant attribution,
+        // twin mirror — all re-derived from BufferRead/BufferWrite
+        // `detail` payloads alone.
+        acc.check("fleet buffer reads", self.fleet_buffer.reads, snap.buffer_fleet.reads);
+        acc.check("fleet buffer writes", self.fleet_buffer.writes, snap.buffer_fleet.writes);
+        for (name, traffic) in &snap.buffer_tenant {
+            let derived = self.tenant_buffer.get(name).copied().unwrap_or_default();
+            acc.check(&format!("tenant {name} buffer reads"), derived.reads, traffic.reads);
+            acc.check(&format!("tenant {name} buffer writes"), derived.writes, traffic.writes);
+        }
+        for name in self.tenant_buffer.keys() {
+            acc.checks += 1;
+            if acc.first.is_none() && !snap.buffer_tenant.iter().any(|(n, _)| n == name) {
+                acc.first =
+                    Some(format!("tenant {name}: buffer-charged in trace, unknown to snapshot"));
+            }
+        }
+        if snap.twin_stats.is_empty() {
+            acc.check("twin buffer reads (no twin)", self.twin_buffer.reads, 0);
+            acc.check("twin buffer writes (no twin)", self.twin_buffer.writes, 0);
+        } else {
+            acc.check("twin buffer reads", self.twin_buffer.reads, snap.buffer_twin.reads);
+            acc.check("twin buffer writes", self.twin_buffer.writes, snap.buffer_twin.writes);
         }
         // A single pool has no inter-pool link: transfer charges in its
         // stream mean events leaked across shard boundaries.
@@ -361,6 +431,38 @@ mod tests {
     fn clock_regression_is_counted() {
         let a = LedgerAuditor::replay(&[reload(10, "a", 0, 1, false), reload(3, "a", 0, 1, false)]);
         assert_eq!(a.clock_regressions(), 1);
+    }
+
+    #[test]
+    fn buffer_ledger_accumulates_from_detail_and_splits_twin_side() {
+        let buf = |clock, tenant: &str, kind, words, twin| TraceEvent {
+            clock,
+            kind,
+            tenant: tenant.into(),
+            macro_id: None,
+            cycles: 0,
+            twin,
+            detail: words,
+            class: None,
+        };
+        let a = LedgerAuditor::replay(&[
+            buf(0, "a", EventKind::BufferRead, 300, false),
+            buf(0, "a", EventKind::BufferWrite, 120, false),
+            buf(0, "a", EventKind::BufferRead, 300, true),
+            buf(0, "a", EventKind::BufferWrite, 120, true),
+            buf(4, "b", EventKind::BufferRead, 50, false),
+        ]);
+        assert_eq!(a.fleet_buffer(), BufferTraffic { reads: 350, writes: 120 });
+        assert_eq!(a.twin_buffer(), BufferTraffic { reads: 300, writes: 120 });
+        assert_eq!(a.tenant_buffer("a"), BufferTraffic { reads: 300, writes: 120 });
+        assert_eq!(a.tenant_buffer("b"), BufferTraffic { reads: 50, writes: 0 });
+        assert_eq!(a.tenant_buffer("ghost"), BufferTraffic::default());
+        // Against an empty snapshot the fleet-buffer check diverges
+        // first (derived 350 != ledger 0).
+        let report = a.verify(&FleetSnapshot::default());
+        assert!(!report.pass);
+        assert!(report.first_divergence.as_deref().unwrap().starts_with("fleet load")
+            || report.first_divergence.as_deref().unwrap().starts_with("fleet buffer reads"));
     }
 
     #[test]

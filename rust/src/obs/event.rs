@@ -63,12 +63,25 @@ pub enum EventKind {
     /// Never twin-mirrored: the landing write inside the destination
     /// pool books its own twin-mirrored [`EventKind::MigrateSpan`]s.
     MigratePool,
+    /// A batch's activation-buffer **reads** charged the buffer-traffic
+    /// ledger (`detail` = activation words fetched, `cycles` = 0: buffer
+    /// traffic is a movement count, not a device-cycle charge;
+    /// `macro_id` = `None` — the activation buffer is per-tenant SRAM,
+    /// not a macro). Emitted twice under twin execution, analytic and
+    /// twin-mirrored, like [`EventKind::RegionReload`]; the counts agree
+    /// by construction (the dataflow engine derives both from the same
+    /// loop ordering).
+    BufferRead,
+    /// A batch's activation-buffer **writes** charged the buffer-traffic
+    /// ledger (`detail` = activation words written; same conventions as
+    /// [`EventKind::BufferRead`]).
+    BufferWrite,
 }
 
 impl EventKind {
     /// Every kind, in schema order — exporters and counters index by
     /// [`EventKind::index`] into arrays of this length.
-    pub const ALL: [EventKind; 11] = [
+    pub const ALL: [EventKind; 13] = [
         EventKind::Admit,
         EventKind::Reject,
         EventKind::Defer,
@@ -80,6 +93,8 @@ impl EventKind {
         EventKind::TwinPass,
         EventKind::Compaction,
         EventKind::MigratePool,
+        EventKind::BufferRead,
+        EventKind::BufferWrite,
     ];
 
     /// Position in [`EventKind::ALL`] (a dense counter index).
@@ -102,6 +117,8 @@ impl EventKind {
             EventKind::TwinPass => "twin_pass",
             EventKind::Compaction => "compaction",
             EventKind::MigratePool => "migrate_pool",
+            EventKind::BufferRead => "buffer_read",
+            EventKind::BufferWrite => "buffer_write",
         }
     }
 

@@ -681,3 +681,100 @@ fn threaded_priority_tenant_preempts_queued_batch_traffic() {
     );
     assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
 }
+
+#[test]
+fn twin_compute_cycles_equal_analytic_latency_for_every_resident_tenant() {
+    // The dataflow engine's headline guarantee: full-spatial twin
+    // execution makes twin compute cycles equal the analytic
+    // `computing_latency` *by construction* — across a multi-tenant pool
+    // with mixed batch sizes — and the activation-buffer ledger is
+    // conserved (fleet == Σ per-tenant == twin). Whole-macro placement
+    // keeps every placement contiguous; fragmented placements pay one
+    // extra twin-observed evaluate per split run and are exercised by
+    // `twin_and_analytic_ledgers_agree_on_fragmented_coresident_swap`.
+    let spec_ = spec();
+    let cfg = FleetConfig {
+        execution: ExecutionMode::Twin,
+        ..cfg(EvictionPolicy::Lru)
+    };
+    let mut fleet = Fleet::new(&cfg, &spec_);
+    let tenants = [("a", 0.04, 2usize), ("b", 0.03, 1), ("c", 0.05, 3)];
+    for (name, s, images) in tenants {
+        fleet.register(name, by_name("vgg9").unwrap().scaled(s), false).unwrap();
+        let batch: Vec<Vec<f32>> = (0..images).map(img).collect();
+        fleet.serve_batch(name, &batch).unwrap();
+    }
+    let snap = fleet.snapshot();
+    let mut expect_compute = 0u64;
+    let mut expect_conversions = 0u64;
+    let mut expect_buffer = cim_adapt::latency::BufferTraffic::default();
+    for (name, _, images) in tenants {
+        assert!(fleet.is_resident(name), "{name} stays resident");
+        let entry = fleet.registry().get(name).unwrap();
+        expect_compute += entry.cost.computing_latency as u64 * images as u64;
+        expect_conversions += entry.cost.macs as u64 * images as u64;
+        expect_buffer.absorb(entry.buffer_traffic(snap.dataflow).scaled(images as u64));
+    }
+    let twin = MacroStats::aggregate(snap.twin_stats.iter());
+    assert_eq!(twin.compute_cycles, expect_compute, "twin == analytic latency");
+    assert_eq!(twin.conversions, expect_conversions, "twin conversions == MACs");
+    // The analytic per-macro compute books agree with the twin's.
+    assert_eq!(snap.aggregate().compute_cycles, twin.compute_cycles);
+    // Buffer-ledger conservation across all three views.
+    assert_eq!(snap.buffer_fleet, expect_buffer);
+    assert_eq!(snap.buffer_twin, snap.buffer_fleet);
+    assert_eq!(snap.tenant_buffer(), snap.buffer_fleet);
+}
+
+#[test]
+fn oversized_tenant_completes_a_twin_forward_via_paging() {
+    // A tenant bigger than the whole pool (3,676 BLs on 4×256 columns)
+    // cannot become resident, but within the paging headroom the twin
+    // executes it anyway: a weight-stationary load-on-demand schedule
+    // streams each phase's columns into a scratch pool, the paging
+    // charge lands on `region_reload_cycles` analytically and on the
+    // twin mirror, and the forward still satisfies the compute-equality
+    // guarantee.
+    let spec_ = spec();
+    let fleet_cfg = FleetConfig {
+        execution: ExecutionMode::Twin,
+        ..cfg(EvictionPolicy::Lru)
+    };
+    let mut fleet = Fleet::new(&fleet_cfg, &spec_);
+    fleet.register("big", by_name("vgg9").unwrap().scaled(0.3), false).unwrap();
+    let entry_bls = fleet.registry().get("big").unwrap().bls_needed() as u64;
+    assert!(
+        entry_bls > (FLEET_MACROS * spec_.bitlines) as u64,
+        "tenant must exceed the pool ({entry_bls} BLs)"
+    );
+
+    let out = fleet.serve_batch("big", &[img(3)]).unwrap();
+    assert_eq!(out.classes.len(), 1);
+    assert!(out.logits[0].iter().all(|v| v.is_finite()));
+    assert!(!fleet.is_resident("big"), "paged tenants never become resident");
+
+    let snap = fleet.snapshot();
+    let cost = fleet.registry().get("big").unwrap().cost.clone();
+    let twin = MacroStats::aggregate(snap.twin_stats.iter());
+    // The twin genuinely executed the forward: every MAC ran (conversions
+    // are exact), and compute cycles are at least the analytic latency —
+    // segments that straddle a page/slot boundary split into extra
+    // evaluate steps, so the paged path can only pay *more* than the
+    // resident path's exact-equality bound, never less.
+    assert_eq!(twin.conversions, cost.macs as u64);
+    assert!(
+        twin.compute_cycles >= cost.computing_latency as u64,
+        "paged compute {} must cover the analytic latency {}",
+        twin.compute_cycles,
+        cost.computing_latency
+    );
+    // Paging charged exactly the footprint, mirrored on the twin ledger.
+    assert_eq!(snap.reload_cycles, entry_bls);
+    assert_eq!(snap.twin_load_cycles(), snap.reload_cycles);
+    assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+    assert_eq!(snap.reload_cycles, snap.tenant_load_cycles());
+    // Buffer ledger conserved for the paged path too.
+    assert!(snap.buffer_fleet.total() > 0);
+    assert_eq!(snap.buffer_twin, snap.buffer_fleet);
+    assert_eq!(snap.tenant_buffer(), snap.buffer_fleet);
+}

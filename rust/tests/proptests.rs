@@ -4,12 +4,14 @@
 
 use cim_adapt::arch::{by_name, vgg9, ConvLayer, LayerKind, ModelArch};
 use cim_adapt::cim::{Adc, CimMacro, WeightCell};
-use cim_adapt::config::{ExecutionMode, FleetConfig, MacroSpec, MorphConfig};
+use cim_adapt::config::{DataflowKind, ExecutionMode, FleetConfig, MacroSpec, MorphConfig};
 use cim_adapt::fleet::{
     plan_compaction, Fleet, HashRing, ModelWeights, Placement, QosClass, QosFleet, QosSpec,
     ShardedFleet,
 };
-use cim_adapt::latency::{layer_cost, model_cost, spans_reload_cycles};
+use cim_adapt::latency::{
+    layer_cost, model_buffer_traffic, model_cost, spans_reload_cycles, BufferTraffic,
+};
 use cim_adapt::mapping::{pack_model, FitPolicyKind, PlacedMapping, Region, RegionAllocator};
 use cim_adapt::morph::expand::search_expansion_ratio;
 use cim_adapt::obs::{FleetTrace, LedgerAuditor};
@@ -949,8 +951,9 @@ fn prop_trace_replay_reproduces_all_four_ledgers() {
     // Any interleaved submit/dispatch/compact script through a traced
     // rate-limited twin fleet: the LedgerAuditor — fed the event stream
     // online, or replaying the ring offline — re-derives every ledger
-    // (fleet, per-macro, per-tenant, twin) bit-exactly against the final
-    // snapshot, with a monotone clock and nothing dropped.
+    // (fleet, per-macro, per-tenant, twin, and the activation-buffer
+    // ledger) bit-exactly against the final snapshot, with a monotone
+    // clock and nothing dropped.
     let spec = MacroSpec::default();
     check(
         "trace replay reproduces all four ledgers",
@@ -994,12 +997,49 @@ fn prop_trace_replay_reproduces_all_four_ledgers() {
             let log = trace.log.lock().unwrap();
             let offline = LedgerAuditor::replay(log.events());
             let offline_report = offline.verify(&snap);
+            // Buffer-traffic conservation: the offline replay re-derives
+            // the same totals the fleet booked, every served image was
+            // twin-executed (fleet == twin), and the per-tenant split sums
+            // back to the fleet total.
+            let tenant_buffer_total = (0..3).fold(BufferTraffic::default(), |mut acc, i| {
+                acc.absorb(offline.tenant_buffer(&format!("m{i}")));
+                acc
+            });
             online.pass
                 && offline_report.pass
                 && log.dropped() == 0
                 && offline.fleet_load_cycles() == snap.reload_cycles
                 && offline.fleet_migration_cycles() == snap.migration_cycles
+                && offline.fleet_buffer() == snap.buffer_fleet
+                && offline.twin_buffer() == snap.buffer_twin
+                && snap.buffer_twin == snap.buffer_fleet
+                && tenant_buffer_total == snap.buffer_fleet
                 && offline.clock_regressions() == 0
+        },
+    );
+}
+
+#[test]
+fn prop_dataflow_buffer_order_holds_for_any_scale() {
+    // The closed-form buffer-traffic model, over arbitrary Stage-1
+    // scaling ratios: every loop ordering writes the same activation
+    // words (each output is produced exactly once), and reads are
+    // monotone — tap-reuse ≤ spatial-first ≤ pixel-first, with tap-reuse
+    // strictly winning whenever some layer has a >1×1 kernel overlap.
+    check(
+        "tap-reuse ≤ spatial-first ≤ pixel-first on the buffer ledger",
+        cases(40),
+        usizes(1..40),
+        |&pct| {
+            let arch = vgg9().scaled(pct as f64 / 100.0);
+            let pf = model_buffer_traffic(&arch, DataflowKind::PixelFirst);
+            let sf = model_buffer_traffic(&arch, DataflowKind::SpatialFirst);
+            let tr = model_buffer_traffic(&arch, DataflowKind::TapReuse);
+            pf.writes == sf.writes
+                && sf.writes == tr.writes
+                && tr.reads <= sf.reads
+                && sf.reads <= pf.reads
+                && tr.reads < pf.reads
         },
     );
 }

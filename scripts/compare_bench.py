@@ -141,6 +141,25 @@ EXACT_COUNTERS = {
         "shard_scenario.migration_win_cycles",
         "shard_scenario.audit_pass",
         "shard_scenario.deterministic",
+        # Dataflow scenario (PR 9): exact activation-buffer ledger counts
+        # per twin loop ordering (pure closed-form accounting over a fixed
+        # request script), plus the twin-vs-analytic compute equality,
+        # load-on-demand paging, steady-state allocation, audit and
+        # byte-determinism verdicts — all asserted in-bench before the
+        # summary is written, so a healthy run reads 1 (steady_allocs
+        # reads 0 by contract).
+        "dataflow_scenario.pixel_first.buffer_reads",
+        "dataflow_scenario.pixel_first.buffer_writes",
+        "dataflow_scenario.spatial_first.buffer_reads",
+        "dataflow_scenario.spatial_first.buffer_writes",
+        "dataflow_scenario.tap_reuse.buffer_reads",
+        "dataflow_scenario.tap_reuse.buffer_writes",
+        "dataflow_scenario.tap_reuse_win_reads",
+        "dataflow_scenario.twin_equals_analytic",
+        "dataflow_scenario.paged_executes",
+        "dataflow_scenario.steady_allocs",
+        "dataflow_scenario.audit_pass",
+        "dataflow_scenario.deterministic",
     ],
     # The coordinator-roundtrip counters flow through the threaded
     # batcher (batch formation is timing-dependent) and stay excluded.

@@ -64,6 +64,14 @@ def shard_arm(movement=84000, reload=84000, migration=0, transfer=0, transfers=0
     }
 
 
+def dataflow_arm(reads=125440, writes=107520, compute=44088):
+    return {
+        "buffer_reads": reads,
+        "buffer_writes": writes,
+        "twin_compute_cycles": compute,
+    }
+
+
 def fleet_summary(
     coresident_cycles=190,
     utilization=0.7421875,
@@ -120,6 +128,17 @@ def fleet_summary(
                 transfers=42,
             ),
             "migration_win_cycles": 43968,
+            "audit_pass": 1,
+            "deterministic": 1,
+        },
+        "dataflow_scenario": {
+            "pixel_first": dataflow_arm(reads=967680),
+            "spatial_first": dataflow_arm(reads=376320),
+            "tap_reuse": dataflow_arm(reads=125440),
+            "tap_reuse_win_reads": 842240,
+            "twin_equals_analytic": 1,
+            "paged_executes": 1,
+            "steady_allocs": 0,
             "audit_pass": 1,
             "deterministic": 1,
         },
@@ -329,6 +348,48 @@ class CompareBenchTest(unittest.TestCase):
         text = "\n".join(lines)
         self.assertIn("new counter, not compared", text)
         self.assertIn("shard_scenario.migration.transfer_cycles", text)
+        self.assertEqual(regressions, [])
+        self.assertEqual(exact, [])
+        self.write(self.base, "fleet", stale)
+        self.write(self.cur, "fleet", cur)
+        self.assertEqual(run_main(self.argv("--strict", "--strict-counters")), 0)
+
+    def test_dataflow_counter_drift_is_gated(self):
+        # The activation-buffer ledger counts per loop ordering, the
+        # twin-vs-analytic compute equality, the paging verdict, and the
+        # steady-state allocation count are exact counters: a changed
+        # buffer charge, a broken equality, or a reappearing steady-state
+        # allocation all trip CI.
+        self.write(self.base, "fleet", fleet_summary())
+        drifted = fleet_summary()
+        drifted["dataflow_scenario"]["tap_reuse"]["buffer_reads"] += 640
+        self.write(self.cur, "fleet", drifted)
+        self.assertEqual(run_main(self.argv()), 0, "print-only by default")
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+        broken_equality = fleet_summary()
+        broken_equality["dataflow_scenario"]["twin_equals_analytic"] = 0
+        self.write(self.cur, "fleet", broken_equality)
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+        leaked_alloc = fleet_summary()
+        leaked_alloc["dataflow_scenario"]["steady_allocs"] = 3
+        self.write(self.cur, "fleet", leaked_alloc)
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+        no_paging = fleet_summary()
+        no_paging["dataflow_scenario"]["paged_executes"] = 0
+        self.write(self.cur, "fleet", no_paging)
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+
+    def test_dataflow_counters_new_to_baseline_only_report(self):
+        # A baseline from before the dataflow work lacks dataflow_scenario
+        # entirely: current runs report the counters as new and CI stays
+        # green until the baseline is deliberately updated.
+        stale = fleet_summary()
+        del stale["dataflow_scenario"]
+        cur = fleet_summary()
+        lines, regressions, exact = cb.compare_one("fleet", cur, stale, 0.25)
+        text = "\n".join(lines)
+        self.assertIn("new counter, not compared", text)
+        self.assertIn("dataflow_scenario.tap_reuse.buffer_reads", text)
         self.assertEqual(regressions, [])
         self.assertEqual(exact, [])
         self.write(self.base, "fleet", stale)
