@@ -1,0 +1,128 @@
+//! Content-addressed weight pools: the shared-backbone story from
+//! `rust/README.md`'s "Content-addressed weight pools" section, on the
+//! deterministic core.
+//!
+//! One 108-column base plus `--heads` fine-tuned heads (same backbone
+//! cell-for-cell, divergent classifier) served round-robin on a 3-macro
+//! pool, once with private copies and once with content-addressed
+//! dedup. With private copies the family exceeds the pool and thrashes
+//! evictions; with dedup each head borrows the backbone by reference,
+//! pays only its delta, and the whole family stays resident. The same
+//! arms are the CI-gated `dedup_scenario.*` counters in
+//! `benches/micro_fleet.rs`.
+//!
+//! ```bash
+//! cargo run --release --example fleet_dedup -- --heads 16 --rounds 16
+//! ```
+
+use cim_adapt::arch::by_name;
+use cim_adapt::config::{FleetConfig, MacroSpec};
+use cim_adapt::data::SynthCifar;
+use cim_adapt::fleet::Fleet;
+use cim_adapt::obs::FleetTrace;
+use cim_adapt::util::cli::Args;
+use cim_adapt::util::commas;
+
+struct ArmReport {
+    reload_cycles: u64,
+    evictions: u64,
+    logical_bls: usize,
+    resident_bls: usize,
+    shared_bls: usize,
+    shared_cycles: u64,
+    ratio: f64,
+    audit_pass: bool,
+}
+
+/// One placement-mode arm. **Keep in sync with `dedup_backbone_mix` in
+/// `rust/benches/micro_fleet.rs`** — the bench is the CI-gated source
+/// of truth (exact counters in `BENCH_fleet.json`); this example
+/// mirrors it so the printed numbers match the README.
+fn run_arm(dedup: bool, heads: usize, rounds: usize) -> anyhow::Result<ArmReport> {
+    let spec = MacroSpec::default();
+    let cfg = FleetConfig {
+        num_macros: 3,
+        coresident: true,
+        dedup,
+        ..FleetConfig::default()
+    };
+    let trace = FleetTrace::default();
+    let mut fleet = Fleet::new(&cfg, &spec);
+    fleet.set_trace(Some(trace.sink()));
+    fleet.register("base", by_name("vgg9").unwrap().scaled(0.04), false)?;
+    let names: Vec<String> = std::iter::once("base".to_string())
+        .chain((0..heads).map(|i| format!("h{i:02}")))
+        .collect();
+    for n in &names[1..] {
+        fleet.register_derived(n, "base", false)?;
+    }
+    let batch = vec![SynthCifar::sample(3, 17).data];
+    for _ in 0..rounds {
+        for n in &names {
+            fleet.serve_batch(n, &batch)?;
+        }
+    }
+    let snap = fleet.snapshot();
+    anyhow::ensure!(snap.reload_cycles == snap.macro_load_cycles(), "per-macro view must agree");
+    anyhow::ensure!(snap.reload_cycles == snap.tenant_load_cycles(), "per-tenant view must agree");
+    let audit = trace.audit.lock().unwrap().verify(&snap);
+    anyhow::ensure!(audit.pass, "audit: {:?}", audit.first_divergence);
+    Ok(ArmReport {
+        reload_cycles: snap.reload_cycles,
+        evictions: snap.evictions,
+        logical_bls: snap.dedup_logical_bls,
+        resident_bls: snap.dedup_resident_bls(),
+        shared_bls: snap.dedup_shared_bls,
+        shared_cycles: snap.dedup_shared_cycles,
+        ratio: snap.dedup_ratio(),
+        audit_pass: audit.pass,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    cim_adapt::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    let heads = args.usize_or("heads", 16).max(1);
+    let rounds = args.usize_or("rounds", 16).max(1);
+
+    println!(
+        "dedup: one 108-column base + {heads} derived heads round-robin on a 3-macro \
+         (768-column) pool, {rounds} rounds under each placement mode\n"
+    );
+    let private = run_arm(false, heads, rounds)?;
+    let shared = run_arm(true, heads, rounds)?;
+    println!(
+        "{:<22} {:>16} {:>12} {:>22}",
+        "placement", "reload cycles", "evictions", "five-view audit"
+    );
+    for (label, a) in [("private copies", &private), ("content-addressed", &shared)] {
+        println!(
+            "{:<22} {:>16} {:>12} {:>22}",
+            label,
+            commas(a.reload_cycles),
+            a.evictions,
+            if a.audit_pass { "PASS" } else { "FAIL" }
+        );
+    }
+    anyhow::ensure!(
+        shared.reload_cycles < private.reload_cycles,
+        "dedup must strictly beat private-copy placement on reload cycles"
+    );
+    anyhow::ensure!(shared.evictions == 0, "the deduped family must fit without evictions");
+    anyhow::ensure!(shared.ratio > 1.0, "the shared backbone must multiply capacity");
+    anyhow::ensure!(private.logical_bls == 0, "dedup stats must stay zero with dedup off");
+    println!(
+        "\ndedup keeps {} logical bitlines resident in {} physical ({:.2}x) — {} borrowed \
+         by reference, {} reload cycles avoided — and cuts charged reloads {} -> {} \
+         ({:.1}x fewer).",
+        commas(shared.logical_bls as u64),
+        commas(shared.resident_bls as u64),
+        shared.ratio,
+        commas(shared.shared_bls as u64),
+        commas(shared.shared_cycles),
+        commas(private.reload_cycles),
+        commas(shared.reload_cycles),
+        private.reload_cycles as f64 / shared.reload_cycles.max(1) as f64
+    );
+    Ok(())
+}

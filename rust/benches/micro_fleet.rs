@@ -9,6 +9,13 @@
 //! the defrag win asserted in twin cycles (fewer spans per tenant, fewer
 //! load events, lower load+migration+pass total).
 //!
+//! The `dedup_scenario` arm runs the shared-backbone family (one base +
+//! 16 derived heads) with and without content-addressed dedup: the
+//! deduped pool must fit the whole family and sustain strictly fewer
+//! reload cycles than private-copy placement, with the five-view audit
+//! (four cycle ledgers + shared-span re-derivation) passing and the
+//! counters byte-deterministic.
+//!
 //! Emits `BENCH_fleet.json` (see `report::write_bench_summary`) so the
 //! perf trajectory is tracked across PRs.
 
@@ -434,6 +441,83 @@ fn shard_json(r: &ShardRun) -> Json {
         .with("max_pressure", r.max_pressure)
 }
 
+/// Outcome of the shared-backbone scenario under one placement mode —
+/// all deterministic counters.
+struct DedupRun {
+    reload_cycles: u64,
+    evictions: u64,
+    /// Logical bitlines resident tenants would need as private copies
+    /// (0 with dedup off).
+    logical_bls: usize,
+    /// Physical bitlines actually resident under dedup.
+    resident_bls: usize,
+    shared_bls: usize,
+    shared_cycles: u64,
+    ratio: f64,
+    /// Online five-view audit: four cycle ledgers plus the shared-span
+    /// re-derivation from SharedLoad/SharedRelease events.
+    audit_pass: bool,
+    /// Full snapshot serialization, byte-compared for the determinism
+    /// gate.
+    counters: String,
+}
+
+/// One shared base (108-column vgg9) plus 16 fine-tuned heads — same
+/// backbone cell-for-cell, divergent classifier — round-robin on a
+/// **3-macro** (768-column) pool. With private copies the 17 tenants
+/// need 17 × 108 = 1836 columns and thrash evictions every round; with
+/// content-addressed dedup each head borrows the backbone by reference
+/// and keeps only its delta resident, so the whole family fits and
+/// steady state reloads nothing.
+fn dedup_backbone_mix(dedup: bool, rounds: usize) -> DedupRun {
+    let spec = MacroSpec::default();
+    let fleet_cfg = FleetConfig {
+        num_macros: 3,
+        coresident: true,
+        dedup,
+        ..cfg(3)
+    };
+    let trace = FleetTrace::default();
+    let mut fleet = Fleet::new(&fleet_cfg, &spec);
+    fleet.set_trace(Some(trace.sink()));
+    fleet
+        .register("base", by_name("vgg9").unwrap().scaled(0.04), false)
+        .unwrap();
+    let names: Vec<String> = std::iter::once("base".to_string())
+        .chain((0..16).map(|i| format!("h{i:02}")))
+        .collect();
+    for n in &names[1..] {
+        fleet.register_derived(n, "base", false).unwrap();
+    }
+    let batch = vec![SynthCifar::sample(3, 17).data];
+    for _ in 0..rounds {
+        for n in &names {
+            fleet.serve_batch(n, &batch).unwrap();
+        }
+    }
+    let snap = fleet.snapshot();
+    // Four-ledger conservation holds with or without borrowing.
+    assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+    assert_eq!(snap.reload_cycles, snap.tenant_load_cycles());
+    let audit = trace.audit.lock().unwrap().verify(&snap);
+    assert!(
+        audit.pass,
+        "online audit must re-derive every view: {:?}",
+        audit.first_divergence
+    );
+    DedupRun {
+        reload_cycles: snap.reload_cycles,
+        evictions: snap.evictions,
+        logical_bls: snap.dedup_logical_bls,
+        resident_bls: snap.dedup_resident_bls(),
+        shared_bls: snap.dedup_shared_bls,
+        shared_cycles: snap.dedup_shared_cycles,
+        ratio: snap.dedup_ratio(),
+        audit_pass: audit.pass,
+        counters: snap.to_json().dump(),
+    }
+}
+
 /// Run an alternating primary/co request mix on a deterministic core and
 /// return total reload cycles.
 fn reload_cycles_under_mix(
@@ -811,6 +895,64 @@ fn main() {
         "the same shard scenario twice must produce byte-identical counters"
     );
 
+    // --- content-addressed dedup: shared backbone + 16 heads --------------
+    // Identical round-robin script; only the placement mode changes.
+    // Private copies can't fit the family (1836 of 768 columns) and
+    // thrash; dedup keeps one backbone copy plus per-head deltas
+    // resident, so the same mix sustains strictly fewer reload cycles.
+    let dd_private = dedup_backbone_mix(false, rounds);
+    let dd_shared = dedup_backbone_mix(true, rounds);
+    let dd_repeat = dedup_backbone_mix(true, rounds);
+    r.table(&format!(
+        "dedup scenario over {rounds} rounds, 1 base + 16 heads on 3 macros: private {} \
+         reload cycles ({} evictions) | dedup {} ({} evictions, {} logical bitlines in {} \
+         physical = {:.2}x, {} borrowed, {} cycles avoided)",
+        dd_private.reload_cycles,
+        dd_private.evictions,
+        dd_shared.reload_cycles,
+        dd_shared.evictions,
+        dd_shared.logical_bls,
+        dd_shared.resident_bls,
+        dd_shared.ratio,
+        dd_shared.shared_bls,
+        dd_shared.shared_cycles
+    ));
+    assert!(
+        dd_shared.reload_cycles < dd_private.reload_cycles,
+        "dedup must strictly beat private-copy placement on total reload cycles ({} vs {})",
+        dd_shared.reload_cycles,
+        dd_private.reload_cycles
+    );
+    assert!(
+        dd_shared.ratio > 1.0,
+        "the shared backbone must multiply capacity (ratio {:.3})",
+        dd_shared.ratio
+    );
+    assert!(
+        dd_shared.resident_bls < dd_shared.logical_bls,
+        "physical residency must undercut the logical footprint ({} vs {})",
+        dd_shared.resident_bls,
+        dd_shared.logical_bls
+    );
+    assert_eq!(
+        dd_shared.evictions, 0,
+        "the deduped family must fit the pool without evictions"
+    );
+    assert!(
+        dd_shared.shared_bls > 0 && dd_shared.shared_cycles > 0,
+        "the win must come from live borrowed spans"
+    );
+    assert_eq!(dd_private.logical_bls, 0, "dedup stats stay zero with dedup off");
+    assert!(
+        dd_shared.audit_pass && dd_private.audit_pass,
+        "the five-view audit must pass in both arms"
+    );
+    let dd_deterministic = dd_shared.counters == dd_repeat.counters;
+    assert!(
+        dd_deterministic,
+        "the same dedup scenario twice must produce byte-identical counters"
+    );
+
     // Twin forward throughput on a resident tenant (timing only).
     {
         let spec_ = MacroSpec::default();
@@ -1022,6 +1164,36 @@ fn main() {
                 )
                 .with("audit_pass", 1u64)
                 .with("deterministic", u64::from(shard_deterministic)),
+        )
+        // Dedup arms: exact reload/footprint counters per placement
+        // mode, plus the audit/determinism verdicts as 0/1 counters
+        // (same contract as trace_scenario: the asserts above abort the
+        // bench before this summary is written, so a committed baseline
+        // always reads 1).
+        .with(
+            "dedup_scenario",
+            Json::obj()
+                .with("rounds", rounds)
+                .with("heads", 16)
+                .with(
+                    "private",
+                    Json::obj().with("reload_cycles", dd_private.reload_cycles),
+                )
+                .with(
+                    "dedup",
+                    Json::obj()
+                        .with("reload_cycles", dd_shared.reload_cycles)
+                        .with("logical_bls", dd_shared.logical_bls)
+                        .with("resident_bls", dd_shared.resident_bls)
+                        .with("shared_bls", dd_shared.shared_bls)
+                        .with("shared_cycles", dd_shared.shared_cycles),
+                )
+                .with(
+                    "dedup_win_cycles",
+                    dd_private.reload_cycles - dd_shared.reload_cycles,
+                )
+                .with("audit_pass", 1u64)
+                .with("deterministic", u64::from(dd_deterministic)),
         )
         // Dataflow arms: exact buffer-ledger counters per loop ordering,
         // plus the equality/paging/allocation verdicts as 0/1 counters

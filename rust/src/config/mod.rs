@@ -410,6 +410,13 @@ pub struct FleetConfig {
     /// granularity so two tenants can share one macro's spare columns.
     /// Off = the degenerate whole-macro placement (region = full macro).
     pub coresident: bool,
+    /// Content-addressed cross-tenant weight dedup (`cim-adapt fleet
+    /// --dedup`): identical packed columns across tenants map to one
+    /// resident copy with a refcount; a hot-swap only reloads the
+    /// tenant's *delta* columns and shared spans are pinned against
+    /// eviction while any holder is resident. Implies co-resident
+    /// (region-granular) placement and materialized weight columns.
+    pub dedup: bool,
     /// Online-defrag trigger (`cim-adapt fleet --defrag`): when > 0 and
     /// a hot-swap is imminent on the resident path, the fleet compacts
     /// the pool first if its fragmentation score exceeds this threshold.
@@ -476,6 +483,7 @@ impl Default for FleetConfig {
             policy: EvictionPolicy::Lru,
             fit: FitPolicyKind::FirstFit,
             coresident: false,
+            dedup: false,
             defrag_threshold: 0.0,
             execution: ExecutionMode::Analytic,
             dataflow: DataflowKind::TapReuse,
@@ -503,6 +511,7 @@ impl FleetConfig {
             .with("policy", self.policy.as_str())
             .with("fit", self.fit.as_str())
             .with("coresident", self.coresident)
+            .with("dedup", self.dedup)
             .with("defrag_threshold", self.defrag_threshold)
             .with("execution", self.execution.as_str())
             .with("dataflow", self.dataflow.as_str())
@@ -545,6 +554,7 @@ impl FleetConfig {
                 .and_then(FitPolicyKind::parse)
                 .unwrap_or(d.fit),
             coresident: j.get("coresident").as_bool().unwrap_or(d.coresident),
+            dedup: j.get("dedup").as_bool().unwrap_or(d.dedup),
             defrag_threshold: j
                 .get("defrag_threshold")
                 .as_f64()
@@ -705,6 +715,7 @@ mod tests {
         c.policy = EvictionPolicy::CostWeighted;
         c.fit = FitPolicyKind::BestFit;
         c.coresident = true;
+        c.dedup = true;
         c.defrag_threshold = 0.35;
         c.execution = ExecutionMode::Twin;
         c.dataflow = DataflowKind::PixelFirst;
@@ -730,6 +741,7 @@ mod tests {
         // execution, first-fit, defrag off.
         let j = Json::parse(r#"{"num_macros": 8}"#).unwrap();
         assert!(!FleetConfig::from_json(&j).coresident);
+        assert!(!FleetConfig::from_json(&j).dedup, "dedup defaults off");
         assert_eq!(FleetConfig::from_json(&j).execution, ExecutionMode::Analytic);
         assert_eq!(FleetConfig::from_json(&j).fit, FitPolicyKind::FirstFit);
         assert_eq!(FleetConfig::from_json(&j).defrag_threshold, 0.0);

@@ -18,8 +18,14 @@
 //! repeatedly and stops as soon as enough bitline *columns* are free —
 //! it never rounds the demand up to whole macros — and candidates expose
 //! their column footprint (`bls_held`) so policies can minimize
-//! over-eviction. Pinned models are excluded from candidacy by the placer
-//! before the policy ever sees them.
+//! over-eviction. Two classes of resident are excluded from candidacy by
+//! the placer before the policy ever sees them: explicitly **pinned**
+//! models, and — under content-addressed dedup — tenants whose columns
+//! carry a **live refcount** (another resident tenant borrows a shared
+//! span, so freeing the owner would invalidate the borrower's weights;
+//! see [`ColumnStore::pinned_owners`](super::registry::ColumnStore::pinned_owners)).
+//! The stop condition is therefore: enough columns free *among residents
+//! holding neither a pin nor a live reference*.
 
 /// Which victim-selection rule the fleet uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -72,13 +78,19 @@ pub struct VictimCandidate {
 /// Victim selection over the placer's candidates. Implementations must be
 /// deterministic for a given candidate set (fleet replays are bit-stable)
 /// and pick *one* victim per call; the placer re-invokes until enough
-/// columns are free.
+/// columns are free among the candidates it may legally take — pinned
+/// tenants and (under dedup) owners of live refcounted shared spans are
+/// filtered out before `choose` is called, so a policy never has to
+/// reason about reference lifetimes itself.
 pub trait Evictor {
     /// Pick the next victim, or `None` when there are no candidates.
     fn choose<'a>(&self, candidates: &'a [VictimCandidate]) -> Option<&'a VictimCandidate>;
 }
 
-/// The built-in [`EvictionPolicy`] rules as an [`Evictor`].
+/// The built-in [`EvictionPolicy`] rules as an [`Evictor`]. Both rules
+/// rank whatever candidate set the placer hands them — which already
+/// excludes pinned and refcount-pinned tenants — so LRU here means
+/// "stalest *evictable*", not "stalest resident".
 #[derive(Debug, Clone, Copy)]
 pub struct PolicyEvictor {
     /// Which built-in rule to apply.

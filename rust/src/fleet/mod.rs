@@ -9,6 +9,14 @@
 //! * [`registry`] — register/retire model variants with their
 //!   [`mapping`](crate::mapping) footprints and
 //!   [`latency`](crate::latency) cost profiles ([`ModelRegistry`]).
+//!   With dedup enabled (`FleetConfig::dedup`, `cim-adapt fleet
+//!   --dedup`) the registry layer also hosts the **content-addressed
+//!   column store** ([`ColumnStore`], [`column_hash`]): identical packed
+//!   columns across tenants — the "one shared base + many fine-tuned
+//!   heads" shape produced by [`ModelRegistry::register_derived`] — map
+//!   to one refcounted resident copy, a hot-swap reloads only the
+//!   tenant's *delta* columns, and owners of borrowed spans are pinned
+//!   against eviction while any holder is resident.
 //! * [`placer`] — reload-aware bin-packing of footprints onto physical
 //!   macros at **bitline-region granularity**
 //!   ([`Region`](crate::mapping::Region)): with co-residency enabled two
@@ -80,7 +88,13 @@
 //! attribution — reload cost is only ever charged through a macro, and
 //! every charge names the tenant that incurred it. Migration cycles obey
 //! the same conservation law on their own ledger (fleet total = Σ
-//! per-macro = Σ per-tenant = twin `migration_cycles`).
+//! per-macro = Σ per-tenant = twin `migration_cycles`). Refcounted
+//! shared spans extend rather than bend this law: the **first loader**
+//! of a column pays its full reload charge on all four ledgers, a
+//! borrower pays nothing anywhere (the avoided cycles are tracked
+//! separately as `FleetSnapshot::dedup_shared_cycles` and re-derived by
+//! the auditor from `SharedLoad`/`SharedRelease` events), so the four
+//! views stay equal with no fractional charges to round.
 //!
 //! The operational payoff of compression, demonstrated by
 //! `benches/micro_fleet.rs`: a morphed model fits where its uncompressed
@@ -106,7 +120,7 @@ pub use qos::{
     Admission, DispatchEstimate, QosClass, QosFleet, QosScheduler, QosSpec, QosTenantStats,
     RejectReason, SchedMode,
 };
-pub use registry::{ModelEntry, ModelRegistry, ModelWeights};
+pub use registry::{column_hash, column_hash_seeded, ColumnStore, ModelEntry, ModelRegistry, ModelWeights, SharedHit};
 pub use server::{
     BatchOutcome, BatchPlan, Fleet, FleetHandle, FleetServer, FleetSnapshot, ForwardJob,
     ForwardOutput,

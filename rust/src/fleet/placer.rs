@@ -25,7 +25,7 @@
 //! region-granular evictions chosen by the [`Evictor`] — only as many
 //! columns as needed, never touching pinned tenants.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::config::MacroSpec;
 use crate::latency::spans_reload_cycles;
@@ -255,10 +255,23 @@ impl Placer {
     /// Evict every non-pinned resident (used before paging an oversized
     /// model through the pool). Returns the victims in eviction order.
     pub fn evict_all_evictable(&mut self, registry: &ModelRegistry) -> Vec<String> {
+        self.evict_all_evictable_except(registry, &BTreeSet::new())
+    }
+
+    /// [`Placer::evict_all_evictable`] that additionally spares
+    /// `extra_pinned` — the dedup fleet passes the owners of live
+    /// refcounted spans ([`ColumnStore::pinned_owners`](super::registry::ColumnStore::pinned_owners)),
+    /// which must survive any sweep while a borrower is resident.
+    pub fn evict_all_evictable_except(
+        &mut self,
+        registry: &ModelRegistry,
+        extra_pinned: &BTreeSet<String>,
+    ) -> Vec<String> {
         let victims: Vec<String> = self
             .resident
             .keys()
             .filter(|n| !registry.get(n).map(|e| e.pinned).unwrap_or(false))
+            .filter(|n| !extra_pinned.contains(*n))
             .cloned()
             .collect();
         for v in &victims {
@@ -429,6 +442,115 @@ impl Placer {
             evicted,
             regions,
         })
+    }
+
+    /// Dedup-aware placement: allocate only `entry`'s **delta** footprint
+    /// (`delta_bls` columns — the columns no other resident tenant
+    /// already holds content-identical copies of), evicting per `evictor`
+    /// as needed while sparing `extra_pinned` — the owners of refcounted
+    /// shared spans, whose columns the caller is about to borrow and
+    /// which must therefore survive this placement's evictions.
+    ///
+    /// Requires region (co-resident) mode — dedup composes sub-macro
+    /// spans by construction — and a non-resident `entry` with
+    /// `delta_bls > 0` (the caller short-circuits full-borrow hits).
+    /// The placer records only the delta regions as `entry`'s residency:
+    /// borrowed spans belong to their owners' ledgers and are released
+    /// by dropping the refcount, never through [`Placer::release`].
+    pub fn place_delta(
+        &mut self,
+        entry: &ModelEntry,
+        registry: &ModelRegistry,
+        evictor: &dyn Evictor,
+        spec: &MacroSpec,
+        delta_bls: usize,
+        extra_pinned: &BTreeSet<String>,
+    ) -> anyhow::Result<SwapEvent> {
+        assert!(self.coresident, "dedup placement requires region mode");
+        assert!(delta_bls > 0, "zero-delta placements are residency hits");
+        assert!(
+            !self.resident.contains_key(&entry.name),
+            "place_delta on already-resident '{}'",
+            entry.name
+        );
+        anyhow::ensure!(
+            delta_bls <= self.pool_bls(),
+            "model '{}' needs {} delta bitlines but the pool has {}",
+            entry.name,
+            delta_bls,
+            self.pool_bls()
+        );
+        let protected = |n: &str| {
+            registry.get(n).map(|e| e.pinned).unwrap_or(false) || extra_pinned.contains(n)
+        };
+        let protected_bls: usize = self
+            .resident
+            .iter()
+            .filter(|(n, _)| protected(n))
+            .flat_map(|(_, regions)| regions.iter())
+            .map(|r| r.bl_count)
+            .sum();
+        anyhow::ensure!(
+            self.pool_bls() - protected_bls >= delta_bls,
+            "cannot place '{}': pinned/shared residents leave too little reclaimable room ({} of {} bitlines free)",
+            entry.name,
+            self.free_bls(),
+            self.pool_bls()
+        );
+        let mut evicted = Vec::new();
+        while self.alloc.free_bls() < delta_bls {
+            let candidates: Vec<VictimCandidate> = self
+                .resident
+                .iter()
+                .filter(|(n, _)| !protected(n))
+                .map(|(n, regions)| VictimCandidate {
+                    name: n.clone(),
+                    last_used: self.last_used.get(n).copied().unwrap_or(0),
+                    reload_cycles: spans_reload_cycles(regions.iter().map(|r| r.bl_count), spec),
+                    macros_held: distinct_macros(regions).len(),
+                    bls_held: regions.iter().map(|r| r.bl_count).sum(),
+                })
+                .collect();
+            let victim = evictor.choose(&candidates).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "cannot place '{}': no evictable resident left ({} of {} bitlines free)",
+                    entry.name,
+                    self.free_bls(),
+                    self.pool_bls()
+                )
+            })?;
+            let name = victim.name.clone();
+            self.release(&name);
+            evicted.push(name);
+        }
+        let prefs = self.history.get(&entry.name).cloned().unwrap_or_default();
+        let hints = FitHints {
+            preferred_macros: &prefs,
+        };
+        let regions = self
+            .alloc
+            .alloc_with(self.fit.as_ref(), delta_bls, &hints)
+            .expect("free_bls loop guaranteed capacity");
+        self.resident.insert(entry.name.clone(), regions.clone());
+        self.history
+            .insert(entry.name.clone(), distinct_macros(&regions));
+        self.touch(&entry.name);
+        Ok(SwapEvent {
+            model: entry.name.clone(),
+            hot_swap: true,
+            evicted,
+            regions,
+        })
+    }
+
+    /// Record a zero-footprint residency for `entry` — every one of its
+    /// columns is borrowed from other tenants' resident copies, so it
+    /// holds no regions of its own but must still count as resident
+    /// (recency, eviction candidacy, release bookkeeping).
+    pub fn place_borrowed_only(&mut self, name: &str) {
+        assert!(self.coresident, "dedup placement requires region mode");
+        self.resident.insert(name.to_string(), Vec::new());
+        self.touch(name);
     }
 
     /// Apply a compaction plan's relocations: every named tenant must be
@@ -705,6 +827,81 @@ mod tests {
         placer.release("b");
         assert_eq!(placer.free_macro_count(), 1, "freed spans coalesce");
         assert_eq!(placer.free_bls(), 256);
+    }
+
+    // ---- dedup (delta) placement -------------------------------------------
+
+    #[test]
+    fn place_delta_allocates_only_the_delta_and_spares_shared_owners() {
+        // a (108) + b (82) fill macro 0 to 190/256. Placing c's 100-column
+        // delta needs an eviction; LRU would pick a (stalest), but a owns
+        // refcounted shared spans, so the sweep must take b instead.
+        let (reg, mut placer) = region_setup(1, &[("a", 0.04), ("b", 0.03), ("c", 0.04)]);
+        place(&mut placer, &reg, "a", EvictionPolicy::Lru).unwrap();
+        place(&mut placer, &reg, "b", EvictionPolicy::Lru).unwrap();
+        let pinned: BTreeSet<String> = ["a".to_string()].into_iter().collect();
+        let ev = placer
+            .place_delta(
+                reg.get("c").unwrap(),
+                &reg,
+                &PolicyEvictor::new(EvictionPolicy::Lru),
+                reg.spec(),
+                100,
+                &pinned,
+            )
+            .unwrap();
+        assert!(ev.hot_swap);
+        assert_eq!(ev.evicted, vec!["b".to_string()]);
+        assert_eq!(ev.regions.iter().map(|r| r.bl_count).sum::<usize>(), 100);
+        assert!(placer.is_resident("a"), "refcount-pinned owner survives");
+        assert!(placer.is_resident("c"));
+        assert_eq!(placer.resident_regions("c").unwrap(), ev.regions.as_slice());
+    }
+
+    #[test]
+    fn place_delta_fails_fast_when_shared_owners_block_the_room() {
+        // With both residents protected there is no reclaimable room for
+        // a 100-column delta — the placement must error without evicting.
+        let (reg, mut placer) = region_setup(1, &[("a", 0.04), ("b", 0.03), ("c", 0.04)]);
+        place(&mut placer, &reg, "a", EvictionPolicy::Lru).unwrap();
+        place(&mut placer, &reg, "b", EvictionPolicy::Lru).unwrap();
+        let pinned: BTreeSet<String> =
+            ["a".to_string(), "b".to_string()].into_iter().collect();
+        let err = placer
+            .place_delta(
+                reg.get("c").unwrap(),
+                &reg,
+                &PolicyEvictor::new(EvictionPolicy::Lru),
+                reg.spec(),
+                100,
+                &pinned,
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("reclaimable"), "{err}");
+        assert!(placer.is_resident("a") && placer.is_resident("b"));
+    }
+
+    #[test]
+    fn borrowed_only_residency_holds_no_columns() {
+        let (reg, mut placer) = region_setup(1, &[("a", 0.04)]);
+        place(&mut placer, &reg, "a", EvictionPolicy::Lru).unwrap();
+        let before = placer.free_bls();
+        placer.place_borrowed_only("head");
+        assert!(placer.is_resident("head"));
+        assert_eq!(placer.free_bls(), before, "borrow-only placement is free");
+        assert_eq!(placer.release("head"), Vec::new());
+        assert!(!placer.is_resident("head"));
+    }
+
+    #[test]
+    fn evict_all_evictable_except_spares_shared_owners() {
+        let (reg, mut placer) = region_setup(1, &[("a", 0.04), ("b", 0.03)]);
+        place(&mut placer, &reg, "a", EvictionPolicy::Lru).unwrap();
+        place(&mut placer, &reg, "b", EvictionPolicy::Lru).unwrap();
+        let pinned: BTreeSet<String> = ["a".to_string()].into_iter().collect();
+        let victims = placer.evict_all_evictable_except(&reg, &pinned);
+        assert_eq!(victims, vec!["b".to_string()]);
+        assert!(placer.is_resident("a"));
     }
 
     // ---- fit policies, affinity history, relocation ------------------------

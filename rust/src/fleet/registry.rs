@@ -14,8 +14,19 @@
 //! to the macro's cell precision, sliced into one `Vec<WeightCell>` per
 //! logical bitline column in packing order. Hot-swaps stream these
 //! columns into the twin's macros without re-quantizing anything.
+//!
+//! With deduplication enabled (`FleetConfig::dedup`) the registry layer
+//! also hosts the **content-addressed column store** ([`ColumnStore`]):
+//! every resident tenant's packed columns are indexed by an
+//! order-invariant FNV-1a content hash ([`column_hash`]), so identical
+//! columns across tenants — the "one shared base + many fine-tuned
+//! heads" fleet shape, produced by
+//! [`ModelRegistry::register_derived`] — map to one physical resident
+//! copy with a refcount (the slot's holder set). Hash buckets keep the
+//! full column cells and fall back to an exact comparison on lookup, so
+//! a hash collision can never alias two different columns.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
 use crate::arch::ModelArch;
@@ -46,6 +57,198 @@ fn name_seed(name: &str) -> u64 {
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
     h
+}
+
+/// Content hash of one packed weight column: the FNV-1a digest of each
+/// cell's bits, combined **order-invariantly** (wrapping sum) within the
+/// column. Equal columns always hash equal; flipping any single cell
+/// changes exactly one term and therefore the hash. Order-invariance is
+/// deliberate: permutations of the same multiset of cells collide, which
+/// keeps the collision fall-back path (exact cell comparison in
+/// [`ColumnStore`]) permanently exercised instead of theoretical.
+pub fn column_hash(col: &[WeightCell]) -> u64 {
+    column_hash_seeded(col, 0)
+}
+
+/// [`column_hash`] with a perturbed FNV offset basis. The store's seed
+/// reshuffles every bucket key; tests use it to prove that lookups are
+/// decided by the cell-exact comparison, never by the hash alone.
+pub fn column_hash_seeded(col: &[WeightCell], seed: u64) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut sum = OFFSET ^ seed;
+    for cell in col {
+        let mut h = OFFSET ^ seed;
+        h ^= cell.w as u8 as u64;
+        h = h.wrapping_mul(PRIME);
+        sum = sum.wrapping_add(h);
+    }
+    sum
+}
+
+/// Where one shared (deduplicated) column physically lives.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SharedHit {
+    /// Macro holding the resident copy.
+    pub macro_id: usize,
+    /// Physical bitline of the resident copy.
+    pub bl: usize,
+    /// Tenant that owns (first loaded) the copy.
+    pub owner: String,
+}
+
+/// One resident column the store indexes.
+#[derive(Debug, Clone)]
+struct StoreSlot {
+    owner: String,
+    macro_id: usize,
+    bl: usize,
+    /// Borrowing tenants (never contains the owner). While non-empty the
+    /// owner's spans are pinned against eviction and retirement.
+    holders: BTreeSet<String>,
+    /// Full cell content, kept for the collision fall-back comparison.
+    content: Vec<WeightCell>,
+}
+
+/// The content-addressed index over every **resident** tenant's packed
+/// weight columns: hash → slots holding that content, each with its
+/// physical location, owning tenant, and the set of borrowers currently
+/// holding a reference.
+///
+/// The store is a pure index — it never touches macros or ledgers. The
+/// fleet inserts a tenant's owned columns when the tenant becomes
+/// resident, acquires references for borrowed (deduplicated) columns,
+/// and releases everything when the tenant leaves. Lookups resolve by
+/// content equality inside the hash bucket, so colliding hashes (which
+/// the order-invariant [`column_hash`] produces for any permutation of a
+/// column) can never silently alias distinct columns.
+#[derive(Debug, Clone, Default)]
+pub struct ColumnStore {
+    buckets: BTreeMap<u64, Vec<StoreSlot>>,
+    seed: u64,
+}
+
+impl ColumnStore {
+    /// An empty store with the default hash seed.
+    pub fn new() -> ColumnStore {
+        ColumnStore::default()
+    }
+
+    /// An empty store hashing with a perturbed basis (test hook: any
+    /// seed must produce identical dedup decisions, because content
+    /// comparison — not the hash — is the arbiter).
+    pub fn with_seed(seed: u64) -> ColumnStore {
+        ColumnStore {
+            seed,
+            ..ColumnStore::default()
+        }
+    }
+
+    fn slot_matching<'a>(&'a self, col: &[WeightCell]) -> Option<&'a StoreSlot> {
+        self.buckets
+            .get(&column_hash_seeded(col, self.seed))?
+            .iter()
+            .find(|s| s.content == col)
+    }
+
+    /// The resident copy of `col`, if any tenant currently holds one —
+    /// resolved by exact cell comparison within the hash bucket.
+    pub fn lookup(&self, col: &[WeightCell]) -> Option<SharedHit> {
+        self.slot_matching(col).map(|s| SharedHit {
+            macro_id: s.macro_id,
+            bl: s.bl,
+            owner: s.owner.clone(),
+        })
+    }
+
+    /// Register `owner`'s freshly loaded column at (`macro_id`, `bl`).
+    pub fn insert(&mut self, owner: &str, macro_id: usize, bl: usize, col: &[WeightCell]) {
+        self.buckets
+            .entry(column_hash_seeded(col, self.seed))
+            .or_default()
+            .push(StoreSlot {
+                owner: owner.to_string(),
+                macro_id,
+                bl,
+                holders: BTreeSet::new(),
+                content: col.to_vec(),
+            });
+    }
+
+    /// Take a reference on the resident copy of `col` for `borrower`.
+    /// Returns the hit, or `None` when no *other* tenant holds the
+    /// content (a tenant never borrows from itself).
+    pub fn acquire(&mut self, borrower: &str, col: &[WeightCell]) -> Option<SharedHit> {
+        let seed = self.seed;
+        let slot = self
+            .buckets
+            .get_mut(&column_hash_seeded(col, seed))?
+            .iter_mut()
+            .find(|s| s.owner != borrower && s.content == col)?;
+        slot.holders.insert(borrower.to_string());
+        Some(SharedHit {
+            macro_id: slot.macro_id,
+            bl: slot.bl,
+            owner: slot.owner.clone(),
+        })
+    }
+
+    /// Drop every trace of `name`: its borrowed references on other
+    /// tenants' slots, and the slots it owns. Returns the number of
+    /// owned slots removed. Owned slots must have no live holders when
+    /// this is called — the placer's live-ref pinning guarantees it for
+    /// evictions, and `Fleet::retire` refuses otherwise.
+    pub fn release(&mut self, name: &str) -> usize {
+        let mut removed = 0usize;
+        self.buckets.retain(|_, slots| {
+            slots.retain_mut(|s| {
+                s.holders.remove(name);
+                if s.owner == name {
+                    debug_assert!(
+                        s.holders.is_empty(),
+                        "released owner '{name}' still has holders {:?}",
+                        s.holders
+                    );
+                    removed += 1;
+                    false
+                } else {
+                    true
+                }
+            });
+            !slots.is_empty()
+        });
+        removed
+    }
+
+    /// Whether any slot owned by `name` is currently borrowed by another
+    /// resident tenant (a live reference that pins `name` in place).
+    pub fn has_external_holders(&self, name: &str) -> bool {
+        self.buckets
+            .values()
+            .flatten()
+            .any(|s| s.owner == name && !s.holders.is_empty())
+    }
+
+    /// Owners whose slots carry live references from other tenants —
+    /// the set the placer must exclude from eviction candidacy.
+    pub fn pinned_owners(&self) -> BTreeSet<String> {
+        self.buckets
+            .values()
+            .flatten()
+            .filter(|s| !s.holders.is_empty())
+            .map(|s| s.owner.clone())
+            .collect()
+    }
+
+    /// Physical (deduplicated) columns currently resident in the store.
+    pub fn resident_columns(&self) -> usize {
+        self.buckets.values().map(|b| b.len()).sum()
+    }
+
+    /// Whether the store indexes nothing.
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
 }
 
 impl ModelWeights {
@@ -88,6 +291,46 @@ impl ModelWeights {
             }
         }
         ModelWeights { columns, steps }
+    }
+
+    /// Derive a fine-tuned head from `base`: clone every column, then
+    /// re-synthesize only the **last mapped layer** (the classifier head)
+    /// under `name`'s own seed. The result shares the base's backbone
+    /// columns cell-for-cell — exactly the content the [`ColumnStore`]
+    /// deduplicates — while the head columns (and the head's LSQ step)
+    /// diverge per tenant. Deterministic in `name`, like
+    /// [`ModelWeights::synthesize`].
+    pub fn derive_head(
+        name: &str,
+        base: &ModelWeights,
+        mapping: &ModelMapping,
+        spec: &MacroSpec,
+    ) -> ModelWeights {
+        assert_eq!(mapping.base_bl, 0, "weights are cached in canonical packing order");
+        let mut w = base.clone();
+        let lm = mapping
+            .layers
+            .last()
+            .expect("a mapped model has at least one layer");
+        let mut lr = Pcg::new(name_seed(name)).fork(lm.layer as u64);
+        let layer_floats: usize = lm.rows_per_segment.iter().map(|&r| r * lm.c_out).sum();
+        let all: Vec<f32> = (0..layer_floats)
+            .map(|_| (lr.next_f32() - 0.5) * 0.5)
+            .collect();
+        let t = LsqTensor::calibrate(&all, spec.weight_bits);
+        *w.steps.last_mut().expect("steps parallel layers") = t.step;
+        let mut k = 0usize;
+        for seg in 0..lm.segments {
+            let rows = lm.rows_per_segment[seg];
+            for f in 0..lm.c_out {
+                w.columns[lm.column(seg, f)] = t.codes[k..k + rows]
+                    .iter()
+                    .map(|&c| WeightCell::saturating(c, spec.weight_bits))
+                    .collect();
+                k += rows;
+            }
+        }
+        w
     }
 
     /// Total cells held (= the mapping's occupied cells).
@@ -218,6 +461,49 @@ impl ModelRegistry {
             .materialize_limit
             .filter(|&limit| mapping.total_bls <= limit)
             .map(|_| Arc::new(ModelWeights::synthesize(name, &arch, &mapping, &self.spec)));
+        self.models.insert(
+            name.to_string(),
+            ModelEntry {
+                name: name.to_string(),
+                arch,
+                mapping,
+                cost,
+                pinned,
+                weights,
+            },
+        );
+        Ok(&self.models[name])
+    }
+
+    /// Register a fine-tuned head of an already-registered `base`: same
+    /// architecture, mapping, and cost profile, but weights derived via
+    /// [`ModelWeights::derive_head`] — the backbone columns are shared
+    /// cell-for-cell with the base, only the last layer differs. This is
+    /// the fleet shape the dedup store multiplies capacity on. When the
+    /// registry does not materialize weights (or the base is over the
+    /// materialization budget) the head is registered without weights,
+    /// exactly like [`ModelRegistry::register`] would.
+    pub fn register_derived(
+        &mut self,
+        name: &str,
+        base: &str,
+        pinned: bool,
+    ) -> anyhow::Result<&ModelEntry> {
+        anyhow::ensure!(
+            !self.models.contains_key(name),
+            "model '{name}' is already registered (retire it first to replace)"
+        );
+        let base_entry = self
+            .models
+            .get(base)
+            .ok_or_else(|| anyhow::anyhow!("base model '{base}' is not registered"))?;
+        let mapping = base_entry.mapping.clone();
+        let arch = base_entry.arch.clone();
+        let cost = base_entry.cost.clone();
+        let weights = base_entry
+            .weights
+            .as_ref()
+            .map(|bw| Arc::new(ModelWeights::derive_head(name, bw, &mapping, &self.spec)));
         self.models.insert(
             name.to_string(),
             ModelEntry {
@@ -413,6 +699,166 @@ mod tests {
         assert_eq!(a.steps, b.steps);
         let c = ModelWeights::synthesize("other", &arch, &mapping, &spec);
         assert_ne!(a.columns, c.columns, "different tenants get different weights");
+    }
+
+    #[test]
+    fn column_hash_equal_columns_hash_equal_across_tenants() {
+        // Two tenants derived from the same base share backbone columns
+        // cell-for-cell; their hashes must agree column-for-column.
+        let spec = MacroSpec::default();
+        let mut r = ModelRegistry::with_weights(spec);
+        r.register("base", vgg9().scaled(0.04), true).unwrap();
+        r.register_derived("head-a", "base", false).unwrap();
+        r.register_derived("head-b", "base", false).unwrap();
+        let wa = r.get("head-a").unwrap().weights.as_ref().unwrap().clone();
+        let wb = r.get("head-b").unwrap().weights.as_ref().unwrap().clone();
+        let tail = r.get("base").unwrap().mapping.layers.last().unwrap().bl_count;
+        let total = r.get("base").unwrap().mapping.total_bls;
+        let mut shared = 0usize;
+        for bl in 0..total {
+            if wa.columns[bl] == wb.columns[bl] {
+                assert_eq!(
+                    column_hash(&wa.columns[bl]),
+                    column_hash(&wb.columns[bl]),
+                    "equal columns must hash equal (bl {bl})"
+                );
+                shared += 1;
+            }
+        }
+        // The whole backbone is shared; only head columns may diverge.
+        assert!(shared >= total - tail, "backbone columns shared: {shared}/{total}");
+        assert!(shared < total, "heads must actually diverge");
+    }
+
+    #[test]
+    fn column_hash_one_bit_flip_changes_hash() {
+        let spec = MacroSpec::default();
+        let mut r = ModelRegistry::with_weights(spec);
+        let e = r.register("m", vgg9().scaled(0.04), false).unwrap();
+        let w = e.weights.as_ref().unwrap();
+        for col in w.columns.iter().take(16) {
+            let h0 = column_hash(col);
+            for i in 0..col.len() {
+                let mut flipped = col.to_vec();
+                flipped[i].w ^= 1; // flip the lowest bit of one cell
+                assert_ne!(column_hash(&flipped), h0, "flip at cell {i} must change hash");
+            }
+        }
+    }
+
+    #[test]
+    fn column_hash_is_order_invariant_within_a_column() {
+        // Order-invariance is what keeps the collision fall-back path
+        // exercised: a reversed column is a guaranteed hash collision.
+        let cells: Vec<WeightCell> =
+            [3i8, -2, 0, 5, -7].iter().map(|&w| WeightCell { w }).collect();
+        let mut rev = cells.clone();
+        rev.reverse();
+        for seed in [0u64, 1, 0xdead_beef] {
+            assert_eq!(
+                column_hash_seeded(&cells, seed),
+                column_hash_seeded(&rev, seed),
+                "permutation must collide under seed {seed}"
+            );
+        }
+        assert_ne!(cells, rev);
+    }
+
+    #[test]
+    fn forced_collision_falls_back_to_full_column_comparison() {
+        // Insert a column, then look up a *permutation* of it: same hash
+        // bucket under every seed, but the store must refuse to alias.
+        let a: Vec<WeightCell> =
+            [1i8, 2, 3, 4].iter().map(|&w| WeightCell { w }).collect();
+        let mut b = a.clone();
+        b.reverse();
+        for seed in [0u64, 42, u64::MAX] {
+            let mut store = ColumnStore::with_seed(seed);
+            store.insert("owner", 0, 7, &a);
+            assert_eq!(
+                column_hash_seeded(&a, seed),
+                column_hash_seeded(&b, seed),
+                "precondition: forced collision"
+            );
+            assert!(
+                store.acquire("borrower", &b).is_none(),
+                "colliding but unequal column must not alias (seed {seed})"
+            );
+            let hit = store.acquire("borrower", &a).unwrap();
+            assert_eq!((hit.macro_id, hit.bl, hit.owner.as_str()), (0, 7, "owner"));
+        }
+    }
+
+    #[test]
+    fn store_refcounts_pin_and_release() {
+        let col: Vec<WeightCell> = [1i8, -1].iter().map(|&w| WeightCell { w }).collect();
+        let other: Vec<WeightCell> = [2i8, -2].iter().map(|&w| WeightCell { w }).collect();
+        let mut store = ColumnStore::new();
+        store.insert("base", 0, 0, &col);
+        store.insert("base", 0, 1, &other);
+        assert_eq!(store.resident_columns(), 2);
+        assert!(!store.has_external_holders("base"));
+        assert!(store.pinned_owners().is_empty());
+        // A tenant never borrows from itself.
+        assert!(store.acquire("base", &col).is_none());
+        let hit = store.acquire("head", &col).unwrap();
+        assert_eq!(hit.owner, "base");
+        assert!(store.has_external_holders("base"));
+        assert_eq!(store.pinned_owners().into_iter().collect::<Vec<_>>(), ["base"]);
+        // Releasing the borrower unpins the owner without freeing slots.
+        assert_eq!(store.release("head"), 0);
+        assert!(!store.has_external_holders("base"));
+        assert_eq!(store.resident_columns(), 2);
+        // Releasing the owner frees its slots.
+        assert_eq!(store.release("base"), 2);
+        assert!(store.is_empty());
+        assert!(store.lookup(&col).is_none());
+    }
+
+    #[test]
+    fn derive_head_shares_backbone_and_is_deterministic() {
+        let spec = MacroSpec::default();
+        let arch = vgg9().scaled(0.04);
+        let mapping = crate::mapping::pack_model(&arch, &spec);
+        let base = ModelWeights::synthesize("base", &arch, &mapping, &spec);
+        let h1 = ModelWeights::derive_head("head", &base, &mapping, &spec);
+        let h2 = ModelWeights::derive_head("head", &base, &mapping, &spec);
+        assert_eq!(h1.columns, h2.columns, "derivation is deterministic in name");
+        assert_eq!(h1.steps, h2.steps);
+        let lm = mapping.layers.last().unwrap();
+        // Backbone columns identical to the base, head columns differ.
+        for bl in 0..lm.bl_start {
+            assert_eq!(h1.columns[bl], base.columns[bl], "backbone column {bl}");
+        }
+        assert_ne!(
+            h1.columns[lm.bl_start..],
+            base.columns[lm.bl_start..],
+            "head layer must diverge from the base"
+        );
+        // All non-head LSQ steps are inherited unchanged.
+        assert_eq!(h1.steps[..h1.steps.len() - 1], base.steps[..base.steps.len() - 1]);
+    }
+
+    #[test]
+    fn register_derived_matches_base_footprint() {
+        let spec = MacroSpec::default();
+        let mut r = ModelRegistry::with_weights(spec);
+        r.register("base", vgg9().scaled(0.04), true).unwrap();
+        let e = r.register_derived("head", "base", false).unwrap();
+        assert!(!e.pinned);
+        assert!(e.weights.is_some());
+        let b = r.get("base").unwrap();
+        let h = r.get("head").unwrap();
+        assert_eq!(b.mapping.total_bls, h.mapping.total_bls);
+        assert_eq!(b.cost.computing_latency, h.cost.computing_latency);
+        // Unknown base and duplicate names are rejected.
+        assert!(r.register_derived("x", "missing", false).is_err());
+        assert!(r.register_derived("head", "base", false).is_err());
+        // Without materialization the head carries no weights either.
+        let mut plain = ModelRegistry::new(spec);
+        plain.register("base", vgg9().scaled(0.04), true).unwrap();
+        let e = plain.register_derived("head", "base", false).unwrap();
+        assert!(e.weights.is_none());
     }
 
     #[test]

@@ -71,7 +71,7 @@
 //! which is precisely the trade the paper's compression removes, and what
 //! `benches/micro_fleet.rs` measures.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
@@ -100,7 +100,7 @@ use super::placer::{Placement, Placer};
 use super::qos::{
     Admission, DispatchEstimate, QosClass, QosScheduler, QosSpec, QosTenantStats,
 };
-use super::registry::{ModelEntry, ModelRegistry, ModelWeights};
+use super::registry::{ColumnStore, ModelEntry, ModelRegistry, ModelWeights, SharedHit};
 
 /// Weight-materialization headroom for paged twin execution: under twin
 /// execution the registry caches weight columns for tenants up to
@@ -371,6 +371,25 @@ pub struct FleetSnapshot {
     /// deterministic virtual clock the ledgers use. Rejected and
     /// deferred requests never appear in any cycle ledger.
     pub qos_stats: Vec<(String, QosTenantStats)>,
+    /// Whether content-addressed cross-tenant dedup is enabled on this
+    /// fleet (`FleetConfig::dedup`).
+    pub dedup_enabled: bool,
+    /// Logical bitlines the resident tenants' footprints sum to under
+    /// dedup — what the pool would have to hold if every tenant kept a
+    /// private copy. Equals [`FleetSnapshot::resident_bls`] when dedup
+    /// is on; 0 otherwise.
+    pub dedup_logical_bls: usize,
+    /// Bitlines of that logical footprint currently *borrowed*: resident
+    /// through a refcounted reference on another tenant's columns rather
+    /// than a private copy.
+    pub dedup_shared_bls: usize,
+    /// Reload cycles borrowing avoided (the charge a private copy would
+    /// have paid on placement), accumulated over every `SharedLoad`
+    /// event. Booked on **no** cycle ledger — the four-ledger
+    /// conservation law covers what was actually charged — and
+    /// re-derived independently by the auditor from the
+    /// `SharedLoad`/`SharedRelease` stream.
+    pub dedup_shared_cycles: u64,
 }
 
 fn stats_json(s: &MacroStats) -> Json {
@@ -434,6 +453,26 @@ impl FleetSnapshot {
             t.absorb(*b);
         }
         t
+    }
+
+    /// Physical bitlines actually resident under dedup: the logical
+    /// footprint minus the spans served by shared references. Never
+    /// exceeds the sum of distinct column contents across resident
+    /// tenants (the property `rust/tests/proptests.rs` checks).
+    pub fn dedup_resident_bls(&self) -> usize {
+        self.dedup_logical_bls.saturating_sub(self.dedup_shared_bls)
+    }
+
+    /// The dedup win as a capacity ratio: logical bitlines over
+    /// physically resident bitlines (1.0 on an empty pool or with dedup
+    /// off).
+    pub fn dedup_ratio(&self) -> f64 {
+        let resident = self.dedup_resident_bls();
+        if resident == 0 {
+            1.0
+        } else {
+            self.dedup_logical_bls as f64 / resident as f64
+        }
     }
 
     /// Aggregate QoS counters over every tenant.
@@ -582,6 +621,17 @@ impl FleetSnapshot {
                 )
                 .with("qos_totals", self.qos_totals().to_json());
         }
+        if self.dedup_enabled {
+            j = j.with(
+                "dedup",
+                Json::obj()
+                    .with("logical_bls", self.dedup_logical_bls)
+                    .with("shared_bls", self.dedup_shared_bls)
+                    .with("resident_bls", self.dedup_resident_bls())
+                    .with("shared_cycles", self.dedup_shared_cycles)
+                    .with("ratio", self.dedup_ratio()),
+            );
+        }
         j
     }
 }
@@ -622,7 +672,8 @@ pub struct Fleet {
     /// gets isolation for free — a re-materialization while a job is in
     /// flight clones rather than racing.
     twin: Vec<Arc<CimMacro>>,
-    /// Materialized placements of resident tenants (twin execution only).
+    /// Materialized placements of resident tenants (twin execution and
+    /// dedup mode, where a mapping interleaves own and borrowed spans).
     placed: BTreeMap<String, PlacedMapping>,
     /// The QoS scheduling core: per-tenant specs, token buckets, queued
     /// batch metadata and accounting, clocked by the device cycles this
@@ -635,6 +686,21 @@ pub struct Fleet {
     /// scheduler holds a clone so queue-side events share the stream —
     /// see [`Fleet::set_trace`].
     trace: Option<SharedSink>,
+    /// Whether content-addressed cross-tenant dedup is enabled
+    /// (`FleetConfig::dedup`; implies co-resident placement and
+    /// materialized weight columns).
+    dedup: bool,
+    /// Content-addressed index of every resident weight column under
+    /// dedup: owner, physical location, and the refcount holders that
+    /// pin the owner against eviction.
+    store: ColumnStore,
+    /// Per borrower, the spans it holds by reference on other tenants'
+    /// resident columns, in logical-footprint order. The source of
+    /// `FleetSnapshot::dedup_shared_bls`.
+    borrowed: BTreeMap<String, Vec<Region>>,
+    /// Reload cycles borrowing avoided (Σ over emitted `SharedLoad`
+    /// events) — never booked on a cycle ledger.
+    dedup_shared_cycles: u64,
 }
 
 impl Fleet {
@@ -643,17 +709,17 @@ impl Fleet {
     /// all from `cfg`).
     pub fn new(cfg: &FleetConfig, spec: &MacroSpec) -> Fleet {
         let num = cfg.num_macros.max(1);
-        let registry = match cfg.execution {
-            // Materialize weights for tenants up to PAGING_HEADROOM× the
-            // pool's columns: residents read theirs in place, moderately
-            // oversized tenants stream theirs through the pool
-            // (load-on-demand paged execution). Anything larger pages
-            // analytically and never reads its weights.
-            ExecutionMode::Twin => ModelRegistry::with_weights_up_to(
-                *spec,
-                PAGING_HEADROOM * num * spec.bitlines,
-            ),
-            ExecutionMode::Analytic => ModelRegistry::new(*spec),
+        // Materialize weights for tenants up to PAGING_HEADROOM× the
+        // pool's columns: residents read theirs in place, moderately
+        // oversized tenants stream theirs through the pool
+        // (load-on-demand paged execution). Anything larger pages
+        // analytically and never reads its weights. Dedup needs the
+        // columns even under analytic execution — content addressing
+        // hashes the actual packed cells.
+        let registry = if cfg.execution == ExecutionMode::Twin || cfg.dedup {
+            ModelRegistry::with_weights_up_to(*spec, PAGING_HEADROOM * num * spec.bitlines)
+        } else {
+            ModelRegistry::new(*spec)
         };
         let twin = match cfg.execution {
             ExecutionMode::Twin => (0..num)
@@ -664,7 +730,14 @@ impl Fleet {
         Fleet {
             spec: *spec,
             registry,
-            placer: Placer::with_fit_policy(num, spec.bitlines, cfg.coresident, cfg.fit.policy()),
+            // Dedup implies region-granular placement: shared spans are
+            // column-addressed, which whole-macro mode cannot express.
+            placer: Placer::with_fit_policy(
+                num,
+                spec.bitlines,
+                cfg.coresident || cfg.dedup,
+                cfg.fit.policy(),
+            ),
             evictor: Box::new(PolicyEvictor::new(cfg.policy)),
             macro_stats: vec![MacroStats::default(); num],
             tenant_stats: BTreeMap::new(),
@@ -684,6 +757,10 @@ impl Fleet {
             sched: QosScheduler::new(cfg.sched, cfg.admit_budget_cycles, cfg.qos_aging_cycles),
             qos_cfg: cfg.qos.clone(),
             trace: None,
+            dedup: cfg.dedup,
+            store: ColumnStore::new(),
+            borrowed: BTreeMap::new(),
+            dedup_shared_cycles: 0,
         }
     }
 
@@ -724,7 +801,7 @@ impl Fleet {
         fleet.placer = Placer::with_fit_policy(
             cfg.num_macros.max(1),
             spec.bitlines,
-            cfg.coresident,
+            cfg.coresident || cfg.dedup,
             fit,
         );
         fleet
@@ -747,8 +824,9 @@ impl Fleet {
         &self.twin
     }
 
-    /// The materialized placement of a resident tenant (twin execution
-    /// only; `None` for non-resident or analytically-served models).
+    /// The materialized placement of a resident tenant (kept under twin
+    /// execution and under dedup — where it includes borrowed spans;
+    /// `None` for non-resident or plain analytically-served models).
     pub fn placed_mapping(&self, name: &str) -> Option<&PlacedMapping> {
         self.placed.get(name)
     }
@@ -781,6 +859,26 @@ impl Fleet {
     /// later placement.
     pub fn register(&mut self, name: &str, arch: ModelArch, pinned: bool) -> Result<()> {
         self.registry.register(name, arch, pinned)?;
+        self.finish_register(name, pinned)
+    }
+
+    /// Register a fine-tuned head derived from an already-registered
+    /// base: same architecture and footprint, weights sharing the base's
+    /// backbone columns cell-for-cell with only the classifier layer
+    /// re-synthesized (see
+    /// [`ModelRegistry::register_derived`]). Under dedup
+    /// (`FleetConfig::dedup`) a derived head's hot-swap therefore
+    /// borrows the backbone from any resident holder and reloads only
+    /// its delta columns.
+    pub fn register_derived(&mut self, name: &str, base: &str, pinned: bool) -> Result<()> {
+        self.registry.register_derived(name, base, pinned)?;
+        self.finish_register(name, pinned)
+    }
+
+    /// The registration steps shared by [`Fleet::register`] and
+    /// [`Fleet::register_derived`]: the joint pinned-fit check (undoing
+    /// the registration on failure) and the QoS contract defaulting.
+    fn finish_register(&mut self, name: &str, pinned: bool) -> Result<()> {
         if pinned {
             let pinned_entries = || self.registry.iter().filter(|e| e.pinned);
             let (demand, capacity, unit) = if self.placer.coresident() {
@@ -827,9 +925,17 @@ impl Fleet {
     /// per-tenant stats are kept (retired work stays on the books); a
     /// later re-registration under the same name continues the series.
     pub fn retire(&mut self, name: &str) -> Result<()> {
+        // Under dedup a tenant whose columns other residents borrow
+        // cannot leave: freeing the owner's spans would invalidate the
+        // borrowers' weights. Evict or retire the holders first.
+        anyhow::ensure!(
+            !(self.dedup && self.store.has_external_holders(name)),
+            "cannot retire '{name}': resident tenants still hold references to its shared columns"
+        );
         self.registry.retire(name)?;
         self.placer.release(name);
         self.placed.remove(name);
+        self.release_dedup(name);
         // Queued metadata dies with the tenant; its QoS stats survive
         // (refused and served work stays on the books, like tenant_stats).
         self.sched.remove(name);
@@ -880,6 +986,13 @@ impl Fleet {
     /// ```
     pub fn compact(&mut self) -> Result<CompactionPlan> {
         if !self.placer.coresident() {
+            return Ok(CompactionPlan::default());
+        }
+        // Compaction moves columns; the dedup store indexes them by
+        // physical location and borrowers' placed mappings point into
+        // other tenants' spans. While any dedup state is live the pool
+        // therefore stays as-is — the empty plan, charging nothing.
+        if self.dedup && !self.store.is_empty() {
             return Ok(CompactionPlan::default());
         }
         let plan = plan_compaction(
@@ -1005,6 +1118,11 @@ impl Fleet {
             self.registry.contains(name),
             "unknown model '{name}'"
         );
+        // Analytic pools have no twin to read from (dedup still records
+        // placed mappings there — for locate(), not for column storage).
+        if self.twin.is_empty() {
+            return Ok(Vec::new());
+        }
         let Some(pm) = self.placed.get(name) else {
             return Ok(Vec::new());
         };
@@ -1015,6 +1133,260 @@ impl Fleet {
             }
         }
         Ok(cols)
+    }
+
+    /// Drop `name`'s dedup state: emit one `SharedRelease` per borrowed
+    /// span, then remove its refcounts (and any slots it owned, which by
+    /// the caller's invariants hold no external references) from the
+    /// content store. No-op outside dedup mode or for tenants without
+    /// dedup state — safe to call on every eviction/retire path.
+    fn release_dedup(&mut self, name: &str) {
+        if !self.dedup {
+            return;
+        }
+        if let Some(regions) = self.borrowed.remove(name) {
+            let clock = self.sched.now();
+            let class = self.sched.class_of(name);
+            for r in &regions {
+                emit(&self.trace, || TraceEvent {
+                    clock,
+                    kind: EventKind::SharedRelease,
+                    tenant: name.to_string(),
+                    macro_id: Some(r.macro_id),
+                    cycles: 0,
+                    twin: false,
+                    detail: r.bl_count as u64,
+                    class: Some(class),
+                });
+            }
+        }
+        self.store.release(name);
+    }
+
+    /// The dedup-aware resident placement behind [`Fleet::serve_begin`]:
+    /// borrow every column a resident tenant already holds with
+    /// identical content (content-addressed through the
+    /// [`ColumnStore`]), place and load only the *delta* columns, and
+    /// charge first-loader style — the delta spans pay full
+    /// `region_reload_cycles` on all four ledgers, borrowed spans pay
+    /// nothing anywhere (their avoided charge is tracked as
+    /// `dedup_shared_cycles` and emitted as `SharedLoad` events).
+    /// Returns the same `(macros, reload_cycles, reload_events,
+    /// evicted)` tuple the private-copy path produces.
+    fn place_dedup(&mut self, model: &str) -> Result<(Vec<usize>, u64, u64, Vec<String>)> {
+        // Residency hit: own and borrowed spans are already in place.
+        if self.placer.is_resident(model) {
+            self.placer.touch(model);
+            let mut macros: Vec<usize> = self
+                .placer
+                .resident_regions(model)
+                .map(|rs| rs.iter().map(|r| r.macro_id).collect())
+                .unwrap_or_default();
+            macros.extend(
+                self.borrowed
+                    .get(model)
+                    .into_iter()
+                    .flatten()
+                    .map(|r| r.macro_id),
+            );
+            macros.sort_unstable();
+            macros.dedup();
+            return Ok((macros, 0, 0, Vec::new()));
+        }
+        let entry = self.registry.get(model).expect("caller resolved the entry");
+        let weights = entry.weights.clone().ok_or_else(|| {
+            anyhow::anyhow!("model '{model}' registered without materialized weights")
+        })?;
+        let mapping = entry.mapping.clone();
+        let total = mapping.total_bls;
+        debug_assert_eq!(weights.columns.len(), total);
+        // Take a reference on every column some other resident tenant
+        // already holds. Each physical slot is borrowed at most once per
+        // placement (`used`) so the composed spans stay disjoint even if
+        // the footprint contains duplicate columns.
+        let mut used: BTreeSet<(usize, usize)> = BTreeSet::new();
+        let mut hits: Vec<Option<SharedHit>> = Vec::with_capacity(total);
+        for col in &weights.columns {
+            let hit = match self.store.lookup(col) {
+                Some(h) if h.owner != model && !used.contains(&(h.macro_id, h.bl)) => {
+                    self.store.acquire(model, col)
+                }
+                _ => None,
+            };
+            if let Some(h) = &hit {
+                used.insert((h.macro_id, h.bl));
+            }
+            hits.push(hit);
+        }
+        // Group the per-column hits into maximal borrowed spans
+        // (physically contiguous on one macro, logically consecutive)
+        // and the misses into maximal logical runs.
+        let mut borrowed_spans: Vec<(usize, Region)> = Vec::new();
+        let mut miss_runs: Vec<(usize, usize)> = Vec::new();
+        let mut i = 0usize;
+        while i < total {
+            if let Some(h) = &hits[i] {
+                let (mac, bl0) = (h.macro_id, h.bl);
+                let mut len = 1usize;
+                while i + len < total {
+                    match &hits[i + len] {
+                        Some(n) if n.macro_id == mac && n.bl == bl0 + len => len += 1,
+                        _ => break,
+                    }
+                }
+                borrowed_spans.push((
+                    i,
+                    Region { macro_id: mac, bl_start: bl0, bl_count: len },
+                ));
+                i += len;
+            } else {
+                let mut len = 1usize;
+                while i + len < total && hits[i + len].is_none() {
+                    len += 1;
+                }
+                miss_runs.push((i, len));
+                i += len;
+            }
+        }
+        let delta_bls: usize = miss_runs.iter().map(|&(_, l)| l).sum();
+        let (own_spans, evicted) = if delta_bls == 0 {
+            // Full-borrow hit: every column is already resident under
+            // another tenant. Zero reload events, so this never counts
+            // as a hot-swap.
+            self.placer.place_borrowed_only(model);
+            (Vec::new(), Vec::new())
+        } else {
+            // Owners we borrow from are pinned for the eviction scan —
+            // the refs were just taken, so `pinned_owners` covers them.
+            let extra_pinned = self.store.pinned_owners();
+            let swap = {
+                let entry = self.registry.get(model).expect("resolved above");
+                self.placer.place_delta(
+                    entry,
+                    &self.registry,
+                    self.evictor.as_ref(),
+                    &self.spec,
+                    delta_bls,
+                    &extra_pinned,
+                )
+            };
+            let swap = match swap {
+                Ok(s) => s,
+                Err(e) => {
+                    // Roll back the references taken above: the tenant
+                    // never became resident.
+                    self.store.release(model);
+                    return Err(e);
+                }
+            };
+            // Chop the allocated delta regions to the logical miss runs
+            // so every loaded span maps one logical range.
+            let mut own: Vec<(usize, Region)> = Vec::new();
+            let mut alloc = swap.regions.iter().copied();
+            let mut cur: Option<Region> = None;
+            for &(start, len) in &miss_runs {
+                let mut logical = start;
+                let mut need = len;
+                while need > 0 {
+                    let r = match cur.take() {
+                        Some(r) => r,
+                        None => alloc.next().expect("delta allocation covers the miss runs"),
+                    };
+                    let take = r.bl_count.min(need);
+                    own.push((
+                        logical,
+                        Region {
+                            macro_id: r.macro_id,
+                            bl_start: r.bl_start,
+                            bl_count: take,
+                        },
+                    ));
+                    if take < r.bl_count {
+                        cur = Some(Region {
+                            macro_id: r.macro_id,
+                            bl_start: r.bl_start + take,
+                            bl_count: r.bl_count - take,
+                        });
+                    }
+                    logical += take;
+                    need -= take;
+                }
+            }
+            debug_assert!(
+                cur.is_none() && alloc.next().is_none(),
+                "delta allocation exactly covers the miss runs"
+            );
+            (own, swap.evicted)
+        };
+        // Victims lose their placed mappings and their dedup state
+        // (references they held drop; slots they owned leave the store —
+        // owners we borrow from were protected, so no borrowed-from
+        // tenant is ever among the victims).
+        for victim in &evicted {
+            self.placed.remove(victim);
+            self.release_dedup(victim);
+        }
+        // Compose the full placed mapping: borrowed + own spans in
+        // logical-footprint order.
+        let mut spans: Vec<(usize, Region)> = borrowed_spans.clone();
+        spans.extend(own_spans.iter().copied());
+        spans.sort_by_key(|&(logical, _)| logical);
+        let pm = PlacedMapping::new(mapping, spans.iter().map(|&(_, r)| r).collect())
+            .expect("dedup spans tile the footprint");
+        // First-loader charging: only the delta spans enter the reload
+        // ledgers (analytic + per-macro + per-tenant, twin-mirrored).
+        let own_regions: Vec<Region> = own_spans.iter().map(|&(_, r)| r).collect();
+        let (reload_cycles, reload_events) = if own_regions.is_empty() {
+            (0, 0)
+        } else {
+            self.charge_region_reloads(model, &own_regions)
+        };
+        // Materialize only the delta on the twin pool: borrowed spans
+        // already hold content-identical cells, so the tenant's forward
+        // passes read correct weights without a single extra write.
+        if !self.twin.is_empty() {
+            for &(logical, r) in &own_spans {
+                Arc::make_mut(&mut self.twin[r.macro_id])
+                    .load_columns(r.bl_start, &weights.columns[logical..logical + r.bl_count]);
+            }
+        }
+        // Record the borrow: one SharedLoad per borrowed span carrying
+        // the reload charge borrowing avoided.
+        if !borrowed_spans.is_empty() {
+            let clock = self.sched.now();
+            let class = self.sched.class_of(model);
+            for &(_, r) in &borrowed_spans {
+                let c = region_reload_cycles(r.bl_count, &self.spec);
+                self.dedup_shared_cycles += c;
+                emit(&self.trace, || TraceEvent {
+                    clock,
+                    kind: EventKind::SharedLoad,
+                    tenant: model.to_string(),
+                    macro_id: Some(r.macro_id),
+                    cycles: c,
+                    twin: false,
+                    detail: r.bl_count as u64,
+                    class: Some(class),
+                });
+            }
+            self.borrowed.insert(
+                model.to_string(),
+                borrowed_spans.iter().map(|&(_, r)| r).collect(),
+            );
+        }
+        // Index the freshly loaded columns so later tenants can borrow
+        // them in turn.
+        for &(logical, r) in &own_spans {
+            for k in 0..r.bl_count {
+                self.store
+                    .insert(model, r.macro_id, r.bl_start + k, &weights.columns[logical + k]);
+            }
+        }
+        let mut macros: Vec<usize> = spans.iter().map(|&(_, r)| r.macro_id).collect();
+        macros.sort_unstable();
+        macros.dedup();
+        self.placed.insert(model.to_string(), pm);
+        Ok((macros, reload_cycles, reload_events, evicted))
     }
 
     /// Land a migrated tenant on this pool: place its (already
@@ -1034,6 +1406,14 @@ impl Fleet {
     /// and is ignored under analytic execution. Returns the migration
     /// cycles charged.
     pub fn land_migrated(&mut self, name: &str, columns: &[Vec<WeightCell>]) -> Result<u64> {
+        // Cross-pool landings place privately (no content addressing of
+        // the transferred columns) and may evict; while shared spans are
+        // live on this pool an eviction could take a borrowed-from
+        // owner, so the landing is refused instead.
+        anyhow::ensure!(
+            !(self.dedup && !self.store.is_empty()),
+            "cannot land '{name}': refcounted shared spans are live on this pool"
+        );
         let entry = self
             .registry
             .get(name)
@@ -1431,6 +1811,12 @@ impl Fleet {
         let mut paged_twin = false;
 
         let (macros_used, reload_cycles, reload_events, evicted) = if self.placer.fits(entry) {
+            if self.dedup {
+                // Dedup-aware resident path: borrow content-identical
+                // columns from resident tenants, load only the delta
+                // (first-loader charging — see [`Fleet::place_dedup`]).
+                self.place_dedup(model)?
+            } else {
             // Fully resident path: at most one hot-swap per placement
             // change; weights then stay put across batches. Under
             // co-residency the swap streams only the occupied columns.
@@ -1461,6 +1847,7 @@ impl Fleet {
                 (0, 0)
             };
             (macros, cycles, events, swap.evicted)
+            }
         } else {
             // Paging path: the model cannot be fully resident. Every
             // non-pinned resident is evicted and the model streams through
@@ -1474,10 +1861,37 @@ impl Fleet {
                 self.placer.pageable_macro_count(&self.registry) > 0,
                 "cannot page '{model}': every macro is held by pinned models"
             );
-            let evicted = self.placer.evict_all_evictable(&self.registry);
+            // Under dedup the sweep additionally spares owners of live
+            // refcounted spans; if those survivors (plus pinned tenants)
+            // touch every macro, paging has no free macro to stream
+            // through — checked before evicting anyone.
+            let extra_pinned = if self.dedup {
+                self.store.pinned_owners()
+            } else {
+                BTreeSet::new()
+            };
+            if !extra_pinned.is_empty() {
+                let mut blocked = vec![false; self.placer.num_macros()];
+                for p in self.placer.placements() {
+                    let keep = self.registry.get(&p.model).map(|e| e.pinned).unwrap_or(false)
+                        || extra_pinned.contains(&p.model);
+                    if keep {
+                        for r in &p.regions {
+                            blocked[r.macro_id] = true;
+                        }
+                    }
+                }
+                anyhow::ensure!(
+                    blocked.iter().any(|b| !b),
+                    "cannot page '{model}': every macro is held by pinned or shared-span tenants"
+                );
+            }
+            let evicted = self.placer.evict_all_evictable_except(&self.registry, &extra_pinned);
             for victim in &evicted {
                 self.placed.remove(victim);
+                self.release_dedup(victim);
             }
+            let entry = self.registry.get(model).expect("resolved above");
             let usable = self.placer.free_whole_macros();
             debug_assert!(!usable.is_empty());
             if self.execution == ExecutionMode::Twin && entry.weights.is_some() {
@@ -1835,9 +2249,18 @@ impl Fleet {
     /// Point-in-time copy of every ledger, placement and QoS counter.
     pub fn snapshot(&self) -> FleetSnapshot {
         let resident = self.placer.placements();
-        let resident_bls = resident
+        let resident_bls: usize = resident
             .iter()
             .filter_map(|p| self.registry.get(&p.model).map(|e| e.bls_needed()))
+            .sum();
+        // Dedup stats: the logical footprint is what residents would
+        // occupy with private copies; the shared part is what they hold
+        // by reference instead.
+        let dedup_shared_bls: usize = self
+            .borrowed
+            .values()
+            .flatten()
+            .map(|r| r.bl_count)
             .sum();
         // Twin/ledger agreement is structural: every ledger load charge
         // has a twin counterpart (materialization or mirrored paging),
@@ -1880,6 +2303,10 @@ impl Fleet {
                 .collect(),
             buffer_twin: self.buffer_twin,
             qos_stats: self.sched.stats(),
+            dedup_enabled: self.dedup,
+            dedup_logical_bls: if self.dedup { resident_bls } else { 0 },
+            dedup_shared_bls,
+            dedup_shared_cycles: self.dedup_shared_cycles,
         }
     }
 }
@@ -1977,6 +2404,12 @@ enum Msg {
         arch: Box<ModelArch>,
         pinned: bool,
         qos: Option<QosSpec>,
+        ack: mpsc::Sender<Result<()>>,
+    },
+    RegisterDerived {
+        name: String,
+        base: String,
+        pinned: bool,
         ack: mpsc::Sender<Result<()>>,
     },
     Retire {
@@ -2095,6 +2528,22 @@ impl FleetHandle {
             arch: Box::new(arch),
             pinned,
             qos: Some(qos),
+            ack,
+        })?;
+        ack_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("fleet stopped"))?
+    }
+
+    /// Register a fine-tuned head derived from an already-registered
+    /// base on the live fleet (see [`Fleet::register_derived`]) — under
+    /// dedup its hot-swaps borrow the base's backbone columns.
+    pub fn register_derived(&self, name: &str, base: &str, pinned: bool) -> Result<()> {
+        let (ack, ack_rx) = mpsc::channel();
+        self.send(Msg::RegisterDerived {
+            name: name.to_string(),
+            base: base.to_string(),
+            pinned,
             ack,
         })?;
         ack_rx
@@ -2267,6 +2716,14 @@ fn handle_msg(
                 Some(spec) => fleet.register_with_qos(&name, *arch, pinned, spec),
                 None => fleet.register(&name, *arch, pinned),
             });
+        }
+        Msg::RegisterDerived {
+            name,
+            base,
+            pinned,
+            ack,
+        } => {
+            let _ = ack.send(fleet.register_derived(&name, &base, pinned));
         }
         Msg::Retire { name, ack } => {
             // Drop queued work for the retired model: tickets error.
@@ -3086,5 +3543,176 @@ mod tests {
             let out = fleet.serve_batch("c", &[img()]).unwrap();
             assert_eq!(out.evicted, vec![expect_victim.to_string()], "{policy:?}");
         }
+    }
+
+    fn dedup_cfg(num_macros: usize) -> FleetConfig {
+        FleetConfig {
+            dedup: true,
+            ..cfg(num_macros)
+        }
+    }
+
+    #[test]
+    fn dedup_head_reloads_only_its_delta_columns() {
+        let spec = MacroSpec::default();
+        let mut fleet = Fleet::new(&dedup_cfg(1), &spec);
+        fleet.register("base", vgg9().scaled(0.04), false).unwrap(); // 108 BLs
+        fleet.register_derived("head", "base", false).unwrap();
+        let total = fleet.registry().get("base").unwrap().bls_needed() as u64;
+        let ob = fleet.serve_batch("base", &[img()]).unwrap();
+        assert_eq!(ob.reload_cycles, total, "first loader pays in full");
+        let oh = fleet.serve_batch("head", &[img()]).unwrap();
+        assert!(
+            oh.reload_cycles > 0 && oh.reload_cycles < total,
+            "head pays only its classifier delta, got {} of {total}",
+            oh.reload_cycles
+        );
+        assert!(oh.evicted.is_empty(), "the shared backbone forces no eviction");
+        let snap = fleet.snapshot();
+        assert!(snap.dedup_enabled);
+        assert_eq!(snap.dedup_logical_bls as u64, 2 * total);
+        // Borrowed width + delta width tile the head's footprint, and on
+        // the default spec cycles equal widths.
+        assert_eq!(snap.dedup_shared_bls as u64, total - oh.reload_cycles);
+        assert_eq!(snap.dedup_shared_cycles, total - oh.reload_cycles);
+        assert_eq!(
+            snap.dedup_resident_bls() as u64,
+            total + oh.reload_cycles,
+            "physical residency = base copy + head delta"
+        );
+        assert!(snap.dedup_ratio() > 1.0);
+        // The four-ledger law holds with borrowing in play: only charged
+        // cycles appear, on every view.
+        assert_eq!(snap.reload_cycles, total + oh.reload_cycles);
+        assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+        assert_eq!(snap.reload_cycles, snap.tenant_load_cycles());
+        // Residency hits stay free for both.
+        assert_eq!(fleet.serve_batch("base", &[img()]).unwrap().reload_cycles, 0);
+        assert_eq!(fleet.serve_batch("head", &[img()]).unwrap().reload_cycles, 0);
+        // The snapshot JSON carries the dedup block only when enabled.
+        let j = snap.to_json();
+        assert_eq!(
+            j.get("dedup").get("shared_bls").as_usize(),
+            Some(snap.dedup_shared_bls)
+        );
+        assert!(j.get("dedup").get("ratio").as_f64().unwrap() > 1.0);
+        let plain = Fleet::new(&cfg(1), &spec).snapshot().to_json();
+        assert!(plain.get("dedup").get("shared_bls").as_usize().is_none());
+    }
+
+    #[test]
+    fn refcount_pinned_base_survives_lru_sweep() {
+        // Regression for the pre-refcount stop condition: `base` is the
+        // stalest resident when `y`'s placement needs victims, but
+        // `head` holds live references on its columns — the LRU sweep
+        // must take `head` (and then `x`), never `base`.
+        let spec = MacroSpec::default();
+        let mut fleet = Fleet::new(&dedup_cfg(1), &spec);
+        fleet.register("base", vgg9().scaled(0.04), false).unwrap(); // 108 BLs
+        fleet.register_derived("head", "base", false).unwrap();
+        fleet.register("x", vgg9().scaled(0.03), false).unwrap(); // 82 BLs
+        fleet.register("y", vgg9().scaled(0.05), false).unwrap(); // 139 BLs
+        fleet.serve_batch("base", &[img()]).unwrap();
+        fleet.serve_batch("head", &[img()]).unwrap();
+        fleet.serve_batch("x", &[img()]).unwrap();
+        let oy = fleet.serve_batch("y", &[img()]).unwrap();
+        assert_eq!(
+            oy.evicted,
+            vec!["head".to_string(), "x".to_string()],
+            "LRU skips the refcount-pinned base"
+        );
+        assert!(fleet.is_resident("base"));
+        assert!(!fleet.is_resident("head"));
+        let snap = fleet.snapshot();
+        assert_eq!(snap.dedup_shared_bls, 0, "head's references were released");
+        assert_eq!(fleet.serve_batch("base", &[img()]).unwrap().reload_cycles, 0);
+        // Re-serving the head borrows the backbone again and pays only
+        // the delta again (its private columns were freed).
+        let oh = fleet.serve_batch("head", &[img()]).unwrap();
+        let total = fleet.registry().get("base").unwrap().bls_needed() as u64;
+        assert!(oh.reload_cycles > 0 && oh.reload_cycles < total);
+    }
+
+    #[test]
+    fn dedup_retire_refuses_while_columns_are_borrowed() {
+        let spec = MacroSpec::default();
+        let mut fleet = Fleet::new(&dedup_cfg(1), &spec);
+        fleet.register("base", vgg9().scaled(0.04), false).unwrap();
+        fleet.register_derived("head", "base", false).unwrap();
+        fleet.serve_batch("base", &[img()]).unwrap();
+        fleet.serve_batch("head", &[img()]).unwrap();
+        let err = fleet.retire("base").unwrap_err();
+        assert!(err.to_string().contains("hold references"), "{err}");
+        assert!(fleet.registry().contains("base"));
+        // Retiring the borrower first unblocks the owner.
+        fleet.retire("head").unwrap();
+        fleet.retire("base").unwrap();
+        assert_eq!(fleet.snapshot().dedup_shared_bls, 0);
+    }
+
+    #[test]
+    fn dedup_twin_materializes_only_the_delta_and_reads_back() {
+        let spec = MacroSpec::default();
+        let cfgt = FleetConfig {
+            execution: ExecutionMode::Twin,
+            ..dedup_cfg(1)
+        };
+        let mut fleet = Fleet::new(&cfgt, &spec);
+        fleet.register("base", vgg9().scaled(0.04), false).unwrap();
+        fleet.register_derived("head", "base", false).unwrap();
+        fleet.serve_batch("base", &[img()]).unwrap();
+        let oh = fleet.serve_batch("head", &[img()]).unwrap();
+        let total = fleet.registry().get("base").unwrap().bls_needed() as u64;
+        assert!(oh.reload_cycles < total);
+        let snap = fleet.snapshot();
+        // Twin agreement extends to refcounted spans: the twin loaded
+        // exactly the charged (delta-only) columns.
+        assert_eq!(snap.twin_load_cycles(), snap.reload_cycles);
+        // Readback through the head's placed mapping: borrowed backbone
+        // spans and own delta spans all hold the head's weights.
+        let placed = fleet.placed_mapping("head").unwrap().clone();
+        let weights = fleet.registry().get("head").unwrap().weights.clone().unwrap();
+        for (bl, col) in weights.columns.iter().enumerate() {
+            let (mac, local) = placed.locate(bl);
+            assert_eq!(&fleet.twin_macros()[mac].read_column(local), col, "column {bl}");
+        }
+        // Twin execution through shared spans is deterministic.
+        let image = img();
+        let o1 = fleet.serve_batch("head", &[image.clone()]).unwrap();
+        let o2 = fleet.serve_batch("head", &[image]).unwrap();
+        assert_eq!(o1.logits, o2.logits);
+        assert!(o1.logits[0].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn dedup_compaction_is_deferred_while_sharing_is_live() {
+        let spec = MacroSpec::default();
+        let mut fleet = Fleet::new(&dedup_cfg(1), &spec);
+        fleet.register("base", vgg9().scaled(0.04), false).unwrap();
+        fleet.register_derived("head", "base", false).unwrap();
+        fleet.serve_batch("base", &[img()]).unwrap();
+        fleet.serve_batch("head", &[img()]).unwrap();
+        let plan = fleet.compact().unwrap();
+        assert_eq!(plan.moves.len(), 0, "live shared spans freeze the layout");
+        assert_eq!(fleet.snapshot().migration_cycles, 0);
+    }
+
+    #[test]
+    fn dedup_server_roundtrip_with_derived_head() {
+        let spec = MacroSpec::default();
+        let h = FleetServer::start(&dedup_cfg(2), &spec);
+        h.register("base", vgg9().scaled(0.04), false).unwrap();
+        h.register_derived("head", "base", false).unwrap();
+        assert!(h.register_derived("h2", "ghost", false).is_err());
+        for model in ["base", "head", "base", "head"] {
+            let r = h.submit(model, img()).unwrap().wait().unwrap();
+            assert!(r.class < 10);
+        }
+        let (m, snap) = h.shutdown();
+        assert_eq!(m.completed, 4);
+        assert!(snap.dedup_enabled);
+        assert!(snap.dedup_shared_bls > 0, "the head borrowed its backbone");
+        assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+        assert_eq!(snap.reload_cycles, snap.tenant_load_cycles());
     }
 }

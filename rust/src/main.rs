@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
                     .cmd("serve [--requests N] [--batch B]", "edge-serving demo over PJRT")
                     .cmd(
                         "fleet [--macros N] [--bl B] [--requests N] [--policy lru|cost] \
-                         [--fit first|best|worst|buddy|affinity] [--coresident] [--twin] \
+                         [--fit first|best|worst|buddy|affinity] [--coresident] [--dedup] [--twin] \
                          [--dataflow pixel-first|spatial-first|tap-reuse] \
                          [--defrag [--defrag-threshold T]] [--qos] [--sched qos|fifo] \
                          [--priority m=class,..] [--rate m=R[:BURST],..] \
@@ -314,6 +314,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             anyhow::anyhow!("--fit expects 'first', 'best', 'worst', 'buddy' or 'affinity'")
         })?,
         coresident: args.flag("coresident"),
+        dedup: args.flag("dedup"),
         defrag_threshold: if args.flag("defrag") {
             args.f64_or("defrag-threshold", 0.3)
         } else {
@@ -383,13 +384,27 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         );
         handle.register(m, out.arch, false)?;
     }
+    // Under --dedup every tenant gets a fine-tuned head: same backbone
+    // columns cell-for-cell, divergent classifier — the shape the
+    // content-addressed store multiplies capacity on.
+    let mut serve_names: Vec<String> = models.iter().map(|m| m.to_string()).collect();
+    if cfg.dedup {
+        for m in models {
+            let head = format!("{m}-head");
+            handle.register_derived(&head, m, false)?;
+            println!("registered '{head}' as a derived head of '{m}' (shared backbone)");
+            serve_names.push(head);
+        }
+    }
     println!(
         "fleet: {} macros, policy {}, fit {}, max batch {}, placement {}, execution {}{}",
         cfg.num_macros,
         cfg.policy.as_str(),
         cfg.fit.as_str(),
         cfg.max_batch,
-        if cfg.coresident {
+        if cfg.dedup {
+            "co-resident + content-addressed dedup"
+        } else if cfg.coresident {
             "co-resident (bitline regions)"
         } else {
             "whole-macro"
@@ -433,7 +448,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     let mut tickets = Vec::with_capacity(n);
     for k in 0..n {
-        let model = models[k % models.len()];
+        let model = &serve_names[k % serve_names.len()];
         let img = SynthCifar::sample(k % 10, 9000 + k as u64);
         tickets.push(handle.submit(model, img.data)?);
     }
@@ -479,6 +494,17 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         frag.largest_free_run,
         frag.mean_spans_per_tenant()
     );
+    if snap.dedup_enabled {
+        println!(
+            "dedup: {} logical bitlines resident in {} physical ({:.2}x), {} borrowed by \
+             reference | {} reload cycles avoided by sharing",
+            commas(snap.dedup_logical_bls as u64),
+            commas(snap.dedup_resident_bls() as u64),
+            snap.dedup_ratio(),
+            commas(snap.dedup_shared_bls as u64),
+            commas(snap.dedup_shared_cycles)
+        );
+    }
     if !snap.twin_stats.is_empty() {
         println!(
             "twin: {} load cycles charged on the simulated macros ({} the analytic ledger), \

@@ -19,6 +19,19 @@
 //! per-macro side because the activation buffer is per-tenant SRAM, not
 //! a macro) is re-derived and verified the same way.
 //!
+//! Under content-addressed dedup (`FleetConfig::dedup`) the stream also
+//! carries [`EventKind::SharedLoad`] / [`EventKind::SharedRelease`]
+//! events: a borrower acquiring refcounted spans instead of reloading
+//! them, and the release of those references on eviction or retirement.
+//! These never touch the four cycle ledgers (the first loader already
+//! paid in full; a borrow charges nothing anywhere), but the auditor
+//! re-derives the *avoided* side from them — currently borrowed
+//! bitlines (loads minus releases, from `detail`) and cumulative
+//! avoided reload cycles — and diffs both against
+//! `FleetSnapshot::dedup_shared_bls` / `dedup_shared_cycles`. On a
+//! non-dedup stream all four quantities are zero and the checks pass
+//! vacuously.
+//!
 //! A sharded fleet ([`ShardedFleet`](crate::fleet::ShardedFleet)) adds
 //! the **fifth** ledger: inter-pool transfer cycles, recorded as
 //! [`EventKind::MigratePool`] events on the shard's own monotone
@@ -63,6 +76,12 @@ pub struct LedgerAuditor {
     pool_transfer: BTreeMap<usize, u64>,
     tenant_transfer: BTreeMap<String, u64>,
     transfers: u64,
+    /// Dedup shared-span ledger: bitlines borrowed / released (from
+    /// `SharedLoad` / `SharedRelease` `detail`) and the reload cycles
+    /// borrowing avoided. None of these appear on the cycle ledgers.
+    shared_loaded_bls: u64,
+    shared_released_bls: u64,
+    shared_cycles: u64,
     events: u64,
     last_clock: u64,
     clock_regressions: u64,
@@ -86,6 +105,18 @@ impl TraceSink for LedgerAuditor {
             }
             *self.tenant_transfer.entry(ev.tenant.clone()).or_default() += ev.cycles;
             self.transfers += 1;
+            return;
+        }
+        if ev.kind == EventKind::SharedLoad {
+            // A borrow: `detail` is the span width acquired by
+            // reference, `cycles` the reload charge it avoided. Never
+            // twin-mirrored and never on a cycle ledger.
+            self.shared_loaded_bls += ev.detail;
+            self.shared_cycles += ev.cycles;
+            return;
+        }
+        if ev.kind == EventKind::SharedRelease {
+            self.shared_released_bls += ev.detail;
             return;
         }
         if matches!(ev.kind, EventKind::BufferRead | EventKind::BufferWrite) {
@@ -191,10 +222,24 @@ impl LedgerAuditor {
         self.transfers
     }
 
+    /// Derived bitlines currently held by refcounted reference:
+    /// `SharedLoad` minus `SharedRelease` widths (0 on non-dedup
+    /// streams).
+    pub fn shared_borrowed_bls(&self) -> u64 {
+        self.shared_loaded_bls.saturating_sub(self.shared_released_bls)
+    }
+
+    /// Derived cumulative reload cycles that borrowing avoided — the
+    /// dedup win, never present on any cycle ledger.
+    pub fn shared_avoided_cycles(&self) -> u64 {
+        self.shared_cycles
+    }
+
     /// Diff every derived ledger against the fleet's own books.
     ///
     /// Checks run in a fixed order (fleet load, fleet migration,
-    /// per-macro, per-tenant, twin, clock monotonicity) and the first
+    /// per-macro, per-tenant, twin, buffer, shared spans, clock
+    /// monotonicity) and the first
     /// failing one becomes [`AuditReport::first_divergence`], so a
     /// broken charge site is named precisely rather than drowning in
     /// follow-on mismatches.
@@ -286,6 +331,15 @@ impl LedgerAuditor {
             acc.check("twin buffer reads", self.twin_buffer.reads, snap.buffer_twin.reads);
             acc.check("twin buffer writes", self.twin_buffer.writes, snap.buffer_twin.writes);
         }
+        // Dedup shared-span ledger: live borrows and avoided cycles,
+        // re-derived from SharedLoad/SharedRelease alone, must match the
+        // fleet's own books. Vacuous (all zeros) when dedup is off.
+        acc.check(
+            "shared borrowed bitlines",
+            self.shared_borrowed_bls(),
+            snap.dedup_shared_bls as u64,
+        );
+        acc.check("shared avoided cycles", self.shared_cycles, snap.dedup_shared_cycles);
         // A single pool has no inter-pool link: transfer charges in its
         // stream mean events leaked across shard boundaries.
         acc.check("transfer (single pool)", self.fleet_transfer, 0);
@@ -482,6 +536,46 @@ mod tests {
             .as_deref()
             .unwrap()
             .starts_with("transfer (single pool)"));
+    }
+
+    #[test]
+    fn shared_span_ledger_rederives_borrows_and_avoided_cycles() {
+        let shared = |clock, kind, width, cycles| TraceEvent {
+            clock,
+            kind,
+            tenant: "head".into(),
+            macro_id: Some(0),
+            cycles,
+            twin: false,
+            detail: width,
+            class: None,
+        };
+        let a = LedgerAuditor::replay(&[
+            shared(0, EventKind::SharedLoad, 90, 90),
+            shared(1, EventKind::SharedLoad, 8, 8),
+            shared(7, EventKind::SharedRelease, 8, 0),
+        ]);
+        assert_eq!(a.shared_borrowed_bls(), 90);
+        assert_eq!(a.shared_avoided_cycles(), 98);
+        // SharedLoad/SharedRelease never touch the cycle ledgers.
+        assert_eq!(a.fleet_load_cycles(), 0);
+        // A snapshot agreeing on both shared quantities passes; one that
+        // lost a release diverges on the borrowed-bitline check first.
+        let snap = FleetSnapshot {
+            dedup_enabled: true,
+            dedup_shared_bls: 90,
+            dedup_shared_cycles: 98,
+            ..FleetSnapshot::default()
+        };
+        assert!(a.verify(&snap).pass);
+        let mut broken = snap.clone();
+        broken.dedup_shared_bls = 98;
+        let report = a.verify(&broken);
+        assert!(!report.pass);
+        assert_eq!(
+            report.first_divergence.as_deref(),
+            Some("shared borrowed bitlines: derived 90 != ledger 98")
+        );
     }
 
     #[test]

@@ -76,12 +76,25 @@ pub enum EventKind {
     /// ledger (`detail` = activation words written; same conventions as
     /// [`EventKind::BufferRead`]).
     BufferWrite,
+    /// A dedup-placed tenant took a refcounted reference on another
+    /// tenant's resident columns instead of loading its own copy
+    /// (`detail` = borrowed span width in bitlines, `cycles` = the reload
+    /// charge that borrowing **avoided** — booked on no ledger, tracked
+    /// as `FleetSnapshot::dedup_shared_cycles`; `macro_id` = the macro
+    /// hosting the shared span, `tenant` = the borrower). Never
+    /// twin-mirrored: the twin's cells already hold the shared content.
+    SharedLoad,
+    /// A dedup-placed tenant dropped its references on shared spans —
+    /// eviction or retirement (`detail` = released span width in
+    /// bitlines, `cycles` = 0: releasing a reference moves no weights;
+    /// conventions otherwise as [`EventKind::SharedLoad`]).
+    SharedRelease,
 }
 
 impl EventKind {
     /// Every kind, in schema order — exporters and counters index by
     /// [`EventKind::index`] into arrays of this length.
-    pub const ALL: [EventKind; 13] = [
+    pub const ALL: [EventKind; 15] = [
         EventKind::Admit,
         EventKind::Reject,
         EventKind::Defer,
@@ -95,6 +108,8 @@ impl EventKind {
         EventKind::MigratePool,
         EventKind::BufferRead,
         EventKind::BufferWrite,
+        EventKind::SharedLoad,
+        EventKind::SharedRelease,
     ];
 
     /// Position in [`EventKind::ALL`] (a dense counter index).
@@ -119,6 +134,8 @@ impl EventKind {
             EventKind::MigratePool => "migrate_pool",
             EventKind::BufferRead => "buffer_read",
             EventKind::BufferWrite => "buffer_write",
+            EventKind::SharedLoad => "shared_load",
+            EventKind::SharedRelease => "shared_release",
         }
     }
 

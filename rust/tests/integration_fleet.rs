@@ -778,3 +778,91 @@ fn oversized_tenant_completes_a_twin_forward_via_paging() {
     assert_eq!(snap.buffer_twin, snap.buffer_fleet);
     assert_eq!(snap.tenant_buffer(), snap.buffer_fleet);
 }
+
+#[test]
+fn shared_backbone_fleet_reloads_only_deltas() {
+    // One 108-column base plus two fine-tuned heads on a single macro
+    // under content-addressed dedup: each head's hot-swap charges
+    // exactly its classifier delta on all four ledgers, the whole family
+    // co-resides, and eviction pressure can take the heads but never the
+    // refcount-pinned base their borrowed spans live in.
+    let fcfg = FleetConfig {
+        num_macros: 1,
+        dedup: true,
+        max_batch: 4,
+        batch_timeout_us: 300,
+        ..FleetConfig::default()
+    };
+    let mut fleet = Fleet::new(&fcfg, &spec());
+    fleet
+        .register("base", by_name("vgg9").unwrap().scaled(0.04), false)
+        .unwrap();
+    fleet.register_derived("head-a", "base", false).unwrap();
+    fleet.register_derived("head-b", "base", false).unwrap();
+    let total = fleet.registry().get("base").unwrap().bls_needed() as u64;
+
+    let ob = fleet.serve_batch("base", &[img(0)]).unwrap();
+    assert_eq!(ob.reload_cycles, total, "the first loader pays in full");
+    let oa = fleet.serve_batch("head-a", &[img(1)]).unwrap();
+    let da = oa.reload_cycles;
+    assert!(da > 0 && da < total, "head-a pays only its delta ({da} of {total})");
+    assert!(oa.evicted.is_empty());
+    let obh = fleet.serve_batch("head-b", &[img(2)]).unwrap();
+    let db = obh.reload_cycles;
+    assert!(db > 0 && db < total, "head-b pays only its delta ({db} of {total})");
+    assert!(obh.evicted.is_empty(), "the family co-resides on one macro");
+
+    // Hot-swapping between the heads is now free — everything resident.
+    assert_eq!(fleet.serve_batch("head-a", &[img(3)]).unwrap().reload_cycles, 0);
+    assert_eq!(fleet.serve_batch("head-b", &[img(4)]).unwrap().reload_cycles, 0);
+
+    // Exactly the delta footprint landed, on every view.
+    let snap = fleet.snapshot();
+    assert_eq!(snap.reload_cycles, total + da + db);
+    assert_eq!(snap.reload_cycles, snap.macro_load_cycles());
+    assert_eq!(snap.reload_cycles, snap.tenant_load_cycles());
+    let stats: std::collections::BTreeMap<_, _> = snap.tenant_stats.iter().cloned().collect();
+    assert_eq!(stats["base"].load_cycles, total);
+    assert_eq!(stats["head-a"].load_cycles, da);
+    assert_eq!(stats["head-b"].load_cycles, db);
+    // Both heads borrow their whole backbone; the avoided cycles equal
+    // the borrowed widths on the default spec.
+    assert_eq!(snap.dedup_shared_bls as u64, 2 * total - da - db);
+    assert_eq!(snap.dedup_shared_cycles, 2 * total - da - db);
+    assert_eq!(
+        snap.dedup_resident_bls(),
+        snap.occupied_bls.iter().sum::<usize>(),
+        "own spans tile exactly the occupied columns"
+    );
+
+    // Pressure: a 139-column tenant forces an LRU sweep. Heads are fair
+    // game; the base is pinned by their live references and survives.
+    fleet
+        .register("pressure", by_name("vgg9").unwrap().scaled(0.05), false)
+        .unwrap();
+    let op = fleet.serve_batch("pressure", &[img(5)]).unwrap();
+    assert!(
+        op.evicted.iter().all(|m| m.starts_with("head")),
+        "only heads may be evicted, got {:?}",
+        op.evicted
+    );
+    assert!(fleet.is_resident("base"), "the borrowed-from base must survive");
+
+    // The surviving backbone still serves both heads at delta cost:
+    // whatever the sweep took, re-serving a head never pays more than
+    // its delta — the spans it references were never freed.
+    let ra = fleet.serve_batch("head-a", &[img(6)]).unwrap();
+    assert!(ra.reload_cycles <= da, "head-a re-pays at most its delta ({})", ra.reload_cycles);
+    let rb = fleet.serve_batch("head-b", &[img(7)]).unwrap();
+    assert!(rb.reload_cycles <= db, "head-b re-pays at most its delta ({})", rb.reload_cycles);
+
+    // Conservation holds through the churn, and the dedup books balance.
+    let fin = fleet.snapshot();
+    assert_eq!(fin.reload_cycles, fin.macro_load_cycles());
+    assert_eq!(fin.reload_cycles, fin.tenant_load_cycles());
+    assert_eq!(
+        fin.dedup_resident_bls(),
+        fin.occupied_bls.iter().sum::<usize>()
+    );
+    assert!(fin.dedup_ratio() > 1.0);
+}

@@ -6,8 +6,8 @@ use cim_adapt::arch::{by_name, vgg9, ConvLayer, LayerKind, ModelArch};
 use cim_adapt::cim::{Adc, CimMacro, WeightCell};
 use cim_adapt::config::{DataflowKind, ExecutionMode, FleetConfig, MacroSpec, MorphConfig};
 use cim_adapt::fleet::{
-    plan_compaction, Fleet, HashRing, ModelWeights, Placement, QosClass, QosFleet, QosSpec,
-    ShardedFleet,
+    column_hash, plan_compaction, Fleet, HashRing, ModelWeights, Placement, QosClass, QosFleet,
+    QosSpec, ShardedFleet,
 };
 use cim_adapt::latency::{
     layer_cost, model_buffer_traffic, model_cost, spans_reload_cycles, BufferTraffic,
@@ -1014,6 +1014,98 @@ fn prop_trace_replay_reproduces_all_four_ledgers() {
                 && offline.twin_buffer() == snap.buffer_twin
                 && snap.buffer_twin == snap.buffer_fleet
                 && tenant_buffer_total == snap.buffer_fleet
+                && offline.clock_regressions() == 0
+        },
+    );
+}
+
+#[test]
+fn prop_dedup_trace_replay_reproduces_all_four_ledgers() {
+    // Any interleaved serve/retire/compact script over a shared-backbone
+    // family (base + 3 derived heads + 2 unrelated tenants, overlapping
+    // column content, a pool too small for all of them) under
+    // content-addressed dedup: the online audit, the offline replay of
+    // the recorded stream, and the snapshot must agree bit-exactly on
+    // every view — four cycle ledgers plus the shared-span re-derivation
+    // — and physically resident bitlines never exceed the number of
+    // distinct column contents across resident tenants.
+    let spec = MacroSpec::default();
+    check(
+        "dedup trace replay reproduces all four ledgers",
+        cases(12),
+        vecs(usizes(0..8), 1..22),
+        |ops| {
+            let cfg = FleetConfig {
+                num_macros: 1,
+                dedup: true,
+                ..FleetConfig::default()
+            };
+            let mut fleet = Fleet::new(&cfg, &spec);
+            let trace = FleetTrace::default();
+            fleet.set_trace(Some(trace.sink()));
+            fleet.register("base", vgg9().scaled(0.04), false).unwrap(); // 108 BLs
+            for i in 0..3 {
+                fleet.register_derived(&format!("h{i}"), "base", false).unwrap();
+            }
+            fleet.register("solo", vgg9().scaled(0.03), false).unwrap(); // 82 BLs
+            fleet.register("big", vgg9().scaled(0.05), false).unwrap(); // 139 BLs
+            let img = vec![0.5f32; 64];
+            let names = ["base", "h0", "h1", "h2", "solo", "big"];
+            for &op in ops {
+                match op {
+                    0..=5 => {
+                        fleet.serve_batch(names[op], &[img.clone()]).unwrap();
+                    }
+                    6 => {
+                        let _ = fleet.compact().unwrap();
+                    }
+                    _ => {
+                        // Registry churn: retiring the base is refused
+                        // while any head borrows its columns; solo has
+                        // no borrowers so its retire/re-register cycle
+                        // always goes through.
+                        fleet.retire("solo").unwrap();
+                        fleet.register("solo", vgg9().scaled(0.03), false).unwrap();
+                    }
+                }
+            }
+            let snap = fleet.snapshot();
+            let online = trace.audit.lock().unwrap().verify(&snap);
+            let log = trace.log.lock().unwrap();
+            let offline = LedgerAuditor::replay(log.events());
+            let offline_report = offline.verify(&snap);
+            // Physical residency: own spans tile exactly the occupied
+            // columns, and never exceed the distinct column contents
+            // across resident tenants (sharing only ever shrinks; a
+            // duplicate column *within* one tenant is the one case that
+            // legitimately keeps an extra physical copy, counted as
+            // `surplus`).
+            let occupied: usize = snap.occupied_bls.iter().sum();
+            let mut distinct = std::collections::BTreeSet::new();
+            let mut surplus = 0usize;
+            for name in names {
+                if fleet.is_resident(name) {
+                    let w = fleet.registry().get(name).unwrap().weights.clone().unwrap();
+                    let mut within = std::collections::BTreeSet::new();
+                    for col in &w.columns {
+                        let key = (column_hash(col), col.len());
+                        within.insert(key);
+                        distinct.insert(key);
+                    }
+                    surplus += w.columns.len() - within.len();
+                }
+            }
+            online.pass
+                && offline_report.pass
+                && log.dropped() == 0
+                && offline.events() == trace.audit.lock().unwrap().events()
+                && offline.fleet_load_cycles() == snap.reload_cycles
+                && offline.shared_borrowed_bls() == snap.dedup_shared_bls as u64
+                && offline.shared_avoided_cycles() == snap.dedup_shared_cycles
+                && snap.reload_cycles == snap.macro_load_cycles()
+                && snap.reload_cycles == snap.tenant_load_cycles()
+                && snap.dedup_resident_bls() == occupied
+                && snap.dedup_resident_bls() <= distinct.len() + surplus
                 && offline.clock_regressions() == 0
         },
     );

@@ -160,6 +160,22 @@ EXACT_COUNTERS = {
         "dataflow_scenario.steady_allocs",
         "dataflow_scenario.audit_pass",
         "dataflow_scenario.deterministic",
+        # Dedup scenario (PR 10): content-addressed weight pools. One
+        # shared base + 16 derived heads competed private-copy vs dedup
+        # on total charged reload cycles — pure virtual-clock accounting
+        # over a fixed request script. The 0/1 verdicts cover the
+        # five-view audit (four ledgers + shared-span re-derivation) and
+        # the byte-determinism re-run, asserted in-bench before the
+        # summary is written.
+        "dedup_scenario.private.reload_cycles",
+        "dedup_scenario.dedup.reload_cycles",
+        "dedup_scenario.dedup.logical_bls",
+        "dedup_scenario.dedup.resident_bls",
+        "dedup_scenario.dedup.shared_bls",
+        "dedup_scenario.dedup.shared_cycles",
+        "dedup_scenario.dedup_win_cycles",
+        "dedup_scenario.audit_pass",
+        "dedup_scenario.deterministic",
     ],
     # The coordinator-roundtrip counters flow through the threaded
     # batcher (batch formation is timing-dependent) and stay excluded.

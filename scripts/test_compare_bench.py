@@ -142,6 +142,21 @@ def fleet_summary(
             "audit_pass": 1,
             "deterministic": 1,
         },
+        "dedup_scenario": {
+            "rounds": 16,
+            "heads": 16,
+            "private": {"reload_cycles": 29376},
+            "dedup": {
+                "reload_cycles": 268,
+                "logical_bls": 1836,
+                "resident_bls": 268,
+                "shared_bls": 1568,
+                "shared_cycles": 1568,
+            },
+            "dedup_win_cycles": 29108,
+            "audit_pass": 1,
+            "deterministic": 1,
+        },
         "trace_scenario": {
             "rounds": 8,
             "admit": 36,
@@ -390,6 +405,49 @@ class CompareBenchTest(unittest.TestCase):
         text = "\n".join(lines)
         self.assertIn("new counter, not compared", text)
         self.assertIn("dataflow_scenario.tap_reuse.buffer_reads", text)
+        self.assertEqual(regressions, [])
+        self.assertEqual(exact, [])
+        self.write(self.base, "fleet", stale)
+        self.write(self.cur, "fleet", cur)
+        self.assertEqual(run_main(self.argv("--strict", "--strict-counters")), 0)
+
+    def test_dedup_counter_drift_is_gated(self):
+        # The content-addressed weight-pool counters — charged reloads
+        # per placement mode, the logical/resident footprint split, the
+        # shared-span ledger, and the five-view audit / determinism
+        # verdicts — are exact counters: a shrunk dedup win, a leaked
+        # borrow charge, or a broken shared-span re-derivation all trip
+        # CI.
+        self.write(self.base, "fleet", fleet_summary())
+        drifted = fleet_summary()
+        drifted["dedup_scenario"]["dedup"]["reload_cycles"] += 98
+        self.write(self.cur, "fleet", drifted)
+        self.assertEqual(run_main(self.argv()), 0, "print-only by default")
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+        leaked_borrow = fleet_summary()
+        leaked_borrow["dedup_scenario"]["dedup"]["shared_bls"] -= 98
+        self.write(self.cur, "fleet", leaked_borrow)
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+        failed_audit = fleet_summary()
+        failed_audit["dedup_scenario"]["audit_pass"] = 0
+        self.write(self.cur, "fleet", failed_audit)
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+        nondet = fleet_summary()
+        nondet["dedup_scenario"]["deterministic"] = 0
+        self.write(self.cur, "fleet", nondet)
+        self.assertEqual(run_main(self.argv("--strict-counters")), 1)
+
+    def test_dedup_counters_new_to_baseline_only_report(self):
+        # A baseline from before the dedup work lacks dedup_scenario
+        # entirely: current runs report the counters as new and CI stays
+        # green until the baseline is deliberately updated.
+        stale = fleet_summary()
+        del stale["dedup_scenario"]
+        cur = fleet_summary()
+        lines, regressions, exact = cb.compare_one("fleet", cur, stale, 0.25)
+        text = "\n".join(lines)
+        self.assertIn("new counter, not compared", text)
+        self.assertIn("dedup_scenario.dedup.shared_cycles", text)
         self.assertEqual(regressions, [])
         self.assertEqual(exact, [])
         self.write(self.base, "fleet", stale)
